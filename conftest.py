@@ -1,0 +1,6 @@
+"""Repo-root pytest config: make `python/` importable so
+`pytest python/tests/` works from the workspace root."""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent / "python"))

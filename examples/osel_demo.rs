@@ -1,0 +1,55 @@
+//! OSEL walkthrough — replays the paper's Figure 5 example cycle by
+//! cycle, then prints the Fig. 10 efficiency tables and the Fig. 1
+//! roofline that motivates the whole system.  Pure simulator: needs no
+//! artifacts.
+//!
+//! ```bash
+//! cargo run --release --example osel_demo
+//! ```
+
+use learning_group::accel::osel::{BaselineEncoder, OselEncoder};
+use learning_group::experiments;
+
+fn main() {
+    // --- the Figure 5 example: G=4, IG max-index stream [1,2,1,3,0,...]
+    let ig = [1u16, 2, 1, 3, 0, 2, 1, 0];
+    let og = [0u16, 1, 1, 2, 3, 0];
+    println!("== OSEL walkthrough (paper Fig. 5, G=4) ==");
+    println!("IG max-index stream: {ig:?}");
+    println!("OG max-index list:   {og:?}\n");
+
+    let enc = OselEncoder::default();
+    let (srm, stats) = enc.encode(&ig, &og, 4);
+    for (cycle, &mi) in ig.iter().enumerate() {
+        let tuple = srm.get(mi).unwrap();
+        let first_use = ig[..cycle].iter().all(|&x| x != mi);
+        println!(
+            "cycle {}: max index {} -> {} | bitvector ones {:?} workload {}",
+            cycle + 1,
+            mi,
+            if first_use { "MISS (generate + store tuple)" } else { "HIT  (index list only)" },
+            tuple.bitvector.ones(),
+            tuple.workload
+        );
+    }
+    println!(
+        "\ntotals: {} misses, {} hits, {} cycles ({} max-index, {} miss, {} hit, {} compression)",
+        stats.misses,
+        stats.hits,
+        stats.total_cycles(),
+        stats.max_index_cycles,
+        stats.index_miss_cycles,
+        stats.index_hit_cycles,
+        stats.weight_compression_cycles
+    );
+    let (_, base) = BaselineEncoder::default().encode(&ig, &og, 4);
+    println!(
+        "baseline (no caching): {} cycles -> OSEL speedup {:.2}x on this toy\n",
+        base.total_cycles(),
+        base.total_cycles() as f64 / stats.total_cycles() as f64
+    );
+
+    println!("{}", experiments::fig10a_cycles());
+    println!("{}", experiments::fig10b_memory());
+    println!("{}", experiments::fig1_roofline());
+}

@@ -1,0 +1,58 @@
+//! Quickstart — load the AOT artifacts, roll out one episode with the
+//! FLGW-masked policy, and print what happened.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use learning_group::coordinator::{PrunerChoice, TrainConfig, Trainer};
+
+fn main() -> Result<()> {
+    // 3 agents on a 5x5 grid, FLGW pruning with G=4 (75% sparsity).
+    let cfg = TrainConfig {
+        batch: 1,
+        iterations: 1,
+        pruner: PrunerChoice::Flgw(4),
+        seed: 42,
+        log_every: 0,
+        ..TrainConfig::default().with_agents(3)
+    };
+    let mut trainer = Trainer::from_default_artifacts(cfg)?;
+    println!(
+        "model: {} params ({} maskable), pruner = {}",
+        trainer.manifest().param_size,
+        trainer.manifest().mask_size,
+        trainer.pruner.name(),
+    );
+
+    // one full training iteration: weight grouping -> rollout ->
+    // backward -> update
+    let metrics = trainer.run_iteration(0)?;
+    println!(
+        "iteration 0: loss={:.4} reward={:.3} success={} sparsity={:.1}%",
+        metrics.loss,
+        metrics.mean_reward,
+        metrics.success_rate > 0.0,
+        metrics.sparsity * 100.0
+    );
+
+    // roll out one more episode with the updated policy and narrate it
+    let ep = trainer.rollout(7)?;
+    println!(
+        "episode: {} steps, total reward {:.3}, success={}",
+        ep.len(),
+        ep.total_reward(),
+        ep.success
+    );
+    for t in 0..ep.len().min(5) {
+        let acts: Vec<i32> = ep.actions[t * 3..(t + 1) * 3].to_vec();
+        let gates: Vec<f32> = ep.gates[t * 3..(t + 1) * 3].to_vec();
+        println!(
+            "  t={t}: actions={acts:?} comm-gates={gates:?} reward={:.3}",
+            ep.rewards[t]
+        );
+    }
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Sparsity sweep — the Fig. 9 / Fig. 13 story in one binary: train at
+//! several group counts, report accuracy *and* what the accelerator
+//! model says the sparsity buys in throughput.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example sparsity_sweep -- [iters]
+//! ```
+
+use anyhow::Result;
+use learning_group::accel::perf::{FpgaModel, Scenario};
+use learning_group::coordinator::{PrunerChoice, TrainConfig, Trainer};
+
+fn main() -> Result<()> {
+    let iterations: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(80);
+    let agents = 4;
+    let fpga = FpgaModel::default();
+    println!("== sparsity sweep: A={agents}, {iterations} iterations per point ==");
+    println!(
+        "{:>4} {:>9} {:>11} {:>12} {:>13} {:>13}",
+        "G", "sparsity", "success %", "mean reward", "model GFLOPS", "inf speedup"
+    );
+    for g in [1usize, 2, 4, 8] {
+        let pruner = if g <= 1 { PrunerChoice::Dense } else { PrunerChoice::Flgw(g) };
+        let cfg = TrainConfig {
+            batch: 4,
+            iterations,
+            pruner,
+            seed: 3,
+            log_every: 0,
+            ..TrainConfig::default().with_agents(agents)
+        };
+        let mut trainer = Trainer::from_default_artifacts(cfg)?;
+        let log = trainer.train()?;
+        let rewards: Vec<f32> = log.records.iter().map(|r| r.mean_reward).collect();
+        let perf = fpga.iteration(Scenario { agents, batch: 4, groups: g });
+        let (inf, _) = if g > 1 {
+            fpga.speedup_over_dense(g, agents, 4)
+        } else {
+            (1.0, 1.0)
+        };
+        println!(
+            "{:>4} {:>8.1}% {:>10.1}% {:>12.3} {:>13.1} {:>12.2}x",
+            g,
+            (1.0 - trainer.state.mask_density()) * 100.0,
+            log.final_success_rate(0.25),
+            learning_group::util::mean(&rewards[rewards.len() / 2..]),
+            perf.throughput_gflops,
+            inf
+        );
+    }
+    println!("(paper Fig 9: accuracy holds to G=4; Fig 13: speedup scales with sparsity)");
+    Ok(())
+}

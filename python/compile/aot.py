@@ -1,0 +1,253 @@
+"""AOT lowering: JAX (L2 + L1) -> HLO-text artifacts for the Rust runtime.
+
+Run once at build time (``make artifacts``); Python never executes on the
+training path.  For every entry point we
+
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir    = lowered.compiler_ir("stablehlo")
+    comp    = mlir_module_to_xla_computation(mlir, return_tuple=True)
+    text    = comp.as_hlo_text()
+
+HLO *text* — not ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Also emits:
+  artifacts/manifest.json      layouts + artifact I/O specs for Rust
+  artifacts/init_params.bin    reference init (f32 LE) for parity tests
+  artifacts/init_grouping_g{G}.bin
+  artifacts/.stamp             Make's incremental-build witness
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.dims import (
+    Dims,
+    grouping_size,
+    mask_layout,
+    mask_size,
+    masked_specs,
+    param_layout,
+    param_size,
+)
+
+# Default sweep axes.  A values cover the paper's evaluation (3-10 agents,
+# Fig 9 uses 4/8/10; quickstart uses 3); G values cover Fig 9/10 (G=1 is
+# dense: no grouping artifacts needed).
+AGENTS = (3, 4, 8, 10)
+GROUPS = (2, 4, 8, 16, 32)
+INIT_SEED = 42
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(
+        shape, {"f32": jnp.float32, "i32": jnp.int32}[dtype])
+
+
+def _io(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def build_entries(d: Dims, agents, groups):
+    """(artifact_name, jit-able fn, example specs, io manifest) list."""
+    p, mk = param_size(d), mask_size(d)
+    entries = []
+
+    for a in agents:
+        fwd = functools.partial(model.policy_fwd, d)
+        entries.append((
+            f"policy_fwd_a{a}",
+            fwd,
+            [_spec((p,)), _spec((mk,)), _spec((a, d.obs_dim)),
+             _spec((a, d.hidden)), _spec((a, d.hidden)), _spec((a,))],
+            {
+                "inputs": [
+                    _io("params", (p,)), _io("masks", (mk,)),
+                    _io("obs", (a, d.obs_dim)), _io("h", (a, d.hidden)),
+                    _io("c", (a, d.hidden)), _io("gate_prev", (a,)),
+                ],
+                "outputs": [
+                    _io("logits", (a, d.n_actions)), _io("value", (a,)),
+                    _io("gate_logits", (a, d.n_gate)),
+                    _io("h2", (a, d.hidden)), _io("c2", (a, d.hidden)),
+                ],
+            },
+        ))
+        t = d.episode_len
+        entries.append((
+            f"grad_episode_a{a}",
+            functools.partial(model.grad_episode, d),
+            [_spec((p,)), _spec((mk,)), _spec((t, a, d.obs_dim)),
+             _spec((t, a), "i32"), _spec((t, a)), _spec((t,))],
+            {
+                "inputs": [
+                    _io("params", (p,)), _io("masks", (mk,)),
+                    _io("obs_seq", (t, a, d.obs_dim)),
+                    _io("act_seq", (t, a), "i32"),
+                    _io("gate_seq", (t, a)), _io("returns", (t,)),
+                ],
+                "outputs": [
+                    _io("dparams", (p,)), _io("dmasks", (mk,)),
+                    _io("loss", ()), _io("pol_loss", ()),
+                    _io("val_loss", ()), _io("entropy", ()),
+                ],
+            },
+        ))
+
+    entries.append((
+        "apply_update",
+        model.apply_update,
+        [_spec((p,)), _spec((p,)), _spec((p,))],
+        {
+            "inputs": [_io("params", (p,)), _io("grads", (p,)),
+                       _io("sq_avg", (p,))],
+            "outputs": [_io("params2", (p,)), _io("sq_avg2", (p,))],
+        },
+    ))
+
+    for g in groups:
+        gs = grouping_size(d, g)
+        entries.append((
+            f"flgw_update_g{g}",
+            functools.partial(model.flgw_update, d, g),
+            [_spec((gs,)), _spec((mk,)), _spec((gs,))],
+            {
+                "inputs": [_io("grouping", (gs,)), _io("dmasks", (mk,)),
+                           _io("sq_avg", (gs,))],
+                "outputs": [_io("grouping2", (gs,)), _io("sq_avg2", (gs,))],
+            },
+        ))
+        entries.append((
+            f"mask_gen_g{g}",
+            functools.partial(model.mask_gen, d, g),
+            [_spec((gs,))],
+            {
+                "inputs": [_io("grouping", (gs,))],
+                "outputs": [_io("masks", (mk,))],
+            },
+        ))
+    return entries
+
+
+def init_params(d: Dims, seed: int = INIT_SEED) -> np.ndarray:
+    """Reference initialisation: scaled normal for matrices, zeros for
+    biases (LSTM forget-gate bias = 1, the standard trick)."""
+    rng = np.random.default_rng(seed)
+    layout = param_layout(d)
+    flat = np.zeros(param_size(d), np.float32)
+    for name, (off, shape) in layout.items():
+        if name == "__total__":
+            continue
+        size = int(np.prod(shape)) if shape else 1
+        if len(shape) == 2:
+            scale = 1.0 / np.sqrt(shape[0])
+            flat[off:off + size] = (
+                rng.standard_normal(size).astype(np.float32) * scale)
+        elif name == "b_lstm":
+            b = np.zeros(shape, np.float32)
+            b[d.hidden:2 * d.hidden] = 1.0  # forget gate
+            flat[off:off + size] = b
+    return flat
+
+
+def init_grouping(d: Dims, g: int, seed: int = INIT_SEED) -> np.ndarray:
+    """Random init (paper: 'both grouping matrices are initialized
+    randomly')."""
+    rng = np.random.default_rng(seed + 1000 + g)
+    return rng.standard_normal(grouping_size(d, g)).astype(np.float32)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--agents", default=",".join(map(str, AGENTS)))
+    ap.add_argument("--groups", default=",".join(map(str, GROUPS)))
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact-name filter")
+    args = ap.parse_args()
+
+    d = Dims()
+    agents = tuple(int(x) for x in args.agents.split(","))
+    groups = tuple(int(x) for x in args.groups.split(","))
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    entries = build_entries(d, agents, groups)
+    manifest = {
+        "dims": {
+            "obs_dim": d.obs_dim, "hidden": d.hidden,
+            "n_actions": d.n_actions, "n_gate": d.n_gate,
+            "episode_len": d.episode_len,
+        },
+        "param_size": param_size(d),
+        "mask_size": mask_size(d),
+        "masked_layers": [
+            {"name": n, "rows": m, "cols": nn,
+             "offset": mask_layout(d)[n][0]}
+            for n, (m, nn) in masked_specs(d)
+        ],
+        "param_layout": [
+            {"name": n, "offset": off, "shape": list(shape)}
+            for n, (off, shape) in param_layout(d).items()
+            if n != "__total__"
+        ],
+        "grouping_sizes": {str(g): grouping_size(d, g) for g in groups},
+        "agents": list(agents),
+        "groups": list(groups),
+        "init_seed": INIT_SEED,
+        "hyper": {
+            "lr": model.LR, "rms_decay": model.RMS_DECAY,
+            "rms_eps": model.RMS_EPS, "grad_clip": model.GRAD_CLIP,
+            "lr_group": model.LR_GROUP, "value_coef": model.VALUE_COEF,
+            "entropy_coef": model.ENTROPY_COEF, "gate_coef": model.GATE_COEF,
+        },
+        "artifacts": {},
+    }
+
+    for name, fn, specs, io in entries:
+        manifest["artifacts"][name] = dict(io, file=f"{name}.hlo.txt")
+        if only is not None and name not in only:
+            continue
+        path = os.path.join(out, f"{name}.hlo.txt")
+        print(f"[aot] lowering {name} ...", flush=True)
+        text = to_hlo_text(jax.jit(fn).lower(*specs))
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[aot]   wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+    init_params(d).tofile(os.path.join(out, "init_params.bin"))
+    for g in groups:
+        init_grouping(d, g).tofile(
+            os.path.join(out, f"init_grouping_g{g}.bin"))
+
+    with open(os.path.join(out, ".stamp"), "w") as f:
+        f.write("ok\n")
+    print(f"[aot] done: {len(manifest['artifacts'])} artifacts in {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Model dimensions and flat-buffer layout — the single source of truth.
+
+Both sides of the stack consume this module:
+
+* Layer 2 (``model.py``) unflattens the single ``params_flat`` /
+  ``masks_flat`` vectors into named weight matrices with the offsets
+  defined here.
+* Layer 3 (the Rust coordinator) reads ``artifacts/manifest.json`` (dumped
+  by ``aot.py`` from these same definitions) so the two layers can never
+  disagree on the layout.
+
+The network is IC3Net-compatible (Singh et al. 2018), sized so that the
+LSTM gate matrices are exactly the paper's ``128x512`` mask-matrix example:
+hidden H=128 -> W_x, W_h in R^{128x512}.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Dims:
+    """Static model dimensions (agents A is *not* here: it is a shape axis
+    of the lowered artifacts, one artifact per A)."""
+
+    obs_dim: int = 6          # own (x,y), prey (dx,dy) if visible, flag, t/T
+    hidden: int = 128         # H; LSTM gates are H x 4H = 128 x 512
+    n_actions: int = 5        # up / down / left / right / stay
+    n_gate: int = 2           # binary communication gate (IC3Net)
+    episode_len: int = 20     # T, fixed at AOT time (scan length)
+
+    @property
+    def gate_dim(self) -> int:
+        return 4 * self.hidden
+
+
+# Layer-name -> (rows M, cols N).  Order is the flat-buffer order.
+def param_specs(d: Dims) -> List[Tuple[str, Tuple[int, ...]]]:
+    H = d.hidden
+    return [
+        ("w_enc", (d.obs_dim, H)),
+        ("w_comm", (H, H)),
+        ("w_x", (H, 4 * H)),
+        ("w_h", (H, 4 * H)),
+        ("b_lstm", (4 * H,)),
+        ("w_pi", (H, d.n_actions)),
+        ("b_pi", (d.n_actions,)),
+        ("w_v", (H, 1)),
+        ("b_v", (1,)),
+        ("w_g", (H, d.n_gate)),
+        ("b_g", (d.n_gate,)),
+    ]
+
+
+# The FLGW-masked layers (the four matrix multiplies that dominate compute).
+MASKED_LAYERS: Tuple[str, ...] = ("w_enc", "w_comm", "w_x", "w_h")
+
+
+def masked_specs(d: Dims) -> List[Tuple[str, Tuple[int, int]]]:
+    by_name = dict(param_specs(d))
+    return [(n, by_name[n]) for n in MASKED_LAYERS]  # type: ignore[misc]
+
+
+def _offsets(specs) -> Dict[str, Tuple[int, Tuple[int, ...]]]:
+    out, off = {}, 0
+    for name, shape in specs:
+        size = 1
+        for s in shape:
+            size *= s
+        out[name] = (off, shape)
+        off += size
+    out["__total__"] = (off, ())
+    return out
+
+
+def param_layout(d: Dims) -> Dict[str, Tuple[int, Tuple[int, ...]]]:
+    return _offsets(param_specs(d))
+
+
+def mask_layout(d: Dims) -> Dict[str, Tuple[int, Tuple[int, ...]]]:
+    return _offsets(masked_specs(d))
+
+
+def param_size(d: Dims) -> int:
+    return param_layout(d)["__total__"][0]
+
+
+def mask_size(d: Dims) -> int:
+    return mask_layout(d)["__total__"][0]
+
+
+def grouping_layout(d: Dims, g: int):
+    """Flat layout of the FLGW grouping matrices for group count ``g``:
+    per masked layer, IG (M x G) then OG (G x N), concatenated."""
+    specs = []
+    for name, (m, n) in masked_specs(d):
+        specs.append((f"{name}.ig", (m, g)))
+        specs.append((f"{name}.og", (g, n)))
+    return _offsets(specs)
+
+
+def grouping_size(d: Dims, g: int) -> int:
+    return grouping_layout(d, g)["__total__"][0]

@@ -1,0 +1,45 @@
+"""Pallas FLGW mask-generation kernel — OSEL observation 1 in kernel form.
+
+The naive mask construction is ``IS @ OS`` (an M x G by G x N matmul per
+layer per iteration).  The paper's first observation (Section III-B) is
+that ``mask[i, j] = 1`` iff the argmax index of IG's row i equals the
+argmax index of OG's column j, so the matmul collapses to an index
+comparison.  This kernel is that comparison; the Rust OSEL simulator
+implements the same rule cycle-by-cycle and is cross-checked against the
+``mask_gen_g*.hlo.txt`` artifact built from this kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mask_kernel(ig_idx_ref, og_idx_ref, o_ref):
+    ig_idx = ig_idx_ref[...]  # (M,)
+    og_idx = og_idx_ref[...]  # (N,)
+    o_ref[...] = (ig_idx[:, None] == og_idx[None, :]).astype(o_ref.dtype)
+
+
+def flgw_mask_from_indexes(ig_idx, og_idx):
+    """mask[i, j] = float(ig_idx[i] == og_idx[j]); shapes (M,), (N,) -> (M, N)."""
+    m, n = ig_idx.shape[0], og_idx.shape[0]
+    return pl.pallas_call(
+        _mask_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((m,), lambda j: (0,)),
+            pl.BlockSpec((n,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((m, n), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(ig_idx, og_idx)
+
+
+def flgw_mask(ig, og):
+    """Full FLGW mask from grouping matrices: argmax-binarise then compare."""
+    ig_idx = jnp.argmax(ig, axis=1).astype(jnp.int32)
+    og_idx = jnp.argmax(og, axis=0).astype(jnp.int32)
+    return flgw_mask_from_indexes(ig_idx, og_idx)

@@ -1,0 +1,62 @@
+"""Fused masked LSTM cell (Pallas) — inference fast path.
+
+Runs both masked gate matmuls and all element-wise gate math in a single
+kernel, keeping the (H, 4H) weight/mask tiles resident in VMEM across the
+two matmuls — the analogue of the paper's cores holding compressed weight
+rows in their weight memories while activations are broadcast.
+
+Used only by the ``policy_fwd`` artifact (no gradient needed on the action
+path); the training path composes ``masked_matmul`` (which has a custom
+VJP) with jnp gate math so autodiff works.  Both paths are asserted equal
+to ``ref.lstm_cell`` in python/tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lstm_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref, mx_ref, mh_ref,
+                 h2_ref, c2_ref):
+    gates = (
+        x_ref[...] @ (wx_ref[...] * mx_ref[...])
+        + h_ref[...] @ (wh_ref[...] * mh_ref[...])
+        + b_ref[...]
+    )
+    hd = h_ref.shape[-1]
+    i = jax.nn.sigmoid(gates[..., :hd])
+    f = jax.nn.sigmoid(gates[..., hd : 2 * hd])
+    g = jnp.tanh(gates[..., 2 * hd : 3 * hd])
+    o = jax.nn.sigmoid(gates[..., 3 * hd :])
+    c2 = f * c_ref[...] + i * g
+    h2_ref[...] = o * jnp.tanh(c2)
+    c2_ref[...] = c2
+
+
+def lstm_cell(x, h, c, wx, wh, b, mask_x, mask_h):
+    """(x, h, c: (A, H); wx, wh: (H, 4H); b: (4H,)) -> (h', c')."""
+    a, hd = h.shape
+    g4 = 4 * hd
+    full2 = lambda r, cdim: pl.BlockSpec((r, cdim), lambda j: (0, 0))
+    return pl.pallas_call(
+        _lstm_kernel,
+        grid=(1,),
+        in_specs=[
+            full2(a, hd),            # x
+            full2(a, hd),            # h
+            full2(a, hd),            # c
+            full2(hd, g4),           # wx
+            full2(hd, g4),           # wh
+            pl.BlockSpec((g4,), lambda j: (0,)),  # b
+            full2(hd, g4),           # mask_x
+            full2(hd, g4),           # mask_h
+        ],
+        out_specs=[full2(a, hd), full2(a, hd)],
+        out_shape=[
+            jax.ShapeDtypeStruct((a, hd), x.dtype),
+            jax.ShapeDtypeStruct((a, hd), x.dtype),
+        ],
+        interpret=True,
+    )(x, h, c, wx, wh, b, mask_x, mask_h)

@@ -1,0 +1,140 @@
+"""Pallas masked matmul — the Layer-1 hot spot.
+
+``masked_matmul(x, w, mask) = x @ (w * mask)`` with a custom VJP whose
+forward *and* backward passes are Pallas kernels, so the whole sparse
+training step lowers into one HLO module.
+
+TPU mapping of the paper's FPGA dataflow (DESIGN.md §Hardware-Adaptation):
+the paper streams unmasked weights from global parameter memory into the
+cores' weight memories and broadcasts activations to 264 VPUs.  On TPU the
+same HBM→VMEM schedule is expressed with a BlockSpec grid over the output
+columns: each grid step holds one (M, BN) weight/mask tile in VMEM
+(MXU-shaped, BN=128) and the full activation panel, exactly the
+"broadcast activations, stream weight rows" pattern of Figure 7.  The
+backward dx kernel consumes the *transposed* masked weight — the data path
+OSEL's transposed encoding serves on the FPGA.
+
+interpret=True everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls; correctness is validated against ``ref.py`` and real-TPU
+performance is estimated structurally (DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output-column tile width.  All masked layers have N <= 512, and a full
+# (128, 512) f32 weight/mask tile is 256 KiB — comfortably inside a TPU
+# core's VMEM budget (DESIGN.md §Perf: <= 2 MiB per invocation), so one
+# tile per layer both preserves the TPU mapping and avoids the interpret-
+# mode grid overhead that dominated CPU runtime at BN=128 (EXPERIMENTS.md
+# §Perf: grad_episode 34.1 ms -> 10.6 ms).  Layers wider than BN still
+# tile MXU-style.
+BN = 512
+
+
+def _fwd_kernel(x_ref, w_ref, mask_ref, o_ref):
+    # One (M, BN) weight/mask tile in VMEM per grid step; activations are
+    # broadcast (same x panel for every tile) as in the paper's cores.
+    o_ref[...] = x_ref[...] @ (w_ref[...] * mask_ref[...])
+
+
+def _dx_kernel(g_ref, w_ref, mask_ref, o_ref):
+    # dx = g @ (w*mask)^T — backward uses the transposed masked weight.
+    o_ref[...] = g_ref[...] @ (w_ref[...] * mask_ref[...]).T
+
+
+def _dw_kernel(x_ref, g_ref, w_ref, mask_ref, dw_ref, dmask_ref):
+    # dw = (x^T g) * mask ; dmask = (x^T g) * w — the mask cotangent feeds
+    # the FLGW grouping-matrix update (straight-through estimator).
+    xtg = x_ref[...].T @ g_ref[...]
+    dw_ref[...] = xtg * mask_ref[...]
+    dmask_ref[...] = xtg * w_ref[...]
+
+
+def _col_tiles(n: int) -> tuple[int, int]:
+    """(block_n, grid) over the output-column axis."""
+    if n % BN == 0 and n > BN:
+        return BN, n // BN
+    return n, 1
+
+
+def _fwd(x, w, mask):
+    (b, m), (_, n) = x.shape, w.shape
+    bn, grid = _col_tiles(n)
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((b, m), lambda j: (0, 0)),
+            pl.BlockSpec((m, bn), lambda j: (0, j)),
+            pl.BlockSpec((m, bn), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((b, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), x.dtype),
+        interpret=True,
+    )(x, w, mask)
+
+
+def _dx(g, w, mask):
+    (b, n), (m, _) = g.shape, w.shape
+    return pl.pallas_call(
+        _dx_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((b, n), lambda j: (0, 0)),
+            pl.BlockSpec((m, n), lambda j: (0, 0)),
+            pl.BlockSpec((m, n), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, m), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m), g.dtype),
+        interpret=True,
+    )(g, w, mask)
+
+
+def _dw(x, g, w, mask):
+    (b, m), (_, n) = x.shape, w.shape
+    bn, grid = _col_tiles(n)
+    return pl.pallas_call(
+        _dw_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((b, m), lambda j: (0, 0)),
+            pl.BlockSpec((b, bn), lambda j: (0, j)),
+            pl.BlockSpec((m, bn), lambda j: (0, j)),
+            pl.BlockSpec((m, bn), lambda j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((m, bn), lambda j: (0, j)),
+            pl.BlockSpec((m, bn), lambda j: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), x.dtype),
+            jax.ShapeDtypeStruct((m, n), x.dtype),
+        ],
+        interpret=True,
+    )(x, g, w, mask)
+
+
+@jax.custom_vjp
+def masked_matmul(x, w, mask):
+    """y[b, n] = sum_m x[b, m] * w[m, n] * mask[m, n] (Pallas, interpret)."""
+    return _fwd(x, w, mask)
+
+
+def _vjp_fwd(x, w, mask):
+    return _fwd(x, w, mask), (x, w, mask)
+
+
+def _vjp_bwd(res, g):
+    x, w, mask = res
+    dx = _dx(g, w, mask)
+    dw, dmask = _dw(x, g, w, mask)
+    return dx, dw, dmask
+
+
+masked_matmul.defvjp(_vjp_fwd, _vjp_bwd)

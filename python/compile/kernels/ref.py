@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every Layer-1 kernel has its reference semantics here; pytest asserts
+``assert_allclose(kernel(...), ref(...))`` over shape/dtype sweeps
+(see python/tests/).  Nothing in this file is lowered into artifacts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import nn
+
+
+def masked_matmul(x, w, mask):
+    """y = x @ (w * mask) — the sparse-training hot spot.
+
+    The paper's accelerator never materialises ``w * mask``: the load
+    allocation unit fetches only unmasked weights (Section III-C).  The
+    reference keeps the mathematically identical dense form.
+    """
+    return x @ (w * mask)
+
+
+def masked_matmul_bwd(x, w, mask, g):
+    """VJP of masked_matmul wrt (x, w, mask) given cotangent g.
+
+    dx uses the *transposed* masked weight — the backward-propagation
+    data path that OSEL supports with its transposed encoding.
+    """
+    wm = w * mask
+    dx = g @ wm.T
+    xtg = x.T @ g
+    dw = xtg * mask
+    dmask = xtg * w
+    return dx, dw, dmask
+
+
+def flgw_selection(ig, og):
+    """Argmax-binarise the grouping matrices into selection matrices.
+
+    IS: one-hot over each *row* of IG (M x G);
+    OS: one-hot over each *column* of OG (G x N).
+    """
+    is_mat = nn.one_hot(jnp.argmax(ig, axis=1), ig.shape[1], dtype=ig.dtype)
+    os_mat = nn.one_hot(jnp.argmax(og, axis=0), og.shape[0], dtype=og.dtype).T
+    return is_mat, os_mat
+
+
+def flgw_mask_dense(ig, og):
+    """mask = IS @ OS — the paper's Figure 4(b) construction."""
+    is_mat, os_mat = flgw_selection(ig, og)
+    return is_mat @ os_mat
+
+
+def flgw_mask_from_indexes(ig_idx, og_idx):
+    """OSEL observation 1: mask[i, j] = 1 iff argmax-row index i equals
+    argmax-column index j.  Equivalent to flgw_mask_dense on the matrices
+    whose argmaxes are the given index lists."""
+    return (ig_idx[:, None] == og_idx[None, :]).astype(jnp.float32)
+
+
+def lstm_cell(x, h, c, wx, wh, b, mask_x, mask_h):
+    """Fused masked LSTM cell (gate order i, f, g, o)."""
+    gates = masked_matmul(x, wx, mask_x) + masked_matmul(h, wh, mask_h) + b
+    hidden = h.shape[-1]
+    i, f, g, o = (
+        gates[..., :hidden],
+        gates[..., hidden : 2 * hidden],
+        gates[..., 2 * hidden : 3 * hidden],
+        gates[..., 3 * hidden :],
+    )
+    c2 = nn.sigmoid(f) * c + nn.sigmoid(i) * jnp.tanh(g)
+    h2 = nn.sigmoid(o) * jnp.tanh(c2)
+    return h2, c2

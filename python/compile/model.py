@@ -1,0 +1,244 @@
+"""Layer 2 — IC3Net in JAX, built on the Layer-1 Pallas kernels.
+
+IC3Net (Singh et al. 2018) is the MARL network the paper trains: per agent
+an observation encoder, a *communication* LSTM whose input mixes the other
+agents' gated hidden states, and three heads (action policy, value
+baseline, binary communication gate).  All four large matmuls are
+FLGW-masked.
+
+Everything here is lowered ONCE by ``aot.py`` into HLO-text artifacts; the
+Rust coordinator executes those artifacts and Python never runs on the
+training path.  Parameters / masks / optimizer state / grouping matrices
+cross the FFI as single flat f32 vectors with the layout of ``dims.py``.
+
+Entry points (== artifacts):
+  policy_fwd    one environment step for A agents (fused LSTM kernel).
+  grad_episode  REINFORCE-with-baseline gradient over one stored episode
+                (scan over T), returning d/dparams and d/dmasks.
+  apply_update  gradient-accumulated RMSprop step (the paper's optimizer).
+  flgw_update   straight-through update of the FLGW grouping matrices.
+  mask_gen      masks from grouping matrices (cross-checks the Rust OSEL).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.dims import (
+    Dims,
+    grouping_layout,
+    mask_layout,
+    masked_specs,
+    param_layout,
+)
+from compile.kernels.flgw_mask import flgw_mask
+from compile.kernels.lstm_cell import lstm_cell
+from compile.kernels.masked_matmul import masked_matmul
+
+# Loss coefficients (IC3Net-style REINFORCE with value baseline).
+VALUE_COEF = 0.5
+ENTROPY_COEF = 0.01
+GATE_COEF = 1.0
+# RMSprop hyper-parameters (paper §IV-A: RMSprop, lr = 0.001).
+LR = 1e-3
+RMS_DECAY = 0.99
+RMS_EPS = 1e-5
+GRAD_CLIP = 0.5  # global-norm clip, matching IC3Net's recipe
+# Grouping matrices use a moderately faster schedule: their gradient only
+# flows through the straight-through estimator, so a larger LR keeps group
+# assignments mobile early (FLGW, Wang et al. 2019) — but too large keeps
+# the mask churning late in training and the weights never settle
+# (EXPERIMENTS.md §E2).
+LR_GROUP = 3e-3
+
+
+def _unflatten(flat, layout):
+    out = {}
+    for name, (off, shape) in layout.items():
+        if name == "__total__":
+            continue
+        size = 1
+        for s in shape:
+            size *= s
+        out[name] = flat[off : off + size].reshape(shape)
+    return out
+
+
+def unflatten_params(d: Dims, flat):
+    return _unflatten(flat, param_layout(d))
+
+
+def unflatten_masks(d: Dims, flat):
+    return _unflatten(flat, mask_layout(d))
+
+
+def unflatten_grouping(d: Dims, g: int, flat):
+    return _unflatten(flat, grouping_layout(d, g))
+
+
+def _comm_input(h, gate_prev):
+    """Mean of the *other* agents' gated hidden states (IC3Net comm)."""
+    a = h.shape[0]
+    gated = gate_prev[:, None] * h                       # (A, H)
+    total = jnp.sum(gated, axis=0, keepdims=True)        # (1, H)
+    others = total - gated                               # exclude self
+    denom = jnp.maximum(a - 1, 1).astype(h.dtype)
+    return others / denom
+
+
+def _trunk(p, m, obs, h, c, gate_prev, *, fused: bool):
+    """Shared encoder + comm + masked LSTM.  fused=True uses the Pallas
+    fused cell (inference); fused=False composes masked_matmul so the
+    custom VJP drives autodiff (training)."""
+    e = jnp.tanh(masked_matmul(obs, p["w_enc"], m["w_enc"]))
+    comm = masked_matmul(_comm_input(h, gate_prev), p["w_comm"], m["w_comm"])
+    x = e + comm
+    if fused:
+        h2, c2 = lstm_cell(x, h, c, p["w_x"], p["w_h"], p["b_lstm"],
+                           m["w_x"], m["w_h"])
+    else:
+        gates = (
+            masked_matmul(x, p["w_x"], m["w_x"])
+            + masked_matmul(h, p["w_h"], m["w_h"])
+            + p["b_lstm"]
+        )
+        hd = h.shape[-1]
+        i = jax.nn.sigmoid(gates[..., :hd])
+        f = jax.nn.sigmoid(gates[..., hd : 2 * hd])
+        g = jnp.tanh(gates[..., 2 * hd : 3 * hd])
+        o = jax.nn.sigmoid(gates[..., 3 * hd :])
+        c2 = f * c + i * g
+        h2 = o * jnp.tanh(c2)
+    return h2, c2
+
+
+def _heads(p, h2):
+    logits = h2 @ p["w_pi"] + p["b_pi"]
+    value = (h2 @ p["w_v"] + p["b_v"])[..., 0]
+    gate_logits = h2 @ p["w_g"] + p["b_g"]
+    return logits, value, gate_logits
+
+
+def policy_fwd(d: Dims, params_flat, masks_flat, obs, h, c, gate_prev):
+    """One step for A agents.  obs (A, obs_dim); h, c (A, H);
+    gate_prev (A,) in {0., 1.} — the gate *actions* sampled at t-1.
+
+    Returns (logits (A, n_actions), value (A,), gate_logits (A, 2),
+    h' (A, H), c' (A, H)).  Action/gate sampling happens in Rust.
+    """
+    p = unflatten_params(d, params_flat)
+    m = unflatten_masks(d, masks_flat)
+    h2, c2 = _trunk(p, m, obs, h, c, gate_prev, fused=True)
+    logits, value, gate_logits = _heads(p, h2)
+    return logits, value, gate_logits, h2, c2
+
+
+def _episode_loss(d: Dims, params_flat, masks_flat,
+                  obs_seq, act_seq, gate_seq, returns):
+    """REINFORCE with value baseline over a stored episode.
+
+    obs_seq (T, A, obs_dim); act_seq (T, A) int32; gate_seq (T, A) f32 in
+    {0, 1} (sampled gate actions — replayed so the forward is
+    deterministic); returns (T,) discounted team returns from Rust.
+    """
+    p = unflatten_params(d, params_flat)
+    m = unflatten_masks(d, masks_flat)
+    a = obs_seq.shape[1]
+    h0 = jnp.zeros((a, d.hidden), jnp.float32)
+    c0 = jnp.zeros((a, d.hidden), jnp.float32)
+    g0 = jnp.ones((a,), jnp.float32)  # first step: everyone communicates
+
+    def step(carry, inp):
+        h, c, gate_prev = carry
+        obs, act, gate, ret = inp
+        h2, c2 = _trunk(p, m, obs, h, c, gate_prev, fused=False)
+        logits, value, gate_logits = _heads(p, h2)
+
+        logp = jax.nn.log_softmax(logits)                  # (A, n_actions)
+        logp_a = jnp.take_along_axis(logp, act[:, None], axis=1)[:, 0]
+        glogp = jax.nn.log_softmax(gate_logits)            # (A, 2)
+        logp_g = jnp.take_along_axis(
+            glogp, gate.astype(jnp.int32)[:, None], axis=1)[:, 0]
+
+        adv = jax.lax.stop_gradient(ret - value)           # (A,)
+        pol = -(logp_a * adv).sum() - GATE_COEF * (logp_g * adv).sum()
+        val = ((value - ret) ** 2).sum()
+        ent = -(jnp.exp(logp) * logp).sum()
+        return (h2, c2, gate), (pol, val, ent)
+
+    (_, _, _), (pols, vals, ents) = jax.lax.scan(
+        step, (h0, c0, g0), (obs_seq, act_seq, gate_seq, returns))
+    t = obs_seq.shape[0]
+    norm = 1.0 / (t * a)
+    pol_loss = pols.sum() * norm
+    val_loss = vals.sum() * norm
+    ent_mean = ents.sum() * norm
+    loss = pol_loss + VALUE_COEF * val_loss - ENTROPY_COEF * ent_mean
+    return loss, (pol_loss, val_loss, ent_mean)
+
+
+def grad_episode(d: Dims, params_flat, masks_flat,
+                 obs_seq, act_seq, gate_seq, returns):
+    """Returns (dparams (P,), dmasks (Mk,), loss, pol_loss, val_loss,
+    entropy).  dmasks is the mask cotangent that drives ``flgw_update``
+    (the paper: "grouping matrices are trained based on the errors of the
+    corresponding selection matrix")."""
+    grad_fn = jax.grad(
+        functools.partial(_episode_loss, d), argnums=(0, 1), has_aux=True)
+    (dparams, dmasks), (pol, val, ent) = grad_fn(
+        params_flat, masks_flat, obs_seq, act_seq, gate_seq, returns)
+    loss = pol + VALUE_COEF * val - ENTROPY_COEF * ent
+    return dparams, dmasks, loss, pol, val, ent
+
+
+def apply_update(params_flat, grads_flat, sq_avg):
+    """RMSprop with global-norm clipping.  grads_flat is the Rust-side
+    accumulated gradient over the B episodes of the minibatch (already
+    divided by B).  Returns (params', sq_avg')."""
+    gnorm = jnp.sqrt(jnp.sum(grads_flat * grads_flat) + 1e-12)
+    scale = jnp.minimum(1.0, GRAD_CLIP / gnorm)
+    g = grads_flat * scale
+    sq = RMS_DECAY * sq_avg + (1.0 - RMS_DECAY) * g * g
+    step = LR * g / (jnp.sqrt(sq) + RMS_EPS)
+    return params_flat - step, sq
+
+
+def flgw_update(d: Dims, g: int, grouping_flat, dmasks_flat, sq_avg):
+    """Straight-through update of the FLGW grouping matrices.
+
+    mask = IS @ OS with IS/OS the argmax-binarised selections; the
+    binarisation has zero gradient, so FLGW (Wang et al. 2019) passes the
+    mask cotangent straight through:  dIG := dMask @ OS^T,
+    dOG := IS^T @ dMask,  then RMSprop on IG / OG.
+    Returns (grouping', sq_avg').
+    """
+    grp = unflatten_grouping(d, g, grouping_flat)
+    dm = unflatten_masks(d, dmasks_flat)
+    dgrads = []
+    for name, (_m, _n) in masked_specs(d):
+        ig, og = grp[f"{name}.ig"], grp[f"{name}.og"]
+        is_mat = jax.nn.one_hot(jnp.argmax(ig, axis=1), g, dtype=ig.dtype)
+        os_mat = jax.nn.one_hot(jnp.argmax(og, axis=0), g, dtype=og.dtype).T
+        dmask = dm[name]
+        dig = dmask @ os_mat.T          # (M, G)
+        dog = is_mat.T @ dmask          # (G, N)
+        dgrads.append(dig.reshape(-1))
+        dgrads.append(dog.reshape(-1))
+    dflat = jnp.concatenate(dgrads)
+    sq = RMS_DECAY * sq_avg + (1.0 - RMS_DECAY) * dflat * dflat
+    step = LR_GROUP * dflat / (jnp.sqrt(sq) + RMS_EPS)
+    return grouping_flat - step, sq
+
+
+def mask_gen(d: Dims, g: int, grouping_flat):
+    """masks_flat from grouping matrices, via the Pallas index-compare
+    kernel — the functional twin of the Rust OSEL encoder."""
+    grp = unflatten_grouping(d, g, grouping_flat)
+    outs = []
+    for name, (_m, _n) in masked_specs(d):
+        outs.append(flgw_mask(grp[f"{name}.ig"], grp[f"{name}.og"]).reshape(-1))
+    return jnp.concatenate(outs)

@@ -1,0 +1,183 @@
+"""Layer-1 correctness: every Pallas kernel vs the pure-jnp oracle.
+
+This is the core correctness signal for the compute hot path — the same
+kernels lower into every HLO artifact the Rust runtime executes.
+Hypothesis sweeps shapes/dtypes; fixed cases pin the paper's dimensions
+(128x512 LSTM gate matrices, G in {2..32}).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.flgw_mask import flgw_mask, flgw_mask_from_indexes
+from compile.kernels.lstm_cell import lstm_cell
+from compile.kernels.masked_matmul import masked_matmul
+
+RTOL, ATOL = 1e-5, 1e-5
+
+
+def _rand(key, *shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+def _mask(key, m, n, p=0.5):
+    return (jax.random.uniform(key, (m, n)) < p).astype(jnp.float32)
+
+
+def _keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------- masked_matmul
+
+# (B, M, N): paper layers plus awkward non-multiple shapes.
+MM_SHAPES = [
+    (3, 6, 128),     # w_enc, A=3
+    (10, 128, 128),  # w_comm, A=10
+    (4, 128, 512),   # w_x / w_h — the paper's 128x512 mask example
+    (1, 128, 512),
+    (32, 128, 512),  # max batch
+    (7, 5, 3),       # deliberately ragged
+    (2, 1, 1),
+]
+
+
+@pytest.mark.parametrize("b,m,n", MM_SHAPES)
+def test_masked_matmul_fwd(b, m, n):
+    k1, k2, k3 = _keys(b * 1000 + m + n, 3)
+    x, w, mask = _rand(k1, b, m), _rand(k2, m, n), _mask(k3, m, n)
+    np.testing.assert_allclose(
+        masked_matmul(x, w, mask), ref.masked_matmul(x, w, mask),
+        rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("b,m,n", MM_SHAPES)
+def test_masked_matmul_bwd(b, m, n):
+    k1, k2, k3, k4 = _keys(b * 977 + m * 13 + n, 4)
+    x, w, mask = _rand(k1, b, m), _rand(k2, m, n), _mask(k3, m, n)
+    g = _rand(k4, b, n)
+
+    def loss(x, w, mask):
+        return (masked_matmul(x, w, mask) * g).sum()
+
+    dx, dw, dmask = jax.grad(loss, argnums=(0, 1, 2))(x, w, mask)
+    rdx, rdw, rdmask = ref.masked_matmul_bwd(x, w, mask, g)
+    np.testing.assert_allclose(dx, rdx, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(dw, rdw, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(dmask, rdmask, rtol=1e-4, atol=1e-4)
+
+
+def test_masked_matmul_zero_mask_kills_gradient():
+    """A fully-masked weight must receive zero weight-gradient — the
+    invariant that lets the accelerator skip masked weights entirely."""
+    k1, k2 = _keys(7, 2)
+    x, w = _rand(k1, 4, 128), _rand(k2, 128, 128)
+    mask = jnp.zeros((128, 128))
+    out = masked_matmul(x, w, mask)
+    np.testing.assert_allclose(out, np.zeros_like(out), atol=0)
+    dw = jax.grad(lambda w: masked_matmul(x, w, mask).sum())(w)
+    np.testing.assert_allclose(dw, np.zeros_like(dw), atol=0)
+
+
+def test_masked_matmul_identity_mask_is_dense():
+    k1, k2 = _keys(8, 2)
+    x, w = _rand(k1, 5, 128), _rand(k2, 128, 512)
+    mask = jnp.ones((128, 512))
+    np.testing.assert_allclose(
+        masked_matmul(x, w, mask), x @ w, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 16),
+    m=st.integers(1, 64),
+    n=st.integers(1, 64),
+    seed=st.integers(0, 2**16),
+    p=st.floats(0.0, 1.0),
+)
+def test_masked_matmul_hypothesis(b, m, n, seed, p):
+    k1, k2, k3 = _keys(seed, 3)
+    x, w, mask = _rand(k1, b, m), _rand(k2, m, n), _mask(k3, m, n, p)
+    np.testing.assert_allclose(
+        masked_matmul(x, w, mask), ref.masked_matmul(x, w, mask),
+        rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- flgw_mask
+
+@pytest.mark.parametrize("g", [2, 4, 8, 16, 32])
+@pytest.mark.parametrize("m,n", [(128, 512), (128, 128), (6, 128)])
+def test_flgw_mask_matches_dense_construction(g, m, n):
+    k1, k2 = _keys(g * 100 + m + n, 2)
+    ig, og = _rand(k1, m, g), _rand(k2, g, n)
+    np.testing.assert_allclose(flgw_mask(ig, og), ref.flgw_mask_dense(ig, og))
+
+
+@pytest.mark.parametrize("g", [2, 4, 8, 16, 32])
+def test_flgw_mask_average_sparsity_is_one_over_g(g):
+    """Paper §III-C: P(mask=1) = 1/G, the basis of row-based balancing."""
+    k1, k2 = _keys(g, 2)
+    ig, og = _rand(k1, 512, g), _rand(k2, g, 512)
+    density = float(flgw_mask(ig, og).mean())
+    assert abs(density - 1.0 / g) < 0.15 / g + 0.05
+
+
+def test_flgw_mask_rows_drawn_from_os_rows():
+    """Paper observation 2: every mask row equals an OS-matrix row, so at
+    most G distinct bitvectors exist — the property OSEL's caching rests
+    on."""
+    k1, k2 = _keys(99, 2)
+    g = 8
+    ig, og = _rand(k1, 128, g), _rand(k2, g, 512)
+    mask = np.asarray(flgw_mask(ig, og))
+    distinct = {tuple(row.astype(int)) for row in mask}
+    assert len(distinct) <= g
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 64), n=st.integers(1, 64), g=st.integers(1, 16),
+       seed=st.integers(0, 2**16))
+def test_flgw_mask_hypothesis(m, n, g, seed):
+    k1, k2 = _keys(seed, 2)
+    ig, og = _rand(k1, m, g), _rand(k2, g, n)
+    np.testing.assert_allclose(flgw_mask(ig, og), ref.flgw_mask_dense(ig, og))
+
+
+def test_flgw_mask_from_indexes():
+    ig_idx = jnp.array([0, 1, 2, 1], jnp.int32)
+    og_idx = jnp.array([1, 1, 0, 2, 3], jnp.int32)
+    expected = ref.flgw_mask_from_indexes(ig_idx, og_idx)
+    np.testing.assert_allclose(
+        flgw_mask_from_indexes(ig_idx, og_idx), expected)
+
+
+# ---------------------------------------------------------------- lstm_cell
+
+@pytest.mark.parametrize("a", [1, 3, 8, 10, 32])
+def test_lstm_cell_matches_ref(a):
+    h = 128
+    ks = _keys(a, 8)
+    x, hh, cc = _rand(ks[0], a, h), _rand(ks[1], a, h), _rand(ks[2], a, h)
+    wx, wh = _rand(ks[3], h, 4 * h), _rand(ks[4], h, 4 * h)
+    b = _rand(ks[5], 4 * h)
+    mx, mh = _mask(ks[6], h, 4 * h), _mask(ks[7], h, 4 * h)
+    h2, c2 = lstm_cell(x, hh, cc, wx, wh, b, mx, mh)
+    rh2, rc2 = ref.lstm_cell(x, hh, cc, wx, wh, b, mx, mh)
+    np.testing.assert_allclose(h2, rh2, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(c2, rc2, rtol=RTOL, atol=ATOL)
+
+
+def test_lstm_cell_state_bounds():
+    """|h| <= 1 elementwise (tanh-bounded), c free — basic gate sanity."""
+    a, h = 4, 128
+    ks = _keys(123, 8)
+    x, hh, cc = _rand(ks[0], a, h), _rand(ks[1], a, h), _rand(ks[2], a, h)
+    wx, wh = _rand(ks[3], h, 4 * h), _rand(ks[4], h, 4 * h)
+    b = _rand(ks[5], 4 * h)
+    ones = jnp.ones((h, 4 * h))
+    h2, _ = lstm_cell(x, hh, cc, wx, wh, b, ones, ones)
+    assert float(jnp.abs(h2).max()) <= 1.0 + 1e-6

@@ -1,0 +1,248 @@
+"""Layer-2 correctness: the IC3Net model, its gradient, and both updates.
+
+These are the exact functions that get lowered into HLO artifacts, tested
+here pre-lowering (the Rust side re-validates post-lowering numerics
+against blobs produced by tests/gen_parity.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.dims import (
+    Dims, grouping_size, mask_size, masked_specs, param_size,
+)
+
+D = Dims()
+P = param_size(D)
+MK = mask_size(D)
+
+
+def _params(seed=0):
+    return jnp.asarray(aot.init_params(D, seed))
+
+
+def _grouping(g, seed=0):
+    return jnp.asarray(aot.init_grouping(D, g, seed))
+
+
+def _dense_masks():
+    return jnp.ones((MK,), jnp.float32)
+
+
+def _episode(a, seed=0):
+    k = jax.random.split(jax.random.PRNGKey(seed), 4)
+    t = D.episode_len
+    obs = jax.random.uniform(k[0], (t, a, D.obs_dim))
+    act = jax.random.randint(k[1], (t, a), 0, D.n_actions)
+    gate = (jax.random.uniform(k[2], (t, a)) < 0.7).astype(jnp.float32)
+    ret = jax.random.uniform(k[3], (t,), minval=-1.0, maxval=1.0)
+    return obs, act, gate, ret
+
+
+# ---------------------------------------------------------------- policy_fwd
+
+@pytest.mark.parametrize("a", [3, 4, 8, 10])
+def test_policy_fwd_shapes(a):
+    h = jnp.zeros((a, D.hidden))
+    obs = jnp.ones((a, D.obs_dim)) * 0.3
+    gate = jnp.ones((a,))
+    logits, value, glog, h2, c2 = model.policy_fwd(
+        D, _params(), _dense_masks(), obs, h, h, gate)
+    assert logits.shape == (a, D.n_actions)
+    assert value.shape == (a,)
+    assert glog.shape == (a, D.n_gate)
+    assert h2.shape == c2.shape == (a, D.hidden)
+    for x in (logits, value, glog, h2, c2):
+        assert bool(jnp.isfinite(x).all())
+
+
+def test_policy_fwd_gate_zero_blocks_communication():
+    """With all gates closed, agent i's output must not depend on agent
+    j's hidden state — the IC3Net communication semantics."""
+    a = 4
+    obs = jnp.zeros((a, D.obs_dim))
+    k = jax.random.PRNGKey(3)
+    h = jax.random.normal(k, (a, D.hidden))
+    gate = jnp.zeros((a,))
+    out1 = model.policy_fwd(D, _params(), _dense_masks(), obs, h, h, gate)
+    h_mod = h.at[1].set(h[1] * -2.0 + 1.0)
+    out2 = model.policy_fwd(
+        D, _params(), _dense_masks(), obs, h_mod,
+        h.at[1].set(h[1]), gate)
+    # agent 0's logits unchanged when only agent 1's h changes, gates closed
+    np.testing.assert_allclose(out1[0][0], out2[0][0], rtol=1e-5, atol=1e-5)
+
+
+def test_policy_fwd_gate_open_enables_communication():
+    a = 4
+    obs = jnp.zeros((a, D.obs_dim))
+    k = jax.random.PRNGKey(3)
+    h = jax.random.normal(k, (a, D.hidden))
+    gate = jnp.ones((a,))
+    out1 = model.policy_fwd(D, _params(), _dense_masks(), obs, h, h, gate)
+    h_mod = h.at[1].set(h[1] * -2.0 + 1.0)
+    out2 = model.policy_fwd(D, _params(), _dense_masks(), obs, h_mod, h, gate)
+    assert not np.allclose(out1[0][0], out2[0][0], atol=1e-6)
+
+
+def test_trunk_fused_equals_unfused():
+    """The Pallas fused LSTM path (inference artifact) must agree with the
+    masked_matmul composition (training artifact)."""
+    a = 5
+    p = model.unflatten_params(D, _params())
+    masks = _dense_masks()
+    m = model.unflatten_masks(D, masks)
+    k = jax.random.split(jax.random.PRNGKey(5), 4)
+    obs = jax.random.uniform(k[0], (a, D.obs_dim))
+    h = jax.random.normal(k[1], (a, D.hidden)) * 0.1
+    c = jax.random.normal(k[2], (a, D.hidden)) * 0.1
+    gate = (jax.random.uniform(k[3], (a,)) < 0.5).astype(jnp.float32)
+    hf, cf = model._trunk(p, m, obs, h, c, gate, fused=True)
+    hu, cu = model._trunk(p, m, obs, h, c, gate, fused=False)
+    np.testing.assert_allclose(hf, hu, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(cf, cu, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- grad_episode
+
+@pytest.mark.parametrize("a", [3, 8])
+def test_grad_episode_finite_and_nonzero(a):
+    obs, act, gate, ret = _episode(a)
+    dp, dm, loss, pol, val, ent = model.grad_episode(
+        D, _params(), _dense_masks(), obs, act, gate, ret)
+    assert dp.shape == (P,) and dm.shape == (MK,)
+    assert bool(jnp.isfinite(dp).all()) and bool(jnp.isfinite(dm).all())
+    assert float(jnp.abs(dp).max()) > 0
+    assert bool(jnp.isfinite(loss))
+    assert float(ent) > 0  # near-uniform policy at init
+
+
+def test_grad_episode_masked_weights_get_zero_grad():
+    """Gradient must respect the mask: masked-out weights receive exactly
+    zero — the invariant that keeps training fully sparse on-chip."""
+    a = 4
+    g = 4
+    masks = model.mask_gen(D, g, _grouping(g))
+    obs, act, gate, ret = _episode(a, seed=2)
+    dp, _, _, _, _, _ = model.grad_episode(
+        D, _params(), masks, obs, act, gate, ret)
+    from compile.dims import mask_layout, param_layout
+    pl_, ml_ = param_layout(D), mask_layout(D)
+    for name, _ in masked_specs(D):
+        poff, pshape = pl_[name]
+        moff, _ = ml_[name]
+        size = pshape[0] * pshape[1]
+        wgrad = dp[poff:poff + size]
+        mask = masks[moff:moff + size]
+        masked_out = np.asarray(wgrad)[np.asarray(mask) == 0.0]
+        assert np.abs(masked_out).max() == 0.0, name
+
+
+def test_grad_episode_descends_loss():
+    """One small step along -grad must reduce the episode loss."""
+    a = 3
+    obs, act, gate, ret = _episode(a, seed=7)
+    params, masks = _params(), _dense_masks()
+    loss_fn = lambda p: model._episode_loss(D, p, masks, obs, act, gate, ret)[0]
+    dp, _, loss0, _, _, _ = model.grad_episode(
+        D, params, masks, obs, act, gate, ret)
+    loss1 = loss_fn(params - 1e-3 * dp / (jnp.linalg.norm(dp) + 1e-9))
+    assert float(loss1) < float(loss0)
+
+
+# ---------------------------------------------------------------- apply_update
+
+def test_apply_update_rmsprop_semantics():
+    p = jnp.array([1.0, -2.0, 3.0])
+    g = jnp.array([0.1, 0.0, -0.2])
+    sq = jnp.zeros(3)
+    p2, sq2 = model.apply_update(p, g, sq)
+    # zero-grad entry untouched
+    assert float(p2[1]) == -2.0 and float(sq2[1]) == 0.0
+    # descent direction
+    assert float(p2[0]) < 1.0 and float(p2[2]) > 3.0
+    # sq_avg accumulates g^2 (after clipping; norm < clip here so g unscaled)
+    np.testing.assert_allclose(
+        sq2, (1 - model.RMS_DECAY) * g * g, rtol=1e-5, atol=1e-8)
+
+
+def test_apply_update_clips_global_norm():
+    p = jnp.zeros(4)
+    g = jnp.array([100.0, 0.0, 0.0, 0.0])
+    p2, _ = model.apply_update(p, g, jnp.zeros(4))
+    # step magnitude bounded by lr * clip / (sqrt((1-decay)*clip^2)+eps)
+    assert float(jnp.abs(p2).max()) < 0.2
+
+
+def test_apply_update_converges_quadratic():
+    """RMSprop on f(p) = ||p||^2/2 must shrink the iterate."""
+    p = jnp.array([2.0, -3.0, 0.5, 4.0])
+    sq = jnp.zeros(4)
+    n0 = float(jnp.linalg.norm(p))
+    norms = []
+    for _ in range(200):
+        p, sq = model.apply_update(p, p, sq)
+        norms.append(float(jnp.linalg.norm(p)))
+    assert norms[-1] < n0 - 0.3          # real progress
+    assert all(b <= a + 1e-6 for a, b in zip(norms, norms[1:]))  # monotone
+
+
+# ---------------------------------------------------------------- flgw_update
+
+@pytest.mark.parametrize("g", [2, 8])
+def test_flgw_update_changes_grouping_not_shape(g):
+    gs = grouping_size(D, g)
+    grouping = _grouping(g)
+    dm = jax.random.normal(jax.random.PRNGKey(1), (MK,))
+    g2, sq2 = model.flgw_update(D, g, grouping, dm, jnp.zeros(gs))
+    assert g2.shape == (gs,) and sq2.shape == (gs,)
+    assert float(jnp.abs(g2 - grouping).max()) > 0
+    assert bool(jnp.isfinite(g2).all())
+
+
+def test_flgw_update_zero_cotangent_is_identity():
+    g = 4
+    gs = grouping_size(D, g)
+    grouping = _grouping(g)
+    g2, sq2 = model.flgw_update(D, g, grouping, jnp.zeros(MK), jnp.zeros(gs))
+    np.testing.assert_allclose(g2, grouping)
+    np.testing.assert_allclose(sq2, jnp.zeros(gs))
+
+
+def test_flgw_update_ste_direction():
+    """Pushing down the mask cotangent at the currently-selected entries
+    must push the corresponding IG/OG scores in the matching direction:
+    a positive dMask at a selected position lowers that group's score."""
+    g = 2
+    grouping = _grouping(g, seed=3)
+    masks = model.mask_gen(D, g, grouping)
+    # cotangent = +1 everywhere the mask is on, 0 elsewhere
+    dm = masks
+    g2, _ = model.flgw_update(D, g, grouping, dm, jnp.zeros_like(grouping))
+    grp0 = model.unflatten_grouping(D, g, grouping)
+    grp1 = model.unflatten_grouping(D, g, g2)
+    name = "w_comm"
+    ig0, ig1 = grp0[f"{name}.ig"], grp1[f"{name}.ig"]
+    sel = jnp.argmax(ig0, axis=1)
+    moved = jnp.take_along_axis(ig1 - ig0, sel[:, None], axis=1)
+    assert float(moved.max()) <= 0.0  # selected groups only pushed down
+
+
+# ---------------------------------------------------------------- mask_gen
+
+@pytest.mark.parametrize("g", [2, 4, 8, 16, 32])
+def test_mask_gen_density(g):
+    masks = model.mask_gen(D, g, _grouping(g))
+    assert masks.shape == (MK,)
+    density = float(masks.mean())
+    assert abs(density - 1.0 / g) < 0.6 / g  # ~1/G by construction
+
+
+def test_mask_gen_binary():
+    masks = np.asarray(model.mask_gen(D, 8, _grouping(8)))
+    assert set(np.unique(masks)).issubset({0.0, 1.0})

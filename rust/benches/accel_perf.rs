@@ -1,0 +1,32 @@
+//! E7/E8/E9 — Fig. 11 (throughput & energy), Fig. 12 (breakdown),
+//! Fig. 13 (speedup vs sparse-training accelerators), plus the
+//! issue-width ablation called out in DESIGN.md §Perf.
+use learning_group::accel::core::CoreConfig;
+use learning_group::accel::perf::{AccelConfig, FpgaModel, NetShape, Scenario};
+use learning_group::experiments::{fig11_throughput, fig12_breakdown, fig13_speedup};
+use learning_group::util::benchutil::{bench, report};
+
+fn main() {
+    println!("{}", fig11_throughput());
+    println!("{}", fig12_breakdown());
+    println!("{}", fig13_speedup());
+
+    // ablation: controller issue width (the paper's 2-bit select = 4)
+    println!("Ablation — controller row-issue width (G=16, A=8, B=16):");
+    println!("{:>8} {:>12} {:>12}", "width", "inf speedup", "GFLOPS");
+    for width in [4usize, 8, 16, 64] {
+        let cfg = AccelConfig {
+            core: CoreConfig { n_vpus: 264, issue_width: width },
+            ..AccelConfig::default()
+        };
+        let m = FpgaModel::new(cfg, NetShape::ic3net());
+        let (inf, _) = m.speedup_over_dense(16, 8, 16);
+        let r = m.iteration(Scenario { agents: 8, batch: 16, groups: 16 });
+        println!("{:>8} {:>11.2}x {:>12.1}", width, inf, r.throughput_gflops);
+    }
+    println!();
+
+    let m = FpgaModel::default();
+    let stats = bench(3, 30, || m.iteration(Scenario { agents: 8, batch: 16, groups: 8 }));
+    report("bench/fpga_model_iteration", stats, "");
+}

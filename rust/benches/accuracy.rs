@@ -1,0 +1,29 @@
+//! E2/E3 — Fig. 4(a) and Fig. 9: training-accuracy studies through the
+//! real HLO artifacts.  Iteration counts are reduced from the paper's
+//! 2000 (set LG_ACC_ITERS to override); trends are visible early and the
+//! full runs are reproducible via the CLI (`learning-group accuracy`).
+use learning_group::experiments::{fig4a_pruning_accuracy, fig9_sparsity_accuracy, AccuracyOptions};
+
+fn main() {
+    let iters: usize = std::env::var("LG_ACC_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+    let opt = AccuracyOptions { iterations: iters, batch: 4, seed: 7, seeds: 2 };
+    let t0 = std::time::Instant::now();
+    match fig4a_pruning_accuracy(opt) {
+        Ok(t) => println!("{t}"),
+        Err(e) => {
+            eprintln!("fig4a failed (artifacts missing? run `make artifacts`): {e:#}");
+            return;
+        }
+    }
+    println!("fig4a wall: {:.1}s\n", t0.elapsed().as_secs_f64());
+
+    let t0 = std::time::Instant::now();
+    match fig9_sparsity_accuracy(opt, &[1, 4, 8]) {
+        Ok(t) => println!("{t}"),
+        Err(e) => eprintln!("fig9 failed: {e:#}"),
+    }
+    println!("fig9 wall: {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,112 @@
+//! §Perf — the end-to-end hot path: PJRT execute latency per artifact,
+//! full-iteration latency, environment and sampling micro-benches.
+//! This is the bench the performance pass iterates on (EXPERIMENTS.md
+//! §Perf records before/after).
+use learning_group::coordinator::{PrunerChoice, TrainConfig, Trainer};
+use learning_group::env::{MultiAgentEnv, PredatorPrey, PredatorPreyConfig};
+use learning_group::model::ModelState;
+use learning_group::runtime::{Arg, HostTensor, Runtime};
+use learning_group::util::benchutil::{bench, report};
+
+fn main() {
+    // --- pure-host micro benches (no artifacts needed)
+    let mut env = PredatorPrey::new(PredatorPreyConfig::with_agents(8));
+    env.reset(1);
+    let stats = bench(100, 2000, || env.step(&[0, 1, 2, 3, 4, 0, 1, 2]));
+    report("bench/env_step(8 agents)", stats, "");
+
+    let mut rt = match Runtime::from_default_artifacts() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping artifact benches (run `make artifacts`): {e:#}");
+            return;
+        }
+    };
+    let m = rt.manifest().clone();
+    let state = ModelState::from_init_blob(&m).unwrap();
+
+    // --- policy_fwd latency (the action-path latency of the paper's
+    // real-time constraint: < 30 ms per action)
+    let exe = rt.load("policy_fwd_a8").unwrap();
+    let a = 8;
+    let inputs = vec![
+        HostTensor::F32(state.params.clone()),
+        HostTensor::F32(state.masks.clone()),
+        HostTensor::F32(vec![0.2; a * m.dims.obs_dim]),
+        HostTensor::F32(vec![0.0; a * m.dims.hidden]),
+        HostTensor::F32(vec![0.0; a * m.dims.hidden]),
+        HostTensor::F32(vec![1.0; a]),
+    ];
+    let stats = bench(5, 100, || exe.run(&inputs).unwrap());
+    report("bench/policy_fwd_a8(literal path)", stats, "");
+    let p_dev = exe.upload(0, &inputs[0]).unwrap();
+    let m_dev = exe.upload(1, &inputs[1]).unwrap();
+    let stats = bench(5, 200, || {
+        exe.run_args(&[
+            Arg::Device(&p_dev),
+            Arg::Device(&m_dev),
+            Arg::Host(&inputs[2]),
+            Arg::Host(&inputs[3]),
+            Arg::Host(&inputs[4]),
+            Arg::Host(&inputs[5]),
+        ])
+        .unwrap()
+    });
+    report("bench/policy_fwd_a8(device buffers)", stats, "");
+
+    // --- grad_episode latency (backward over T=20)
+    let exe = rt.load("grad_episode_a8").unwrap();
+    let t = m.dims.episode_len;
+    let inputs = vec![
+        HostTensor::F32(state.params.clone()),
+        HostTensor::F32(state.masks.clone()),
+        HostTensor::F32(vec![0.2; t * a * m.dims.obs_dim]),
+        HostTensor::I32(vec![1; t * a]),
+        HostTensor::F32(vec![1.0; t * a]),
+        HostTensor::F32(vec![0.1; t]),
+    ];
+    let stats = bench(3, 30, || exe.run(&inputs).unwrap());
+    report("bench/grad_episode_a8(literal path)", stats, "");
+    let p_dev = exe.upload(0, &inputs[0]).unwrap();
+    let m_dev = exe.upload(1, &inputs[1]).unwrap();
+    let stats = bench(3, 30, || {
+        exe.run_args(&[
+            Arg::Device(&p_dev),
+            Arg::Device(&m_dev),
+            Arg::Host(&inputs[2]),
+            Arg::Host(&inputs[3]),
+            Arg::Host(&inputs[4]),
+            Arg::Host(&inputs[5]),
+        ])
+        .unwrap()
+    });
+    report("bench/grad_episode_a8(device buffers)", stats, "");
+
+    // --- apply_update latency
+    let exe = rt.load("apply_update").unwrap();
+    let inputs = vec![
+        HostTensor::F32(state.params.clone()),
+        HostTensor::F32(vec![1e-3; m.param_size]),
+        HostTensor::F32(vec![1e-6; m.param_size]),
+    ];
+    let stats = bench(5, 100, || exe.run(&inputs).unwrap());
+    report("bench/apply_update(PJRT execute)", stats, "");
+
+    // --- full training iteration (the system-level number)
+    let cfg = TrainConfig {
+        batch: 2,
+        iterations: 1,
+        pruner: PrunerChoice::Flgw(4),
+        seed: 1,
+        log_every: 0,
+        ..TrainConfig::default().with_agents(8)
+    };
+    let mut trainer = Trainer::from_default_artifacts(cfg).unwrap();
+    let mut it = 0usize;
+    let stats = bench(2, 15, || {
+        let r = trainer.run_iteration(it).unwrap();
+        it += 1;
+        r
+    });
+    report("bench/train_iteration(A=8,B=2,G=4)", stats, "");
+}

@@ -1,0 +1,22 @@
+//! E6 / Table I — workload-deviation comparison over a 2000-iteration
+//! trace (the paper's horizon), plus allocator throughput.
+use learning_group::accel::load_alloc::{balanced_indexes, LoadAllocator};
+use learning_group::accel::osel::OselEncoder;
+use learning_group::experiments::table1_workload_deviation;
+use learning_group::util::benchutil::{bench, report};
+use learning_group::util::Pcg32;
+
+fn main() {
+    println!("{}", table1_workload_deviation(2000));
+
+    let mut rng = Pcg32::seeded(3);
+    let ig = balanced_indexes(128, 8, 0.1, &mut rng);
+    let og = balanced_indexes(512, 8, 0.1, &mut rng);
+    let (srm, _) = OselEncoder::default().encode(&ig, &og, 8);
+    let wl = srm.workloads();
+    let la = LoadAllocator::new(3);
+    let stats = bench(10, 500, || la.row_based(&wl));
+    report("bench/alloc_row_based(128 rows)", stats, "");
+    let stats = bench(10, 500, || la.threshold_based(&wl));
+    report("bench/alloc_threshold(128 rows)", stats, "");
+}

@@ -1,0 +1,52 @@
+//! E4/E5 / Fig. 10 — OSEL sparse-data-generation efficiency, plus raw
+//! encoder throughput (the L3 hot path the paper accelerates).
+use learning_group::accel::load_alloc::balanced_indexes;
+use learning_group::accel::osel::{BaselineEncoder, OselEncoder};
+use learning_group::accel::formats;
+use learning_group::experiments::{fig10a_cycles, fig10b_memory};
+use learning_group::util::benchutil::{bench, report};
+use learning_group::util::Pcg32;
+
+fn main() {
+    println!("{}", fig10a_cycles());
+    println!("{}", fig10b_memory());
+
+    // §V format comparison: bitvector vs CSR/CSC metadata bits (128x512)
+    println!("Sparse-format metadata comparison (128x512, paper §V):");
+    println!("{:>4} {:>10} {:>18} {:>10} {:>10} {:>10}", "G", "sparsity", "bitvector(OSEL)", "bitmap", "CSR", "CSC");
+    for g in [2usize, 4, 8, 16, 32] {
+        let mut r = Pcg32::seeded(4);
+        let ig = balanced_indexes(128, g, 0.1, &mut r);
+        let og = balanced_indexes(512, g, 0.1, &mut r);
+        let (srm, _) = OselEncoder::default().encode(&ig, &og, g);
+        let c = formats::compare(&srm);
+        println!(
+            "{:>4} {:>9.1}% {:>17}b {:>9}b {:>9}b {:>9}b",
+            g,
+            100.0 * (1.0 - 1.0 / g as f64),
+            c[0].metadata_bits, c[1].metadata_bits, c[2].metadata_bits, c[3].metadata_bits
+        );
+    }
+    println!(
+        "bitmap/CSR crossover sparsity for 512 cols: {:.1}% (paper: ~90%)\n",
+        100.0 * formats::bitmap_csr_crossover_sparsity(512)
+    );
+
+    // host-side encoder throughput on the paper's 128x512 / G=16 case
+    let mut rng = Pcg32::seeded(2);
+    let ig = balanced_indexes(128, 16, 0.1, &mut rng);
+    let og = balanced_indexes(512, 16, 0.1, &mut rng);
+    let enc = OselEncoder::default();
+    let stats = bench(10, 200, || enc.encode(&ig, &og, 16));
+    let events_per_s = 128.0 / stats.median.as_secs_f64();
+    report(
+        "bench/osel_encode(128x512,G=16)",
+        stats,
+        &format!("{:.1} M row-events/s", events_per_s / 1e6),
+    );
+    let base = BaselineEncoder::default();
+    let stats = bench(10, 200, || base.encode(&ig, &og, 16));
+    report("bench/baseline_encode(128x512,G=16)", stats, "");
+    let stats = bench(10, 200, || enc.encode_transposed(&ig, &og, 16));
+    report("bench/osel_encode_transposed", stats, "");
+}

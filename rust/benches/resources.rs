@@ -1,0 +1,9 @@
+//! E10 / Fig. 8 — resource-utilization table.
+use learning_group::experiments::fig8_resources;
+use learning_group::util::benchutil::{bench, report};
+
+fn main() {
+    println!("{}", fig8_resources());
+    let stats = bench(3, 50, fig8_resources);
+    report("bench/resources(fig8_table)", stats, "");
+}

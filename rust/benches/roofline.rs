@@ -1,0 +1,9 @@
+//! E1 / Fig. 1 — regenerate the MARL roofline table and time the model.
+use learning_group::experiments::fig1_roofline;
+use learning_group::util::benchutil::{bench, report};
+
+fn main() {
+    println!("{}", fig1_roofline());
+    let stats = bench(3, 20, fig1_roofline);
+    report("bench/roofline(fig1_table)", stats, "");
+}

@@ -1,0 +1,86 @@
+//! Aggregator — combines per-core partial sums (§III, Fig. 3).
+//!
+//! Each core produces partial output vectors for its assigned rows; the
+//! aggregator adds them into the final layer output and hands it back to
+//! the load allocation unit for the next layer.  Hardware model: a
+//! pipelined adder tree over the C cores, `lanes` elements per cycle.
+
+/// Aggregator hardware parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct AggregatorConfig {
+    /// Elements combined per cycle (adder-tree width).
+    pub lanes: usize,
+}
+
+impl Default for AggregatorConfig {
+    fn default() -> Self {
+        AggregatorConfig { lanes: 64 }
+    }
+}
+
+/// Result of combining one layer's partials.
+#[derive(Debug, Clone)]
+pub struct AggregateResult {
+    pub output: Vec<f32>,
+    pub cycles: u64,
+}
+
+/// The aggregator.
+#[derive(Debug, Clone, Default)]
+pub struct Aggregator {
+    pub cfg: AggregatorConfig,
+}
+
+impl Aggregator {
+    pub fn new(cfg: AggregatorConfig) -> Self {
+        Aggregator { cfg }
+    }
+
+    /// Sum per-core partial vectors (all the same length).  Cycle cost:
+    /// `ceil(len / lanes)` per tree level, `ceil(log2 C)` levels.
+    pub fn combine(&self, partials: &[Vec<f32>]) -> AggregateResult {
+        assert!(!partials.is_empty());
+        let len = partials[0].len();
+        for p in partials {
+            assert_eq!(p.len(), len, "partial length mismatch");
+        }
+        let mut output = vec![0.0f32; len];
+        for p in partials {
+            for (o, v) in output.iter_mut().zip(p) {
+                *o += v;
+            }
+        }
+        let levels = (usize::BITS - (partials.len().max(2) - 1).leading_zeros()) as u64;
+        let cycles = (len as u64).div_ceil(self.cfg.lanes as u64) * levels;
+        AggregateResult { output, cycles }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn combines_elementwise() {
+        let agg = Aggregator::default();
+        let r = agg.combine(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        assert_eq!(r.output, vec![9.0, 12.0]);
+    }
+
+    #[test]
+    fn cycle_model_scales_with_length_and_cores() {
+        let agg = Aggregator::new(AggregatorConfig { lanes: 64 });
+        // 512 elements, 3 cores: ceil(512/64)=8 per level, 2 levels
+        let parts = vec![vec![0.0; 512]; 3];
+        assert_eq!(agg.combine(&parts).cycles, 16);
+        // single core: still one pass-through level
+        let one = vec![vec![0.0; 128]];
+        assert_eq!(agg.combine(&one).cycles, 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_lengths_panic() {
+        Aggregator::default().combine(&[vec![1.0], vec![1.0, 2.0]]);
+    }
+}

@@ -1,0 +1,122 @@
+//! Packed bitvector — the paper's sparse-row representation.
+//!
+//! One bitvector per weight-matrix row: bit j set ⇔ weight (row, j)
+//! survives the mask.  The paper stores these in BRAM (512 bits per row
+//! for the 128x512 layer); footprint accounting in
+//! [`crate::accel::sparse_row_memory`] charges exactly `len` bits.
+
+/// Fixed-length packed bit vector.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BitVec {
+    len: usize,
+    words: Vec<u64>,
+}
+
+impl BitVec {
+    pub fn zeros(len: usize) -> Self {
+        BitVec { len, words: vec![0; len.div_ceil(64)] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        let (w, b) = (i / 64, i % 64);
+        if v {
+            self.words[w] |= 1 << b;
+        } else {
+            self.words[w] &= !(1 << b);
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Number of set bits (the paper's per-row *workload*).
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Indexes of set bits (the paper's *non-zero indexes*).
+    pub fn ones(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.count_ones());
+        for (wi, &w) in self.words.iter().enumerate() {
+            let mut bits = w;
+            while bits != 0 {
+                let b = bits.trailing_zeros();
+                out.push((wi * 64) as u32 + b);
+                bits &= bits - 1;
+            }
+        }
+        out
+    }
+
+    /// Build from a comparison of one IG max-index against all OG
+    /// max-indexes (OSEL observation 1): bit j = (ig_idx == og_idx[j]).
+    pub fn from_index_compare(ig_idx: u16, og_idx: &[u16]) -> Self {
+        let mut bv = BitVec::zeros(og_idx.len());
+        for (j, &o) in og_idx.iter().enumerate() {
+            if o == ig_idx {
+                bv.set(j, true);
+            }
+        }
+        bv
+    }
+
+    /// Storage footprint in bits (what BRAM would hold).
+    pub fn bits(&self) -> usize {
+        self.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut bv = BitVec::zeros(130);
+        bv.set(0, true);
+        bv.set(64, true);
+        bv.set(129, true);
+        assert!(bv.get(0) && bv.get(64) && bv.get(129));
+        assert!(!bv.get(1) && !bv.get(63) && !bv.get(128));
+        bv.set(64, false);
+        assert!(!bv.get(64));
+    }
+
+    #[test]
+    fn count_and_ones_agree() {
+        let mut bv = BitVec::zeros(200);
+        for i in [3usize, 77, 130, 199] {
+            bv.set(i, true);
+        }
+        assert_eq!(bv.count_ones(), 4);
+        assert_eq!(bv.ones(), vec![3, 77, 130, 199]);
+    }
+
+    #[test]
+    fn index_compare_matches_definition() {
+        let og = [1u16, 0, 1, 3, 1];
+        let bv = BitVec::from_index_compare(1, &og);
+        assert_eq!(bv.ones(), vec![0, 2, 4]);
+        assert_eq!(bv.count_ones(), 3);
+        let none = BitVec::from_index_compare(7, &og);
+        assert_eq!(none.count_ones(), 0);
+    }
+
+    #[test]
+    fn footprint_is_len_bits() {
+        assert_eq!(BitVec::zeros(512).bits(), 512);
+    }
+}

@@ -1,0 +1,303 @@
+//! LearningGroup core — cycle model of the dense/sparse VPU array
+//! (§III-D, Fig. 7).
+//!
+//! One core holds `n_vpus` (paper: 264) FP16 VPUs behind a controller
+//! that can keep up to four weight-matrix rows *concurrently active*:
+//! each cycle it broadcasts the four active rows' activations and feeds
+//! every VPU one weight, steering it with a 2-bit selection signal built
+//! from the rows' pre-computed workloads.
+//!
+//! Cycle semantics (validated against the paper's reported utilizations,
+//! 86.96 % dense / 96.89 % sparse, by `tests::paper_utilizations`):
+//!
+//! * **Sparse mode** — per cycle the core consumes up to `n_vpus` weights
+//!   drawn from at most `issue_width` active compressed rows; a row slot
+//!   frees as soon as its workload is exhausted, so short sparse rows
+//!   pack densely and the array stays nearly full.  The paper's select
+//!   signal is 2-bit (4 broadcast activations per window), but its
+//!   reported near-linear speedup scaling up to G=16 (Fig. 11/13) is
+//!   only reachable if the controller issues more than 4 short rows per
+//!   cycle — the "pre-calculated workload" select-signal generation of
+//!   §III-D.  We therefore default `issue_width = 16` and provide the
+//!   strict 4-row variant as an ablation (`cargo bench --bench
+//!   accel_perf` sweeps the width; see DESIGN.md §Perf).
+//! * **Dense mode** — the dense datapath broadcasts a single activation
+//!   per cycle group (no flattening), so a row of `cols` weights takes
+//!   `ceil(cols / n_vpus)` cycles and layers with `cols < n_vpus` leave
+//!   lanes idle — exactly the paper's dense-utilization gap.
+
+use crate::accel::vpu::Vpu;
+
+/// Core hardware parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct CoreConfig {
+    /// VPUs per core (paper: 264).
+    pub n_vpus: usize,
+    /// Maximum compressed rows issued per cycle (see module docs; the
+    /// paper's literal 2-bit select would be 4, the reported scaling
+    /// implies an effective width near 16).
+    pub issue_width: usize,
+}
+
+impl Default for CoreConfig {
+    fn default() -> Self {
+        CoreConfig { n_vpus: 264, issue_width: 16 }
+    }
+}
+
+/// Cycle/utilization statistics of one core pass.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CoreStats {
+    pub cycles: u64,
+    pub macs: u64,
+    /// VPU-cycle slots available (cycles * n_vpus).
+    pub slots: u64,
+}
+
+impl CoreStats {
+    pub fn utilization(&self) -> f64 {
+        if self.slots == 0 {
+            return 0.0;
+        }
+        self.macs as f64 / self.slots as f64
+    }
+
+    pub fn merge(&mut self, other: CoreStats) {
+        self.cycles += other.cycles;
+        self.macs += other.macs;
+        self.slots += other.slots;
+    }
+}
+
+/// The core cycle simulator.
+#[derive(Debug, Clone, Default)]
+pub struct LearningGroupCore {
+    pub cfg: CoreConfig,
+}
+
+impl LearningGroupCore {
+    pub fn new(cfg: CoreConfig) -> Self {
+        LearningGroupCore { cfg }
+    }
+
+    /// Sparse mode: process compressed rows with the given workloads.
+    pub fn process_sparse(&self, workloads: &[u32]) -> CoreStats {
+        let n = self.cfg.n_vpus as u64;
+        let mut stats = CoreStats::default();
+        let mut queue = workloads.iter().copied().filter(|&w| w > 0);
+        // remaining weights of the ≤ max_rows active rows
+        let mut active: Vec<u64> = Vec::with_capacity(self.cfg.issue_width);
+        for _ in 0..self.cfg.issue_width {
+            if let Some(w) = queue.next() {
+                active.push(w as u64);
+            }
+        }
+        while !active.is_empty() {
+            // one cycle: up to n weights from the active rows, in order
+            let mut capacity = n;
+            for w in active.iter_mut() {
+                let take = (*w).min(capacity);
+                *w -= take;
+                capacity -= take;
+                stats.macs += take;
+                if capacity == 0 {
+                    break;
+                }
+            }
+            stats.cycles += 1;
+            stats.slots += n;
+            // refill freed slots (effective next cycle)
+            active.retain(|&w| w > 0);
+            while active.len() < self.cfg.issue_width {
+                match queue.next() {
+                    Some(w) => active.push(w as u64),
+                    None => break,
+                }
+            }
+        }
+        stats
+    }
+
+    /// Dense mode: `rows` rows of `cols` weights, single-activation
+    /// broadcast (each row occupies `ceil(cols / n_vpus)` full cycles).
+    pub fn process_dense(&self, rows: usize, cols: usize) -> CoreStats {
+        let n = self.cfg.n_vpus as u64;
+        let cycles_per_row = (cols as u64).div_ceil(n);
+        let cycles = rows as u64 * cycles_per_row;
+        CoreStats {
+            cycles,
+            macs: rows as u64 * cols as u64,
+            slots: cycles * n,
+        }
+    }
+
+    /// Functional check of the sparse datapath: compute a full sparse
+    /// matvec `y[j] += x[i] * w[i][j]` for the unmasked positions using
+    /// actual [`Vpu`]s in groups of four rows (the VPU's four
+    /// accumulation registers).  Used by tests to prove the
+    /// selection-signal dataflow computes the same numbers as a
+    /// straightforward masked matvec.
+    pub fn spmv_functional(
+        &self,
+        x: &[f32],
+        weights: &[f32], // rows x cols, row-major (dense storage)
+        cols: usize,
+        rows_nonzero: &[Vec<u32>], // per-row unmasked column indexes
+        y: &mut [f32],
+    ) {
+        assert_eq!(y.len(), cols);
+        let mut vpus: Vec<Vpu> = (0..self.cfg.n_vpus).map(|_| Vpu::new()).collect();
+        let acc_regs = 4; // four accumulation registers per VPU
+        for (gi, group) in rows_nonzero.chunks(acc_regs).enumerate() {
+            let base_row = gi * acc_regs;
+            // four broadcast activations for this group
+            let mut act = [0.0f32; 4];
+            for (s, _) in group.iter().enumerate() {
+                act[s] = x[base_row + s];
+            }
+            // flatten the group's workloads onto the VPU array
+            let mut vpu_i = 0usize;
+            for (s, nz) in group.iter().enumerate() {
+                let row = base_row + s;
+                for &j in nz {
+                    let w = weights[row * cols + j as usize];
+                    let vpu = &mut vpus[vpu_i % self.cfg.n_vpus];
+                    vpu.mac(&act, s as u8, w);
+                    // drain immediately into the output column — the
+                    // aggregator in hardware; keeps the model simple
+                    y[j as usize] += vpu.drain(s as u8);
+                    vpu_i += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn core() -> LearningGroupCore {
+        LearningGroupCore::default()
+    }
+
+    #[test]
+    fn dense_cycles_and_util_512() {
+        // 128 x 512 layer: 2 cycles per row, 97% utilization
+        let s = core().process_dense(128, 512);
+        assert_eq!(s.cycles, 256);
+        assert!((s.utilization() - 512.0 / 528.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dense_util_small_cols() {
+        // cols < n_vpus leaves lanes idle: util = 128/264
+        let s = core().process_dense(128, 128);
+        assert_eq!(s.cycles, 128);
+        assert!((s.utilization() - 128.0 / 264.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sparse_packs_short_rows_per_cycle() {
+        // 4 rows x 64 weights = 256 <= 264: one cycle, 97% util
+        let s = core().process_sparse(&[64, 64, 64, 64]);
+        assert_eq!(s.cycles, 1);
+        assert!((s.utilization() - 256.0 / 264.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn issue_width_ablation_caps_speedup() {
+        // With the strict 4-row issue of the paper's 2-bit select, very
+        // sparse layers cannot fill the array: 128 rows of 32 weights
+        // (G=16 on a 512-column layer) take 32 cycles at width 4 but
+        // reach the capacity bound at width 16.
+        let wl = vec![32u32; 128];
+        let strict = LearningGroupCore::new(CoreConfig { n_vpus: 264, issue_width: 4 });
+        let wide = LearningGroupCore::new(CoreConfig { n_vpus: 264, issue_width: 16 });
+        let s4 = strict.process_sparse(&wl);
+        let s16 = wide.process_sparse(&wl);
+        assert_eq!(s4.cycles, 32); // 4 rows * 32 = 128 < 264 per cycle
+        assert_eq!(s16.cycles, (128u64 * 32).div_ceil(264)); // capacity-bound
+        assert!(s16.utilization() > 0.9 && s4.utilization() < 0.55);
+    }
+
+    #[test]
+    fn sparse_long_rows_spill() {
+        // one row of 1000: ceil(1000/264) = 4 cycles
+        let s = core().process_sparse(&[1000]);
+        assert_eq!(s.cycles, 4);
+        assert_eq!(s.macs, 1000);
+    }
+
+    #[test]
+    fn sparse_zero_workloads_skipped() {
+        let s = core().process_sparse(&[0, 0, 10, 0]);
+        assert_eq!(s.cycles, 1);
+        assert_eq!(s.macs, 10);
+    }
+
+    #[test]
+    fn macs_conserved() {
+        let mut rng = Pcg32::seeded(4);
+        let wl: Vec<u32> = (0..128).map(|_| rng.next_below(130)).collect();
+        let total: u64 = wl.iter().map(|&w| w as u64).sum();
+        assert_eq!(core().process_sparse(&wl).macs, total);
+    }
+
+    #[test]
+    fn paper_utilizations() {
+        // The paper reports 86.96% average dense and 96.89% average
+        // sparse MAC utilization.  Reproduce both within a few points on
+        // the IC3Net layer mix (w_enc 6x128, w_comm 128x128, w_x/w_h
+        // 128x512, heads dense-tiny are excluded as in the paper).
+        let c = core();
+        let mut dense = CoreStats::default();
+        dense.merge(c.process_dense(6, 128));
+        dense.merge(c.process_dense(128, 128));
+        dense.merge(c.process_dense(128, 512));
+        dense.merge(c.process_dense(128, 512));
+        let du = dense.utilization();
+        assert!((0.80..0.93).contains(&du), "dense util {du}");
+
+        // sparse at G=4 (75% sparsity): expected workload = cols/4
+        let mut rng = Pcg32::seeded(11);
+        let mut sparse = CoreStats::default();
+        for &(rows, cols) in &[(6usize, 128usize), (128, 128), (128, 512), (128, 512)] {
+            let wl: Vec<u32> = (0..rows)
+                .map(|_| {
+                    (0..cols)
+                        .filter(|_| rng.next_f32() < 0.25)
+                        .count() as u32
+                })
+                .collect();
+            sparse.merge(c.process_sparse(&wl));
+        }
+        let su = sparse.utilization();
+        assert!((0.90..1.0).contains(&su), "sparse util {su}");
+        assert!(su > du, "sparse packing must beat dense broadcast");
+    }
+
+    #[test]
+    fn spmv_functional_matches_reference() {
+        let mut rng = Pcg32::seeded(21);
+        let (rows, cols) = (13usize, 17usize);
+        let x: Vec<f32> = (0..rows).map(|_| rng.next_normal()).collect();
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.next_normal()).collect();
+        let nz: Vec<Vec<u32>> = (0..rows)
+            .map(|_| (0..cols as u32).filter(|_| rng.next_f32() < 0.4).collect())
+            .collect();
+        let mut y = vec![0.0f32; cols];
+        core().spmv_functional(&x, &w, cols, &nz, &mut y);
+        // reference
+        let mut yref = vec![0.0f32; cols];
+        for i in 0..rows {
+            for &j in &nz[i] {
+                yref[j as usize] += x[i] * w[i * cols + j as usize];
+            }
+        }
+        for (a, b) in y.iter().zip(&yref) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,40 @@
+//! Cycle-level simulator of the LearningGroup FPGA accelerator.
+//!
+//! The paper's hardware contribution, reproduced as an instrumented
+//! software model (DESIGN.md §Hardware-Adaptation):
+//!
+//! * [`bitvec`] — packed bitvectors (the paper's sparse-row format).
+//! * [`osel`] — the On-chip Sparse-data Encoding Loop: index-compare
+//!   bitvector generation with hit/miss caching, plus the non-caching
+//!   baseline encoder (Fig. 10(a)).
+//! * [`sparse_row_memory`] — the cached tuple store with exact bit-level
+//!   footprint accounting (Fig. 10(b)).
+//! * [`load_alloc`] — run-time load balancing: the paper's row-based
+//!   scheme and the threshold-based baseline (Table I).
+//! * [`core`] / [`vpu`] — the LearningGroup core: 264 dense/sparse vector
+//!   processing units consuming up to four compressed weight-matrix rows
+//!   simultaneously (§III-D), with cycle and utilization accounting.
+//! * [`aggregator`] — partial-sum combining across cores.
+//! * [`formats`] — bitvector vs CSR/CSC compression comparison (§V's
+//!   "higher compression ratio than CSR/CSC below 90 % sparsity" claim).
+//! * [`perf`] — the FPGA performance/energy model (Fig. 11/12/13).
+//! * [`gpu_model`] — the Titan RTX analytical baseline (Fig. 11/12).
+//! * [`roofline`] — the CPU-system roofline of Fig. 1.
+//! * [`resources`] — the FPGA resource-utilization model (Fig. 8).
+
+pub mod aggregator;
+pub mod bitvec;
+pub mod core;
+pub mod formats;
+pub mod gpu_model;
+pub mod load_alloc;
+pub mod osel;
+pub mod perf;
+pub mod resources;
+pub mod roofline;
+pub mod sparse_row_memory;
+pub mod vpu;
+
+pub use bitvec::BitVec;
+pub use osel::{BaselineEncoder, OselConfig, OselEncoder, OselStats};
+pub use sparse_row_memory::{SparseRowMemory, SparseTuple};

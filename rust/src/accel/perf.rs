@@ -1,0 +1,420 @@
+//! FPGA accelerator performance/energy model — Fig. 11, 12, 13.
+//!
+//! Combines the component simulators (OSEL encoder, load allocation,
+//! LearningGroup cores, aggregator) into per-iteration cycle counts for a
+//! training scenario (A agents, batch B, group count G), then converts to
+//! the paper's metrics:
+//!
+//! * **effective throughput** — dense-equivalent FLOPs / time (the paper
+//!   reports sparse runs against the dense FLOP count, which is how
+//!   3629.5 GFLOPS can exceed the 277 GFLOPS dense peak of 3x264 MACs at
+//!   175 MHz);
+//! * **energy efficiency** — GFLOPS / W at the measured 36.3 W;
+//! * **speedup over dense** — Fig. 13, for both inference and training
+//!   (training pays the grouping-matrix update on the VPUs);
+//! * **sparse-data-generation share** — Fig. 12(b).
+
+use crate::accel::aggregator::Aggregator;
+use crate::accel::core::{CoreConfig, CoreStats, LearningGroupCore};
+use crate::accel::load_alloc::LoadAllocator;
+use crate::accel::osel::{OselConfig, OselEncoder};
+use crate::util::Pcg32;
+
+/// Accelerator-level configuration (paper Fig. 8: C=3 cores).
+#[derive(Debug, Clone, Copy)]
+pub struct AccelConfig {
+    pub cores: usize,
+    pub core: CoreConfig,
+    pub osel: OselConfig,
+    pub clock_hz: f64,
+    pub power_w: f64,
+}
+
+impl Default for AccelConfig {
+    fn default() -> Self {
+        AccelConfig {
+            cores: 3,
+            core: CoreConfig::default(),
+            osel: OselConfig::default(),
+            clock_hz: 175e6,
+            power_w: 36.3,
+        }
+    }
+}
+
+/// The network's layer shapes (rows x cols of every matmul on the
+/// per-agent-step path).
+#[derive(Debug, Clone)]
+pub struct NetShape {
+    /// FLGW-masked layers.
+    pub masked: Vec<(usize, usize)>,
+    /// Dense head layers.
+    pub heads: Vec<(usize, usize)>,
+    /// Environment steps per episode.
+    pub episode_len: usize,
+}
+
+impl NetShape {
+    /// The IC3Net shape used throughout the paper's evaluation.
+    pub fn ic3net() -> Self {
+        NetShape {
+            masked: vec![(6, 128), (128, 128), (128, 512), (128, 512)],
+            // policy (5) + value (1) + gate (2) heads, fused into one
+            // 128x8 output block (they share the h2 activation)
+            heads: vec![(128, 8)],
+            episode_len: 20,
+        }
+    }
+
+    /// MACs of one agent-step forward pass.
+    pub fn macs_per_step(&self) -> u64 {
+        self.masked
+            .iter()
+            .chain(&self.heads)
+            .map(|&(m, n)| (m * n) as u64)
+            .sum()
+    }
+
+    /// Dense-equivalent FLOPs of one agent-step (2 FLOPs per MAC).
+    pub fn flops_per_step(&self) -> u64 {
+        2 * self.macs_per_step()
+    }
+}
+
+/// A training scenario (Fig. 11 axes).
+#[derive(Debug, Clone, Copy)]
+pub struct Scenario {
+    pub agents: usize,
+    pub batch: usize,
+    /// Group count; 1 = dense.
+    pub groups: usize,
+}
+
+/// Per-iteration performance estimate.
+#[derive(Debug, Clone)]
+pub struct PerfReport {
+    pub scenario: Scenario,
+    /// Cycles for sparse data generation (OSEL, incl. transposed pass).
+    pub sparse_gen_cycles: u64,
+    /// Cycles for all DNN compute of one training iteration.
+    pub compute_cycles: u64,
+    /// Inference-only cycles (forward passes of the iteration).
+    pub inference_cycles: u64,
+    /// End-to-end iteration latency in seconds.
+    pub latency_s: f64,
+    /// Effective throughput in GFLOPS (dense-equivalent FLOPs / time).
+    pub throughput_gflops: f64,
+    /// GFLOPS per watt.
+    pub energy_eff: f64,
+    /// Average VPU utilization over the compute phase.
+    pub utilization: f64,
+    /// Fraction of iteration time spent on sparse data generation.
+    pub sparse_gen_fraction: f64,
+}
+
+/// The model.
+#[derive(Debug, Clone, Default)]
+pub struct FpgaModel {
+    pub cfg: AccelConfig,
+    pub shape: NetShapeHolder,
+}
+
+/// Wrapper so FpgaModel::default() gets the IC3Net shape.
+#[derive(Debug, Clone)]
+pub struct NetShapeHolder(pub NetShape);
+
+impl Default for NetShapeHolder {
+    fn default() -> Self {
+        NetShapeHolder(NetShape::ic3net())
+    }
+}
+
+impl FpgaModel {
+    pub fn new(cfg: AccelConfig, shape: NetShape) -> Self {
+        FpgaModel { cfg, shape: NetShapeHolder(shape) }
+    }
+
+    fn shape(&self) -> &NetShape {
+        &self.shape.0
+    }
+
+    /// Synthetic per-layer row workloads for group count g (uniform
+    /// random grouping, as after random init — the steady-state average
+    /// the paper's load-balancing analysis uses).
+    fn layer_workloads(&self, rows: usize, cols: usize, g: usize, rng: &mut Pcg32) -> Vec<u32> {
+        let ig: Vec<u16> = (0..rows).map(|_| rng.next_below(g as u32) as u16).collect();
+        let og: Vec<u16> = (0..cols).map(|_| rng.next_below(g as u32) as u16).collect();
+        let enc = OselEncoder::new(self.cfg.osel);
+        let (srm, _) = enc.encode(&ig, &og, g);
+        srm.workloads()
+    }
+
+    /// Forward cycles of ONE agent-step, split over the C cores with
+    /// row-based balancing; returns merged core stats (cycles = critical
+    /// path over cores).
+    pub fn forward_step(&self, g: usize, rng: &mut Pcg32) -> CoreStats {
+        let core = LearningGroupCore::new(self.cfg.core);
+        let la = LoadAllocator::new(self.cfg.cores);
+        let agg = Aggregator::default();
+        let mut total = CoreStats::default();
+        let mut agg_cycles = 0u64;
+        for &(rows, cols) in &self.shape().masked {
+            let layer_stats = if g <= 1 {
+                // dense scenario: no OSEL metadata exists, so the masked
+                // layers run the single-activation-broadcast dense
+                // datapath (this is what produces the paper's 86.96%
+                // dense utilization on the layer mix)
+                let rows_pc = rows.div_ceil(self.cfg.cores);
+                core.process_dense(rows_pc, cols)
+            } else {
+                let wl = self.layer_workloads(rows, cols, g, rng);
+                let alloc = la.row_based(&wl);
+                // critical path = the slowest core
+                let mut worst = CoreStats::default();
+                for a in &alloc.per_core {
+                    let per: Vec<u32> = a.rows.iter().map(|&r| wl[r]).collect();
+                    let s = core.process_sparse(&per);
+                    if s.cycles > worst.cycles {
+                        worst = s;
+                    }
+                }
+                worst
+            };
+            total.merge(layer_stats);
+            // the aggregator is pipelined behind the next layer's compute
+            // (Fig. 3); track its cycles but keep them off the critical
+            // path
+            let partials = vec![vec![0.0f32; cols]; self.cfg.cores];
+            agg_cycles += agg.combine(&partials).cycles;
+        }
+        // Heads are tiny and never masked: they run through the packed
+        // path with the trivial all-ones tuple (OSEL with G=1 caches a
+        // single dense bitvector), so row-chunks flatten onto the array.
+        for &(rows, cols) in &self.shape().heads {
+            let rows_pc = rows.div_ceil(self.cfg.cores);
+            total.merge(core.process_sparse(&vec![cols as u32; rows_pc]));
+        }
+        let _ = agg_cycles; // reported via aggregator benches
+        total
+    }
+
+    /// OSEL sparse-data-generation cycles for one iteration (all masked
+    /// layers, forward + transposed encodings).
+    pub fn sparse_gen_cycles(&self, g: usize, rng: &mut Pcg32) -> u64 {
+        if g <= 1 {
+            return 0;
+        }
+        let enc = OselEncoder::new(self.cfg.osel);
+        let mut cycles = 0u64;
+        for &(rows, cols) in &self.shape().masked {
+            let ig: Vec<u16> = (0..rows).map(|_| rng.next_below(g as u32) as u16).collect();
+            let og: Vec<u16> = (0..cols).map(|_| rng.next_below(g as u32) as u16).collect();
+            let (_, s) = enc.encode(&ig, &og, g);
+            cycles += s.total_cycles();
+            let (_, st) = enc.encode_transposed(&ig, &og, g);
+            cycles += st.total_cycles();
+        }
+        cycles
+    }
+
+    /// Full training-iteration estimate.
+    pub fn iteration(&self, sc: Scenario) -> PerfReport {
+        let mut rng = Pcg32::new(0x5eed, (sc.agents * 1000 + sc.batch * 10 + sc.groups) as u64);
+        let t = self.shape().episode_len as u64;
+        let steps = sc.agents as u64 * sc.batch as u64 * t;
+
+        let fwd = self.forward_step(sc.groups, &mut rng);
+        // backward ≈ 2x forward work (dx through W^T + dw outer product),
+        // same sparsity pattern (OSEL's transposed encoding).
+        let fwd_cycles = fwd.cycles * steps;
+        let bwd_cycles = 2 * fwd.cycles * steps;
+        // weight update: elementwise RMSprop over surviving params,
+        // C*n_vpus lanes
+        let params: u64 = self
+            .shape()
+            .masked
+            .iter()
+            .chain(&self.shape().heads)
+            .map(|&(m, n)| (m * n) as u64)
+            .sum();
+        let surviving = if sc.groups <= 1 { params } else { params / sc.groups as u64 };
+        let lanes = (self.cfg.cores * self.cfg.core.n_vpus) as u64;
+        let update_cycles = (3 * surviving).div_ceil(lanes); // read g, update s, write w
+        // grouping-matrix update on the VPUs (the paper: "like a normal
+        // weight update", every iteration, training only)
+        let grouping_elems: u64 = if sc.groups <= 1 {
+            0
+        } else {
+            self.shape()
+                .masked
+                .iter()
+                .map(|&(m, n)| ((m + n) * sc.groups) as u64)
+                .sum()
+        };
+        let grouping_cycles = (3 * grouping_elems).div_ceil(lanes);
+
+        let sparse_gen = self.sparse_gen_cycles(sc.groups, &mut rng);
+        let compute = fwd_cycles + bwd_cycles + update_cycles + grouping_cycles;
+        let total = compute + sparse_gen;
+
+        let latency_s = total as f64 / self.cfg.clock_hz;
+        let dense_flops = self.shape().flops_per_step() as f64 * steps as f64 * 3.0; // fwd+bwd
+        let throughput = dense_flops / latency_s / 1e9;
+        PerfReport {
+            scenario: sc,
+            sparse_gen_cycles: sparse_gen,
+            compute_cycles: compute,
+            inference_cycles: fwd_cycles,
+            latency_s,
+            throughput_gflops: throughput,
+            energy_eff: throughput / self.cfg.power_w,
+            utilization: fwd.utilization(),
+            sparse_gen_fraction: sparse_gen as f64 / total as f64,
+        }
+    }
+
+    /// Fig. 13 speedups over the dense case at group count `g`.
+    /// Returns (inference speedup, training speedup).
+    pub fn speedup_over_dense(&self, g: usize, agents: usize, batch: usize) -> (f64, f64) {
+        let dense = self.iteration(Scenario { agents, batch, groups: 1 });
+        let sparse = self.iteration(Scenario { agents, batch, groups: g });
+        // Inference: forward passes only; sparse-data generation overlaps
+        // the batch's compute (Fig. 12: 2.9% average, hidden in the
+        // pipeline).  Training: the full iteration, where the sparse case
+        // additionally pays OSEL encoding and the grouping-matrix update
+        // — which is why the paper's training speedups trail inference.
+        let inf = dense.inference_cycles as f64 / sparse.inference_cycles as f64;
+        let train = (dense.compute_cycles + dense.sparse_gen_cycles) as f64
+            / (sparse.compute_cycles + sparse.sparse_gen_cycles) as f64;
+        (inf, train)
+    }
+}
+
+/// Published speedup ranges of the state-of-the-art sparse training
+/// accelerators (Fig. 13's comparison row), linearly interpolated over
+/// their evaluated sparsity span — the same interpolation the paper uses
+/// ("calculated by interpolating their peak performances to the target
+/// sparsity").
+#[derive(Debug, Clone, Copy)]
+pub struct CompetitorModel {
+    pub name: &'static str,
+    pub min_speedup: f64,
+    pub max_speedup: f64,
+    /// Sparsity span (fractions) over which the range was reported.
+    pub span: (f64, f64),
+}
+
+pub const COMPETITORS: [CompetitorModel; 4] = [
+    CompetitorModel { name: "EagerPruning", min_speedup: 1.12, max_speedup: 2.10, span: (0.5, 0.9375) },
+    CompetitorModel { name: "Procrustes", min_speedup: 1.24, max_speedup: 2.32, span: (0.5, 0.9375) },
+    CompetitorModel { name: "SparseTrain", min_speedup: 1.52, max_speedup: 2.84, span: (0.5, 0.9375) },
+    CompetitorModel { name: "OmniDRL", min_speedup: 1.67, max_speedup: 6.98, span: (0.5, 0.9375) },
+];
+
+impl CompetitorModel {
+    pub fn speedup_at(&self, sparsity: f64) -> f64 {
+        let (lo, hi) = self.span;
+        let x = ((sparsity - lo) / (hi - lo)).clamp(0.0, 1.0);
+        self.min_speedup + x * (self.max_speedup - self.min_speedup)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> FpgaModel {
+        FpgaModel::default()
+    }
+
+    #[test]
+    fn dense_throughput_near_paper_257() {
+        // Paper: 257.4 GFLOPS dense regardless of A and B.
+        for &(a, b) in &[(3usize, 1usize), (8, 16), (10, 32)] {
+            let r = model().iteration(Scenario { agents: a, batch: b, groups: 1 });
+            assert!(
+                (200.0..320.0).contains(&r.throughput_gflops),
+                "A={a} B={b}: {} GFLOPS",
+                r.throughput_gflops
+            );
+        }
+    }
+
+    #[test]
+    fn dense_throughput_invariant_in_a_and_b() {
+        let m = model();
+        let r1 = m.iteration(Scenario { agents: 3, batch: 1, groups: 1 });
+        let r2 = m.iteration(Scenario { agents: 10, batch: 32, groups: 1 });
+        let ratio = r1.throughput_gflops / r2.throughput_gflops;
+        assert!((0.9..1.1).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn throughput_scales_with_group_number() {
+        // Paper Fig 11 scenario 3: near-linear scaling with G.
+        let m = model();
+        let dense = m.iteration(Scenario { agents: 8, batch: 16, groups: 1 });
+        let g16 = m.iteration(Scenario { agents: 8, batch: 16, groups: 16 });
+        let gain = g16.throughput_gflops / dense.throughput_gflops;
+        assert!(gain > 8.0, "G=16 gain {gain} (paper ~14x)");
+        assert!(g16.throughput_gflops > 2000.0, "{}", g16.throughput_gflops);
+    }
+
+    #[test]
+    fn speedups_match_paper_band() {
+        // Paper: inference 1.97-12.52x, training 1.92-9.75x over dense.
+        let m = model();
+        let (inf2, tr2) = m.speedup_over_dense(2, 8, 16);
+        assert!((1.3..3.0).contains(&inf2), "G=2 inference {inf2}");
+        assert!((1.3..3.0).contains(&tr2), "G=2 training {tr2}");
+        let (inf16, tr16) = m.speedup_over_dense(16, 8, 16);
+        assert!((8.0..16.0).contains(&inf16), "G=16 inference {inf16}");
+        assert!((6.0..13.0).contains(&tr16), "G=16 training {tr16}");
+        // training pays the grouping update: strictly less than inference
+        assert!(tr16 < inf16);
+    }
+
+    #[test]
+    fn sparse_gen_fraction_small() {
+        // Paper: sparse data generation is 2.9% of execution on average.
+        let r = model().iteration(Scenario { agents: 8, batch: 16, groups: 4 });
+        assert!(r.sparse_gen_fraction < 0.08, "{}", r.sparse_gen_fraction);
+    }
+
+    #[test]
+    fn latency_satisfies_realtime_band() {
+        // Paper: 25.04 ms average latency, < 30 ms real-time constraint;
+        // grouping brings it under 10 ms.
+        let m = model();
+        let dense = m.iteration(Scenario { agents: 8, batch: 16, groups: 1 });
+        assert!(dense.latency_s < 0.045, "dense latency {}", dense.latency_s);
+        let g4 = m.iteration(Scenario { agents: 8, batch: 16, groups: 4 });
+        assert!(g4.latency_s < 0.012, "G=4 latency {}", g4.latency_s);
+    }
+
+    #[test]
+    fn competitor_interpolation_endpoints() {
+        let eager = COMPETITORS[0];
+        assert!((eager.speedup_at(0.5) - 1.12).abs() < 1e-9);
+        assert!((eager.speedup_at(0.9375) - 2.10).abs() < 1e-9);
+        let mid = eager.speedup_at(0.71875);
+        assert!(mid > 1.12 && mid < 2.10);
+    }
+
+    #[test]
+    fn this_work_beats_competitors_at_every_sparsity() {
+        let m = model();
+        for &g in &[2usize, 4, 8, 16] {
+            let sparsity = 1.0 - 1.0 / g as f64;
+            let (inf, _) = m.speedup_over_dense(g, 8, 16);
+            for c in &COMPETITORS {
+                let cs = c.speedup_at(sparsity);
+                // allow OmniDRL to be close at mid sparsity, as in Fig 13
+                if c.name == "OmniDRL" && g <= 4 {
+                    continue;
+                }
+                assert!(inf > cs, "G={g}: {} {cs} >= us {inf}", c.name);
+            }
+        }
+    }
+}

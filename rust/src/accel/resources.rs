@@ -1,0 +1,211 @@
+//! FPGA resource-utilization model — Fig. 8.
+//!
+//! The paper reports post-implementation utilization of a Xilinx Alveo
+//! U280 (Vitis 2020.1, 175 MHz).  Without the toolchain we use an
+//! analytical model: per-module unit costs (LUT/FF/DSP per FP16
+//! operator, BRAM bits per memory) multiplied by instance counts from the
+//! architecture configuration, normalized against the U280's capacity.
+//! Unit costs are calibrated so the totals land on the paper's reported
+//! table; the *structure* (which module dominates which resource) falls
+//! out of the instance counts.
+
+/// Xilinx Alveo U280 capacity.
+#[derive(Debug, Clone, Copy)]
+pub struct FpgaDevice {
+    pub luts: u64,
+    pub ffs: u64,
+    /// 18 Kb BRAM blocks (incl. URAM expressed as equivalents).
+    pub bram_18k: u64,
+    pub dsps: u64,
+}
+
+pub const U280: FpgaDevice = FpgaDevice {
+    luts: 1_303_680,
+    ffs: 2_607_360,
+    bram_18k: 4_032,
+    dsps: 9_024,
+};
+
+/// Per-module absolute resource estimate.
+#[derive(Debug, Clone)]
+pub struct ModuleUsage {
+    pub name: &'static str,
+    pub luts: u64,
+    pub ffs: u64,
+    pub bram_18k: u64,
+    pub dsps: u64,
+    /// Share of the measured 36.3 W board power.
+    pub power_frac: f64,
+}
+
+impl ModuleUsage {
+    pub fn percentages(&self, dev: &FpgaDevice) -> [f64; 5] {
+        [
+            100.0 * self.luts as f64 / dev.luts as f64,
+            100.0 * self.ffs as f64 / dev.ffs as f64,
+            100.0 * self.bram_18k as f64 / dev.bram_18k as f64,
+            100.0 * self.dsps as f64 / dev.dsps as f64,
+            100.0 * self.power_frac,
+        ]
+    }
+}
+
+/// Unit costs of the FP16 datapath (calibrated; see module docs).
+#[derive(Debug, Clone, Copy)]
+pub struct UnitCosts {
+    /// Per VPU: FP16 multiplier + adder + 4:1 mux + 4 accumulators.
+    pub vpu_luts: u64,
+    pub vpu_ffs: u64,
+    pub vpu_dsps: f64,
+    /// Sparse data encoder per comparator lane.
+    pub encoder_luts_per_lane: u64,
+    pub encoder_ffs_per_lane: u64,
+}
+
+impl Default for UnitCosts {
+    fn default() -> Self {
+        UnitCosts {
+            vpu_luts: 1_110,
+            vpu_ffs: 2_518,
+            vpu_dsps: 9.8,
+            encoder_luts_per_lane: 7_000,
+            encoder_ffs_per_lane: 1_950,
+        }
+    }
+}
+
+/// The resource model for a (cores, vpus-per-core) configuration.
+pub fn model(cores: usize, vpus_per_core: usize, cmp_lanes: usize) -> Vec<ModuleUsage> {
+    let u = UnitCosts::default();
+    let n = (cores * vpus_per_core) as u64;
+    vec![
+        ModuleUsage {
+            name: "Vector Processing Units",
+            luts: n * u.vpu_luts,
+            ffs: n * u.vpu_ffs,
+            bram_18k: 0,
+            dsps: (n as f64 * u.vpu_dsps) as u64,
+            power_frac: 0.635,
+        },
+        ModuleUsage {
+            name: "Sparse Data Encoder",
+            luts: cmp_lanes as u64 * u.encoder_luts_per_lane,
+            ffs: cmp_lanes as u64 * u.encoder_ffs_per_lane,
+            bram_18k: 0,
+            dsps: 0,
+            power_frac: 0.014,
+        },
+        ModuleUsage {
+            name: "Load Allocation Unit",
+            luts: 69_000,
+            ffs: 172_000,
+            bram_18k: 0,
+            dsps: 0,
+            power_frac: 0.011,
+        },
+        ModuleUsage {
+            name: "AXI / PCIe Interface",
+            luts: 184_000,
+            ffs: 342_000,
+            bram_18k: 863,
+            dsps: 9,
+            power_frac: 0.311,
+        },
+        ModuleUsage {
+            name: "Aggregator",
+            luts: 40_400,
+            ffs: 60_000,
+            bram_18k: 0,
+            dsps: 1_254,
+            power_frac: 0.016,
+        },
+        ModuleUsage {
+            name: "On-chip Memory",
+            luts: 14_300,
+            ffs: 2_600,
+            bram_18k: 3_169,
+            dsps: 0,
+            power_frac: 0.011,
+        },
+        ModuleUsage {
+            name: "Core Controller",
+            luts: 3_900,
+            ffs: 5_200,
+            bram_18k: 0,
+            dsps: 0,
+            power_frac: 0.002,
+        },
+    ]
+}
+
+/// Paper Fig. 8 reference percentages, for comparison in the bench:
+/// (name, LUT%, FF%, BRAM%, DSP%, Power%).
+pub const PAPER_FIG8: [(&str, f64, f64, f64, f64, f64); 7] = [
+    ("Vector Processing Units", 67.5, 76.5, 0.0, 86.0, 63.5),
+    ("Sparse Data Encoder", 8.6, 1.2, 0.0, 0.0, 1.4),
+    ("Load Allocation Unit", 5.3, 6.6, 0.0, 0.0, 1.1),
+    ("AXI / PCIe Interface", 14.1, 13.1, 21.4, 0.1, 31.1),
+    ("Aggregator", 3.1, 2.3, 0.0, 13.9, 1.6),
+    ("On-chip Memory", 1.1, 0.1, 78.6, 0.0, 1.1),
+    ("Core Controller", 0.3, 0.2, 0.0, 0.0, 0.2),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_fit_the_device() {
+        let m = model(3, 264, 16);
+        let (mut l, mut f, mut b, mut d) = (0u64, 0u64, 0u64, 0u64);
+        for mu in &m {
+            l += mu.luts;
+            f += mu.ffs;
+            b += mu.bram_18k;
+            d += mu.dsps;
+        }
+        assert!(l <= U280.luts, "LUT {l}");
+        assert!(f <= U280.ffs, "FF {f}");
+        assert!(b <= U280.bram_18k, "BRAM {b}");
+        assert!(d <= U280.dsps, "DSP {d}");
+    }
+
+    #[test]
+    fn percentages_near_paper_fig8() {
+        // Every module within a few points of the paper's table on every
+        // resource class (the calibration target).
+        let m = model(3, 264, 16);
+        for (mu, paper) in m.iter().zip(&PAPER_FIG8) {
+            assert_eq!(mu.name, paper.0);
+            let pct = mu.percentages(&U280);
+            let expect = [paper.1, paper.2, paper.3, paper.4, paper.5];
+            for (got, want) in pct.iter().zip(&expect) {
+                assert!(
+                    (got - want).abs() < 3.0,
+                    "{}: got {got:.1}% want {want:.1}%",
+                    mu.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn vpus_dominate_compute_resources() {
+        let m = model(3, 264, 16);
+        let vpu = &m[0];
+        for other in &m[1..] {
+            assert!(vpu.luts > other.luts);
+            assert!(vpu.dsps >= other.dsps);
+        }
+    }
+
+    #[test]
+    fn encoder_overhead_is_minor() {
+        // The paper's claim: sparsity support costs only 8.6% LUTs and
+        // 1.4% power.
+        let m = model(3, 264, 16);
+        let enc = &m[1];
+        let pct = enc.percentages(&U280);
+        assert!(pct[0] < 10.0 && pct[4] < 2.0);
+    }
+}

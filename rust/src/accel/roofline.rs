@@ -1,0 +1,160 @@
+//! Roofline model of MARL on a CPU system — Fig. 1.
+//!
+//! The paper motivates the accelerator with the roofline of an Intel Core
+//! i5-10400 + dual-channel DDR4-2666: a single agent is memory-bound, but
+//! the centralized network's weight reuse moves MARL compute-bound as the
+//! agent count grows, and real-time operation (30 ms action latency)
+//! demands hundreds of GFLOPS that the CPU cannot deliver.
+
+use crate::accel::perf::NetShape;
+
+/// CPU system parameters (paper Fig. 1 caption).
+#[derive(Debug, Clone, Copy)]
+pub struct CpuSystem {
+    /// Peak FP32 FLOPS: 6 cores x 2 AVX2 FMA ports x 8 lanes x 2 FLOPs
+    /// x 2.9 GHz boost.
+    pub peak_gflops: f64,
+    /// DDR4-2666 dual channel: 2 x 21.3 GB/s.
+    pub bandwidth_gbs: f64,
+}
+
+impl Default for CpuSystem {
+    fn default() -> Self {
+        CpuSystem { peak_gflops: 556.8, bandwidth_gbs: 42.6 }
+    }
+}
+
+/// Which roof binds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bound {
+    Memory,
+    Compute,
+}
+
+/// One roofline point for a (agents, batch) MARL configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct RooflinePoint {
+    pub agents: usize,
+    pub batch: usize,
+    /// FLOPs per DRAM byte.
+    pub arithmetic_intensity: f64,
+    /// min(peak, AI * BW) — the attainable performance.
+    pub attainable_gflops: f64,
+    pub bound: Bound,
+    /// GFLOPS needed to finish one training iteration within the
+    /// real-time action latency.
+    pub required_gflops: f64,
+}
+
+/// The roofline model.
+#[derive(Debug, Clone, Copy)]
+pub struct Roofline {
+    pub system: CpuSystem,
+    /// Real-time action-latency budget (paper: 30 ms).
+    pub latency_budget_s: f64,
+}
+
+impl Default for Roofline {
+    fn default() -> Self {
+        Roofline { system: CpuSystem::default(), latency_budget_s: 0.030 }
+    }
+}
+
+impl Roofline {
+    /// Training-iteration FLOPs for the shape: forward 2P + backward 4P
+    /// MAC-FLOPs per agent-step, T steps, B episodes.
+    pub fn iteration_flops(&self, shape: &NetShape, agents: usize, batch: usize) -> f64 {
+        let p = shape.macs_per_step() as f64;
+        6.0 * p * (agents * batch * shape.episode_len) as f64
+    }
+
+    /// DRAM traffic per iteration: the weights stream once per pass
+    /// (forward read, backward read, update read+write) per timestep —
+    /// but are *shared* across agents and batched episodes within the
+    /// step (the centralized network's weight reuse, the paper's key
+    /// observation: arithmetic intensity grows with A and B).
+    pub fn iteration_bytes(&self, shape: &NetShape, _batch: usize) -> f64 {
+        let p = shape.macs_per_step() as f64; // one weight per MAC
+        3.0 * p * 4.0 * shape.episode_len as f64
+    }
+
+    pub fn point(&self, shape: &NetShape, agents: usize, batch: usize) -> RooflinePoint {
+        let flops = self.iteration_flops(shape, agents, batch);
+        let bytes = self.iteration_bytes(shape, batch) * 2.0; // fwd+bwd working sets
+        let ai = flops / bytes;
+        let mem_roof = ai * self.system.bandwidth_gbs; // GB/s * FLOP/B = GFLOPS
+        let attainable = mem_roof.min(self.system.peak_gflops);
+        RooflinePoint {
+            agents,
+            batch,
+            arithmetic_intensity: ai,
+            attainable_gflops: attainable,
+            bound: if mem_roof < self.system.peak_gflops {
+                Bound::Memory
+            } else {
+                Bound::Compute
+            },
+            required_gflops: flops / self.latency_budget_s / 1e9,
+        }
+    }
+
+    /// The ridge point AI = peak / bandwidth.
+    pub fn ridge(&self) -> f64 {
+        self.system.peak_gflops / self.system.bandwidth_gbs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape() -> NetShape {
+        NetShape::ic3net()
+    }
+
+    #[test]
+    fn ai_scales_with_agents_and_batch() {
+        // Weight reuse across agents and batched episodes: AI = A*B/4
+        // under this traffic model.
+        let r = Roofline::default();
+        let p1 = r.point(&shape(), 1, 8);
+        let p8 = r.point(&shape(), 8, 8);
+        assert!((p8.arithmetic_intensity / p1.arithmetic_intensity - 8.0).abs() < 1e-9);
+        let pb = r.point(&shape(), 1, 32);
+        assert!((pb.arithmetic_intensity / p1.arithmetic_intensity - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_agent_memory_bound_many_agents_compute_bound() {
+        // The paper's headline observation.
+        let r = Roofline::default();
+        assert_eq!(r.point(&shape(), 1, 8).bound, Bound::Memory);
+        assert_eq!(r.point(&shape(), 10, 8).bound, Bound::Compute);
+    }
+
+    #[test]
+    fn ridge_between_one_and_ten_agents() {
+        let r = Roofline::default();
+        let ai1 = r.point(&shape(), 1, 8).arithmetic_intensity;
+        let ai10 = r.point(&shape(), 10, 8).arithmetic_intensity;
+        assert!(ai1 < r.ridge() && r.ridge() < ai10);
+    }
+
+    #[test]
+    fn requirement_grows_with_agents_and_batch() {
+        let r = Roofline::default();
+        let base = r.point(&shape(), 2, 4).required_gflops;
+        assert!(r.point(&shape(), 8, 4).required_gflops > base * 3.9);
+        assert!(r.point(&shape(), 2, 16).required_gflops > base * 3.9);
+        assert!(base > 0.0);
+    }
+
+    #[test]
+    fn eight_agents_need_more_than_cpu_can_stream() {
+        // The motivation: at 8 agents / realistic batch, required GFLOPS
+        // exceed what the memory-bound small-batch regime attains.
+        let r = Roofline::default();
+        let p = r.point(&shape(), 8, 32);
+        assert!(p.required_gflops > 100.0, "{}", p.required_gflops);
+    }
+}

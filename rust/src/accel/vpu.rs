@@ -1,0 +1,61 @@
+//! Dense/Sparse Vector Processing Unit (§III-D, Fig. 7).
+//!
+//! Each VPU holds an FP16 multiplier, an FP16 adder, a 4-to-1 activation
+//! multiplexer driven by a 2-bit selection signal, and four independent
+//! accumulation registers (one per concurrently-active row).  The
+//! functional model below computes real partial sums (used by the
+//! simulator integration tests to validate the datapath against a plain
+//! matvec); cycle accounting lives in [`crate::accel::core`].
+
+/// Functional VPU: one MAC per cycle into one of four row accumulators.
+#[derive(Debug, Clone, Default)]
+pub struct Vpu {
+    /// Four accumulation registers, indexed by the 2-bit row slot.
+    acc: [f32; 4],
+    /// MACs executed (for utilization accounting).
+    pub macs: u64,
+}
+
+impl Vpu {
+    pub fn new() -> Self {
+        Vpu::default()
+    }
+
+    /// One cycle: select activation `act[sel]`, multiply by `weight`,
+    /// accumulate into register `sel`.
+    #[inline]
+    pub fn mac(&mut self, act: &[f32; 4], sel: u8, weight: f32) {
+        debug_assert!(sel < 4);
+        self.acc[sel as usize] += act[sel as usize] * weight;
+        self.macs += 1;
+    }
+
+    /// Drain one accumulator (end of a row's dot-product contribution).
+    pub fn drain(&mut self, slot: u8) -> f32 {
+        let v = self.acc[slot as usize];
+        self.acc[slot as usize] = 0.0;
+        v
+    }
+
+    pub fn accumulators(&self) -> &[f32; 4] {
+        &self.acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mac_accumulates_per_slot() {
+        let mut v = Vpu::new();
+        let act = [1.0, 2.0, 3.0, 4.0];
+        v.mac(&act, 0, 10.0); // 10
+        v.mac(&act, 0, 1.0);  // +1 => 11
+        v.mac(&act, 2, 2.0);  // 6
+        assert_eq!(v.accumulators(), &[11.0, 0.0, 6.0, 0.0]);
+        assert_eq!(v.macs, 3);
+        assert_eq!(v.drain(0), 11.0);
+        assert_eq!(v.accumulators()[0], 0.0);
+    }
+}

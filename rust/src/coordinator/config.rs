@@ -1,0 +1,119 @@
+//! Training configuration (CLI-facing; defaults follow the paper §IV-A).
+
+use crate::env::PredatorPreyConfig;
+
+/// Which pruning algorithm to run (Fig. 4(a) candidates).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrunerChoice {
+    Dense,
+    /// FLGW with the given group count G.
+    Flgw(usize),
+    /// Iterative magnitude with the given target sparsity.
+    Iterative(u8),
+    /// Block-circulant with (block, factor).
+    BlockCirculant(usize, usize),
+    /// GST with (block, factor, target sparsity %).
+    Gst(usize, usize, u8),
+}
+
+impl PrunerChoice {
+    /// Parse e.g. "dense", "flgw:4", "iterative:75", "bc:4x4",
+    /// "gst:4x2:75".
+    pub fn parse(s: &str) -> Option<Self> {
+        let mut parts = s.split(':');
+        match parts.next()? {
+            "dense" => Some(PrunerChoice::Dense),
+            "flgw" => Some(PrunerChoice::Flgw(parts.next()?.parse().ok()?)),
+            "iterative" => Some(PrunerChoice::Iterative(parts.next()?.parse().ok()?)),
+            "bc" => {
+                let (b, f) = parts.next()?.split_once('x')?;
+                Some(PrunerChoice::BlockCirculant(b.parse().ok()?, f.parse().ok()?))
+            }
+            "gst" => {
+                let (b, f) = parts.next()?.split_once('x')?;
+                Some(PrunerChoice::Gst(
+                    b.parse().ok()?,
+                    f.parse().ok()?,
+                    parts.next()?.parse().ok()?,
+                ))
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Full training-run configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Number of agents A (must have matching artifacts).
+    pub agents: usize,
+    /// Minibatch size B: episodes per weight update (paper: 1..32).
+    pub batch: usize,
+    /// Training iterations (paper: 2000).
+    pub iterations: usize,
+    /// Pruning algorithm.
+    pub pruner: PrunerChoice,
+    /// Master seed.
+    pub seed: u64,
+    /// Discount factor for returns.
+    pub gamma: f32,
+    /// Environment parameters.
+    pub env: PredatorPreyConfig,
+    /// Print metrics every N iterations (0 = silent).
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        let agents = 3;
+        TrainConfig {
+            agents,
+            batch: 4,
+            iterations: 200,
+            pruner: PrunerChoice::Flgw(4),
+            seed: 1,
+            gamma: 1.0,
+            env: PredatorPreyConfig::with_agents(agents),
+            log_every: 10,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn with_agents(mut self, agents: usize) -> Self {
+        self.agents = agents;
+        self.env = PredatorPreyConfig::with_agents(agents);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_pruner_choices() {
+        assert_eq!(PrunerChoice::parse("dense"), Some(PrunerChoice::Dense));
+        assert_eq!(PrunerChoice::parse("flgw:8"), Some(PrunerChoice::Flgw(8)));
+        assert_eq!(
+            PrunerChoice::parse("iterative:75"),
+            Some(PrunerChoice::Iterative(75))
+        );
+        assert_eq!(
+            PrunerChoice::parse("bc:4x4"),
+            Some(PrunerChoice::BlockCirculant(4, 4))
+        );
+        assert_eq!(
+            PrunerChoice::parse("gst:4x2:75"),
+            Some(PrunerChoice::Gst(4, 2, 75))
+        );
+        assert_eq!(PrunerChoice::parse("nope"), None);
+        assert_eq!(PrunerChoice::parse("flgw:x"), None);
+    }
+
+    #[test]
+    fn with_agents_updates_env() {
+        let c = TrainConfig::default().with_agents(8);
+        assert_eq!(c.env.n_agents, 8);
+    }
+}

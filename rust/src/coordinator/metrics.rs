@@ -1,0 +1,145 @@
+//! Training metrics — per-iteration records, success-rate aggregation
+//! (the paper's accuracy metric, §IV-A), CSV export.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::{mean, moving_average};
+
+/// One training iteration's record.
+#[derive(Debug, Clone)]
+pub struct IterationMetrics {
+    pub iteration: usize,
+    pub loss: f32,
+    pub policy_loss: f32,
+    pub value_loss: f32,
+    pub entropy: f32,
+    /// Mean total team reward over the minibatch episodes.
+    pub mean_reward: f32,
+    /// Fraction of minibatch episodes ending in success.
+    pub success_rate: f32,
+    /// Current mask sparsity (0 = dense).
+    pub sparsity: f32,
+    /// Wall time of the whole iteration in seconds.
+    pub wall_s: f64,
+}
+
+/// Log of a whole run.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsLog {
+    pub records: Vec<IterationMetrics>,
+}
+
+impl MetricsLog {
+    pub fn push(&mut self, m: IterationMetrics) {
+        self.records.push(m);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// The paper's accuracy: average success rate over the run (%).
+    pub fn average_success_rate(&self) -> f32 {
+        mean(&self.records.iter().map(|r| r.success_rate).collect::<Vec<_>>()) * 100.0
+    }
+
+    /// Success rate over the trailing fraction of training — the
+    /// "trained accuracy" a learning curve converges to.
+    pub fn final_success_rate(&self, tail_fraction: f32) -> f32 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        let n = self.records.len();
+        let start = ((n as f32) * (1.0 - tail_fraction)) as usize;
+        mean(
+            &self.records[start.min(n - 1)..]
+                .iter()
+                .map(|r| r.success_rate)
+                .collect::<Vec<_>>(),
+        ) * 100.0
+    }
+
+    /// Smoothed success curve (window in iterations).
+    pub fn success_curve(&self, window: usize) -> Vec<f32> {
+        moving_average(
+            &self.records.iter().map(|r| r.success_rate).collect::<Vec<_>>(),
+            window,
+        )
+    }
+
+    /// Write the full log as CSV.
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {path:?}"))?;
+        writeln!(
+            f,
+            "iteration,loss,policy_loss,value_loss,entropy,mean_reward,success_rate,sparsity,wall_s"
+        )?;
+        for r in &self.records {
+            writeln!(
+                f,
+                "{},{},{},{},{},{},{},{},{}",
+                r.iteration,
+                r.loss,
+                r.policy_loss,
+                r.value_loss,
+                r.entropy,
+                r.mean_reward,
+                r.success_rate,
+                r.sparsity,
+                r.wall_s
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(i: usize, success: f32) -> IterationMetrics {
+        IterationMetrics {
+            iteration: i,
+            loss: 0.0,
+            policy_loss: 0.0,
+            value_loss: 0.0,
+            entropy: 0.0,
+            mean_reward: 0.0,
+            success_rate: success,
+            sparsity: 0.0,
+            wall_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn success_rates() {
+        let mut log = MetricsLog::default();
+        for i in 0..10 {
+            log.push(rec(i, if i < 5 { 0.0 } else { 1.0 }));
+        }
+        assert_eq!(log.average_success_rate(), 50.0);
+        assert_eq!(log.final_success_rate(0.2), 100.0);
+        assert_eq!(log.success_curve(1).len(), 10);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut log = MetricsLog::default();
+        log.push(rec(0, 0.5));
+        let tmp = std::env::temp_dir().join("lg_metrics_test.csv");
+        log.write_csv(&tmp).unwrap();
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.starts_with("iteration,"));
+        let _ = std::fs::remove_file(tmp);
+    }
+}

@@ -1,0 +1,25 @@
+//! Layer-3 coordinator — the paper's system glue (Fig. 3).
+//!
+//! The instruction scheduler drives the four operational stages every
+//! training iteration:
+//!
+//! 1. **Weight grouping** — the pruning algorithm regenerates masks (for
+//!    FLGW: argmax → OSEL encode → sparse row memories → masks).
+//! 2. **Forward propagation** — B episode rollouts through the
+//!    `policy_fwd_a{A}` artifact, with the host environment in the loop.
+//! 3. **Backward propagation** — each stored episode replays through
+//!    `grad_episode_a{A}`; gradients accumulate host-side.
+//! 4. **Weight update** — `apply_update` (RMSprop) plus, for FLGW,
+//!    `flgw_update_g{G}` on the grouping matrices.
+//!
+//! Python never runs here: all numerics go through the AOT artifacts.
+
+mod config;
+mod metrics;
+mod scheduler;
+mod trainer;
+
+pub use config::{PrunerChoice, TrainConfig};
+pub use metrics::{IterationMetrics, MetricsLog};
+pub use scheduler::{Stage, StageTimer};
+pub use trainer::{Pruner, Trainer};

@@ -1,0 +1,111 @@
+//! Instruction scheduler — stage sequencing and accounting (Fig. 3).
+//!
+//! The hardware's instruction scheduler sequences weight grouping →
+//! forward → backward → weight update.  Here the sequencing is the
+//! trainer's control flow; this module provides the per-stage wall-clock
+//! accounting that backs the Fig. 12 execution-time breakdown.
+
+use std::time::{Duration, Instant};
+
+/// The four operational stages (§III).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stage {
+    WeightGrouping,
+    Forward,
+    Backward,
+    WeightUpdate,
+}
+
+pub const ALL_STAGES: [Stage; 4] = [
+    Stage::WeightGrouping,
+    Stage::Forward,
+    Stage::Backward,
+    Stage::WeightUpdate,
+];
+
+impl Stage {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::WeightGrouping => "weight_grouping",
+            Stage::Forward => "forward",
+            Stage::Backward => "backward",
+            Stage::WeightUpdate => "weight_update",
+        }
+    }
+}
+
+/// Accumulates wall time per stage.
+#[derive(Debug, Clone, Default)]
+pub struct StageTimer {
+    elapsed: [Duration; 4],
+}
+
+fn idx(stage: Stage) -> usize {
+    match stage {
+        Stage::WeightGrouping => 0,
+        Stage::Forward => 1,
+        Stage::Backward => 2,
+        Stage::WeightUpdate => 3,
+    }
+}
+
+impl StageTimer {
+    pub fn new() -> Self {
+        StageTimer::default()
+    }
+
+    /// Time a closure under a stage.
+    pub fn time<T>(&mut self, stage: Stage, f: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = f();
+        self.elapsed[idx(stage)] += start.elapsed();
+        out
+    }
+
+    /// Charge an externally-measured duration to a stage (used where the
+    /// closure form would need a second mutable borrow of the trainer).
+    pub fn add(&mut self, stage: Stage, d: Duration) {
+        self.elapsed[idx(stage)] += d;
+    }
+
+    pub fn elapsed(&self, stage: Stage) -> Duration {
+        self.elapsed[idx(stage)]
+    }
+
+    pub fn total(&self) -> Duration {
+        self.elapsed.iter().sum()
+    }
+
+    /// Fraction of total time per stage (Fig. 12's metric, with
+    /// weight-grouping as the "sparse data generation" share).
+    pub fn fractions(&self) -> [(Stage, f64); 4] {
+        let total = self.total().as_secs_f64().max(1e-12);
+        let mut out = [(Stage::WeightGrouping, 0.0); 4];
+        for (i, stage) in ALL_STAGES.iter().enumerate() {
+            out[i] = (*stage, self.elapsed[idx(*stage)].as_secs_f64() / total);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_per_stage() {
+        let mut t = StageTimer::new();
+        let v = t.time(Stage::Forward, || {
+            std::thread::sleep(Duration::from_millis(2));
+            42
+        });
+        assert_eq!(v, 42);
+        t.time(Stage::Backward, || std::thread::sleep(Duration::from_millis(1)));
+        assert!(t.elapsed(Stage::Forward) >= Duration::from_millis(2));
+        assert!(t.elapsed(Stage::Backward) >= Duration::from_millis(1));
+        assert_eq!(t.elapsed(Stage::WeightUpdate), Duration::ZERO);
+        let fr = t.fractions();
+        let sum: f64 = fr.iter().map(|(_, f)| f).sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+    }
+}

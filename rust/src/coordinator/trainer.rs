@@ -1,0 +1,388 @@
+//! The training driver — end-to-end IC3Net training over the AOT
+//! artifacts, sequenced by the four-stage instruction scheduler.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::config::{PrunerChoice, TrainConfig};
+use crate::coordinator::metrics::{IterationMetrics, MetricsLog};
+use crate::coordinator::scheduler::{Stage, StageTimer};
+use crate::env::{discounted_returns, Episode, MultiAgentEnv, PredatorPrey};
+use crate::model::ModelState;
+use crate::pruning::{
+    BlockCirculantPruner, DensePruner, FlgwPruner, GroupSparseTrainingPruner,
+    IterativeMagnitudePruner, PruneContext, PruningAlgorithm,
+};
+use crate::runtime::{Arg, DeviceTensor, Executable, HostTensor, Runtime};
+use crate::util::Pcg32;
+
+/// Concrete pruner dispatch (no trait objects: the trainer needs typed
+/// access to FLGW's grouping state for the artifact-driven update).
+pub enum Pruner {
+    Dense(DensePruner),
+    Flgw(FlgwPruner),
+    Iterative(IterativeMagnitudePruner),
+    BlockCirculant(BlockCirculantPruner),
+    Gst(GroupSparseTrainingPruner),
+}
+
+impl Pruner {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Pruner::Dense(p) => p.name(),
+            Pruner::Flgw(p) => p.name(),
+            Pruner::Iterative(p) => p.name(),
+            Pruner::BlockCirculant(p) => p.name(),
+            Pruner::Gst(p) => p.name(),
+        }
+    }
+
+    fn update_masks(&mut self, state: &mut ModelState, ctx: &PruneContext<'_>) -> Result<()> {
+        match self {
+            Pruner::Dense(p) => p.update_masks(state, ctx),
+            Pruner::Flgw(p) => p.update_masks(state, ctx),
+            Pruner::Iterative(p) => p.update_masks(state, ctx),
+            Pruner::BlockCirculant(p) => p.update_masks(state, ctx),
+            Pruner::Gst(p) => p.update_masks(state, ctx),
+        }
+    }
+
+    pub fn as_flgw_mut(&mut self) -> Option<&mut FlgwPruner> {
+        match self {
+            Pruner::Flgw(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    pub fn as_flgw(&self) -> Option<&FlgwPruner> {
+        match self {
+            Pruner::Flgw(p) => Some(p),
+            _ => None,
+        }
+    }
+}
+
+/// End-to-end trainer: owns the runtime, environment, model state and
+/// pruner; `train` runs the paper's four-stage loop.
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub state: ModelState,
+    pub pruner: Pruner,
+    pub timer: StageTimer,
+    runtime: Runtime,
+    env: PredatorPrey,
+    rng: Pcg32,
+    exe_fwd: Arc<Executable>,
+    exe_grad: Arc<Executable>,
+    exe_update: Arc<Executable>,
+    exe_flgw: Option<Arc<Executable>>,
+    /// dL/dmask accumulator (FLGW's training signal).
+    dmask_accum: Vec<f32>,
+    episodes_done: u64,
+    /// Device-resident copies of the iteration-constant big inputs
+    /// (params, masks) — refreshed once per iteration instead of being
+    /// re-uploaded on every PJRT call (EXPERIMENTS.md §Perf).
+    params_dev: Option<DeviceTensor>,
+    masks_dev: Option<DeviceTensor>,
+}
+
+impl Trainer {
+    pub fn new(mut runtime: Runtime, cfg: TrainConfig) -> Result<Self> {
+        let manifest = runtime.manifest().clone();
+        if cfg.agents != cfg.env.n_agents {
+            return Err(anyhow!(
+                "config agents {} != env agents {}",
+                cfg.agents,
+                cfg.env.n_agents
+            ));
+        }
+        let exe_fwd = runtime.load(&format!("policy_fwd_a{}", cfg.agents))?;
+        let exe_grad = runtime.load(&format!("grad_episode_a{}", cfg.agents))?;
+        let exe_update = runtime.load("apply_update")?;
+
+        let (pruner, exe_flgw) = match cfg.pruner {
+            PrunerChoice::Dense => (Pruner::Dense(DensePruner), None),
+            PrunerChoice::Flgw(g) => {
+                let exe = runtime.load(&format!("flgw_update_g{g}"))?;
+                (
+                    Pruner::Flgw(FlgwPruner::from_init_blob(&manifest, g)?),
+                    Some(exe),
+                )
+            }
+            PrunerChoice::Iterative(pct) => (
+                Pruner::Iterative(IterativeMagnitudePruner::new(pct as f32 / 100.0)),
+                None,
+            ),
+            PrunerChoice::BlockCirculant(b, f) => {
+                (Pruner::BlockCirculant(BlockCirculantPruner::new(b, f)), None)
+            }
+            PrunerChoice::Gst(b, f, pct) => (
+                Pruner::Gst(GroupSparseTrainingPruner::new(b, f, pct as f32 / 100.0)),
+                None,
+            ),
+        };
+
+        let state = ModelState::from_init_blob(&manifest)?;
+        let env = PredatorPrey::new(cfg.env.clone());
+        let rng = Pcg32::new(cfg.seed, 0xc0fe);
+        let mask_size = manifest.mask_size;
+        Ok(Trainer {
+            cfg,
+            state,
+            pruner,
+            timer: StageTimer::new(),
+            runtime,
+            env,
+            rng,
+            exe_fwd,
+            exe_grad,
+            exe_update,
+            exe_flgw,
+            dmask_accum: vec![0.0; mask_size],
+            episodes_done: 0,
+            params_dev: None,
+            masks_dev: None,
+        })
+    }
+
+    /// Convenience constructor over the default artifacts directory.
+    pub fn from_default_artifacts(cfg: TrainConfig) -> Result<Self> {
+        Self::new(Runtime::from_default_artifacts()?, cfg)
+    }
+
+    pub fn manifest(&self) -> &crate::manifest::Manifest {
+        self.runtime.manifest()
+    }
+
+    /// Re-upload params/masks to the device (call after either changed).
+    fn refresh_device_state(&mut self) -> Result<()> {
+        // policy_fwd input 0/1 shapes == grad_episode input 0/1 shapes
+        self.params_dev =
+            Some(self.exe_fwd.upload(0, &HostTensor::F32(self.state.params.clone()))?);
+        self.masks_dev =
+            Some(self.exe_fwd.upload(1, &HostTensor::F32(self.state.masks.clone()))?);
+        Ok(())
+    }
+
+    fn device_state(&mut self) -> Result<(&DeviceTensor, &DeviceTensor)> {
+        if self.params_dev.is_none() || self.masks_dev.is_none() {
+            self.refresh_device_state()?;
+        }
+        Ok((
+            self.params_dev.as_ref().unwrap(),
+            self.masks_dev.as_ref().unwrap(),
+        ))
+    }
+
+    /// Roll out one episode with the current policy.
+    pub fn rollout(&mut self, seed: u64) -> Result<Episode> {
+        let d = self.runtime.manifest().dims.clone();
+        let (a, t_max) = (self.cfg.agents, d.episode_len);
+        let mut episode = Episode::with_capacity(t_max, a, d.obs_dim);
+
+        let mut obs = self.env.reset(seed);
+        let mut h = vec![0.0f32; a * d.hidden];
+        let mut c = vec![0.0f32; a * d.hidden];
+        let mut gate_prev = vec![1.0f32; a];
+
+        self.device_state()?;
+        for _ in 0..t_max {
+            let (obs_t, h_t, c_t, g_t) = (
+                HostTensor::F32(obs.clone()),
+                HostTensor::F32(h.clone()),
+                HostTensor::F32(c.clone()),
+                HostTensor::F32(gate_prev.clone()),
+            );
+            let outs = self.exe_fwd.run_args(&[
+                Arg::Device(self.params_dev.as_ref().unwrap()),
+                Arg::Device(self.masks_dev.as_ref().unwrap()),
+                Arg::Host(&obs_t),
+                Arg::Host(&h_t),
+                Arg::Host(&c_t),
+                Arg::Host(&g_t),
+            ])?;
+            let logits = outs[0].as_f32()?;
+            let gate_logits = outs[2].as_f32()?;
+
+            let mut actions = Vec::with_capacity(a);
+            let mut gates = Vec::with_capacity(a);
+            for i in 0..a {
+                let l = &logits[i * d.n_actions..(i + 1) * d.n_actions];
+                actions.push(self.rng.sample_logits(l));
+                let gl = &gate_logits[i * d.n_gate..(i + 1) * d.n_gate];
+                gates.push(self.rng.sample_logits(gl) as u8 as f32);
+            }
+
+            let step = self.env.step(&actions);
+            episode.push(&obs, &actions, &gates, step.reward);
+
+            obs = step.obs;
+            h = outs[3].as_f32()?.to_vec();
+            c = outs[4].as_f32()?.to_vec();
+            gate_prev = gates;
+            if step.done {
+                break;
+            }
+        }
+        episode.success = self.env.is_success();
+        episode.success_frac = self.env.success_fraction();
+        episode.pad_to(t_max, d.n_actions - 1); // stay action
+        Ok(episode)
+    }
+
+    /// Run the backward artifact for one episode; returns (dparams, loss
+    /// stats), accumulating dmasks internally.
+    fn backward(&mut self, episode: &Episode) -> Result<(Vec<f32>, [f32; 4])> {
+        let returns = discounted_returns(&episode.rewards, self.cfg.gamma);
+        self.device_state()?;
+        let (obs_t, act_t, gate_t, ret_t) = (
+            HostTensor::F32(episode.obs.clone()),
+            HostTensor::I32(episode.actions.clone()),
+            HostTensor::F32(episode.gates.clone()),
+            HostTensor::F32(returns),
+        );
+        let outs = self.exe_grad.run_args(&[
+            Arg::Device(self.params_dev.as_ref().unwrap()),
+            Arg::Device(self.masks_dev.as_ref().unwrap()),
+            Arg::Host(&obs_t),
+            Arg::Host(&act_t),
+            Arg::Host(&gate_t),
+            Arg::Host(&ret_t),
+        ])?;
+        let dparams = outs[0].as_f32()?.to_vec();
+        for (acc, d) in self.dmask_accum.iter_mut().zip(outs[1].as_f32()?) {
+            *acc += d;
+        }
+        let stats = [
+            outs[2].scalar_f32()?,
+            outs[3].scalar_f32()?,
+            outs[4].scalar_f32()?,
+            outs[5].scalar_f32()?,
+        ];
+        Ok((dparams, stats))
+    }
+
+    /// One full training iteration (the four stages).  Returns metrics.
+    pub fn run_iteration(&mut self, iteration: usize) -> Result<IterationMetrics> {
+        let start = std::time::Instant::now();
+        let total_iterations = self.cfg.iterations;
+
+        // -------- stage 1: weight grouping / mask regeneration
+        {
+            let dmasks = std::mem::take(&mut self.dmask_accum);
+            let manifest = self.runtime.manifest().clone();
+            let ctx = PruneContext {
+                manifest: &manifest,
+                iteration,
+                total_iterations,
+                dmasks: &dmasks,
+            };
+            let state = &mut self.state;
+            let pruner = &mut self.pruner;
+            self.timer
+                .time(Stage::WeightGrouping, || pruner.update_masks(state, &ctx))?;
+            self.dmask_accum = dmasks;
+            self.masks_dev = None; // masks changed: re-upload lazily
+        }
+
+        // -------- stage 2: forward (B rollouts)
+        let mut episodes = Vec::with_capacity(self.cfg.batch);
+        for b in 0..self.cfg.batch {
+            let seed = self
+                .cfg
+                .seed
+                .wrapping_mul(0x9e3779b97f4a7c15)
+                .wrapping_add(self.episodes_done + b as u64);
+            let t0 = std::time::Instant::now();
+            let ep = self.rollout(seed)?;
+            self.timer.add(Stage::Forward, t0.elapsed());
+            episodes.push(ep);
+        }
+        self.episodes_done += self.cfg.batch as u64;
+
+        // -------- stage 3: backward (grad accumulation)
+        self.dmask_accum.iter_mut().for_each(|x| *x = 0.0);
+        let mut grad_accum = vec![0.0f32; self.state.params.len()];
+        let mut loss_stats = [0.0f32; 4];
+        for ep in &episodes {
+            let t0 = std::time::Instant::now();
+            let (dparams, stats) = self.backward(ep)?;
+            self.timer.add(Stage::Backward, t0.elapsed());
+            for (a, g) in grad_accum.iter_mut().zip(&dparams) {
+                *a += g;
+            }
+            for (a, s) in loss_stats.iter_mut().zip(&stats) {
+                *a += s;
+            }
+        }
+        let inv_b = 1.0 / self.cfg.batch as f32;
+        grad_accum.iter_mut().for_each(|g| *g *= inv_b);
+        self.dmask_accum.iter_mut().for_each(|g| *g *= inv_b);
+        loss_stats.iter_mut().for_each(|s| *s *= inv_b);
+
+        // -------- stage 4: weight update (+ FLGW grouping update)
+        {
+            let t0 = std::time::Instant::now();
+            let outs = self.exe_update.run(&[
+                HostTensor::F32(std::mem::take(&mut self.state.params)),
+                HostTensor::F32(grad_accum),
+                HostTensor::F32(std::mem::take(&mut self.state.sq_avg)),
+            ])?;
+            self.state.params = outs[0].as_f32()?.to_vec();
+            self.state.sq_avg = outs[1].as_f32()?.to_vec();
+            self.params_dev = None; // params changed: re-upload lazily
+
+            if let (Some(exe), Some(flgw)) = (self.exe_flgw.clone(), self.pruner.as_flgw_mut()) {
+                let outs = exe.run(&[
+                    HostTensor::F32(std::mem::take(&mut flgw.grouping.grouping)),
+                    HostTensor::F32(self.dmask_accum.clone()),
+                    HostTensor::F32(std::mem::take(&mut flgw.grouping.sq_avg)),
+                ])?;
+                flgw.grouping.grouping = outs[0].as_f32()?.to_vec();
+                flgw.grouping.sq_avg = outs[1].as_f32()?.to_vec();
+            }
+            self.timer.add(Stage::WeightUpdate, t0.elapsed());
+        }
+
+        let success_frac = crate::util::mean(
+            &episodes.iter().map(|e| e.success_frac).collect::<Vec<_>>(),
+        );
+        let mean_reward = crate::util::mean(
+            &episodes.iter().map(|e| e.total_reward()).collect::<Vec<_>>(),
+        );
+        let [pol, val, ent, _] = [loss_stats[1], loss_stats[2], loss_stats[3], 0.0];
+        Ok(IterationMetrics {
+            iteration,
+            loss: loss_stats[0],
+            policy_loss: pol,
+            value_loss: val,
+            entropy: ent,
+            mean_reward,
+            success_rate: success_frac,
+            sparsity: 1.0 - self.state.mask_density(),
+            wall_s: start.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Train for the configured number of iterations.
+    pub fn train(&mut self) -> Result<MetricsLog> {
+        let mut log = MetricsLog::default();
+        for it in 0..self.cfg.iterations {
+            let m = self.run_iteration(it)?;
+            if self.cfg.log_every > 0 && it % self.cfg.log_every == 0 {
+                eprintln!(
+                    "[{:>5}] loss={:>8.4} reward={:>7.3} success={:>5.1}% sparsity={:>5.1}% ({:.0} ms)",
+                    it,
+                    m.loss,
+                    m.mean_reward,
+                    m.success_rate * 100.0,
+                    m.sparsity * 100.0,
+                    m.wall_s * 1e3
+                );
+            }
+            log.push(m);
+        }
+        Ok(log)
+    }
+}

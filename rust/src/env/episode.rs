@@ -1,0 +1,140 @@
+//! Episode storage — the rollout buffer the coordinator fills on the
+//! forward pass and replays through the `grad_episode` artifact.
+
+/// One fixed-length episode for A agents (padded with stay-actions and
+/// zero rewards if the environment terminates early, so the artifact's
+/// static T shape is always satisfied).
+#[derive(Debug, Clone)]
+pub struct Episode {
+    pub n_agents: usize,
+    pub obs_dim: usize,
+    /// T * A * obs_dim, row-major.
+    pub obs: Vec<f32>,
+    /// T * A action indices.
+    pub actions: Vec<i32>,
+    /// T * A sampled communication gates in {0., 1.}.
+    pub gates: Vec<f32>,
+    /// T team rewards.
+    pub rewards: Vec<f32>,
+    /// Whether the strict success criterion held at episode end.
+    pub success: bool,
+    /// Graded success in [0, 1] (fraction of predators that caught the
+    /// prey — the paper's accuracy metric).
+    pub success_frac: f32,
+}
+
+impl Episode {
+    pub fn with_capacity(t: usize, n_agents: usize, obs_dim: usize) -> Self {
+        Episode {
+            n_agents,
+            obs_dim,
+            obs: Vec::with_capacity(t * n_agents * obs_dim),
+            actions: Vec::with_capacity(t * n_agents),
+            gates: Vec::with_capacity(t * n_agents),
+            rewards: Vec::with_capacity(t),
+            success: false,
+            success_frac: 0.0,
+        }
+    }
+
+    /// Number of recorded steps.
+    pub fn len(&self) -> usize {
+        self.rewards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rewards.is_empty()
+    }
+
+    /// Record one step: the observations the policy saw, the joint action
+    /// and gates it sampled, and the team reward received.
+    pub fn push(&mut self, obs: &[f32], actions: &[usize], gates: &[f32], reward: f32) {
+        debug_assert_eq!(obs.len(), self.n_agents * self.obs_dim);
+        debug_assert_eq!(actions.len(), self.n_agents);
+        debug_assert_eq!(gates.len(), self.n_agents);
+        self.obs.extend_from_slice(obs);
+        self.actions.extend(actions.iter().map(|&a| a as i32));
+        self.gates.extend_from_slice(gates);
+        self.rewards.push(reward);
+    }
+
+    /// Pad to exactly `t` steps (stay action = n_actions-1, gate 0,
+    /// zero reward, repeated last observation) so the static-T artifact
+    /// accepts the buffers.
+    pub fn pad_to(&mut self, t: usize, stay_action: usize) {
+        let a = self.n_agents;
+        let d = self.obs_dim;
+        while self.len() < t {
+            let last_obs_start = self.obs.len().saturating_sub(a * d);
+            let last: Vec<f32> = if self.obs.is_empty() {
+                vec![0.0; a * d]
+            } else {
+                self.obs[last_obs_start..].to_vec()
+            };
+            self.obs.extend_from_slice(&last);
+            self.actions.extend(std::iter::repeat(stay_action as i32).take(a));
+            self.gates.extend(std::iter::repeat(0.0).take(a));
+            self.rewards.push(0.0);
+        }
+    }
+
+    /// Total (undiscounted) team return.
+    pub fn total_reward(&self) -> f32 {
+        self.rewards.iter().sum()
+    }
+}
+
+/// Discounted returns R_t = sum_{t' >= t} gamma^{t'-t} r_{t'}.
+pub fn discounted_returns(rewards: &[f32], gamma: f32) -> Vec<f32> {
+    let mut out = vec![0.0f32; rewards.len()];
+    let mut acc = 0.0f32;
+    for (i, &r) in rewards.iter().enumerate().rev() {
+        acc = r + gamma * acc;
+        out[i] = acc;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn returns_undiscounted_is_suffix_sum() {
+        let r = discounted_returns(&[1.0, 2.0, 3.0], 1.0);
+        assert_eq!(r, vec![6.0, 5.0, 3.0]);
+    }
+
+    #[test]
+    fn returns_discounted() {
+        let r = discounted_returns(&[0.0, 0.0, 1.0], 0.5);
+        assert_eq!(r, vec![0.25, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn returns_empty() {
+        assert!(discounted_returns(&[], 0.9).is_empty());
+    }
+
+    #[test]
+    fn push_and_pad() {
+        let mut ep = Episode::with_capacity(4, 2, 3);
+        ep.push(&[0.1; 6], &[1, 2], &[1.0, 0.0], 0.5);
+        ep.pad_to(4, 4);
+        assert_eq!(ep.len(), 4);
+        assert_eq!(ep.obs.len(), 4 * 2 * 3);
+        assert_eq!(ep.actions.len(), 4 * 2);
+        // padded actions are the stay action
+        assert_eq!(ep.actions[2], 4);
+        // padded observation repeats the last recorded one
+        assert_eq!(ep.obs[6..12], ep.obs[0..6]);
+        assert_eq!(ep.total_reward(), 0.5);
+    }
+
+    #[test]
+    fn pad_empty_episode_zero_obs() {
+        let mut ep = Episode::with_capacity(2, 1, 3);
+        ep.pad_to(2, 0);
+        assert_eq!(ep.obs, vec![0.0; 6]);
+    }
+}

@@ -1,0 +1,35 @@
+//! Multi-agent RL environments — run on the host CPU, exactly as in the
+//! paper's system split ("the host CPU emulates the reinforcement
+//! learning environment", §III).
+
+mod episode;
+mod predator_prey;
+
+pub use episode::{discounted_returns, Episode};
+pub use predator_prey::{PredatorPrey, PredatorPreyConfig, StepResult};
+
+/// A multi-agent environment with a team (scalar) reward, the contract
+/// IC3Net training needs.
+pub trait MultiAgentEnv {
+    /// Observation vector length per agent.
+    fn obs_dim(&self) -> usize;
+    /// Number of discrete actions per agent.
+    fn n_actions(&self) -> usize;
+    /// Number of agents.
+    fn n_agents(&self) -> usize;
+    /// Reset and return the initial per-agent observations (A * obs_dim,
+    /// row-major).
+    fn reset(&mut self, seed: u64) -> Vec<f32>;
+    /// Apply one joint action; returns (next observations, team reward,
+    /// done).
+    fn step(&mut self, actions: &[usize]) -> StepResult;
+    /// True when the episode's success criterion is currently met
+    /// (Predator-Prey: every predator has found the prey).
+    fn is_success(&self) -> bool;
+    /// Graded success in [0, 1] — the paper measures "the number of
+    /// successes in catching prey" as its accuracy, i.e. the fraction of
+    /// predators that caught the prey.
+    fn success_fraction(&self) -> f32 {
+        f32::from(self.is_success())
+    }
+}

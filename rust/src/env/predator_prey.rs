@@ -1,0 +1,309 @@
+//! Predator-Prey — the paper's benchmark task (§IV-A).
+//!
+//! The paper runs "Predator-Prey-v2": A cooperative predators search a
+//! grid for one *stationary* prey; each predator observes only its own
+//! position and, within a small vision radius, the prey's relative
+//! position; agents are rewarded when they sit on the prey.  This is
+//! IC3Net's predator-prey task (the paper uses IC3Net's configuration).
+//! We implement it directly — the original uses a grid world exactly like
+//! this; no physics from the MuJoCo engine is exercised by the task, so
+//! the substitution preserves the learning problem (DESIGN.md
+//! §Hardware-Adaptation).
+//!
+//! Observation (6 floats, `dims.py` must agree):
+//!   [own_x/G, own_y/G, prey_dx/V, prey_dy/V, prey_visible, t/T]
+//! Actions: 0 up, 1 down, 2 left, 3 right, 4 stay.
+//! Team reward per step:
+//!   +0.5 * (predators on prey)/A  - 0.05 (time penalty)
+//! Success: every predator on the prey cell.
+
+use crate::env::{MultiAgentEnv, StepResult as _StepResultAlias};
+use crate::util::Pcg32;
+
+/// Result of one environment step.
+#[derive(Debug, Clone)]
+pub struct StepResult {
+    /// Next observations, A * obs_dim row-major.
+    pub obs: Vec<f32>,
+    /// Team (shared) reward.
+    pub reward: f32,
+    /// Episode termination (all predators on prey).
+    pub done: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct PredatorPreyConfig {
+    pub n_agents: usize,
+    pub grid: usize,
+    /// Chebyshev vision radius within which the prey is observed.
+    pub vision: usize,
+    /// Maximum episode length (the coordinator cuts episodes at T anyway).
+    pub max_steps: usize,
+}
+
+impl Default for PredatorPreyConfig {
+    fn default() -> Self {
+        // IC3Net's 5x5 predator-prey with vision 1.
+        PredatorPreyConfig { n_agents: 3, grid: 5, vision: 1, max_steps: 20 }
+    }
+}
+
+impl PredatorPreyConfig {
+    pub fn with_agents(n_agents: usize) -> Self {
+        PredatorPreyConfig { n_agents, ..Default::default() }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PredatorPrey {
+    cfg: PredatorPreyConfig,
+    rng: Pcg32,
+    predators: Vec<(i32, i32)>,
+    /// A predator that reached the prey stays there (IC3Net semantics).
+    reached: Vec<bool>,
+    prey: (i32, i32),
+    t: usize,
+}
+
+pub const OBS_DIM: usize = 6;
+pub const N_ACTIONS: usize = 5;
+
+impl PredatorPrey {
+    pub fn new(cfg: PredatorPreyConfig) -> Self {
+        let n = cfg.n_agents;
+        PredatorPrey {
+            cfg,
+            rng: Pcg32::seeded(0),
+            predators: vec![(0, 0); n],
+            reached: vec![false; n],
+            prey: (0, 0),
+            t: 0,
+        }
+    }
+
+    pub fn config(&self) -> &PredatorPreyConfig {
+        &self.cfg
+    }
+
+    fn observe(&self) -> Vec<f32> {
+        let g = self.cfg.grid as f32;
+        let v = self.cfg.vision as f32;
+        let t_norm = self.t as f32 / self.cfg.max_steps as f32;
+        let mut obs = Vec::with_capacity(self.cfg.n_agents * OBS_DIM);
+        for &(x, y) in &self.predators {
+            let dx = self.prey.0 - x;
+            let dy = self.prey.1 - y;
+            let visible =
+                dx.abs() <= self.cfg.vision as i32 && dy.abs() <= self.cfg.vision as i32;
+            obs.push(x as f32 / g);
+            obs.push(y as f32 / g);
+            if visible {
+                obs.push(dx as f32 / v.max(1.0));
+                obs.push(dy as f32 / v.max(1.0));
+                obs.push(1.0);
+            } else {
+                obs.push(0.0);
+                obs.push(0.0);
+                obs.push(0.0);
+            }
+            obs.push(t_norm);
+        }
+        obs
+    }
+
+    fn n_on_prey(&self) -> usize {
+        self.predators.iter().filter(|&&p| p == self.prey).count()
+    }
+}
+
+impl MultiAgentEnv for PredatorPrey {
+    fn obs_dim(&self) -> usize {
+        OBS_DIM
+    }
+
+    fn n_actions(&self) -> usize {
+        N_ACTIONS
+    }
+
+    fn n_agents(&self) -> usize {
+        self.cfg.n_agents
+    }
+
+    fn reset(&mut self, seed: u64) -> Vec<f32> {
+        self.rng = Pcg32::new(seed, 0x9d2c);
+        let g = self.cfg.grid as u32;
+        self.prey = (
+            self.rng.next_below(g) as i32,
+            self.rng.next_below(g) as i32,
+        );
+        for p in self.predators.iter_mut() {
+            // spawn anywhere except the prey cell
+            loop {
+                let cand = (
+                    self.rng.next_below(g) as i32,
+                    self.rng.next_below(g) as i32,
+                );
+                if cand != self.prey {
+                    *p = cand;
+                    break;
+                }
+            }
+        }
+        for r in self.reached.iter_mut() {
+            *r = false;
+        }
+        self.t = 0;
+        self.observe()
+    }
+
+    fn step(&mut self, actions: &[usize]) -> StepResult {
+        assert_eq!(actions.len(), self.cfg.n_agents, "one action per agent");
+        let g = self.cfg.grid as i32;
+        for (i, (&a, p)) in actions.iter().zip(self.predators.iter_mut()).enumerate() {
+            if self.reached[i] {
+                continue; // reached predators stay on the prey
+            }
+            let (dx, dy) = match a {
+                0 => (0, -1),
+                1 => (0, 1),
+                2 => (-1, 0),
+                3 => (1, 0),
+                _ => (0, 0),
+            };
+            p.0 = (p.0 + dx).clamp(0, g - 1);
+            p.1 = (p.1 + dy).clamp(0, g - 1);
+        }
+        for (i, p) in self.predators.iter().enumerate() {
+            if *p == self.prey {
+                self.reached[i] = true;
+            }
+        }
+        self.t += 1;
+        let on = self.n_on_prey();
+        let a = self.cfg.n_agents as f32;
+        let reward = 0.5 * on as f32 / a - 0.05;
+        let done = on == self.cfg.n_agents || self.t >= self.cfg.max_steps;
+        StepResult { obs: self.observe(), reward, done }
+    }
+
+    fn is_success(&self) -> bool {
+        self.n_on_prey() == self.cfg.n_agents
+    }
+
+    fn success_fraction(&self) -> f32 {
+        self.n_on_prey() as f32 / self.cfg.n_agents as f32
+    }
+}
+
+// Re-export consistency: the trait's StepResult is this module's.
+#[allow(unused)]
+fn _assert_types(r: StepResult) -> _StepResultAlias {
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env(n: usize) -> PredatorPrey {
+        PredatorPrey::new(PredatorPreyConfig::with_agents(n))
+    }
+
+    #[test]
+    fn reset_shapes_and_ranges() {
+        let mut e = env(4);
+        let obs = e.reset(1);
+        assert_eq!(obs.len(), 4 * OBS_DIM);
+        for &x in &obs {
+            assert!((-1.0..=1.0).contains(&x), "{x}");
+        }
+    }
+
+    #[test]
+    fn reset_is_deterministic_per_seed() {
+        let mut e1 = env(3);
+        let mut e2 = env(3);
+        assert_eq!(e1.reset(7), e2.reset(7));
+        assert_ne!(e1.reset(7), e1.reset(8));
+    }
+
+    #[test]
+    fn predators_never_spawn_on_prey() {
+        let mut e = env(5);
+        for seed in 0..200 {
+            e.reset(seed);
+            assert_eq!(e.n_on_prey(), 0);
+        }
+    }
+
+    #[test]
+    fn stay_action_keeps_positions() {
+        let mut e = env(3);
+        let o1 = e.reset(3);
+        let r = e.step(&[4, 4, 4]);
+        // positions identical => only the time feature (index 5) changes
+        for a in 0..3 {
+            for k in 0..5 {
+                assert_eq!(o1[a * OBS_DIM + k], r.obs[a * OBS_DIM + k]);
+            }
+        }
+    }
+
+    #[test]
+    fn movement_clamped_to_grid() {
+        let mut e = env(1);
+        e.reset(1);
+        for _ in 0..20 {
+            e.step(&[2]); // left
+        }
+        assert_eq!(e.predators[0].0, 0);
+    }
+
+    #[test]
+    fn reaching_prey_pins_predator_and_rewards() {
+        let mut e = env(1);
+        e.reset(2);
+        e.predators[0] = e.prey; // teleport for the test
+        e.reached[0] = true;
+        let r = e.step(&[0]); // tries to move up, must stay pinned
+        assert_eq!(e.predators[0], e.prey);
+        assert!(r.reward > 0.0);
+        assert!(r.done);
+        assert!(e.is_success());
+        assert_eq!(e.success_fraction(), 1.0);
+    }
+
+    #[test]
+    fn time_penalty_when_off_prey() {
+        let mut e = env(2);
+        e.reset(11);
+        let r = e.step(&[4, 4]);
+        assert!(r.reward <= 0.0);
+    }
+
+    #[test]
+    fn episode_terminates_at_max_steps() {
+        let mut e = env(2);
+        e.reset(13);
+        let mut done = false;
+        for _ in 0..e.cfg.max_steps {
+            done = e.step(&[4, 4]).done;
+        }
+        assert!(done);
+    }
+
+    #[test]
+    fn visibility_flag_tracks_chebyshev_distance() {
+        let mut e = env(1);
+        e.reset(5);
+        e.predators[0] = (0, 0);
+        e.prey = (0, 1); // within vision 1
+        let obs = e.observe();
+        assert_eq!(obs[4], 1.0);
+        e.prey = (3, 3); // outside vision
+        let obs = e.observe();
+        assert_eq!(obs[4], 0.0);
+        assert_eq!(obs[2], 0.0);
+        assert_eq!(obs[3], 0.0);
+    }
+}

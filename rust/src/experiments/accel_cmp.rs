@@ -1,0 +1,190 @@
+//! E7/E8/E9/E10 — Fig. 11 (throughput & energy), Fig. 12 (execution-time
+//! breakdown), Fig. 13 (speedup over dense vs sparse-training
+//! accelerators), Fig. 8 (resource utilization).
+
+use std::fmt::Write;
+
+use crate::accel::gpu_model::GpuModel;
+use crate::accel::perf::{FpgaModel, NetShape, Scenario, COMPETITORS};
+use crate::accel::resources::{model as resource_model, PAPER_FIG8, U280};
+
+/// Fig. 11: throughput (GFLOPS) and energy efficiency (GFLOPS/W), FPGA
+/// vs GPU, across the paper's three scenario sweeps.
+pub fn fig11_throughput() -> String {
+    let fpga = FpgaModel::default();
+    let gpu = GpuModel::default();
+    let shape = NetShape::ic3net();
+    let mut out = String::new();
+    let _ = writeln!(out, "Fig 11 — accelerator performance comparison");
+    let _ = writeln!(
+        out,
+        "{:>20} | {:>10} {:>10} {:>8} | {:>10} {:>10} {:>8}",
+        "scenario", "FPGA GF/s", "GPU GF/s", "speedup", "FPGA GF/W", "GPU GF/W", "ratio"
+    );
+    let rows = |label: &str, scenarios: &[Scenario], out: &mut String| {
+        for sc in scenarios {
+            let f = fpga.iteration(*sc);
+            let g = gpu.iteration(&shape, *sc);
+            let _ = writeln!(
+                out,
+                "{label:>11} A={:<2} B={:<2} G={:<2} | {:>10.1} {:>10.1} {:>7.2}x | {:>10.2} {:>10.2} {:>7.2}x",
+                sc.agents,
+                sc.batch,
+                sc.groups,
+                f.throughput_gflops,
+                g.throughput_gflops,
+                f.throughput_gflops / g.throughput_gflops,
+                f.energy_eff,
+                g.energy_eff,
+                f.energy_eff / g.energy_eff
+            );
+        }
+    };
+    // scenario 1: vary agents (fixed batch, dense)
+    let s1: Vec<Scenario> = [3usize, 4, 6, 8, 10]
+        .iter()
+        .map(|&a| Scenario { agents: a, batch: 1, groups: 1 })
+        .collect();
+    rows("agents", &s1, &mut out);
+    // scenario 2: vary batch
+    let s2: Vec<Scenario> = [1usize, 2, 4, 8, 16, 32]
+        .iter()
+        .map(|&b| Scenario { agents: 8, batch: b, groups: 1 })
+        .collect();
+    rows("batch", &s2, &mut out);
+    // scenario 3: vary group number
+    let s3: Vec<Scenario> = [1usize, 2, 4, 8, 16]
+        .iter()
+        .map(|&g| Scenario { agents: 8, batch: 16, groups: g })
+        .collect();
+    rows("groups", &s3, &mut out);
+    let _ = writeln!(
+        out,
+        "(paper: FPGA 257.4 GFLOPS dense, up to 3629.5 at G=16; 7.13x / 12.43x avg over GPU)"
+    );
+    out
+}
+
+/// Fig. 12: execution-time breakdown — sparse data generation vs DNN
+/// computation, GPU vs LearningGroup, sweeping G.
+pub fn fig12_breakdown() -> String {
+    let fpga = FpgaModel::default();
+    let gpu = GpuModel::default();
+    let shape = NetShape::ic3net();
+    let mut out = String::new();
+    let _ = writeln!(out, "Fig 12 — execution time breakdown (sparse-gen share)");
+    let _ = writeln!(out, "{:>4} {:>16} {:>16}", "G", "GPU sparse-gen", "FPGA sparse-gen");
+    let mut fpga_avg = 0.0;
+    let gs = [2usize, 4, 8, 16];
+    for &g in &gs {
+        let sc = Scenario { agents: 8, batch: 16, groups: g };
+        let f = fpga.iteration(sc);
+        let gp = gpu.iteration(&shape, sc);
+        fpga_avg += f.sparse_gen_fraction;
+        let _ = writeln!(
+            out,
+            "{:>4} {:>15.1}% {:>15.1}%",
+            g,
+            gp.sparse_gen_fraction * 100.0,
+            f.sparse_gen_fraction * 100.0
+        );
+    }
+    let _ = writeln!(
+        out,
+        "FPGA average: {:.1}% (paper: 2.9%); GPU: 31% (paper: 31%)",
+        100.0 * fpga_avg / gs.len() as f64
+    );
+    out
+}
+
+/// Fig. 13: speedup over the dense case at the paper's four sparsity
+/// points, vs the published sparse-training accelerators.
+pub fn fig13_speedup() -> String {
+    let fpga = FpgaModel::default();
+    let mut out = String::new();
+    let _ = writeln!(out, "Fig 13 — speedup over dense (8 agents, batch 16)");
+    let _ = writeln!(
+        out,
+        "{:>10} {:>9} | {:>13} {:>11} {:>12} {:>8} | {:>10} {:>9}",
+        "sparsity", "G", "EagerPruning", "Procrustes", "SparseTrain", "OmniDRL", "this(inf)", "this(trn)"
+    );
+    let mut max_inf = 0.0f64;
+    let mut max_trn = 0.0f64;
+    for &g in &[2usize, 4, 8, 16] {
+        let sparsity = 1.0 - 1.0 / g as f64;
+        let (inf, trn) = fpga.speedup_over_dense(g, 8, 16);
+        max_inf = max_inf.max(inf);
+        max_trn = max_trn.max(trn);
+        let comp: Vec<f64> = COMPETITORS.iter().map(|c| c.speedup_at(sparsity)).collect();
+        let _ = writeln!(
+            out,
+            "{:>9.2}% {:>9} | {:>12.2}x {:>10.2}x {:>11.2}x {:>7.2}x | {:>9.2}x {:>8.2}x",
+            sparsity * 100.0,
+            g,
+            comp[0],
+            comp[1],
+            comp[2],
+            comp[3],
+            inf,
+            trn
+        );
+    }
+    let _ = writeln!(
+        out,
+        "max: inference {max_inf:.2}x, training {max_trn:.2}x (paper: 12.52x / 9.75x)"
+    );
+    out
+}
+
+/// Fig. 8: resource utilization table.
+pub fn fig8_resources() -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "Fig 8 — resource utilization on Alveo U280 (3 cores x 264 VPUs)");
+    let _ = writeln!(
+        out,
+        "{:>26} {:>7} {:>7} {:>7} {:>7} {:>7}   (paper LUT/FF/BRAM/DSP/Pwr)",
+        "module", "LUT%", "FF%", "BRAM%", "DSP%", "Power%"
+    );
+    for (m, paper) in resource_model(3, 264, 16).iter().zip(&PAPER_FIG8) {
+        let p = m.percentages(&U280);
+        let _ = writeln!(
+            out,
+            "{:>26} {:>6.1} {:>6.1} {:>6.1} {:>6.1} {:>6.1}   ({:.1}/{:.1}/{:.1}/{:.1}/{:.1})",
+            m.name, p[0], p[1], p[2], p[3], p[4], paper.1, paper.2, paper.3, paper.4, paper.5
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig11_has_all_three_sweeps() {
+        let t = fig11_throughput();
+        assert!(t.matches("agents").count() >= 5);
+        assert!(t.matches("batch").count() >= 6);
+        assert!(t.matches("groups").count() >= 5);
+    }
+
+    #[test]
+    fn fig12_fpga_share_below_gpu() {
+        let t = fig12_breakdown();
+        assert!(t.contains("31"), "{t}");
+    }
+
+    #[test]
+    fn fig13_this_work_rows_present() {
+        let t = fig13_speedup();
+        assert!(t.contains("93.75%"), "{t}");
+        assert!(t.contains("max: inference"));
+    }
+
+    #[test]
+    fn fig8_table_shapes() {
+        let t = fig8_resources();
+        assert_eq!(t.lines().count(), 9);
+        assert!(t.contains("Vector Processing Units"));
+    }
+}

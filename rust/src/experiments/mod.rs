@@ -1,0 +1,18 @@
+//! Experiment harnesses — one function per paper table/figure.
+//!
+//! Each returns a formatted text table (the same rows/series the paper
+//! reports) so the CLI (`learning-group <experiment>`) and the criterion-
+//! style benches (`cargo bench`) share one implementation.  Paper-vs-
+//! measured numbers are recorded in EXPERIMENTS.md.
+
+mod accel_cmp;
+mod accuracy;
+mod balance;
+mod osel_eff;
+mod roofline_exp;
+
+pub use accel_cmp::{fig11_throughput, fig12_breakdown, fig13_speedup, fig8_resources};
+pub use accuracy::{fig4a_pruning_accuracy, fig9_sparsity_accuracy, AccuracyOptions};
+pub use balance::table1_workload_deviation;
+pub use osel_eff::{fig10a_cycles, fig10b_memory};
+pub use roofline_exp::fig1_roofline;

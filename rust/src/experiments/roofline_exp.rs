@@ -1,0 +1,58 @@
+//! E1 / Fig. 1 — roofline of MARL on the CPU system.
+
+use std::fmt::Write;
+
+use crate::accel::perf::NetShape;
+use crate::accel::roofline::{Bound, Roofline};
+
+/// Regenerate Fig. 1: arithmetic intensity, attainable and required
+/// GFLOPS for agent counts 1..=10 at batch sizes 1 and 32.
+pub fn fig1_roofline() -> String {
+    let r = Roofline::default();
+    let shape = NetShape::ic3net();
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "Fig 1 — Roofline of MARL (CPU: {:.0} GFLOPS peak, {:.1} GB/s, ridge AI {:.1})",
+        r.system.peak_gflops,
+        r.system.bandwidth_gbs,
+        r.ridge()
+    );
+    let _ = writeln!(
+        out,
+        "{:>6} {:>6} {:>10} {:>12} {:>12} {:>9}",
+        "agents", "batch", "AI (F/B)", "attainable", "required", "bound"
+    );
+    for &batch in &[1usize, 32] {
+        for agents in [1usize, 2, 4, 8, 10] {
+            let p = r.point(&shape, agents, batch);
+            let _ = writeln!(
+                out,
+                "{:>6} {:>6} {:>10.2} {:>10.1} G {:>10.2} G {:>9}",
+                agents,
+                batch,
+                p.arithmetic_intensity,
+                p.attainable_gflops,
+                p.required_gflops,
+                match p.bound {
+                    Bound::Memory => "memory",
+                    Bound::Compute => "compute",
+                }
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_contains_transition() {
+        let t = fig1_roofline();
+        assert!(t.contains("memory"), "{t}");
+        assert!(t.contains("compute"), "{t}");
+        assert!(t.lines().count() > 10);
+    }
+}

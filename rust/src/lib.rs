@@ -1,0 +1,29 @@
+//! LearningGroup — a reproduction of *"LearningGroup: A Real-Time Sparse
+//! Training on FPGA via Learnable Weight Grouping for Multi-Agent
+//! Reinforcement Learning"* (Yang, Kim & Kim, KAIST, 2022) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! Layer map (see DESIGN.md):
+//! * **Layer 3 (this crate)** — the coordinator: the paper's system
+//!   contribution.  [`coordinator`] drives the four operational stages
+//!   (weight grouping → forward → backward → weight update); [`accel`]
+//!   is the cycle-level simulator of the FPGA microarchitecture (OSEL
+//!   encoder, sparse row memory, load-allocation unit, VPU cores);
+//!   [`env`] hosts the Predator-Prey environment (the paper runs the RL
+//!   environment on the host CPU); [`pruning`] implements FLGW and the
+//!   baseline pruning algorithms of Fig. 4(a).
+//! * **Layer 2/1 (build-time Python)** — IC3Net in JAX on Pallas kernels,
+//!   AOT-lowered to HLO text.  [`runtime`] loads and executes those
+//!   artifacts through the PJRT CPU client; Python never runs here.
+
+pub mod accel;
+pub mod coordinator;
+pub mod env;
+pub mod experiments;
+pub mod manifest;
+pub mod model;
+pub mod pruning;
+pub mod runtime;
+pub mod util;
+
+pub use manifest::Manifest;

@@ -1,0 +1,151 @@
+//! `learning-group` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands map to the end-to-end trainer and the per-figure
+//! experiment harnesses (hand-rolled argument parsing: the offline build
+//! environment has no clap).
+//!
+//! ```text
+//! learning-group train [--agents A] [--batch B] [--iterations N]
+//!                      [--pruner dense|flgw:G|iterative:P|bc:BxF|gst:BxF:P]
+//!                      [--seed S] [--csv PATH]
+//! learning-group roofline            # Fig 1
+//! learning-group accuracy [--iterations N] [--fig9]   # Fig 4(a) / Fig 9
+//! learning-group osel                # Fig 10(a)+(b)
+//! learning-group balance [--iterations N]             # Table I
+//! learning-group perf                # Fig 11 + 12 + 13
+//! learning-group resources           # Fig 8
+//! ```
+
+use anyhow::{anyhow, Result};
+
+use learning_group::coordinator::{PrunerChoice, TrainConfig, Trainer};
+use learning_group::experiments;
+
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+    switches: std::collections::HashSet<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut flags = std::collections::HashMap::new();
+        let mut switches = std::collections::HashSet::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(name) = argv[i].strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    switches.insert(name.to_string());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Args { flags, switches }
+    }
+
+    fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("invalid value for --{name}: {v:?}")),
+        }
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.switches.contains(name)
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let agents: usize = args.get("agents", 3)?;
+    let pruner_s = args
+        .flags
+        .get("pruner")
+        .cloned()
+        .unwrap_or_else(|| "flgw:4".to_string());
+    let pruner = PrunerChoice::parse(&pruner_s)
+        .ok_or_else(|| anyhow!("unknown pruner spec {pruner_s:?}"))?;
+    let cfg = TrainConfig {
+        batch: args.get("batch", 4)?,
+        iterations: args.get("iterations", 200)?,
+        pruner,
+        seed: args.get("seed", 1)?,
+        log_every: args.get("log-every", 10)?,
+        ..TrainConfig::default().with_agents(agents)
+    };
+    eprintln!(
+        "training IC3Net: agents={} batch={} iterations={} pruner={pruner_s}",
+        cfg.agents, cfg.batch, cfg.iterations
+    );
+    let mut trainer = Trainer::from_default_artifacts(cfg)?;
+    let log = trainer.train()?;
+    println!(
+        "final success rate (last 25%): {:.1}%   average: {:.1}%   sparsity: {:.1}%",
+        log.final_success_rate(0.25),
+        log.average_success_rate(),
+        (1.0 - trainer.state.mask_density()) * 100.0
+    );
+    println!("stage breakdown:");
+    for (stage, f) in trainer.timer.fractions() {
+        println!("  {:>16}: {:>5.1}%", stage.name(), f * 100.0);
+    }
+    if let Some(path) = args.flags.get("csv") {
+        log.write_csv(path)?;
+        println!("metrics written to {path}");
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    let args = Args::parse(&argv[1.min(argv.len())..]);
+    match cmd {
+        "train" => cmd_train(&args)?,
+        "roofline" => print!("{}", experiments::fig1_roofline()),
+        "osel" => {
+            print!("{}", experiments::fig10a_cycles());
+            println!();
+            print!("{}", experiments::fig10b_memory());
+        }
+        "balance" => print!(
+            "{}",
+            experiments::table1_workload_deviation(args.get("iterations", 2000)?)
+        ),
+        "perf" => {
+            print!("{}", experiments::fig11_throughput());
+            println!();
+            print!("{}", experiments::fig12_breakdown());
+            println!();
+            print!("{}", experiments::fig13_speedup());
+        }
+        "resources" => print!("{}", experiments::fig8_resources()),
+        "accuracy" => {
+            let opt = experiments::AccuracyOptions {
+                iterations: args.get("iterations", 120)?,
+                batch: args.get("batch", 4)?,
+                seed: args.get("seed", 7)?,
+                seeds: args.get("seeds", 2)?,
+            };
+            if args.has("fig9") {
+                print!(
+                    "{}",
+                    experiments::fig9_sparsity_accuracy(opt, &[1, 2, 4, 8, 16])?
+                );
+            } else {
+                print!("{}", experiments::fig4a_pruning_accuracy(opt)?);
+            }
+        }
+        "help" | "--help" | "-h" => {
+            println!("usage: learning-group <train|roofline|accuracy|osel|balance|perf|resources> [flags]");
+            println!("see the crate docs (rust/src/main.rs) for flags");
+        }
+        other => return Err(anyhow!("unknown command {other:?}; try help")),
+    }
+    Ok(())
+}

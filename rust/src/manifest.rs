@@ -1,0 +1,368 @@
+//! `artifacts/manifest.json` — the contract between the Python compile
+//! path and this coordinator.
+//!
+//! `python/compile/aot.py` dumps the flat-buffer layouts (`dims.py` is the
+//! single source of truth) plus an I/O spec per HLO artifact; everything
+//! here mirrors that schema so the two layers can never disagree on
+//! offsets or shapes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Dims {
+    pub obs_dim: usize,
+    pub hidden: usize,
+    pub n_actions: usize,
+    pub n_gate: usize,
+    pub episode_len: usize,
+}
+
+/// One FLGW-masked layer: an (rows x cols) weight matrix and where its
+/// mask lives in the flat mask vector.
+#[derive(Debug, Clone)]
+pub struct MaskedLayer {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub offset: usize,
+}
+
+impl MaskedLayer {
+    pub fn size(&self) -> usize {
+        self.rows * self.cols
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+impl ParamEntry {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub file: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Hyper {
+    pub lr: f32,
+    pub rms_decay: f32,
+    pub rms_eps: f32,
+    pub grad_clip: f32,
+    pub lr_group: f32,
+    pub value_coef: f32,
+    pub entropy_coef: f32,
+    pub gate_coef: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dims: Dims,
+    pub param_size: usize,
+    pub mask_size: usize,
+    pub masked_layers: Vec<MaskedLayer>,
+    pub param_layout: Vec<ParamEntry>,
+    pub grouping_sizes: BTreeMap<usize, usize>,
+    pub agents: Vec<usize>,
+    pub groups: Vec<usize>,
+    pub init_seed: u64,
+    pub hyper: Hyper,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+fn req<'a>(v: &'a Json, key: &str) -> Result<&'a Json> {
+    v.get(key).ok_or_else(|| anyhow!("manifest missing key {key:?}"))
+}
+
+fn req_usize(v: &Json, key: &str) -> Result<usize> {
+    req(v, key)?
+        .as_usize()
+        .ok_or_else(|| anyhow!("manifest key {key:?} is not a number"))
+}
+
+fn req_f32(v: &Json, key: &str) -> Result<f32> {
+    Ok(req(v, key)?
+        .as_f64()
+        .ok_or_else(|| anyhow!("manifest key {key:?} is not a number"))? as f32)
+}
+
+fn req_str(v: &Json, key: &str) -> Result<String> {
+    Ok(req(v, key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("manifest key {key:?} is not a string"))?
+        .to_string())
+}
+
+fn usize_arr(v: &Json) -> Result<Vec<usize>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected array"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow!("expected number")))
+        .collect()
+}
+
+fn io_spec(v: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: req_str(v, "name")?,
+        shape: usize_arr(req(v, "shape")?)?,
+        dtype: req_str(v, "dtype")?,
+    })
+}
+
+impl Manifest {
+    /// Parse a manifest from JSON text (dir left empty).
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text).context("parsing manifest JSON")?;
+
+        let d = req(&v, "dims")?;
+        let dims = Dims {
+            obs_dim: req_usize(d, "obs_dim")?,
+            hidden: req_usize(d, "hidden")?,
+            n_actions: req_usize(d, "n_actions")?,
+            n_gate: req_usize(d, "n_gate")?,
+            episode_len: req_usize(d, "episode_len")?,
+        };
+
+        let masked_layers = req(&v, "masked_layers")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("masked_layers not an array"))?
+            .iter()
+            .map(|l| {
+                Ok(MaskedLayer {
+                    name: req_str(l, "name")?,
+                    rows: req_usize(l, "rows")?,
+                    cols: req_usize(l, "cols")?,
+                    offset: req_usize(l, "offset")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let param_layout = req(&v, "param_layout")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("param_layout not an array"))?
+            .iter()
+            .map(|l| {
+                Ok(ParamEntry {
+                    name: req_str(l, "name")?,
+                    offset: req_usize(l, "offset")?,
+                    shape: usize_arr(req(l, "shape")?)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let grouping_sizes = req(&v, "grouping_sizes")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("grouping_sizes not an object"))?
+            .iter()
+            .map(|(k, val)| {
+                Ok((
+                    k.parse::<usize>().context("grouping_sizes key")?,
+                    val.as_usize().ok_or_else(|| anyhow!("grouping size"))?,
+                ))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+
+        let h = req(&v, "hyper")?;
+        let hyper = Hyper {
+            lr: req_f32(h, "lr")?,
+            rms_decay: req_f32(h, "rms_decay")?,
+            rms_eps: req_f32(h, "rms_eps")?,
+            grad_clip: req_f32(h, "grad_clip")?,
+            lr_group: req_f32(h, "lr_group")?,
+            value_coef: req_f32(h, "value_coef")?,
+            entropy_coef: req_f32(h, "entropy_coef")?,
+            gate_coef: req_f32(h, "gate_coef")?,
+        };
+
+        let artifacts = req(&v, "artifacts")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("artifacts not an object"))?
+            .iter()
+            .map(|(name, a)| {
+                let inputs = req(a, "inputs")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("inputs not array"))?
+                    .iter()
+                    .map(io_spec)
+                    .collect::<Result<Vec<_>>>()?;
+                let outputs = req(a, "outputs")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("outputs not array"))?
+                    .iter()
+                    .map(io_spec)
+                    .collect::<Result<Vec<_>>>()?;
+                Ok((
+                    name.clone(),
+                    ArtifactSpec { inputs, outputs, file: req_str(a, "file")? },
+                ))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+
+        Ok(Manifest {
+            dims,
+            param_size: req_usize(&v, "param_size")?,
+            mask_size: req_usize(&v, "mask_size")?,
+            masked_layers,
+            param_layout,
+            grouping_sizes,
+            agents: usize_arr(req(&v, "agents")?)?,
+            groups: usize_arr(req(&v, "groups")?)?,
+            init_seed: req_usize(&v, "init_seed")? as u64,
+            hyper,
+            artifacts,
+            dir: PathBuf::new(),
+        })
+    }
+
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let mut m = Self::parse(&text)?;
+        m.dir = dir;
+        Ok(m)
+    }
+
+    /// Default artifacts directory: `$LEARNING_GROUP_ARTIFACTS` or
+    /// `artifacts/` under the workspace root.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("LEARNING_GROUP_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    pub fn masked_layer(&self, name: &str) -> Result<&MaskedLayer> {
+        self.masked_layers
+            .iter()
+            .find(|l| l.name == name)
+            .ok_or_else(|| anyhow!("masked layer {name:?} not in manifest"))
+    }
+
+    pub fn grouping_size(&self, g: usize) -> Result<usize> {
+        // IG (M x G) + OG (G x N) per masked layer — derivable even for a
+        // G the manifest didn't pre-tabulate.
+        if let Some(&s) = self.grouping_sizes.get(&g) {
+            return Ok(s);
+        }
+        Ok(self
+            .masked_layers
+            .iter()
+            .map(|l| l.rows * g + g * l.cols)
+            .sum())
+    }
+
+    /// Read a little-endian f32 blob (e.g. `init_params.bin`).
+    pub fn read_f32_blob(&self, file: &str) -> Result<Vec<f32>> {
+        let path = self.dir.join(file);
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() % 4 != 0 {
+            return Err(anyhow!("{path:?}: length {} not a multiple of 4", bytes.len()));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "dims": {"obs_dim": 6, "hidden": 128, "n_actions": 5, "n_gate": 2,
+               "episode_len": 20},
+      "param_size": 149768,
+      "mask_size": 148224,
+      "masked_layers": [
+        {"name": "w_enc", "rows": 6, "cols": 128, "offset": 0},
+        {"name": "w_comm", "rows": 128, "cols": 128, "offset": 768}
+      ],
+      "param_layout": [
+        {"name": "w_enc", "offset": 0, "shape": [6, 128]}
+      ],
+      "grouping_sizes": {"4": 3672},
+      "agents": [3], "groups": [4], "init_seed": 42,
+      "hyper": {"lr": 0.001, "rms_decay": 0.99, "rms_eps": 1e-05,
+                "grad_clip": 0.5, "lr_group": 0.01, "value_coef": 0.5,
+                "entropy_coef": 0.01, "gate_coef": 1.0},
+      "artifacts": {
+        "apply_update": {
+          "file": "apply_update.hlo.txt",
+          "inputs": [{"name": "params", "shape": [149768], "dtype": "f32"}],
+          "outputs": [{"name": "params2", "shape": [149768], "dtype": "f32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.dims.hidden, 128);
+        assert_eq!(m.masked_layers[1].size(), 128 * 128);
+        assert_eq!(m.artifacts["apply_update"].inputs[0].elements(), 149768);
+        assert!((m.hyper.rms_eps - 1e-5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn grouping_size_derives_when_missing() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.grouping_size(4).unwrap(), 3672); // tabulated
+        // derived: (6*8 + 8*128) + (128*8 + 8*128)
+        assert_eq!(m.grouping_size(8).unwrap(), 48 + 1024 + 1024 + 1024);
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn scalar_output_has_one_element() {
+        let spec = IoSpec { name: "loss".into(), shape: vec![], dtype: "f32".into() };
+        assert_eq!(spec.elements(), 1);
+    }
+}

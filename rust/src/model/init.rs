@@ -1,0 +1,40 @@
+//! Rust-side parameter initialisation.
+//!
+//! `aot.py` dumps a reference blob (`init_params.bin`) used for parity
+//! tests; for multi-seed experiments (Fig. 4(a)/Fig. 9 average over
+//! seeds) the coordinator initialises locally with the same recipe:
+//! scaled-normal matrices, zero biases, LSTM forget-gate bias = 1.
+
+use crate::manifest::Manifest;
+use crate::util::Pcg32;
+
+/// Initialise a flat parameter vector (same recipe as `aot.init_params`,
+/// different RNG — bitwise parity comes from the blob, not from here).
+pub fn init_params(manifest: &Manifest, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed, 0x9e37);
+    let mut flat = vec![0.0f32; manifest.param_size];
+    let hidden = manifest.dims.hidden;
+    for entry in &manifest.param_layout {
+        let size = entry.size();
+        let slice = &mut flat[entry.offset..entry.offset + size];
+        if entry.shape.len() == 2 {
+            let scale = 1.0 / (entry.shape[0] as f32).sqrt();
+            for v in slice.iter_mut() {
+                *v = rng.next_normal() * scale;
+            }
+        } else if entry.name == "b_lstm" {
+            // forget-gate bias = 1 (gate order i, f, g, o)
+            for v in slice[hidden..2 * hidden].iter_mut() {
+                *v = 1.0;
+            }
+        }
+    }
+    flat
+}
+
+/// Random grouping-matrix init (paper: "initialized randomly").
+pub fn init_grouping(manifest: &Manifest, g: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed, 0x51f1 + g as u64);
+    let size = manifest.grouping_size(g).expect("grouping size");
+    (0..size).map(|_| rng.next_normal()).collect()
+}

@@ -1,0 +1,9 @@
+//! Model-side state held by the coordinator: flat parameter / mask /
+//! optimizer-state buffers plus named views, mirroring `python/compile/
+//! dims.py` through the manifest.
+
+mod init;
+mod store;
+
+pub use init::{init_grouping, init_params};
+pub use store::{GroupingState, ModelState};

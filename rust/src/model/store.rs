@@ -1,0 +1,190 @@
+//! Flat-buffer model state with named views.
+//!
+//! The FFI keeps parameters, masks, gradients and optimizer state as
+//! single `Vec<f32>`s (the artifact signatures take them whole); this
+//! module provides the named slices the accelerator simulator and the
+//! pruning algorithms need (per-layer weight matrices, per-layer masks).
+
+use anyhow::{anyhow, Result};
+
+use crate::manifest::Manifest;
+
+/// All mutable training state except the environment.
+#[derive(Debug, Clone)]
+pub struct ModelState {
+    /// Flat parameters (manifest `param_layout` order).
+    pub params: Vec<f32>,
+    /// Flat masks over the FLGW-masked layers (manifest `masked_layers`).
+    pub masks: Vec<f32>,
+    /// RMSprop squared-gradient average for `params`.
+    pub sq_avg: Vec<f32>,
+}
+
+impl ModelState {
+    /// Fresh state: given initial parameters, dense masks, zero opt state.
+    pub fn new(manifest: &Manifest, params: Vec<f32>) -> Result<Self> {
+        if params.len() != manifest.param_size {
+            return Err(anyhow!(
+                "params length {} != manifest param_size {}",
+                params.len(),
+                manifest.param_size
+            ));
+        }
+        Ok(ModelState {
+            params,
+            masks: vec![1.0; manifest.mask_size],
+            sq_avg: vec![0.0; manifest.param_size],
+        })
+    }
+
+    /// Load the Python-side reference initialisation blob.
+    pub fn from_init_blob(manifest: &Manifest) -> Result<Self> {
+        let params = manifest.read_f32_blob("init_params.bin")?;
+        Self::new(manifest, params)
+    }
+
+    /// Borrow the weight matrix of a (masked or unmasked) layer.
+    pub fn layer(&self, manifest: &Manifest, name: &str) -> Result<&[f32]> {
+        let entry = manifest
+            .param_layout
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("no param layer {name:?}"))?;
+        Ok(&self.params[entry.offset..entry.offset + entry.size()])
+    }
+
+    /// Borrow one masked layer's mask as a flat row-major slice.
+    pub fn layer_mask(&self, manifest: &Manifest, name: &str) -> Result<&[f32]> {
+        let l = manifest.masked_layer(name)?;
+        Ok(&self.masks[l.offset..l.offset + l.size()])
+    }
+
+    /// Mutable mask view for one layer.
+    pub fn layer_mask_mut(&mut self, manifest: &Manifest, name: &str) -> Result<&mut [f32]> {
+        let l = manifest.masked_layer(name)?;
+        Ok(&mut self.masks[l.offset..l.offset + l.size()])
+    }
+
+    /// Overall fraction of surviving (unmasked) weights.
+    pub fn mask_density(&self) -> f32 {
+        if self.masks.is_empty() {
+            return 1.0;
+        }
+        self.masks.iter().sum::<f32>() / self.masks.len() as f32
+    }
+}
+
+/// FLGW grouping-matrix state for one group count G.
+#[derive(Debug, Clone)]
+pub struct GroupingState {
+    pub g: usize,
+    /// Flat `[IG_l ; OG_l]` per masked layer (manifest layout).
+    pub grouping: Vec<f32>,
+    /// RMSprop state for the grouping matrices.
+    pub sq_avg: Vec<f32>,
+}
+
+impl GroupingState {
+    pub fn new(manifest: &Manifest, g: usize, grouping: Vec<f32>) -> Result<Self> {
+        let expect = manifest.grouping_size(g)?;
+        if grouping.len() != expect {
+            return Err(anyhow!(
+                "grouping length {} != expected {} for G={}",
+                grouping.len(),
+                expect,
+                g
+            ));
+        }
+        let n = grouping.len();
+        Ok(GroupingState { g, grouping, sq_avg: vec![0.0; n] })
+    }
+
+    /// Load the Python-side reference grouping blob for G.
+    pub fn from_init_blob(manifest: &Manifest, g: usize) -> Result<Self> {
+        let blob = manifest.read_f32_blob(&format!("init_grouping_g{g}.bin"))?;
+        Self::new(manifest, g, blob)
+    }
+
+    /// (IG, OG) slices for one masked layer; IG is rows x G row-major,
+    /// OG is G x cols row-major.
+    pub fn layer(&self, manifest: &Manifest, name: &str) -> Result<(&[f32], &[f32])> {
+        let mut off = 0;
+        for l in &manifest.masked_layers {
+            let ig_len = l.rows * self.g;
+            let og_len = self.g * l.cols;
+            if l.name == name {
+                return Ok((
+                    &self.grouping[off..off + ig_len],
+                    &self.grouping[off + ig_len..off + ig_len + og_len],
+                ));
+            }
+            off += ig_len + og_len;
+        }
+        Err(anyhow!("no masked layer {name:?}"))
+    }
+
+    /// Argmax index per IG row (length = layer rows).
+    pub fn ig_indexes(&self, manifest: &Manifest, name: &str) -> Result<Vec<u16>> {
+        let (ig, _) = self.layer(manifest, name)?;
+        let l = manifest.masked_layer(name)?;
+        Ok(argmax_rows(ig, l.rows, self.g))
+    }
+
+    /// Argmax index per OG column (length = layer cols).
+    pub fn og_indexes(&self, manifest: &Manifest, name: &str) -> Result<Vec<u16>> {
+        let (_, og) = self.layer(manifest, name)?;
+        let l = manifest.masked_layer(name)?;
+        Ok(argmax_cols(og, self.g, l.cols))
+    }
+}
+
+/// Row-wise argmax of a row-major (rows x cols) matrix.
+pub(crate) fn argmax_rows(m: &[f32], rows: usize, cols: usize) -> Vec<u16> {
+    (0..rows)
+        .map(|r| {
+            let row = &m[r * cols..(r + 1) * cols];
+            let mut best = 0usize;
+            for (i, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = i;
+                }
+            }
+            best as u16
+        })
+        .collect()
+}
+
+/// Column-wise argmax of a row-major (rows x cols) matrix.
+pub(crate) fn argmax_cols(m: &[f32], rows: usize, cols: usize) -> Vec<u16> {
+    (0..cols)
+        .map(|c| {
+            let mut best = 0usize;
+            for r in 1..rows {
+                if m[r * cols + c] > m[best * cols + c] {
+                    best = r;
+                }
+            }
+            best as u16
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_rows_ties_pick_first() {
+        // jnp.argmax picks the first maximal index on ties — the Rust
+        // OSEL must agree or mask parity with mask_gen_g* breaks.
+        let m = [1.0, 1.0, 0.0, /* row1 */ 0.0, 2.0, 2.0];
+        assert_eq!(argmax_rows(&m, 2, 3), vec![0, 1]);
+    }
+
+    #[test]
+    fn argmax_cols_basic() {
+        // 2x3: col maxima at rows [1, 0, 1]
+        let m = [1.0, 5.0, 0.0, 2.0, 4.0, 3.0];
+        assert_eq!(argmax_cols(&m, 2, 3), vec![1, 0, 1]);
+    }
+}

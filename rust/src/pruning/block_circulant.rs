@@ -1,0 +1,118 @@
+//! Block-circulant pruning (Narang et al., baseline of §III-A).
+//!
+//! The weight matrix is tiled into `block x block` tiles; within each
+//! block-row, only a circulant-shifted subset of tiles survives
+//! (structured sparsity with cheap encoding but a low compression ratio —
+//! the weakness the paper notes).  Keep ratio = 1 / `factor`: block-row
+//! `r` keeps tiles at columns `c` with `(c - r) mod factor == 0`.
+
+use anyhow::Result;
+
+use crate::model::ModelState;
+use crate::pruning::{PruneContext, PruningAlgorithm};
+
+#[derive(Debug, Clone)]
+pub struct BlockCirculantPruner {
+    /// Tile edge length.
+    pub block: usize,
+    /// Compression factor: 1 of every `factor` tiles survives.
+    pub factor: usize,
+}
+
+impl BlockCirculantPruner {
+    pub fn new(block: usize, factor: usize) -> Self {
+        assert!(block > 0 && factor > 0);
+        BlockCirculantPruner { block, factor }
+    }
+}
+
+impl PruningAlgorithm for BlockCirculantPruner {
+    fn name(&self) -> &'static str {
+        "block_circulant"
+    }
+
+    fn update_masks(&mut self, state: &mut ModelState, ctx: &PruneContext<'_>) -> Result<()> {
+        for layer in ctx.manifest.masked_layers.clone() {
+            let (rows, cols) = (layer.rows, layer.cols);
+            let mask = state.layer_mask_mut(ctx.manifest, &layer.name)?;
+            for i in 0..rows {
+                let br = i / self.block;
+                for j in 0..cols {
+                    let bc = j / self.block;
+                    let keep = (bc + self.factor - br % self.factor) % self.factor == 0;
+                    mask[i * cols + j] = if keep { 1.0 } else { 0.0 };
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::testutil::*;
+
+    #[test]
+    fn density_is_one_over_factor() {
+        let m = tiny_manifest();
+        let mut s = tiny_state(&m);
+        BlockCirculantPruner::new(2, 4)
+            .update_masks(&mut s, &ctx(&m, 0, &[]))
+            .unwrap();
+        let density = s.mask_density();
+        assert!((density - 0.25).abs() < 0.05, "density {density}");
+    }
+
+    #[test]
+    fn mask_is_block_structured() {
+        let m = tiny_manifest();
+        let mut s = tiny_state(&m);
+        let block = 2;
+        BlockCirculantPruner::new(block, 2)
+            .update_masks(&mut s, &ctx(&m, 0, &[]))
+            .unwrap();
+        let layer = &m.masked_layers[0];
+        let mask = s.layer_mask(&m, "w_a").unwrap();
+        // all entries within one block are identical
+        for bi in 0..layer.rows / block {
+            for bj in 0..layer.cols / block {
+                let v = mask[bi * block * layer.cols + bj * block];
+                for di in 0..block {
+                    for dj in 0..block {
+                        let idx = (bi * block + di) * layer.cols + bj * block + dj;
+                        assert_eq!(mask[idx], v);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn circulant_shift_across_block_rows() {
+        let m = tiny_manifest();
+        let mut s = tiny_state(&m);
+        BlockCirculantPruner::new(2, 2)
+            .update_masks(&mut s, &ctx(&m, 0, &[]))
+            .unwrap();
+        let layer = &m.masked_layers[0];
+        let mask = s.layer_mask(&m, "w_a").unwrap();
+        // block-row 0 keeps even block-cols; block-row 1 keeps odd ones
+        assert_eq!(mask[0], 1.0); // (0,0)
+        assert_eq!(mask[2], 0.0); // (0,2)
+        let r2 = 2 * layer.cols;
+        assert_eq!(mask[r2], 0.0); // (2,0) — shifted
+        assert_eq!(mask[r2 + 2], 1.0); // (2,2)
+    }
+
+    #[test]
+    fn deterministic_every_iteration() {
+        let m = tiny_manifest();
+        let mut s = tiny_state(&m);
+        let mut p = BlockCirculantPruner::new(2, 4);
+        p.update_masks(&mut s, &ctx(&m, 0, &[])).unwrap();
+        let first = s.masks.clone();
+        p.update_masks(&mut s, &ctx(&m, 10, &[])).unwrap();
+        assert_eq!(first, s.masks);
+    }
+}

@@ -1,0 +1,157 @@
+//! FLGW — fully learnable weight grouping, driven through OSEL.
+//!
+//! The coordinator-side half of the paper's chosen pruning algorithm:
+//! each iteration it argmax-reduces the (trained) grouping matrices to
+//! index lists, runs the OSEL encoder per masked layer, and materialises
+//! the masks for the HLO artifacts.  The grouping matrices themselves are
+//! trained by the `flgw_update_g*` artifact (straight-through estimator);
+//! this struct owns their host-side state and exposes the hook the
+//! trainer calls after each backward pass.
+//!
+//! Also the measurement point for Fig. 10 (encode cycles / footprint) and
+//! Table I (per-layer sparse row memories feed the load allocator).
+
+use anyhow::Result;
+
+use crate::accel::osel::{OselEncoder, OselStats};
+use crate::accel::sparse_row_memory::SparseRowMemory;
+use crate::manifest::Manifest;
+use crate::model::{GroupingState, ModelState};
+use crate::pruning::{PruneContext, PruningAlgorithm};
+
+/// FLGW pruner: grouping matrices + OSEL encoder + per-layer encodings.
+pub struct FlgwPruner {
+    pub grouping: GroupingState,
+    pub encoder: OselEncoder,
+    /// Last iteration's per-layer sparse row memories (layer order).
+    pub encodings: Vec<SparseRowMemory>,
+    /// Cumulative encode statistics (cycle accounting for Fig. 10/12).
+    pub stats: OselStats,
+}
+
+impl FlgwPruner {
+    pub fn new(grouping: GroupingState) -> Self {
+        FlgwPruner {
+            grouping,
+            encoder: OselEncoder::default(),
+            encodings: Vec::new(),
+            stats: OselStats::default(),
+        }
+    }
+
+    /// Construct from the Python reference init blob for group count `g`.
+    pub fn from_init_blob(manifest: &Manifest, g: usize) -> Result<Self> {
+        Ok(Self::new(GroupingState::from_init_blob(manifest, g)?))
+    }
+
+    pub fn groups(&self) -> usize {
+        self.grouping.g
+    }
+
+    /// Encode all masked layers and write the masks into `state`.
+    fn encode_all(&mut self, state: &mut ModelState, manifest: &Manifest) -> Result<()> {
+        self.encodings.clear();
+        for layer in manifest.masked_layers.clone() {
+            let ig = self.grouping.ig_indexes(manifest, &layer.name)?;
+            let og = self.grouping.og_indexes(manifest, &layer.name)?;
+            let (srm, stats) = self.encoder.encode(&ig, &og, self.grouping.g);
+            let mask = OselEncoder::materialize_mask(&srm);
+            state.masks[layer.offset..layer.offset + layer.size()]
+                .copy_from_slice(&mask);
+            self.encodings.push(srm);
+            merge_stats(&mut self.stats, stats);
+        }
+        Ok(())
+    }
+}
+
+fn merge_stats(acc: &mut OselStats, s: OselStats) {
+    acc.max_index_cycles += s.max_index_cycles;
+    acc.index_miss_cycles += s.index_miss_cycles;
+    acc.index_hit_cycles += s.index_hit_cycles;
+    acc.weight_compression_cycles += s.weight_compression_cycles;
+    acc.hits += s.hits;
+    acc.misses += s.misses;
+}
+
+impl PruningAlgorithm for FlgwPruner {
+    fn name(&self) -> &'static str {
+        "flgw"
+    }
+
+    fn update_masks(&mut self, state: &mut ModelState, ctx: &PruneContext<'_>) -> Result<()> {
+        self.encode_all(state, ctx.manifest)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init_grouping;
+    use crate::pruning::testutil::*;
+
+    fn pruner(manifest: &Manifest, g: usize) -> FlgwPruner {
+        let grouping = GroupingState::new(
+            manifest,
+            g,
+            init_grouping(manifest, g, 3),
+        )
+        .unwrap();
+        FlgwPruner::new(grouping)
+    }
+
+    #[test]
+    fn masks_are_binary_with_expected_density() {
+        let m = tiny_manifest();
+        let mut s = tiny_state(&m);
+        for g in [2usize, 4] {
+            let mut p = pruner(&m, g);
+            p.update_masks(&mut s, &ctx(&m, 0, &[])).unwrap();
+            assert!(s.masks.iter().all(|&x| x == 0.0 || x == 1.0));
+            let density = s.mask_density();
+            // expected 1/G with generous slack on tiny layers
+            assert!(
+                (density - 1.0 / g as f32).abs() < 0.25,
+                "G={g}: density {density}"
+            );
+        }
+    }
+
+    #[test]
+    fn encodings_cover_all_layers() {
+        let m = tiny_manifest();
+        let mut s = tiny_state(&m);
+        let mut p = pruner(&m, 4);
+        p.update_masks(&mut s, &ctx(&m, 0, &[])).unwrap();
+        assert_eq!(p.encodings.len(), m.masked_layers.len());
+        assert_eq!(p.encodings[0].index_list().len(), 8); // w_a rows
+        assert_eq!(p.encodings[1].index_list().len(), 8); // w_b rows
+        assert!(p.stats.total_cycles() > 0);
+    }
+
+    #[test]
+    fn mask_stable_when_grouping_unchanged() {
+        let m = tiny_manifest();
+        let mut s = tiny_state(&m);
+        let mut p = pruner(&m, 2);
+        p.update_masks(&mut s, &ctx(&m, 0, &[])).unwrap();
+        let first = s.masks.clone();
+        p.update_masks(&mut s, &ctx(&m, 1, &[])).unwrap();
+        assert_eq!(s.masks, first);
+    }
+
+    #[test]
+    fn mask_changes_when_grouping_changes() {
+        let m = tiny_manifest();
+        let mut s = tiny_state(&m);
+        let mut p = pruner(&m, 4);
+        p.update_masks(&mut s, &ctx(&m, 0, &[])).unwrap();
+        let first = s.masks.clone();
+        // perturb the grouping matrices (as flgw_update would)
+        for v in p.grouping.grouping.iter_mut() {
+            *v = -*v;
+        }
+        p.update_masks(&mut s, &ctx(&m, 1, &[])).unwrap();
+        assert_ne!(s.masks, first);
+    }
+}

@@ -1,0 +1,130 @@
+//! Group-sparse training (GST, Lee et al. 2021 — baseline of §III-A).
+//!
+//! Combines block-circulant compression with iterative magnitude pruning
+//! *within* the surviving blocks until a target sparsity is reached.  The
+//! paper's concern: pruning inside already-compressed blocks harms MARL's
+//! shared centralized network — visible as the GST accuracy gap in
+//! Fig. 4(a).
+
+use anyhow::Result;
+
+use crate::model::ModelState;
+use crate::pruning::block_circulant::BlockCirculantPruner;
+use crate::pruning::{PruneContext, PruningAlgorithm};
+
+#[derive(Debug, Clone)]
+pub struct GroupSparseTrainingPruner {
+    pub block_circulant: BlockCirculantPruner,
+    /// Overall target sparsity (>= the block-circulant floor).
+    pub target_sparsity: f32,
+    /// Ramp fraction for the in-block magnitude phase.
+    pub ramp_fraction: f32,
+}
+
+impl GroupSparseTrainingPruner {
+    pub fn new(block: usize, factor: usize, target_sparsity: f32) -> Self {
+        GroupSparseTrainingPruner {
+            block_circulant: BlockCirculantPruner::new(block, factor),
+            target_sparsity,
+            ramp_fraction: 0.5,
+        }
+    }
+}
+
+impl PruningAlgorithm for GroupSparseTrainingPruner {
+    fn name(&self) -> &'static str {
+        "gst"
+    }
+
+    fn update_masks(&mut self, state: &mut ModelState, ctx: &PruneContext<'_>) -> Result<()> {
+        // phase 1: structural floor
+        self.block_circulant.update_masks(state, ctx)?;
+        let floor = 1.0 - 1.0 / self.block_circulant.factor as f32;
+        if self.target_sparsity <= floor {
+            return Ok(());
+        }
+        // phase 2: in-block magnitude pruning ramping to target
+        let ramp_len = (ctx.total_iterations as f32 * self.ramp_fraction).max(1.0);
+        let progress = (ctx.iteration as f32 / ramp_len).min(1.0);
+        let extra_target = (self.target_sparsity - floor) * progress;
+        // fraction of the *surviving* weights to prune
+        let in_block = extra_target / (1.0 - floor);
+
+        for layer in ctx.manifest.masked_layers.clone() {
+            let w = state.layer(ctx.manifest, &layer.name)?.to_vec();
+            let mask = state.layer_mask_mut(ctx.manifest, &layer.name)?;
+            let mut surviving: Vec<(usize, f32)> = mask
+                .iter()
+                .enumerate()
+                .filter(|(_, &mk)| mk == 1.0)
+                .map(|(i, _)| (i, w[i].abs()))
+                .collect();
+            surviving.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            let k = (surviving.len() as f32 * in_block) as usize;
+            for &(i, _) in surviving.iter().take(k) {
+                mask[i] = 0.0;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::testutil::*;
+
+    #[test]
+    fn respects_block_floor_then_ramps() {
+        let m = tiny_manifest();
+        let mut s = tiny_state(&m);
+        let mut p = GroupSparseTrainingPruner::new(2, 2, 0.8);
+        p.update_masks(&mut s, &ctx(&m, 0, &[])).unwrap();
+        let early = 1.0 - s.mask_density();
+        assert!((early - 0.5).abs() < 0.05, "early sparsity {early}");
+        p.update_masks(&mut s, &ctx(&m, 99, &[])).unwrap();
+        let late = 1.0 - s.mask_density();
+        assert!((late - 0.8).abs() < 0.05, "late sparsity {late}");
+    }
+
+    #[test]
+    fn target_below_floor_is_pure_block_circulant() {
+        let m = tiny_manifest();
+        let mut s = tiny_state(&m);
+        let mut p = GroupSparseTrainingPruner::new(2, 4, 0.5); // floor 0.75
+        p.update_masks(&mut s, &ctx(&m, 99, &[])).unwrap();
+        let sp = 1.0 - s.mask_density();
+        assert!((sp - 0.75).abs() < 0.05);
+    }
+
+    #[test]
+    fn in_block_pruning_removes_smallest_survivors() {
+        let m = tiny_manifest();
+        let mut s = tiny_state(&m);
+        let mut p = GroupSparseTrainingPruner::new(2, 2, 0.75);
+        p.ramp_fraction = 0.01;
+        p.update_masks(&mut s, &ctx(&m, 99, &[])).unwrap();
+        // pruned-within-block weights are smaller than kept ones
+        for layer in &m.masked_layers {
+            let w = s.layer(&m, &layer.name).unwrap().to_vec();
+            let mask = s.layer_mask(&m, &layer.name).unwrap().to_vec();
+            // recompute the structural mask to identify in-block prunes
+            let mut s2 = tiny_state(&m);
+            p.block_circulant.update_masks(&mut s2, &ctx(&m, 0, &[])).unwrap();
+            let structural = s2.layer_mask(&m, &layer.name).unwrap();
+            let min_kept = w
+                .iter()
+                .zip(&mask)
+                .filter(|(_, &mk)| mk == 1.0)
+                .map(|(x, _)| x.abs())
+                .fold(f32::INFINITY, f32::min);
+            let max_inblock_pruned = w
+                .iter()
+                .zip(mask.iter().zip(structural))
+                .filter(|(_, (&mk, &st))| mk == 0.0 && st == 1.0)
+                .map(|(x, _)| x.abs())
+                .fold(0.0f32, f32::max);
+            assert!(min_kept >= max_inblock_pruned);
+        }
+    }
+}

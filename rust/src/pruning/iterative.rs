@@ -1,0 +1,119 @@
+//! Iterative magnitude pruning (EagerPruning-style baseline, §III-A).
+//!
+//! "Eliminates the parameters with the smallest value every iteration, so
+//! the pruning ratio increases as the training progresses."  The ratio
+//! ramps linearly from 0 to `target_sparsity` over the first
+//! `ramp_fraction` of training, then holds — the gradual schedule whose
+//! low starting sparsity costs the hardware its early-stage speedup
+//! (§II-B), and whose per-iteration sort is what OSEL avoids.
+
+use anyhow::Result;
+
+use crate::model::ModelState;
+use crate::pruning::{PruneContext, PruningAlgorithm};
+
+#[derive(Debug, Clone)]
+pub struct IterativeMagnitudePruner {
+    pub target_sparsity: f32,
+    /// Fraction of total iterations over which sparsity ramps to target.
+    pub ramp_fraction: f32,
+}
+
+impl IterativeMagnitudePruner {
+    pub fn new(target_sparsity: f32) -> Self {
+        assert!((0.0..1.0).contains(&target_sparsity));
+        IterativeMagnitudePruner { target_sparsity, ramp_fraction: 0.5 }
+    }
+
+    /// Current scheduled sparsity at `iteration` of `total`.
+    pub fn scheduled_sparsity(&self, iteration: usize, total: usize) -> f32 {
+        let ramp_len = (total as f32 * self.ramp_fraction).max(1.0);
+        let progress = (iteration as f32 / ramp_len).min(1.0);
+        self.target_sparsity * progress
+    }
+}
+
+impl PruningAlgorithm for IterativeMagnitudePruner {
+    fn name(&self) -> &'static str {
+        "iterative"
+    }
+
+    fn update_masks(&mut self, state: &mut ModelState, ctx: &PruneContext<'_>) -> Result<()> {
+        let sparsity = self.scheduled_sparsity(ctx.iteration, ctx.total_iterations);
+        for layer in ctx.manifest.masked_layers.clone() {
+            let w = state.layer(ctx.manifest, &layer.name)?.to_vec();
+            // the per-iteration sort the paper calls out as
+            // hardware-unfriendly (we pay it here on the host)
+            let mut mags: Vec<f32> = w.iter().map(|x| x.abs()).collect();
+            mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let k = ((mags.len() as f32) * sparsity) as usize;
+            let threshold = if k == 0 { -1.0 } else { mags[k - 1] };
+            let mask = state.layer_mask_mut(ctx.manifest, &layer.name)?;
+            let mut pruned = 0usize;
+            for (mi, wi) in mask.iter_mut().zip(&w) {
+                // prune exactly k weights (ties broken by first-come)
+                if wi.abs() <= threshold && pruned < k {
+                    *mi = 0.0;
+                    pruned += 1;
+                } else {
+                    *mi = 1.0;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::testutil::*;
+
+    #[test]
+    fn sparsity_ramps_then_holds() {
+        let p = IterativeMagnitudePruner::new(0.8);
+        assert_eq!(p.scheduled_sparsity(0, 100), 0.0);
+        let mid = p.scheduled_sparsity(25, 100);
+        assert!((mid - 0.4).abs() < 1e-5);
+        assert_eq!(p.scheduled_sparsity(50, 100), 0.8);
+        assert_eq!(p.scheduled_sparsity(99, 100), 0.8);
+    }
+
+    #[test]
+    fn prunes_smallest_magnitudes() {
+        let m = tiny_manifest();
+        let mut s = tiny_state(&m);
+        let mut p = IterativeMagnitudePruner::new(0.5);
+        p.ramp_fraction = 0.01; // jump straight to target
+        p.update_masks(&mut s, &ctx(&m, 50, &[])).unwrap();
+        // every surviving weight's |w| >= every pruned weight's |w|
+        for layer in &m.masked_layers {
+            let w = s.layer(&m, &layer.name).unwrap().to_vec();
+            let mask = s.layer_mask(&m, &layer.name).unwrap();
+            let max_pruned = w
+                .iter()
+                .zip(mask)
+                .filter(|(_, &mk)| mk == 0.0)
+                .map(|(x, _)| x.abs())
+                .fold(0.0f32, f32::max);
+            let min_kept = w
+                .iter()
+                .zip(mask)
+                .filter(|(_, &mk)| mk == 1.0)
+                .map(|(x, _)| x.abs())
+                .fold(f32::INFINITY, f32::min);
+            assert!(min_kept >= max_pruned);
+        }
+        let sp = 1.0 - s.mask_density();
+        assert!((sp - 0.5).abs() < 0.02, "sparsity {sp}");
+    }
+
+    #[test]
+    fn zero_sparsity_at_start_keeps_dense() {
+        let m = tiny_manifest();
+        let mut s = tiny_state(&m);
+        let mut p = IterativeMagnitudePruner::new(0.9);
+        p.update_masks(&mut s, &ctx(&m, 0, &[])).unwrap();
+        assert_eq!(s.mask_density(), 1.0);
+    }
+}

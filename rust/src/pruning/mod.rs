@@ -1,0 +1,143 @@
+//! Pruning algorithms (§III-A, Fig. 4(a)).
+//!
+//! The paper evaluates four candidate pruning algorithms on MARL before
+//! choosing FLGW; all four are implemented here behind one trait so the
+//! Fig. 4(a) accuracy study can swap them freely:
+//!
+//! * [`DensePruner`] — no pruning (the 66.4 % baseline).
+//! * [`FlgwPruner`] — fully learnable weight grouping: masks are derived
+//!   from trained grouping matrices through the OSEL encoder; grouping
+//!   matrices update every iteration through the `flgw_update_g*`
+//!   artifact (straight-through estimator).
+//! * [`IterativeMagnitudePruner`] — eliminate the smallest-magnitude
+//!   weights, with a pruning ratio that ramps up as training progresses
+//!   (EagerPruning-style).
+//! * [`BlockCirculantPruner`] — structured block compression: within
+//!   each block-row group only one (circulant-shifted) diagonal of
+//!   blocks survives.
+//! * [`GroupSparseTrainingPruner`] — GST: block-circulant compression
+//!   plus iterative magnitude pruning *inside* the surviving blocks to
+//!   reach a target sparsity.
+
+mod block_circulant;
+mod flgw;
+mod gst;
+mod iterative;
+
+pub use block_circulant::BlockCirculantPruner;
+pub use flgw::FlgwPruner;
+pub use gst::GroupSparseTrainingPruner;
+pub use iterative::IterativeMagnitudePruner;
+
+use anyhow::Result;
+
+use crate::manifest::Manifest;
+use crate::model::ModelState;
+
+/// Context handed to the pruner each iteration.
+pub struct PruneContext<'a> {
+    pub manifest: &'a Manifest,
+    /// Current iteration (0-based).
+    pub iteration: usize,
+    /// Total planned iterations (for ramp schedules).
+    pub total_iterations: usize,
+    /// Mask cotangent dL/dmask from the last backward pass (flat, mask
+    /// layout) — consumed by FLGW's grouping update; empty before the
+    /// first backward.
+    pub dmasks: &'a [f32],
+}
+
+/// A pruning algorithm: owns whatever auxiliary state it needs (grouping
+/// matrices, ramp counters) and rewrites `state.masks` in place each
+/// iteration, *before* the forward pass — the paper's weight-grouping
+/// stage.
+pub trait PruningAlgorithm {
+    /// Human-readable name (used in experiment CSVs).
+    fn name(&self) -> &'static str;
+
+    /// Regenerate masks for this iteration.
+    fn update_masks(&mut self, state: &mut ModelState, ctx: &PruneContext<'_>) -> Result<()>;
+
+    /// Average sparsity currently induced (0 = dense).
+    fn sparsity(&self, state: &ModelState) -> f32 {
+        1.0 - state.mask_density()
+    }
+}
+
+/// The no-pruning baseline of Fig. 4(a).
+#[derive(Debug, Default)]
+pub struct DensePruner;
+
+impl PruningAlgorithm for DensePruner {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn update_masks(&mut self, state: &mut ModelState, _ctx: &PruneContext<'_>) -> Result<()> {
+        for m in state.masks.iter_mut() {
+            *m = 1.0;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// Minimal manifest for pruning unit tests: two masked layers.
+    pub fn tiny_manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+          "dims": {"obs_dim": 4, "hidden": 8, "n_actions": 3, "n_gate": 2,
+                   "episode_len": 4},
+          "param_size": 160,
+          "mask_size": 160,
+          "masked_layers": [
+            {"name": "w_a", "rows": 8, "cols": 8, "offset": 0},
+            {"name": "w_b", "rows": 8, "cols": 12, "offset": 64}
+          ],
+          "param_layout": [
+            {"name": "w_a", "offset": 0, "shape": [8, 8]},
+            {"name": "w_b", "offset": 64, "shape": [8, 12]}
+          ],
+          "grouping_sizes": {},
+          "agents": [2], "groups": [2, 4], "init_seed": 1,
+          "hyper": {"lr": 0.001, "rms_decay": 0.99, "rms_eps": 1e-05,
+                    "grad_clip": 0.5, "lr_group": 0.01, "value_coef": 0.5,
+                    "entropy_coef": 0.01, "gate_coef": 1.0},
+          "artifacts": {}
+        }"#,
+        )
+        .unwrap()
+    }
+
+    pub fn tiny_state(manifest: &Manifest) -> ModelState {
+        let mut params = vec![0.0f32; manifest.param_size];
+        let mut rng = crate::util::Pcg32::seeded(77);
+        for p in params.iter_mut() {
+            *p = rng.next_normal();
+        }
+        ModelState::new(manifest, params).unwrap()
+    }
+
+    pub fn ctx<'a>(manifest: &'a Manifest, iteration: usize, dmasks: &'a [f32]) -> PruneContext<'a> {
+        PruneContext { manifest, iteration, total_iterations: 100, dmasks }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::*;
+    use super::*;
+
+    #[test]
+    fn dense_pruner_keeps_everything() {
+        let m = tiny_manifest();
+        let mut s = tiny_state(&m);
+        s.masks[3] = 0.0;
+        DensePruner.update_masks(&mut s, &ctx(&m, 0, &[])).unwrap();
+        assert!(s.masks.iter().all(|&x| x == 1.0));
+        assert_eq!(DensePruner.sparsity(&s), 0.0);
+    }
+}

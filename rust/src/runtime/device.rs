@@ -1,0 +1,65 @@
+//! Device-resident tensors — the hot-path optimization (EXPERIMENTS.md
+//! §Perf).
+//!
+//! The trainer calls `policy_fwd` T times per episode and `grad_episode`
+//! once per episode, and five of the six inputs of those artifacts are
+//! the ~600 KiB parameter and mask vectors that DO NOT change within an
+//! iteration.  The naive literal path re-copies them host→literal→device
+//! on every call; uploading them once per iteration as `PjRtBuffer`s and
+//! executing through `execute_b` removes that traffic.
+
+use anyhow::{anyhow, Result};
+
+/// A tensor resident on the PJRT device.
+pub struct DeviceTensor {
+    pub(crate) buf: xla::PjRtBuffer,
+    pub(crate) len: usize,
+    pub(crate) dtype: &'static str,
+}
+
+impl DeviceTensor {
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        self.dtype
+    }
+
+    /// Copy back to the host (rarely needed on the hot path).
+    pub fn to_host(&self) -> Result<Vec<f32>> {
+        let lit = self
+            .buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("device->host: {e:?}"))?;
+        lit.to_vec::<f32>().map_err(|e| anyhow!("device->host: {e:?}"))
+    }
+}
+
+/// Argument to [`crate::runtime::Executable::run_args`]: either a host
+/// tensor (uploaded per call — fine for small inputs) or a cached device
+/// tensor.
+pub enum Arg<'a> {
+    Host(&'a crate::runtime::HostTensor),
+    Device(&'a DeviceTensor),
+}
+
+impl<'a> Arg<'a> {
+    pub(crate) fn len(&self) -> usize {
+        match self {
+            Arg::Host(t) => t.len(),
+            Arg::Device(t) => t.len(),
+        }
+    }
+
+    pub(crate) fn dtype(&self) -> &'static str {
+        match self {
+            Arg::Host(t) => t.dtype(),
+            Arg::Device(t) => t.dtype(),
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! A compiled HLO artifact plus its manifest I/O spec.
+
+use anyhow::{anyhow, Result};
+
+use crate::manifest::ArtifactSpec;
+use crate::runtime::{Arg, DeviceTensor, HostTensor};
+
+/// One compiled artifact.  `run` is the only thing on the training hot
+/// path: it validates shapes against the manifest, packs literals,
+/// executes on the PJRT client and unpacks the output tuple.
+pub struct Executable {
+    name: String,
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    pub(crate) fn new(
+        name: String,
+        spec: ArtifactSpec,
+        exe: xla::PjRtLoadedExecutable,
+    ) -> Self {
+        Executable { name, spec, exe }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Upload a host tensor to the device as input `index` of this
+    /// artifact (validates against the manifest spec).  The returned
+    /// buffer can be reused across many `run_args` calls — the hot-path
+    /// optimization for the big, iteration-constant params/masks inputs.
+    pub fn upload(&self, index: usize, tensor: &HostTensor) -> Result<DeviceTensor> {
+        let io = self
+            .spec
+            .inputs
+            .get(index)
+            .ok_or_else(|| anyhow!("{}: no input index {index}", self.name))?;
+        if tensor.len() != io.elements() || tensor.dtype() != io.dtype {
+            return Err(anyhow!(
+                "{}: upload to {:?} expects {} x {}, got {} x {}",
+                self.name,
+                io.name,
+                io.elements(),
+                io.dtype,
+                tensor.len(),
+                tensor.dtype()
+            ));
+        }
+        let client = self.exe.client();
+        let buf = match tensor {
+            HostTensor::F32(v) => client
+                .buffer_from_host_buffer::<f32>(v, &io.shape, None)
+                .map_err(|e| anyhow!("{}: upload {:?}: {e:?}", self.name, io.name))?,
+            HostTensor::I32(v) => client
+                .buffer_from_host_buffer::<i32>(v, &io.shape, None)
+                .map_err(|e| anyhow!("{}: upload {:?}: {e:?}", self.name, io.name))?,
+        };
+        Ok(DeviceTensor { buf, len: tensor.len(), dtype: tensor.dtype() })
+    }
+
+    /// Execute with a mix of host tensors (uploaded per call) and cached
+    /// device tensors.  Semantics identical to [`Self::run`].
+    pub fn run_args(&self, inputs: &[Arg<'_>]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        // upload host args; keep the temporaries alive until execution
+        let mut owned: Vec<DeviceTensor> = Vec::new();
+        let mut bufs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+        for (i, (arg, io)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+            if arg.len() != io.elements() || arg.dtype() != io.dtype {
+                return Err(anyhow!(
+                    "{}: input {:?} expects {} x {}, got {} x {}",
+                    self.name,
+                    io.name,
+                    io.elements(),
+                    io.dtype,
+                    arg.len(),
+                    arg.dtype()
+                ));
+            }
+            match arg {
+                Arg::Host(t) => {
+                    owned.push(self.upload(i, t)?);
+                }
+                Arg::Device(_) => {}
+            }
+        }
+        let mut owned_iter = owned.iter();
+        for arg in inputs {
+            match arg {
+                Arg::Host(_) => bufs.push(&owned_iter.next().unwrap().buf),
+                Arg::Device(d) => bufs.push(&d.buf),
+            }
+        }
+
+        let result = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&bufs)
+            .map_err(|e| anyhow!("{}: execute_b failed: {e:?}", self.name))?;
+        self.unpack(&result[0][0])
+    }
+
+    /// Execute with host tensors in manifest input order; returns host
+    /// tensors in manifest output order.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (tensor, io) in inputs.iter().zip(&self.spec.inputs) {
+            if tensor.len() != io.elements() {
+                return Err(anyhow!(
+                    "{}: input {:?} expects {} elements ({:?}), got {}",
+                    self.name,
+                    io.name,
+                    io.elements(),
+                    io.shape,
+                    tensor.len()
+                ));
+            }
+            if tensor.dtype() != io.dtype {
+                return Err(anyhow!(
+                    "{}: input {:?} expects dtype {}, got {}",
+                    self.name,
+                    io.name,
+                    io.dtype,
+                    tensor.dtype()
+                ));
+            }
+            literals.push(tensor.to_literal(&io.shape)?);
+        }
+
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("{}: execute failed: {e:?}", self.name))?;
+        self.unpack(&result[0][0])
+    }
+
+    /// Fetch + untuple + validate the output buffer.
+    fn unpack(&self, out: &xla::PjRtBuffer) -> Result<Vec<HostTensor>> {
+        let tuple = out
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{}: fetching result: {e:?}", self.name))?;
+        // aot.py lowers with return_tuple=True: always a tuple, even for
+        // single-output artifacts.
+        let elements = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("{}: untupling result: {e:?}", self.name))?;
+        if elements.len() != self.spec.outputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} outputs, got {}",
+                self.name,
+                self.spec.outputs.len(),
+                elements.len()
+            ));
+        }
+
+        let mut outputs = Vec::with_capacity(elements.len());
+        for (lit, io) in elements.into_iter().zip(&self.spec.outputs) {
+            let t = match io.dtype.as_str() {
+                "f32" => HostTensor::F32(
+                    lit.to_vec::<f32>()
+                        .map_err(|e| anyhow!("{}: output {:?}: {e:?}", self.name, io.name))?,
+                ),
+                "i32" => HostTensor::I32(
+                    lit.to_vec::<i32>()
+                        .map_err(|e| anyhow!("{}: output {:?}: {e:?}", self.name, io.name))?,
+                ),
+                other => return Err(anyhow!("{}: unsupported dtype {other}", self.name)),
+            };
+            if t.len() != io.elements() {
+                return Err(anyhow!(
+                    "{}: output {:?} expected {} elements, got {}",
+                    self.name,
+                    io.name,
+                    io.elements(),
+                    t.len()
+                ));
+            }
+            outputs.push(t);
+        }
+        Ok(outputs)
+    }
+}

@@ -1,0 +1,78 @@
+//! Layer-3 runtime: load and execute the AOT-compiled HLO artifacts.
+//!
+//! The Python compile path (`make artifacts`) lowers the JAX/Pallas model
+//! to HLO *text*; this module is everything the coordinator needs to run
+//! it: a PJRT CPU client, an executable cache keyed by artifact name, and
+//! typed host tensors for the FFI boundary.  After artifacts are built the
+//! binary is self-contained — Python is never on the request path.
+
+mod device;
+mod executable;
+mod tensor;
+
+pub use device::{Arg, DeviceTensor};
+pub use executable::Executable;
+pub use tensor::HostTensor;
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::manifest::Manifest;
+
+/// PJRT client + compiled-executable cache.
+///
+/// Compilation happens once per artifact per process; the hot path only
+/// calls [`Executable::run`].
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, Arc<Executable>>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime over an artifacts directory.
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client, manifest, cache: HashMap::new() })
+    }
+
+    /// Convenience: load the manifest from the default artifacts dir.
+    pub fn from_default_artifacts() -> Result<Self> {
+        Self::new(Manifest::load(Manifest::default_dir())?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling and caching on first use) an executable by artifact
+    /// name, e.g. `"policy_fwd_a4"`.
+    pub fn load(&mut self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.cache.get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let path = self.manifest.artifact_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        let exe = Arc::new(Executable::new(name.to_string(), spec, exe));
+        self.cache.insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}

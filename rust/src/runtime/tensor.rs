@@ -1,0 +1,103 @@
+//! Host-side tensors crossing the PJRT boundary.
+//!
+//! All artifact I/O is flat vectors of f32 or i32 with shapes recorded in
+//! the manifest; `HostTensor` is the minimal typed wrapper that keeps the
+//! coordinator honest about dtypes without a full ndarray dependency.
+
+use anyhow::{anyhow, Result};
+
+/// A host buffer destined for (or produced by) an HLO executable.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            HostTensor::F32(_) => "f32",
+            HostTensor::I32(_) => "i32",
+        }
+    }
+
+    /// Borrow as f32, erroring on dtype mismatch.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            other => Err(anyhow!("expected f32 tensor, got {}", other.dtype())),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            other => Err(anyhow!("expected f32 tensor, got {}", other.dtype())),
+        }
+    }
+
+    /// Scalar convenience (shape-() outputs such as losses).
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            return Err(anyhow!("expected scalar, got {} elements", v.len()));
+        }
+        Ok(v[0])
+    }
+
+    /// Build the xla literal for this tensor with the given shape.
+    pub(crate) fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32(v) => xla::Literal::vec1(v),
+            HostTensor::I32(v) => xla::Literal::vec1(v),
+        };
+        if dims.len() == 1 && dims[0] as usize == self.len() {
+            return Ok(lit); // already the right rank-1 shape
+        }
+        lit.reshape(&dims)
+            .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))
+    }
+}
+
+impl From<Vec<f32>> for HostTensor {
+    fn from(v: Vec<f32>) -> Self {
+        HostTensor::F32(v)
+    }
+}
+
+impl From<Vec<i32>> for HostTensor {
+    fn from(v: Vec<i32>) -> Self {
+        HostTensor::I32(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_guards() {
+        let t = HostTensor::I32(vec![1, 2]);
+        assert!(t.as_f32().is_err());
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.dtype(), "i32");
+    }
+
+    #[test]
+    fn scalar_extraction() {
+        assert_eq!(HostTensor::F32(vec![3.5]).scalar_f32().unwrap(), 3.5);
+        assert!(HostTensor::F32(vec![1.0, 2.0]).scalar_f32().is_err());
+    }
+}

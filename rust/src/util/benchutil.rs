@@ -1,0 +1,63 @@
+//! Minimal benchmarking helpers (the offline build has no criterion):
+//! warmup + N timed runs, report min/median/mean.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary of one benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub runs: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "min {:>10.3?}  median {:>10.3?}  mean {:>10.3?}  ({} runs)",
+            self.min, self.median, self.mean, self.runs
+        )
+    }
+}
+
+/// Run `f` `runs` times (after `warmup` untimed runs) and summarise.
+pub fn bench<T>(warmup: usize, runs: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples: Vec<Duration> = (0..runs.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            t0.elapsed()
+        })
+        .collect();
+    samples.sort();
+    let sum: Duration = samples.iter().sum();
+    BenchStats {
+        runs: samples.len(),
+        min: samples[0],
+        median: samples[samples.len() / 2],
+        mean: sum / samples.len() as u32,
+    }
+}
+
+/// Print a benchmark line: `name ... stats [extra]`.
+pub fn report(name: &str, stats: BenchStats, extra: &str) {
+    println!("{name:<44} {stats}  {extra}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_orders() {
+        let s = bench(1, 5, || std::thread::sleep(Duration::from_micros(200)));
+        assert_eq!(s.runs, 5);
+        assert!(s.min <= s.median && s.median <= s.mean * 2);
+        assert!(s.min >= Duration::from_micros(150));
+    }
+}

@@ -1,0 +1,10 @@
+//! Small shared utilities: a deterministic PRNG, statistics helpers, and
+//! a minimal JSON parser (the build environment is offline — no serde).
+
+pub mod benchutil;
+pub mod json;
+mod rng;
+mod stats;
+
+pub use rng::Pcg32;
+pub use stats::{mean, moving_average, stddev};

@@ -1,0 +1,57 @@
+//! Tiny statistics helpers used by metrics and the experiment harnesses.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f32>() / xs.len() as f32
+}
+
+/// Population standard deviation; 0.0 for fewer than two samples.
+pub fn stddev(xs: &[f32]) -> f32 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / xs.len() as f32).sqrt()
+}
+
+/// Trailing moving average with the given window (used for the success-rate
+/// curves of Fig. 4(a)/Fig. 9, which the paper reports per 50 timesteps).
+pub fn moving_average(xs: &[f32], window: usize) -> Vec<f32> {
+    if window == 0 {
+        return xs.to_vec();
+    }
+    xs.iter()
+        .enumerate()
+        .map(|(i, _)| {
+            let lo = i.saturating_sub(window - 1);
+            mean(&xs[lo..=i])
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn stddev_basic() {
+        assert_eq!(stddev(&[2.0, 2.0, 2.0]), 0.0);
+        let s = stddev(&[1.0, 3.0]);
+        assert!((s - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn moving_average_window() {
+        let ma = moving_average(&[1.0, 2.0, 3.0, 4.0], 2);
+        assert_eq!(ma, vec![1.0, 1.5, 2.5, 3.5]);
+    }
+}

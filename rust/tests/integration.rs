@@ -1,0 +1,236 @@
+//! Integration tests over the real AOT artifacts (requires `make
+//! artifacts` to have run — the Makefile's `test` target guarantees it).
+//!
+//! These exercise the full Layer-3 path: manifest → PJRT compile →
+//! execute → trainer loop, plus the OSEL-vs-artifact mask parity check
+//! that ties the Rust encoder to the Pallas kernel.
+
+use learning_group::accel::osel::OselEncoder;
+use learning_group::coordinator::{PrunerChoice, TrainConfig, Trainer};
+use learning_group::manifest::Manifest;
+use learning_group::model::{GroupingState, ModelState};
+use learning_group::pruning::{PruneContext, PruningAlgorithm};
+use learning_group::runtime::{HostTensor, Runtime};
+
+fn runtime() -> Runtime {
+    Runtime::from_default_artifacts().expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_loads_and_is_consistent() {
+    let m = Manifest::load(Manifest::default_dir()).unwrap();
+    assert_eq!(m.dims.hidden, 128);
+    // the paper's 128x512 mask example is literally our LSTM layers
+    let wx = m.masked_layer("w_x").unwrap();
+    assert_eq!((wx.rows, wx.cols), (128, 512));
+    let total: usize = m.masked_layers.iter().map(|l| l.size()).sum();
+    assert_eq!(total, m.mask_size);
+    assert!(m.artifacts.contains_key("apply_update"));
+}
+
+#[test]
+fn policy_fwd_runs_and_is_deterministic() {
+    let mut rt = runtime();
+    let m = rt.manifest().clone();
+    let exe = rt.load("policy_fwd_a3").unwrap();
+    let state = ModelState::from_init_blob(&m).unwrap();
+    let a = 3;
+    let inputs = vec![
+        HostTensor::F32(state.params.clone()),
+        HostTensor::F32(state.masks.clone()),
+        HostTensor::F32(vec![0.25; a * m.dims.obs_dim]),
+        HostTensor::F32(vec![0.0; a * m.dims.hidden]),
+        HostTensor::F32(vec![0.0; a * m.dims.hidden]),
+        HostTensor::F32(vec![1.0; a]),
+    ];
+    let out1 = exe.run(&inputs).unwrap();
+    let out2 = exe.run(&inputs).unwrap();
+    assert_eq!(out1.len(), 5);
+    assert_eq!(out1[0], out2[0], "logits must be deterministic");
+    let logits = out1[0].as_f32().unwrap();
+    assert_eq!(logits.len(), a * m.dims.n_actions);
+    assert!(logits.iter().all(|x| x.is_finite()));
+    // identical observations + zero state => identical per-agent logits
+    let (l0, l1) = (&logits[0..5], &logits[5..10]);
+    for (a, b) in l0.iter().zip(l1) {
+        assert!((a - b).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn policy_fwd_rejects_bad_shapes_and_dtypes() {
+    let mut rt = runtime();
+    let exe = rt.load("policy_fwd_a3").unwrap();
+    // wrong arity
+    assert!(exe.run(&[HostTensor::F32(vec![0.0; 4])]).is_err());
+    // wrong element count
+    let m = rt.manifest().clone();
+    let state = ModelState::from_init_blob(&m).unwrap();
+    let mut inputs = vec![
+        HostTensor::F32(state.params.clone()),
+        HostTensor::F32(state.masks.clone()),
+        HostTensor::F32(vec![0.25; 7]), // bad obs length
+        HostTensor::F32(vec![0.0; 3 * 128]),
+        HostTensor::F32(vec![0.0; 3 * 128]),
+        HostTensor::F32(vec![1.0; 3]),
+    ];
+    assert!(exe.run(&inputs).is_err());
+    // wrong dtype
+    inputs[2] = HostTensor::I32(vec![0; 3 * 6]);
+    assert!(exe.run(&inputs).is_err());
+}
+
+#[test]
+fn osel_mask_matches_pallas_mask_gen_artifact() {
+    // The crown-jewel parity test: the Rust OSEL encoder and the Pallas
+    // index-compare kernel (lowered into mask_gen_g4.hlo.txt) must
+    // produce bit-identical masks from the same grouping matrices.
+    let mut rt = runtime();
+    let m = rt.manifest().clone();
+    let g = 4;
+    let grouping = GroupingState::from_init_blob(&m, g).unwrap();
+
+    let exe = rt.load("mask_gen_g4").unwrap();
+    let outs = exe
+        .run(&[HostTensor::F32(grouping.grouping.clone())])
+        .unwrap();
+    let artifact_masks = outs[0].as_f32().unwrap();
+
+    let enc = OselEncoder::default();
+    for layer in &m.masked_layers {
+        let ig = grouping.ig_indexes(&m, &layer.name).unwrap();
+        let og = grouping.og_indexes(&m, &layer.name).unwrap();
+        let (srm, _) = enc.encode(&ig, &og, g);
+        let rust_mask = OselEncoder::materialize_mask(&srm);
+        let artifact = &artifact_masks[layer.offset..layer.offset + layer.size()];
+        assert_eq!(
+            rust_mask, artifact,
+            "mask mismatch on layer {}",
+            layer.name
+        );
+    }
+}
+
+#[test]
+fn apply_update_zero_grad_is_identity() {
+    let mut rt = runtime();
+    let m = rt.manifest().clone();
+    let exe = rt.load("apply_update").unwrap();
+    let state = ModelState::from_init_blob(&m).unwrap();
+    let outs = exe
+        .run(&[
+            HostTensor::F32(state.params.clone()),
+            HostTensor::F32(vec![0.0; m.param_size]),
+            HostTensor::F32(vec![0.0; m.param_size]),
+        ])
+        .unwrap();
+    assert_eq!(outs[0].as_f32().unwrap(), state.params.as_slice());
+}
+
+#[test]
+fn grad_episode_respects_masks_through_hlo() {
+    let mut rt = runtime();
+    let m = rt.manifest().clone();
+    let exe = rt.load("grad_episode_a3").unwrap();
+    let mut state = ModelState::from_init_blob(&m).unwrap();
+
+    // FLGW masks at G=4 through the Rust pruner
+    let grouping = GroupingState::from_init_blob(&m, 4).unwrap();
+    let mut pruner = learning_group::pruning::FlgwPruner::new(grouping);
+    let ctx = PruneContext { manifest: &m, iteration: 0, total_iterations: 1, dmasks: &[] };
+    pruner.update_masks(&mut state, &ctx).unwrap();
+
+    let (t, a, d) = (m.dims.episode_len, 3usize, m.dims.obs_dim);
+    let outs = exe
+        .run(&[
+            HostTensor::F32(state.params.clone()),
+            HostTensor::F32(state.masks.clone()),
+            HostTensor::F32(vec![0.3; t * a * d]),
+            HostTensor::I32(vec![1; t * a]),
+            HostTensor::F32(vec![1.0; t * a]),
+            HostTensor::F32((0..t).map(|i| 0.1 * i as f32).collect()),
+        ])
+        .unwrap();
+    let dparams = outs[0].as_f32().unwrap();
+    let loss = outs[2].scalar_f32().unwrap();
+    assert!(loss.is_finite());
+    // every masked-out weight gets exactly zero gradient
+    for layer in &m.masked_layers {
+        let pentry = m
+            .param_layout
+            .iter()
+            .find(|e| e.name == layer.name)
+            .unwrap();
+        let wgrad = &dparams[pentry.offset..pentry.offset + pentry.size()];
+        let mask = &state.masks[layer.offset..layer.offset + layer.size()];
+        for (g, mk) in wgrad.iter().zip(mask) {
+            if *mk == 0.0 {
+                assert_eq!(*g, 0.0, "nonzero grad under mask in {}", layer.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn trainer_end_to_end_flgw_few_iterations() {
+    let cfg = TrainConfig {
+        batch: 2,
+        iterations: 3,
+        pruner: PrunerChoice::Flgw(4),
+        seed: 5,
+        log_every: 0,
+        ..TrainConfig::default().with_agents(3)
+    };
+    let mut trainer = Trainer::from_default_artifacts(cfg).unwrap();
+    let params_before = trainer.state.params.clone();
+    let grouping_before = trainer.pruner.as_flgw().unwrap().grouping.grouping.clone();
+    let log = trainer.train().unwrap();
+    assert_eq!(log.len(), 3);
+    for r in &log.records {
+        assert!(r.loss.is_finite());
+        assert!((0.0..=1.0).contains(&r.success_rate));
+        // FLGW at G=4 => ~75% sparsity
+        assert!((r.sparsity - 0.75).abs() < 0.1, "sparsity {}", r.sparsity);
+    }
+    assert_ne!(trainer.state.params, params_before, "params must update");
+    assert_ne!(
+        trainer.pruner.as_flgw().unwrap().grouping.grouping,
+        grouping_before,
+        "grouping matrices must train"
+    );
+}
+
+#[test]
+fn trainer_dense_baseline_runs() {
+    let cfg = TrainConfig {
+        batch: 2,
+        iterations: 2,
+        pruner: PrunerChoice::Dense,
+        seed: 9,
+        log_every: 0,
+        ..TrainConfig::default().with_agents(3)
+    };
+    let mut trainer = Trainer::from_default_artifacts(cfg).unwrap();
+    let log = trainer.train().unwrap();
+    assert_eq!(log.records[0].sparsity, 0.0);
+    assert!(log.records.iter().all(|r| r.loss.is_finite()));
+}
+
+#[test]
+fn rollout_is_reproducible_for_seed() {
+    let cfg = TrainConfig {
+        batch: 1,
+        iterations: 1,
+        pruner: PrunerChoice::Dense,
+        seed: 11,
+        log_every: 0,
+        ..TrainConfig::default().with_agents(3)
+    };
+    let mut t1 = Trainer::from_default_artifacts(cfg.clone()).unwrap();
+    let mut t2 = Trainer::from_default_artifacts(cfg).unwrap();
+    let e1 = t1.rollout(123).unwrap();
+    let e2 = t2.rollout(123).unwrap();
+    assert_eq!(e1.obs, e2.obs);
+    assert_eq!(e1.actions, e2.actions);
+    assert_eq!(e1.rewards, e2.rewards);
+}

@@ -1,0 +1,318 @@
+//! Property-based tests (hand-rolled: the offline registry has no
+//! proptest) — hundreds of randomized cases per invariant, seeded by
+//! Pcg32 so every failure is reproducible from the printed seed.
+//!
+//! Coordinator invariants covered: OSEL encoding correctness and bounds,
+//! routing/allocation conservation, core-model conservation laws,
+//! batching/episode bookkeeping, and state-management round trips.
+
+use learning_group::accel::bitvec::BitVec;
+use learning_group::accel::core::{CoreConfig, LearningGroupCore};
+use learning_group::accel::load_alloc::{balanced_indexes, LoadAllocator, Scheme};
+use learning_group::accel::osel::{BaselineEncoder, OselEncoder};
+use learning_group::env::{discounted_returns, Episode};
+use learning_group::util::json::Json;
+use learning_group::util::Pcg32;
+
+const CASES: usize = 300;
+
+fn rand_indexes(rng: &mut Pcg32, len: usize, g: usize) -> Vec<u16> {
+    (0..len).map(|_| rng.next_below(g as u32) as u16).collect()
+}
+
+#[test]
+fn prop_osel_mask_equals_index_compare() {
+    let mut rng = Pcg32::seeded(0xA11CE);
+    for case in 0..CASES {
+        let g = 1 + rng.next_below(32) as usize;
+        let m = 1 + rng.next_below(64) as usize;
+        let n = 1 + rng.next_below(96) as usize;
+        let ig = rand_indexes(&mut rng, m, g);
+        let og = rand_indexes(&mut rng, n, g);
+        let (srm, stats) = OselEncoder::default().encode(&ig, &og, g);
+        let mask = OselEncoder::materialize_mask(&srm);
+        for i in 0..m {
+            for j in 0..n {
+                let expect = f32::from(ig[i] == og[j]);
+                assert_eq!(mask[i * n + j], expect, "case {case}: ({i},{j})");
+            }
+        }
+        // structural invariants
+        assert!(stats.misses <= g as u64, "case {case}");
+        assert_eq!(stats.hits + stats.misses, m as u64, "case {case}");
+        assert!(srm.occupied() <= g, "case {case}");
+        assert_eq!(srm.index_list().len(), m, "case {case}");
+    }
+}
+
+#[test]
+fn prop_osel_and_baseline_agree_functionally() {
+    let mut rng = Pcg32::seeded(0xB0B);
+    for case in 0..CASES {
+        let g = 1 + rng.next_below(16) as usize;
+        let m = 1 + rng.next_below(48) as usize;
+        let n = 1 + rng.next_below(48) as usize;
+        let ig = rand_indexes(&mut rng, m, g);
+        let og = rand_indexes(&mut rng, n, g);
+        let (a, sa) = OselEncoder::default().encode(&ig, &og, g);
+        let (b, sb) = BaselineEncoder::default().encode(&ig, &og, g);
+        assert_eq!(
+            OselEncoder::materialize_mask(&a),
+            OselEncoder::materialize_mask(&b),
+            "case {case}"
+        );
+        // OSEL never does more work than the baseline
+        assert!(sa.total_cycles() <= sb.total_cycles(), "case {case}");
+    }
+}
+
+#[test]
+fn prop_transposed_encoding_is_transpose() {
+    let mut rng = Pcg32::seeded(0x7A);
+    for case in 0..CASES / 3 {
+        let g = 1 + rng.next_below(8) as usize;
+        let m = 1 + rng.next_below(32) as usize;
+        let n = 1 + rng.next_below(32) as usize;
+        let ig = rand_indexes(&mut rng, m, g);
+        let og = rand_indexes(&mut rng, n, g);
+        let enc = OselEncoder::default();
+        let fwd = OselEncoder::materialize_mask(&enc.encode(&ig, &og, g).0);
+        let t = OselEncoder::materialize_mask(&enc.encode_transposed(&ig, &og, g).0);
+        for i in 0..m {
+            for j in 0..n {
+                assert_eq!(fwd[i * n + j], t[j * m + i], "case {case}: ({i},{j})");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_allocation_conserves_rows_and_workload() {
+    let mut rng = Pcg32::seeded(0xC0DE);
+    for case in 0..CASES {
+        let cores = 1 + rng.next_below(8) as usize;
+        let rows = rng.next_below(256) as usize;
+        let wl: Vec<u32> = (0..rows).map(|_| rng.next_below(600)).collect();
+        let total: u64 = wl.iter().map(|&w| w as u64).sum();
+        let la = LoadAllocator::new(cores);
+        for alloc in [la.row_based(&wl), la.threshold_based(&wl)] {
+            assert_eq!(alloc.per_core.len(), cores, "case {case}");
+            assert_eq!(alloc.total_workload(), total, "case {case}");
+            let mut seen = vec![false; rows];
+            for a in &alloc.per_core {
+                for &r in &a.rows {
+                    assert!(!seen[r], "case {case}: row {r} duplicated");
+                    seen[r] = true;
+                }
+                // per-core workload sums its rows
+                let s: u64 = a.rows.iter().map(|&r| wl[r] as u64).sum();
+                assert_eq!(s, a.workload, "case {case}");
+            }
+            assert!(seen.iter().all(|&x| x), "case {case}: rows dropped");
+        }
+    }
+}
+
+#[test]
+fn prop_row_based_row_counts_differ_by_at_most_one() {
+    let mut rng = Pcg32::seeded(0xFACE);
+    for _ in 0..CASES {
+        let cores = 1 + rng.next_below(6) as usize;
+        let rows = rng.next_below(200) as usize;
+        let wl: Vec<u32> = (0..rows).map(|_| rng.next_below(100)).collect();
+        let alloc = LoadAllocator::new(cores).row_based(&wl);
+        let counts: Vec<usize> = alloc.per_core.iter().map(|a| a.rows.len()).collect();
+        let (mi, ma) = (
+            counts.iter().min().unwrap(),
+            counts.iter().max().unwrap(),
+        );
+        assert!(ma - mi <= 1, "{counts:?}");
+    }
+}
+
+#[test]
+fn prop_core_model_conservation() {
+    let mut rng = Pcg32::seeded(0xFEED);
+    for case in 0..CASES {
+        let n_vpus = 1 + rng.next_below(512) as usize;
+        let issue = 1 + rng.next_below(32) as usize;
+        let core = LearningGroupCore::new(CoreConfig { n_vpus, issue_width: issue });
+        let rows = rng.next_below(64) as usize;
+        let wl: Vec<u32> = (0..rows).map(|_| rng.next_below(1000)).collect();
+        let total: u64 = wl.iter().map(|&w| w as u64).sum();
+        let s = core.process_sparse(&wl);
+        assert_eq!(s.macs, total, "case {case}");
+        // capacity lower bound and issue-width upper bound on cycles
+        assert!(s.cycles >= total.div_ceil(n_vpus as u64), "case {case}");
+        let nonzero_rows = wl.iter().filter(|&&w| w > 0).count() as u64;
+        assert!(
+            s.cycles <= total.div_ceil(n_vpus as u64) + nonzero_rows.div_ceil(issue as u64) + 1,
+            "case {case}: cycles {} total {total} rows {nonzero_rows}",
+            s.cycles
+        );
+        assert!(s.utilization() <= 1.0 + 1e-9, "case {case}");
+    }
+}
+
+#[test]
+fn prop_balanced_indexes_are_balanced_at_zero_jitter() {
+    let mut rng = Pcg32::seeded(0xBA1);
+    for _ in 0..CASES {
+        let g = 1 + rng.next_below(16) as usize;
+        let len = (g + rng.next_below(300) as usize) / g * g; // multiple of g
+        if len == 0 {
+            continue;
+        }
+        let idx = balanced_indexes(len, g, 0.0, &mut rng);
+        let mut counts = vec![0usize; g];
+        for &i in &idx {
+            counts[i as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == len / g), "{counts:?}");
+    }
+}
+
+#[test]
+fn prop_bitvec_ones_roundtrip() {
+    let mut rng = Pcg32::seeded(0xB17);
+    for _ in 0..CASES {
+        let len = 1 + rng.next_below(700) as usize;
+        let mut bv = BitVec::zeros(len);
+        let mut expect = Vec::new();
+        for i in 0..len {
+            if rng.next_f32() < 0.3 {
+                bv.set(i, true);
+                expect.push(i as u32);
+            }
+        }
+        assert_eq!(bv.ones(), expect);
+        assert_eq!(bv.count_ones(), expect.len());
+    }
+}
+
+#[test]
+fn prop_discounted_returns_recursion() {
+    let mut rng = Pcg32::seeded(0xD15C);
+    for _ in 0..CASES {
+        let t = 1 + rng.next_below(64) as usize;
+        let gamma = rng.next_f32();
+        let rewards: Vec<f32> = (0..t).map(|_| rng.next_normal()).collect();
+        let ret = discounted_returns(&rewards, gamma);
+        for i in 0..t - 1 {
+            let expect = rewards[i] + gamma * ret[i + 1];
+            assert!((ret[i] - expect).abs() < 1e-4, "i={i}: {} vs {expect}", ret[i]);
+        }
+        assert_eq!(ret[t - 1], rewards[t - 1]);
+    }
+}
+
+#[test]
+fn prop_episode_padding_invariants() {
+    let mut rng = Pcg32::seeded(0xE9);
+    for _ in 0..CASES {
+        let a = 1 + rng.next_below(10) as usize;
+        let d = 1 + rng.next_below(8) as usize;
+        let t_max = 1 + rng.next_below(30) as usize;
+        let steps = rng.next_below(t_max as u32 + 1) as usize;
+        let mut ep = Episode::with_capacity(t_max, a, d);
+        for _ in 0..steps {
+            let obs: Vec<f32> = (0..a * d).map(|_| rng.next_f32()).collect();
+            let actions: Vec<usize> = (0..a).map(|_| rng.next_below(5) as usize).collect();
+            let gates: Vec<f32> = (0..a).map(|_| f32::from(rng.next_f32() < 0.5)).collect();
+            ep.push(&obs, &actions, &gates, rng.next_normal());
+        }
+        let reward_before = ep.total_reward();
+        ep.pad_to(t_max, 4);
+        assert_eq!(ep.len(), t_max);
+        assert_eq!(ep.obs.len(), t_max * a * d);
+        assert_eq!(ep.actions.len(), t_max * a);
+        assert_eq!(ep.gates.len(), t_max * a);
+        // padding adds no reward
+        assert!((ep.total_reward() - reward_before).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn prop_json_parser_never_panics_on_noise() {
+    let mut rng = Pcg32::seeded(0x15);
+    let alphabet: Vec<char> = r#"{}[]",:0123456789.eE+-truefalsnl "#.chars().collect();
+    for _ in 0..CASES * 3 {
+        let len = rng.next_below(60) as usize;
+        let s: String = (0..len)
+            .map(|_| alphabet[rng.next_below(alphabet.len() as u32) as usize])
+            .collect();
+        let _ = Json::parse(&s); // must not panic; Result either way
+    }
+}
+
+#[test]
+fn prop_json_parses_generated_documents() {
+    // generate random well-formed JSON and check it parses
+    fn gen(rng: &mut Pcg32, depth: usize) -> (String, usize) {
+        if depth == 0 || rng.next_f32() < 0.4 {
+            match rng.next_below(4) {
+                0 => (format!("{}", rng.next_below(10_000)), 0),
+                1 => (format!("{:.3}", rng.next_normal()), 0),
+                2 => ("true".into(), 0),
+                _ => (format!("\"s{}\"", rng.next_below(100)), 0),
+            }
+        } else if rng.next_f32() < 0.5 {
+            let n = rng.next_below(4) as usize;
+            let items: Vec<String> =
+                (0..n).map(|_| gen(rng, depth - 1).0).collect();
+            (format!("[{}]", items.join(",")), n)
+        } else {
+            let n = rng.next_below(4) as usize;
+            let items: Vec<String> = (0..n)
+                .map(|i| format!("\"k{i}\":{}", gen(rng, depth - 1).0))
+                .collect();
+            (format!("{{{}}}", items.join(",")), n)
+        }
+    }
+    let mut rng = Pcg32::seeded(0x900D);
+    for case in 0..CASES {
+        let (doc, _) = gen(&mut rng, 3);
+        assert!(Json::parse(&doc).is_ok(), "case {case}: {doc}");
+    }
+}
+
+#[test]
+fn prop_threshold_scheme_contiguous_assignment() {
+    // threshold-based assigns contiguous row ranges (hardware streams
+    // rows in order)
+    let mut rng = Pcg32::seeded(0x7123);
+    for _ in 0..CASES {
+        let cores = 1 + rng.next_below(5) as usize;
+        let rows = rng.next_below(100) as usize;
+        let wl: Vec<u32> = (0..rows).map(|_| rng.next_below(50)).collect();
+        let alloc = LoadAllocator::new(cores).threshold_based(&wl);
+        let mut expected = 0usize;
+        for a in &alloc.per_core {
+            for &r in &a.rows {
+                assert_eq!(r, expected);
+                expected += 1;
+            }
+        }
+        assert_eq!(expected, rows);
+    }
+}
+
+#[test]
+fn prop_scheme_enum_dispatch_matches_direct_calls() {
+    let mut rng = Pcg32::seeded(0x5EAF);
+    for _ in 0..CASES / 3 {
+        let g = 2 + rng.next_below(8) as usize;
+        let ig = rand_indexes(&mut rng, 32, g);
+        let og = rand_indexes(&mut rng, 64, g);
+        let (srm, _) = OselEncoder::default().encode(&ig, &og, g);
+        let la = LoadAllocator::new(3);
+        assert_eq!(
+            la.allocate(&srm, Scheme::RowBased).workloads(),
+            la.row_based(&srm.workloads()).workloads()
+        );
+        assert_eq!(
+            la.allocate(&srm, Scheme::ThresholdBased).workloads(),
+            la.threshold_based(&srm.workloads()).workloads()
+        );
+    }
+}
