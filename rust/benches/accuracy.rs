@@ -9,7 +9,7 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(60);
-    let opt = AccuracyOptions { iterations: iters, batch: 4, seed: 7, seeds: 2 };
+    let opt = AccuracyOptions { iterations: iters, ..AccuracyOptions::default() };
     let t0 = std::time::Instant::now();
     match fig4a_pruning_accuracy(opt) {
         Ok(t) => println!("{t}"),

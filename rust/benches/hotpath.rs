@@ -23,7 +23,7 @@ fn main() {
         }
     };
     let m = rt.manifest().clone();
-    let state = ModelState::from_init_blob(&m).unwrap();
+    let state = ModelState::init(&m).unwrap();
 
     // --- policy_fwd latency (the action-path latency of the paper's
     // real-time constraint: < 30 ms per action)

@@ -1,6 +1,6 @@
 //! Training configuration (CLI-facing; defaults follow the paper §IV-A).
 
-use crate::env::PredatorPreyConfig;
+use crate::env::EnvConfig;
 
 /// Which pruning algorithm to run (Fig. 4(a) candidates).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -57,8 +57,13 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Discount factor for returns.
     pub gamma: f32,
-    /// Environment parameters.
-    pub env: PredatorPreyConfig,
+    /// Environment scenario and parameters.
+    pub env: EnvConfig,
+    /// Parallel rollout workers collecting the minibatch (1 =
+    /// sequential).  Per-episode seeds and RNG streams depend only on
+    /// the episode index, so any worker count produces identical
+    /// metrics for a fixed seed.
+    pub rollouts: usize,
     /// Print metrics every N iterations (0 = silent).
     pub log_every: usize,
 }
@@ -73,16 +78,24 @@ impl Default for TrainConfig {
             pruner: PrunerChoice::Flgw(4),
             seed: 1,
             gamma: 1.0,
-            env: PredatorPreyConfig::with_agents(agents),
+            env: EnvConfig::default().with_agents(agents),
+            rollouts: 1,
             log_every: 10,
         }
     }
 }
 
 impl TrainConfig {
+    /// Set the agent count on both the trainer and the environment.
     pub fn with_agents(mut self, agents: usize) -> Self {
         self.agents = agents;
-        self.env = PredatorPreyConfig::with_agents(agents);
+        self.env = self.env.with_agents(agents);
+        self
+    }
+
+    /// Swap the environment scenario, keeping the agent count.
+    pub fn with_env(mut self, env: EnvConfig) -> Self {
+        self.env = env.with_agents(self.agents);
         self
     }
 }
@@ -114,6 +127,15 @@ mod tests {
     #[test]
     fn with_agents_updates_env() {
         let c = TrainConfig::default().with_agents(8);
-        assert_eq!(c.env.n_agents, 8);
+        assert_eq!(c.env.n_agents(), 8);
+    }
+
+    #[test]
+    fn with_env_keeps_agent_count() {
+        let c = TrainConfig::default()
+            .with_agents(5)
+            .with_env(EnvConfig::parse("traffic_junction:easy").unwrap());
+        assert_eq!(c.env.n_agents(), 5);
+        assert_eq!(c.env.name(), "traffic_junction:easy");
     }
 }

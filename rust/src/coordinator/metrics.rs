@@ -11,10 +11,15 @@ use crate::util::{mean, moving_average};
 /// One training iteration's record.
 #[derive(Debug, Clone)]
 pub struct IterationMetrics {
+    /// 0-based iteration index.
     pub iteration: usize,
+    /// Total loss (policy + value - entropy bonus), minibatch mean.
     pub loss: f32,
+    /// REINFORCE policy-loss component.
     pub policy_loss: f32,
+    /// Value-baseline regression component.
     pub value_loss: f32,
+    /// Mean action-distribution entropy.
     pub entropy: f32,
     /// Mean total team reward over the minibatch episodes.
     pub mean_reward: f32,
@@ -33,14 +38,17 @@ pub struct MetricsLog {
 }
 
 impl MetricsLog {
+    /// Append one iteration's record.
     pub fn push(&mut self, m: IterationMetrics) {
         self.records.push(m);
     }
 
+    /// Number of recorded iterations.
     pub fn len(&self) -> usize {
         self.records.len()
     }
 
+    /// True when no iteration has been recorded yet.
     pub fn is_empty(&self) -> bool {
         self.records.is_empty()
     }

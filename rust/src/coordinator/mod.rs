@@ -6,20 +6,27 @@
 //! 1. **Weight grouping** — the pruning algorithm regenerates masks (for
 //!    FLGW: argmax → OSEL encode → sparse row memories → masks).
 //! 2. **Forward propagation** — B episode rollouts through the
-//!    `policy_fwd_a{A}` artifact, with the host environment in the loop.
+//!    `policy_fwd_a{A}` entry point, with the host environment in the
+//!    loop; with [`TrainConfig::rollouts`] > 1 the [`rollout`] driver
+//!    collects them on parallel worker threads, deterministically.
 //! 3. **Backward propagation** — each stored episode replays through
 //!    `grad_episode_a{A}`; gradients accumulate host-side.
 //! 4. **Weight update** — `apply_update` (RMSprop) plus, for FLGW,
 //!    `flgw_update_g{G}` on the grouping matrices.
 //!
-//! Python never runs here: all numerics go through the AOT artifacts.
+//! The trainer is generic over [`crate::env::MultiAgentEnv`]: the
+//! scenario comes from [`TrainConfig::env`] and is only ever touched
+//! through the trait.  All numerics go through the runtime's artifact
+//! entry points (PJRT-compiled HLO or the native backend).
 
 mod config;
 mod metrics;
+pub mod rollout;
 mod scheduler;
 mod trainer;
 
 pub use config::{PrunerChoice, TrainConfig};
 pub use metrics::{IterationMetrics, MetricsLog};
+pub use rollout::{collect_parallel, episode_seed, run_episode};
 pub use scheduler::{Stage, StageTimer};
 pub use trainer::{Pruner, Trainer};

@@ -1,0 +1,194 @@
+//! Episode-rollout driver — sequential and parallel collection of the
+//! forward-stage minibatch.
+//!
+//! The paper's forward stage (§III stage 2) rolls out B episodes with
+//! the current policy; on the host side that work is embarrassingly
+//! parallel across episodes, and rollout throughput dominates wall-clock
+//! on CPU (Wiggins et al. 2023 measure MARL env+inference at >80% of
+//! end-to-end time).  [`collect_parallel`] fans the minibatch out over
+//! `std::thread::scope` workers, each with its own freshly-built
+//! environment, sharing the uploaded params/masks immutably.
+//!
+//! **Determinism.**  Every episode draws its own RNG stream
+//! ([`episode_seed`] -> PCG32) and its own environment reset, both
+//! functions of the episode *index* alone — never of which worker ran
+//! it or in which order.  Workers write results into the episode's slot,
+//! so parallel and sequential collection return bit-identical episode
+//! vectors (asserted by `rust/tests/integration.rs`).
+
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use crate::env::{EnvConfig, Episode, MultiAgentEnv};
+use crate::manifest::Dims;
+use crate::runtime::{Arg, DeviceTensor, Executable, HostTensor};
+use crate::util::Pcg32;
+
+/// RNG stream id for per-episode action/gate sampling.
+const SAMPLE_STREAM: u64 = 0xc0fe;
+
+/// The seed of episode number `index` of a run with master seed
+/// `master` (splitmix-style multiply keeps nearby indices decorrelated).
+pub fn episode_seed(master: u64, index: u64) -> u64 {
+    master.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(index)
+}
+
+/// Roll out one episode with the current policy.
+///
+/// `params_dev` / `masks_dev` are the iteration-constant device uploads;
+/// `env` is reset with `seed`, and action/gate sampling runs on a
+/// per-episode PCG32 stream derived from the same seed, so the episode
+/// is a pure function of (model state, seed).
+///
+/// Actions are always sampled from the policy head's **full** softmax
+/// and the sampled index is what the episode stores — `grad_episode`
+/// computes log-probabilities over the same full head, so the REINFORCE
+/// gradient stays consistent with the sampling distribution.  For
+/// environments whose action space is narrower than the head (Traffic
+/// Junction: 2 of 5), surplus sampled actions are mapped to the
+/// environment's no-op *at the env boundary only*.  Early-terminating
+/// episodes are padded with the no-op to the artifacts' static length.
+pub fn run_episode(
+    exe_fwd: &Executable,
+    params_dev: &DeviceTensor,
+    masks_dev: &DeviceTensor,
+    dims: &Dims,
+    env: &mut dyn MultiAgentEnv,
+    seed: u64,
+) -> Result<Episode> {
+    let a = env.n_agents();
+    let env_actions = env.n_actions().min(dims.n_actions);
+    let noop = env.noop_action();
+    let t_max = dims.episode_len;
+    let mut rng = Pcg32::new(seed, SAMPLE_STREAM);
+    let mut episode = Episode::with_capacity(t_max, a, dims.obs_dim);
+
+    let mut obs = env.reset(seed);
+    let mut h = vec![0.0f32; a * dims.hidden];
+    let mut c = vec![0.0f32; a * dims.hidden];
+    let mut gate_prev = vec![1.0f32; a];
+
+    for _ in 0..t_max {
+        let (obs_t, h_t, c_t, g_t) = (
+            HostTensor::F32(obs.clone()),
+            HostTensor::F32(h.clone()),
+            HostTensor::F32(c.clone()),
+            HostTensor::F32(gate_prev.clone()),
+        );
+        let outs = exe_fwd.run_args(&[
+            Arg::Device(params_dev),
+            Arg::Device(masks_dev),
+            Arg::Host(&obs_t),
+            Arg::Host(&h_t),
+            Arg::Host(&c_t),
+            Arg::Host(&g_t),
+        ])?;
+        let logits = outs[0].as_f32()?;
+        let gate_logits = outs[2].as_f32()?;
+
+        let mut actions = Vec::with_capacity(a); // sampled head indices (stored)
+        let mut env_acts = Vec::with_capacity(a); // what the env executes
+        let mut gates = Vec::with_capacity(a);
+        for i in 0..a {
+            let row = &logits[i * dims.n_actions..(i + 1) * dims.n_actions];
+            let sampled = rng.sample_logits(row);
+            actions.push(sampled);
+            env_acts.push(if sampled < env_actions { sampled } else { noop });
+            let gl = &gate_logits[i * dims.n_gate..(i + 1) * dims.n_gate];
+            gates.push(rng.sample_logits(gl) as u8 as f32);
+        }
+
+        let step = env.step(&env_acts);
+        episode.push(&obs, &actions, &gates, step.reward);
+
+        obs = step.obs;
+        h = outs[3].as_f32()?.to_vec();
+        c = outs[4].as_f32()?.to_vec();
+        gate_prev = gates;
+        if step.done {
+            break;
+        }
+    }
+    episode.success = env.is_success();
+    episode.success_frac = env.success_fraction();
+    episode.pad_to(t_max, noop);
+    Ok(episode)
+}
+
+/// Collect `seeds.len()` episodes across up to `workers` scoped threads.
+///
+/// Worker `w` runs episodes `w, w + workers, ...` on its own environment
+/// built from `env_cfg`; results land in index order.  Returns the first
+/// rollout error if any worker failed.  With `workers <= 1` this
+/// degenerates to a sequential loop, and for any worker count the result
+/// is identical to the sequential one (see the module docs).
+pub fn collect_parallel(
+    exe_fwd: &Executable,
+    params_dev: &DeviceTensor,
+    masks_dev: &DeviceTensor,
+    dims: &Dims,
+    env_cfg: &EnvConfig,
+    seeds: &[u64],
+    workers: usize,
+) -> Result<Vec<Episode>> {
+    let n = seeds.len();
+    let workers = workers.clamp(1, n.max(1));
+    let slots: Mutex<Vec<Option<Episode>>> = Mutex::new((0..n).map(|_| None).collect());
+    let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let slots = &slots;
+            let first_err = &first_err;
+            scope.spawn(move || {
+                let mut env = env_cfg.build();
+                let mut i = w;
+                while i < n {
+                    // another worker already failed: stop wasting rollouts
+                    if first_err.lock().expect("rollout error lock").is_some() {
+                        break;
+                    }
+                    match run_episode(exe_fwd, params_dev, masks_dev, dims, env.as_mut(), seeds[i])
+                    {
+                        Ok(ep) => {
+                            slots.lock().expect("rollout slots lock")[i] = Some(ep);
+                        }
+                        Err(e) => {
+                            let mut guard = first_err.lock().expect("rollout error lock");
+                            if guard.is_none() {
+                                *guard = Some(e);
+                            }
+                            break;
+                        }
+                    }
+                    i += workers;
+                }
+            });
+        }
+    });
+
+    if let Some(e) = first_err.into_inner().expect("rollout error lock") {
+        return Err(e);
+    }
+    slots
+        .into_inner()
+        .expect("rollout slots lock")
+        .into_iter()
+        .map(|slot| slot.ok_or_else(|| anyhow!("rollout worker dropped an episode")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn episode_seeds_are_index_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for idx in 0..1000u64 {
+            assert!(seen.insert(episode_seed(1, idx)));
+        }
+        assert_ne!(episode_seed(1, 0), episode_seed(2, 0));
+    }
+}

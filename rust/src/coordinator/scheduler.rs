@@ -16,6 +16,7 @@ pub enum Stage {
     WeightUpdate,
 }
 
+/// The stages in pipeline order (iteration order of Fig. 12's bars).
 pub const ALL_STAGES: [Stage; 4] = [
     Stage::WeightGrouping,
     Stage::Forward,
@@ -24,6 +25,7 @@ pub const ALL_STAGES: [Stage; 4] = [
 ];
 
 impl Stage {
+    /// Stable snake_case stage name (CSV/report key).
     pub fn name(&self) -> &'static str {
         match self {
             Stage::WeightGrouping => "weight_grouping",
@@ -50,6 +52,7 @@ fn idx(stage: Stage) -> usize {
 }
 
 impl StageTimer {
+    /// A timer with all stages at zero.
     pub fn new() -> Self {
         StageTimer::default()
     }
@@ -68,10 +71,12 @@ impl StageTimer {
         self.elapsed[idx(stage)] += d;
     }
 
+    /// Accumulated wall time of one stage.
     pub fn elapsed(&self, stage: Stage) -> Duration {
         self.elapsed[idx(stage)]
     }
 
+    /// Accumulated wall time across all four stages.
     pub fn total(&self) -> Duration {
         self.elapsed.iter().sum()
     }

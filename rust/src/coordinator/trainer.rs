@@ -1,5 +1,16 @@
-//! The training driver — end-to-end IC3Net training over the AOT
-//! artifacts, sequenced by the four-stage instruction scheduler.
+//! The training driver — end-to-end IC3Net training over the runtime's
+//! artifact entry points, sequenced by the four-stage instruction
+//! scheduler.
+//!
+//! `Trainer` is generic over the environment: rollouts run against
+//! boxed [`crate::env::MultiAgentEnv`] instances built from
+//! [`TrainConfig::env`], and the trainer never names a concrete
+//! scenario — Predator-Prey and Traffic Junction (and anything else
+//! implementing the trait with the artifacts' `obs_dim`) train
+//! through the identical four-stage loop.  With
+//! [`TrainConfig::rollouts`] > 1 the forward stage collects the
+//! minibatch on parallel worker threads (see
+//! [`crate::coordinator::rollout`]'s determinism contract).
 
 use std::sync::Arc;
 
@@ -7,15 +18,15 @@ use anyhow::{anyhow, Result};
 
 use crate::coordinator::config::{PrunerChoice, TrainConfig};
 use crate::coordinator::metrics::{IterationMetrics, MetricsLog};
+use crate::coordinator::rollout;
 use crate::coordinator::scheduler::{Stage, StageTimer};
-use crate::env::{discounted_returns, Episode, MultiAgentEnv, PredatorPrey};
+use crate::env::{discounted_returns, Episode};
 use crate::model::ModelState;
 use crate::pruning::{
     BlockCirculantPruner, DensePruner, FlgwPruner, GroupSparseTrainingPruner,
     IterativeMagnitudePruner, PruneContext, PruningAlgorithm,
 };
 use crate::runtime::{Arg, DeviceTensor, Executable, HostTensor, Runtime};
-use crate::util::Pcg32;
 
 /// Concrete pruner dispatch (no trait objects: the trainer needs typed
 /// access to FLGW's grouping state for the artifact-driven update).
@@ -28,6 +39,7 @@ pub enum Pruner {
 }
 
 impl Pruner {
+    /// Human-readable pruner name (experiment CSV key).
     pub fn name(&self) -> &'static str {
         match self {
             Pruner::Dense(p) => p.name(),
@@ -48,6 +60,7 @@ impl Pruner {
         }
     }
 
+    /// Typed access to the FLGW pruner, if that is what is running.
     pub fn as_flgw_mut(&mut self) -> Option<&mut FlgwPruner> {
         match self {
             Pruner::Flgw(p) => Some(p),
@@ -55,6 +68,7 @@ impl Pruner {
         }
     }
 
+    /// Immutable twin of [`Pruner::as_flgw_mut`].
     pub fn as_flgw(&self) -> Option<&FlgwPruner> {
         match self {
             Pruner::Flgw(p) => Some(p),
@@ -71,8 +85,6 @@ pub struct Trainer {
     pub pruner: Pruner,
     pub timer: StageTimer,
     runtime: Runtime,
-    env: PredatorPrey,
-    rng: Pcg32,
     exe_fwd: Arc<Executable>,
     exe_grad: Arc<Executable>,
     exe_update: Arc<Executable>,
@@ -82,19 +94,42 @@ pub struct Trainer {
     episodes_done: u64,
     /// Device-resident copies of the iteration-constant big inputs
     /// (params, masks) — refreshed once per iteration instead of being
-    /// re-uploaded on every PJRT call (EXPERIMENTS.md §Perf).
+    /// re-uploaded on every runtime call (EXPERIMENTS.md §Perf).
     params_dev: Option<DeviceTensor>,
     masks_dev: Option<DeviceTensor>,
 }
 
 impl Trainer {
+    /// Build a trainer over an existing runtime.  Validates that the
+    /// configured environment fits the artifacts: same agent count, same
+    /// observation width, and an action space no wider than the policy
+    /// head.
     pub fn new(mut runtime: Runtime, cfg: TrainConfig) -> Result<Self> {
         let manifest = runtime.manifest().clone();
-        if cfg.agents != cfg.env.n_agents {
+        if cfg.agents != cfg.env.n_agents() {
             return Err(anyhow!(
                 "config agents {} != env agents {}",
                 cfg.agents,
-                cfg.env.n_agents
+                cfg.env.n_agents()
+            ));
+        }
+        // Environments are built per use (rollout workers build their
+        // own); this instance only validates the contract up front.
+        let env = cfg.env.build();
+        if env.obs_dim() != manifest.dims.obs_dim {
+            return Err(anyhow!(
+                "env {} obs_dim {} != artifact obs_dim {}",
+                cfg.env.name(),
+                env.obs_dim(),
+                manifest.dims.obs_dim
+            ));
+        }
+        if env.n_actions() > manifest.dims.n_actions {
+            return Err(anyhow!(
+                "env {} has {} actions but the policy head is {} wide",
+                cfg.env.name(),
+                env.n_actions(),
+                manifest.dims.n_actions
             ));
         }
         let exe_fwd = runtime.load(&format!("policy_fwd_a{}", cfg.agents))?;
@@ -105,10 +140,7 @@ impl Trainer {
             PrunerChoice::Dense => (Pruner::Dense(DensePruner), None),
             PrunerChoice::Flgw(g) => {
                 let exe = runtime.load(&format!("flgw_update_g{g}"))?;
-                (
-                    Pruner::Flgw(FlgwPruner::from_init_blob(&manifest, g)?),
-                    Some(exe),
-                )
+                (Pruner::Flgw(FlgwPruner::init(&manifest, g)?), Some(exe))
             }
             PrunerChoice::Iterative(pct) => (
                 Pruner::Iterative(IterativeMagnitudePruner::new(pct as f32 / 100.0)),
@@ -123,9 +155,7 @@ impl Trainer {
             ),
         };
 
-        let state = ModelState::from_init_blob(&manifest)?;
-        let env = PredatorPrey::new(cfg.env.clone());
-        let rng = Pcg32::new(cfg.seed, 0xc0fe);
+        let state = ModelState::init(&manifest)?;
         let mask_size = manifest.mask_size;
         Ok(Trainer {
             cfg,
@@ -133,8 +163,6 @@ impl Trainer {
             pruner,
             timer: StageTimer::new(),
             runtime,
-            env,
-            rng,
             exe_fwd,
             exe_grad,
             exe_update,
@@ -146,11 +174,14 @@ impl Trainer {
         })
     }
 
-    /// Convenience constructor over the default artifacts directory.
+    /// Convenience constructor over the default artifacts directory
+    /// (falls back to the built-in manifest + native backend when no
+    /// artifacts were built).
     pub fn from_default_artifacts(cfg: TrainConfig) -> Result<Self> {
         Self::new(Runtime::from_default_artifacts()?, cfg)
     }
 
+    /// The manifest the runtime was built over.
     pub fn manifest(&self) -> &crate::manifest::Manifest {
         self.runtime.manifest()
     }
@@ -165,70 +196,30 @@ impl Trainer {
         Ok(())
     }
 
-    fn device_state(&mut self) -> Result<(&DeviceTensor, &DeviceTensor)> {
+    fn device_state(&mut self) -> Result<()> {
         if self.params_dev.is_none() || self.masks_dev.is_none() {
             self.refresh_device_state()?;
         }
-        Ok((
-            self.params_dev.as_ref().unwrap(),
-            self.masks_dev.as_ref().unwrap(),
-        ))
+        Ok(())
     }
 
-    /// Roll out one episode with the current policy.
+    /// Roll out one episode with the current policy.  Builds a fresh
+    /// environment from the config — indistinguishable from a
+    /// long-lived one, since the [`crate::env::MultiAgentEnv`] contract
+    /// makes resets pure functions of the seed (this is also what every
+    /// rollout worker does).
     pub fn rollout(&mut self, seed: u64) -> Result<Episode> {
-        let d = self.runtime.manifest().dims.clone();
-        let (a, t_max) = (self.cfg.agents, d.episode_len);
-        let mut episode = Episode::with_capacity(t_max, a, d.obs_dim);
-
-        let mut obs = self.env.reset(seed);
-        let mut h = vec![0.0f32; a * d.hidden];
-        let mut c = vec![0.0f32; a * d.hidden];
-        let mut gate_prev = vec![1.0f32; a];
-
+        let dims = self.runtime.manifest().dims.clone();
         self.device_state()?;
-        for _ in 0..t_max {
-            let (obs_t, h_t, c_t, g_t) = (
-                HostTensor::F32(obs.clone()),
-                HostTensor::F32(h.clone()),
-                HostTensor::F32(c.clone()),
-                HostTensor::F32(gate_prev.clone()),
-            );
-            let outs = self.exe_fwd.run_args(&[
-                Arg::Device(self.params_dev.as_ref().unwrap()),
-                Arg::Device(self.masks_dev.as_ref().unwrap()),
-                Arg::Host(&obs_t),
-                Arg::Host(&h_t),
-                Arg::Host(&c_t),
-                Arg::Host(&g_t),
-            ])?;
-            let logits = outs[0].as_f32()?;
-            let gate_logits = outs[2].as_f32()?;
-
-            let mut actions = Vec::with_capacity(a);
-            let mut gates = Vec::with_capacity(a);
-            for i in 0..a {
-                let l = &logits[i * d.n_actions..(i + 1) * d.n_actions];
-                actions.push(self.rng.sample_logits(l));
-                let gl = &gate_logits[i * d.n_gate..(i + 1) * d.n_gate];
-                gates.push(self.rng.sample_logits(gl) as u8 as f32);
-            }
-
-            let step = self.env.step(&actions);
-            episode.push(&obs, &actions, &gates, step.reward);
-
-            obs = step.obs;
-            h = outs[3].as_f32()?.to_vec();
-            c = outs[4].as_f32()?.to_vec();
-            gate_prev = gates;
-            if step.done {
-                break;
-            }
-        }
-        episode.success = self.env.is_success();
-        episode.success_frac = self.env.success_fraction();
-        episode.pad_to(t_max, d.n_actions - 1); // stay action
-        Ok(episode)
+        let mut env = self.cfg.env.build();
+        rollout::run_episode(
+            &self.exe_fwd,
+            self.params_dev.as_ref().expect("device state refreshed"),
+            self.masks_dev.as_ref().expect("device state refreshed"),
+            &dims,
+            env.as_mut(),
+            seed,
+        )
     }
 
     /// Run the backward artifact for one episode; returns (dparams, loss
@@ -243,8 +234,8 @@ impl Trainer {
             HostTensor::F32(returns),
         );
         let outs = self.exe_grad.run_args(&[
-            Arg::Device(self.params_dev.as_ref().unwrap()),
-            Arg::Device(self.masks_dev.as_ref().unwrap()),
+            Arg::Device(self.params_dev.as_ref().expect("device state refreshed")),
+            Arg::Device(self.masks_dev.as_ref().expect("device state refreshed")),
             Arg::Host(&obs_t),
             Arg::Host(&act_t),
             Arg::Host(&gate_t),
@@ -286,19 +277,26 @@ impl Trainer {
             self.masks_dev = None; // masks changed: re-upload lazily
         }
 
-        // -------- stage 2: forward (B rollouts)
-        let mut episodes = Vec::with_capacity(self.cfg.batch);
-        for b in 0..self.cfg.batch {
-            let seed = self
-                .cfg
-                .seed
-                .wrapping_mul(0x9e3779b97f4a7c15)
-                .wrapping_add(self.episodes_done + b as u64);
-            let t0 = std::time::Instant::now();
-            let ep = self.rollout(seed)?;
-            self.timer.add(Stage::Forward, t0.elapsed());
-            episodes.push(ep);
-        }
+        // -------- stage 2: forward (B rollouts, parallel when asked)
+        let dims = self.runtime.manifest().dims.clone();
+        let seeds: Vec<u64> = (0..self.cfg.batch)
+            .map(|b| rollout::episode_seed(self.cfg.seed, self.episodes_done + b as u64))
+            .collect();
+        self.device_state()?;
+        let t0 = std::time::Instant::now();
+        // One driver for both modes: `collect_parallel` degenerates to a
+        // sequential loop at 1 worker, and its determinism contract makes
+        // the worker count unobservable in the results.
+        let episodes = rollout::collect_parallel(
+            &self.exe_fwd,
+            self.params_dev.as_ref().expect("device state refreshed"),
+            self.masks_dev.as_ref().expect("device state refreshed"),
+            &dims,
+            &self.cfg.env,
+            &seeds,
+            self.cfg.rollouts,
+        )?;
+        self.timer.add(Stage::Forward, t0.elapsed());
         self.episodes_done += self.cfg.batch as u64;
 
         // -------- stage 3: backward (grad accumulation)

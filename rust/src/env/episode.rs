@@ -6,7 +6,9 @@
 /// static T shape is always satisfied).
 #[derive(Debug, Clone)]
 pub struct Episode {
+    /// Number of agents A.
     pub n_agents: usize,
+    /// Observation vector length per agent.
     pub obs_dim: usize,
     /// T * A * obs_dim, row-major.
     pub obs: Vec<f32>,
@@ -24,6 +26,7 @@ pub struct Episode {
 }
 
 impl Episode {
+    /// An empty episode pre-sized for `t` steps of `n_agents` agents.
     pub fn with_capacity(t: usize, n_agents: usize, obs_dim: usize) -> Self {
         Episode {
             n_agents,
@@ -42,6 +45,7 @@ impl Episode {
         self.rewards.len()
     }
 
+    /// True when no step has been recorded.
     pub fn is_empty(&self) -> bool {
         self.rewards.is_empty()
     }
@@ -58,10 +62,11 @@ impl Episode {
         self.rewards.push(reward);
     }
 
-    /// Pad to exactly `t` steps (stay action = n_actions-1, gate 0,
-    /// zero reward, repeated last observation) so the static-T artifact
+    /// Pad to exactly `t` steps (the environment's no-op action —
+    /// Predator-Prey: stay, Traffic Junction: brake — gate 0, zero
+    /// reward, repeated last observation) so the static-T artifact
     /// accepts the buffers.
-    pub fn pad_to(&mut self, t: usize, stay_action: usize) {
+    pub fn pad_to(&mut self, t: usize, noop_action: usize) {
         let a = self.n_agents;
         let d = self.obs_dim;
         while self.len() < t {
@@ -72,7 +77,7 @@ impl Episode {
                 self.obs[last_obs_start..].to_vec()
             };
             self.obs.extend_from_slice(&last);
-            self.actions.extend(std::iter::repeat(stay_action as i32).take(a));
+            self.actions.extend(std::iter::repeat(noop_action as i32).take(a));
             self.gates.extend(std::iter::repeat(0.0).take(a));
             self.rewards.push(0.0);
         }

@@ -1,35 +1,187 @@
 //! Multi-agent RL environments — run on the host CPU, exactly as in the
 //! paper's system split ("the host CPU emulates the reinforcement
 //! learning environment", §III).
+//!
+//! Two scenarios implement the [`MultiAgentEnv`] contract:
+//! [`PredatorPrey`] (the paper's benchmark) and [`TrafficJunction`]
+//! (IC3Net's other benchmark, with a three-level difficulty curriculum).
+//! [`EnvConfig`] is the scenario selector the trainer, CLI and
+//! experiment harnesses share; the trainer itself only ever sees the
+//! trait.
 
 mod episode;
 mod predator_prey;
+mod traffic_junction;
 
 pub use episode::{discounted_returns, Episode};
 pub use predator_prey::{PredatorPrey, PredatorPreyConfig, StepResult};
+pub use traffic_junction::{TjLevel, TrafficJunction, TrafficJunctionConfig};
 
 /// A multi-agent environment with a team (scalar) reward, the contract
 /// IC3Net training needs.
 pub trait MultiAgentEnv {
     /// Observation vector length per agent.
     fn obs_dim(&self) -> usize;
-    /// Number of discrete actions per agent.
+    /// Number of discrete actions per agent.  May be smaller than the
+    /// artifacts' static action-head width; the trainer still samples
+    /// from the full head (keeping the policy gradient consistent with
+    /// the sampling distribution) and maps surplus sampled actions to
+    /// [`MultiAgentEnv::noop_action`] before calling [`MultiAgentEnv::step`].
     fn n_actions(&self) -> usize;
     /// Number of agents.
     fn n_agents(&self) -> usize;
+    /// The do-nothing action, used to pad episodes that terminate before
+    /// the artifacts' static episode length.  Defaults to the last
+    /// action.
+    fn noop_action(&self) -> usize {
+        self.n_actions() - 1
+    }
     /// Reset and return the initial per-agent observations (A * obs_dim,
-    /// row-major).
+    /// row-major).  Resets must be *fully* determined by `seed` — the
+    /// parallel rollout driver relies on a freshly-built environment and
+    /// a long-lived one producing identical episodes from the same seed.
     fn reset(&mut self, seed: u64) -> Vec<f32>;
     /// Apply one joint action; returns (next observations, team reward,
     /// done).
     fn step(&mut self, actions: &[usize]) -> StepResult;
     /// True when the episode's success criterion is currently met
-    /// (Predator-Prey: every predator has found the prey).
+    /// (Predator-Prey: every predator found the prey; Traffic Junction:
+    /// no collision so far).
     fn is_success(&self) -> bool;
     /// Graded success in [0, 1] — the paper measures "the number of
     /// successes in catching prey" as its accuracy, i.e. the fraction of
     /// predators that caught the prey.
     fn success_fraction(&self) -> f32 {
         f32::from(self.is_success())
+    }
+}
+
+/// Scenario selector: which environment to train on, with its
+/// parameters.  This is what [`crate::coordinator::TrainConfig`] carries
+/// and what the parallel rollout driver builds per-worker environments
+/// from.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EnvConfig {
+    /// The paper's Predator-Prey benchmark (§IV-A).
+    PredatorPrey(PredatorPreyConfig),
+    /// IC3Net's Traffic Junction benchmark with a difficulty level.
+    TrafficJunction(TrafficJunctionConfig),
+}
+
+impl EnvConfig {
+    /// Parse a CLI spec: `"predator_prey"`, `"traffic_junction"`
+    /// (medium), or `"traffic_junction:easy|medium|hard"`.
+    pub fn parse(s: &str) -> Option<Self> {
+        let (kind, level) = match s.split_once(':') {
+            Some((k, l)) => (k, Some(l)),
+            None => (s, None),
+        };
+        match kind {
+            "predator_prey" | "pp" => match level {
+                None => Some(EnvConfig::PredatorPrey(PredatorPreyConfig::default())),
+                Some(_) => None, // predator-prey has no difficulty levels
+            },
+            "traffic_junction" | "tj" => {
+                let lv = match level {
+                    None => TjLevel::Medium,
+                    Some(l) => TjLevel::parse(l)?,
+                };
+                Some(EnvConfig::TrafficJunction(TrafficJunctionConfig::new(3, lv)))
+            }
+            _ => None,
+        }
+    }
+
+    /// The CLI-facing name (round-trips through [`EnvConfig::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            EnvConfig::PredatorPrey(_) => "predator_prey".to_string(),
+            EnvConfig::TrafficJunction(c) => format!("traffic_junction:{}", c.level.name()),
+        }
+    }
+
+    /// Number of agents this configuration trains.
+    pub fn n_agents(&self) -> usize {
+        match self {
+            EnvConfig::PredatorPrey(c) => c.n_agents,
+            EnvConfig::TrafficJunction(c) => c.n_agents,
+        }
+    }
+
+    /// Same scenario, different agent count.
+    pub fn with_agents(self, n_agents: usize) -> Self {
+        match self {
+            EnvConfig::PredatorPrey(c) => {
+                EnvConfig::PredatorPrey(PredatorPreyConfig { n_agents, ..c })
+            }
+            EnvConfig::TrafficJunction(c) => EnvConfig::TrafficJunction(c.with_agents(n_agents)),
+        }
+    }
+
+    /// Construct the environment.  Boxed because the trainer and the
+    /// rollout workers are generic over the trait, not the scenario.
+    pub fn build(&self) -> Box<dyn MultiAgentEnv + Send> {
+        match self {
+            EnvConfig::PredatorPrey(c) => Box::new(PredatorPrey::new(*c)),
+            EnvConfig::TrafficJunction(c) => Box::new(TrafficJunction::new(*c)),
+        }
+    }
+}
+
+impl Default for EnvConfig {
+    fn default() -> Self {
+        EnvConfig::PredatorPrey(PredatorPreyConfig::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips() {
+        let cases = [
+            "predator_prey",
+            "traffic_junction:easy",
+            "traffic_junction:medium",
+            "traffic_junction:hard",
+        ];
+        for s in cases {
+            let cfg = EnvConfig::parse(s).unwrap();
+            assert_eq!(cfg.name(), s, "{s}");
+        }
+        assert_eq!(
+            EnvConfig::parse("traffic_junction").unwrap().name(),
+            "traffic_junction:medium"
+        );
+        assert_eq!(EnvConfig::parse("tj:easy").unwrap().name(), "traffic_junction:easy");
+        assert!(EnvConfig::parse("predator_prey:easy").is_none());
+        assert!(EnvConfig::parse("traffic_junction:impossible").is_none());
+        assert!(EnvConfig::parse("atari").is_none());
+    }
+
+    #[test]
+    fn with_agents_updates_both_scenarios() {
+        for s in ["predator_prey", "traffic_junction:hard"] {
+            let cfg = EnvConfig::parse(s).unwrap().with_agents(8);
+            assert_eq!(cfg.n_agents(), 8);
+            let env = cfg.build();
+            assert_eq!(env.n_agents(), 8);
+        }
+    }
+
+    #[test]
+    fn built_envs_satisfy_the_contract() {
+        for s in ["predator_prey", "traffic_junction:easy"] {
+            let cfg = EnvConfig::parse(s).unwrap();
+            let mut env = cfg.build();
+            let obs = env.reset(3);
+            assert_eq!(obs.len(), env.n_agents() * env.obs_dim());
+            assert!(env.noop_action() < env.n_actions());
+            let noop = vec![env.noop_action(); env.n_agents()];
+            let r = env.step(&noop);
+            assert_eq!(r.obs.len(), obs.len());
+            assert!((0.0..=1.0).contains(&env.success_fraction()));
+        }
     }
 }

@@ -31,9 +31,12 @@ pub struct StepResult {
     pub done: bool,
 }
 
-#[derive(Debug, Clone)]
+/// Predator-Prey parameters (defaults: IC3Net's 5x5 task, vision 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PredatorPreyConfig {
+    /// Number of predators (= agents).
     pub n_agents: usize,
+    /// Grid side length.
     pub grid: usize,
     /// Chebyshev vision radius within which the prey is observed.
     pub vision: usize,
@@ -49,11 +52,13 @@ impl Default for PredatorPreyConfig {
 }
 
 impl PredatorPreyConfig {
+    /// The default task with a different predator count.
     pub fn with_agents(n_agents: usize) -> Self {
         PredatorPreyConfig { n_agents, ..Default::default() }
     }
 }
 
+/// The Predator-Prey environment (host CPU, like every env here).
 #[derive(Debug, Clone)]
 pub struct PredatorPrey {
     cfg: PredatorPreyConfig,
@@ -65,10 +70,15 @@ pub struct PredatorPrey {
     t: usize,
 }
 
+/// Observation vector length per agent (must equal the artifacts'
+/// `obs_dim`).
 pub const OBS_DIM: usize = 6;
+/// Number of discrete actions (up/down/left/right/stay).
 pub const N_ACTIONS: usize = 5;
 
 impl PredatorPrey {
+    /// Build the environment (call [`MultiAgentEnv::reset`] before
+    /// stepping).
     pub fn new(cfg: PredatorPreyConfig) -> Self {
         let n = cfg.n_agents;
         PredatorPrey {
@@ -81,6 +91,7 @@ impl PredatorPrey {
         }
     }
 
+    /// The configuration this environment was built with.
     pub fn config(&self) -> &PredatorPreyConfig {
         &self.cfg
     }

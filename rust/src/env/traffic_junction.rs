@@ -1,0 +1,505 @@
+//! Traffic Junction — IC3Net's second benchmark (Singh et al. 2018).
+//!
+//! Cars enter one-way routes that cross at a junction; each step a car
+//! either *gas*es (advance one cell along its route) or *brake*s (hold
+//! position).  Two cars on the same cell collide; the team is penalised
+//! per colliding car plus a small time penalty per active car, so the
+//! policy must learn to brake — ideally gated by communication — when
+//! cross traffic approaches the junction.  Success is a collision-free
+//! episode, the metric IC3Net reports.
+//!
+//! The paper (§IV-A) evaluates only Predator-Prey; this scenario is the
+//! ROADMAP's scenario-diversity item, implemented against the same
+//! [`MultiAgentEnv`] contract so the trainer, artifacts and accelerator
+//! model are reused unchanged (same `obs_dim`, fewer actions).
+//!
+//! Observation (6 floats, matching the artifacts' static `obs_dim`):
+//!   `[x/dim, y/dim, route progress, next-cell-occupied, active, t/T]`
+//! Actions: 0 gas, 1 brake (also the no-op used for episode padding).
+//!
+//! Difficulty follows IC3Net's curriculum idea as three levels — easy
+//! (two crossing one-way roads), medium and hard (four roads, four
+//! junctions, longer routes) — selected as
+//! `traffic_junction:easy|medium|hard` on the CLI.  Resets are fully
+//! deterministic per seed: route assignment and staggered entry times
+//! are drawn from a seeded PCG32 stream, and stepping uses no
+//! randomness, which is what makes parallel and sequential rollout
+//! collection bit-identical.
+
+use crate::env::{MultiAgentEnv, StepResult};
+use crate::util::Pcg32;
+
+/// Action index: advance one cell along the route.
+pub const ACTION_GAS: usize = 0;
+/// Action index: hold position (also the padding no-op).
+pub const ACTION_BRAKE: usize = 1;
+/// Observation vector length per agent (must equal the artifacts'
+/// `obs_dim`).
+pub const OBS_DIM: usize = 6;
+
+/// Curriculum difficulty level: grid size, road count and entry spread.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TjLevel {
+    /// 6x6 grid, two crossing one-way roads, one junction.
+    Easy,
+    /// 8x8 grid, four one-way roads, four junctions.
+    Medium,
+    /// 12x12 grid, four one-way roads, four junctions, longer routes.
+    Hard,
+}
+
+impl TjLevel {
+    /// Parse `"easy"` / `"medium"` / `"hard"`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "easy" => Some(TjLevel::Easy),
+            "medium" => Some(TjLevel::Medium),
+            "hard" => Some(TjLevel::Hard),
+            _ => None,
+        }
+    }
+
+    /// The CLI-facing level name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TjLevel::Easy => "easy",
+            TjLevel::Medium => "medium",
+            TjLevel::Hard => "hard",
+        }
+    }
+}
+
+/// Traffic Junction parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrafficJunctionConfig {
+    /// Number of cars (= agents).
+    pub n_agents: usize,
+    /// Difficulty level the remaining defaults were derived from.
+    pub level: TjLevel,
+    /// Grid side length; every route is `dim` cells long.
+    pub dim: usize,
+    /// Maximum episode length (the coordinator additionally cuts episodes
+    /// at the artifacts' static T).
+    pub max_steps: usize,
+    /// Cars enter at a seeded time drawn uniformly from
+    /// `0..=entry_window`, staggering traffic.
+    pub entry_window: usize,
+    /// Team penalty per colliding car per step (IC3Net uses 10).
+    pub collision_penalty: f32,
+    /// Team penalty per active car per step of its lifetime.
+    pub time_penalty: f32,
+}
+
+impl TrafficJunctionConfig {
+    /// The preset for a difficulty level.
+    pub fn new(n_agents: usize, level: TjLevel) -> Self {
+        let (dim, entry_window) = match level {
+            TjLevel::Easy => (6, 3),
+            TjLevel::Medium => (8, 4),
+            TjLevel::Hard => (12, 6),
+        };
+        TrafficJunctionConfig {
+            n_agents,
+            level,
+            dim,
+            max_steps: 20,
+            entry_window,
+            collision_penalty: 10.0,
+            time_penalty: 0.01,
+        }
+    }
+
+    /// Same level, different car count.
+    pub fn with_agents(mut self, n_agents: usize) -> Self {
+        self.n_agents = n_agents;
+        self
+    }
+}
+
+impl Default for TrafficJunctionConfig {
+    fn default() -> Self {
+        TrafficJunctionConfig::new(3, TjLevel::Medium)
+    }
+}
+
+/// Lifecycle of one car within an episode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum CarState {
+    /// Assigned a route and an entry time, not yet on the grid.
+    Waiting,
+    /// On the grid, moving along its route.
+    Driving,
+    /// Completed its route and left the grid.
+    Done,
+}
+
+#[derive(Debug, Clone)]
+struct Car {
+    /// Index into the route table.
+    route: usize,
+    /// Index of the occupied cell along the route (valid while driving).
+    pos: usize,
+    /// Seeded entry time; the car spawns at the first step `t >= entry_t`
+    /// with a free route start cell.
+    entry_t: usize,
+    state: CarState,
+    /// Steps spent driving (the time-penalty base, IC3Net's tau).
+    steps_active: usize,
+}
+
+/// The Traffic Junction environment (host CPU, like every env here).
+#[derive(Debug, Clone)]
+pub struct TrafficJunction {
+    cfg: TrafficJunctionConfig,
+    /// One-way routes as cell sequences `(x, y)`.
+    routes: Vec<Vec<(i32, i32)>>,
+    rng: Pcg32,
+    cars: Vec<Car>,
+    t: usize,
+    /// Cumulative count of (car, step) collision events this episode.
+    collisions: u64,
+}
+
+/// Build the level's one-way routes over a `dim` x `dim` grid.
+fn build_routes(level: TjLevel, dim: usize) -> Vec<Vec<(i32, i32)>> {
+    let d = dim as i32;
+    let mut routes: Vec<Vec<(i32, i32)>> = Vec::new();
+    match level {
+        TjLevel::Easy => {
+            let mid = d / 2;
+            routes.push((0..d).map(|x| (x, mid)).collect()); // W -> E
+            routes.push((0..d).map(|y| (mid, y)).collect()); // N -> S
+        }
+        TjLevel::Medium | TjLevel::Hard => {
+            let (lo, hi) = (d / 2 - 1, d / 2 + 1);
+            routes.push((0..d).map(|x| (x, lo)).collect()); // W -> E
+            routes.push((0..d).rev().map(|x| (x, hi)).collect()); // E -> W
+            routes.push((0..d).map(|y| (lo, y)).collect()); // N -> S
+            routes.push((0..d).rev().map(|y| (hi, y)).collect()); // S -> N
+        }
+    }
+    routes
+}
+
+impl TrafficJunction {
+    pub fn new(cfg: TrafficJunctionConfig) -> Self {
+        let routes = build_routes(cfg.level, cfg.dim);
+        let n = cfg.n_agents;
+        TrafficJunction {
+            cfg,
+            routes,
+            rng: Pcg32::seeded(0),
+            cars: vec![
+                Car { route: 0, pos: 0, entry_t: 0, state: CarState::Waiting, steps_active: 0 };
+                n
+            ],
+            t: 0,
+            collisions: 0,
+        }
+    }
+
+    pub fn config(&self) -> &TrafficJunctionConfig {
+        &self.cfg
+    }
+
+    /// Total (car, step) collision events so far this episode.
+    pub fn collisions(&self) -> u64 {
+        self.collisions
+    }
+
+    /// The grid cell a driving car occupies.
+    fn cell(&self, car: &Car) -> (i32, i32) {
+        self.routes[car.route][car.pos]
+    }
+
+    /// Spawn every waiting car whose entry time has come, unless its
+    /// route start cell is occupied (spawning never causes a collision).
+    fn spawn_due(&mut self) {
+        for i in 0..self.cars.len() {
+            if self.cars[i].state != CarState::Waiting || self.cars[i].entry_t > self.t {
+                continue;
+            }
+            let start = self.routes[self.cars[i].route][0];
+            let occupied = self
+                .cars
+                .iter()
+                .any(|c| c.state == CarState::Driving && self.routes[c.route][c.pos] == start);
+            if !occupied {
+                self.cars[i].state = CarState::Driving;
+                self.cars[i].pos = 0;
+            }
+        }
+    }
+
+    fn observe(&self) -> Vec<f32> {
+        let dim = self.cfg.dim as f32;
+        let t_norm = self.t as f32 / self.cfg.max_steps as f32;
+        let mut obs = Vec::with_capacity(self.cfg.n_agents * OBS_DIM);
+        for (i, car) in self.cars.iter().enumerate() {
+            match car.state {
+                CarState::Waiting => obs.extend_from_slice(&[0.0, 0.0, 0.0, 0.0, 0.0, t_norm]),
+                CarState::Done => obs.extend_from_slice(&[0.0, 0.0, 1.0, 0.0, 0.0, t_norm]),
+                CarState::Driving => {
+                    let (x, y) = self.cell(car);
+                    let len = self.routes[car.route].len();
+                    let progress = car.pos as f32 / (len - 1).max(1) as f32;
+                    let next_occupied = if car.pos + 1 < len {
+                        let next = self.routes[car.route][car.pos + 1];
+                        let taken = self.cars.iter().enumerate().any(|(j, c)| {
+                            j != i && c.state == CarState::Driving && self.cell(c) == next
+                        });
+                        f32::from(taken)
+                    } else {
+                        0.0
+                    };
+                    obs.push(x as f32 / dim);
+                    obs.push(y as f32 / dim);
+                    obs.push(progress);
+                    obs.push(next_occupied);
+                    obs.push(1.0);
+                    obs.push(t_norm);
+                }
+            }
+        }
+        obs
+    }
+}
+
+impl MultiAgentEnv for TrafficJunction {
+    fn obs_dim(&self) -> usize {
+        OBS_DIM
+    }
+
+    fn n_actions(&self) -> usize {
+        2
+    }
+
+    fn n_agents(&self) -> usize {
+        self.cfg.n_agents
+    }
+
+    fn noop_action(&self) -> usize {
+        ACTION_BRAKE
+    }
+
+    fn reset(&mut self, seed: u64) -> Vec<f32> {
+        self.rng = Pcg32::new(seed, 0x7a3c);
+        let n_routes = self.routes.len() as u32;
+        for car in self.cars.iter_mut() {
+            car.route = self.rng.next_below(n_routes) as usize;
+            car.entry_t = self.rng.next_below(self.cfg.entry_window as u32 + 1) as usize;
+            car.pos = 0;
+            car.state = CarState::Waiting;
+            car.steps_active = 0;
+        }
+        self.t = 0;
+        self.collisions = 0;
+        self.spawn_due();
+        self.observe()
+    }
+
+    fn step(&mut self, actions: &[usize]) -> StepResult {
+        assert_eq!(actions.len(), self.cfg.n_agents, "one action per agent");
+        // 1. move every driving car by its action
+        for (i, &a) in actions.iter().enumerate() {
+            let route_len = self.routes[self.cars[i].route].len();
+            let car = &mut self.cars[i];
+            if car.state != CarState::Driving {
+                continue;
+            }
+            car.steps_active += 1;
+            if a == ACTION_GAS {
+                if car.pos + 1 >= route_len {
+                    car.state = CarState::Done; // left the grid
+                } else {
+                    car.pos += 1;
+                }
+            }
+        }
+        // 2. collisions: every driving car sharing its cell with another
+        let mut colliding = 0usize;
+        for i in 0..self.cars.len() {
+            if self.cars[i].state != CarState::Driving {
+                continue;
+            }
+            let cell_i = self.cell(&self.cars[i]);
+            let clash = self.cars.iter().enumerate().any(|(j, c)| {
+                j != i && c.state == CarState::Driving && self.cell(c) == cell_i
+            });
+            if clash {
+                colliding += 1;
+            }
+        }
+        self.collisions += colliding as u64;
+        // 3. team reward: collision penalty + per-car lifetime penalty
+        let active_time: usize = self
+            .cars
+            .iter()
+            .filter(|c| c.state == CarState::Driving)
+            .map(|c| c.steps_active)
+            .sum();
+        let a = self.cfg.n_agents as f32;
+        let reward = -(self.cfg.time_penalty * active_time as f32
+            + self.cfg.collision_penalty * colliding as f32)
+            / a;
+        // 4. advance time, admit newly-due cars
+        self.t += 1;
+        self.spawn_due();
+        let done = self.t >= self.cfg.max_steps
+            || self.cars.iter().all(|c| c.state == CarState::Done);
+        StepResult { obs: self.observe(), reward, done }
+    }
+
+    fn is_success(&self) -> bool {
+        self.collisions == 0
+    }
+
+    fn success_fraction(&self) -> f32 {
+        if self.t == 0 {
+            return 1.0;
+        }
+        let denom = (self.cfg.n_agents * self.t) as f32;
+        (1.0 - self.collisions as f32 / denom).clamp(0.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env(n: usize, level: TjLevel) -> TrafficJunction {
+        TrafficJunction::new(TrafficJunctionConfig::new(n, level))
+    }
+
+    /// An env whose cars all enter at t = 0 (no staggering).
+    fn eager_env(n: usize, level: TjLevel) -> TrafficJunction {
+        let cfg = TrafficJunctionConfig { entry_window: 0, ..TrafficJunctionConfig::new(n, level) };
+        TrafficJunction::new(cfg)
+    }
+
+    #[test]
+    fn reset_shapes_and_ranges() {
+        for level in [TjLevel::Easy, TjLevel::Medium, TjLevel::Hard] {
+            let mut e = env(4, level);
+            let obs = e.reset(1);
+            assert_eq!(obs.len(), 4 * OBS_DIM);
+            for &x in &obs {
+                assert!((0.0..=1.0).contains(&x), "{x}");
+            }
+        }
+    }
+
+    #[test]
+    fn reset_is_deterministic_per_seed() {
+        let mut e1 = env(8, TjLevel::Medium);
+        let mut e2 = env(8, TjLevel::Medium);
+        assert_eq!(e1.reset(7), e2.reset(7));
+        let assignment = |e: &TrafficJunction| -> Vec<(usize, usize)> {
+            e.cars.iter().map(|c| (c.route, c.entry_t)).collect()
+        };
+        e1.reset(0);
+        let base = assignment(&e1);
+        // some nearby seed must produce a different draw
+        let differs = (1..20).any(|s| {
+            e2.reset(s);
+            assignment(&e2) != base
+        });
+        assert!(differs, "seeds 1..20 all produced the seed-0 assignment");
+    }
+
+    #[test]
+    fn gas_advances_and_brake_holds() {
+        let mut e = eager_env(1, TjLevel::Easy);
+        e.reset(3);
+        assert_eq!(e.cars[0].state, CarState::Driving);
+        assert_eq!(e.cars[0].pos, 0);
+        e.step(&[ACTION_GAS]);
+        assert_eq!(e.cars[0].pos, 1);
+        e.step(&[ACTION_BRAKE]);
+        assert_eq!(e.cars[0].pos, 1);
+    }
+
+    #[test]
+    fn car_completes_route_and_episode_ends() {
+        let mut e = eager_env(1, TjLevel::Easy);
+        e.reset(5);
+        let mut done = false;
+        for _ in 0..e.cfg.dim + 1 {
+            done = e.step(&[ACTION_GAS]).done;
+            if done {
+                break;
+            }
+        }
+        assert!(done);
+        assert_eq!(e.cars[0].state, CarState::Done);
+        assert!(e.is_success(), "a lone car cannot collide");
+    }
+
+    #[test]
+    fn collision_is_detected_and_penalised() {
+        let mut e = eager_env(2, TjLevel::Easy);
+        e.reset(1);
+        // teleport both cars onto the junction cell (routes 0 and 1 cross
+        // at pos = dim/2 on an easy grid)
+        let mid = e.cfg.dim / 2;
+        e.cars[0] = Car { route: 0, pos: mid, entry_t: 0, state: CarState::Driving, steps_active: 0 };
+        e.cars[1] = Car { route: 1, pos: mid, entry_t: 0, state: CarState::Driving, steps_active: 0 };
+        assert_eq!(e.cell(&e.cars[0]), e.cell(&e.cars[1]));
+        let r = e.step(&[ACTION_BRAKE, ACTION_BRAKE]);
+        assert_eq!(e.collisions, 2, "both cars collide");
+        assert!(r.reward < 0.0);
+        assert!(!e.is_success());
+        assert!(e.success_fraction() < 1.0);
+    }
+
+    #[test]
+    fn success_fraction_stays_in_bounds() {
+        for seed in 0..30u64 {
+            let mut e = env(4, TjLevel::Medium);
+            e.reset(seed);
+            for t in 0..e.cfg.max_steps {
+                let acts: Vec<usize> =
+                    (0..4).map(|i| if (t + i) % 2 == 0 { ACTION_GAS } else { ACTION_BRAKE }).collect();
+                let r = e.step(&acts);
+                let f = e.success_fraction();
+                assert!((0.0..=1.0).contains(&f), "seed {seed}: fraction {f}");
+                if r.done {
+                    break;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spawn_is_blocked_while_start_cell_is_occupied() {
+        let mut e = eager_env(2, TjLevel::Easy);
+        e.reset(2);
+        // car 0 parked on route 0's start; car 1 waiting for the same start
+        e.cars[0] = Car { route: 0, pos: 0, entry_t: 0, state: CarState::Driving, steps_active: 0 };
+        e.cars[1] = Car { route: 0, pos: 0, entry_t: 0, state: CarState::Waiting, steps_active: 0 };
+        e.step(&[ACTION_BRAKE, ACTION_BRAKE]);
+        assert_eq!(e.cars[1].state, CarState::Waiting, "blocked spawn must wait");
+        // once car 0 moves on, car 1 enters
+        e.step(&[ACTION_GAS, ACTION_BRAKE]);
+        assert_eq!(e.cars[1].state, CarState::Driving);
+        assert_eq!(e.cars[1].pos, 0);
+    }
+
+    #[test]
+    fn noop_action_is_brake() {
+        let e = env(2, TjLevel::Easy);
+        assert_eq!(e.noop_action(), ACTION_BRAKE);
+        assert_eq!(e.n_actions(), 2);
+        assert_eq!(e.obs_dim(), OBS_DIM);
+    }
+
+    #[test]
+    fn routes_cover_every_level() {
+        assert_eq!(build_routes(TjLevel::Easy, 6).len(), 2);
+        assert_eq!(build_routes(TjLevel::Medium, 8).len(), 4);
+        assert_eq!(build_routes(TjLevel::Hard, 12).len(), 4);
+        for r in build_routes(TjLevel::Hard, 12) {
+            assert_eq!(r.len(), 12);
+        }
+    }
+}

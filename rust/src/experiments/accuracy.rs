@@ -12,6 +12,7 @@ use std::fmt::Write;
 use anyhow::Result;
 
 use crate::coordinator::{PrunerChoice, TrainConfig, Trainer};
+use crate::env::EnvConfig;
 
 /// Options for the accuracy experiments.
 #[derive(Debug, Clone, Copy)]
@@ -22,11 +23,24 @@ pub struct AccuracyOptions {
     /// Seeds to average over (RL training on this scale is noisy; the
     /// paper's curves are smoothed over a 2000-iteration horizon).
     pub seeds: usize,
+    /// Scenario to train (the paper's studies use Predator-Prey; pass
+    /// `traffic_junction:<level>` to reproduce the curves there).
+    pub env: EnvConfig,
+    /// Parallel rollout workers per training run (1 = sequential;
+    /// deterministic either way).
+    pub rollouts: usize,
 }
 
 impl Default for AccuracyOptions {
     fn default() -> Self {
-        AccuracyOptions { iterations: 120, batch: 4, seed: 7, seeds: 2 }
+        AccuracyOptions {
+            iterations: 120,
+            batch: 4,
+            seed: 7,
+            seeds: 2,
+            env: EnvConfig::default(),
+            rollouts: 1,
+        }
     }
 }
 
@@ -39,9 +53,11 @@ fn run(agents: usize, pruner: PrunerChoice, opt: AccuracyOptions) -> Result<(f32
             iterations: opt.iterations,
             pruner,
             seed: opt.seed + 101 * s as u64,
+            rollouts: opt.rollouts,
             log_every: 0,
             ..TrainConfig::default().with_agents(agents)
-        };
+        }
+        .with_env(opt.env);
         let mut trainer = Trainer::from_default_artifacts(cfg)?;
         let log = trainer.train()?;
         acc += log.final_success_rate(0.25);

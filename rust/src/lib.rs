@@ -6,15 +6,19 @@
 //! Layer map (see DESIGN.md):
 //! * **Layer 3 (this crate)** — the coordinator: the paper's system
 //!   contribution.  [`coordinator`] drives the four operational stages
-//!   (weight grouping → forward → backward → weight update); [`accel`]
-//!   is the cycle-level simulator of the FPGA microarchitecture (OSEL
-//!   encoder, sparse row memory, load-allocation unit, VPU cores);
-//!   [`env`] hosts the Predator-Prey environment (the paper runs the RL
-//!   environment on the host CPU); [`pruning`] implements FLGW and the
-//!   baseline pruning algorithms of Fig. 4(a).
+//!   (weight grouping → forward → backward → weight update) over an
+//!   environment-generic trainer with an optional parallel rollout
+//!   driver; [`accel`] is the cycle-level simulator of the FPGA
+//!   microarchitecture (OSEL encoder, sparse row memory, load-allocation
+//!   unit, VPU cores); [`env`] hosts the scenarios — Predator-Prey and
+//!   Traffic Junction — behind the [`env::MultiAgentEnv`] trait (the
+//!   paper runs the RL environment on the host CPU); [`pruning`]
+//!   implements FLGW and the baseline pruning algorithms of Fig. 4(a).
 //! * **Layer 2/1 (build-time Python)** — IC3Net in JAX on Pallas kernels,
-//!   AOT-lowered to HLO text.  [`runtime`] loads and executes those
-//!   artifacts through the PJRT CPU client; Python never runs here.
+//!   AOT-lowered to HLO text.  [`runtime`] executes the model's entry
+//!   points on one of two backends: the pure-Rust native backend
+//!   (default, no artifacts needed) or the PJRT CPU client over the AOT
+//!   artifacts (`--features pjrt`); Python never runs here either way.
 
 pub mod accel;
 pub mod coordinator;

@@ -6,19 +6,29 @@
 //!
 //! ```text
 //! learning-group train [--agents A] [--batch B] [--iterations N]
+//!                      [--env predator_prey|traffic_junction:<level>]
+//!                      [--rollouts R]
 //!                      [--pruner dense|flgw:G|iterative:P|bc:BxF|gst:BxF:P]
 //!                      [--seed S] [--csv PATH]
 //! learning-group roofline            # Fig 1
-//! learning-group accuracy [--iterations N] [--fig9]   # Fig 4(a) / Fig 9
+//! learning-group accuracy [--iterations N] [--env E] [--rollouts R] [--fig9]
+//!                                    # Fig 4(a) / Fig 9
 //! learning-group osel                # Fig 10(a)+(b)
 //! learning-group balance [--iterations N]             # Table I
 //! learning-group perf                # Fig 11 + 12 + 13
 //! learning-group resources           # Fig 8
 //! ```
+//!
+//! `--env` picks the scenario: `predator_prey` (the paper's benchmark)
+//! or `traffic_junction:easy|medium|hard` (IC3Net's other benchmark with
+//! a difficulty curriculum).  `--rollouts R` collects each iteration's
+//! minibatch on R parallel worker threads; metrics are identical to the
+//! sequential run for a fixed seed.
 
 use anyhow::{anyhow, Result};
 
 use learning_group::coordinator::{PrunerChoice, TrainConfig, Trainer};
+use learning_group::env::EnvConfig;
 use learning_group::experiments;
 
 struct Args {
@@ -70,17 +80,31 @@ fn cmd_train(args: &Args) -> Result<()> {
         .unwrap_or_else(|| "flgw:4".to_string());
     let pruner = PrunerChoice::parse(&pruner_s)
         .ok_or_else(|| anyhow!("unknown pruner spec {pruner_s:?}"))?;
+    let env_s = args
+        .flags
+        .get("env")
+        .cloned()
+        .unwrap_or_else(|| "predator_prey".to_string());
+    let env = EnvConfig::parse(&env_s).ok_or_else(|| {
+        anyhow!("unknown env spec {env_s:?} (predator_prey | traffic_junction:<level>)")
+    })?;
     let cfg = TrainConfig {
         batch: args.get("batch", 4)?,
         iterations: args.get("iterations", 200)?,
         pruner,
         seed: args.get("seed", 1)?,
+        rollouts: args.get("rollouts", 1)?,
         log_every: args.get("log-every", 10)?,
         ..TrainConfig::default().with_agents(agents)
-    };
+    }
+    .with_env(env);
     eprintln!(
-        "training IC3Net: agents={} batch={} iterations={} pruner={pruner_s}",
-        cfg.agents, cfg.batch, cfg.iterations
+        "training IC3Net: env={} agents={} batch={} iterations={} rollouts={} pruner={pruner_s}",
+        cfg.env.name(),
+        cfg.agents,
+        cfg.batch,
+        cfg.iterations,
+        cfg.rollouts
     );
     let mut trainer = Trainer::from_default_artifacts(cfg)?;
     let log = trainer.train()?;
@@ -126,11 +150,20 @@ fn main() -> Result<()> {
         }
         "resources" => print!("{}", experiments::fig8_resources()),
         "accuracy" => {
+            let env_s = args
+                .flags
+                .get("env")
+                .cloned()
+                .unwrap_or_else(|| "predator_prey".to_string());
+            let env = EnvConfig::parse(&env_s)
+                .ok_or_else(|| anyhow!("unknown env spec {env_s:?}"))?;
             let opt = experiments::AccuracyOptions {
                 iterations: args.get("iterations", 120)?,
                 batch: args.get("batch", 4)?,
                 seed: args.get("seed", 7)?,
                 seeds: args.get("seeds", 2)?,
+                env,
+                rollouts: args.get("rollouts", 1)?,
             };
             if args.has("fig9") {
                 print!(
@@ -143,7 +176,11 @@ fn main() -> Result<()> {
         }
         "help" | "--help" | "-h" => {
             println!("usage: learning-group <train|roofline|accuracy|osel|balance|perf|resources> [flags]");
-            println!("see the crate docs (rust/src/main.rs) for flags");
+            println!("train flags: --agents A --batch B --iterations N --seed S --csv PATH");
+            println!("             --env predator_prey|traffic_junction:easy|medium|hard");
+            println!("             --rollouts R (parallel episode workers)");
+            println!("             --pruner dense|flgw:G|iterative:P|bc:BxF|gst:BxF:P");
+            println!("see README.md for the full CLI reference and paper-figure mapping");
         }
         other => return Err(anyhow!("unknown command {other:?}; try help")),
     }

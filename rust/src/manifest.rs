@@ -138,6 +138,17 @@ fn io_spec(v: &Json) -> Result<IoSpec> {
     })
 }
 
+/// The layers whose weight matrices are FLGW-masked (`dims.MASKED_LAYERS`).
+const MASKED_LAYER_NAMES: [&str; 4] = ["w_enc", "w_comm", "w_x", "w_h"];
+
+fn f32_spec(name: &str, shape: Vec<usize>) -> IoSpec {
+    IoSpec { name: name.to_string(), shape, dtype: "f32".to_string() }
+}
+
+fn i32_spec(name: &str, shape: Vec<usize>) -> IoSpec {
+    IoSpec { name: name.to_string(), shape, dtype: "i32".to_string() }
+}
+
 impl Manifest {
     /// Parse a manifest from JSON text (dir left empty).
     pub fn parse(text: &str) -> Result<Self> {
@@ -254,6 +265,208 @@ impl Manifest {
         Ok(m)
     }
 
+    /// Load `manifest.json` when the artifacts directory has one, and fall
+    /// back to [`Manifest::builtin`] otherwise.  A present-but-corrupt
+    /// manifest is still an error — silent fallback would mask a broken
+    /// `make artifacts` run.
+    pub fn load_or_builtin(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        if dir.join("manifest.json").is_file() {
+            return Self::load(dir);
+        }
+        let mut m = Self::builtin();
+        m.dir = dir;
+        Ok(m)
+    }
+
+    /// The built-in manifest: the same model layout `python/compile/
+    /// dims.py` defines (IC3Net with H = 128, so the LSTM gate matrices
+    /// are exactly the paper's 128x512 mask example), constructed without
+    /// any artifacts on disk.  This is what the pure-Rust native runtime
+    /// backend runs against when `make artifacts` has not been invoked.
+    pub fn builtin() -> Self {
+        let dims = Dims { obs_dim: 6, hidden: 128, n_actions: 5, n_gate: 2, episode_len: 20 };
+        let h = dims.hidden;
+        // Layer-name -> shape, in flat-buffer order (dims.param_specs).
+        let specs: Vec<(&str, Vec<usize>)> = vec![
+            ("w_enc", vec![dims.obs_dim, h]),
+            ("w_comm", vec![h, h]),
+            ("w_x", vec![h, 4 * h]),
+            ("w_h", vec![h, 4 * h]),
+            ("b_lstm", vec![4 * h]),
+            ("w_pi", vec![h, dims.n_actions]),
+            ("b_pi", vec![dims.n_actions]),
+            ("w_v", vec![h, 1]),
+            ("b_v", vec![1]),
+            ("w_g", vec![h, dims.n_gate]),
+            ("b_g", vec![dims.n_gate]),
+        ];
+        let mut param_layout = Vec::new();
+        let mut off = 0usize;
+        for (name, shape) in &specs {
+            param_layout.push(ParamEntry {
+                name: (*name).to_string(),
+                offset: off,
+                shape: shape.clone(),
+            });
+            off += shape.iter().product::<usize>();
+        }
+        let param_size = off;
+
+        let mut masked_layers = Vec::new();
+        let mut moff = 0usize;
+        for name in MASKED_LAYER_NAMES {
+            let entry = param_layout
+                .iter()
+                .find(|e| e.name == name)
+                .expect("masked layer in param layout");
+            let (rows, cols) = (entry.shape[0], entry.shape[1]);
+            masked_layers.push(MaskedLayer { name: name.to_string(), rows, cols, offset: moff });
+            moff += rows * cols;
+        }
+        let mask_size = moff;
+
+        let groups = vec![2usize, 4, 8, 16];
+        let agents = vec![3usize, 4, 5, 8, 10];
+        let grouping_sizes: BTreeMap<usize, usize> = groups
+            .iter()
+            .map(|&g| {
+                (g, masked_layers.iter().map(|l| l.rows * g + g * l.cols).sum::<usize>())
+            })
+            .collect();
+
+        // Hyper-parameters as in python/compile/model.py (paper §IV-A).
+        let hyper = Hyper {
+            lr: 1e-3,
+            rms_decay: 0.99,
+            rms_eps: 1e-5,
+            grad_clip: 0.5,
+            lr_group: 3e-3,
+            value_coef: 0.5,
+            entropy_coef: 0.01,
+            gate_coef: 1.0,
+        };
+
+        let mut m = Manifest {
+            dims,
+            param_size,
+            mask_size,
+            masked_layers,
+            param_layout,
+            grouping_sizes,
+            agents: agents.clone(),
+            groups: groups.clone(),
+            init_seed: 42,
+            hyper,
+            artifacts: BTreeMap::new(),
+            dir: PathBuf::new(),
+        };
+        let mut artifacts = BTreeMap::new();
+        for &a in &agents {
+            for name in [format!("policy_fwd_a{a}"), format!("grad_episode_a{a}")] {
+                let spec = m.synthesize_artifact(&name).expect("builtin artifact spec");
+                artifacts.insert(name, spec);
+            }
+        }
+        artifacts.insert(
+            "apply_update".to_string(),
+            m.synthesize_artifact("apply_update").expect("builtin artifact spec"),
+        );
+        for &g in &groups {
+            for name in [format!("flgw_update_g{g}"), format!("mask_gen_g{g}")] {
+                let spec = m.synthesize_artifact(&name).expect("builtin artifact spec");
+                artifacts.insert(name, spec);
+            }
+        }
+        m.artifacts = artifacts;
+        m
+    }
+
+    /// Derive the I/O spec of a known artifact name from the model layout
+    /// alone — the schema the Python AOT path would have dumped for it.
+    /// Used by the native runtime backend for names the loaded manifest
+    /// does not tabulate (e.g. `flgw_update_g3`).
+    pub fn synthesize_artifact(&self, name: &str) -> Result<ArtifactSpec> {
+        let d = &self.dims;
+        let (p, mk, t) = (self.param_size, self.mask_size, d.episode_len);
+        let file = format!("{name}.hlo.txt");
+        if name == "apply_update" {
+            return Ok(ArtifactSpec {
+                inputs: vec![
+                    f32_spec("params", vec![p]),
+                    f32_spec("grads", vec![p]),
+                    f32_spec("sq_avg", vec![p]),
+                ],
+                outputs: vec![f32_spec("params2", vec![p]), f32_spec("sq_avg2", vec![p])],
+                file,
+            });
+        }
+        if let Some(a) = name.strip_prefix("policy_fwd_a").and_then(|s| s.parse::<usize>().ok()) {
+            return Ok(ArtifactSpec {
+                inputs: vec![
+                    f32_spec("params", vec![p]),
+                    f32_spec("masks", vec![mk]),
+                    f32_spec("obs", vec![a, d.obs_dim]),
+                    f32_spec("h", vec![a, d.hidden]),
+                    f32_spec("c", vec![a, d.hidden]),
+                    f32_spec("gate_prev", vec![a]),
+                ],
+                outputs: vec![
+                    f32_spec("logits", vec![a, d.n_actions]),
+                    f32_spec("value", vec![a]),
+                    f32_spec("gate_logits", vec![a, d.n_gate]),
+                    f32_spec("h2", vec![a, d.hidden]),
+                    f32_spec("c2", vec![a, d.hidden]),
+                ],
+                file,
+            });
+        }
+        if let Some(a) = name.strip_prefix("grad_episode_a").and_then(|s| s.parse::<usize>().ok())
+        {
+            return Ok(ArtifactSpec {
+                inputs: vec![
+                    f32_spec("params", vec![p]),
+                    f32_spec("masks", vec![mk]),
+                    f32_spec("obs_seq", vec![t, a, d.obs_dim]),
+                    i32_spec("act_seq", vec![t, a]),
+                    f32_spec("gate_seq", vec![t, a]),
+                    f32_spec("returns", vec![t]),
+                ],
+                outputs: vec![
+                    f32_spec("dparams", vec![p]),
+                    f32_spec("dmasks", vec![mk]),
+                    f32_spec("loss", vec![]),
+                    f32_spec("pol_loss", vec![]),
+                    f32_spec("val_loss", vec![]),
+                    f32_spec("entropy", vec![]),
+                ],
+                file,
+            });
+        }
+        if let Some(g) = name.strip_prefix("flgw_update_g").and_then(|s| s.parse::<usize>().ok())
+        {
+            let s = self.grouping_size(g)?;
+            return Ok(ArtifactSpec {
+                inputs: vec![
+                    f32_spec("grouping", vec![s]),
+                    f32_spec("dmasks", vec![mk]),
+                    f32_spec("sq_avg", vec![s]),
+                ],
+                outputs: vec![f32_spec("grouping2", vec![s]), f32_spec("sq_avg2", vec![s])],
+                file,
+            });
+        }
+        if let Some(g) = name.strip_prefix("mask_gen_g").and_then(|s| s.parse::<usize>().ok()) {
+            let s = self.grouping_size(g)?;
+            return Ok(ArtifactSpec {
+                inputs: vec![f32_spec("grouping", vec![s])],
+                outputs: vec![f32_spec("masks", vec![mk])],
+                file,
+            });
+        }
+        Err(anyhow!("no schema for artifact name {name:?}"))
+    }
+
     /// Default artifacts directory: `$LEARNING_GROUP_ARTIFACTS` or
     /// `artifacts/` under the workspace root.
     pub fn default_dir() -> PathBuf {
@@ -358,6 +571,34 @@ mod tests {
     fn missing_artifact_is_error() {
         let m = Manifest::parse(SAMPLE).unwrap();
         assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn builtin_matches_python_layout() {
+        let m = Manifest::builtin();
+        // totals dims.py computes for the default Dims
+        assert_eq!(m.param_size, 149_768);
+        assert_eq!(m.mask_size, 148_224);
+        let wx = m.masked_layer("w_x").unwrap();
+        assert_eq!((wx.rows, wx.cols), (128, 512));
+        let total: usize = m.masked_layers.iter().map(|l| l.size()).sum();
+        assert_eq!(total, m.mask_size);
+        assert!(m.artifacts.contains_key("apply_update"));
+        assert!(m.artifacts.contains_key("policy_fwd_a3"));
+        assert_eq!(m.grouping_size(4).unwrap(), m.grouping_sizes[&4]);
+    }
+
+    #[test]
+    fn synthesized_specs_have_consistent_shapes() {
+        let m = Manifest::builtin();
+        let spec = m.synthesize_artifact("grad_episode_a3").unwrap();
+        assert_eq!(spec.inputs[2].elements(), 20 * 3 * 6);
+        assert_eq!(spec.inputs[3].dtype, "i32");
+        assert_eq!(spec.outputs[0].elements(), m.param_size);
+        assert_eq!(spec.outputs[2].elements(), 1); // scalar loss
+        let spec = m.synthesize_artifact("flgw_update_g3").unwrap();
+        assert_eq!(spec.inputs[0].elements(), m.grouping_size(3).unwrap());
+        assert!(m.synthesize_artifact("nope").is_err());
     }
 
     #[test]

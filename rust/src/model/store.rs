@@ -43,6 +43,18 @@ impl ModelState {
         Self::new(manifest, params)
     }
 
+    /// Initialise model state: from the Python reference blob when the
+    /// artifacts directory has one (bitwise parity with the AOT path),
+    /// else locally with the same recipe (`init_params`) — the path the
+    /// native runtime backend takes when `make artifacts` never ran.
+    pub fn init(manifest: &Manifest) -> Result<Self> {
+        if manifest.dir.join("init_params.bin").is_file() {
+            Self::from_init_blob(manifest)
+        } else {
+            Self::new(manifest, crate::model::init_params(manifest, manifest.init_seed))
+        }
+    }
+
     /// Borrow the weight matrix of a (masked or unmasked) layer.
     pub fn layer(&self, manifest: &Manifest, name: &str) -> Result<&[f32]> {
         let entry = manifest
@@ -103,6 +115,16 @@ impl GroupingState {
     pub fn from_init_blob(manifest: &Manifest, g: usize) -> Result<Self> {
         let blob = manifest.read_f32_blob(&format!("init_grouping_g{g}.bin"))?;
         Self::new(manifest, g, blob)
+    }
+
+    /// Initialise grouping state: reference blob when present, local
+    /// random init (same recipe, `init_grouping`) otherwise.
+    pub fn init(manifest: &Manifest, g: usize) -> Result<Self> {
+        if manifest.dir.join(format!("init_grouping_g{g}.bin")).is_file() {
+            Self::from_init_blob(manifest, g)
+        } else {
+            Self::new(manifest, g, crate::model::init_grouping(manifest, g, manifest.init_seed))
+        }
     }
 
     /// (IG, OG) slices for one masked layer; IG is rows x G row-major,

@@ -44,6 +44,12 @@ impl FlgwPruner {
         Ok(Self::new(GroupingState::from_init_blob(manifest, g)?))
     }
 
+    /// Construct from the reference blob when present, else from the
+    /// local random init (see [`GroupingState::init`]).
+    pub fn init(manifest: &Manifest, g: usize) -> Result<Self> {
+        Ok(Self::new(GroupingState::init(manifest, g)?))
+    }
+
     pub fn groups(&self) -> usize {
         self.grouping.g
     }

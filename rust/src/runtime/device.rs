@@ -2,17 +2,29 @@
 //! §Perf).
 //!
 //! The trainer calls `policy_fwd` T times per episode and `grad_episode`
-//! once per episode, and five of the six inputs of those artifacts are
-//! the ~600 KiB parameter and mask vectors that DO NOT change within an
-//! iteration.  The naive literal path re-copies them host→literal→device
-//! on every call; uploading them once per iteration as `PjRtBuffer`s and
-//! executing through `execute_b` removes that traffic.
+//! once per episode, and the big parameter and mask vectors DO NOT change
+//! within an iteration.  Uploading them once per iteration and passing
+//! the resulting handle avoids per-call host traffic on the PJRT backend;
+//! on the native backend the "device" is host memory, so the handle is
+//! simply a pinned host copy that parallel rollout workers can share
+//! immutably across threads.
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
-/// A tensor resident on the PJRT device.
+use crate::runtime::HostTensor;
+
+/// Backend-specific storage of a device tensor.
+pub(crate) enum DeviceRepr {
+    /// Native backend: the "device" is host memory.
+    Native(HostTensor),
+    /// PJRT backend: a buffer resident on the PJRT device.
+    #[cfg(feature = "pjrt")]
+    Pjrt(crate::runtime::pjrt::PjrtBuffer),
+}
+
+/// A tensor uploaded once and reused across many executions.
 pub struct DeviceTensor {
-    pub(crate) buf: xla::PjRtBuffer,
+    pub(crate) repr: DeviceRepr,
     pub(crate) len: usize,
     pub(crate) dtype: &'static str,
 }
@@ -32,11 +44,21 @@ impl DeviceTensor {
 
     /// Copy back to the host (rarely needed on the hot path).
     pub fn to_host(&self) -> Result<Vec<f32>> {
-        let lit = self
-            .buf
-            .to_literal_sync()
-            .map_err(|e| anyhow!("device->host: {e:?}"))?;
-        lit.to_vec::<f32>().map_err(|e| anyhow!("device->host: {e:?}"))
+        match &self.repr {
+            DeviceRepr::Native(t) => Ok(t.as_f32()?.to_vec()),
+            #[cfg(feature = "pjrt")]
+            DeviceRepr::Pjrt(buf) => buf.to_host_f32(),
+        }
+    }
+
+    /// Borrow the host tensor backing a native-device handle; `None` on a
+    /// PJRT-resident buffer (callers fall back to [`Self::to_host`]).
+    pub(crate) fn as_native(&self) -> Option<&HostTensor> {
+        match &self.repr {
+            DeviceRepr::Native(t) => Some(t),
+            #[cfg(feature = "pjrt")]
+            DeviceRepr::Pjrt(_) => None,
+        }
     }
 }
 
@@ -44,7 +66,7 @@ impl DeviceTensor {
 /// tensor (uploaded per call — fine for small inputs) or a cached device
 /// tensor.
 pub enum Arg<'a> {
-    Host(&'a crate::runtime::HostTensor),
+    Host(&'a HostTensor),
     Device(&'a DeviceTensor),
 }
 
@@ -62,4 +84,14 @@ impl<'a> Arg<'a> {
             Arg::Device(t) => t.dtype(),
         }
     }
+}
+
+#[allow(unused)]
+fn _device_tensor_is_sync_on_native_builds() {
+    // Parallel rollout workers share &DeviceTensor across scoped threads;
+    // this line is a compile-time guarantee that stays true.
+    #[cfg(not(feature = "pjrt"))]
+    fn assert_sync<T: Sync>() {}
+    #[cfg(not(feature = "pjrt"))]
+    assert_sync::<DeviceTensor>();
 }

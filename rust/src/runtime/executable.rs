@@ -1,67 +1,98 @@
-//! A compiled HLO artifact plus its manifest I/O spec.
+//! A loaded artifact plus its manifest I/O spec.
+//!
+//! `Executable` is the single execution entry point on the training hot
+//! path: it validates shapes/dtypes against the manifest spec, then
+//! dispatches to whichever backend the runtime loaded the artifact on —
+//! the pure-Rust native implementation (default) or a compiled PJRT
+//! executable (`--features pjrt` plus artifacts on disk).
+
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use crate::manifest::ArtifactSpec;
+use crate::manifest::{ArtifactSpec, Manifest};
+use crate::runtime::device::DeviceRepr;
+use crate::runtime::native::{self, NativeOp};
 use crate::runtime::{Arg, DeviceTensor, HostTensor};
 
-/// One compiled artifact.  `run` is the only thing on the training hot
-/// path: it validates shapes against the manifest, packs literals,
-/// executes on the PJRT client and unpacks the output tuple.
+/// Backend-specific execution state.
+pub(crate) enum ExecBackend {
+    /// Native op over the manifest layout (no artifacts needed).
+    Native { op: NativeOp, manifest: Arc<Manifest> },
+    /// Compiled HLO on the PJRT client.
+    #[cfg(feature = "pjrt")]
+    Pjrt(crate::runtime::pjrt::PjrtExecutable),
+}
+
+/// One loaded artifact.  `run` / `run_args` validate against the manifest
+/// spec, execute on the backend, and return host tensors in manifest
+/// output order.
 pub struct Executable {
     name: String,
     spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
+    backend: ExecBackend,
 }
 
 impl Executable {
-    pub(crate) fn new(
-        name: String,
-        spec: ArtifactSpec,
-        exe: xla::PjRtLoadedExecutable,
-    ) -> Self {
-        Executable { name, spec, exe }
+    pub(crate) fn new(name: String, spec: ArtifactSpec, backend: ExecBackend) -> Self {
+        Executable { name, spec, backend }
     }
 
+    /// Artifact name (e.g. `"policy_fwd_a3"`).
     pub fn name(&self) -> &str {
         &self.name
     }
 
+    /// The manifest I/O spec this executable validates against.
     pub fn spec(&self) -> &ArtifactSpec {
         &self.spec
     }
 
-    /// Upload a host tensor to the device as input `index` of this
-    /// artifact (validates against the manifest spec).  The returned
-    /// buffer can be reused across many `run_args` calls — the hot-path
-    /// optimization for the big, iteration-constant params/masks inputs.
-    pub fn upload(&self, index: usize, tensor: &HostTensor) -> Result<DeviceTensor> {
+    /// Which backend this artifact was loaded on (`"native"` or
+    /// `"pjrt"`).
+    pub fn backend_name(&self) -> &'static str {
+        match &self.backend {
+            ExecBackend::Native { .. } => "native",
+            #[cfg(feature = "pjrt")]
+            ExecBackend::Pjrt(_) => "pjrt",
+        }
+    }
+
+    fn check_input(&self, index: usize, len: usize, dtype: &str) -> Result<()> {
         let io = self
             .spec
             .inputs
             .get(index)
             .ok_or_else(|| anyhow!("{}: no input index {index}", self.name))?;
-        if tensor.len() != io.elements() || tensor.dtype() != io.dtype {
+        if len != io.elements() || dtype != io.dtype {
             return Err(anyhow!(
-                "{}: upload to {:?} expects {} x {}, got {} x {}",
+                "{}: input {:?} expects {} x {}, got {} x {}",
                 self.name,
                 io.name,
                 io.elements(),
                 io.dtype,
-                tensor.len(),
-                tensor.dtype()
+                len,
+                dtype
             ));
         }
-        let client = self.exe.client();
-        let buf = match tensor {
-            HostTensor::F32(v) => client
-                .buffer_from_host_buffer::<f32>(v, &io.shape, None)
-                .map_err(|e| anyhow!("{}: upload {:?}: {e:?}", self.name, io.name))?,
-            HostTensor::I32(v) => client
-                .buffer_from_host_buffer::<i32>(v, &io.shape, None)
-                .map_err(|e| anyhow!("{}: upload {:?}: {e:?}", self.name, io.name))?,
-        };
-        Ok(DeviceTensor { buf, len: tensor.len(), dtype: tensor.dtype() })
+        Ok(())
+    }
+
+    /// Upload a host tensor to the device as input `index` of this
+    /// artifact (validates against the manifest spec).  The returned
+    /// tensor can be reused across many `run_args` calls — the hot-path
+    /// optimization for the big, iteration-constant params/masks inputs.
+    pub fn upload(&self, index: usize, tensor: &HostTensor) -> Result<DeviceTensor> {
+        self.check_input(index, tensor.len(), tensor.dtype())?;
+        match &self.backend {
+            ExecBackend::Native { .. } => Ok(DeviceTensor {
+                repr: DeviceRepr::Native(tensor.clone()),
+                len: tensor.len(),
+                dtype: tensor.dtype(),
+            }),
+            #[cfg(feature = "pjrt")]
+            ExecBackend::Pjrt(exe) => exe.upload(&self.name, &self.spec.inputs[index], tensor),
+        }
     }
 
     /// Execute with a mix of host tensors (uploaded per call) and cached
@@ -75,128 +106,84 @@ impl Executable {
                 inputs.len()
             ));
         }
-        // upload host args; keep the temporaries alive until execution
-        let mut owned: Vec<DeviceTensor> = Vec::new();
-        let mut bufs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
-        for (i, (arg, io)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
-            if arg.len() != io.elements() || arg.dtype() != io.dtype {
-                return Err(anyhow!(
-                    "{}: input {:?} expects {} x {}, got {} x {}",
-                    self.name,
-                    io.name,
-                    io.elements(),
-                    io.dtype,
-                    arg.len(),
-                    arg.dtype()
-                ));
-            }
-            match arg {
-                Arg::Host(t) => {
-                    owned.push(self.upload(i, t)?);
+        for (i, arg) in inputs.iter().enumerate() {
+            self.check_input(i, arg.len(), arg.dtype())?;
+        }
+        match &self.backend {
+            ExecBackend::Native { op, manifest } => {
+                // Materialize every argument as a host view; device
+                // tensors from another backend fall back to a copy
+                // (f32-only — the cached cross-backend tensors are the
+                // params/masks uploads; anything else errors loudly
+                // rather than silently re-typing).
+                let mut owned: Vec<HostTensor> = Vec::new();
+                for arg in inputs {
+                    if let Arg::Device(d) = arg {
+                        if d.as_native().is_none() {
+                            if d.dtype() != "f32" {
+                                return Err(anyhow!(
+                                    "{}: cross-backend copy of a {} device tensor \
+                                     is unsupported; re-upload through this executable",
+                                    self.name,
+                                    d.dtype()
+                                ));
+                            }
+                            owned.push(HostTensor::F32(d.to_host()?));
+                        }
+                    }
                 }
-                Arg::Device(_) => {}
+                let mut owned_iter = owned.iter();
+                let mut views: Vec<&HostTensor> = Vec::with_capacity(inputs.len());
+                for arg in inputs {
+                    match arg {
+                        Arg::Host(t) => views.push(t),
+                        Arg::Device(d) => match d.as_native() {
+                            Some(t) => views.push(t),
+                            None => views.push(owned_iter.next().expect("owned copy")),
+                        },
+                    }
+                }
+                let outs = native::execute(op, manifest, &views)?;
+                self.check_outputs(outs)
+            }
+            #[cfg(feature = "pjrt")]
+            ExecBackend::Pjrt(exe) => {
+                let outs = exe.run_args(&self.name, &self.spec, inputs)?;
+                self.check_outputs(outs)
             }
         }
-        let mut owned_iter = owned.iter();
-        for arg in inputs {
-            match arg {
-                Arg::Host(_) => bufs.push(&owned_iter.next().unwrap().buf),
-                Arg::Device(d) => bufs.push(&d.buf),
-            }
-        }
-
-        let result = self
-            .exe
-            .execute_b::<&xla::PjRtBuffer>(&bufs)
-            .map_err(|e| anyhow!("{}: execute_b failed: {e:?}", self.name))?;
-        self.unpack(&result[0][0])
     }
 
     /// Execute with host tensors in manifest input order; returns host
     /// tensors in manifest output order.
     pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        if inputs.len() != self.spec.inputs.len() {
-            return Err(anyhow!(
-                "{}: expected {} inputs, got {}",
-                self.name,
-                self.spec.inputs.len(),
-                inputs.len()
-            ));
-        }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (tensor, io) in inputs.iter().zip(&self.spec.inputs) {
-            if tensor.len() != io.elements() {
-                return Err(anyhow!(
-                    "{}: input {:?} expects {} elements ({:?}), got {}",
-                    self.name,
-                    io.name,
-                    io.elements(),
-                    io.shape,
-                    tensor.len()
-                ));
-            }
-            if tensor.dtype() != io.dtype {
-                return Err(anyhow!(
-                    "{}: input {:?} expects dtype {}, got {}",
-                    self.name,
-                    io.name,
-                    io.dtype,
-                    tensor.dtype()
-                ));
-            }
-            literals.push(tensor.to_literal(&io.shape)?);
-        }
-
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("{}: execute failed: {e:?}", self.name))?;
-        self.unpack(&result[0][0])
+        let args: Vec<Arg<'_>> = inputs.iter().map(Arg::Host).collect();
+        self.run_args(&args)
     }
 
-    /// Fetch + untuple + validate the output buffer.
-    fn unpack(&self, out: &xla::PjRtBuffer) -> Result<Vec<HostTensor>> {
-        let tuple = out
-            .to_literal_sync()
-            .map_err(|e| anyhow!("{}: fetching result: {e:?}", self.name))?;
-        // aot.py lowers with return_tuple=True: always a tuple, even for
-        // single-output artifacts.
-        let elements = tuple
-            .to_tuple()
-            .map_err(|e| anyhow!("{}: untupling result: {e:?}", self.name))?;
-        if elements.len() != self.spec.outputs.len() {
+    /// Validate backend outputs against the manifest spec.
+    fn check_outputs(&self, outs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        if outs.len() != self.spec.outputs.len() {
             return Err(anyhow!(
                 "{}: expected {} outputs, got {}",
                 self.name,
                 self.spec.outputs.len(),
-                elements.len()
+                outs.len()
             ));
         }
-
-        let mut outputs = Vec::with_capacity(elements.len());
-        for (lit, io) in elements.into_iter().zip(&self.spec.outputs) {
-            let t = match io.dtype.as_str() {
-                "f32" => HostTensor::F32(
-                    lit.to_vec::<f32>()
-                        .map_err(|e| anyhow!("{}: output {:?}: {e:?}", self.name, io.name))?,
-                ),
-                "i32" => HostTensor::I32(
-                    lit.to_vec::<i32>()
-                        .map_err(|e| anyhow!("{}: output {:?}: {e:?}", self.name, io.name))?,
-                ),
-                other => return Err(anyhow!("{}: unsupported dtype {other}", self.name)),
-            };
-            if t.len() != io.elements() {
+        for (t, io) in outs.iter().zip(&self.spec.outputs) {
+            if t.len() != io.elements() || t.dtype() != io.dtype {
                 return Err(anyhow!(
-                    "{}: output {:?} expected {} elements, got {}",
+                    "{}: output {:?} expected {} x {}, got {} x {}",
                     self.name,
                     io.name,
                     io.elements(),
-                    t.len()
+                    io.dtype,
+                    t.len(),
+                    t.dtype()
                 ));
             }
-            outputs.push(t);
         }
-        Ok(outputs)
+        Ok(outs)
     }
 }

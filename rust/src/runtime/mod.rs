@@ -1,13 +1,27 @@
-//! Layer-3 runtime: load and execute the AOT-compiled HLO artifacts.
+//! Layer-3 runtime: execute the model's AOT entry points.
 //!
-//! The Python compile path (`make artifacts`) lowers the JAX/Pallas model
-//! to HLO *text*; this module is everything the coordinator needs to run
-//! it: a PJRT CPU client, an executable cache keyed by artifact name, and
-//! typed host tensors for the FFI boundary.  After artifacts are built the
-//! binary is self-contained — Python is never on the request path.
+//! Two interchangeable backends sit behind one [`Executable`] API:
+//!
+//! * **Native** (default, always available) — `native` reimplements the
+//!   five artifact entry points (`policy_fwd`, `grad_episode`,
+//!   `apply_update`, `flgw_update`, `mask_gen`) in pure Rust against the
+//!   manifest layout.  No artifacts directory, no Python, no XLA.
+//! * **PJRT** (`--features pjrt`, plus HLO artifacts from `make
+//!   artifacts`) — compiles the HLO *text* the Python compile path
+//!   lowers from JAX/Pallas and executes it through the PJRT CPU client,
+//!   exactly as the paper's system split prescribes.  After artifacts
+//!   are built the binary is self-contained — Python is never on the
+//!   request path.
+//!
+//! [`Runtime::load`] picks per artifact: PJRT when the feature is on and
+//! the artifact file exists on disk, the native op otherwise — so a
+//! partially-built artifacts directory still runs.
 
 mod device;
 mod executable;
+pub(crate) mod native;
+#[cfg(feature = "pjrt")]
+pub(crate) mod pjrt;
 mod tensor;
 
 pub use device::{Arg, DeviceTensor};
@@ -21,58 +35,128 @@ use anyhow::Result;
 
 use crate::manifest::Manifest;
 
-/// PJRT client + compiled-executable cache.
+use executable::ExecBackend;
+use native::NativeOp;
+
+/// Executable loader + cache over a manifest.
 ///
-/// Compilation happens once per artifact per process; the hot path only
-/// calls [`Executable::run`].
+/// Loading happens once per artifact per process; the hot path only
+/// calls [`Executable::run`] / [`Executable::run_args`].
 pub struct Runtime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
+    manifest: Arc<Manifest>,
     cache: HashMap<String, Arc<Executable>>,
+    #[cfg(feature = "pjrt")]
+    client: Option<pjrt::PjrtClient>,
 }
 
 impl Runtime {
-    /// Create a CPU-PJRT runtime over an artifacts directory.
+    /// Create a runtime over a manifest (native backend; the PJRT client
+    /// is created lazily on the first artifact that needs it).
     pub fn new(manifest: Manifest) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
-        Ok(Runtime { client, manifest, cache: HashMap::new() })
+        Ok(Runtime {
+            manifest: Arc::new(manifest),
+            cache: HashMap::new(),
+            #[cfg(feature = "pjrt")]
+            client: None,
+        })
     }
 
-    /// Convenience: load the manifest from the default artifacts dir.
+    /// Convenience: manifest from the default artifacts dir when one was
+    /// built there, the built-in manifest otherwise.
     pub fn from_default_artifacts() -> Result<Self> {
-        Self::new(Manifest::load(Manifest::default_dir())?)
+        Self::new(Manifest::load_or_builtin(Manifest::default_dir())?)
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// Backend platform description (e.g. `"native-cpu"`).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        #[cfg(feature = "pjrt")]
+        if let Some(client) = &self.client {
+            return client.platform_name();
+        }
+        "native-cpu".to_string()
     }
 
-    /// Get (compiling and caching on first use) an executable by artifact
+    /// Get (loading and caching on first use) an executable by artifact
     /// name, e.g. `"policy_fwd_a4"`.
     pub fn load(&mut self, name: &str) -> Result<Arc<Executable>> {
         if let Some(exe) = self.cache.get(name) {
             return Ok(exe.clone());
         }
-        let spec = self.manifest.artifact(name)?.clone();
-        let path = self.manifest.artifact_path(name)?;
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow::anyhow!("parsing HLO text {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
-        let exe = Arc::new(Executable::new(name.to_string(), spec, exe));
+        let exe = Arc::new(self.load_uncached(name)?);
         self.cache.insert(name.to_string(), exe.clone());
         Ok(exe)
     }
 
-    /// Number of compiled executables currently cached.
+    fn load_uncached(&mut self, name: &str) -> Result<Executable> {
+        // PJRT path: feature on + the HLO text for this artifact exists.
+        #[cfg(feature = "pjrt")]
+        if let Ok(spec) = self.manifest.artifact(name) {
+            let spec = spec.clone();
+            let path = self.manifest.artifact_path(name)?;
+            if path.is_file() {
+                if self.client.is_none() {
+                    self.client = Some(pjrt::PjrtClient::cpu()?);
+                }
+                let client = self.client.as_ref().expect("client created above");
+                let exe = client.compile(name, &path)?;
+                return Ok(Executable::new(
+                    name.to_string(),
+                    spec,
+                    ExecBackend::Pjrt(exe),
+                ));
+            }
+        }
+        // Native path: derive the spec from the manifest when it is not
+        // tabulated (e.g. a group count the Python side never dumped).
+        let op = NativeOp::parse(name)?;
+        let spec = match self.manifest.artifact(name) {
+            Ok(s) => s.clone(),
+            Err(_) => self.manifest.synthesize_artifact(name)?,
+        };
+        Ok(Executable::new(
+            name.to_string(),
+            spec,
+            ExecBackend::Native { op, manifest: self.manifest.clone() },
+        ))
+    }
+
+    /// Number of loaded executables currently cached.
     pub fn cached(&self) -> usize {
         self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_runtime_loads_and_runs_without_artifacts() {
+        let mut rt = Runtime::new(Manifest::builtin()).unwrap();
+        assert_eq!(rt.platform(), "native-cpu");
+        let exe = rt.load("apply_update").unwrap();
+        assert_eq!(exe.backend_name(), "native");
+        let p = rt.manifest().param_size;
+        let outs = exe
+            .run(&[
+                HostTensor::F32(vec![1.0; p]),
+                HostTensor::F32(vec![0.0; p]),
+                HostTensor::F32(vec![0.0; p]),
+            ])
+            .unwrap();
+        assert_eq!(outs[0].as_f32().unwrap(), vec![1.0; p].as_slice());
+        // cache hit
+        let _ = rt.load("apply_update").unwrap();
+        assert_eq!(rt.cached(), 1);
+    }
+
+    #[test]
+    fn unknown_artifact_name_errors() {
+        let mut rt = Runtime::new(Manifest::builtin()).unwrap();
+        assert!(rt.load("not_an_artifact").is_err());
     }
 }

@@ -1,0 +1,194 @@
+//! PJRT backend — compile and execute the AOT HLO-text artifacts.
+//!
+//! Gated behind `--features pjrt`: the offline build image cannot resolve
+//! the `xla` crate (LaurentMazare's xla-rs bindings over the PJRT C API),
+//! so this module only compiles in a networked environment after adding
+//! `xla` to `[dependencies]` (see DESIGN.md §Runtime backends).  The
+//! semantics mirror the native backend; the parity tests in
+//! `rust/tests/integration.rs` hold for both.
+
+use anyhow::{anyhow, Result};
+
+use crate::manifest::{ArtifactSpec, IoSpec};
+use crate::runtime::device::{DeviceRepr, DeviceTensor};
+use crate::runtime::{Arg, HostTensor};
+
+/// A PJRT device buffer (params/masks cached across calls).
+///
+/// Deliberately **not** `Send`/`Sync`: although the underlying PJRT C
+/// API documents buffers and loaded executables as thread-safe, the
+/// xla-rs wrapper layer carries its own (non-atomic) handle state, so
+/// claiming `Sync` here would be vouching for code this crate does not
+/// control.  Consequence: the parallel rollout driver — which shares
+/// `&Executable`/`&DeviceTensor` across scoped threads — only compiles
+/// against the native backend; enabling `pjrt` together with parallel
+/// rollouts requires auditing xla-rs thread-safety first (the compiler
+/// will point at exactly the bound that needs it).
+pub(crate) struct PjrtBuffer {
+    buf: xla::PjRtBuffer,
+}
+
+impl PjrtBuffer {
+    pub(crate) fn to_host_f32(&self) -> Result<Vec<f32>> {
+        let lit = self
+            .buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("device->host: {e:?}"))?;
+        lit.to_vec::<f32>().map_err(|e| anyhow!("device->host: {e:?}"))
+    }
+}
+
+/// The PJRT CPU client (shared by every compiled artifact).  Not
+/// `Send`/`Sync` — see [`PjrtBuffer`].
+pub(crate) struct PjrtClient {
+    client: xla::PjRtClient,
+}
+
+impl PjrtClient {
+    pub(crate) fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(PjrtClient { client })
+    }
+
+    pub(crate) fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one HLO-text artifact.
+    pub(crate) fn compile(
+        &self,
+        name: &str,
+        path: &std::path::Path,
+    ) -> Result<PjrtExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        Ok(PjrtExecutable { exe })
+    }
+}
+
+/// One compiled artifact on the PJRT client.  Not `Send`/`Sync` — see
+/// [`PjrtBuffer`].
+pub(crate) struct PjrtExecutable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl PjrtExecutable {
+    /// Upload one validated input to the device.
+    pub(crate) fn upload(
+        &self,
+        name: &str,
+        io: &IoSpec,
+        tensor: &HostTensor,
+    ) -> Result<DeviceTensor> {
+        let client = self.exe.client();
+        let buf = match tensor {
+            HostTensor::F32(v) => client
+                .buffer_from_host_buffer::<f32>(v, &io.shape, None)
+                .map_err(|e| anyhow!("{name}: upload {:?}: {e:?}", io.name))?,
+            HostTensor::I32(v) => client
+                .buffer_from_host_buffer::<i32>(v, &io.shape, None)
+                .map_err(|e| anyhow!("{name}: upload {:?}: {e:?}", io.name))?,
+        };
+        Ok(DeviceTensor {
+            repr: DeviceRepr::Pjrt(PjrtBuffer { buf }),
+            len: tensor.len(),
+            dtype: tensor.dtype(),
+        })
+    }
+
+    /// Execute with pre-validated args.  Host args — and device tensors
+    /// that live on the *native* backend (possible in a partially-built
+    /// artifacts directory, where some artifacts load on PJRT and some
+    /// fall back) — are uploaded per call.
+    pub(crate) fn run_args(
+        &self,
+        name: &str,
+        spec: &ArtifactSpec,
+        inputs: &[Arg<'_>],
+    ) -> Result<Vec<HostTensor>> {
+        // upload host-resident args; keep the temporaries alive until
+        // execution
+        let mut owned: Vec<DeviceTensor> = Vec::new();
+        for (i, arg) in inputs.iter().enumerate() {
+            let host: Option<&HostTensor> = match arg {
+                Arg::Host(t) => Some(t),
+                Arg::Device(d) => match &d.repr {
+                    DeviceRepr::Native(t) => Some(t),
+                    DeviceRepr::Pjrt(_) => None,
+                },
+            };
+            if let Some(t) = host {
+                owned.push(self.upload(name, &spec.inputs[i], t)?);
+            }
+        }
+        let mut owned_iter = owned.iter();
+        let mut bufs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+        for arg in inputs {
+            let dt: &DeviceTensor = match arg {
+                Arg::Host(_) => owned_iter.next().expect("uploaded above"),
+                Arg::Device(d) => match &d.repr {
+                    DeviceRepr::Native(_) => owned_iter.next().expect("uploaded above"),
+                    DeviceRepr::Pjrt(_) => *d,
+                },
+            };
+            match &dt.repr {
+                DeviceRepr::Pjrt(b) => bufs.push(&b.buf),
+                DeviceRepr::Native(_) => {
+                    return Err(anyhow!("{name}: upload produced a non-PJRT tensor"))
+                }
+            }
+        }
+
+        let result = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&bufs)
+            .map_err(|e| anyhow!("{name}: execute_b failed: {e:?}"))?;
+        self.unpack(name, spec, &result[0][0])
+    }
+
+    /// Fetch + untuple + type the output buffer.
+    fn unpack(
+        &self,
+        name: &str,
+        spec: &ArtifactSpec,
+        out: &xla::PjRtBuffer,
+    ) -> Result<Vec<HostTensor>> {
+        let tuple = out
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{name}: fetching result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple, even for
+        // single-output artifacts.
+        let elements = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("{name}: untupling result: {e:?}"))?;
+        if elements.len() != spec.outputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} outputs, got {} (stale manifest vs artifact?)",
+                spec.outputs.len(),
+                elements.len()
+            ));
+        }
+        let mut outputs = Vec::with_capacity(elements.len());
+        for (lit, io) in elements.into_iter().zip(&spec.outputs) {
+            let t = match io.dtype.as_str() {
+                "f32" => HostTensor::F32(
+                    lit.to_vec::<f32>()
+                        .map_err(|e| anyhow!("{name}: output {:?}: {e:?}", io.name))?,
+                ),
+                "i32" => HostTensor::I32(
+                    lit.to_vec::<i32>()
+                        .map_err(|e| anyhow!("{name}: output {:?}: {e:?}", io.name))?,
+                ),
+                other => return Err(anyhow!("{name}: unsupported dtype {other}")),
+            };
+            outputs.push(t);
+        }
+        Ok(outputs)
+    }
+}

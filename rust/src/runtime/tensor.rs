@@ -1,12 +1,13 @@
-//! Host-side tensors crossing the PJRT boundary.
+//! Host-side tensors crossing the runtime boundary.
 //!
 //! All artifact I/O is flat vectors of f32 or i32 with shapes recorded in
 //! the manifest; `HostTensor` is the minimal typed wrapper that keeps the
 //! coordinator honest about dtypes without a full ndarray dependency.
+//! Both runtime backends (native and PJRT) consume it.
 
 use anyhow::{anyhow, Result};
 
-/// A host buffer destined for (or produced by) an HLO executable.
+/// A host buffer destined for (or produced by) an executable.
 #[derive(Debug, Clone, PartialEq)]
 pub enum HostTensor {
     F32(Vec<f32>),
@@ -40,6 +41,14 @@ impl HostTensor {
         }
     }
 
+    /// Borrow as i32, erroring on dtype mismatch.
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(v) => Ok(v),
+            other => Err(anyhow!("expected i32 tensor, got {}", other.dtype())),
+        }
+    }
+
     pub fn into_f32(self) -> Result<Vec<f32>> {
         match self {
             HostTensor::F32(v) => Ok(v),
@@ -54,20 +63,6 @@ impl HostTensor {
             return Err(anyhow!("expected scalar, got {} elements", v.len()));
         }
         Ok(v[0])
-    }
-
-    /// Build the xla literal for this tensor with the given shape.
-    pub(crate) fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
-        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-        let lit = match self {
-            HostTensor::F32(v) => xla::Literal::vec1(v),
-            HostTensor::I32(v) => xla::Literal::vec1(v),
-        };
-        if dims.len() == 1 && dims[0] as usize == self.len() {
-            return Ok(lit); // already the right rank-1 shape
-        }
-        lit.reshape(&dims)
-            .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))
     }
 }
 
@@ -91,8 +86,10 @@ mod tests {
     fn dtype_guards() {
         let t = HostTensor::I32(vec![1, 2]);
         assert!(t.as_f32().is_err());
+        assert_eq!(t.as_i32().unwrap(), &[1, 2]);
         assert_eq!(t.len(), 2);
         assert_eq!(t.dtype(), "i32");
+        assert!(HostTensor::F32(vec![1.0]).as_i32().is_err());
     }
 
     #[test]

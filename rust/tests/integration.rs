@@ -1,24 +1,38 @@
-//! Integration tests over the real AOT artifacts (requires `make
-//! artifacts` to have run — the Makefile's `test` target guarantees it).
+//! Integration tests over the full Layer-3 path: manifest → runtime →
+//! trainer loop.
 //!
-//! These exercise the full Layer-3 path: manifest → PJRT compile →
-//! execute → trainer loop, plus the OSEL-vs-artifact mask parity check
-//! that ties the Rust encoder to the Pallas kernel.
+//! These run on the **native** runtime backend against the built-in
+//! manifest, so they need no artifacts directory and no Python.  When
+//! `make artifacts` has produced `artifacts/manifest.json` the same
+//! tests load that manifest instead (and, under `--features pjrt`,
+//! execute the compiled HLO), which is exactly how the Rust/Pallas
+//! parity story is exercised.
 
 use learning_group::accel::osel::OselEncoder;
 use learning_group::coordinator::{PrunerChoice, TrainConfig, Trainer};
+use learning_group::env::EnvConfig;
 use learning_group::manifest::Manifest;
 use learning_group::model::{GroupingState, ModelState};
-use learning_group::pruning::{PruneContext, PruningAlgorithm};
 use learning_group::runtime::{HostTensor, Runtime};
 
 fn runtime() -> Runtime {
-    Runtime::from_default_artifacts().expect("run `make artifacts` first")
+    Runtime::from_default_artifacts().expect("runtime over built-in manifest")
+}
+
+fn base_cfg(pruner: PrunerChoice, seed: u64) -> TrainConfig {
+    TrainConfig {
+        batch: 2,
+        iterations: 2,
+        pruner,
+        seed,
+        log_every: 0,
+        ..TrainConfig::default().with_agents(3)
+    }
 }
 
 #[test]
 fn manifest_loads_and_is_consistent() {
-    let m = Manifest::load(Manifest::default_dir()).unwrap();
+    let m = Manifest::load_or_builtin(Manifest::default_dir()).unwrap();
     assert_eq!(m.dims.hidden, 128);
     // the paper's 128x512 mask example is literally our LSTM layers
     let wx = m.masked_layer("w_x").unwrap();
@@ -33,7 +47,7 @@ fn policy_fwd_runs_and_is_deterministic() {
     let mut rt = runtime();
     let m = rt.manifest().clone();
     let exe = rt.load("policy_fwd_a3").unwrap();
-    let state = ModelState::from_init_blob(&m).unwrap();
+    let state = ModelState::init(&m).unwrap();
     let a = 3;
     let inputs = vec![
         HostTensor::F32(state.params.clone()),
@@ -65,7 +79,7 @@ fn policy_fwd_rejects_bad_shapes_and_dtypes() {
     assert!(exe.run(&[HostTensor::F32(vec![0.0; 4])]).is_err());
     // wrong element count
     let m = rt.manifest().clone();
-    let state = ModelState::from_init_blob(&m).unwrap();
+    let state = ModelState::init(&m).unwrap();
     let mut inputs = vec![
         HostTensor::F32(state.params.clone()),
         HostTensor::F32(state.masks.clone()),
@@ -81,14 +95,15 @@ fn policy_fwd_rejects_bad_shapes_and_dtypes() {
 }
 
 #[test]
-fn osel_mask_matches_pallas_mask_gen_artifact() {
-    // The crown-jewel parity test: the Rust OSEL encoder and the Pallas
-    // index-compare kernel (lowered into mask_gen_g4.hlo.txt) must
-    // produce bit-identical masks from the same grouping matrices.
+fn osel_mask_matches_mask_gen_artifact() {
+    // The crown-jewel parity test: the Rust OSEL encoder and the
+    // mask_gen entry point (the Pallas index-compare kernel on the PJRT
+    // backend, the argmax-compare op on the native one) must produce
+    // bit-identical masks from the same grouping matrices.
     let mut rt = runtime();
     let m = rt.manifest().clone();
     let g = 4;
-    let grouping = GroupingState::from_init_blob(&m, g).unwrap();
+    let grouping = GroupingState::init(&m, g).unwrap();
 
     let exe = rt.load("mask_gen_g4").unwrap();
     let outs = exe
@@ -116,7 +131,7 @@ fn apply_update_zero_grad_is_identity() {
     let mut rt = runtime();
     let m = rt.manifest().clone();
     let exe = rt.load("apply_update").unwrap();
-    let state = ModelState::from_init_blob(&m).unwrap();
+    let state = ModelState::init(&m).unwrap();
     let outs = exe
         .run(&[
             HostTensor::F32(state.params.clone()),
@@ -128,17 +143,23 @@ fn apply_update_zero_grad_is_identity() {
 }
 
 #[test]
-fn grad_episode_respects_masks_through_hlo() {
+fn grad_episode_respects_masks_through_runtime() {
     let mut rt = runtime();
     let m = rt.manifest().clone();
     let exe = rt.load("grad_episode_a3").unwrap();
-    let mut state = ModelState::from_init_blob(&m).unwrap();
+    let mut state = ModelState::init(&m).unwrap();
 
     // FLGW masks at G=4 through the Rust pruner
-    let grouping = GroupingState::from_init_blob(&m, 4).unwrap();
+    let grouping = GroupingState::init(&m, 4).unwrap();
     let mut pruner = learning_group::pruning::FlgwPruner::new(grouping);
-    let ctx = PruneContext { manifest: &m, iteration: 0, total_iterations: 1, dmasks: &[] };
-    pruner.update_masks(&mut state, &ctx).unwrap();
+    let ctx = learning_group::pruning::PruneContext {
+        manifest: &m,
+        iteration: 0,
+        total_iterations: 1,
+        dmasks: &[],
+    };
+    learning_group::pruning::PruningAlgorithm::update_masks(&mut pruner, &mut state, &ctx)
+        .unwrap();
 
     let (t, a, d) = (m.dims.episode_len, 3usize, m.dims.obs_dim);
     let outs = exe
@@ -173,14 +194,7 @@ fn grad_episode_respects_masks_through_hlo() {
 
 #[test]
 fn trainer_end_to_end_flgw_few_iterations() {
-    let cfg = TrainConfig {
-        batch: 2,
-        iterations: 3,
-        pruner: PrunerChoice::Flgw(4),
-        seed: 5,
-        log_every: 0,
-        ..TrainConfig::default().with_agents(3)
-    };
+    let cfg = TrainConfig { iterations: 3, ..base_cfg(PrunerChoice::Flgw(4), 5) };
     let mut trainer = Trainer::from_default_artifacts(cfg).unwrap();
     let params_before = trainer.state.params.clone();
     let grouping_before = trainer.pruner.as_flgw().unwrap().grouping.grouping.clone();
@@ -202,15 +216,8 @@ fn trainer_end_to_end_flgw_few_iterations() {
 
 #[test]
 fn trainer_dense_baseline_runs() {
-    let cfg = TrainConfig {
-        batch: 2,
-        iterations: 2,
-        pruner: PrunerChoice::Dense,
-        seed: 9,
-        log_every: 0,
-        ..TrainConfig::default().with_agents(3)
-    };
-    let mut trainer = Trainer::from_default_artifacts(cfg).unwrap();
+    let mut trainer =
+        Trainer::from_default_artifacts(base_cfg(PrunerChoice::Dense, 9)).unwrap();
     let log = trainer.train().unwrap();
     assert_eq!(log.records[0].sparsity, 0.0);
     assert!(log.records.iter().all(|r| r.loss.is_finite()));
@@ -218,14 +225,7 @@ fn trainer_dense_baseline_runs() {
 
 #[test]
 fn rollout_is_reproducible_for_seed() {
-    let cfg = TrainConfig {
-        batch: 1,
-        iterations: 1,
-        pruner: PrunerChoice::Dense,
-        seed: 11,
-        log_every: 0,
-        ..TrainConfig::default().with_agents(3)
-    };
+    let cfg = base_cfg(PrunerChoice::Dense, 11);
     let mut t1 = Trainer::from_default_artifacts(cfg.clone()).unwrap();
     let mut t2 = Trainer::from_default_artifacts(cfg).unwrap();
     let e1 = t1.rollout(123).unwrap();
@@ -233,4 +233,54 @@ fn rollout_is_reproducible_for_seed() {
     assert_eq!(e1.obs, e2.obs);
     assert_eq!(e1.actions, e2.actions);
     assert_eq!(e1.rewards, e2.rewards);
+}
+
+/// The parallel rollout driver's determinism contract: `--rollouts 4`
+/// and the sequential path must produce *identical* per-iteration
+/// metrics for a fixed seed, because episode seeds and RNG streams are
+/// functions of the episode index alone and aggregation preserves
+/// episode order.
+#[test]
+fn parallel_rollouts_match_sequential_metrics() {
+    let cfg_seq = TrainConfig { batch: 4, ..base_cfg(PrunerChoice::Flgw(4), 33) };
+    let cfg_par = TrainConfig { rollouts: 4, ..cfg_seq.clone() };
+    let mut seq = Trainer::from_default_artifacts(cfg_seq).unwrap();
+    let mut par = Trainer::from_default_artifacts(cfg_par).unwrap();
+    let log_seq = seq.train().unwrap();
+    let log_par = par.train().unwrap();
+    assert_eq!(log_seq.len(), log_par.len());
+    for (a, b) in log_seq.records.iter().zip(&log_par.records) {
+        assert_eq!(a.loss, b.loss, "iteration {}", a.iteration);
+        assert_eq!(a.mean_reward, b.mean_reward, "iteration {}", a.iteration);
+        assert_eq!(a.success_rate, b.success_rate, "iteration {}", a.iteration);
+        assert_eq!(a.sparsity, b.sparsity, "iteration {}", a.iteration);
+    }
+    assert_eq!(seq.state.params, par.state.params, "weights must match bitwise");
+}
+
+/// The env-generic trainer on the second scenario, with parallel
+/// rollouts — the tentpole path end-to-end.
+#[test]
+fn traffic_junction_trains_end_to_end() {
+    for level in ["easy", "medium"] {
+        let cfg = base_cfg(PrunerChoice::Flgw(4), 21)
+            .with_env(EnvConfig::parse(&format!("traffic_junction:{level}")).unwrap());
+        let cfg = TrainConfig { rollouts: 2, ..cfg };
+        let mut trainer = Trainer::from_default_artifacts(cfg).unwrap();
+        let log = trainer.train().unwrap();
+        assert_eq!(log.len(), 2);
+        for r in &log.records {
+            assert!(r.loss.is_finite(), "{level}: loss {}", r.loss);
+            assert!((0.0..=1.0).contains(&r.success_rate), "{level}");
+            assert!(r.mean_reward <= 0.0, "{level}: TJ rewards are penalties");
+        }
+    }
+}
+
+#[test]
+fn mismatched_env_configs_are_rejected() {
+    // agent count disagreement
+    let mut cfg = TrainConfig::default().with_agents(3);
+    cfg.env = EnvConfig::default().with_agents(4);
+    assert!(Trainer::from_default_artifacts(cfg).is_err());
 }

@@ -1,0 +1,164 @@
+//! Offline drop-in subset of the `anyhow` error-handling crate.
+//!
+//! The build environment is fully offline (no crates.io registry), so the
+//! workspace vendors the small slice of anyhow's API the coordinator
+//! actually uses as a path dependency:
+//!
+//! * [`Error`] — an opaque, context-carrying error value.
+//! * [`Result<T>`] — `Result<T, Error>` with a defaulted error type.
+//! * [`anyhow!`] — construct an [`Error`] from a format string.
+//! * [`bail!`] — early-return an [`Error`] from a format string.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` adapters on
+//!   `Result` and `Option`.
+//!
+//! Semantics match upstream anyhow where it matters to callers: contexts
+//! stack outermost-first, `{}` / `{:#}` both render the full chain joined
+//! by `": "`, and any `std::error::Error + Send + Sync + 'static` value
+//! converts into [`Error`] through `?`.  Like upstream, [`Error`] itself
+//! deliberately does **not** implement `std::error::Error`, which is what
+//! keeps the blanket `From` impl coherent.
+
+use std::fmt;
+
+/// An opaque error value: the rendered message plus any context frames
+/// added with [`Context`], outermost first.
+pub struct Error {
+    /// Context frames, outermost first; the root message is last.
+    chain: Vec<String>,
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct an error from anything printable.
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Error { chain: vec![msg.to_string()] }
+    }
+
+    /// Push a new outermost context frame.
+    pub fn context(mut self, ctx: impl fmt::Display) -> Self {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// Context adapters: wrap the error of a `Result` (or the absence of an
+/// `Option` value) with an outer message.
+pub trait Context<T> {
+    /// Attach a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Attach a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any printable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::string::ToString::to_string(&$err))
+    };
+}
+
+/// Early-return an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn format_macro_and_display() {
+        let x = 3;
+        let e = anyhow!("bad value {x} in {}", "field");
+        assert_eq!(e.to_string(), "bad value 3 in field");
+    }
+
+    #[test]
+    fn contexts_stack_outermost_first() {
+        let r: Result<()> = Err(io_err().into());
+        let r = r.context("reading manifest");
+        let msg = r.unwrap_err().to_string();
+        assert_eq!(msg, "reading manifest: disk on fire");
+    }
+
+    #[test]
+    fn option_context_and_with_context() {
+        let none: Option<u8> = None;
+        assert_eq!(none.context("missing").unwrap_err().to_string(), "missing");
+        let none: Option<u8> = None;
+        let e = none.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "missing 7");
+        assert_eq!(Some(5u8).context("unused").unwrap(), 5);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().root_cause(), "disk on fire");
+    }
+}
