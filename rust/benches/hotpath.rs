@@ -1,14 +1,251 @@
-//! §Perf — the end-to-end hot path: PJRT execute latency per artifact,
-//! full-iteration latency, environment and sampling micro-benches.
-//! This is the bench the performance pass iterates on (EXPERIMENTS.md
-//! §Perf records before/after).
+//! §Perf — the end-to-end hot path: execute latency per artifact,
+//! full-iteration latency, environment and sampling micro-benches, and
+//! the dense-vs-sparse execution sweep.  This is the bench the
+//! performance pass iterates on (EXPERIMENTS.md §Perf records
+//! before/after), and the sweep is the repo's perf-trajectory anchor:
+//! it writes `BENCH_native_sparse.json` and **exits non-zero** if the
+//! sparse path is slower than dense-masked at 90% sparsity (the CI
+//! bench-smoke gate).
+//!
+//! ```bash
+//! cargo bench --bench hotpath              # full run
+//! cargo bench --bench hotpath -- --smoke   # CI smoke: sweep only, few runs
+//! ```
+
+use std::sync::Arc;
+
+use learning_group::accel::load_alloc::balanced_indexes;
+use learning_group::accel::osel::OselEncoder;
 use learning_group::coordinator::{PrunerChoice, TrainConfig, Trainer};
 use learning_group::env::{MultiAgentEnv, PredatorPrey, PredatorPreyConfig};
 use learning_group::model::ModelState;
-use learning_group::runtime::{Arg, HostTensor, Runtime};
+use learning_group::runtime::{Arg, DeviceTensor, Executable, HostTensor, Runtime, SparseModel};
 use learning_group::util::benchutil::{bench, report};
+use learning_group::util::Pcg32;
+
+/// One artifact execution over cached params/masks device tensors plus
+/// four per-call host inputs — the shared shape of every sweep
+/// measurement (`policy_fwd`: obs/h/c/gate_prev, `grad_episode`:
+/// obs_seq/act_seq/gate_seq/returns).
+fn run_with(
+    exe: &Executable,
+    params: &DeviceTensor,
+    masks: &DeviceTensor,
+    host: [&HostTensor; 4],
+) -> Vec<HostTensor> {
+    exe.run_args(&[
+        Arg::Device(params),
+        Arg::Device(masks),
+        Arg::Host(host[0]),
+        Arg::Host(host[1]),
+        Arg::Host(host[2]),
+        Arg::Host(host[3]),
+    ])
+    .unwrap()
+}
+
+/// One sparsity level of the dense-vs-sparse sweep.
+struct SweepPoint {
+    label: &'static str,
+    groups: usize,
+    sparsity: f64,
+    fwd_dense_us: f64,
+    fwd_sparse_us: f64,
+    grad_dense_us: f64,
+    grad_sparse_us: f64,
+}
+
+impl SweepPoint {
+    fn fwd_speedup(&self) -> f64 {
+        self.fwd_dense_us / self.fwd_sparse_us
+    }
+
+    fn grad_speedup(&self) -> f64 {
+        self.grad_dense_us / self.grad_sparse_us
+    }
+}
+
+/// Dense-vs-sparse sweep over ~50/75/90% sparsity (FLGW-structured
+/// masks at G = 2/4/10).  Forward outputs are cross-checked for exact
+/// parity before anything is timed.
+fn dense_vs_sparse_sweep(rt: &mut Runtime, smoke: bool) -> Vec<SweepPoint> {
+    let m = rt.manifest().clone();
+    let state = ModelState::init(&m).unwrap();
+    let a = 8usize;
+    let exe_fwd = rt.load("policy_fwd_a8").unwrap();
+    let exe_grad = rt.load("grad_episode_a8").unwrap();
+    let t = m.dims.episode_len;
+    let (fw, fr) = if smoke { (2, 20) } else { (5, 200) };
+    let (gw, gr) = if smoke { (1, 5) } else { (3, 30) };
+
+    let mut points = Vec::new();
+    for &(label, g) in &[("50", 2usize), ("75", 4), ("90", 10)] {
+        // FLGW-structured masks at ~1 - 1/G sparsity, plus the OSEL
+        // encodings the sparse path is materialised from.
+        let mut rng = Pcg32::seeded(90 + g as u64);
+        let mut masks = vec![0.0f32; m.mask_size];
+        let mut encodings = Vec::new();
+        for l in &m.masked_layers {
+            let ig = balanced_indexes(l.rows, g, 0.0, &mut rng);
+            let og = balanced_indexes(l.cols, g, 0.0, &mut rng);
+            let (srm, _) = OselEncoder::default().encode(&ig, &og, g);
+            masks[l.offset..l.offset + l.size()]
+                .copy_from_slice(&OselEncoder::materialize_mask(&srm));
+            encodings.push(srm);
+        }
+        let sparse = Arc::new(SparseModel::from_encodings(&m, &encodings, 4).unwrap());
+        let sparsity = 1.0 - f64::from(sparse.density());
+        let params_t = HostTensor::F32(state.params.clone());
+        let masks_t = HostTensor::F32(masks);
+
+        // ---- forward: identical inputs down both paths
+        let obs_t = HostTensor::F32(vec![0.2; a * m.dims.obs_dim]);
+        let h_t = HostTensor::F32(vec![0.1; a * m.dims.hidden]);
+        let c_t = HostTensor::F32(vec![0.1; a * m.dims.hidden]);
+        let gp_t = HostTensor::F32(vec![1.0; a]);
+        let p_dev = exe_fwd.upload(0, &params_t).unwrap();
+        let dense_dev = exe_fwd.upload(1, &masks_t).unwrap();
+        let sparse_dev = exe_fwd.upload_sparse(1, &masks_t, sparse.clone()).unwrap();
+
+        let fwd_host = [&obs_t, &h_t, &c_t, &gp_t];
+        let dense_out = run_with(&exe_fwd, &p_dev, &dense_dev, fwd_host);
+        let sparse_out = run_with(&exe_fwd, &p_dev, &sparse_dev, fwd_host);
+        assert_eq!(
+            dense_out, sparse_out,
+            "sparse forward must match dense-masked bit-for-bit"
+        );
+
+        let sd = bench(fw, fr, || run_with(&exe_fwd, &p_dev, &dense_dev, fwd_host));
+        let ss = bench(fw, fr, || run_with(&exe_fwd, &p_dev, &sparse_dev, fwd_host));
+
+        // ---- backward (BPTT over T steps)
+        let obs_seq = HostTensor::F32(vec![0.2; t * a * m.dims.obs_dim]);
+        let act_seq = HostTensor::I32(vec![1; t * a]);
+        let gate_seq = HostTensor::F32(vec![1.0; t * a]);
+        let ret_seq = HostTensor::F32(vec![0.1; t]);
+        let pg_dev = exe_grad.upload(0, &params_t).unwrap();
+        let dense_g = exe_grad.upload(1, &masks_t).unwrap();
+        let sparse_g = exe_grad.upload_sparse(1, &masks_t, sparse.clone()).unwrap();
+        let grad_host = [&obs_seq, &act_seq, &gate_seq, &ret_seq];
+        let gd = bench(gw, gr, || run_with(&exe_grad, &pg_dev, &dense_g, grad_host));
+        let gs = bench(gw, gr, || run_with(&exe_grad, &pg_dev, &sparse_g, grad_host));
+
+        let point = SweepPoint {
+            label,
+            groups: g,
+            sparsity,
+            fwd_dense_us: sd.median.as_secs_f64() * 1e6,
+            fwd_sparse_us: ss.median.as_secs_f64() * 1e6,
+            grad_dense_us: gd.median.as_secs_f64() * 1e6,
+            grad_sparse_us: gs.median.as_secs_f64() * 1e6,
+        };
+        report(
+            &format!("bench/policy_fwd_a8@{label}%(dense-masked)"),
+            sd,
+            "",
+        );
+        report(
+            &format!("bench/policy_fwd_a8@{label}%(sparse)"),
+            ss,
+            &format!("{:.2}x", point.fwd_speedup()),
+        );
+        report(&format!("bench/grad_episode_a8@{label}%(dense-masked)"), gd, "");
+        report(
+            &format!("bench/grad_episode_a8@{label}%(sparse)"),
+            gs,
+            &format!("{:.2}x", point.grad_speedup()),
+        );
+        points.push(point);
+    }
+    points
+}
+
+/// Serialise the sweep to `BENCH_native_sparse.json` (cwd = workspace
+/// root under `cargo bench`) — the perf-trajectory artifact CI uploads.
+fn write_sweep_json(points: &[SweepPoint], smoke: bool) -> std::io::Result<()> {
+    let mut rows = String::new();
+    for (i, p) in points.iter().enumerate() {
+        if i > 0 {
+            rows.push_str(",\n");
+        }
+        rows.push_str(&format!(
+            "    {{\"label\": \"{}\", \"groups\": {}, \"sparsity\": {:.4}, \
+             \"fwd_dense_us\": {:.3}, \"fwd_sparse_us\": {:.3}, \"fwd_speedup\": {:.3}, \
+             \"grad_dense_us\": {:.3}, \"grad_sparse_us\": {:.3}, \"grad_speedup\": {:.3}}}",
+            p.label,
+            p.groups,
+            p.sparsity,
+            p.fwd_dense_us,
+            p.fwd_sparse_us,
+            p.fwd_speedup(),
+            p.grad_dense_us,
+            p.grad_sparse_us,
+            p.grad_speedup()
+        ));
+    }
+    let text = format!(
+        "{{\n  \"bench\": \"native_sparse\",\n  \"mode\": \"{}\",\n  \"agents\": 8,\n  \
+         \"fwd_speedup_target_90\": {FWD_SPEEDUP_TARGET_90:.1},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        if smoke { "smoke" } else { "full" },
+        rows
+    );
+    std::fs::write("BENCH_native_sparse.json", text)
+}
+
+/// The sparse path's forward-speedup target at 90% sparsity (the
+/// repo's perf-trajectory goal; recorded in the JSON and reported, but
+/// only "not slower than dense" hard-fails — a hard 2x gate would turn
+/// runner-speed variance into CI noise).
+const FWD_SPEEDUP_TARGET_90: f64 = 2.0;
+
+/// Run the sweep, write the JSON artifact, and gate: neither the
+/// forward nor the backward sparse path may be slower than dense-masked
+/// at 90% sparsity.  In smoke (CI) mode a regression exits non-zero;
+/// in full mode it is reported but the remaining benches still run.
+fn run_sweep(rt: &mut Runtime, smoke: bool) {
+    let points = dense_vs_sparse_sweep(rt, smoke);
+    write_sweep_json(&points, smoke).expect("writing BENCH_native_sparse.json");
+    println!("sweep written to BENCH_native_sparse.json");
+    let p90 = points.last().expect("sweep has a 90% point");
+    if p90.fwd_speedup() < FWD_SPEEDUP_TARGET_90 {
+        println!(
+            "NOTE: sparse@{}% forward speedup {:.2}x is below the {FWD_SPEEDUP_TARGET_90}x target",
+            p90.label,
+            p90.fwd_speedup()
+        );
+    }
+    for (what, speedup) in [("forward", p90.fwd_speedup()), ("grad", p90.grad_speedup())] {
+        if speedup < 1.0 {
+            eprintln!(
+                "REGRESSION: sparse@{}% {what} is slower than dense-masked ({speedup:.2}x)",
+                p90.label
+            );
+            if smoke {
+                std::process::exit(1);
+            }
+        }
+    }
+}
 
 fn main() {
+    let smoke = std::env::args().any(|arg| arg == "--smoke")
+        || std::env::var_os("LG_BENCH_SMOKE").is_some();
+
+    if smoke {
+        // CI smoke mode: the dense-vs-sparse sweep only, few runs.  The
+        // sweep IS the gate here, so an unavailable runtime is a hard
+        // failure, not a skip.
+        let mut rt = match Runtime::from_default_artifacts() {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("cannot run smoke sweep (runtime unavailable): {e:#}");
+                std::process::exit(1);
+            }
+        };
+        run_sweep(&mut rt, true);
+        return;
+    }
+
     // --- pure-host micro benches (no artifacts needed)
     let mut env = PredatorPrey::new(PredatorPreyConfig::with_agents(8));
     env.reset(1);
@@ -91,6 +328,9 @@ fn main() {
     ];
     let stats = bench(5, 100, || exe.run(&inputs).unwrap());
     report("bench/apply_update(PJRT execute)", stats, "");
+
+    // --- dense-vs-sparse execution sweep (perf-trajectory artifact)
+    run_sweep(&mut rt, false);
 
     // --- full training iteration (the system-level number)
     let cfg = TrainConfig {

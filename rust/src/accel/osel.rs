@@ -316,6 +316,57 @@ mod tests {
     }
 
     #[test]
+    fn all_zero_and_fully_dense_rows() {
+        // A max-index that matches no OG column yields an all-zero row
+        // (workload 0 — the VPU skips it entirely); one that matches
+        // every column yields a fully dense row.
+        let ig = [3u16, 1];
+        let og = [1u16, 1, 1, 1];
+        let (srm, _) = OselEncoder::default().encode(&ig, &og, 4);
+        assert_eq!(srm.workloads(), vec![0, 4]);
+        let mask = OselEncoder::materialize_mask(&srm);
+        assert_eq!(&mask[0..4], &[0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(&mask[4..8], &[1.0, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn single_group_is_fully_dense() {
+        // G = 1: every index is 0, so the mask is all ones; exactly one
+        // miss ever happens (the first row installs the only tuple).
+        let ig = vec![0u16; 8];
+        let og = vec![0u16; 6];
+        let (srm, stats) = OselEncoder::default().encode(&ig, &og, 1);
+        assert_eq!(stats.misses, 1);
+        assert_eq!(stats.hits, 7);
+        assert_eq!(srm.occupied(), 1);
+        let mask = OselEncoder::materialize_mask(&srm);
+        assert_eq!(mask.len(), 8 * 6);
+        assert!(mask.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn encode_round_trips_through_decode() {
+        // Original mask → OSEL encode → materialize must reproduce the
+        // original exactly, at every group count (including ones where
+        // some groups go unused).
+        let mut rng = Pcg32::seeded(13);
+        for &g in &[1usize, 2, 4, 16] {
+            let ig = random_indexes(&mut rng, 24, g);
+            let og = random_indexes(&mut rng, 40, g);
+            let mut original = vec![0.0f32; 24 * 40];
+            for (i, &mi) in ig.iter().enumerate() {
+                for (j, &oj) in og.iter().enumerate() {
+                    if mi == oj {
+                        original[i * 40 + j] = 1.0;
+                    }
+                }
+            }
+            let (srm, _) = OselEncoder::default().encode(&ig, &og, g);
+            assert_eq!(OselEncoder::materialize_mask(&srm), original, "G={g}");
+        }
+    }
+
+    #[test]
     fn all_hits_after_g_distinct_indexes() {
         // Once all G bitvectors exist, the encoder always hits (Fig. 5,
         // "starting from cycle 6").

@@ -1,6 +1,7 @@
 //! Training configuration (CLI-facing; defaults follow the paper §IV-A).
 
 use crate::env::EnvConfig;
+use crate::runtime::ExecMode;
 
 /// Which pruning algorithm to run (Fig. 4(a) candidates).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -66,6 +67,12 @@ pub struct TrainConfig {
     pub rollouts: usize,
     /// Print metrics every N iterations (0 = silent).
     pub log_every: usize,
+    /// Native-runtime execution path for the masked matmuls (`--exec`):
+    /// [`ExecMode::Sparse`] computes on the OSEL-compressed weights
+    /// (default), [`ExecMode::DenseMasked`] is the dense ⊙-mask
+    /// reference.  Bit-identical results either way (parity-tested);
+    /// only throughput differs.
+    pub exec: ExecMode,
 }
 
 impl Default for TrainConfig {
@@ -81,6 +88,7 @@ impl Default for TrainConfig {
             env: EnvConfig::default().with_agents(agents),
             rollouts: 1,
             log_every: 10,
+            exec: ExecMode::Sparse,
         }
     }
 }

@@ -26,6 +26,7 @@ mod scheduler;
 mod trainer;
 
 pub use config::{PrunerChoice, TrainConfig};
+pub use crate::runtime::ExecMode;
 pub use metrics::{IterationMetrics, MetricsLog};
 pub use rollout::{collect_parallel, episode_seed, run_episode};
 pub use scheduler::{Stage, StageTimer};

@@ -11,6 +11,14 @@
 //! [`TrainConfig::rollouts`] > 1 the forward stage collects the
 //! minibatch on parallel worker threads (see
 //! [`crate::coordinator::rollout`]'s determinism contract).
+//!
+//! With [`TrainConfig::exec`] = [`ExecMode::Sparse`] (the default) the
+//! native runtime computes directly on the OSEL-compressed weights: the
+//! trainer materialises a [`SparseModel`] from FLGW's encodings after
+//! every mask regeneration and attaches it to the masks upload, so all
+//! rollout workers and the backward pass share it.  `--exec dense`
+//! selects the dense ⊙-mask reference path; results are bit-identical
+//! (see `rust/tests/sparse_parity.rs`), only throughput differs.
 
 use std::sync::Arc;
 
@@ -26,7 +34,7 @@ use crate::pruning::{
     BlockCirculantPruner, DensePruner, FlgwPruner, GroupSparseTrainingPruner,
     IterativeMagnitudePruner, PruneContext, PruningAlgorithm,
 };
-use crate::runtime::{Arg, DeviceTensor, Executable, HostTensor, Runtime};
+use crate::runtime::{Arg, DeviceTensor, ExecMode, Executable, HostTensor, Runtime, SparseModel};
 
 /// Concrete pruner dispatch (no trait objects: the trainer needs typed
 /// access to FLGW's grouping state for the artifact-driven update).
@@ -57,6 +65,18 @@ impl Pruner {
             Pruner::Iterative(p) => p.update_masks(state, ctx),
             Pruner::BlockCirculant(p) => p.update_masks(state, ctx),
             Pruner::Gst(p) => p.update_masks(state, ctx),
+        }
+    }
+
+    /// Whether the last `update_masks` changed the masks (see
+    /// [`PruningAlgorithm::masks_changed`]).
+    fn masks_changed(&self) -> bool {
+        match self {
+            Pruner::Dense(p) => p.masks_changed(),
+            Pruner::Flgw(p) => p.masks_changed(),
+            Pruner::Iterative(p) => p.masks_changed(),
+            Pruner::BlockCirculant(p) => p.masks_changed(),
+            Pruner::Gst(p) => p.masks_changed(),
         }
     }
 
@@ -137,7 +157,7 @@ impl Trainer {
         let exe_update = runtime.load("apply_update")?;
 
         let (pruner, exe_flgw) = match cfg.pruner {
-            PrunerChoice::Dense => (Pruner::Dense(DensePruner), None),
+            PrunerChoice::Dense => (Pruner::Dense(DensePruner::default()), None),
             PrunerChoice::Flgw(g) => {
                 let exe = runtime.load(&format!("flgw_update_g{g}"))?;
                 (Pruner::Flgw(FlgwPruner::init(&manifest, g)?), Some(exe))
@@ -186,13 +206,41 @@ impl Trainer {
         self.runtime.manifest()
     }
 
-    /// Re-upload params/masks to the device (call after either changed).
+    /// Re-upload whichever of params/masks was invalidated (`None`) —
+    /// the two refresh independently, so the per-iteration params
+    /// update does not force rebuilding the masks upload (which FLGW's
+    /// no-op regeneration deliberately keeps valid).
+    ///
+    /// In sparse exec mode the masks upload also carries the compressed
+    /// structure the native kernels compute on: straight from FLGW's
+    /// per-layer OSEL encodings when that pruner is running (and has
+    /// encoded at least once), else from a scan of the dense masks.
+    /// The row→core partition uses the rollout worker count, matching
+    /// the threads that consume the shared structure.
     fn refresh_device_state(&mut self) -> Result<()> {
         // policy_fwd input 0/1 shapes == grad_episode input 0/1 shapes
-        self.params_dev =
-            Some(self.exe_fwd.upload(0, &HostTensor::F32(self.state.params.clone()))?);
-        self.masks_dev =
-            Some(self.exe_fwd.upload(1, &HostTensor::F32(self.state.masks.clone()))?);
+        if self.params_dev.is_none() {
+            self.params_dev =
+                Some(self.exe_fwd.upload(0, &HostTensor::F32(self.state.params.clone()))?);
+        }
+        if self.masks_dev.is_none() {
+            let masks_t = HostTensor::F32(self.state.masks.clone());
+            let masks_dev = match self.cfg.exec {
+                ExecMode::DenseMasked => self.exe_fwd.upload(1, &masks_t)?,
+                ExecMode::Sparse => {
+                    let manifest = self.runtime.manifest();
+                    let cores = self.cfg.rollouts.max(1);
+                    let model = match self.pruner.as_flgw() {
+                        Some(f) if f.encodings.len() == manifest.masked_layers.len() => {
+                            SparseModel::from_encodings(manifest, &f.encodings, cores)?
+                        }
+                        _ => SparseModel::from_dense_masks(manifest, &self.state.masks, cores)?,
+                    };
+                    self.exe_fwd.upload_sparse(1, &masks_t, Arc::new(model))?
+                }
+            };
+            self.masks_dev = Some(masks_dev);
+        }
         Ok(())
     }
 
@@ -274,7 +322,13 @@ impl Trainer {
             self.timer
                 .time(Stage::WeightGrouping, || pruner.update_masks(state, &ctx))?;
             self.dmask_accum = dmasks;
-            self.masks_dev = None; // masks changed: re-upload lazily
+            // Invalidate the device masks only when they actually
+            // changed — a no-op regeneration (FLGW with stable argmax
+            // signatures, the primed dense baseline) keeps the uploaded
+            // masks and the sparse structure attached to them valid.
+            if self.pruner.masks_changed() {
+                self.masks_dev = None; // masks changed: re-upload lazily
+            }
         }
 
         // -------- stage 2: forward (B rollouts, parallel when asked)

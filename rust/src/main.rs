@@ -7,7 +7,7 @@
 //! ```text
 //! learning-group train [--agents A] [--batch B] [--iterations N]
 //!                      [--env predator_prey|traffic_junction:<level>]
-//!                      [--rollouts R]
+//!                      [--rollouts R] [--exec sparse|dense]
 //!                      [--pruner dense|flgw:G|iterative:P|bc:BxF|gst:BxF:P]
 //!                      [--seed S] [--csv PATH]
 //! learning-group roofline            # Fig 1
@@ -23,11 +23,14 @@
 //! or `traffic_junction:easy|medium|hard` (IC3Net's other benchmark with
 //! a difficulty curriculum).  `--rollouts R` collects each iteration's
 //! minibatch on R parallel worker threads; metrics are identical to the
-//! sequential run for a fixed seed.
+//! sequential run for a fixed seed.  `--exec sparse|dense` picks the
+//! native-runtime path: compute on the OSEL-compressed weights
+//! (default) or the dense ⊙-mask reference — bit-identical results,
+//! different throughput (see `cargo bench --bench hotpath`).
 
 use anyhow::{anyhow, Result};
 
-use learning_group::coordinator::{PrunerChoice, TrainConfig, Trainer};
+use learning_group::coordinator::{ExecMode, PrunerChoice, TrainConfig, Trainer};
 use learning_group::env::EnvConfig;
 use learning_group::experiments;
 
@@ -88,6 +91,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     let env = EnvConfig::parse(&env_s).ok_or_else(|| {
         anyhow!("unknown env spec {env_s:?} (predator_prey | traffic_junction:<level>)")
     })?;
+    let exec_s = args
+        .flags
+        .get("exec")
+        .cloned()
+        .unwrap_or_else(|| "sparse".to_string());
+    let exec = ExecMode::parse(&exec_s)
+        .ok_or_else(|| anyhow!("unknown exec mode {exec_s:?} (sparse | dense)"))?;
     let cfg = TrainConfig {
         batch: args.get("batch", 4)?,
         iterations: args.get("iterations", 200)?,
@@ -95,16 +105,18 @@ fn cmd_train(args: &Args) -> Result<()> {
         seed: args.get("seed", 1)?,
         rollouts: args.get("rollouts", 1)?,
         log_every: args.get("log-every", 10)?,
+        exec,
         ..TrainConfig::default().with_agents(agents)
     }
     .with_env(env);
     eprintln!(
-        "training IC3Net: env={} agents={} batch={} iterations={} rollouts={} pruner={pruner_s}",
+        "training IC3Net: env={} agents={} batch={} iterations={} rollouts={} exec={} pruner={pruner_s}",
         cfg.env.name(),
         cfg.agents,
         cfg.batch,
         cfg.iterations,
-        cfg.rollouts
+        cfg.rollouts,
+        cfg.exec.name()
     );
     let mut trainer = Trainer::from_default_artifacts(cfg)?;
     let log = trainer.train()?;
@@ -179,6 +191,7 @@ fn main() -> Result<()> {
             println!("train flags: --agents A --batch B --iterations N --seed S --csv PATH");
             println!("             --env predator_prey|traffic_junction:easy|medium|hard");
             println!("             --rollouts R (parallel episode workers)");
+            println!("             --exec sparse|dense (compressed vs dense-masked kernels)");
             println!("             --pruner dense|flgw:G|iterative:P|bc:BxF|gst:BxF:P");
             println!("see README.md for the full CLI reference and paper-figure mapping");
         }

@@ -20,13 +20,27 @@ use crate::model::{GroupingState, ModelState};
 use crate::pruning::{PruneContext, PruningAlgorithm};
 
 /// FLGW pruner: grouping matrices + OSEL encoder + per-layer encodings.
+///
+/// The encodings persist between iterations: a layer whose argmax index
+/// lists are unchanged since the last encode keeps its sparse row
+/// memory *and* its mask bytes (this pruner must be the only mask
+/// writer of the `ModelState` it drives — the trainer guarantees that),
+/// so stable layers cost neither encode cycles nor a mask copy.
 pub struct FlgwPruner {
     pub grouping: GroupingState,
     pub encoder: OselEncoder,
     /// Last iteration's per-layer sparse row memories (layer order).
     pub encodings: Vec<SparseRowMemory>,
-    /// Cumulative encode statistics (cycle accounting for Fig. 10/12).
+    /// Cumulative encode statistics (cycle accounting for Fig. 10/12;
+    /// skipped layers charge nothing — the encode never ran).
     pub stats: OselStats,
+    /// Per-layer (IG, OG) argmax index lists at the last encode — the
+    /// skip-unchanged-layers key (compared exactly: the lists are a few
+    /// hundred u16s per layer, so a hash would trade exactness for
+    /// nothing).
+    layer_key: Vec<(Vec<u16>, Vec<u16>)>,
+    /// Whether the last `update_masks` re-encoded at least one layer.
+    changed: bool,
 }
 
 impl FlgwPruner {
@@ -36,6 +50,8 @@ impl FlgwPruner {
             encoder: OselEncoder::default(),
             encodings: Vec::new(),
             stats: OselStats::default(),
+            layer_key: Vec::new(),
+            changed: true,
         }
     }
 
@@ -54,17 +70,37 @@ impl FlgwPruner {
         self.grouping.g
     }
 
-    /// Encode all masked layers and write the masks into `state`.
+    /// Encode the masked layers and write the masks into `state`,
+    /// skipping layers whose argmax index lists — and therefore masks —
+    /// are unchanged since the last encode.
     fn encode_all(&mut self, state: &mut ModelState, manifest: &Manifest) -> Result<()> {
-        self.encodings.clear();
-        for layer in manifest.masked_layers.clone() {
+        if self.encodings.len() != manifest.masked_layers.len() {
+            // first run (or a manifest swap): encode everything
+            self.encodings.clear();
+            self.layer_key.clear();
+        }
+        self.changed = false;
+        for (li, layer) in manifest.masked_layers.iter().enumerate() {
             let ig = self.grouping.ig_indexes(manifest, &layer.name)?;
             let og = self.grouping.og_indexes(manifest, &layer.name)?;
+            if li < self.encodings.len()
+                && self.layer_key[li].0 == ig
+                && self.layer_key[li].1 == og
+            {
+                continue; // unchanged assignments ⇒ identical mask
+            }
             let (srm, stats) = self.encoder.encode(&ig, &og, self.grouping.g);
             let mask = OselEncoder::materialize_mask(&srm);
             state.masks[layer.offset..layer.offset + layer.size()]
                 .copy_from_slice(&mask);
-            self.encodings.push(srm);
+            self.changed = true;
+            if li < self.encodings.len() {
+                self.encodings[li] = srm;
+                self.layer_key[li] = (ig, og);
+            } else {
+                self.encodings.push(srm);
+                self.layer_key.push((ig, og));
+            }
             merge_stats(&mut self.stats, stats);
         }
         Ok(())
@@ -87,6 +123,10 @@ impl PruningAlgorithm for FlgwPruner {
 
     fn update_masks(&mut self, state: &mut ModelState, ctx: &PruneContext<'_>) -> Result<()> {
         self.encode_all(state, ctx.manifest)
+    }
+
+    fn masks_changed(&self) -> bool {
+        self.changed
     }
 }
 
@@ -144,6 +184,37 @@ mod tests {
         let first = s.masks.clone();
         p.update_masks(&mut s, &ctx(&m, 1, &[])).unwrap();
         assert_eq!(s.masks, first);
+    }
+
+    #[test]
+    fn unchanged_grouping_skips_reencode() {
+        let m = tiny_manifest();
+        let mut s = tiny_state(&m);
+        let mut p = pruner(&m, 4);
+        p.update_masks(&mut s, &ctx(&m, 0, &[])).unwrap();
+        let cycles_after_first = p.stats.total_cycles();
+        assert!(cycles_after_first > 0);
+        assert!(p.masks_changed());
+        let masks_first = s.masks.clone();
+        // same grouping ⇒ same signatures ⇒ no layer re-encodes
+        p.update_masks(&mut s, &ctx(&m, 1, &[])).unwrap();
+        assert_eq!(
+            p.stats.total_cycles(),
+            cycles_after_first,
+            "unchanged layers must not charge encode cycles"
+        );
+        assert!(!p.masks_changed(), "no-op regeneration must report unchanged");
+        assert_eq!(s.masks, masks_first);
+        assert_eq!(p.encodings.len(), m.masked_layers.len());
+        // perturbed grouping ⇒ signatures change ⇒ re-encode (and the
+        // cached encodings refresh along with the masks)
+        for v in p.grouping.grouping.iter_mut() {
+            *v = -*v;
+        }
+        p.update_masks(&mut s, &ctx(&m, 2, &[])).unwrap();
+        assert!(p.stats.total_cycles() > cycles_after_first);
+        assert!(p.masks_changed());
+        assert_ne!(s.masks, masks_first);
     }
 
     #[test]

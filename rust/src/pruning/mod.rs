@@ -58,15 +58,32 @@ pub trait PruningAlgorithm {
     /// Regenerate masks for this iteration.
     fn update_masks(&mut self, state: &mut ModelState, ctx: &PruneContext<'_>) -> Result<()>;
 
+    /// Whether the last [`Self::update_masks`] call changed
+    /// `state.masks`.  The trainer uses this to keep the uploaded
+    /// device masks — and the compressed sparse structure attached to
+    /// them — across no-op regenerations.  Conservative default: assume
+    /// changed; pruners that can tell cheaply (FLGW via its argmax
+    /// signatures, the dense baseline) override it.
+    fn masks_changed(&self) -> bool {
+        true
+    }
+
     /// Average sparsity currently induced (0 = dense).
     fn sparsity(&self, state: &ModelState) -> f32 {
         1.0 - state.mask_density()
     }
 }
 
-/// The no-pruning baseline of Fig. 4(a).
+/// The no-pruning baseline of Fig. 4(a).  Masks are written once (all
+/// ones) and reported unchanged afterwards — like every pruner, it must
+/// be the only mask writer of the `ModelState` it drives.
 #[derive(Debug, Default)]
-pub struct DensePruner;
+pub struct DensePruner {
+    /// Whether the all-ones write already happened.
+    primed: bool,
+    /// Whether the last `update_masks` call wrote the masks.
+    wrote: bool,
+}
 
 impl PruningAlgorithm for DensePruner {
     fn name(&self) -> &'static str {
@@ -74,10 +91,18 @@ impl PruningAlgorithm for DensePruner {
     }
 
     fn update_masks(&mut self, state: &mut ModelState, _ctx: &PruneContext<'_>) -> Result<()> {
-        for m in state.masks.iter_mut() {
-            *m = 1.0;
+        self.wrote = !self.primed;
+        if !self.primed {
+            for m in state.masks.iter_mut() {
+                *m = 1.0;
+            }
+            self.primed = true;
         }
         Ok(())
+    }
+
+    fn masks_changed(&self) -> bool {
+        self.wrote
     }
 }
 
@@ -136,8 +161,14 @@ mod tests {
         let m = tiny_manifest();
         let mut s = tiny_state(&m);
         s.masks[3] = 0.0;
-        DensePruner.update_masks(&mut s, &ctx(&m, 0, &[])).unwrap();
+        let mut p = DensePruner::default();
+        p.update_masks(&mut s, &ctx(&m, 0, &[])).unwrap();
         assert!(s.masks.iter().all(|&x| x == 1.0));
-        assert_eq!(DensePruner.sparsity(&s), 0.0);
+        assert_eq!(p.sparsity(&s), 0.0);
+        // the priming call reports a write; later calls are no-ops
+        assert!(p.masks_changed());
+        p.update_masks(&mut s, &ctx(&m, 1, &[])).unwrap();
+        assert!(!p.masks_changed());
+        assert!(s.masks.iter().all(|&x| x == 1.0));
     }
 }

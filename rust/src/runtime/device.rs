@@ -27,6 +27,11 @@ pub struct DeviceTensor {
     pub(crate) repr: DeviceRepr,
     pub(crate) len: usize,
     pub(crate) dtype: &'static str,
+    /// Compressed-weight structure attached by
+    /// [`crate::runtime::Executable::upload_sparse`]: when this tensor
+    /// is the masks input of a native execution, the sparse kernels
+    /// consume it instead of scanning the dense mask.
+    pub(crate) sparse: Option<std::sync::Arc<crate::runtime::sparse::SparseModel>>,
 }
 
 impl DeviceTensor {

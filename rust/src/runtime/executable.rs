@@ -13,6 +13,7 @@ use anyhow::{anyhow, Result};
 use crate::manifest::{ArtifactSpec, Manifest};
 use crate::runtime::device::DeviceRepr;
 use crate::runtime::native::{self, NativeOp};
+use crate::runtime::sparse::SparseModel;
 use crate::runtime::{Arg, DeviceTensor, HostTensor};
 
 /// Backend-specific execution state.
@@ -89,10 +90,33 @@ impl Executable {
                 repr: DeviceRepr::Native(tensor.clone()),
                 len: tensor.len(),
                 dtype: tensor.dtype(),
+                sparse: None,
             }),
             #[cfg(feature = "pjrt")]
             ExecBackend::Pjrt(exe) => exe.upload(&self.name, &self.spec.inputs[index], tensor),
         }
+    }
+
+    /// Upload the flat masks tensor *together with* its compressed
+    /// structure: native executions that receive the returned handle run
+    /// the sparse kernels over `sparse` instead of the dense ⊙-mask
+    /// reference.  The caller is responsible for keeping the structure
+    /// in sync with the tensor (the trainer rebuilds both whenever the
+    /// masks change).  On the PJRT backend the attachment is dropped —
+    /// the compiled HLO executes its own masked-dense graph.
+    pub fn upload_sparse(
+        &self,
+        index: usize,
+        tensor: &HostTensor,
+        sparse: Arc<SparseModel>,
+    ) -> Result<DeviceTensor> {
+        let mut dev = self.upload(index, tensor)?;
+        match &self.backend {
+            ExecBackend::Native { .. } => dev.sparse = Some(sparse),
+            #[cfg(feature = "pjrt")]
+            ExecBackend::Pjrt(_) => {}
+        }
+        Ok(dev)
     }
 
     /// Execute with a mix of host tensors (uploaded per call) and cached
@@ -111,6 +135,18 @@ impl Executable {
         }
         match &self.backend {
             ExecBackend::Native { op, manifest } => {
+                // Sparse-exec attachment: a device tensor uploaded via
+                // `upload_sparse` carries the compressed-weight
+                // structure (the trainer attaches it to the masks); the
+                // sparse kernels consume it in place of the dense mask.
+                let mut sparse: Option<&SparseModel> = None;
+                for arg in inputs {
+                    if let Arg::Device(d) = arg {
+                        if let Some(s) = d.sparse.as_deref() {
+                            sparse = Some(s);
+                        }
+                    }
+                }
                 // Materialize every argument as a host view; device
                 // tensors from another backend fall back to a copy
                 // (f32-only — the cached cross-backend tensors are the
@@ -143,7 +179,7 @@ impl Executable {
                         },
                     }
                 }
-                let outs = native::execute(op, manifest, &views)?;
+                let outs = native::execute(op, manifest, &views, sparse)?;
                 self.check_outputs(outs)
             }
             #[cfg(feature = "pjrt")]

@@ -16,16 +16,24 @@
 //! [`Runtime::load`] picks per artifact: PJRT when the feature is on and
 //! the artifact file exists on disk, the native op otherwise — so a
 //! partially-built artifacts directory still runs.
+//!
+//! The native backend additionally has a **sparse execution path**
+//! ([`sparse`]): a [`SparseModel`] built from the OSEL encodings can be
+//! attached to the masks upload ([`Executable::upload_sparse`]), and the
+//! masked matmuls then touch only surviving weights — bit-identical to
+//! the dense ⊙-mask reference (`ExecMode::DenseMasked`, `--exec dense`).
 
 mod device;
 mod executable;
 pub(crate) mod native;
 #[cfg(feature = "pjrt")]
 pub(crate) mod pjrt;
+pub mod sparse;
 mod tensor;
 
 pub use device::{Arg, DeviceTensor};
 pub use executable::Executable;
+pub use sparse::{ExecMode, SparseLayer, SparseModel};
 pub use tensor::HostTensor;
 
 use std::collections::HashMap;

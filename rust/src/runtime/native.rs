@@ -21,11 +21,21 @@
 //! Everything is plain `f32` slices and index loops: the hot shapes are
 //! small (A ≤ 10, H = 128), and keeping the kernels dependency-free is
 //! the point of this backend.
+//!
+//! **Sparse execution.**  `policy_fwd` and `grad_episode` accept an
+//! optional [`SparseModel`] (attached to the masks upload by
+//! [`crate::runtime::Executable::upload_sparse`]): when present, the
+//! masked matmuls and the BPTT transposed products iterate only the
+//! surviving weights through the compressed structure — bit-identical
+//! to the dense ⊙-mask reference, because the skipped terms are exact
+//! `±0.0` additions and the surviving terms accumulate in the same
+//! order (see `runtime::sparse` and `rust/tests/sparse_parity.rs`).
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 use anyhow::{anyhow, Result};
 
 use crate::manifest::Manifest;
+use crate::runtime::sparse::{SparseLayer, SparseModel};
 use crate::runtime::HostTensor;
 
 /// One native op, parsed from an artifact name.
@@ -72,6 +82,7 @@ pub(crate) fn execute(
     op: &NativeOp,
     m: &Manifest,
     inputs: &[&HostTensor],
+    sparse: Option<&SparseModel>,
 ) -> Result<Vec<HostTensor>> {
     match *op {
         NativeOp::PolicyFwd { agents } => policy_fwd(
@@ -83,6 +94,7 @@ pub(crate) fn execute(
             inputs[3].as_f32()?,
             inputs[4].as_f32()?,
             inputs[5].as_f32()?,
+            sparse,
         ),
         NativeOp::GradEpisode { agents } => grad_episode(
             m,
@@ -93,6 +105,7 @@ pub(crate) fn execute(
             inputs[3].as_i32()?,
             inputs[4].as_f32()?,
             inputs[5].as_f32()?,
+            sparse,
         ),
         NativeOp::ApplyUpdate => Ok(apply_update(
             m,
@@ -135,6 +148,12 @@ struct Net<'a> {
     b_v: &'a [f32],
     w_g: &'a [f32],
     b_g: &'a [f32],
+    /// Compressed structures per masked layer (sparse exec mode;
+    /// `None` = dense ⊙-mask reference).
+    s_enc: Option<&'a SparseLayer>,
+    s_comm: Option<&'a SparseLayer>,
+    s_x: Option<&'a SparseLayer>,
+    s_h: Option<&'a SparseLayer>,
 }
 
 /// (offset, size) of a named entry in the flat parameter buffer.
@@ -158,7 +177,12 @@ fn mslice<'a>(m: &Manifest, masks: &'a [f32], name: &str) -> Result<&'a [f32]> {
 }
 
 impl<'a> Net<'a> {
-    fn new(m: &Manifest, params: &'a [f32], masks: &'a [f32]) -> Result<Self> {
+    fn new(
+        m: &Manifest,
+        params: &'a [f32],
+        masks: &'a [f32],
+        sparse: Option<&'a SparseModel>,
+    ) -> Result<Self> {
         Ok(Net {
             obs_dim: m.dims.obs_dim,
             hidden: m.dims.hidden,
@@ -179,6 +203,10 @@ impl<'a> Net<'a> {
             b_v: pslice(m, params, "b_v")?,
             w_g: pslice(m, params, "w_g")?,
             b_g: pslice(m, params, "b_g")?,
+            s_enc: sparse.and_then(|s| s.layer("w_enc")),
+            s_comm: sparse.and_then(|s| s.layer("w_comm")),
+            s_x: sparse.and_then(|s| s.layer("w_x")),
+            s_h: sparse.and_then(|s| s.layer("w_h")),
         })
     }
 }
@@ -289,6 +317,103 @@ fn dy_wt_masked_into(
     }
 }
 
+/// y (rows x cols) += x (rows x k) @ (w ⊙ mask), with the surviving
+/// positions taken from the compressed layer structure instead of the
+/// dense mask.  Bit-identical to [`matmul_masked_into`] up to the sign
+/// of exact zeros: every skipped term multiplies a 0.0 mask entry.
+/// Rows are walked core by core through the load allocation (row-based
+/// partition — contiguous chunks in ascending order, so the
+/// accumulation order matches the dense kernel exactly).
+fn matmul_sparse_into(
+    y: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    sl: &SparseLayer,
+    rows: usize,
+    k: usize,
+    cols: usize,
+) {
+    debug_assert_eq!((sl.rows, sl.cols), (k, cols));
+    for i in 0..rows {
+        let yrow = &mut y[i * cols..(i + 1) * cols];
+        for core in &sl.alloc.per_core {
+            for &kk in &core.rows {
+                let xv = x[i * k + kk];
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &w[kk * cols..(kk + 1) * cols];
+                for &j in sl.row(kk) {
+                    yrow[j as usize] += xv * wrow[j as usize];
+                }
+            }
+        }
+    }
+}
+
+/// dx (rows x k) += dy (rows x cols) @ (w ⊙ mask)^T through the
+/// compressed structure — the BPTT transposed product.  Same parity
+/// contract as [`matmul_sparse_into`].
+fn dy_wt_sparse_into(
+    dx: &mut [f32],
+    dy: &[f32],
+    w: &[f32],
+    sl: &SparseLayer,
+    rows: usize,
+    k: usize,
+    cols: usize,
+) {
+    debug_assert_eq!((sl.rows, sl.cols), (k, cols));
+    for i in 0..rows {
+        let dyrow = &dy[i * cols..(i + 1) * cols];
+        for core in &sl.alloc.per_core {
+            for &kk in &core.rows {
+                let wrow = &w[kk * cols..(kk + 1) * cols];
+                let mut acc = 0.0f32;
+                for &j in sl.row(kk) {
+                    acc += dyrow[j as usize] * wrow[j as usize];
+                }
+                dx[i * k + kk] += acc;
+            }
+        }
+    }
+}
+
+/// Masked-matmul dispatch: the compressed path when a sparse structure
+/// is attached, the dense ⊙-mask reference otherwise.
+fn mm_masked(
+    y: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    mask: &[f32],
+    sl: Option<&SparseLayer>,
+    rows: usize,
+    k: usize,
+    cols: usize,
+) {
+    match sl {
+        Some(sl) => matmul_sparse_into(y, x, w, sl, rows, k, cols),
+        None => matmul_masked_into(y, x, w, mask, rows, k, cols),
+    }
+}
+
+/// Transposed-product dispatch (see [`mm_masked`]).
+fn dy_wt_mm(
+    dx: &mut [f32],
+    dy: &[f32],
+    w: &[f32],
+    mask: &[f32],
+    sl: Option<&SparseLayer>,
+    rows: usize,
+    k: usize,
+    cols: usize,
+) {
+    match sl {
+        Some(sl) => dy_wt_sparse_into(dx, dy, w, sl, rows, k, cols),
+        None => dy_wt_masked_into(dx, dy, w, mask, rows, k, cols),
+    }
+}
+
 /// (softmax probabilities, log-probabilities) of one logit row.
 fn softmax_logp(logits: &[f32]) -> (Vec<f32>, Vec<f32>) {
     let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
@@ -391,18 +516,18 @@ fn step_forward(
     let (nact, ngate) = (net.n_actions, net.n_gate);
 
     let mut e = vec![0.0f32; a * hd];
-    matmul_masked_into(&mut e, obs, net.w_enc, net.m_enc, a, net.obs_dim, hd);
+    mm_masked(&mut e, obs, net.w_enc, net.m_enc, net.s_enc, a, net.obs_dim, hd);
     for v in e.iter_mut() {
         *v = v.tanh();
     }
 
     let comm_in = comm_input(h, gate_prev, a, hd);
     let mut x = e.clone();
-    matmul_masked_into(&mut x, &comm_in, net.w_comm, net.m_comm, a, hd, hd);
+    mm_masked(&mut x, &comm_in, net.w_comm, net.m_comm, net.s_comm, a, hd, hd);
 
     let mut gates = vec![0.0f32; a * 4 * hd];
-    matmul_masked_into(&mut gates, &x, net.w_x, net.m_x, a, hd, 4 * hd);
-    matmul_masked_into(&mut gates, h, net.w_h, net.m_h, a, hd, 4 * hd);
+    mm_masked(&mut gates, &x, net.w_x, net.m_x, net.s_x, a, hd, 4 * hd);
+    mm_masked(&mut gates, h, net.w_h, net.m_h, net.s_h, a, hd, 4 * hd);
     for i in 0..a {
         for j in 0..4 * hd {
             gates[i * 4 * hd + j] += net.b_lstm[j];
@@ -472,8 +597,9 @@ fn policy_fwd(
     h: &[f32],
     c: &[f32],
     gate_prev: &[f32],
+    sparse: Option<&SparseModel>,
 ) -> Result<Vec<HostTensor>> {
-    let net = Net::new(m, params, masks)?;
+    let net = Net::new(m, params, masks, sparse)?;
     let acts = step_forward(&net, a, obs, h, c, gate_prev);
     Ok(vec![
         HostTensor::F32(acts.logits),
@@ -519,11 +645,12 @@ fn grad_episode(
     act_seq: &[i32],
     gate_seq: &[f32],
     returns: &[f32],
+    sparse: Option<&SparseModel>,
 ) -> Result<Vec<HostTensor>> {
     let d = m.dims.clone();
     let (hd, nact, ngate, t_len) = (d.hidden, d.n_actions, d.n_gate, d.episode_len);
     let hy = m.hyper.clone();
-    let net = Net::new(m, params, masks)?;
+    let net = Net::new(m, params, masks, sparse)?;
 
     // ---- forward, storing every step's activations and carry inputs
     let mut acts: Vec<StepActs> = Vec::with_capacity(t_len);
@@ -658,6 +785,10 @@ fn grad_episode(
                 }
             }
         }
+        // The raw weight-gradient products stay dense on purpose: the
+        // mask cotangent needs d/dmask at *every* position (unmasking a
+        // weight is exactly what FLGW trains on), so there is nothing to
+        // skip.  The transposed products below carry the sparse path.
         let mut raw = vec![0.0f32; hd * 4 * hd];
         xt_dy_into(&mut raw, &sa.x, &dgates, a, hd, 4 * hd);
         masked_grad(&mut dparams, &mut dmasks, m, "w_x", &raw, net.w_x, net.m_x)?;
@@ -666,9 +797,9 @@ fn grad_episode(
         masked_grad(&mut dparams, &mut dmasks, m, "w_h", &raw, net.w_h, net.m_h)?;
 
         let mut dx = vec![0.0f32; a * hd];
-        dy_wt_masked_into(&mut dx, &dgates, net.w_x, net.m_x, a, hd, 4 * hd);
+        dy_wt_mm(&mut dx, &dgates, net.w_x, net.m_x, net.s_x, a, hd, 4 * hd);
         let mut dh_prev = vec![0.0f32; a * hd];
-        dy_wt_masked_into(&mut dh_prev, &dgates, net.w_h, net.m_h, a, hd, 4 * hd);
+        dy_wt_mm(&mut dh_prev, &dgates, net.w_h, net.m_h, net.s_h, a, hd, 4 * hd);
 
         // -- encoder branch: x = tanh(obs @ W_enc) + comm
         let mut dpre = vec![0.0f32; a * hd];
@@ -684,7 +815,7 @@ fn grad_episode(
         xt_dy_into(&mut raw_comm, &sa.comm_in, &dx, a, hd, hd);
         masked_grad(&mut dparams, &mut dmasks, m, "w_comm", &raw_comm, net.w_comm, net.m_comm)?;
         let mut dcomm_in = vec![0.0f32; a * hd];
-        dy_wt_masked_into(&mut dcomm_in, &dx, net.w_comm, net.m_comm, a, hd, hd);
+        dy_wt_mm(&mut dcomm_in, &dx, net.w_comm, net.m_comm, net.s_comm, a, hd, hd);
 
         // -- comm_in -> previous hidden state (exclude-self mean)
         let denom = (a.max(2) - 1) as f32;
@@ -916,10 +1047,10 @@ mod tests {
         let ret: Vec<f32> = (0..t).map(|i| 0.05 * i as f32).collect();
 
         let loss_of = |p: &[f32]| -> f32 {
-            let outs = grad_episode(&man, a, p, &masks, &obs, &act, &gate, &ret).unwrap();
+            let outs = grad_episode(&man, a, p, &masks, &obs, &act, &gate, &ret, None).unwrap();
             outs[2].scalar_f32().unwrap()
         };
-        let outs = grad_episode(&man, a, &params, &masks, &obs, &act, &gate, &ret).unwrap();
+        let outs = grad_episode(&man, a, &params, &masks, &obs, &act, &gate, &ret, None).unwrap();
         let dparams = outs[0].as_f32().unwrap().to_vec();
         // probe a few parameters spread across layers
         let probes = [
@@ -963,7 +1094,7 @@ mod tests {
         let act = vec![1i32; t * a];
         let gate = vec![1.0f32; t * a];
         let ret: Vec<f32> = (0..t).map(|i| 0.1 * i as f32).collect();
-        let outs = grad_episode(&man, a, &params, &masks, &obs, &act, &gate, &ret).unwrap();
+        let outs = grad_episode(&man, a, &params, &masks, &obs, &act, &gate, &ret, None).unwrap();
         let dparams = outs[0].as_f32().unwrap();
         for l in &man.masked_layers {
             let (po, ps) = pentry(&man, &l.name).unwrap();
@@ -974,6 +1105,34 @@ mod tests {
                     assert_eq!(*gv, 0.0);
                 }
             }
+        }
+    }
+
+    /// Kernel-level parity: the sparse matmul and transposed product
+    /// must equal their dense ⊙-mask references exactly (`==`, which
+    /// only forgives the sign of exact zeros).
+    #[test]
+    fn sparse_kernels_match_dense_masked() {
+        use crate::manifest::MaskedLayer;
+        let (rows, k, cols) = (3usize, 8usize, 12usize);
+        let mut rng = crate::util::Pcg32::seeded(31);
+        let x: Vec<f32> = (0..rows * k).map(|_| rng.next_normal()).collect();
+        let w: Vec<f32> = (0..k * cols).map(|_| rng.next_normal()).collect();
+        let dy: Vec<f32> = (0..rows * cols).map(|_| rng.next_normal()).collect();
+        let mask: Vec<f32> = (0..k * cols).map(|_| f32::from(rng.next_f32() < 0.3)).collect();
+        let layer = MaskedLayer { name: "w_t".to_string(), rows: k, cols, offset: 0 };
+        for cores in [1usize, 3] {
+            let sl = SparseLayer::from_dense_mask(&layer, &mask, cores).unwrap();
+            let mut y_dense = vec![0.0f32; rows * cols];
+            matmul_masked_into(&mut y_dense, &x, &w, &mask, rows, k, cols);
+            let mut y_sparse = vec![0.0f32; rows * cols];
+            matmul_sparse_into(&mut y_sparse, &x, &w, &sl, rows, k, cols);
+            assert_eq!(y_dense, y_sparse, "forward, cores={cores}");
+            let mut dx_dense = vec![0.0f32; rows * k];
+            dy_wt_masked_into(&mut dx_dense, &dy, &w, &mask, rows, k, cols);
+            let mut dx_sparse = vec![0.0f32; rows * k];
+            dy_wt_sparse_into(&mut dx_sparse, &dy, &w, &sl, rows, k, cols);
+            assert_eq!(dx_dense, dx_sparse, "transposed, cores={cores}");
         }
     }
 

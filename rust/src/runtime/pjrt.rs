@@ -99,6 +99,7 @@ impl PjrtExecutable {
             repr: DeviceRepr::Pjrt(PjrtBuffer { buf }),
             len: tensor.len(),
             dtype: tensor.dtype(),
+            sparse: None,
         })
     }
 

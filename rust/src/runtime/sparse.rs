@@ -1,0 +1,312 @@
+//! Sparse execution state — the compressed-weight structure the native
+//! backend computes on (§III-B/III-C made *functional*).
+//!
+//! The paper's headline result is that computing directly on the
+//! OSEL-encoded sparse weights beats masked-dense math (up to 12.52x);
+//! this module is the host-side realisation of that datapath.  After
+//! each FLGW `mask_gen`, the per-layer [`SparseRowMemory`] encodings are
+//! materialised into a [`SparseModel`]: for every weight-matrix row the
+//! column indexes of the surviving weights (CSR-style `row_ptr` /
+//! `col_idx`), plus the row→core partition from the accelerator's
+//! load-allocation unit ([`crate::accel::load_alloc`], row-based
+//! scheme).  `policy_fwd` and `grad_episode` then iterate only the
+//! surviving positions — skipping zeroed groups in the forward matmuls
+//! and in the BPTT transposed products — instead of walking the full
+//! dense matrix under an explicit `⊙ mask`.
+//!
+//! **Parity contract.**  The sparse kernels accumulate the surviving
+//! terms in exactly the order the dense-masked reference visits them,
+//! and every skipped term is an exact `±0.0` addition — so the two
+//! paths agree bit-for-bit (up to the sign of exact zeros, which `==`
+//! treats as equal).  `rust/tests/sparse_parity.rs` asserts this across
+//! the FLGW curriculum's sparsity levels.
+//!
+//! **Sharing.**  A [`SparseModel`] is built once per mask regeneration
+//! (stage 1) and shared immutably (`Arc`) by all parallel rollout
+//! worker threads; the core count of the row partition is therefore the
+//! rollout worker count.  The partition is contiguous and walked in
+//! row order, so the worker count never changes the numerics.
+
+use anyhow::{anyhow, Result};
+
+use crate::accel::load_alloc::{Allocation, LoadAllocator};
+use crate::accel::sparse_row_memory::SparseRowMemory;
+use crate::manifest::{Manifest, MaskedLayer};
+
+/// Which kernels the native backend runs for the FLGW-masked matmuls.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// Reference path: dense multiply with an explicit `⊙ mask`.
+    DenseMasked,
+    /// Compressed path: only surviving weights are touched, through a
+    /// [`SparseModel`] attached to the masks upload (bit-identical to
+    /// the reference — see the module docs).
+    #[default]
+    Sparse,
+}
+
+impl ExecMode {
+    /// Parse a `--exec` CLI value.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "dense" | "dense_masked" => Some(ExecMode::DenseMasked),
+            "sparse" => Some(ExecMode::Sparse),
+            _ => None,
+        }
+    }
+
+    /// CLI-facing name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecMode::DenseMasked => "dense",
+            ExecMode::Sparse => "sparse",
+        }
+    }
+}
+
+/// One masked layer's compressed structure: for every weight-matrix row
+/// (input channel), the ascending column indexes of surviving weights,
+/// plus the row→core workload partition.
+#[derive(Debug, Clone)]
+pub struct SparseLayer {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    /// CSR-style offsets into `col_idx`, length `rows + 1`.
+    pub row_ptr: Vec<u32>,
+    /// Surviving-weight column indexes, ascending within each row.
+    pub col_idx: Vec<u32>,
+    /// Row→core partition from the load-allocation unit (row-based
+    /// scheme: contiguous chunks, so walking core by core visits rows
+    /// in ascending order).
+    pub alloc: Allocation,
+}
+
+impl SparseLayer {
+    /// Build from an OSEL encoding: the non-zero indexes come straight
+    /// from the cached sparse-row-memory tuples (observation 2 — at
+    /// most G distinct rows exist, so this is a pointer walk, not a
+    /// mask scan).
+    pub fn from_encoding(
+        layer: &MaskedLayer,
+        srm: &SparseRowMemory,
+        cores: usize,
+    ) -> Result<Self> {
+        if srm.index_list().len() != layer.rows || srm.row_len() != layer.cols {
+            return Err(anyhow!(
+                "encoding shape {}x{} != masked layer {} ({}x{})",
+                srm.index_list().len(),
+                srm.row_len(),
+                layer.name,
+                layer.rows,
+                layer.cols
+            ));
+        }
+        let mut row_ptr = Vec::with_capacity(layer.rows + 1);
+        let mut col_idx = Vec::new();
+        row_ptr.push(0u32);
+        for r in 0..layer.rows {
+            if let Some(t) = srm.row_tuple(r) {
+                col_idx.extend_from_slice(&t.nonzero);
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        Ok(Self::finish(layer, row_ptr, col_idx, cores))
+    }
+
+    /// Build by scanning a dense 0/1 mask (row-major `rows x cols`) —
+    /// the fallback for pruners whose masks are not group-structured
+    /// (iterative magnitude, block-circulant, GST).
+    pub fn from_dense_mask(layer: &MaskedLayer, mask: &[f32], cores: usize) -> Result<Self> {
+        if mask.len() != layer.size() {
+            return Err(anyhow!(
+                "mask length {} != masked layer {} size {}",
+                mask.len(),
+                layer.name,
+                layer.size()
+            ));
+        }
+        let mut row_ptr = Vec::with_capacity(layer.rows + 1);
+        let mut col_idx = Vec::new();
+        row_ptr.push(0u32);
+        for r in 0..layer.rows {
+            let mrow = &mask[r * layer.cols..(r + 1) * layer.cols];
+            for (j, &mv) in mrow.iter().enumerate() {
+                if mv != 0.0 {
+                    col_idx.push(j as u32);
+                }
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        Ok(Self::finish(layer, row_ptr, col_idx, cores))
+    }
+
+    fn finish(layer: &MaskedLayer, row_ptr: Vec<u32>, col_idx: Vec<u32>, cores: usize) -> Self {
+        let workloads: Vec<u32> = row_ptr.windows(2).map(|w| w[1] - w[0]).collect();
+        let alloc = LoadAllocator::new(cores.max(1)).row_based(&workloads);
+        SparseLayer {
+            name: layer.name.clone(),
+            rows: layer.rows,
+            cols: layer.cols,
+            row_ptr,
+            col_idx,
+            alloc,
+        }
+    }
+
+    /// Surviving weights in this layer.
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Column indexes of row `r`'s surviving weights.
+    pub fn row(&self, r: usize) -> &[u32] {
+        &self.col_idx[self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize]
+    }
+}
+
+/// Per-layer compressed structures for every FLGW-masked layer, in
+/// manifest order — built once per mask regeneration and shared
+/// immutably across rollout worker threads (see the module docs).
+#[derive(Debug, Clone)]
+pub struct SparseModel {
+    pub layers: Vec<SparseLayer>,
+    /// Total mask size (density denominator).
+    mask_size: usize,
+}
+
+impl SparseModel {
+    /// Materialise from FLGW's per-layer OSEL encodings (layer order
+    /// must match the manifest's `masked_layers`).
+    pub fn from_encodings(
+        m: &Manifest,
+        encodings: &[SparseRowMemory],
+        cores: usize,
+    ) -> Result<Self> {
+        if encodings.len() != m.masked_layers.len() {
+            return Err(anyhow!(
+                "{} encodings for {} masked layers",
+                encodings.len(),
+                m.masked_layers.len()
+            ));
+        }
+        let layers = m
+            .masked_layers
+            .iter()
+            .zip(encodings)
+            .map(|(l, srm)| SparseLayer::from_encoding(l, srm, cores))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(SparseModel { layers, mask_size: m.mask_size })
+    }
+
+    /// Build from the flat dense mask buffer (manifest mask layout).
+    pub fn from_dense_masks(m: &Manifest, masks: &[f32], cores: usize) -> Result<Self> {
+        if masks.len() != m.mask_size {
+            return Err(anyhow!(
+                "masks length {} != manifest mask_size {}",
+                masks.len(),
+                m.mask_size
+            ));
+        }
+        let layers = m
+            .masked_layers
+            .iter()
+            .map(|l| SparseLayer::from_dense_mask(l, &masks[l.offset..l.offset + l.size()], cores))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(SparseModel { layers, mask_size: m.mask_size })
+    }
+
+    /// The compressed structure of one masked layer, by name.
+    pub fn layer(&self, name: &str) -> Option<&SparseLayer> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+
+    /// Total surviving weights across all layers.
+    pub fn nnz(&self) -> usize {
+        self.layers.iter().map(|l| l.nnz()).sum()
+    }
+
+    /// Fraction of surviving weights (1.0 = dense).
+    pub fn density(&self) -> f32 {
+        if self.mask_size == 0 {
+            return 1.0;
+        }
+        self.nnz() as f32 / self.mask_size as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::osel::OselEncoder;
+    use crate::util::Pcg32;
+
+    fn layer(rows: usize, cols: usize) -> MaskedLayer {
+        MaskedLayer { name: "w_t".to_string(), rows, cols, offset: 0 }
+    }
+
+    #[test]
+    fn exec_mode_parses() {
+        assert_eq!(ExecMode::parse("sparse"), Some(ExecMode::Sparse));
+        assert_eq!(ExecMode::parse("dense"), Some(ExecMode::DenseMasked));
+        assert_eq!(ExecMode::parse("dense_masked"), Some(ExecMode::DenseMasked));
+        assert_eq!(ExecMode::parse("nope"), None);
+        assert_eq!(ExecMode::default().name(), "sparse");
+    }
+
+    #[test]
+    fn encoding_and_dense_scan_agree() {
+        // The OSEL-encoding constructor and the dense-mask scan must
+        // produce the identical compressed structure on FLGW masks.
+        let mut rng = Pcg32::seeded(6);
+        for &g in &[2usize, 4, 8] {
+            let (rows, cols) = (16usize, 24usize);
+            let ig: Vec<u16> = (0..rows).map(|_| rng.next_below(g as u32) as u16).collect();
+            let og: Vec<u16> = (0..cols).map(|_| rng.next_below(g as u32) as u16).collect();
+            let (srm, _) = OselEncoder::default().encode(&ig, &og, g);
+            let mask = OselEncoder::materialize_mask(&srm);
+            let l = layer(rows, cols);
+            let a = SparseLayer::from_encoding(&l, &srm, 3).unwrap();
+            let b = SparseLayer::from_dense_mask(&l, &mask, 3).unwrap();
+            assert_eq!(a.row_ptr, b.row_ptr, "G={g}");
+            assert_eq!(a.col_idx, b.col_idx, "G={g}");
+            assert_eq!(a.nnz(), mask.iter().filter(|&&v| v != 0.0).count());
+        }
+    }
+
+    #[test]
+    fn core_partition_covers_rows_in_order() {
+        let l = layer(16, 8);
+        let mask = vec![1.0f32; 16 * 8];
+        let sl = SparseLayer::from_dense_mask(&l, &mask, 3).unwrap();
+        let mut walked = Vec::new();
+        for core in &sl.alloc.per_core {
+            walked.extend_from_slice(&core.rows);
+        }
+        assert_eq!(walked, (0..16).collect::<Vec<_>>());
+        assert_eq!(sl.alloc.total_workload(), 16 * 8);
+    }
+
+    #[test]
+    fn dense_masks_over_builtin_manifest() {
+        let m = Manifest::builtin();
+        let masks = vec![1.0f32; m.mask_size];
+        let sm = SparseModel::from_dense_masks(&m, &masks, 2).unwrap();
+        assert_eq!(sm.layers.len(), m.masked_layers.len());
+        assert_eq!(sm.nnz(), m.mask_size);
+        assert!((sm.density() - 1.0).abs() < 1e-6);
+        let wx = sm.layer("w_x").unwrap();
+        assert_eq!((wx.rows, wx.cols), (128, 512));
+        assert_eq!(wx.row(0).len(), 512);
+        assert!(sm.layer("nope").is_none());
+    }
+
+    #[test]
+    fn shape_mismatches_are_rejected() {
+        let m = Manifest::builtin();
+        assert!(SparseModel::from_dense_masks(&m, &[1.0; 4], 1).is_err());
+        assert!(SparseModel::from_encodings(&m, &[], 1).is_err());
+        let l = layer(4, 4);
+        assert!(SparseLayer::from_dense_mask(&l, &[1.0; 3], 1).is_err());
+    }
+}

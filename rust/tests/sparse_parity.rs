@@ -1,0 +1,239 @@
+//! Parity tests for the sparse execution path.
+//!
+//! The native backend's sparse kernels compute on the OSEL-compressed
+//! weights ([`learning_group::runtime::SparseModel`]); these tests
+//! prove they are numerically *identical* to the dense ⊙-mask reference
+//! — exact f32 equality, the strongest check feasible (`==` only
+//! forgives the sign of exact zeros, which is the single place the two
+//! paths may differ: every skipped term is a `±0.0` addition) — across
+//! the sparsity levels the FLGW curriculum produces (G ∈ {2, 4, 8, 16}
+//! → 50–93.75%), for `policy_fwd`, `grad_episode`, and whole training
+//! runs.
+
+use std::sync::Arc;
+
+use learning_group::coordinator::{ExecMode, PrunerChoice, TrainConfig, Trainer};
+use learning_group::manifest::Manifest;
+use learning_group::model::{GroupingState, ModelState};
+use learning_group::pruning::{FlgwPruner, PruneContext, PruningAlgorithm};
+use learning_group::runtime::{Arg, HostTensor, Runtime, SparseModel};
+use learning_group::util::Pcg32;
+
+/// Model state + FLGW pruner with freshly encoded masks at group count
+/// `g` (randomized params so no structure can hide a kernel bug).
+fn flgw_state(m: &Manifest, g: usize, seed: u64) -> (ModelState, FlgwPruner) {
+    let mut state = ModelState::init(m).unwrap();
+    let mut rng = Pcg32::seeded(seed);
+    for p in state.params.iter_mut() {
+        *p = rng.next_normal() * 0.1;
+    }
+    let grouping = GroupingState::init(m, g).unwrap();
+    let mut pruner = FlgwPruner::new(grouping);
+    let ctx = PruneContext { manifest: m, iteration: 0, total_iterations: 1, dmasks: &[] };
+    pruner.update_masks(&mut state, &ctx).unwrap();
+    (state, pruner)
+}
+
+fn assert_outputs_equal(dense: &[HostTensor], sparse: &[HostTensor], tag: &str) {
+    assert_eq!(dense.len(), sparse.len(), "{tag}: output arity");
+    for (i, (d, s)) in dense.iter().zip(sparse).enumerate() {
+        assert_eq!(d, s, "{tag}: output {i} diverges");
+    }
+}
+
+#[test]
+fn policy_fwd_sparse_matches_dense_masked() {
+    let mut rt = Runtime::from_default_artifacts().unwrap();
+    let m = rt.manifest().clone();
+    let exe = rt.load("policy_fwd_a3").unwrap();
+    let a = 3usize;
+    for &g in &[2usize, 4, 8, 16] {
+        let (state, pruner) = flgw_state(&m, g, 100 + g as u64);
+        let from_enc = SparseModel::from_encodings(&m, &pruner.encodings, 2).unwrap();
+        let from_scan = SparseModel::from_dense_masks(&m, &state.masks, 3).unwrap();
+        // curriculum sanity: density ≈ 1/G
+        let density = from_scan.density();
+        assert!(
+            density > 0.5 / g as f32 && density < 2.0 / g as f32,
+            "G={g}: density {density}"
+        );
+
+        let mut rng = Pcg32::seeded(g as u64);
+        let obs = HostTensor::F32((0..a * m.dims.obs_dim).map(|_| rng.next_f32()).collect());
+        let h =
+            HostTensor::F32((0..a * m.dims.hidden).map(|_| rng.next_normal() * 0.2).collect());
+        let c =
+            HostTensor::F32((0..a * m.dims.hidden).map(|_| rng.next_normal() * 0.2).collect());
+        let gp = HostTensor::F32(vec![1.0; a]);
+        let params = HostTensor::F32(state.params.clone());
+        let masks = HostTensor::F32(state.masks.clone());
+
+        let p_dev = exe.upload(0, &params).unwrap();
+        let dense_dev = exe.upload(1, &masks).unwrap();
+        let dense_out = exe
+            .run_args(&[
+                Arg::Device(&p_dev),
+                Arg::Device(&dense_dev),
+                Arg::Host(&obs),
+                Arg::Host(&h),
+                Arg::Host(&c),
+                Arg::Host(&gp),
+            ])
+            .unwrap();
+
+        for (label, model) in [("encodings", from_enc), ("dense-scan", from_scan)] {
+            let sparse_dev = exe.upload_sparse(1, &masks, Arc::new(model)).unwrap();
+            let sparse_out = exe
+                .run_args(&[
+                    Arg::Device(&p_dev),
+                    Arg::Device(&sparse_dev),
+                    Arg::Host(&obs),
+                    Arg::Host(&h),
+                    Arg::Host(&c),
+                    Arg::Host(&gp),
+                ])
+                .unwrap();
+            assert_outputs_equal(&dense_out, &sparse_out, &format!("policy_fwd G={g} {label}"));
+        }
+    }
+}
+
+#[test]
+fn grad_episode_sparse_matches_dense_masked() {
+    let mut rt = Runtime::from_default_artifacts().unwrap();
+    let m = rt.manifest().clone();
+    let exe = rt.load("grad_episode_a3").unwrap();
+    let (t, a) = (m.dims.episode_len, 3usize);
+    for &g in &[2usize, 4, 16] {
+        let (state, pruner) = flgw_state(&m, g, 200 + g as u64);
+        let model = SparseModel::from_encodings(&m, &pruner.encodings, 4).unwrap();
+
+        let mut rng = Pcg32::seeded(50 + g as u64);
+        let obs =
+            HostTensor::F32((0..t * a * m.dims.obs_dim).map(|_| rng.next_f32()).collect());
+        let act = HostTensor::I32(
+            (0..t * a).map(|_| rng.next_below(m.dims.n_actions as u32) as i32).collect(),
+        );
+        let gate = HostTensor::F32((0..t * a).map(|_| rng.next_below(2) as f32).collect());
+        let ret = HostTensor::F32((0..t).map(|i| 0.03 * i as f32).collect());
+        let params = HostTensor::F32(state.params.clone());
+        let masks = HostTensor::F32(state.masks.clone());
+
+        let p_dev = exe.upload(0, &params).unwrap();
+        let dense_dev = exe.upload(1, &masks).unwrap();
+        let sparse_dev = exe.upload_sparse(1, &masks, Arc::new(model)).unwrap();
+        let dense_out = exe
+            .run_args(&[
+                Arg::Device(&p_dev),
+                Arg::Device(&dense_dev),
+                Arg::Host(&obs),
+                Arg::Host(&act),
+                Arg::Host(&gate),
+                Arg::Host(&ret),
+            ])
+            .unwrap();
+        let sparse_out = exe
+            .run_args(&[
+                Arg::Device(&p_dev),
+                Arg::Device(&sparse_dev),
+                Arg::Host(&obs),
+                Arg::Host(&act),
+                Arg::Host(&gate),
+                Arg::Host(&ret),
+            ])
+            .unwrap();
+        // dparams, dmasks (FLGW's training signal), and all four loss
+        // scalars — exact equality
+        assert_outputs_equal(&dense_out, &sparse_out, &format!("grad_episode G={g}"));
+    }
+}
+
+/// End-to-end: whole training runs under `--exec sparse` and `--exec
+/// dense` must be bit-identical — metrics, final weights, and the FLGW
+/// grouping matrices (which train on the dmask cotangent the sparse
+/// path also produces).
+#[test]
+fn trainer_sparse_and_dense_exec_match_bitwise() {
+    let base = TrainConfig {
+        batch: 2,
+        iterations: 3,
+        pruner: PrunerChoice::Flgw(4),
+        seed: 77,
+        log_every: 0,
+        ..TrainConfig::default().with_agents(3)
+    };
+    let cfg_sparse = TrainConfig { exec: ExecMode::Sparse, ..base.clone() };
+    let cfg_dense = TrainConfig { exec: ExecMode::DenseMasked, ..base };
+    let mut ts = Trainer::from_default_artifacts(cfg_sparse).unwrap();
+    let mut td = Trainer::from_default_artifacts(cfg_dense).unwrap();
+    let log_s = ts.train().unwrap();
+    let log_d = td.train().unwrap();
+    assert_eq!(log_s.len(), log_d.len());
+    for (a, b) in log_s.records.iter().zip(&log_d.records) {
+        assert_eq!(a.loss, b.loss, "iteration {}", a.iteration);
+        assert_eq!(a.mean_reward, b.mean_reward, "iteration {}", a.iteration);
+        assert_eq!(a.success_rate, b.success_rate, "iteration {}", a.iteration);
+        assert_eq!(a.sparsity, b.sparsity, "iteration {}", a.iteration);
+    }
+    assert_eq!(ts.state.params, td.state.params, "weights must match bitwise");
+    assert_eq!(
+        ts.pruner.as_flgw().unwrap().grouping.grouping,
+        td.pruner.as_flgw().unwrap().grouping.grouping,
+        "grouping matrices must match bitwise"
+    );
+}
+
+/// Non-FLGW masks are not group-structured; the sparse path must fall
+/// back to the dense-mask scan and still match exactly.
+#[test]
+fn sparse_exec_covers_unstructured_masks() {
+    let base = TrainConfig {
+        batch: 1,
+        iterations: 2,
+        pruner: PrunerChoice::Iterative(75),
+        seed: 3,
+        log_every: 0,
+        ..TrainConfig::default().with_agents(3)
+    };
+    let mut ts = Trainer::from_default_artifacts(TrainConfig {
+        exec: ExecMode::Sparse,
+        ..base.clone()
+    })
+    .unwrap();
+    let mut td = Trainer::from_default_artifacts(TrainConfig {
+        exec: ExecMode::DenseMasked,
+        ..base
+    })
+    .unwrap();
+    let log_s = ts.train().unwrap();
+    let log_d = td.train().unwrap();
+    for (a, b) in log_s.records.iter().zip(&log_d.records) {
+        assert_eq!(a.loss, b.loss, "iteration {}", a.iteration);
+    }
+    assert_eq!(ts.state.params, td.state.params);
+}
+
+/// The parallel rollout driver's determinism contract must hold on the
+/// sparse path too: the worker count sizes the row→core partition, but
+/// the partition is walked in row order, so results stay bit-identical.
+#[test]
+fn sparse_parallel_rollouts_match_sequential() {
+    let base = TrainConfig {
+        batch: 4,
+        iterations: 2,
+        pruner: PrunerChoice::Flgw(4),
+        seed: 19,
+        log_every: 0,
+        exec: ExecMode::Sparse,
+        ..TrainConfig::default().with_agents(3)
+    };
+    let cfg_par = TrainConfig { rollouts: 4, ..base.clone() };
+    let mut seq = Trainer::from_default_artifacts(base).unwrap();
+    let mut par = Trainer::from_default_artifacts(cfg_par).unwrap();
+    let log_seq = seq.train().unwrap();
+    let log_par = par.train().unwrap();
+    for (a, b) in log_seq.records.iter().zip(&log_par.records) {
+        assert_eq!(a.loss, b.loss, "iteration {}", a.iteration);
+    }
+    assert_eq!(seq.state.params, par.state.params);
+}
