@@ -77,6 +77,31 @@ impl BitVec {
     pub fn bits(&self) -> usize {
         self.len
     }
+
+    /// The packed 64-bit words backing the vector (bit `i` lives at
+    /// `words()[i / 64] >> (i % 64)`).  This is the representation the
+    /// checkpoint format stores on disk.
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Rebuild from packed words (inverse of [`BitVec::words`]).
+    /// Returns `None` when the word count does not match `len` or a bit
+    /// beyond `len` is set — the checkpoint reader treats either as
+    /// corruption.
+    pub fn from_words(len: usize, words: Vec<u64>) -> Option<Self> {
+        if words.len() != len.div_ceil(64) {
+            return None;
+        }
+        if len % 64 != 0 {
+            if let Some(&last) = words.last() {
+                if last >> (len % 64) != 0 {
+                    return None;
+                }
+            }
+        }
+        Some(BitVec { len, words })
+    }
 }
 
 #[cfg(test)]
@@ -118,5 +143,21 @@ mod tests {
     #[test]
     fn footprint_is_len_bits() {
         assert_eq!(BitVec::zeros(512).bits(), 512);
+    }
+
+    #[test]
+    fn words_round_trip() {
+        let mut bv = BitVec::zeros(130);
+        for i in [0usize, 63, 64, 129] {
+            bv.set(i, true);
+        }
+        let rebuilt = BitVec::from_words(130, bv.words().to_vec()).unwrap();
+        assert_eq!(rebuilt, bv);
+        // wrong word count
+        assert!(BitVec::from_words(130, vec![0u64; 2]).is_none());
+        // stray bit beyond len
+        assert!(BitVec::from_words(65, vec![0, 0b100]).is_none());
+        // exact multiple of 64 has no stray-bit region
+        assert!(BitVec::from_words(128, vec![u64::MAX, u64::MAX]).is_some());
     }
 }

@@ -56,6 +56,33 @@ impl SparseRowMemory {
         }
     }
 
+    /// Rebuild a sparse row memory from its serialized parts: the
+    /// row-order index list plus the cached tuples (one per occupied
+    /// entry, tagged by their max-index).  The inverse of walking
+    /// [`SparseRowMemory::index_list`] + the entries — what the
+    /// checkpoint reader does.  Every index-list entry must reference an
+    /// installed tuple and every tuple's bitvector must be `row_len`
+    /// wide, otherwise the parts are rejected as corrupt.
+    pub fn from_parts(
+        groups: usize,
+        row_len: usize,
+        index_list: Vec<u16>,
+        tuples: Vec<SparseTuple>,
+    ) -> Option<Self> {
+        let mut srm = SparseRowMemory::new(groups, row_len);
+        for t in tuples {
+            if (t.max_index as usize) >= groups || t.bitvector.len() != row_len {
+                return None;
+            }
+            srm.insert(t);
+        }
+        if index_list.iter().any(|&mi| !srm.contains(mi)) {
+            return None;
+        }
+        srm.index_list = index_list;
+        Some(srm)
+    }
+
     pub fn groups(&self) -> usize {
         self.entries.len()
     }
@@ -96,6 +123,13 @@ impl SparseRowMemory {
 
     pub fn index_list(&self) -> &[u16] {
         &self.index_list
+    }
+
+    /// The occupied tuples in ascending max-index order — the
+    /// serialization view the checkpoint writer walks (pairs with
+    /// [`SparseRowMemory::from_parts`]).
+    pub fn tuples(&self) -> impl Iterator<Item = &SparseTuple> {
+        self.entries.iter().filter_map(|e| e.as_ref())
     }
 
     /// Number of distinct tuples currently cached (≤ G).
@@ -188,6 +222,28 @@ mod tests {
         // (workload needs 10 bits to represent the dense case 512 itself;
         // the paper's 9 assumes < 512 — we keep the exact bound and note
         // the 1-bit difference in EXPERIMENTS.md.)
+    }
+
+    #[test]
+    fn from_parts_round_trips() {
+        let mut srm = SparseRowMemory::new(4, 8);
+        srm.insert(tuple(0, 8, &[0, 3]));
+        srm.insert(tuple(2, 8, &[1, 5, 7]));
+        srm.push_index(2);
+        srm.push_index(0);
+        srm.push_index(2);
+        let tuples: Vec<SparseTuple> = srm.tuples().cloned().collect();
+        let rebuilt =
+            SparseRowMemory::from_parts(4, 8, srm.index_list().to_vec(), tuples.clone()).unwrap();
+        assert_eq!(rebuilt.index_list(), srm.index_list());
+        assert_eq!(rebuilt.occupied(), 2);
+        assert_eq!(rebuilt.workloads(), srm.workloads());
+        // index referencing a missing tuple is rejected
+        assert!(SparseRowMemory::from_parts(4, 8, vec![1], tuples.clone()).is_none());
+        // wrong bitvector width is rejected
+        assert!(SparseRowMemory::from_parts(4, 9, vec![2], tuples.clone()).is_none());
+        // out-of-range max index is rejected
+        assert!(SparseRowMemory::from_parts(2, 8, vec![0], tuples).is_none());
     }
 
     #[test]

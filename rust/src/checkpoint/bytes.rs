@@ -1,0 +1,273 @@
+//! Little-endian byte (de)serialization + CRC-32 for the checkpoint
+//! format.
+//!
+//! The build environment is fully offline (no serde/bincode), so the
+//! checkpoint codec is a hand-rolled pair of cursor types.  Every
+//! variable-length read is bounded by the bytes actually remaining —
+//! a corrupt length prefix fails cleanly instead of attempting a
+//! multi-gigabyte allocation.
+
+use anyhow::{anyhow, Result};
+
+/// CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320) — the
+/// checkpoint's corruption detector.  Table-driven; the table is
+/// rebuilt per call, which is negligible next to hashing a
+/// megabyte-scale checkpoint.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut table = [0u32; 256];
+    for (i, entry) in table.iter_mut().enumerate() {
+        let mut c = i as u32;
+        for _ in 0..8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+        }
+        *entry = c;
+    }
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc = table[((crc ^ u32::from(b)) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
+/// Append-only little-endian encoder.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    pub fn into_inner(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn put_bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// u32 length prefix + UTF-8 bytes.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u32(s.len() as u32);
+        self.put_bytes(s.as_bytes());
+    }
+
+    /// u64 element-count prefix + raw little-endian elements.
+    pub fn put_f32_slice(&mut self, xs: &[f32]) {
+        self.put_u64(xs.len() as u64);
+        for &x in xs {
+            self.put_f32(x);
+        }
+    }
+
+    /// u32 element-count prefix + raw little-endian elements.
+    pub fn put_u16_slice(&mut self, xs: &[u16]) {
+        self.put_u32(xs.len() as u32);
+        for &x in xs {
+            self.put_u16(x);
+        }
+    }
+
+    /// u32 element-count prefix + raw little-endian elements.
+    pub fn put_u64_slice(&mut self, xs: &[u64]) {
+        self.put_u32(xs.len() as u32);
+        for &x in xs {
+            self.put_u64(x);
+        }
+    }
+}
+
+/// Bounds-checked little-endian decoder over a borrowed buffer.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            return Err(anyhow!(
+                "checkpoint truncated: need {n} bytes at offset {}, {} remain",
+                self.pos,
+                self.remaining()
+            ));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Element count bounded by the remaining bytes before anything is
+    /// allocated (a corrupt prefix fails, it does not OOM).
+    fn checked_count(&self, count: u64, elem_bytes: usize) -> Result<usize> {
+        let n = usize::try_from(count).map_err(|_| anyhow!("element count {count} overflows"))?;
+        match n.checked_mul(elem_bytes) {
+            Some(total) if total <= self.remaining() => Ok(n),
+            _ => Err(anyhow!(
+                "checkpoint truncated: {n} x {elem_bytes}-byte elements at offset {} exceed the {} remaining bytes",
+                self.pos,
+                self.remaining()
+            )),
+        }
+    }
+
+    /// Inverse of [`ByteWriter::put_str`].
+    pub fn str(&mut self) -> Result<String> {
+        let len = self.u32()?;
+        let n = self.checked_count(u64::from(len), 1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| anyhow!("checkpoint string is not UTF-8"))
+    }
+
+    /// Inverse of [`ByteWriter::put_f32_slice`].
+    pub fn f32_vec(&mut self) -> Result<Vec<f32>> {
+        let count = self.u64()?;
+        let n = self.checked_count(count, 4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+
+    /// Inverse of [`ByteWriter::put_u16_slice`].
+    pub fn u16_vec(&mut self) -> Result<Vec<u16>> {
+        let count = self.u32()?;
+        let n = self.checked_count(u64::from(count), 2)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u16()?);
+        }
+        Ok(out)
+    }
+
+    /// Inverse of [`ByteWriter::put_u64_slice`].
+    pub fn u64_vec(&mut self) -> Result<Vec<u64>> {
+        let count = self.u32()?;
+        let n = self.checked_count(u64::from(count), 8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u64()?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_scalars_and_slices() {
+        let mut w = ByteWriter::new();
+        w.put_u8(7);
+        w.put_u16(0xBEEF);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 1);
+        w.put_f32(-0.0);
+        w.put_str("osel");
+        w.put_f32_slice(&[1.5, f32::NEG_INFINITY]);
+        w.put_u16_slice(&[1, 2, 3]);
+        w.put_u64_slice(&[u64::MAX]);
+        let bytes = w.into_inner();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 0xBEEF);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert_eq!(r.str().unwrap(), "osel");
+        let f = r.f32_vec().unwrap();
+        assert_eq!(f[0], 1.5);
+        assert!(f[1].is_infinite() && f[1] < 0.0);
+        assert_eq!(r.u16_vec().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.u64_vec().unwrap(), vec![u64::MAX]);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut w = ByteWriter::new();
+        w.put_f32_slice(&[1.0, 2.0, 3.0]);
+        let mut bytes = w.into_inner();
+        bytes.truncate(bytes.len() - 2);
+        let mut r = ByteReader::new(&bytes);
+        assert!(r.f32_vec().is_err());
+    }
+
+    #[test]
+    fn corrupt_length_prefix_is_bounded() {
+        // an absurd element count must fail before allocating
+        let mut w = ByteWriter::new();
+        w.put_u64(u64::MAX / 2);
+        let bytes = w.into_inner();
+        let mut r = ByteReader::new(&bytes);
+        assert!(r.f32_vec().is_err());
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // IEEE CRC-32 of "123456789" is 0xCBF43926 (the classic check value)
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_ne!(crc32(b"a"), crc32(b"b"));
+    }
+}

@@ -1,0 +1,699 @@
+//! Checkpointing — versioned, compressed, corruption-detected
+//! persistence of a training run.
+//!
+//! A checkpoint carries everything a resumed run needs to be
+//! **bit-identical** to an uninterrupted one: the flat parameter and
+//! optimizer buffers, the FLGW grouping matrices and their optimizer
+//! state, the dL/dmask accumulator, the episode counter the per-episode
+//! RNG streams derive from, and the masks.
+//!
+//! The masks are the interesting part.  The paper's headline memory
+//! claim (up to 6.81x smaller sparse-data footprint) comes from the
+//! OSEL representation — so that is what the checkpoint stores: per
+//! masked layer, the group argmax index lists plus the sparse row
+//! memory's packed bitvector words ([`MaskStore::Osel`]), *not* a dense
+//! 0/1 matrix.  At G groups a layer costs `2 bytes x (rows + cols) +
+//! G x ceil(cols/8)` bytes instead of `rows x cols` — for the built-in
+//! 128x512 LSTM gate layers at G = 4 that is ~2.5 KB against 64 KB.
+//! Pruners whose masks are not group-structured (iterative magnitude,
+//! block-circulant, GST) fall back to one packed bit per weight
+//! ([`MaskStore::DenseBits`]).
+//!
+//! On-disk layout (all integers little-endian; see DESIGN.md
+//! §Checkpoint format & serving path for the diagram):
+//!
+//! ```text
+//! magic "LGCP" | version u32 | manifest fingerprint u64
+//! meta: iteration u64, episodes_done u64, seed u64, agents u32,
+//!       batch u32, exec u8, env str, pruner str
+//! params f32[] | sq_avg f32[] | dmask_accum f32[]
+//! mask store: tag u8 (0 dense-bits, 1 OSEL) + payload
+//! pruner store: tag u8 (0 stateless, 1 FLGW) + payload
+//! crc32 u32 over every preceding byte
+//! ```
+//!
+//! Corruption detection is layered: the CRC-32 trailer catches bit rot
+//! and truncation, the manifest fingerprint refuses a checkpoint whose
+//! buffer layout disagrees with the running manifest, and the OSEL
+//! decoder re-derives each tuple's bitvector from the argmax lists
+//! (observation 1: `bit[j] = (ig[i] == og[j])`) and rejects any
+//! mismatch — a flipped bit inside a mask cannot slip through even if
+//! it survived the CRC.
+
+mod bytes;
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::accel::bitvec::BitVec;
+use crate::accel::osel::OselEncoder;
+use crate::accel::sparse_row_memory::{SparseRowMemory, SparseTuple};
+use crate::manifest::Manifest;
+use crate::runtime::{ExecMode, SparseModel};
+
+use bytes::{crc32, ByteReader, ByteWriter};
+
+/// File magic: "LGCP" (LearningGroup CheckPoint).
+pub const MAGIC: [u8; 4] = *b"LGCP";
+/// Current format version.
+pub const VERSION: u32 = 1;
+
+/// Per-layer (IG, OG) argmax index lists — the FLGW encode-skip keys
+/// that travel with the encodings (see `FlgwPruner::layer_keys`).
+pub type LayerKeys = Vec<(Vec<u16>, Vec<u16>)>;
+
+/// Run-identity metadata stored in the header.  `env`/`pruner` are the
+/// CLI spec strings (round-trip through `EnvConfig::parse` /
+/// `PrunerChoice::parse`), so the resume path reconstructs the exact
+/// training configuration without a schema of its own.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CheckpointMeta {
+    /// Training iterations completed (== the next iteration index).
+    pub iteration: u64,
+    /// Episodes rolled out so far (the per-episode seed counter).
+    pub episodes_done: u64,
+    /// Master seed of the run.
+    pub seed: u64,
+    /// Agent count A.
+    pub agents: u32,
+    /// Minibatch size B (episodes per weight update).  Part of the run
+    /// identity: it drives how fast `episodes_done` advances, so a
+    /// resumed run must keep it to stay bit-identical.
+    pub batch: u32,
+    /// Execution mode the run used (informational; either mode resumes
+    /// either checkpoint — the two are parity-proven bit-identical).
+    pub exec: ExecMode,
+    /// Environment spec string, e.g. `"traffic_junction:easy"`.
+    pub env: String,
+    /// Pruner spec string, e.g. `"flgw:4"`.
+    pub pruner: String,
+}
+
+/// One masked layer's OSEL-encoded mask: the (IG, OG) argmax index
+/// lists at the last encode plus the sparse row memory's cached tuples
+/// as packed bitvector words.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OselLayerStore {
+    pub rows: u32,
+    pub cols: u32,
+    pub groups: u32,
+    /// Per-row IG argmax (== the sparse row memory's index list).
+    pub ig: Vec<u16>,
+    /// Per-column OG argmax (the other half of the encode-skip key).
+    pub og: Vec<u16>,
+    /// Occupied tuples: (max-index tag, packed bitvector words).
+    pub tuples: Vec<(u16, Vec<u64>)>,
+}
+
+impl OselLayerStore {
+    /// Capture one layer's encoding.
+    pub fn from_encoding(srm: &SparseRowMemory, ig: &[u16], og: &[u16]) -> Self {
+        OselLayerStore {
+            rows: srm.index_list().len() as u32,
+            cols: srm.row_len() as u32,
+            groups: srm.groups() as u32,
+            ig: ig.to_vec(),
+            og: og.to_vec(),
+            tuples: srm
+                .tuples()
+                .map(|t| (t.max_index, t.bitvector.words().to_vec()))
+                .collect(),
+        }
+    }
+
+    /// Rebuild the sparse row memory, verifying every tuple's bitvector
+    /// against the index-compare the argmax lists imply.
+    pub fn decode(&self) -> Result<SparseRowMemory> {
+        let (rows, cols, g) = (self.rows as usize, self.cols as usize, self.groups as usize);
+        if self.ig.len() != rows || self.og.len() != cols {
+            return Err(anyhow!(
+                "OSEL layer store: index lists {}x{} do not match shape {rows}x{cols}",
+                self.ig.len(),
+                self.og.len()
+            ));
+        }
+        let mut tuples = Vec::with_capacity(self.tuples.len());
+        for (mi, words) in &self.tuples {
+            let bv = BitVec::from_words(cols, words.clone())
+                .ok_or_else(|| anyhow!("OSEL tuple {mi}: bad bitvector word count"))?;
+            if bv != BitVec::from_index_compare(*mi, &self.og) {
+                return Err(anyhow!(
+                    "OSEL tuple {mi}: bitvector disagrees with the stored argmax lists"
+                ));
+            }
+            tuples.push(SparseTuple::from_bitvector(*mi, bv));
+        }
+        SparseRowMemory::from_parts(g, cols, self.ig.clone(), tuples)
+            .ok_or_else(|| anyhow!("OSEL layer store: inconsistent index list / tuples"))
+    }
+}
+
+/// The stored mask representation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MaskStore {
+    /// Unstructured fallback: the flat mask packed one bit per weight
+    /// (`len` bits in `words`, manifest mask layout).
+    DenseBits { len: u64, words: Vec<u64> },
+    /// FLGW-structured: per masked layer (manifest order), the OSEL
+    /// encoding.
+    Osel(Vec<OselLayerStore>),
+}
+
+impl MaskStore {
+    /// Pack a flat 0/1 mask vector (any pruner's fallback).
+    pub fn from_dense_masks(masks: &[f32]) -> Self {
+        let mut bv = BitVec::zeros(masks.len());
+        for (i, &v) in masks.iter().enumerate() {
+            if v != 0.0 {
+                bv.set(i, true);
+            }
+        }
+        MaskStore::DenseBits { len: masks.len() as u64, words: bv.words().to_vec() }
+    }
+
+    /// Capture FLGW's per-layer encodings + their (IG, OG) argmax keys
+    /// (what `FlgwPruner::encodings` / `FlgwPruner::layer_keys` hold).
+    pub fn from_encodings(
+        m: &Manifest,
+        encodings: &[SparseRowMemory],
+        layer_keys: &[(Vec<u16>, Vec<u16>)],
+    ) -> Result<Self> {
+        if encodings.len() != m.masked_layers.len() || layer_keys.len() != encodings.len() {
+            return Err(anyhow!(
+                "{} encodings / {} keys for {} masked layers",
+                encodings.len(),
+                layer_keys.len(),
+                m.masked_layers.len()
+            ));
+        }
+        let mut layers = Vec::with_capacity(encodings.len());
+        for (srm, (ig, og)) in encodings.iter().zip(layer_keys) {
+            layers.push(OselLayerStore::from_encoding(srm, ig, og));
+        }
+        Ok(MaskStore::Osel(layers))
+    }
+
+    /// Materialise the flat 0/1 mask vector in manifest layout.
+    pub fn materialize(&self, m: &Manifest) -> Result<Vec<f32>> {
+        match self {
+            MaskStore::DenseBits { len, words } => {
+                if *len as usize != m.mask_size {
+                    return Err(anyhow!(
+                        "stored mask bits {len} != manifest mask_size {}",
+                        m.mask_size
+                    ));
+                }
+                let bv = BitVec::from_words(m.mask_size, words.clone())
+                    .ok_or_else(|| anyhow!("stored mask bits: bad word count"))?;
+                Ok((0..m.mask_size).map(|i| f32::from(bv.get(i))).collect())
+            }
+            MaskStore::Osel(layers) => {
+                if layers.len() != m.masked_layers.len() {
+                    return Err(anyhow!(
+                        "{} stored OSEL layers != {} masked layers",
+                        layers.len(),
+                        m.masked_layers.len()
+                    ));
+                }
+                let mut masks = vec![0.0f32; m.mask_size];
+                for (store, layer) in layers.iter().zip(&m.masked_layers) {
+                    if store.rows as usize != layer.rows || store.cols as usize != layer.cols {
+                        return Err(anyhow!(
+                            "stored OSEL layer {}x{} != masked layer {} ({}x{})",
+                            store.rows,
+                            store.cols,
+                            layer.name,
+                            layer.rows,
+                            layer.cols
+                        ));
+                    }
+                    let srm = store.decode()?;
+                    let mask = OselEncoder::materialize_mask(&srm);
+                    masks[layer.offset..layer.offset + layer.size()].copy_from_slice(&mask);
+                }
+                Ok(masks)
+            }
+        }
+    }
+
+    /// Rebuild the FLGW encode cache: per-layer sparse row memories plus
+    /// their (IG, OG) keys.  `None` for the dense-bits fallback.
+    pub fn encodings(&self) -> Result<Option<(Vec<SparseRowMemory>, LayerKeys)>> {
+        let layers = match self {
+            MaskStore::DenseBits { .. } => return Ok(None),
+            MaskStore::Osel(layers) => layers,
+        };
+        let mut encodings = Vec::with_capacity(layers.len());
+        let mut keys = Vec::with_capacity(layers.len());
+        for store in layers {
+            encodings.push(store.decode()?);
+            keys.push((store.ig.clone(), store.og.clone()));
+        }
+        Ok(Some((encodings, keys)))
+    }
+
+    /// On-disk size of the mask section payload in bytes (what the
+    /// compression claim is measured on; the dense 0/1 baseline is one
+    /// byte per weight).
+    pub fn stored_bytes(&self) -> usize {
+        match self {
+            MaskStore::DenseBits { words, .. } => 8 + 4 + words.len() * 8,
+            MaskStore::Osel(layers) => {
+                let mut total = 4; // layer count
+                for l in layers {
+                    total += 12; // rows, cols, groups
+                    total += 4 + l.ig.len() * 2;
+                    total += 4 + l.og.len() * 2;
+                    total += 2; // tuple count
+                    for (_, words) in &l.tuples {
+                        total += 2 + 4 + words.len() * 8;
+                    }
+                }
+                total
+            }
+        }
+    }
+}
+
+/// Pruner-specific learned state.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PrunerStore {
+    /// Pruners whose masks are a pure function of (params, iteration):
+    /// dense baseline, iterative magnitude, block-circulant, GST.
+    Stateless,
+    /// FLGW: the grouping matrices and their RMSprop state.
+    Flgw { g: u32, grouping: Vec<f32>, sq_avg: Vec<f32> },
+}
+
+/// A fully decoded checkpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub meta: CheckpointMeta,
+    /// Fingerprint of the manifest the run trained under
+    /// ([`Manifest::fingerprint`]).
+    pub manifest_fingerprint: u64,
+    /// Flat parameters (manifest `param_layout` order).
+    pub params: Vec<f32>,
+    /// RMSprop squared-gradient average for `params`.
+    pub sq_avg: Vec<f32>,
+    /// dL/dmask accumulator at checkpoint time.
+    pub dmask_accum: Vec<f32>,
+    /// Masks, OSEL-compressed where the pruner allows.
+    pub masks: MaskStore,
+    /// Pruner learned state.
+    pub pruner: PrunerStore,
+}
+
+impl Checkpoint {
+    /// Serialize (header + payload + CRC trailer).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_bytes(&MAGIC);
+        w.put_u32(VERSION);
+        w.put_u64(self.manifest_fingerprint);
+        w.put_u64(self.meta.iteration);
+        w.put_u64(self.meta.episodes_done);
+        w.put_u64(self.meta.seed);
+        w.put_u32(self.meta.agents);
+        w.put_u32(self.meta.batch);
+        w.put_u8(match self.meta.exec {
+            ExecMode::DenseMasked => 0,
+            ExecMode::Sparse => 1,
+        });
+        w.put_str(&self.meta.env);
+        w.put_str(&self.meta.pruner);
+        w.put_f32_slice(&self.params);
+        w.put_f32_slice(&self.sq_avg);
+        w.put_f32_slice(&self.dmask_accum);
+        match &self.masks {
+            MaskStore::DenseBits { len, words } => {
+                w.put_u8(0);
+                w.put_u64(*len);
+                w.put_u64_slice(words);
+            }
+            MaskStore::Osel(layers) => {
+                w.put_u8(1);
+                w.put_u32(layers.len() as u32);
+                for l in layers {
+                    w.put_u32(l.rows);
+                    w.put_u32(l.cols);
+                    w.put_u32(l.groups);
+                    w.put_u16_slice(&l.ig);
+                    w.put_u16_slice(&l.og);
+                    w.put_u16(l.tuples.len() as u16);
+                    for (mi, words) in &l.tuples {
+                        w.put_u16(*mi);
+                        w.put_u64_slice(words);
+                    }
+                }
+            }
+        }
+        match &self.pruner {
+            PrunerStore::Stateless => w.put_u8(0),
+            PrunerStore::Flgw { g, grouping, sq_avg } => {
+                w.put_u8(1);
+                w.put_u32(*g);
+                w.put_f32_slice(grouping);
+                w.put_f32_slice(sq_avg);
+            }
+        }
+        let crc = crc32(w.as_slice());
+        w.put_u32(crc);
+        w.into_inner()
+    }
+
+    /// Decode + verify: magic, version, CRC trailer, and the OSEL
+    /// bitvector/argmax consistency check.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        if bytes.len() < MAGIC.len() + 4 + 4 {
+            return Err(anyhow!("checkpoint too short ({} bytes)", bytes.len()));
+        }
+        let (payload, trailer) = bytes.split_at(bytes.len() - 4);
+        let stored_crc = u32::from_le_bytes([trailer[0], trailer[1], trailer[2], trailer[3]]);
+        let actual_crc = crc32(payload);
+        if stored_crc != actual_crc {
+            return Err(anyhow!(
+                "checkpoint CRC mismatch: stored {stored_crc:08x}, computed {actual_crc:08x} — file is corrupt or truncated"
+            ));
+        }
+        let mut r = ByteReader::new(payload);
+        let magic = r.take(4)?;
+        if magic != MAGIC.as_slice() {
+            return Err(anyhow!("bad checkpoint magic {magic:?} (expected \"LGCP\")"));
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            return Err(anyhow!(
+                "unsupported checkpoint version {version} (this build reads version {VERSION})"
+            ));
+        }
+        let manifest_fingerprint = r.u64()?;
+        let iteration = r.u64()?;
+        let episodes_done = r.u64()?;
+        let seed = r.u64()?;
+        let agents = r.u32()?;
+        let batch = r.u32()?;
+        let exec = match r.u8()? {
+            0 => ExecMode::DenseMasked,
+            1 => ExecMode::Sparse,
+            other => return Err(anyhow!("bad exec-mode tag {other}")),
+        };
+        let env = r.str()?;
+        let pruner_spec = r.str()?;
+        let params = r.f32_vec()?;
+        let sq_avg = r.f32_vec()?;
+        let dmask_accum = r.f32_vec()?;
+        let masks = match r.u8()? {
+            0 => {
+                let len = r.u64()?;
+                let words = r.u64_vec()?;
+                MaskStore::DenseBits { len, words }
+            }
+            1 => {
+                let n_layers = r.u32()? as usize;
+                let mut layers = Vec::with_capacity(n_layers.min(1024));
+                for _ in 0..n_layers {
+                    let rows = r.u32()?;
+                    let cols = r.u32()?;
+                    let groups = r.u32()?;
+                    let ig = r.u16_vec()?;
+                    let og = r.u16_vec()?;
+                    let n_tuples = r.u16()? as usize;
+                    let mut tuples = Vec::with_capacity(n_tuples);
+                    for _ in 0..n_tuples {
+                        let mi = r.u16()?;
+                        let words = r.u64_vec()?;
+                        tuples.push((mi, words));
+                    }
+                    let layer = OselLayerStore { rows, cols, groups, ig, og, tuples };
+                    layer.decode().context("decoding OSEL mask layer")?;
+                    layers.push(layer);
+                }
+                MaskStore::Osel(layers)
+            }
+            other => return Err(anyhow!("bad mask-store tag {other}")),
+        };
+        let pruner = match r.u8()? {
+            0 => PrunerStore::Stateless,
+            1 => {
+                let g = r.u32()?;
+                let grouping = r.f32_vec()?;
+                let sq = r.f32_vec()?;
+                PrunerStore::Flgw { g, grouping, sq_avg: sq }
+            }
+            other => return Err(anyhow!("bad pruner-store tag {other}")),
+        };
+        if r.remaining() != 0 {
+            return Err(anyhow!("{} trailing bytes after checkpoint payload", r.remaining()));
+        }
+        Ok(Checkpoint {
+            meta: CheckpointMeta {
+                iteration,
+                episodes_done,
+                seed,
+                agents,
+                batch,
+                exec,
+                env,
+                pruner: pruner_spec,
+            },
+            manifest_fingerprint,
+            params,
+            sq_avg,
+            dmask_accum,
+            masks,
+            pruner,
+        })
+    }
+
+    /// Write to disk (via a sibling temp file + rename, so a crash
+    /// mid-write never leaves a half-written checkpoint at `path`).
+    pub fn write(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let tmp = path.with_extension("lgcp.tmp");
+        std::fs::write(&tmp, self.to_bytes()).with_context(|| format!("writing {tmp:?}"))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {tmp:?} into place at {path:?}"))?;
+        Ok(())
+    }
+
+    /// Read + verify from disk.
+    pub fn read(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path).with_context(|| format!("reading checkpoint {path:?}"))?;
+        Self::from_bytes(&bytes).with_context(|| format!("decoding checkpoint {path:?}"))
+    }
+
+    /// Refuse a checkpoint whose buffer layout disagrees with the
+    /// running manifest.
+    pub fn validate_manifest(&self, m: &Manifest) -> Result<()> {
+        let fp = m.fingerprint();
+        if self.manifest_fingerprint != fp {
+            return Err(anyhow!(
+                "checkpoint manifest fingerprint {:016x} != running manifest {:016x} — \
+                 the model layout changed; this checkpoint cannot be loaded",
+                self.manifest_fingerprint,
+                fp
+            ));
+        }
+        if self.params.len() != m.param_size || self.sq_avg.len() != m.param_size {
+            return Err(anyhow!(
+                "checkpoint params/sq_avg lengths {}/{} != manifest param_size {}",
+                self.params.len(),
+                self.sq_avg.len(),
+                m.param_size
+            ));
+        }
+        if self.dmask_accum.len() != m.mask_size {
+            return Err(anyhow!(
+                "checkpoint dmask_accum length {} != manifest mask_size {}",
+                self.dmask_accum.len(),
+                m.mask_size
+            ));
+        }
+        Ok(())
+    }
+
+    /// Materialise the flat mask vector (manifest layout).
+    pub fn mask_vector(&self, m: &Manifest) -> Result<Vec<f32>> {
+        self.masks.materialize(m)
+    }
+
+    /// Build the compressed execution structure the serving path and a
+    /// resumed sparse-exec trainer compute on — from the stored OSEL
+    /// encodings when present, by scanning the materialised masks
+    /// otherwise.
+    pub fn sparse_model(&self, m: &Manifest, cores: usize) -> Result<SparseModel> {
+        match self.masks.encodings()? {
+            Some((encodings, _)) => SparseModel::from_encodings(m, &encodings, cores),
+            None => SparseModel::from_dense_masks(m, &self.mask_vector(m)?, cores),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn flgw_checkpoint(m: &Manifest, g: usize) -> Checkpoint {
+        let mut rng = Pcg32::seeded(404 + g as u64);
+        let ig_og: Vec<(Vec<u16>, Vec<u16>)> = m
+            .masked_layers
+            .iter()
+            .map(|l| {
+                let ig: Vec<u16> =
+                    (0..l.rows).map(|_| rng.next_below(g as u32) as u16).collect();
+                let og: Vec<u16> =
+                    (0..l.cols).map(|_| rng.next_below(g as u32) as u16).collect();
+                (ig, og)
+            })
+            .collect();
+        let encodings: Vec<SparseRowMemory> = ig_og
+            .iter()
+            .map(|(ig, og)| OselEncoder::default().encode(ig, og, g).0)
+            .collect();
+        let gsize = m.grouping_size(g).unwrap();
+        Checkpoint {
+            meta: CheckpointMeta {
+                iteration: 7,
+                episodes_done: 28,
+                seed: 11,
+                agents: 3,
+                batch: 4,
+                exec: ExecMode::Sparse,
+                env: "predator_prey".to_string(),
+                pruner: format!("flgw:{g}"),
+            },
+            manifest_fingerprint: m.fingerprint(),
+            params: (0..m.param_size).map(|_| rng.next_normal()).collect(),
+            sq_avg: (0..m.param_size).map(|_| rng.next_f32()).collect(),
+            dmask_accum: (0..m.mask_size).map(|_| rng.next_normal() * 0.01).collect(),
+            masks: MaskStore::from_encodings(m, &encodings, &ig_og).unwrap(),
+            pruner: PrunerStore::Flgw {
+                g: g as u32,
+                grouping: (0..gsize).map(|_| rng.next_normal()).collect(),
+                sq_avg: vec![0.25; gsize],
+            },
+        }
+    }
+
+    #[test]
+    fn bytes_round_trip_exactly() {
+        let m = Manifest::builtin();
+        let ckpt = flgw_checkpoint(&m, 4);
+        let decoded = Checkpoint::from_bytes(&ckpt.to_bytes()).unwrap();
+        assert_eq!(decoded, ckpt);
+        decoded.validate_manifest(&m).unwrap();
+    }
+
+    #[test]
+    fn flipped_byte_fails_crc() {
+        let m = Manifest::builtin();
+        let mut bytes = flgw_checkpoint(&m, 2).to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn truncation_fails_crc() {
+        let m = Manifest::builtin();
+        let mut bytes = flgw_checkpoint(&m, 2).to_bytes();
+        bytes.truncate(bytes.len() - 9);
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_rejected() {
+        let m = Manifest::builtin();
+        let ckpt = flgw_checkpoint(&m, 2);
+        // corrupt the magic, then re-seal the CRC so only the magic check fires
+        let mut bytes = ckpt.to_bytes();
+        bytes[0] = b'X';
+        let n = bytes.len();
+        let crc = crc32(&bytes[..n - 4]);
+        bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+        // bump the version, re-seal
+        let mut bytes = ckpt.to_bytes();
+        bytes[4..8].copy_from_slice(&99u32.to_le_bytes());
+        let crc = crc32(&bytes[..n - 4]);
+        bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn osel_store_is_smaller_than_dense_and_materializes_identically() {
+        let m = Manifest::builtin();
+        for g in [2usize, 4, 16] {
+            let ckpt = flgw_checkpoint(&m, g);
+            let masks = ckpt.mask_vector(&m).unwrap();
+            // the dense-bits fallback of the same masks must materialize
+            // the same vector
+            let dense = MaskStore::from_dense_masks(&masks);
+            assert_eq!(dense.materialize(&m).unwrap(), masks, "G={g}");
+            // OSEL on-disk bytes beat the 1-byte-per-weight dense 0/1
+            // baseline (and the packed-bit fallback) at every G
+            assert!(
+                ckpt.masks.stored_bytes() < m.mask_size,
+                "G={g}: {} >= {}",
+                ckpt.masks.stored_bytes(),
+                m.mask_size
+            );
+            assert!(ckpt.masks.stored_bytes() < dense.stored_bytes(), "G={g}");
+        }
+    }
+
+    #[test]
+    fn corrupt_osel_bitvector_is_rejected_even_with_valid_crc() {
+        let m = Manifest::builtin();
+        let mut ckpt = flgw_checkpoint(&m, 4);
+        if let MaskStore::Osel(layers) = &mut ckpt.masks {
+            // flip one mask bit: CRC is recomputed at write time, so only
+            // the index-compare consistency check can catch this
+            layers[0].tuples[0].1[0] ^= 1 << 7;
+        }
+        let err = Checkpoint::from_bytes(&ckpt.to_bytes()).unwrap_err().to_string();
+        assert!(err.contains("disagrees"), "{err}");
+    }
+
+    #[test]
+    fn wrong_manifest_is_refused() {
+        let m = Manifest::builtin();
+        let mut other = Manifest::builtin();
+        other.masked_layers[0].cols += 1;
+        let ckpt = flgw_checkpoint(&m, 2);
+        assert!(ckpt.validate_manifest(&m).is_ok());
+        assert!(ckpt.validate_manifest(&other).is_err());
+    }
+
+    #[test]
+    fn sparse_model_comes_from_stored_encodings() {
+        let m = Manifest::builtin();
+        let ckpt = flgw_checkpoint(&m, 4);
+        let sm = ckpt.sparse_model(&m, 2).unwrap();
+        let masks = ckpt.mask_vector(&m).unwrap();
+        let scanned = SparseModel::from_dense_masks(&m, &masks, 2).unwrap();
+        assert_eq!(sm.nnz(), scanned.nnz());
+        for (a, b) in sm.layers.iter().zip(&scanned.layers) {
+            assert_eq!(a.row_ptr, b.row_ptr, "{}", a.name);
+            assert_eq!(a.col_idx, b.col_idx, "{}", a.name);
+        }
+    }
+
+    #[test]
+    fn write_read_round_trip_on_disk() {
+        let m = Manifest::builtin();
+        let ckpt = flgw_checkpoint(&m, 8);
+        let path = std::env::temp_dir().join("lg_ckpt_unit_test.lgcp");
+        ckpt.write(&path).unwrap();
+        let loaded = Checkpoint::read(&path).unwrap();
+        assert_eq!(loaded, ckpt);
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -1,5 +1,7 @@
 //! Training configuration (CLI-facing; defaults follow the paper §IV-A).
 
+use std::path::PathBuf;
+
 use crate::env::EnvConfig;
 use crate::runtime::ExecMode;
 
@@ -41,6 +43,19 @@ impl PrunerChoice {
             _ => None,
         }
     }
+
+    /// The CLI spec string (round-trips through [`PrunerChoice::parse`])
+    /// — what the checkpoint header records as the run's pruner
+    /// identity.
+    pub fn spec(&self) -> String {
+        match self {
+            PrunerChoice::Dense => "dense".to_string(),
+            PrunerChoice::Flgw(g) => format!("flgw:{g}"),
+            PrunerChoice::Iterative(p) => format!("iterative:{p}"),
+            PrunerChoice::BlockCirculant(b, f) => format!("bc:{b}x{f}"),
+            PrunerChoice::Gst(b, f, p) => format!("gst:{b}x{f}:{p}"),
+        }
+    }
 }
 
 /// Full training-run configuration.
@@ -73,6 +88,16 @@ pub struct TrainConfig {
     /// reference.  Bit-identical results either way (parity-tested);
     /// only throughput differs.
     pub exec: ExecMode,
+    /// Write a checkpoint every N iterations (`--save-every`; 0 = only
+    /// the end-of-run checkpoint, and that only when
+    /// [`TrainConfig::checkpoint_dir`] is set).
+    pub save_every: usize,
+    /// Directory for periodic + final checkpoints (`--checkpoint-dir`;
+    /// `None` disables checkpointing entirely).
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Stream per-iteration metrics as JSON lines to this path
+    /// (`--metrics-out`; `None` disables the sink).
+    pub metrics_out: Option<PathBuf>,
 }
 
 impl Default for TrainConfig {
@@ -89,6 +114,9 @@ impl Default for TrainConfig {
             rollouts: 1,
             log_every: 10,
             exec: ExecMode::Sparse,
+            save_every: 0,
+            checkpoint_dir: None,
+            metrics_out: None,
         }
     }
 }
@@ -130,6 +158,15 @@ mod tests {
         );
         assert_eq!(PrunerChoice::parse("nope"), None);
         assert_eq!(PrunerChoice::parse("flgw:x"), None);
+    }
+
+    #[test]
+    fn pruner_spec_round_trips() {
+        for spec in ["dense", "flgw:8", "iterative:75", "bc:4x4", "gst:4x2:75"] {
+            let parsed = PrunerChoice::parse(spec).unwrap();
+            assert_eq!(parsed.spec(), spec);
+            assert_eq!(PrunerChoice::parse(&parsed.spec()), Some(parsed));
+        }
     }
 
     #[test]

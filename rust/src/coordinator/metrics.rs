@@ -1,11 +1,14 @@
 //! Training metrics — per-iteration records, success-rate aggregation
-//! (the paper's accuracy metric, §IV-A), CSV export.
+//! (the paper's accuracy metric, §IV-A), CSV export, and the streaming
+//! JSONL sink (`--metrics-out`) that makes long runs observable without
+//! a debugger.
 
 use std::io::Write;
 use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::runtime::ExecMode;
 use crate::util::{mean, moving_average};
 
 /// One training iteration's record.
@@ -110,6 +113,74 @@ impl MetricsLog {
     }
 }
 
+/// A finite f32 as a JSON number; NaN/inf (which JSON cannot carry)
+/// degrade to `null` rather than corrupting the line.
+fn json_num(v: f32) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Streaming per-iteration metrics sink: one JSON object per line
+/// (JSONL), flushed after every write so a long run can be tailed
+/// live.  Each line carries the reward/density/exec-mode triple the
+/// observability satellite asks for, plus the loss decomposition.
+pub struct MetricsSink {
+    out: std::io::BufWriter<std::fs::File>,
+    exec: &'static str,
+}
+
+impl MetricsSink {
+    /// Create the sink file, truncating whatever was there (fresh run).
+    pub fn create(path: impl AsRef<Path>, exec: ExecMode) -> Result<Self> {
+        Self::open(path, exec, false)
+    }
+
+    /// Open the sink file for appending (resumed run — the lines the
+    /// interrupted run already streamed are history worth keeping).
+    pub fn append(path: impl AsRef<Path>, exec: ExecMode) -> Result<Self> {
+        Self::open(path, exec, true)
+    }
+
+    fn open(path: impl AsRef<Path>, exec: ExecMode, append: bool) -> Result<Self> {
+        let path = path.as_ref();
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .write(true)
+            .append(append)
+            .truncate(!append)
+            .open(path)
+            .with_context(|| format!("opening metrics sink {path:?}"))?;
+        Ok(MetricsSink { out: std::io::BufWriter::new(file), exec: exec.name() })
+    }
+
+    /// Append one iteration's record as a JSON line and flush.
+    pub fn write(&mut self, m: &IterationMetrics) -> Result<()> {
+        writeln!(
+            self.out,
+            "{{\"iteration\": {}, \"loss\": {}, \"policy_loss\": {}, \"value_loss\": {}, \
+             \"entropy\": {}, \"reward\": {}, \"success_rate\": {}, \"density\": {}, \
+             \"sparsity\": {}, \"exec\": \"{}\", \"wall_s\": {:.6}}}",
+            m.iteration,
+            json_num(m.loss),
+            json_num(m.policy_loss),
+            json_num(m.value_loss),
+            json_num(m.entropy),
+            json_num(m.mean_reward),
+            json_num(m.success_rate),
+            json_num(1.0 - m.sparsity),
+            json_num(m.sparsity),
+            self.exec,
+            m.wall_s,
+        )
+        .context("writing metrics line")?;
+        self.out.flush().context("flushing metrics sink")?;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,6 +208,53 @@ mod tests {
         assert_eq!(log.average_success_rate(), 50.0);
         assert_eq!(log.final_success_rate(0.2), 100.0);
         assert_eq!(log.success_curve(1).len(), 10);
+    }
+
+    #[test]
+    fn jsonl_sink_writes_parseable_lines() {
+        use crate::util::json::Json;
+        let tmp = std::env::temp_dir().join("lg_metrics_sink_test.jsonl");
+        let mut sink = MetricsSink::create(&tmp, ExecMode::Sparse).unwrap();
+        let mut m = rec(3, 0.5);
+        m.mean_reward = -1.25;
+        m.sparsity = 0.75;
+        sink.write(&m).unwrap();
+        m.iteration = 4;
+        m.loss = f32::NAN; // must degrade to null, not corrupt the line
+        sink.write(&m).unwrap();
+        drop(sink);
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let v = Json::parse(lines[0]).unwrap();
+        assert_eq!(v.get("iteration").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("exec").unwrap().as_str(), Some("sparse"));
+        assert!((v.get("reward").unwrap().as_f64().unwrap() + 1.25).abs() < 1e-9);
+        assert!((v.get("density").unwrap().as_f64().unwrap() - 0.25).abs() < 1e-6);
+        let v = Json::parse(lines[1]).unwrap();
+        assert_eq!(v.get("loss"), Some(&Json::Null));
+        let _ = std::fs::remove_file(tmp);
+    }
+
+    #[test]
+    fn jsonl_sink_append_keeps_history() {
+        let tmp = std::env::temp_dir().join("lg_metrics_append_test.jsonl");
+        let _ = std::fs::remove_file(&tmp);
+        let mut sink = MetricsSink::create(&tmp, ExecMode::Sparse).unwrap();
+        sink.write(&rec(0, 0.0)).unwrap();
+        drop(sink);
+        // a resumed run appends; a fresh run truncates
+        let mut sink = MetricsSink::append(&tmp, ExecMode::Sparse).unwrap();
+        sink.write(&rec(1, 1.0)).unwrap();
+        drop(sink);
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        assert_eq!(text.lines().count(), 2, "append must keep the first run's lines");
+        let mut sink = MetricsSink::create(&tmp, ExecMode::Sparse).unwrap();
+        sink.write(&rec(2, 0.5)).unwrap();
+        drop(sink);
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        assert_eq!(text.lines().count(), 1, "create must truncate");
+        let _ = std::fs::remove_file(tmp);
     }
 
     #[test]

@@ -27,7 +27,7 @@ mod trainer;
 
 pub use config::{PrunerChoice, TrainConfig};
 pub use crate::runtime::ExecMode;
-pub use metrics::{IterationMetrics, MetricsLog};
+pub use metrics::{IterationMetrics, MetricsLog, MetricsSink};
 pub use rollout::{collect_parallel, episode_seed, run_episode};
 pub use scheduler::{Stage, StageTimer};
 pub use trainer::{Pruner, Trainer};

@@ -25,8 +25,10 @@ use crate::manifest::Dims;
 use crate::runtime::{Arg, DeviceTensor, Executable, HostTensor};
 use crate::util::Pcg32;
 
-/// RNG stream id for per-episode action/gate sampling.
-const SAMPLE_STREAM: u64 = 0xc0fe;
+/// RNG stream id for per-episode action/gate sampling (shared with the
+/// serving engine's episode driver, so an `eval` episode at seed S is
+/// the same episode a training rollout at seed S would produce).
+pub(crate) const SAMPLE_STREAM: u64 = 0xc0fe;
 
 /// The seed of episode number `index` of a run with master seed
 /// `master` (splitmix-style multiply keeps nearby indices decorrelated).

@@ -20,15 +20,17 @@
 //! selects the dense ⊙-mask reference path; results are bit-identical
 //! (see `rust/tests/sparse_parity.rs`), only throughput differs.
 
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
+use crate::checkpoint::{Checkpoint, CheckpointMeta, MaskStore, PrunerStore};
 use crate::coordinator::config::{PrunerChoice, TrainConfig};
-use crate::coordinator::metrics::{IterationMetrics, MetricsLog};
+use crate::coordinator::metrics::{IterationMetrics, MetricsLog, MetricsSink};
 use crate::coordinator::rollout;
 use crate::coordinator::scheduler::{Stage, StageTimer};
-use crate::env::{discounted_returns, Episode};
+use crate::env::{discounted_returns, Episode, EnvConfig};
 use crate::model::ModelState;
 use crate::pruning::{
     BlockCirculantPruner, DensePruner, FlgwPruner, GroupSparseTrainingPruner,
@@ -112,6 +114,12 @@ pub struct Trainer {
     /// dL/dmask accumulator (FLGW's training signal).
     dmask_accum: Vec<f32>,
     episodes_done: u64,
+    /// Iterations completed so far (== the next iteration index; seeded
+    /// from the checkpoint on resume).
+    iterations_done: u64,
+    /// Where [`Trainer::train`] starts — 0 for a fresh run, the
+    /// checkpoint's iteration count after [`Trainer::resume`].
+    start_iteration: usize,
     /// Device-resident copies of the iteration-constant big inputs
     /// (params, masks) — refreshed once per iteration instead of being
     /// re-uploaded on every runtime call (EXPERIMENTS.md §Perf).
@@ -189,6 +197,8 @@ impl Trainer {
             exe_flgw,
             dmask_accum: vec![0.0; mask_size],
             episodes_done: 0,
+            iterations_done: 0,
+            start_iteration: 0,
             params_dev: None,
             masks_dev: None,
         })
@@ -199,6 +209,157 @@ impl Trainer {
     /// artifacts were built).
     pub fn from_default_artifacts(cfg: TrainConfig) -> Result<Self> {
         Self::new(Runtime::from_default_artifacts()?, cfg)
+    }
+
+    /// Resume a run from a checkpoint.  The run's *identity* — seed,
+    /// environment, pruner, agent count, minibatch size — always comes
+    /// from the checkpoint header (so a resumed run cannot silently
+    /// diverge from the run that wrote it); knobs that are parity-proven
+    /// not to affect numerics (`rollouts`, `exec`) and the *total*
+    /// iteration target come from `cfg`.  Training continues at the
+    /// stored iteration: `train()` runs iterations
+    /// `ckpt.iteration .. cfg.iterations`.
+    pub fn resume(runtime: Runtime, mut cfg: TrainConfig, ckpt: &Checkpoint) -> Result<Self> {
+        ckpt.validate_manifest(runtime.manifest())?;
+        let pruner = PrunerChoice::parse(&ckpt.meta.pruner).ok_or_else(|| {
+            anyhow!("checkpoint has unknown pruner spec {:?}", ckpt.meta.pruner)
+        })?;
+        let env = EnvConfig::parse(&ckpt.meta.env)
+            .ok_or_else(|| anyhow!("checkpoint has unknown env spec {:?}", ckpt.meta.env))?;
+        cfg.pruner = pruner;
+        cfg.seed = ckpt.meta.seed;
+        cfg.batch = ckpt.meta.batch as usize;
+        cfg = cfg.with_agents(ckpt.meta.agents as usize).with_env(env);
+        let mut trainer = Self::new(runtime, cfg)?;
+        trainer.restore_from(ckpt)?;
+        Ok(trainer)
+    }
+
+    /// [`Trainer::resume`] over the default artifacts directory,
+    /// reading (and CRC-verifying) the checkpoint at `path`.
+    pub fn from_default_artifacts_resumed(
+        cfg: TrainConfig,
+        path: impl AsRef<Path>,
+    ) -> Result<Self> {
+        let ckpt = Checkpoint::read(path)?;
+        Self::resume(Runtime::from_default_artifacts()?, cfg, &ckpt)
+    }
+
+    /// Install a decoded checkpoint's state into this (freshly built,
+    /// config-matching) trainer.
+    fn restore_from(&mut self, ckpt: &Checkpoint) -> Result<()> {
+        let manifest = self.runtime.manifest().clone();
+        let masks = ckpt.mask_vector(&manifest)?;
+        self.state = ModelState::from_parts(
+            &manifest,
+            ckpt.params.clone(),
+            masks,
+            ckpt.sq_avg.clone(),
+        )?;
+        if ckpt.dmask_accum.len() != manifest.mask_size {
+            return Err(anyhow!(
+                "checkpoint dmask_accum length {} != manifest mask_size {}",
+                ckpt.dmask_accum.len(),
+                manifest.mask_size
+            ));
+        }
+        self.dmask_accum = ckpt.dmask_accum.clone();
+        self.episodes_done = ckpt.meta.episodes_done;
+        self.iterations_done = ckpt.meta.iteration;
+        self.start_iteration = ckpt.meta.iteration as usize;
+        self.params_dev = None;
+        self.masks_dev = None;
+        match &ckpt.pruner {
+            PrunerStore::Stateless => {}
+            PrunerStore::Flgw { g, grouping, sq_avg } => {
+                let flgw = self.pruner.as_flgw_mut().ok_or_else(|| {
+                    anyhow!("checkpoint carries FLGW state but the configured pruner is not FLGW")
+                })?;
+                if *g as usize != flgw.groups() {
+                    return Err(anyhow!(
+                        "checkpoint FLGW G={g} != configured G={}",
+                        flgw.groups()
+                    ));
+                }
+                let expect = manifest.grouping_size(flgw.groups())?;
+                if grouping.len() != expect || sq_avg.len() != expect {
+                    return Err(anyhow!(
+                        "checkpoint grouping lengths {}/{} != expected {expect}",
+                        grouping.len(),
+                        sq_avg.len()
+                    ));
+                }
+                flgw.grouping.grouping = grouping.clone();
+                flgw.grouping.sq_avg = sq_avg.clone();
+                if let Some((encodings, keys)) = ckpt.masks.encodings()? {
+                    for (srm, l) in encodings.iter().zip(&manifest.masked_layers) {
+                        if srm.index_list().len() != l.rows || srm.row_len() != l.cols {
+                            return Err(anyhow!(
+                                "checkpoint encoding {}x{} != masked layer {} ({}x{})",
+                                srm.index_list().len(),
+                                srm.row_len(),
+                                l.name,
+                                l.rows,
+                                l.cols
+                            ));
+                        }
+                    }
+                    flgw.restore_encodings(encodings, keys)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Snapshot the full training state as a [`Checkpoint`] — dense
+    /// params + optimizer state, the masks in their OSEL-compressed form
+    /// when FLGW is running (dense packed bits otherwise), the FLGW
+    /// grouping state, and the counters a bit-identical resume needs.
+    pub fn checkpoint(&self) -> Result<Checkpoint> {
+        let manifest = self.runtime.manifest();
+        let masks = match self.pruner.as_flgw() {
+            Some(f) if f.encodings.len() == manifest.masked_layers.len() => {
+                MaskStore::from_encodings(manifest, &f.encodings, f.layer_keys())?
+            }
+            _ => MaskStore::from_dense_masks(&self.state.masks),
+        };
+        let pruner = match self.pruner.as_flgw() {
+            Some(f) => PrunerStore::Flgw {
+                g: f.groups() as u32,
+                grouping: f.grouping.grouping.clone(),
+                sq_avg: f.grouping.sq_avg.clone(),
+            },
+            None => PrunerStore::Stateless,
+        };
+        Ok(Checkpoint {
+            meta: CheckpointMeta {
+                iteration: self.iterations_done,
+                episodes_done: self.episodes_done,
+                seed: self.cfg.seed,
+                agents: self.cfg.agents as u32,
+                batch: self.cfg.batch as u32,
+                exec: self.cfg.exec,
+                env: self.cfg.env.name(),
+                pruner: self.cfg.pruner.spec(),
+            },
+            manifest_fingerprint: manifest.fingerprint(),
+            params: self.state.params.clone(),
+            sq_avg: self.state.sq_avg.clone(),
+            dmask_accum: self.dmask_accum.clone(),
+            masks,
+            pruner,
+        })
+    }
+
+    /// Write [`Trainer::checkpoint`] to `path` (atomic rename).
+    pub fn save_checkpoint(&self, path: impl AsRef<Path>) -> Result<()> {
+        self.checkpoint()?.write(path)
+    }
+
+    /// The iteration [`Trainer::train`] will start (or started) from —
+    /// 0 for a fresh run, the stored iteration count after a resume.
+    pub fn start_iteration(&self) -> usize {
+        self.start_iteration
     }
 
     /// The manifest the runtime was built over.
@@ -403,6 +564,7 @@ impl Trainer {
         let mean_reward = crate::util::mean(
             &episodes.iter().map(|e| e.total_reward()).collect::<Vec<_>>(),
         );
+        self.iterations_done = iteration as u64 + 1;
         let [pol, val, ent, _] = [loss_stats[1], loss_stats[2], loss_stats[3], 0.0];
         Ok(IterationMetrics {
             iteration,
@@ -417,10 +579,26 @@ impl Trainer {
         })
     }
 
-    /// Train for the configured number of iterations.
+    /// Train up to the configured total iteration count, starting from
+    /// [`Trainer::start_iteration()`] (0 unless resumed).  When
+    /// [`TrainConfig::checkpoint_dir`] is set, a checkpoint lands there
+    /// every [`TrainConfig::save_every`] iterations and once more at
+    /// the end of the run; when [`TrainConfig::metrics_out`] is set,
+    /// every iteration's metrics stream to it as a JSON line.
     pub fn train(&mut self) -> Result<MetricsLog> {
         let mut log = MetricsLog::default();
-        for it in 0..self.cfg.iterations {
+        // Fresh runs truncate the metrics sink; resumed runs append to
+        // it — the interrupted run's lines are history worth keeping.
+        let mut sink = match &self.cfg.metrics_out {
+            Some(path) if self.start_iteration > 0 => {
+                Some(MetricsSink::append(path, self.cfg.exec)?)
+            }
+            Some(path) => Some(MetricsSink::create(path, self.cfg.exec)?),
+            None => None,
+        };
+        let (start, total) = (self.start_iteration, self.cfg.iterations);
+        let save_every = self.cfg.save_every;
+        for it in start..total {
             let m = self.run_iteration(it)?;
             if self.cfg.log_every > 0 && it % self.cfg.log_every == 0 {
                 eprintln!(
@@ -433,8 +611,40 @@ impl Trainer {
                     m.wall_s * 1e3
                 );
             }
+            if let Some(sink) = sink.as_mut() {
+                sink.write(&m)?;
+            }
             log.push(m);
+            if save_every > 0 && (it + 1) % save_every == 0 && it + 1 < total {
+                if let Some(dir) = self.cfg.checkpoint_dir.clone() {
+                    self.save_into(&dir, it + 1)?;
+                }
+            }
+        }
+        // End-of-run checkpoint — only when this call actually trained:
+        // a resume already at (or past) the target must not overwrite an
+        // existing checkpoint with one whose name and state disagree.
+        if total > start {
+            if let Some(dir) = self.cfg.checkpoint_dir.clone() {
+                self.save_into(&dir, total)?;
+            }
+        } else if self.cfg.log_every > 0 {
+            eprintln!(
+                "nothing to train: resumed at iteration {start} with a total target of {total}"
+            );
         }
         Ok(log)
+    }
+
+    /// Write `ckpt-{iter:06}.lgcp` into `dir` (creating it as needed).
+    fn save_into(&self, dir: &Path, iter: usize) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow!("creating checkpoint dir {}: {e}", dir.display()))?;
+        let path = dir.join(format!("ckpt-{iter:06}.lgcp"));
+        self.save_checkpoint(&path)?;
+        if self.cfg.log_every > 0 {
+            eprintln!("checkpoint written to {}", path.display());
+        }
+        Ok(path)
     }
 }

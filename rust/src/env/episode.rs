@@ -23,6 +23,11 @@ pub struct Episode {
     /// Graded success in [0, 1] (fraction of predators that caught the
     /// prey — the paper's accuracy metric).
     pub success_frac: f32,
+    /// Live environment steps taken before padding (== the number of
+    /// `policy_fwd` executions the episode cost) — the honest
+    /// denominator for serving-throughput accounting, which padding
+    /// would otherwise inflate.
+    pub steps: usize,
 }
 
 impl Episode {
@@ -37,6 +42,7 @@ impl Episode {
             rewards: Vec::with_capacity(t),
             success: false,
             success_frac: 0.0,
+            steps: 0,
         }
     }
 
@@ -65,8 +71,12 @@ impl Episode {
     /// Pad to exactly `t` steps (the environment's no-op action —
     /// Predator-Prey: stay, Traffic Junction: brake — gate 0, zero
     /// reward, repeated last observation) so the static-T artifact
-    /// accepts the buffers.
+    /// accepts the buffers.  The first call records the pre-padding
+    /// length as [`Episode::steps`].
     pub fn pad_to(&mut self, t: usize, noop_action: usize) {
+        if self.steps == 0 {
+            self.steps = self.len();
+        }
         let a = self.n_agents;
         let d = self.obs_dim;
         while self.len() < t {
@@ -127,6 +137,7 @@ mod tests {
         ep.push(&[0.1; 6], &[1, 2], &[1.0, 0.0], 0.5);
         ep.pad_to(4, 4);
         assert_eq!(ep.len(), 4);
+        assert_eq!(ep.steps, 1, "steps records the pre-padding length");
         assert_eq!(ep.obs.len(), 4 * 2 * 3);
         assert_eq!(ep.actions.len(), 4 * 2);
         // padded actions are the stay action

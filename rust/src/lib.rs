@@ -13,7 +13,12 @@
 //!   unit, VPU cores); [`env`] hosts the scenarios — Predator-Prey and
 //!   Traffic Junction — behind the [`env::MultiAgentEnv`] trait (the
 //!   paper runs the RL environment on the host CPU); [`pruning`]
-//!   implements FLGW and the baseline pruning algorithms of Fig. 4(a).
+//!   implements FLGW and the baseline pruning algorithms of Fig. 4(a);
+//!   [`checkpoint`] persists runs as versioned, OSEL-compressed,
+//!   CRC-protected checkpoints (resumable bit-identically); [`serve`]
+//!   is the batched policy-serving engine that loads a checkpoint once
+//!   and drives many concurrent evaluation episodes through the sparse
+//!   execution path.
 //! * **Layer 2/1 (build-time Python)** — IC3Net in JAX on Pallas kernels,
 //!   AOT-lowered to HLO text.  [`runtime`] executes the model's entry
 //!   points on one of two backends: the pure-Rust native backend
@@ -21,6 +26,7 @@
 //!   artifacts (`--features pjrt`); Python never runs here either way.
 
 pub mod accel;
+pub mod checkpoint;
 pub mod coordinator;
 pub mod env;
 pub mod experiments;
@@ -28,6 +34,7 @@ pub mod manifest;
 pub mod model;
 pub mod pruning;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 pub use manifest::Manifest;

@@ -9,7 +9,13 @@
 //!                      [--env predator_prey|traffic_junction:<level>]
 //!                      [--rollouts R] [--exec sparse|dense]
 //!                      [--pruner dense|flgw:G|iterative:P|bc:BxF|gst:BxF:P]
-//!                      [--seed S] [--csv PATH]
+//!                      [--seed S] [--csv PATH] [--metrics-out PATH]
+//!                      [--save-every N] [--checkpoint-dir DIR]
+//!                      [--resume CKPT]
+//! learning-group eval  --checkpoint CKPT [--episodes E] [--rollouts R]
+//!                      [--exec sparse|dense] [--seed S] [--json PATH]
+//! learning-group serve --checkpoint CKPT [--seconds S] [--rollouts R]
+//!                      [--exec sparse|dense] [--seed S] [--json PATH]
 //! learning-group roofline            # Fig 1
 //! learning-group accuracy [--iterations N] [--env E] [--rollouts R] [--fig9]
 //!                                    # Fig 4(a) / Fig 9
@@ -27,12 +33,26 @@
 //! native-runtime path: compute on the OSEL-compressed weights
 //! (default) or the dense ⊙-mask reference — bit-identical results,
 //! different throughput (see `cargo bench --bench hotpath`).
+//!
+//! Checkpointing: `--checkpoint-dir` (plus optional `--save-every N`)
+//! writes versioned, OSEL-compressed, CRC-protected checkpoints;
+//! `--resume CKPT` continues a run bit-identically to one that never
+//! stopped (the total `--iterations` still counts from 0).  `eval`
+//! replays a checkpointed policy over a fixed episode count on R
+//! worker threads; `serve` sustains it for a wall-clock budget — both
+//! report steps/sec, episodes/sec and reward statistics as JSON.
+
+use std::path::PathBuf;
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
+use learning_group::checkpoint::Checkpoint;
 use learning_group::coordinator::{ExecMode, PrunerChoice, TrainConfig, Trainer};
 use learning_group::env::EnvConfig;
 use learning_group::experiments;
+use learning_group::runtime::Runtime;
+use learning_group::serve::{PolicyServer, ServeMode, ServeOptions};
 
 struct Args {
     flags: std::collections::HashMap<String, String>,
@@ -98,6 +118,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         .unwrap_or_else(|| "sparse".to_string());
     let exec = ExecMode::parse(&exec_s)
         .ok_or_else(|| anyhow!("unknown exec mode {exec_s:?} (sparse | dense)"))?;
+    let save_every: usize = args.get("save-every", 0)?;
+    let checkpoint_dir = args
+        .flags
+        .get("checkpoint-dir")
+        .cloned()
+        .or_else(|| (save_every > 0).then(|| "checkpoints".to_string()));
     let cfg = TrainConfig {
         batch: args.get("batch", 4)?,
         iterations: args.get("iterations", 200)?,
@@ -106,19 +132,32 @@ fn cmd_train(args: &Args) -> Result<()> {
         rollouts: args.get("rollouts", 1)?,
         log_every: args.get("log-every", 10)?,
         exec,
+        save_every,
+        checkpoint_dir: checkpoint_dir.map(PathBuf::from),
+        metrics_out: args.flags.get("metrics-out").map(PathBuf::from),
         ..TrainConfig::default().with_agents(agents)
     }
     .with_env(env);
+    // On --resume the run's identity (env/pruner/seed/agents) comes from
+    // the checkpoint header, so the banner prints the *effective* config.
+    let mut trainer = match args.flags.get("resume") {
+        Some(path) => {
+            eprintln!("resuming from checkpoint {path}");
+            Trainer::from_default_artifacts_resumed(cfg, path)?
+        }
+        None => Trainer::from_default_artifacts(cfg)?,
+    };
     eprintln!(
-        "training IC3Net: env={} agents={} batch={} iterations={} rollouts={} exec={} pruner={pruner_s}",
-        cfg.env.name(),
-        cfg.agents,
-        cfg.batch,
-        cfg.iterations,
-        cfg.rollouts,
-        cfg.exec.name()
+        "training IC3Net: env={} agents={} batch={} iterations={}..{} rollouts={} exec={} pruner={}",
+        trainer.cfg.env.name(),
+        trainer.cfg.agents,
+        trainer.cfg.batch,
+        trainer.start_iteration(),
+        trainer.cfg.iterations,
+        trainer.cfg.rollouts,
+        trainer.cfg.exec.name(),
+        trainer.cfg.pruner.spec()
     );
-    let mut trainer = Trainer::from_default_artifacts(cfg)?;
     let log = trainer.train()?;
     println!(
         "final success rate (last 25%): {:.1}%   average: {:.1}%   sparsity: {:.1}%",
@@ -137,12 +176,58 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Shared front-end of `eval` (fixed episode count) and `serve`
+/// (fixed wall-clock budget): load + verify the checkpoint, build the
+/// policy server once, run, print the JSON report.
+fn cmd_eval(args: &Args, sustained: bool) -> Result<()> {
+    let path = args
+        .flags
+        .get("checkpoint")
+        .ok_or_else(|| anyhow!("--checkpoint <path> is required"))?;
+    let ckpt = Checkpoint::read(path)?;
+    let workers: usize = args.get("rollouts", 1)?;
+    let exec_s = args
+        .flags
+        .get("exec")
+        .cloned()
+        .unwrap_or_else(|| "sparse".to_string());
+    let exec = ExecMode::parse(&exec_s)
+        .ok_or_else(|| anyhow!("unknown exec mode {exec_s:?} (sparse | dense)"))?;
+    let mode = if sustained {
+        let secs: f64 = args.get("seconds", 5.0)?;
+        if !secs.is_finite() || secs < 0.0 {
+            return Err(anyhow!("--seconds must be a non-negative finite number, got {secs}"));
+        }
+        ServeMode::Duration(Duration::from_secs_f64(secs))
+    } else {
+        ServeMode::Episodes(args.get("episodes", 32)?)
+    };
+    let mut rt = Runtime::from_default_artifacts()?;
+    let server = PolicyServer::from_checkpoint(&mut rt, &ckpt, exec, workers)?;
+    eprintln!(
+        "serving checkpoint {path}: env={} iteration={} exec={} workers={workers}",
+        server.env_name(),
+        ckpt.meta.iteration,
+        exec.name()
+    );
+    let report = server.run(&ServeOptions { workers, mode, seed: args.get("seed", 1)? })?;
+    print!("{}", report.to_json());
+    if let Some(out) = args.flags.get("json") {
+        std::fs::write(out, report.to_json())
+            .map_err(|e| anyhow!("writing report to {out}: {e}"))?;
+        eprintln!("report written to {out}");
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = argv.first().map(String::as_str).unwrap_or("help");
     let args = Args::parse(&argv[1.min(argv.len())..]);
     match cmd {
         "train" => cmd_train(&args)?,
+        "eval" => cmd_eval(&args, false)?,
+        "serve" => cmd_eval(&args, true)?,
         "roofline" => print!("{}", experiments::fig1_roofline()),
         "osel" => {
             print!("{}", experiments::fig10a_cycles());
@@ -187,12 +272,18 @@ fn main() -> Result<()> {
             }
         }
         "help" | "--help" | "-h" => {
-            println!("usage: learning-group <train|roofline|accuracy|osel|balance|perf|resources> [flags]");
+            println!("usage: learning-group <train|eval|serve|roofline|accuracy|osel|balance|perf|resources> [flags]");
             println!("train flags: --agents A --batch B --iterations N --seed S --csv PATH");
             println!("             --env predator_prey|traffic_junction:easy|medium|hard");
             println!("             --rollouts R (parallel episode workers)");
             println!("             --exec sparse|dense (compressed vs dense-masked kernels)");
             println!("             --pruner dense|flgw:G|iterative:P|bc:BxF|gst:BxF:P");
+            println!("             --save-every N --checkpoint-dir DIR (periodic checkpoints)");
+            println!("             --resume CKPT (continue bit-identically from a checkpoint)");
+            println!("             --metrics-out PATH (per-iteration JSONL metrics sink)");
+            println!("eval flags:  --checkpoint CKPT --episodes E --rollouts R --exec sparse|dense");
+            println!("             --seed S --json PATH (also write the report to a file)");
+            println!("serve flags: like eval, but --seconds S (sustained-throughput mode)");
             println!("see README.md for the full CLI reference and paper-figure mapping");
         }
         other => return Err(anyhow!("unknown command {other:?}; try help")),

@@ -505,6 +505,42 @@ impl Manifest {
             .sum())
     }
 
+    /// Layout fingerprint — FNV-1a 64 over everything a checkpoint's
+    /// flat buffers depend on: dims, buffer sizes, the masked-layer
+    /// table and the parameter layout.  Two manifests with the same
+    /// fingerprint lay out `params`/`masks`/`sq_avg` identically, so a
+    /// checkpoint written under one loads under the other; hyper
+    /// parameters and the artifact table are deliberately excluded
+    /// (they do not affect buffer layout).
+    pub fn fingerprint(&self) -> u64 {
+        let mut desc = format!(
+            "dims:{}:{}:{}:{}:{};sizes:{}:{}",
+            self.dims.obs_dim,
+            self.dims.hidden,
+            self.dims.n_actions,
+            self.dims.n_gate,
+            self.dims.episode_len,
+            self.param_size,
+            self.mask_size,
+        );
+        for l in &self.masked_layers {
+            desc.push_str(&format!(";m:{}:{}:{}:{}", l.name, l.rows, l.cols, l.offset));
+        }
+        for e in &self.param_layout {
+            desc.push_str(&format!(";p:{}:{}", e.name, e.offset));
+            for s in &e.shape {
+                desc.push_str(&format!(":{s}"));
+            }
+        }
+        // FNV-1a 64
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in desc.as_bytes() {
+            h ^= u64::from(*b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
     /// Read a little-endian f32 blob (e.g. `init_params.bin`).
     pub fn read_f32_blob(&self, file: &str) -> Result<Vec<f32>> {
         let path = self.dir.join(file);
@@ -599,6 +635,21 @@ mod tests {
         let spec = m.synthesize_artifact("flgw_update_g3").unwrap();
         assert_eq!(spec.inputs[0].elements(), m.grouping_size(3).unwrap());
         assert!(m.synthesize_artifact("nope").is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_layout_only() {
+        let a = Manifest::builtin();
+        let mut b = Manifest::builtin();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // hyper parameters do not affect buffer layout
+        b.hyper.lr = 123.0;
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // a layout change must change the fingerprint
+        b.masked_layers[0].cols += 1;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let parsed = Manifest::parse(SAMPLE).unwrap();
+        assert_ne!(a.fingerprint(), parsed.fingerprint());
     }
 
     #[test]

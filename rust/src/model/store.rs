@@ -37,6 +37,40 @@ impl ModelState {
         })
     }
 
+    /// Rebuild state from its three flat buffers (the checkpoint
+    /// restore path).  Validates every length against the manifest so a
+    /// truncated or mis-matched checkpoint cannot produce a state whose
+    /// slices the runtime would index out of bounds.
+    pub fn from_parts(
+        manifest: &Manifest,
+        params: Vec<f32>,
+        masks: Vec<f32>,
+        sq_avg: Vec<f32>,
+    ) -> Result<Self> {
+        if params.len() != manifest.param_size {
+            return Err(anyhow!(
+                "params length {} != manifest param_size {}",
+                params.len(),
+                manifest.param_size
+            ));
+        }
+        if masks.len() != manifest.mask_size {
+            return Err(anyhow!(
+                "masks length {} != manifest mask_size {}",
+                masks.len(),
+                manifest.mask_size
+            ));
+        }
+        if sq_avg.len() != manifest.param_size {
+            return Err(anyhow!(
+                "sq_avg length {} != manifest param_size {}",
+                sq_avg.len(),
+                manifest.param_size
+            ));
+        }
+        Ok(ModelState { params, masks, sq_avg })
+    }
+
     /// Load the Python-side reference initialisation blob.
     pub fn from_init_blob(manifest: &Manifest) -> Result<Self> {
         let params = manifest.read_f32_blob("init_params.bin")?;
@@ -201,6 +235,40 @@ mod tests {
         // OSEL must agree or mask parity with mask_gen_g* breaks.
         let m = [1.0, 1.0, 0.0, /* row1 */ 0.0, 2.0, 2.0];
         assert_eq!(argmax_rows(&m, 2, 3), vec![0, 1]);
+    }
+
+    #[test]
+    fn from_parts_validates_lengths() {
+        let m = Manifest::builtin();
+        let ok = ModelState::from_parts(
+            &m,
+            vec![0.5; m.param_size],
+            vec![1.0; m.mask_size],
+            vec![0.0; m.param_size],
+        )
+        .unwrap();
+        assert_eq!(ok.params.len(), m.param_size);
+        assert!(ModelState::from_parts(
+            &m,
+            vec![0.5; m.param_size - 1],
+            vec![1.0; m.mask_size],
+            vec![0.0; m.param_size],
+        )
+        .is_err());
+        assert!(ModelState::from_parts(
+            &m,
+            vec![0.5; m.param_size],
+            vec![1.0; m.mask_size + 3],
+            vec![0.0; m.param_size],
+        )
+        .is_err());
+        assert!(ModelState::from_parts(
+            &m,
+            vec![0.5; m.param_size],
+            vec![1.0; m.mask_size],
+            vec![0.0; 1],
+        )
+        .is_err());
     }
 
     #[test]

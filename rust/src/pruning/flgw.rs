@@ -11,7 +11,7 @@
 //! Also the measurement point for Fig. 10 (encode cycles / footprint) and
 //! Table I (per-layer sparse row memories feed the load allocator).
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::accel::osel::{OselEncoder, OselStats};
 use crate::accel::sparse_row_memory::SparseRowMemory;
@@ -68,6 +68,39 @@ impl FlgwPruner {
 
     pub fn groups(&self) -> usize {
         self.grouping.g
+    }
+
+    /// Per-layer (IG, OG) argmax index lists at the last encode (layer
+    /// order; empty before the first encode).  The checkpoint stores
+    /// these alongside the encodings: the grouping matrices advance
+    /// *after* the encode every iteration, so the keys cannot be
+    /// recomputed from the saved grouping — they must travel with it
+    /// for a resumed run to skip exactly the re-encodes an
+    /// uninterrupted run would have skipped.
+    pub fn layer_keys(&self) -> &[(Vec<u16>, Vec<u16>)] {
+        &self.layer_key
+    }
+
+    /// Restore the encode cache from a checkpoint: per-layer sparse row
+    /// memories plus their (IG, OG) argmax keys, in layer order.  The
+    /// caller is responsible for shape-validating the encodings against
+    /// the manifest (the checkpoint reader does).
+    pub fn restore_encodings(
+        &mut self,
+        encodings: Vec<SparseRowMemory>,
+        layer_key: Vec<(Vec<u16>, Vec<u16>)>,
+    ) -> Result<()> {
+        if encodings.len() != layer_key.len() {
+            return Err(anyhow!(
+                "{} encodings but {} layer keys",
+                encodings.len(),
+                layer_key.len()
+            ));
+        }
+        self.encodings = encodings;
+        self.layer_key = layer_key;
+        self.changed = false;
+        Ok(())
     }
 
     /// Encode the masked layers and write the masks into `state`,
@@ -215,6 +248,28 @@ mod tests {
         assert!(p.stats.total_cycles() > cycles_after_first);
         assert!(p.masks_changed());
         assert_ne!(s.masks, masks_first);
+    }
+
+    #[test]
+    fn restored_encodings_skip_reencode() {
+        let m = tiny_manifest();
+        let mut s = tiny_state(&m);
+        let mut p = pruner(&m, 4);
+        p.update_masks(&mut s, &ctx(&m, 0, &[])).unwrap();
+        // move the cache into a fresh pruner over the same grouping (the
+        // resume path) — the next regeneration must be a no-op
+        let encodings = p.encodings.clone();
+        let keys: Vec<_> = p.layer_keys().to_vec();
+        let mut q = pruner(&m, 4);
+        q.restore_encodings(encodings, keys).unwrap();
+        let masks_before = s.masks.clone();
+        q.update_masks(&mut s, &ctx(&m, 1, &[])).unwrap();
+        assert!(!q.masks_changed(), "restored cache must suppress the re-encode");
+        assert_eq!(s.masks, masks_before);
+        assert_eq!(q.stats.total_cycles(), 0, "no encode cycles charged after restore");
+        // mismatched lengths are rejected
+        let mut r = pruner(&m, 4);
+        assert!(r.restore_encodings(Vec::new(), vec![(vec![0], vec![0])]).is_err());
     }
 
     #[test]

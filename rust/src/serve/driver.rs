@@ -1,0 +1,200 @@
+//! Slab episode driver — the per-worker inner loop of the serving
+//! engine.
+//!
+//! IC3Net couples the agents of one episode through the communication
+//! mean inside `policy_fwd`, so episodes cannot be packed into a single
+//! wider forward call without changing the numerics (agents of
+//! different episodes would communicate).  What *can* be batched away
+//! is the per-step host traffic: the training rollout path clones four
+//! fresh input tensors per step, while this driver packs observations,
+//! recurrent state and gates into reusable buffers owned by the worker
+//! — zero per-step input allocation, one `policy_fwd` execution per
+//! live episode step.
+//!
+//! Sampling uses the same per-episode PCG32 stream as the training
+//! rollout driver ([`crate::coordinator::rollout`]), so an episode
+//! served at seed S is bit-for-bit the episode a training rollout at
+//! seed S would have produced — asserted by this module's tests.
+
+use anyhow::Result;
+
+use crate::coordinator::rollout::SAMPLE_STREAM;
+use crate::env::MultiAgentEnv;
+use crate::manifest::Dims;
+use crate::runtime::{Arg, DeviceTensor, Executable, HostTensor};
+use crate::util::Pcg32;
+
+/// Outcome of one served episode (the serving path keeps only the
+/// aggregate the report needs, not the full trajectory).
+#[derive(Debug, Clone)]
+pub struct EpisodeOutcome {
+    /// Index of the episode within the serving run (stats are
+    /// aggregated in index order for a deterministic report).
+    pub index: u64,
+    /// The seed the episode ran under.
+    pub seed: u64,
+    /// Live environment steps (== `policy_fwd` executions).
+    pub steps: usize,
+    /// Undiscounted total team reward.
+    pub total_reward: f32,
+    /// Strict success criterion at episode end.
+    pub success: bool,
+    /// Graded success in [0, 1].
+    pub success_frac: f32,
+}
+
+/// Reusable packed input buffers for one worker thread.
+pub struct EpisodeDriver {
+    dims: Dims,
+    agents: usize,
+    obs_t: HostTensor,
+    h_t: HostTensor,
+    c_t: HostTensor,
+    gate_t: HostTensor,
+    env_acts: Vec<usize>,
+    gates: Vec<f32>,
+}
+
+/// Overwrite a packed f32 buffer in place (the reuse that replaces the
+/// training path's per-step clones).
+fn fill(t: &mut HostTensor, src: &[f32]) {
+    if let HostTensor::F32(v) = t {
+        v.copy_from_slice(src);
+    }
+}
+
+fn set_all(t: &mut HostTensor, value: f32) {
+    if let HostTensor::F32(v) = t {
+        v.iter_mut().for_each(|x| *x = value);
+    }
+}
+
+impl EpisodeDriver {
+    pub fn new(dims: &Dims, agents: usize) -> Self {
+        EpisodeDriver {
+            dims: dims.clone(),
+            agents,
+            obs_t: HostTensor::F32(vec![0.0; agents * dims.obs_dim]),
+            h_t: HostTensor::F32(vec![0.0; agents * dims.hidden]),
+            c_t: HostTensor::F32(vec![0.0; agents * dims.hidden]),
+            gate_t: HostTensor::F32(vec![1.0; agents]),
+            env_acts: Vec::with_capacity(agents),
+            gates: Vec::with_capacity(agents),
+        }
+    }
+
+    /// Drive one episode to completion with the shared immutable model
+    /// state.  Identical action/gate sampling to the training rollout
+    /// path: full-head softmax, surplus actions mapped to the
+    /// environment's no-op at the env boundary only.
+    pub fn run(
+        &mut self,
+        exe_fwd: &Executable,
+        params_dev: &DeviceTensor,
+        masks_dev: &DeviceTensor,
+        env: &mut dyn MultiAgentEnv,
+        index: u64,
+        seed: u64,
+    ) -> Result<EpisodeOutcome> {
+        let a = self.agents;
+        let env_actions = env.n_actions().min(self.dims.n_actions);
+        let noop = env.noop_action();
+        let mut rng = Pcg32::new(seed, SAMPLE_STREAM);
+
+        fill(&mut self.obs_t, &env.reset(seed));
+        set_all(&mut self.h_t, 0.0);
+        set_all(&mut self.c_t, 0.0);
+        set_all(&mut self.gate_t, 1.0);
+
+        let mut steps = 0usize;
+        let mut total_reward = 0.0f32;
+        for _ in 0..self.dims.episode_len {
+            let outs = exe_fwd.run_args(&[
+                Arg::Device(params_dev),
+                Arg::Device(masks_dev),
+                Arg::Host(&self.obs_t),
+                Arg::Host(&self.h_t),
+                Arg::Host(&self.c_t),
+                Arg::Host(&self.gate_t),
+            ])?;
+            let logits = outs[0].as_f32()?;
+            let gate_logits = outs[2].as_f32()?;
+
+            self.env_acts.clear();
+            self.gates.clear();
+            for i in 0..a {
+                let row = &logits[i * self.dims.n_actions..(i + 1) * self.dims.n_actions];
+                let sampled = rng.sample_logits(row);
+                self.env_acts.push(if sampled < env_actions { sampled } else { noop });
+                let gl = &gate_logits[i * self.dims.n_gate..(i + 1) * self.dims.n_gate];
+                self.gates.push(rng.sample_logits(gl) as u8 as f32);
+            }
+
+            let step = env.step(&self.env_acts);
+            steps += 1;
+            total_reward += step.reward;
+
+            fill(&mut self.obs_t, &step.obs);
+            fill(&mut self.h_t, outs[3].as_f32()?);
+            fill(&mut self.c_t, outs[4].as_f32()?);
+            fill(&mut self.gate_t, &self.gates);
+            if step.done {
+                break;
+            }
+        }
+        Ok(EpisodeOutcome {
+            index,
+            seed,
+            steps,
+            total_reward,
+            success: env.is_success(),
+            success_frac: env.success_fraction(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::rollout;
+    use crate::env::EnvConfig;
+    use crate::manifest::Manifest;
+    use crate::model::ModelState;
+    use crate::runtime::Runtime;
+
+    /// The serving driver must replay exactly the episode the training
+    /// rollout path produces for the same seed — same step count, same
+    /// reward, same success.
+    #[test]
+    fn driver_matches_training_rollout_path() {
+        let mut rt = Runtime::new(Manifest::builtin()).unwrap();
+        let m = rt.manifest().clone();
+        let exe = rt.load("policy_fwd_a3").unwrap();
+        let state = ModelState::init(&m).unwrap();
+        let params_dev = exe.upload(0, &HostTensor::F32(state.params.clone())).unwrap();
+        let masks_dev = exe.upload(1, &HostTensor::F32(state.masks.clone())).unwrap();
+        let env_cfg = EnvConfig::default().with_agents(3);
+
+        let mut driver = EpisodeDriver::new(&m.dims, 3);
+        for seed in [1u64, 42, 1234] {
+            let mut env_a = env_cfg.build();
+            let reference = rollout::run_episode(
+                &exe,
+                &params_dev,
+                &masks_dev,
+                &m.dims,
+                env_a.as_mut(),
+                seed,
+            )
+            .unwrap();
+            let mut env_b = env_cfg.build();
+            let served = driver
+                .run(&exe, &params_dev, &masks_dev, env_b.as_mut(), 0, seed)
+                .unwrap();
+            assert_eq!(served.steps, reference.steps, "seed {seed}");
+            assert_eq!(served.total_reward, reference.total_reward(), "seed {seed}");
+            assert_eq!(served.success, reference.success, "seed {seed}");
+            assert_eq!(served.success_frac, reference.success_frac, "seed {seed}");
+        }
+    }
+}

@@ -1,0 +1,405 @@
+//! Policy serving — the batched evaluation engine behind
+//! `learning-group serve` / `learning-group eval`.
+//!
+//! The north-star deployment story ("serve heavy traffic from millions
+//! of users") needs exactly what related work measures as the MARL
+//! bottleneck: rollout/inference throughput, not training math.  This
+//! module is that serving vertical: a [`PolicyServer`] loads a
+//! checkpoint **once**, uploads the parameters and the OSEL-compressed
+//! mask structure as shared immutable device state, and fans episodes
+//! out over worker threads, each running the allocation-free slab
+//! driver ([`EpisodeDriver`]) against the sparse `policy_fwd` path.
+//!
+//! Two front-ends share the engine:
+//!
+//! * **eval** — run a fixed number of episodes (`--rollouts R` workers)
+//!   and report throughput + per-env reward statistics as JSON.
+//! * **serve** — run for a fixed wall-clock duration (the sustained-
+//!   throughput mode the serving benchmark records as
+//!   `BENCH_serve_throughput.json`).
+//!
+//! Episodes are seeded by index exactly like training rollouts
+//! ([`crate::coordinator::rollout::episode_seed`]), so an eval run is
+//! reproducible end-to-end: same checkpoint + same seed + same episode
+//! count ⇒ the same report, whatever the worker count.
+
+mod driver;
+
+pub use driver::{EpisodeDriver, EpisodeOutcome};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::checkpoint::Checkpoint;
+use crate::coordinator::rollout::episode_seed;
+use crate::env::EnvConfig;
+use crate::manifest::Manifest;
+use crate::runtime::{DeviceTensor, ExecMode, Executable, HostTensor, Runtime};
+use crate::util::{mean, stddev};
+
+/// How a serving run terminates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ServeMode {
+    /// Run exactly this many episodes (the `eval` subcommand).
+    Episodes(usize),
+    /// Keep starting episodes until the wall-clock budget is spent
+    /// (the `serve` subcommand).
+    Duration(Duration),
+}
+
+/// Serving-run options.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Worker threads driving concurrent episodes.
+    pub workers: usize,
+    /// Termination condition.
+    pub mode: ServeMode,
+    /// Master seed for the per-episode seed stream.
+    pub seed: u64,
+}
+
+/// Aggregate reward statistics over the served episodes.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RewardStats {
+    pub mean: f32,
+    pub std: f32,
+    pub min: f32,
+    pub max: f32,
+}
+
+impl RewardStats {
+    fn over(rewards: &[f32]) -> Self {
+        if rewards.is_empty() {
+            return RewardStats::default();
+        }
+        RewardStats {
+            mean: mean(rewards),
+            std: stddev(rewards),
+            min: rewards.iter().cloned().fold(f32::INFINITY, f32::min),
+            max: rewards.iter().cloned().fold(f32::NEG_INFINITY, f32::max),
+        }
+    }
+}
+
+/// The serving report (`eval`/`serve` JSON payload).
+#[derive(Debug, Clone)]
+pub struct EvalReport {
+    pub env: String,
+    pub agents: usize,
+    pub exec: ExecMode,
+    pub workers: usize,
+    /// Training iterations behind the served checkpoint.
+    pub checkpoint_iteration: u64,
+    /// Surviving-weight fraction of the served masks (1.0 = dense).
+    pub density: f32,
+    pub episodes: usize,
+    /// Live environment steps (== `policy_fwd` executions).
+    pub steps: usize,
+    pub wall_s: f64,
+    pub steps_per_sec: f64,
+    pub episodes_per_sec: f64,
+    pub reward: RewardStats,
+    /// Mean graded success over the served episodes.
+    pub success_rate: f32,
+}
+
+impl EvalReport {
+    /// Serialise as a single JSON object (manual emission — the build
+    /// environment has no serde; the repo's JSON parser round-trips it).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\n  \"kind\": \"serve_report\",\n  \"env\": \"{}\",\n  \"agents\": {},\n  \
+             \"exec\": \"{}\",\n  \"workers\": {},\n  \"checkpoint_iteration\": {},\n  \
+             \"density\": {:.6},\n  \"episodes\": {},\n  \"steps\": {},\n  \
+             \"wall_s\": {:.6},\n  \"steps_per_sec\": {:.3},\n  \"episodes_per_sec\": {:.3},\n  \
+             \"reward\": {{\"mean\": {:.6}, \"std\": {:.6}, \"min\": {:.6}, \"max\": {:.6}}},\n  \
+             \"success_rate\": {:.6}\n}}\n",
+            self.env,
+            self.agents,
+            self.exec.name(),
+            self.workers,
+            self.checkpoint_iteration,
+            self.density,
+            self.episodes,
+            self.steps,
+            self.wall_s,
+            self.steps_per_sec,
+            self.episodes_per_sec,
+            self.reward.mean,
+            self.reward.std,
+            self.reward.min,
+            self.reward.max,
+            self.success_rate,
+        )
+    }
+}
+
+/// A loaded policy ready to serve: checkpoint decoded once, parameters
+/// and compressed mask structure uploaded once, shared immutably by
+/// every worker.
+pub struct PolicyServer {
+    manifest: Manifest,
+    env_cfg: EnvConfig,
+    agents: usize,
+    exec: ExecMode,
+    density: f32,
+    checkpoint_iteration: u64,
+    exe_fwd: Arc<Executable>,
+    params_dev: DeviceTensor,
+    masks_dev: DeviceTensor,
+}
+
+impl PolicyServer {
+    /// Build a server from a decoded checkpoint.  `exec` picks the
+    /// kernel path (the two are bit-identical; sparse is the fast
+    /// default), `workers` sizes the row→core partition of the shared
+    /// [`crate::runtime::SparseModel`].
+    pub fn from_checkpoint(
+        runtime: &mut Runtime,
+        ckpt: &Checkpoint,
+        exec: ExecMode,
+        workers: usize,
+    ) -> Result<Self> {
+        let manifest = runtime.manifest().clone();
+        ckpt.validate_manifest(&manifest)?;
+        let agents = ckpt.meta.agents as usize;
+        let env_cfg = EnvConfig::parse(&ckpt.meta.env)
+            .ok_or_else(|| anyhow!("checkpoint has unknown env spec {:?}", ckpt.meta.env))?
+            .with_agents(agents);
+        let probe = env_cfg.build();
+        if probe.obs_dim() != manifest.dims.obs_dim {
+            return Err(anyhow!(
+                "checkpoint env {} obs_dim {} != manifest obs_dim {}",
+                ckpt.meta.env,
+                probe.obs_dim(),
+                manifest.dims.obs_dim
+            ));
+        }
+        let exe_fwd = runtime.load(&format!("policy_fwd_a{agents}"))?;
+        let masks = ckpt.mask_vector(&manifest)?;
+        let density = if masks.is_empty() {
+            1.0
+        } else {
+            masks.iter().sum::<f32>() / masks.len() as f32
+        };
+        let masks_t = HostTensor::F32(masks);
+        let params_dev = exe_fwd.upload(0, &HostTensor::F32(ckpt.params.clone()))?;
+        let masks_dev = match exec {
+            ExecMode::DenseMasked => exe_fwd.upload(1, &masks_t)?,
+            ExecMode::Sparse => {
+                let model = ckpt.sparse_model(&manifest, workers.max(1))?;
+                exe_fwd.upload_sparse(1, &masks_t, Arc::new(model))?
+            }
+        };
+        Ok(PolicyServer {
+            manifest,
+            env_cfg,
+            agents,
+            exec,
+            density,
+            checkpoint_iteration: ckpt.meta.iteration,
+            exe_fwd,
+            params_dev,
+            masks_dev,
+        })
+    }
+
+    /// The environment the server replays (from the checkpoint header).
+    pub fn env_name(&self) -> String {
+        self.env_cfg.name()
+    }
+
+    /// Drive episodes across `opts.workers` threads until the mode's
+    /// termination condition holds, then aggregate the report.
+    ///
+    /// Work distribution is a shared atomic episode counter: worker
+    /// threads claim the next index, derive its seed, and run it on
+    /// their own environment + slab driver.  In episode mode every
+    /// index below the target runs exactly once; in duration mode
+    /// workers stop claiming once the deadline passes (episodes already
+    /// in flight complete — reported wall time includes them).
+    pub fn run(&self, opts: &ServeOptions) -> Result<EvalReport> {
+        let workers = opts.workers.max(1);
+        let next = AtomicU64::new(0);
+        let outcomes: Mutex<Vec<EpisodeOutcome>> = Mutex::new(Vec::new());
+        let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        let deadline = match opts.mode {
+            ServeMode::Duration(d) => Some(Instant::now() + d),
+            ServeMode::Episodes(_) => None,
+        };
+        let target = match opts.mode {
+            ServeMode::Episodes(n) => n as u64,
+            ServeMode::Duration(_) => u64::MAX,
+        };
+
+        let start = Instant::now();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let next = &next;
+                let outcomes = &outcomes;
+                let first_err = &first_err;
+                scope.spawn(move || {
+                    let mut env = self.env_cfg.build();
+                    let mut drv = EpisodeDriver::new(&self.manifest.dims, self.agents);
+                    loop {
+                        if first_err.lock().expect("serve error lock").is_some() {
+                            break;
+                        }
+                        if let Some(d) = deadline {
+                            if Instant::now() >= d {
+                                break;
+                            }
+                        }
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= target {
+                            break;
+                        }
+                        let seed = episode_seed(opts.seed, i);
+                        match drv.run(
+                            &self.exe_fwd,
+                            &self.params_dev,
+                            &self.masks_dev,
+                            env.as_mut(),
+                            i,
+                            seed,
+                        ) {
+                            Ok(out) => outcomes.lock().expect("serve outcome lock").push(out),
+                            Err(e) => {
+                                let mut guard = first_err.lock().expect("serve error lock");
+                                if guard.is_none() {
+                                    *guard = Some(e);
+                                }
+                                break;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        let wall_s = start.elapsed().as_secs_f64();
+
+        if let Some(e) = first_err.into_inner().expect("serve error lock") {
+            return Err(e);
+        }
+        let mut outcomes = outcomes.into_inner().expect("serve outcome lock");
+        // index order, so the aggregation (f32 sums included) is
+        // deterministic whatever the worker interleaving was
+        outcomes.sort_by_key(|o| o.index);
+
+        let rewards: Vec<f32> = outcomes.iter().map(|o| o.total_reward).collect();
+        let successes: Vec<f32> = outcomes.iter().map(|o| o.success_frac).collect();
+        let steps: usize = outcomes.iter().map(|o| o.steps).sum();
+        let episodes = outcomes.len();
+        Ok(EvalReport {
+            env: self.env_cfg.name(),
+            agents: self.agents,
+            exec: self.exec,
+            workers,
+            checkpoint_iteration: self.checkpoint_iteration,
+            density: self.density,
+            episodes,
+            steps,
+            wall_s,
+            steps_per_sec: steps as f64 / wall_s.max(1e-9),
+            episodes_per_sec: episodes as f64 / wall_s.max(1e-9),
+            reward: RewardStats::over(&rewards),
+            success_rate: mean(&successes),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{PrunerChoice, TrainConfig, Trainer};
+    use crate::util::json::Json;
+
+    fn tiny_checkpoint() -> (Runtime, Checkpoint) {
+        let cfg = TrainConfig {
+            batch: 1,
+            iterations: 2,
+            pruner: PrunerChoice::Flgw(4),
+            seed: 5,
+            log_every: 0,
+            ..TrainConfig::default().with_agents(3)
+        };
+        let mut trainer = Trainer::from_default_artifacts(cfg).unwrap();
+        trainer.train().unwrap();
+        let ckpt = trainer.checkpoint().unwrap();
+        (Runtime::from_default_artifacts().unwrap(), ckpt)
+    }
+
+    #[test]
+    fn eval_is_reproducible_across_worker_counts() {
+        let (mut rt, ckpt) = tiny_checkpoint();
+        let server = PolicyServer::from_checkpoint(&mut rt, &ckpt, ExecMode::Sparse, 4).unwrap();
+        let run = |workers: usize| {
+            server
+                .run(&ServeOptions {
+                    workers,
+                    mode: ServeMode::Episodes(6),
+                    seed: 9,
+                })
+                .unwrap()
+        };
+        let one = run(1);
+        let four = run(4);
+        assert_eq!(one.episodes, 6);
+        assert_eq!(four.episodes, 6);
+        assert_eq!(one.steps, four.steps);
+        assert_eq!(one.reward.mean, four.reward.mean);
+        assert_eq!(one.reward.min, four.reward.min);
+        assert_eq!(one.success_rate, four.success_rate);
+    }
+
+    #[test]
+    fn sparse_and_dense_serving_agree() {
+        let (mut rt, ckpt) = tiny_checkpoint();
+        let opts = ServeOptions { workers: 2, mode: ServeMode::Episodes(4), seed: 21 };
+        let sparse = PolicyServer::from_checkpoint(&mut rt, &ckpt, ExecMode::Sparse, 2)
+            .unwrap()
+            .run(&opts)
+            .unwrap();
+        let dense = PolicyServer::from_checkpoint(&mut rt, &ckpt, ExecMode::DenseMasked, 2)
+            .unwrap()
+            .run(&opts)
+            .unwrap();
+        assert_eq!(sparse.steps, dense.steps);
+        assert_eq!(sparse.reward.mean, dense.reward.mean);
+        assert_eq!(sparse.success_rate, dense.success_rate);
+        assert!(sparse.density < 1.0, "FLGW checkpoint must serve a pruned model");
+    }
+
+    #[test]
+    fn report_json_parses() {
+        let (mut rt, ckpt) = tiny_checkpoint();
+        let server = PolicyServer::from_checkpoint(&mut rt, &ckpt, ExecMode::Sparse, 1).unwrap();
+        let report = server
+            .run(&ServeOptions { workers: 1, mode: ServeMode::Episodes(2), seed: 1 })
+            .unwrap();
+        let v = Json::parse(&report.to_json()).unwrap();
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("serve_report"));
+        assert_eq!(v.get("episodes").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("env").unwrap().as_str(), Some("predator_prey"));
+        assert!(v.get("steps_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert!(v.get("reward").unwrap().get("mean").is_some());
+    }
+
+    #[test]
+    fn duration_mode_terminates() {
+        let (mut rt, ckpt) = tiny_checkpoint();
+        let server = PolicyServer::from_checkpoint(&mut rt, &ckpt, ExecMode::Sparse, 2).unwrap();
+        let report = server
+            .run(&ServeOptions {
+                workers: 2,
+                mode: ServeMode::Duration(Duration::from_millis(50)),
+                seed: 3,
+            })
+            .unwrap();
+        assert!(report.episodes > 0, "a 50 ms budget must finish at least one episode");
+        assert!(report.wall_s > 0.0);
+    }
+}
