@@ -1,0 +1,250 @@
+//! Batched lockstep execution benchmark → `BENCH_batched_exec.json`.
+//!
+//! Measures minibatch rollout collection — the MARL wall-clock
+//! bottleneck — three ways at B ∈ {1, 4, 16, 64} episodes:
+//!
+//! * **sequential**: the per-episode driver (`collect_parallel` at one
+//!   worker) — B·T `policy_fwd_a{A}` kernel calls per collection.
+//! * **lockstep**: the batched engine (`collect_lockstep`,
+//!   `--batch-exec`) — T `policy_fwd_a{A}x{B}` calls on `[B·A, ·]`
+//!   activation blocks, intra-op threading off.
+//! * **lockstep+threads**: the same engine with the sparse kernels'
+//!   row fan-out at 4 intra-op cores (`--intra-threads 4`) — the
+//!   software realization of the paper's multi-core VPU dataflow.
+//!
+//! Before anything is timed, the lockstep episodes are asserted equal
+//! to the sequential ones (the engine's bit-identity contract).  The
+//! JSON artifact records steps/sec per row; in `--smoke` (CI) mode the
+//! run **exits non-zero** if the full engine (lockstep+threads) is
+//! slower than the sequential driver at B = 16 — the bench-smoke gate.
+//!
+//! ```bash
+//! cargo bench --bench batched_exec              # full run
+//! cargo bench --bench batched_exec -- --smoke   # CI smoke: fewer runs
+//! ```
+
+use std::sync::Arc;
+
+use learning_group::accel::load_alloc::balanced_indexes;
+use learning_group::accel::osel::OselEncoder;
+use learning_group::coordinator::{collect_lockstep, collect_parallel, episode_seed};
+use learning_group::env::EnvConfig;
+use learning_group::model::ModelState;
+use learning_group::runtime::{DeviceTensor, Executable, HostTensor, Runtime, SparseModel};
+use learning_group::util::benchutil::{bench, report};
+use learning_group::util::Pcg32;
+
+/// Agents per episode (the paper's largest Predator-Prey setting).
+const AGENTS: usize = 8;
+/// FLGW group count of the benchmark masks (~75% sparsity).
+const GROUPS: usize = 4;
+/// Intra-op cores of the threaded lockstep row.
+const INTRA: usize = 4;
+
+/// One minibatch size's measurements (steps/sec over live env steps).
+struct SweepRow {
+    batch: usize,
+    live_steps: usize,
+    seq_sps: f64,
+    lockstep_sps: f64,
+    lockstep_par_sps: f64,
+}
+
+impl SweepRow {
+    fn speedup(&self) -> f64 {
+        self.lockstep_sps / self.seq_sps
+    }
+
+    fn speedup_par(&self) -> f64 {
+        self.lockstep_par_sps / self.seq_sps
+    }
+}
+
+/// FLGW-structured benchmark masks + the sparse models both paths share
+/// (cores = 1 for the unthreaded rows, INTRA for the threaded one).
+fn bench_masks(
+    m: &learning_group::Manifest,
+) -> (Vec<f32>, Arc<SparseModel>, Arc<SparseModel>) {
+    let mut rng = Pcg32::seeded(90 + GROUPS as u64);
+    let mut masks = vec![0.0f32; m.mask_size];
+    let mut encodings = Vec::new();
+    for l in &m.masked_layers {
+        let ig = balanced_indexes(l.rows, GROUPS, 0.0, &mut rng);
+        let og = balanced_indexes(l.cols, GROUPS, 0.0, &mut rng);
+        let (srm, _) = OselEncoder::default().encode(&ig, &og, GROUPS);
+        masks[l.offset..l.offset + l.size()]
+            .copy_from_slice(&OselEncoder::materialize_mask(&srm));
+        encodings.push(srm);
+    }
+    let sparse1 = Arc::new(SparseModel::from_encodings(m, &encodings, 1).unwrap());
+    let sparse_t = Arc::new(SparseModel::from_encodings(m, &encodings, INTRA).unwrap());
+    (masks, sparse1, sparse_t)
+}
+
+/// Total live environment steps of a collected minibatch — the honest
+/// throughput numerator (identical across drivers by parity).
+fn live_steps(episodes: &[learning_group::env::Episode]) -> usize {
+    episodes.iter().map(|e| e.steps).sum()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn sweep_point(
+    rt: &mut Runtime,
+    exe_seq: &Executable,
+    params_dev: &DeviceTensor,
+    masks_seq: &DeviceTensor,
+    masks_lock1: &DeviceTensor,
+    masks_lock_t: &DeviceTensor,
+    env_cfg: &EnvConfig,
+    batch: usize,
+    smoke: bool,
+) -> SweepRow {
+    let m = rt.manifest().clone();
+    let exe_b = rt.load(&format!("policy_fwd_a{AGENTS}x{batch}")).unwrap();
+    let seeds: Vec<u64> = (0..batch as u64).map(|i| episode_seed(7, i)).collect();
+
+    // bit-identity gate before anything is timed
+    let reference =
+        collect_parallel(exe_seq, params_dev, masks_seq, &m.dims, env_cfg, &seeds, 1).unwrap();
+    let lockstep =
+        collect_lockstep(&exe_b, params_dev, masks_lock1, &m.dims, env_cfg, &seeds).unwrap();
+    for (e, (r, l)) in reference.iter().zip(&lockstep).enumerate() {
+        assert_eq!(r.obs, l.obs, "B={batch} episode {e}: lockstep must be bit-identical");
+        assert_eq!(r.actions, l.actions, "B={batch} episode {e}");
+        assert_eq!(r.rewards, l.rewards, "B={batch} episode {e}");
+    }
+    let threaded =
+        collect_lockstep(&exe_b, params_dev, masks_lock_t, &m.dims, env_cfg, &seeds).unwrap();
+    for (e, (r, l)) in reference.iter().zip(&threaded).enumerate() {
+        assert_eq!(r.actions, l.actions, "B={batch} episode {e}: threads must be inert");
+    }
+    let steps = live_steps(&reference);
+
+    let (warmup, runs) = if smoke { (1, 3) } else { (2, 10) };
+    let seq = bench(warmup, runs, || {
+        collect_parallel(exe_seq, params_dev, masks_seq, &m.dims, env_cfg, &seeds, 1).unwrap()
+    });
+    let lock = bench(warmup, runs, || {
+        collect_lockstep(&exe_b, params_dev, masks_lock1, &m.dims, env_cfg, &seeds).unwrap()
+    });
+    let lock_t = bench(warmup, runs, || {
+        collect_lockstep(&exe_b, params_dev, masks_lock_t, &m.dims, env_cfg, &seeds).unwrap()
+    });
+
+    let row = SweepRow {
+        batch,
+        live_steps: steps,
+        seq_sps: steps as f64 / seq.median.as_secs_f64().max(1e-12),
+        lockstep_sps: steps as f64 / lock.median.as_secs_f64().max(1e-12),
+        lockstep_par_sps: steps as f64 / lock_t.median.as_secs_f64().max(1e-12),
+    };
+    report(&format!("bench/rollout_B{batch}(sequential)"), seq, "");
+    report(
+        &format!("bench/rollout_B{batch}(lockstep)"),
+        lock,
+        &format!("{:.2}x", row.speedup()),
+    );
+    report(
+        &format!("bench/rollout_B{batch}(lockstep+{INTRA}t)"),
+        lock_t,
+        &format!("{:.2}x", row.speedup_par()),
+    );
+    row
+}
+
+/// Serialise the sweep to `BENCH_batched_exec.json` (cwd = workspace
+/// root under `cargo bench`) — schema documented in docs/BENCHMARKS.md.
+fn write_sweep_json(rows: &[SweepRow], smoke: bool) -> std::io::Result<()> {
+    let mut row_text = String::new();
+    for (i, r) in rows.iter().enumerate() {
+        if i > 0 {
+            row_text.push_str(",\n");
+        }
+        row_text.push_str(&format!(
+            "    {{\"batch\": {}, \"live_steps\": {}, \"seq_steps_per_sec\": {:.3}, \
+             \"lockstep_steps_per_sec\": {:.3}, \"lockstep_par_steps_per_sec\": {:.3}, \
+             \"lockstep_speedup\": {:.3}, \"lockstep_par_speedup\": {:.3}}}",
+            r.batch,
+            r.live_steps,
+            r.seq_sps,
+            r.lockstep_sps,
+            r.lockstep_par_sps,
+            r.speedup(),
+            r.speedup_par(),
+        ));
+    }
+    let text = format!(
+        "{{\n  \"bench\": \"batched_exec\",\n  \"mode\": \"{}\",\n  \"agents\": {AGENTS},\n  \
+         \"groups\": {GROUPS},\n  \"intra_threads\": {INTRA},\n  \"exec\": \"sparse\",\n  \
+         \"gate\": \"lockstep_par@B=16 >= sequential\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+        if smoke { "smoke" } else { "full" },
+        row_text,
+    );
+    std::fs::write("BENCH_batched_exec.json", text)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|arg| arg == "--smoke")
+        || std::env::var_os("LG_BENCH_SMOKE").is_some();
+
+    let mut rt = match Runtime::from_default_artifacts() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("cannot run batched-exec sweep (runtime unavailable): {e:#}");
+            std::process::exit(1);
+        }
+    };
+    let m = rt.manifest().clone();
+    let state = ModelState::init(&m).unwrap();
+    let exe_seq = rt.load(&format!("policy_fwd_a{AGENTS}")).unwrap();
+    let env_cfg = EnvConfig::default().with_agents(AGENTS);
+
+    let (masks, sparse1, sparse_t) = bench_masks(&m);
+    let params_t = HostTensor::F32(state.params.clone());
+    let masks_t = HostTensor::F32(masks);
+    let params_dev = exe_seq.upload(0, &params_t).unwrap();
+    // the sequential reference runs the same sparse exec mode at 1 core
+    let masks_seq = exe_seq.upload_sparse(1, &masks_t, sparse1.clone()).unwrap();
+    let masks_lock1 = exe_seq.upload_sparse(1, &masks_t, sparse1).unwrap();
+    let masks_lock_t = exe_seq.upload_sparse(1, &masks_t, sparse_t).unwrap();
+
+    let batches: &[usize] = if smoke { &[1, 4, 16] } else { &[1, 4, 16, 64] };
+    let mut rows = Vec::new();
+    for &b in batches {
+        rows.push(sweep_point(
+            &mut rt,
+            &exe_seq,
+            &params_dev,
+            &masks_seq,
+            &masks_lock1,
+            &masks_lock_t,
+            &env_cfg,
+            b,
+            smoke,
+        ));
+    }
+    write_sweep_json(&rows, smoke).expect("writing BENCH_batched_exec.json");
+    println!("sweep written to BENCH_batched_exec.json");
+
+    // the smoke gate: the full engine must beat the sequential driver
+    // at B = 16 — batching + intra-op threading is the whole point
+    let gate = rows
+        .iter()
+        .find(|r| r.batch == 16)
+        .expect("sweep includes B=16");
+    println!(
+        "gate: lockstep+{INTRA}t@B=16 {:.2}x vs sequential (lockstep alone {:.2}x)",
+        gate.speedup_par(),
+        gate.speedup()
+    );
+    if gate.speedup_par() < 1.0 {
+        eprintln!(
+            "REGRESSION: batched lockstep engine is slower than the sequential driver \
+             at B=16 ({:.2}x)",
+            gate.speedup_par()
+        );
+        if smoke {
+            std::process::exit(1);
+        }
+    }
+}

@@ -30,7 +30,10 @@ fn measure(
     workers: usize,
     episodes: usize,
 ) -> EvalReport {
-    let server = PolicyServer::from_checkpoint(rt, ckpt, ExecMode::Sparse, workers)
+    // intra-threads 1, lockstep batch 1: this bench isolates *worker*
+    // scaling; the lockstep/intra-op axes have their own sweep
+    // (`cargo bench --bench batched_exec`).
+    let server = PolicyServer::from_checkpoint(rt, ckpt, ExecMode::Sparse, 1, 1)
         .expect("building policy server");
     // warmup pass, then the measured pass
     server

@@ -36,38 +36,48 @@ pub struct ByteWriter {
 }
 
 impl ByteWriter {
+    /// An empty encoder.
     pub fn new() -> Self {
         ByteWriter { buf: Vec::new() }
     }
 
+    /// Consume the encoder, returning the accumulated bytes.
     pub fn into_inner(self) -> Vec<u8> {
         self.buf
     }
 
+    /// The bytes written so far (what the CRC trailer hashes).
     pub fn as_slice(&self) -> &[u8] {
         &self.buf
     }
 
+    /// Append raw bytes verbatim (no length prefix).
     pub fn put_bytes(&mut self, b: &[u8]) {
         self.buf.extend_from_slice(b);
     }
 
+    /// Append one byte.
     pub fn put_u8(&mut self, v: u8) {
         self.buf.push(v);
     }
 
+    /// Append a `u16`, little-endian.
     pub fn put_u16(&mut self, v: u16) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    /// Append a `u32`, little-endian.
     pub fn put_u32(&mut self, v: u32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    /// Append a `u64`, little-endian.
     pub fn put_u64(&mut self, v: u64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    /// Append an `f32` as its little-endian bit pattern (NaNs and
+    /// signed zeros round-trip exactly).
     pub fn put_f32(&mut self, v: f32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
@@ -110,14 +120,18 @@ pub struct ByteReader<'a> {
 }
 
 impl<'a> ByteReader<'a> {
+    /// A decoder positioned at the start of `buf`.
     pub fn new(buf: &'a [u8]) -> Self {
         ByteReader { buf, pos: 0 }
     }
 
+    /// Bytes left to read.
     pub fn remaining(&self) -> usize {
         self.buf.len() - self.pos
     }
 
+    /// Consume and return the next `n` raw bytes; a bounded error (not
+    /// a panic) when fewer remain.
     pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         if n > self.remaining() {
             return Err(anyhow!(
@@ -131,25 +145,30 @@ impl<'a> ByteReader<'a> {
         Ok(out)
     }
 
+    /// Read one byte.
     pub fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
 
+    /// Read a little-endian `u16`.
     pub fn u16(&mut self) -> Result<u16> {
         let b = self.take(2)?;
         Ok(u16::from_le_bytes([b[0], b[1]]))
     }
 
+    /// Read a little-endian `u32`.
     pub fn u32(&mut self) -> Result<u32> {
         let b = self.take(4)?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
+    /// Read a little-endian `u64`.
     pub fn u64(&mut self) -> Result<u64> {
         let b = self.take(8)?;
         Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
     }
 
+    /// Read a little-endian `f32` bit pattern.
     pub fn f32(&mut self) -> Result<f32> {
         let b = self.take(4)?;
         Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))

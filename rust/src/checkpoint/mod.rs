@@ -95,8 +95,11 @@ pub struct CheckpointMeta {
 /// as packed bitvector words.
 #[derive(Debug, Clone, PartialEq)]
 pub struct OselLayerStore {
+    /// Weight-matrix rows (input channels) of the layer.
     pub rows: u32,
+    /// Weight-matrix columns (output channels) of the layer.
     pub cols: u32,
+    /// FLGW group count G the encoding was produced at.
     pub groups: u32,
     /// Per-row IG argmax (== the sparse row memory's index list).
     pub ig: Vec<u16>,
@@ -289,6 +292,7 @@ pub enum PrunerStore {
 /// A fully decoded checkpoint.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
+    /// Run-identity header (seed, env, pruner, counters).
     pub meta: CheckpointMeta,
     /// Fingerprint of the manifest the run trained under
     /// ([`Manifest::fingerprint`]).

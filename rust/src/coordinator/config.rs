@@ -88,6 +88,18 @@ pub struct TrainConfig {
     /// reference.  Bit-identical results either way (parity-tested);
     /// only throughput differs.
     pub exec: ExecMode,
+    /// Step the whole minibatch in lockstep through one batched
+    /// `policy_fwd_a{A}x{B}` kernel call per timestep (`--batch-exec`)
+    /// instead of rolling episodes out one at a time.  Bit-identical to
+    /// the per-episode drivers (`rust/tests/batched_exec.rs`); only
+    /// throughput differs.  Takes effect when `batch` > 1.
+    pub batch_exec: bool,
+    /// Intra-op worker threads inside the native sparse kernels
+    /// (`--intra-threads`): sizes the row→core partition of the
+    /// [`crate::runtime::SparseModel`], one scoped thread per core when
+    /// a kernel call carries enough rows (the batched lockstep path).
+    /// Any value produces identical numerics; 1 disables the fan-out.
+    pub intra_threads: usize,
     /// Write a checkpoint every N iterations (`--save-every`; 0 = only
     /// the end-of-run checkpoint, and that only when
     /// [`TrainConfig::checkpoint_dir`] is set).
@@ -114,6 +126,8 @@ impl Default for TrainConfig {
             rollouts: 1,
             log_every: 10,
             exec: ExecMode::Sparse,
+            batch_exec: false,
+            intra_threads: 1,
             save_every: 0,
             checkpoint_dir: None,
             metrics_out: None,

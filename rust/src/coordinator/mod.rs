@@ -8,7 +8,10 @@
 //! 2. **Forward propagation** — B episode rollouts through the
 //!    `policy_fwd_a{A}` entry point, with the host environment in the
 //!    loop; with [`TrainConfig::rollouts`] > 1 the [`rollout`] driver
-//!    collects them on parallel worker threads, deterministically.
+//!    collects them on parallel worker threads, and with
+//!    [`TrainConfig::batch_exec`] it steps the whole minibatch in
+//!    lockstep through one batched `policy_fwd_a{A}x{B}` call per
+//!    timestep — all three paths deterministically bit-identical.
 //! 3. **Backward propagation** — each stored episode replays through
 //!    `grad_episode_a{A}`; gradients accumulate host-side.
 //! 4. **Weight update** — `apply_update` (RMSprop) plus, for FLGW,
@@ -28,6 +31,6 @@ mod trainer;
 pub use config::{PrunerChoice, TrainConfig};
 pub use crate::runtime::ExecMode;
 pub use metrics::{IterationMetrics, MetricsLog, MetricsSink};
-pub use rollout::{collect_parallel, episode_seed, run_episode};
+pub use rollout::{collect_lockstep, collect_parallel, episode_seed, run_episode};
 pub use scheduler::{Stage, StageTimer};
 pub use trainer::{Pruner, Trainer};

@@ -1,20 +1,30 @@
-//! Episode-rollout driver — sequential and parallel collection of the
-//! forward-stage minibatch.
+//! Episode-rollout driver — sequential, parallel and batched-lockstep
+//! collection of the forward-stage minibatch.
 //!
 //! The paper's forward stage (§III stage 2) rolls out B episodes with
 //! the current policy; on the host side that work is embarrassingly
 //! parallel across episodes, and rollout throughput dominates wall-clock
 //! on CPU (Wiggins et al. 2023 measure MARL env+inference at >80% of
-//! end-to-end time).  [`collect_parallel`] fans the minibatch out over
-//! `std::thread::scope` workers, each with its own freshly-built
-//! environment, sharing the uploaded params/masks immutably.
+//! end-to-end time).  Two drivers attack it:
+//!
+//! * [`collect_parallel`] fans the minibatch out over
+//!   `std::thread::scope` workers, each with its own freshly-built
+//!   environment, sharing the uploaded params/masks immutably.
+//! * [`collect_lockstep`] steps **all** B episodes in lockstep through
+//!   one batched `policy_fwd_a{A}x{B}` executable: a single `[B·A, ·]`
+//!   kernel invocation per timestep instead of B, which amortizes
+//!   per-call overhead and gives the native sparse kernels enough rows
+//!   to fan out over their intra-op core partition (`--batch-exec`,
+//!   `--intra-threads`).
 //!
 //! **Determinism.**  Every episode draws its own RNG stream
 //! ([`episode_seed`] -> PCG32) and its own environment reset, both
 //! functions of the episode *index* alone — never of which worker ran
-//! it or in which order.  Workers write results into the episode's slot,
-//! so parallel and sequential collection return bit-identical episode
-//! vectors (asserted by `rust/tests/integration.rs`).
+//! it, in which order, or whether it stepped alone or packed in a
+//! lockstep block.  Workers write results into the episode's slot, so
+//! parallel, sequential and lockstep collection return bit-identical
+//! episode vectors (asserted by `rust/tests/integration.rs` and
+//! `rust/tests/batched_exec.rs`).
 
 use std::sync::Mutex;
 
@@ -179,6 +189,141 @@ pub fn collect_parallel(
         .into_iter()
         .map(|slot| slot.ok_or_else(|| anyhow!("rollout worker dropped an episode")))
         .collect()
+}
+
+/// View a packed f32 lockstep slab.
+fn slab(t: &HostTensor) -> &[f32] {
+    match t {
+        HostTensor::F32(v) => v,
+        other => unreachable!("lockstep slabs are f32, got {}", other.dtype()),
+    }
+}
+
+/// Mutable twin of [`slab`].
+fn slab_mut(t: &mut HostTensor) -> &mut [f32] {
+    match t {
+        HostTensor::F32(v) => v,
+        other => unreachable!("lockstep slabs are f32, got {}", other.dtype()),
+    }
+}
+
+/// Collect `seeds.len()` episodes by stepping them **in lockstep**
+/// through a batched `policy_fwd_a{A}x{B}` executable (B =
+/// `seeds.len()`, which must match the executable's batch — the
+/// manifest spec validation rejects any mismatch loudly).
+///
+/// Per timestep, exactly one kernel call processes the packed
+/// `[B·A, ·]` activation block.  Every episode keeps its own
+/// environment, its own PCG32 sampling stream and its own comm-mean
+/// block inside the kernel, so the collected episodes are bit-identical
+/// to [`collect_parallel`]'s (rows are independent in every kernel; the
+/// per-row accumulation order is unchanged).
+///
+/// Early-terminating episodes are masked out of the hot loop: their
+/// rows still ride along in the kernel call (row independence makes
+/// them inert), but no more actions are sampled, their environment is
+/// not stepped again, and the episode is padded with the environment's
+/// no-op to the artifacts' static length — exactly like the sequential
+/// driver.  Once *every* episode has terminated the timestep loop exits
+/// early.
+pub fn collect_lockstep(
+    exe_fwd_batched: &Executable,
+    params_dev: &DeviceTensor,
+    masks_dev: &DeviceTensor,
+    dims: &Dims,
+    env_cfg: &EnvConfig,
+    seeds: &[u64],
+) -> Result<Vec<Episode>> {
+    let b = seeds.len();
+    if b == 0 {
+        return Ok(Vec::new());
+    }
+    let mut envs: Vec<Box<dyn MultiAgentEnv + Send>> =
+        (0..b).map(|_| env_cfg.build()).collect();
+    let a = envs[0].n_agents();
+    let env_actions = envs[0].n_actions().min(dims.n_actions);
+    let noop = envs[0].noop_action();
+    let t_max = dims.episode_len;
+    let mut rngs: Vec<Pcg32> =
+        seeds.iter().map(|&s| Pcg32::new(s, SAMPLE_STREAM)).collect();
+    let mut episodes: Vec<Episode> =
+        (0..b).map(|_| Episode::with_capacity(t_max, a, dims.obs_dim)).collect();
+    let mut done = vec![false; b];
+
+    // packed lockstep slabs, mutated in place across timesteps (no
+    // per-step input cloning — same discipline as the serving engine's
+    // drivers, which cannot be reused here because training must record
+    // the full trajectory): episode e owns rows e*A .. (e+1)*A
+    let mut obs_t = HostTensor::F32(vec![0.0f32; b * a * dims.obs_dim]);
+    for (e, env) in envs.iter_mut().enumerate() {
+        slab_mut(&mut obs_t)[e * a * dims.obs_dim..(e + 1) * a * dims.obs_dim]
+            .copy_from_slice(&env.reset(seeds[e]));
+    }
+    let mut h_t = HostTensor::F32(vec![0.0f32; b * a * dims.hidden]);
+    let mut c_t = HostTensor::F32(vec![0.0f32; b * a * dims.hidden]);
+    let mut g_t = HostTensor::F32(vec![1.0f32; b * a]);
+
+    let mut actions = Vec::with_capacity(a);
+    let mut env_acts = Vec::with_capacity(a);
+    let mut gates = Vec::with_capacity(a);
+    for _ in 0..t_max {
+        if done.iter().all(|&d| d) {
+            break;
+        }
+        let outs = exe_fwd_batched.run_args(&[
+            Arg::Device(params_dev),
+            Arg::Device(masks_dev),
+            Arg::Host(&obs_t),
+            Arg::Host(&h_t),
+            Arg::Host(&c_t),
+            Arg::Host(&g_t),
+        ])?;
+        let logits = outs[0].as_f32()?;
+        let gate_logits = outs[2].as_f32()?;
+        let h2 = outs[3].as_f32()?;
+        let c2 = outs[4].as_f32()?;
+
+        for e in 0..b {
+            if done[e] {
+                continue; // terminated: rows ride along but stay inert
+            }
+            let rng = &mut rngs[e];
+            actions.clear();
+            env_acts.clear();
+            gates.clear();
+            for i in 0..a {
+                let row = &logits
+                    [(e * a + i) * dims.n_actions..(e * a + i + 1) * dims.n_actions];
+                let sampled = rng.sample_logits(row);
+                actions.push(sampled);
+                env_acts.push(if sampled < env_actions { sampled } else { noop });
+                let gl =
+                    &gate_logits[(e * a + i) * dims.n_gate..(e * a + i + 1) * dims.n_gate];
+                gates.push(rng.sample_logits(gl) as u8 as f32);
+            }
+
+            let step = envs[e].step(&env_acts);
+            let obs_rows = e * a * dims.obs_dim..(e + 1) * a * dims.obs_dim;
+            episodes[e].push(&slab(&obs_t)[obs_rows.clone()], &actions, &gates, step.reward);
+            slab_mut(&mut obs_t)[obs_rows].copy_from_slice(&step.obs);
+            let hc_rows = e * a * dims.hidden..(e + 1) * a * dims.hidden;
+            slab_mut(&mut h_t)[hc_rows.clone()].copy_from_slice(&h2[hc_rows.clone()]);
+            slab_mut(&mut c_t)[hc_rows.clone()].copy_from_slice(&c2[hc_rows]);
+            slab_mut(&mut g_t)[e * a..(e + 1) * a].copy_from_slice(&gates);
+            if step.done {
+                done[e] = true;
+            }
+        }
+    }
+
+    let mut out = Vec::with_capacity(b);
+    for (mut ep, env) in episodes.into_iter().zip(envs.iter()) {
+        ep.success = env.is_success();
+        ep.success_frac = env.success_fraction();
+        ep.pad_to(t_max, noop);
+        out.push(ep);
+    }
+    Ok(out)
 }
 
 #[cfg(test)]

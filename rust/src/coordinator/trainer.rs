@@ -9,8 +9,11 @@
 //! implementing the trait with the artifacts' `obs_dim`) train
 //! through the identical four-stage loop.  With
 //! [`TrainConfig::rollouts`] > 1 the forward stage collects the
-//! minibatch on parallel worker threads (see
-//! [`crate::coordinator::rollout`]'s determinism contract).
+//! minibatch on parallel worker threads, and with
+//! [`TrainConfig::batch_exec`] it steps all B episodes in lockstep
+//! through one batched `policy_fwd_a{A}x{B}` kernel call per timestep
+//! (see [`crate::coordinator::rollout`]'s determinism contract — every
+//! driver returns bit-identical episodes).
 //!
 //! With [`TrainConfig::exec`] = [`ExecMode::Sparse`] (the default) the
 //! native runtime computes directly on the OSEL-compressed weights: the
@@ -108,6 +111,10 @@ pub struct Trainer {
     pub timer: StageTimer,
     runtime: Runtime,
     exe_fwd: Arc<Executable>,
+    /// Batched lockstep forward `policy_fwd_a{A}x{B}` — loaded when
+    /// [`TrainConfig::batch_exec`] is set and the minibatch has more
+    /// than one episode; `None` selects the per-episode drivers.
+    exe_fwd_batched: Option<Arc<Executable>>,
     exe_grad: Arc<Executable>,
     exe_update: Arc<Executable>,
     exe_flgw: Option<Arc<Executable>>,
@@ -161,6 +168,11 @@ impl Trainer {
             ));
         }
         let exe_fwd = runtime.load(&format!("policy_fwd_a{}", cfg.agents))?;
+        let exe_fwd_batched = if cfg.batch_exec && cfg.batch > 1 {
+            Some(runtime.load(&format!("policy_fwd_a{}x{}", cfg.agents, cfg.batch))?)
+        } else {
+            None
+        };
         let exe_grad = runtime.load(&format!("grad_episode_a{}", cfg.agents))?;
         let exe_update = runtime.load("apply_update")?;
 
@@ -192,6 +204,7 @@ impl Trainer {
             timer: StageTimer::new(),
             runtime,
             exe_fwd,
+            exe_fwd_batched,
             exe_grad,
             exe_update,
             exe_flgw,
@@ -215,7 +228,8 @@ impl Trainer {
     /// environment, pruner, agent count, minibatch size — always comes
     /// from the checkpoint header (so a resumed run cannot silently
     /// diverge from the run that wrote it); knobs that are parity-proven
-    /// not to affect numerics (`rollouts`, `exec`) and the *total*
+    /// not to affect numerics (`rollouts`, `exec`, `batch_exec`,
+    /// `intra_threads`) and the *total*
     /// iteration target come from `cfg`.  Training continues at the
     /// stored iteration: `train()` runs iterations
     /// `ckpt.iteration .. cfg.iterations`.
@@ -376,8 +390,10 @@ impl Trainer {
     /// structure the native kernels compute on: straight from FLGW's
     /// per-layer OSEL encodings when that pruner is running (and has
     /// encoded at least once), else from a scan of the dense masks.
-    /// The row→core partition uses the rollout worker count, matching
-    /// the threads that consume the shared structure.
+    /// The row→core partition is sized by [`TrainConfig::intra_threads`]
+    /// — the intra-op threads of the sparse kernels' row fan-out —
+    /// deliberately decoupled from the rollout worker count (neither
+    /// affects numerics; see `runtime::sparse`).
     fn refresh_device_state(&mut self) -> Result<()> {
         // policy_fwd input 0/1 shapes == grad_episode input 0/1 shapes
         if self.params_dev.is_none() {
@@ -390,7 +406,7 @@ impl Trainer {
                 ExecMode::DenseMasked => self.exe_fwd.upload(1, &masks_t)?,
                 ExecMode::Sparse => {
                     let manifest = self.runtime.manifest();
-                    let cores = self.cfg.rollouts.max(1);
+                    let cores = self.cfg.intra_threads.max(1);
                     let model = match self.pruner.as_flgw() {
                         Some(f) if f.encodings.len() == manifest.masked_layers.len() => {
                             SparseModel::from_encodings(manifest, &f.encodings, cores)?
@@ -499,18 +515,31 @@ impl Trainer {
             .collect();
         self.device_state()?;
         let t0 = std::time::Instant::now();
-        // One driver for both modes: `collect_parallel` degenerates to a
-        // sequential loop at 1 worker, and its determinism contract makes
-        // the worker count unobservable in the results.
-        let episodes = rollout::collect_parallel(
-            &self.exe_fwd,
-            self.params_dev.as_ref().expect("device state refreshed"),
-            self.masks_dev.as_ref().expect("device state refreshed"),
-            &dims,
-            &self.cfg.env,
-            &seeds,
-            self.cfg.rollouts,
-        )?;
+        // Three interchangeable drivers, one determinism contract: the
+        // batched lockstep engine steps the whole minibatch through one
+        // kernel call per timestep; `collect_parallel` fans episodes out
+        // over worker threads (degenerating to a sequential loop at 1
+        // worker).  All of them return bit-identical episode vectors, so
+        // the choice is pure throughput tuning.
+        let episodes = match &self.exe_fwd_batched {
+            Some(exe_b) => rollout::collect_lockstep(
+                exe_b,
+                self.params_dev.as_ref().expect("device state refreshed"),
+                self.masks_dev.as_ref().expect("device state refreshed"),
+                &dims,
+                &self.cfg.env,
+                &seeds,
+            )?,
+            None => rollout::collect_parallel(
+                &self.exe_fwd,
+                self.params_dev.as_ref().expect("device state refreshed"),
+                self.masks_dev.as_ref().expect("device state refreshed"),
+                &dims,
+                &self.cfg.env,
+                &seeds,
+                self.cfg.rollouts,
+            )?,
+        };
         self.timer.add(Stage::Forward, t0.elapsed());
         self.episodes_done += self.cfg.batch as u64;
 

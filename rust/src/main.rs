@@ -8,13 +8,16 @@
 //! learning-group train [--agents A] [--batch B] [--iterations N]
 //!                      [--env predator_prey|traffic_junction:<level>]
 //!                      [--rollouts R] [--exec sparse|dense]
+//!                      [--batch-exec] [--intra-threads T]
 //!                      [--pruner dense|flgw:G|iterative:P|bc:BxF|gst:BxF:P]
 //!                      [--seed S] [--csv PATH] [--metrics-out PATH]
 //!                      [--save-every N] [--checkpoint-dir DIR]
 //!                      [--resume CKPT]
 //! learning-group eval  --checkpoint CKPT [--episodes E] [--rollouts R]
+//!                      [--batch B] [--intra-threads T]
 //!                      [--exec sparse|dense] [--seed S] [--json PATH]
 //! learning-group serve --checkpoint CKPT [--seconds S] [--rollouts R]
+//!                      [--batch B] [--intra-threads T]
 //!                      [--exec sparse|dense] [--seed S] [--json PATH]
 //! learning-group roofline            # Fig 1
 //! learning-group accuracy [--iterations N] [--env E] [--rollouts R] [--fig9]
@@ -33,6 +36,12 @@
 //! native-runtime path: compute on the OSEL-compressed weights
 //! (default) or the dense ⊙-mask reference — bit-identical results,
 //! different throughput (see `cargo bench --bench hotpath`).
+//! `--batch-exec` steps the whole minibatch in lockstep through one
+//! batched `policy_fwd_a{A}x{B}` kernel call per timestep, and
+//! `--intra-threads T` fans the sparse kernels' rows out over T scoped
+//! threads — both bit-identical to the defaults, both pure throughput
+//! knobs (see `cargo bench --bench batched_exec` and
+//! docs/BENCHMARKS.md).
 //!
 //! Checkpointing: `--checkpoint-dir` (plus optional `--save-every N`)
 //! writes versioned, OSEL-compressed, CRC-protected checkpoints;
@@ -132,6 +141,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         rollouts: args.get("rollouts", 1)?,
         log_every: args.get("log-every", 10)?,
         exec,
+        batch_exec: args.has("batch-exec"),
+        intra_threads: args.get("intra-threads", 1)?,
         save_every,
         checkpoint_dir: checkpoint_dir.map(PathBuf::from),
         metrics_out: args.flags.get("metrics-out").map(PathBuf::from),
@@ -202,10 +213,13 @@ fn cmd_eval(args: &Args, sustained: bool) -> Result<()> {
     } else {
         ServeMode::Episodes(args.get("episodes", 32)?)
     };
+    let intra_threads: usize = args.get("intra-threads", 1)?;
+    let batch: usize = args.get("batch", 1)?;
     let mut rt = Runtime::from_default_artifacts()?;
-    let server = PolicyServer::from_checkpoint(&mut rt, &ckpt, exec, workers)?;
+    let server = PolicyServer::from_checkpoint(&mut rt, &ckpt, exec, intra_threads, batch)?;
     eprintln!(
-        "serving checkpoint {path}: env={} iteration={} exec={} workers={workers}",
+        "serving checkpoint {path}: env={} iteration={} exec={} workers={workers} \
+         batch={batch} intra-threads={intra_threads}",
         server.env_name(),
         ckpt.meta.iteration,
         exec.name()
@@ -277,11 +291,15 @@ fn main() -> Result<()> {
             println!("             --env predator_prey|traffic_junction:easy|medium|hard");
             println!("             --rollouts R (parallel episode workers)");
             println!("             --exec sparse|dense (compressed vs dense-masked kernels)");
+            println!("             --batch-exec (lockstep minibatch: one batched kernel call/step)");
+            println!("             --intra-threads T (sparse-kernel row fan-out threads)");
             println!("             --pruner dense|flgw:G|iterative:P|bc:BxF|gst:BxF:P");
             println!("             --save-every N --checkpoint-dir DIR (periodic checkpoints)");
             println!("             --resume CKPT (continue bit-identically from a checkpoint)");
             println!("             --metrics-out PATH (per-iteration JSONL metrics sink)");
             println!("eval flags:  --checkpoint CKPT --episodes E --rollouts R --exec sparse|dense");
+            println!("             --batch B (lockstep episodes per worker block)");
+            println!("             --intra-threads T (sparse-kernel row fan-out threads)");
             println!("             --seed S --json PATH (also write the report to a file)");
             println!("serve flags: like eval, but --seconds S (sustained-throughput mode)");
             println!("see README.md for the full CLI reference and paper-figure mapping");

@@ -141,6 +141,19 @@ fn io_spec(v: &Json) -> Result<IoSpec> {
 /// The layers whose weight matrices are FLGW-masked (`dims.MASKED_LAYERS`).
 const MASKED_LAYER_NAMES: [&str; 4] = ["w_enc", "w_comm", "w_x", "w_h"];
 
+/// Parse the `{A}` / `{A}x{B}` suffix of a `policy_fwd_a…` artifact name
+/// into `(agents, batch)` (batch = 1 for the single-episode form).  The
+/// single source of the batched-name grammar — shared by the native-op
+/// parser and [`Manifest::synthesize_artifact`], so the two can never
+/// disagree on which names exist.
+pub(crate) fn parse_policy_fwd_suffix(rest: &str) -> Option<(usize, usize)> {
+    let (a, b) = match rest.split_once('x') {
+        Some((a_s, b_s)) => (a_s.parse::<usize>().ok()?, b_s.parse::<usize>().ok()?),
+        None => (rest.parse::<usize>().ok()?, 1),
+    };
+    (a > 0 && b > 0).then_some((a, b))
+}
+
 fn f32_spec(name: &str, shape: Vec<usize>) -> IoSpec {
     IoSpec { name: name.to_string(), shape, dtype: "f32".to_string() }
 }
@@ -401,25 +414,31 @@ impl Manifest {
                 file,
             });
         }
-        if let Some(a) = name.strip_prefix("policy_fwd_a").and_then(|s| s.parse::<usize>().ok()) {
-            return Ok(ArtifactSpec {
-                inputs: vec![
-                    f32_spec("params", vec![p]),
-                    f32_spec("masks", vec![mk]),
-                    f32_spec("obs", vec![a, d.obs_dim]),
-                    f32_spec("h", vec![a, d.hidden]),
-                    f32_spec("c", vec![a, d.hidden]),
-                    f32_spec("gate_prev", vec![a]),
-                ],
-                outputs: vec![
-                    f32_spec("logits", vec![a, d.n_actions]),
-                    f32_spec("value", vec![a]),
-                    f32_spec("gate_logits", vec![a, d.n_gate]),
-                    f32_spec("h2", vec![a, d.hidden]),
-                    f32_spec("c2", vec![a, d.hidden]),
-                ],
-                file,
-            });
+        if let Some(rest) = name.strip_prefix("policy_fwd_a") {
+            // `policy_fwd_a{A}` (one episode) or the batched lockstep
+            // variant `policy_fwd_a{A}x{B}` (B episodes per call): the
+            // activation block is `[B*A, ·]`, params/masks unchanged.
+            if let Some((a, b)) = parse_policy_fwd_suffix(rest) {
+                let rows = b * a;
+                return Ok(ArtifactSpec {
+                    inputs: vec![
+                        f32_spec("params", vec![p]),
+                        f32_spec("masks", vec![mk]),
+                        f32_spec("obs", vec![rows, d.obs_dim]),
+                        f32_spec("h", vec![rows, d.hidden]),
+                        f32_spec("c", vec![rows, d.hidden]),
+                        f32_spec("gate_prev", vec![rows]),
+                    ],
+                    outputs: vec![
+                        f32_spec("logits", vec![rows, d.n_actions]),
+                        f32_spec("value", vec![rows]),
+                        f32_spec("gate_logits", vec![rows, d.n_gate]),
+                        f32_spec("h2", vec![rows, d.hidden]),
+                        f32_spec("c2", vec![rows, d.hidden]),
+                    ],
+                    file,
+                });
+            }
         }
         if let Some(a) = name.strip_prefix("grad_episode_a").and_then(|s| s.parse::<usize>().ok())
         {
@@ -635,6 +654,27 @@ mod tests {
         let spec = m.synthesize_artifact("flgw_update_g3").unwrap();
         assert_eq!(spec.inputs[0].elements(), m.grouping_size(3).unwrap());
         assert!(m.synthesize_artifact("nope").is_err());
+    }
+
+    #[test]
+    fn batched_policy_fwd_spec_scales_activations_only() {
+        let m = Manifest::builtin();
+        let single = m.synthesize_artifact("policy_fwd_a3").unwrap();
+        let batched = m.synthesize_artifact("policy_fwd_a3x8").unwrap();
+        // params/masks unchanged, activation rows scaled by B
+        assert_eq!(batched.inputs[0].elements(), single.inputs[0].elements());
+        assert_eq!(batched.inputs[1].elements(), single.inputs[1].elements());
+        for io in 2..6 {
+            assert_eq!(batched.inputs[io].elements(), 8 * single.inputs[io].elements());
+        }
+        for io in 0..5 {
+            assert_eq!(batched.outputs[io].elements(), 8 * single.outputs[io].elements());
+        }
+        // B = 1 batched spec is the single-episode spec
+        let b1 = m.synthesize_artifact("policy_fwd_a3x1").unwrap();
+        assert_eq!(b1.inputs[2].elements(), single.inputs[2].elements());
+        assert!(m.synthesize_artifact("policy_fwd_a3x").is_err());
+        assert!(m.synthesize_artifact("policy_fwd_a0x4").is_err());
     }
 
     #[test]

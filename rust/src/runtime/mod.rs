@@ -22,6 +22,16 @@
 //! attached to the masks upload ([`Executable::upload_sparse`]), and the
 //! masked matmuls then touch only surviving weights — bit-identical to
 //! the dense ⊙-mask reference (`ExecMode::DenseMasked`, `--exec dense`).
+//!
+//! **Batched lockstep entry points.**  `policy_fwd_a{A}x{B}` steps B
+//! independent episodes of A agents in one call on a `[B·A, ·]`
+//! activation block; the manifest synthesizes its I/O spec on demand
+//! (params/masks unchanged, activation rows scaled by B) and
+//! [`Executable`] validates every batched call against it, exactly like
+//! the single-episode ops.  Because params/masks have identical specs
+//! in both variants, device tensors uploaded through `policy_fwd_a{A}`
+//! are valid inputs to `policy_fwd_a{A}x{B}` — the trainer and the
+//! serving engine share one upload across both.
 
 mod device;
 mod executable;
@@ -166,5 +176,32 @@ mod tests {
     fn unknown_artifact_name_errors() {
         let mut rt = Runtime::new(Manifest::builtin()).unwrap();
         assert!(rt.load("not_an_artifact").is_err());
+    }
+
+    /// A batched lockstep executable loads (spec synthesized on demand),
+    /// validates its scaled activation shapes, and rejects
+    /// single-episode-sized inputs.
+    #[test]
+    fn batched_policy_fwd_loads_and_validates() {
+        let mut rt = Runtime::new(Manifest::builtin()).unwrap();
+        let m = rt.manifest().clone();
+        let (a, b) = (3usize, 4usize);
+        let exe = rt.load("policy_fwd_a3x4").unwrap();
+        assert_eq!(exe.backend_name(), "native");
+        let good = vec![
+            HostTensor::F32(vec![0.01; m.param_size]),
+            HostTensor::F32(vec![1.0; m.mask_size]),
+            HostTensor::F32(vec![0.2; b * a * m.dims.obs_dim]),
+            HostTensor::F32(vec![0.0; b * a * m.dims.hidden]),
+            HostTensor::F32(vec![0.0; b * a * m.dims.hidden]),
+            HostTensor::F32(vec![1.0; b * a]),
+        ];
+        let outs = exe.run(&good).unwrap();
+        assert_eq!(outs[0].as_f32().unwrap().len(), b * a * m.dims.n_actions);
+        assert_eq!(outs[3].as_f32().unwrap().len(), b * a * m.dims.hidden);
+        // single-episode-sized activations must fail batched validation
+        let mut bad = good;
+        bad[2] = HostTensor::F32(vec![0.2; a * m.dims.obs_dim]);
+        assert!(exe.run(&bad).is_err());
     }
 }

@@ -11,6 +11,13 @@
 //! Ops (named exactly like the artifacts):
 //! * `policy_fwd_a{A}` — one IC3Net step for A agents (encoder → gated
 //!   comm mean → masked LSTM → action/value/gate heads).
+//! * `policy_fwd_a{A}x{B}` — the **batched lockstep** variant: one step
+//!   for B independent episodes of A agents each, packed as a single
+//!   `[B·A, ·]` activation block.  Every kernel is row-independent, so
+//!   each episode's rows compute exactly what a separate
+//!   `policy_fwd_a{A}` call would have computed — the communication
+//!   mean is grouped per consecutive A-row episode block, never across
+//!   episodes.  Bit-identical to B separate calls by construction.
 //! * `grad_episode_a{A}` — REINFORCE-with-baseline gradients over one
 //!   stored episode via hand-rolled backpropagation through time,
 //!   returning both d/dparams and the d/dmask cotangent FLGW trains on.
@@ -30,6 +37,19 @@
 //! to the dense ⊙-mask reference, because the skipped terms are exact
 //! `±0.0` additions and the surviving terms accumulate in the same
 //! order (see `runtime::sparse` and `rust/tests/sparse_parity.rs`).
+//!
+//! **Intra-op parallelism.**  The sparse kernels additionally fan their
+//! activation rows out over scoped worker threads — one worker per core
+//! of the layer's row→core partition (sized by `--intra-threads`, see
+//! [`crate::runtime::sparse`]).  Each worker owns a contiguous chunk of
+//! *output* rows and walks the whole weight partition for them in the
+//! sequential order, so no two workers ever write the same output
+//! element and the per-element accumulation order is untouched: any
+//! thread count produces bit-identical results.  This is the software
+//! realization of the paper's multi-core VPU dataflow, where "each core
+//! handles multiple sparse rows of the weight matrix simultaneously
+//! with vector processing units" — profitable exactly when the batched
+//! lockstep path widens the row dimension to B·A.
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 use anyhow::{anyhow, Result};
@@ -41,8 +61,9 @@ use crate::runtime::HostTensor;
 /// One native op, parsed from an artifact name.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub(crate) enum NativeOp {
-    /// `policy_fwd_a{A}`.
-    PolicyFwd { agents: usize },
+    /// `policy_fwd_a{A}` (`batch` = 1) or the batched lockstep variant
+    /// `policy_fwd_a{A}x{B}` (`batch` = B episodes per call).
+    PolicyFwd { agents: usize, batch: usize },
     /// `grad_episode_a{A}`.
     GradEpisode { agents: usize },
     /// `apply_update`.
@@ -59,8 +80,12 @@ impl NativeOp {
         if name == "apply_update" {
             return Ok(NativeOp::ApplyUpdate);
         }
-        if let Some(a) = name.strip_prefix("policy_fwd_a").and_then(|s| s.parse().ok()) {
-            return Ok(NativeOp::PolicyFwd { agents: a });
+        if let Some(rest) = name.strip_prefix("policy_fwd_a") {
+            // `policy_fwd_a{A}` or the batched `policy_fwd_a{A}x{B}` —
+            // one grammar, shared with `Manifest::synthesize_artifact`.
+            if let Some((agents, batch)) = crate::manifest::parse_policy_fwd_suffix(rest) {
+                return Ok(NativeOp::PolicyFwd { agents, batch });
+            }
         }
         if let Some(a) = name.strip_prefix("grad_episode_a").and_then(|s| s.parse().ok()) {
             return Ok(NativeOp::GradEpisode { agents: a });
@@ -85,9 +110,10 @@ pub(crate) fn execute(
     sparse: Option<&SparseModel>,
 ) -> Result<Vec<HostTensor>> {
     match *op {
-        NativeOp::PolicyFwd { agents } => policy_fwd(
+        NativeOp::PolicyFwd { agents, batch } => policy_fwd(
             m,
             agents,
+            batch,
             inputs[0].as_f32()?,
             inputs[1].as_f32()?,
             inputs[2].as_f32()?,
@@ -317,28 +343,40 @@ fn dy_wt_masked_into(
     }
 }
 
-/// y (rows x cols) += x (rows x k) @ (w ⊙ mask), with the surviving
-/// positions taken from the compressed layer structure instead of the
-/// dense mask.  Bit-identical to [`matmul_masked_into`] up to the sign
-/// of exact zeros: every skipped term multiplies a 0.0 mask entry.
-/// Rows are walked core by core through the load allocation (row-based
-/// partition — contiguous chunks in ascending order, so the
-/// accumulation order matches the dense kernel exactly).
-fn matmul_sparse_into(
+/// Minimum output rows each worker must receive before the sparse
+/// kernels fan out over scoped threads: below this the spawn cost
+/// outweighs the kernel.  Purely a scheduling knob — the fan-out is
+/// bit-identical at any threshold (each row's arithmetic is untouched).
+const PAR_MIN_ROWS_PER_WORKER: usize = 4;
+
+/// How many scoped workers a sparse kernel uses for `rows` output rows:
+/// one per core of the layer's row→core partition (the `--intra-threads`
+/// count the [`SparseModel`] was built with), capped so every worker
+/// gets at least [`PAR_MIN_ROWS_PER_WORKER`] rows.
+fn sparse_workers(sl: &SparseLayer, rows: usize) -> usize {
+    sl.alloc
+        .per_core
+        .len()
+        .min(rows / PAR_MIN_ROWS_PER_WORKER)
+        .max(1)
+}
+
+/// The sequential body of [`matmul_sparse_into`] over output rows
+/// `row0 .. row0 + y.len() / cols` (`y` is that chunk of the output).
+fn matmul_sparse_rows(
     y: &mut [f32],
     x: &[f32],
     w: &[f32],
     sl: &SparseLayer,
-    rows: usize,
+    row0: usize,
     k: usize,
     cols: usize,
 ) {
-    debug_assert_eq!((sl.rows, sl.cols), (k, cols));
-    for i in 0..rows {
-        let yrow = &mut y[i * cols..(i + 1) * cols];
+    for (i, yrow) in y.chunks_exact_mut(cols).enumerate() {
+        let xrow = &x[(row0 + i) * k..(row0 + i + 1) * k];
         for core in &sl.alloc.per_core {
             for &kk in &core.rows {
-                let xv = x[i * k + kk];
+                let xv = xrow[kk];
                 if xv == 0.0 {
                     continue;
                 }
@@ -351,9 +389,74 @@ fn matmul_sparse_into(
     }
 }
 
+/// y (rows x cols) += x (rows x k) @ (w ⊙ mask), with the surviving
+/// positions taken from the compressed layer structure instead of the
+/// dense mask.  Bit-identical to [`matmul_masked_into`] up to the sign
+/// of exact zeros: every skipped term multiplies a 0.0 mask entry.
+/// Weight rows are walked core by core through the load allocation
+/// (row-based partition — contiguous chunks in ascending order, so the
+/// accumulation order matches the dense kernel exactly).
+///
+/// When the partition has more than one core and there are enough
+/// output rows (the batched lockstep path), the output rows are split
+/// into one contiguous chunk per core and executed on scoped worker
+/// threads.  Workers write disjoint output chunks and each runs the
+/// identical sequential walk for its rows, so the thread count is
+/// unobservable in the results.
+fn matmul_sparse_into(
+    y: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    sl: &SparseLayer,
+    rows: usize,
+    k: usize,
+    cols: usize,
+) {
+    debug_assert_eq!((sl.rows, sl.cols), (k, cols));
+    debug_assert_eq!(y.len(), rows * cols);
+    let workers = sparse_workers(sl, rows);
+    if workers <= 1 {
+        matmul_sparse_rows(y, x, w, sl, 0, k, cols);
+        return;
+    }
+    let rows_per = rows.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for (t, chunk) in y.chunks_mut(rows_per * cols).enumerate() {
+            scope.spawn(move || matmul_sparse_rows(chunk, x, w, sl, t * rows_per, k, cols));
+        }
+    });
+}
+
+/// The sequential body of [`dy_wt_sparse_into`] over output rows
+/// `row0 .. row0 + dx.len() / k` (`dx` is that chunk of the output).
+fn dy_wt_sparse_rows(
+    dx: &mut [f32],
+    dy: &[f32],
+    w: &[f32],
+    sl: &SparseLayer,
+    row0: usize,
+    k: usize,
+    cols: usize,
+) {
+    for (i, dxrow) in dx.chunks_exact_mut(k).enumerate() {
+        let dyrow = &dy[(row0 + i) * cols..(row0 + i + 1) * cols];
+        for core in &sl.alloc.per_core {
+            for &kk in &core.rows {
+                let wrow = &w[kk * cols..(kk + 1) * cols];
+                let mut acc = 0.0f32;
+                for &j in sl.row(kk) {
+                    acc += dyrow[j as usize] * wrow[j as usize];
+                }
+                dxrow[kk] += acc;
+            }
+        }
+    }
+}
+
 /// dx (rows x k) += dy (rows x cols) @ (w ⊙ mask)^T through the
 /// compressed structure — the BPTT transposed product.  Same parity
-/// contract as [`matmul_sparse_into`].
+/// contract and same scoped-thread row fan-out as
+/// [`matmul_sparse_into`].
 fn dy_wt_sparse_into(
     dx: &mut [f32],
     dy: &[f32],
@@ -364,19 +467,18 @@ fn dy_wt_sparse_into(
     cols: usize,
 ) {
     debug_assert_eq!((sl.rows, sl.cols), (k, cols));
-    for i in 0..rows {
-        let dyrow = &dy[i * cols..(i + 1) * cols];
-        for core in &sl.alloc.per_core {
-            for &kk in &core.rows {
-                let wrow = &w[kk * cols..(kk + 1) * cols];
-                let mut acc = 0.0f32;
-                for &j in sl.row(kk) {
-                    acc += dyrow[j as usize] * wrow[j as usize];
-                }
-                dx[i * k + kk] += acc;
-            }
-        }
+    debug_assert_eq!(dx.len(), rows * k);
+    let workers = sparse_workers(sl, rows);
+    if workers <= 1 {
+        dy_wt_sparse_rows(dx, dy, w, sl, 0, k, cols);
+        return;
     }
+    let rows_per = rows.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for (t, chunk) in dx.chunks_mut(rows_per * k).enumerate() {
+            scope.spawn(move || dy_wt_sparse_rows(chunk, dy, w, sl, t * rows_per, k, cols));
+        }
+    });
 }
 
 /// Masked-matmul dispatch: the compressed path when a sparse structure
@@ -482,30 +584,45 @@ struct StepActs {
 }
 
 /// IC3Net's communication input: the mean of the *other* agents' gated
-/// hidden states.
-fn comm_input(h: &[f32], gate_prev: &[f32], a: usize, hd: usize) -> Vec<f32> {
-    let mut total = vec![0.0f32; hd];
-    let mut gated = vec![0.0f32; a * hd];
-    for i in 0..a {
-        for j in 0..hd {
-            let v = gate_prev[i] * h[i * hd + j];
-            gated[i * hd + j] = v;
-            total[j] += v;
-        }
-    }
+/// hidden states, grouped per episode.  `h` / `gate_prev` pack `batch`
+/// independent episodes of `a` agents each as consecutive row blocks;
+/// the exclude-self mean never crosses an episode boundary, so each
+/// block computes exactly what a separate single-episode call would.
+fn comm_input(h: &[f32], gate_prev: &[f32], batch: usize, a: usize, hd: usize) -> Vec<f32> {
     let denom = (a.max(2) - 1) as f32; // max(A - 1, 1)
-    let mut out = vec![0.0f32; a * hd];
-    for i in 0..a {
-        for j in 0..hd {
-            out[i * hd + j] = (total[j] - gated[i * hd + j]) / denom;
+    let mut out = vec![0.0f32; batch * a * hd];
+    let mut gated = vec![0.0f32; a * hd];
+    let mut total = vec![0.0f32; hd];
+    for e in 0..batch {
+        let h = &h[e * a * hd..(e + 1) * a * hd];
+        let gp = &gate_prev[e * a..(e + 1) * a];
+        let out = &mut out[e * a * hd..(e + 1) * a * hd];
+        total.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..a {
+            for j in 0..hd {
+                let v = gp[i] * h[i * hd + j];
+                gated[i * hd + j] = v;
+                total[j] += v;
+            }
+        }
+        for i in 0..a {
+            for j in 0..hd {
+                out[i * hd + j] = (total[j] - gated[i * hd + j]) / denom;
+            }
         }
     }
     out
 }
 
-/// One full IC3Net step for A agents.
+/// One full IC3Net step for `batch` lockstep episodes of `a` agents
+/// each (`batch` = 1 is the plain single-episode step).  All inputs and
+/// outputs pack the episodes as consecutive `a`-row blocks; every
+/// kernel below is row-independent, and the only agent-coupling op —
+/// the communication mean — is grouped per block, so the batched step
+/// is bit-identical to `batch` separate calls.
 fn step_forward(
     net: &Net<'_>,
+    batch: usize,
     a: usize,
     obs: &[f32],
     h: &[f32],
@@ -514,34 +631,35 @@ fn step_forward(
 ) -> StepActs {
     let hd = net.hidden;
     let (nact, ngate) = (net.n_actions, net.n_gate);
+    let rows = batch * a;
 
-    let mut e = vec![0.0f32; a * hd];
-    mm_masked(&mut e, obs, net.w_enc, net.m_enc, net.s_enc, a, net.obs_dim, hd);
+    let mut e = vec![0.0f32; rows * hd];
+    mm_masked(&mut e, obs, net.w_enc, net.m_enc, net.s_enc, rows, net.obs_dim, hd);
     for v in e.iter_mut() {
         *v = v.tanh();
     }
 
-    let comm_in = comm_input(h, gate_prev, a, hd);
+    let comm_in = comm_input(h, gate_prev, batch, a, hd);
     let mut x = e.clone();
-    mm_masked(&mut x, &comm_in, net.w_comm, net.m_comm, net.s_comm, a, hd, hd);
+    mm_masked(&mut x, &comm_in, net.w_comm, net.m_comm, net.s_comm, rows, hd, hd);
 
-    let mut gates = vec![0.0f32; a * 4 * hd];
-    mm_masked(&mut gates, &x, net.w_x, net.m_x, net.s_x, a, hd, 4 * hd);
-    mm_masked(&mut gates, h, net.w_h, net.m_h, net.s_h, a, hd, 4 * hd);
-    for i in 0..a {
+    let mut gates = vec![0.0f32; rows * 4 * hd];
+    mm_masked(&mut gates, &x, net.w_x, net.m_x, net.s_x, rows, hd, 4 * hd);
+    mm_masked(&mut gates, h, net.w_h, net.m_h, net.s_h, rows, hd, 4 * hd);
+    for i in 0..rows {
         for j in 0..4 * hd {
             gates[i * 4 * hd + j] += net.b_lstm[j];
         }
     }
 
-    let mut gi = vec![0.0f32; a * hd];
-    let mut gf = vec![0.0f32; a * hd];
-    let mut gg = vec![0.0f32; a * hd];
-    let mut go = vec![0.0f32; a * hd];
-    let mut c2 = vec![0.0f32; a * hd];
-    let mut tanh_c2 = vec![0.0f32; a * hd];
-    let mut h2 = vec![0.0f32; a * hd];
-    for i in 0..a {
+    let mut gi = vec![0.0f32; rows * hd];
+    let mut gf = vec![0.0f32; rows * hd];
+    let mut gg = vec![0.0f32; rows * hd];
+    let mut go = vec![0.0f32; rows * hd];
+    let mut c2 = vec![0.0f32; rows * hd];
+    let mut tanh_c2 = vec![0.0f32; rows * hd];
+    let mut h2 = vec![0.0f32; rows * hd];
+    for i in 0..rows {
         let base = i * 4 * hd;
         for j in 0..hd {
             let idx = i * hd + j;
@@ -562,24 +680,24 @@ fn step_forward(
         }
     }
 
-    let mut logits = vec![0.0f32; a * nact];
-    matmul_into(&mut logits, &h2, net.w_pi, a, hd, nact);
-    for i in 0..a {
+    let mut logits = vec![0.0f32; rows * nact];
+    matmul_into(&mut logits, &h2, net.w_pi, rows, hd, nact);
+    for i in 0..rows {
         for j in 0..nact {
             logits[i * nact + j] += net.b_pi[j];
         }
     }
-    let mut value = vec![0.0f32; a];
-    for i in 0..a {
+    let mut value = vec![0.0f32; rows];
+    for i in 0..rows {
         let mut acc = net.b_v[0];
         for k in 0..hd {
             acc += h2[i * hd + k] * net.w_v[k];
         }
         value[i] = acc;
     }
-    let mut glogits = vec![0.0f32; a * ngate];
-    matmul_into(&mut glogits, &h2, net.w_g, a, hd, ngate);
-    for i in 0..a {
+    let mut glogits = vec![0.0f32; rows * ngate];
+    matmul_into(&mut glogits, &h2, net.w_g, rows, hd, ngate);
+    for i in 0..rows {
         for j in 0..ngate {
             glogits[i * ngate + j] += net.b_g[j];
         }
@@ -591,6 +709,7 @@ fn step_forward(
 fn policy_fwd(
     m: &Manifest,
     a: usize,
+    batch: usize,
     params: &[f32],
     masks: &[f32],
     obs: &[f32],
@@ -600,7 +719,7 @@ fn policy_fwd(
     sparse: Option<&SparseModel>,
 ) -> Result<Vec<HostTensor>> {
     let net = Net::new(m, params, masks, sparse)?;
-    let acts = step_forward(&net, a, obs, h, c, gate_prev);
+    let acts = step_forward(&net, batch, a, obs, h, c, gate_prev);
     Ok(vec![
         HostTensor::F32(acts.logits),
         HostTensor::F32(acts.value),
@@ -665,7 +784,7 @@ fn grad_episode(
         h_ins.push(h.clone());
         c_ins.push(c.clone());
         gate_prevs.push(gate_prev.clone());
-        let sa = step_forward(&net, a, obs, &h, &c, &gate_prev);
+        let sa = step_forward(&net, 1, a, obs, &h, &c, &gate_prev);
         h.copy_from_slice(&sa.h2);
         c.copy_from_slice(&sa.c2);
         gate_prev.copy_from_slice(&gate_seq[t * a..(t + 1) * a]);
@@ -980,7 +1099,11 @@ mod tests {
         assert_eq!(NativeOp::parse("apply_update").unwrap(), NativeOp::ApplyUpdate);
         assert_eq!(
             NativeOp::parse("policy_fwd_a3").unwrap(),
-            NativeOp::PolicyFwd { agents: 3 }
+            NativeOp::PolicyFwd { agents: 3, batch: 1 }
+        );
+        assert_eq!(
+            NativeOp::parse("policy_fwd_a3x16").unwrap(),
+            NativeOp::PolicyFwd { agents: 3, batch: 16 }
         );
         assert_eq!(
             NativeOp::parse("grad_episode_a10").unwrap(),
@@ -992,6 +1115,9 @@ mod tests {
         );
         assert_eq!(NativeOp::parse("mask_gen_g8").unwrap(), NativeOp::MaskGen { groups: 8 });
         assert!(NativeOp::parse("policy_fwd_aX").is_err());
+        assert!(NativeOp::parse("policy_fwd_a3x").is_err());
+        assert!(NativeOp::parse("policy_fwd_ax4").is_err());
+        assert!(NativeOp::parse("policy_fwd_a3x0").is_err());
         assert!(NativeOp::parse("nope").is_err());
     }
 
@@ -1010,15 +1136,27 @@ mod tests {
         // 3 agents, H = 2, all gates open: each sees the mean of the others
         let h = [1.0, 0.0, 2.0, 0.0, 4.0, 0.0];
         let gates = [1.0, 1.0, 1.0];
-        let c = comm_input(&h, &gates, 3, 2);
+        let c = comm_input(&h, &gates, 1, 3, 2);
         assert!((c[0] - 3.0).abs() < 1e-6); // (2 + 4) / 2
         assert!((c[2] - 2.5).abs() < 1e-6); // (1 + 4) / 2
         assert!((c[4] - 1.5).abs() < 1e-6); // (1 + 2) / 2
         // closed gate removes an agent from everyone else's mean
         let gates = [0.0, 1.0, 1.0];
-        let c = comm_input(&h, &gates, 3, 2);
+        let c = comm_input(&h, &gates, 1, 3, 2);
         assert!((c[0] - 3.0).abs() < 1e-6); // unchanged: own gate irrelevant
         assert!((c[2] - 2.0).abs() < 1e-6); // (0 + 4) / 2
+    }
+
+    #[test]
+    fn comm_input_never_crosses_episode_blocks() {
+        // two packed episodes must see exactly the per-episode results
+        let h = [1.0, 0.0, 2.0, 0.0, 5.0, 1.0, 7.0, 3.0];
+        let gates = [1.0, 1.0, 1.0, 0.5];
+        let batched = comm_input(&h, &gates, 2, 2, 2);
+        let ep0 = comm_input(&h[..4], &gates[..2], 1, 2, 2);
+        let ep1 = comm_input(&h[4..], &gates[2..], 1, 2, 2);
+        assert_eq!(&batched[..4], ep0.as_slice());
+        assert_eq!(&batched[4..], ep1.as_slice());
     }
 
     #[test]
@@ -1134,6 +1272,95 @@ mod tests {
             dy_wt_sparse_into(&mut dx_sparse, &dy, &w, &sl, rows, k, cols);
             assert_eq!(dx_dense, dx_sparse, "transposed, cores={cores}");
         }
+    }
+
+    /// The batched lockstep forward must equal B separate
+    /// single-episode forwards bit-for-bit — dense-masked and sparse,
+    /// at any intra-op thread count (1 vs 4 cores exercises both the
+    /// sequential and the scoped-thread row fan-out).
+    #[test]
+    fn batched_policy_fwd_matches_per_episode_calls() {
+        let man = Manifest::builtin();
+        let d = man.dims.clone();
+        let (a, b) = (3usize, 4usize);
+        let mut rng = crate::util::Pcg32::seeded(41);
+        let params: Vec<f32> =
+            (0..man.param_size).map(|_| rng.next_normal() * 0.05).collect();
+        let mask: Vec<f32> =
+            (0..man.mask_size).map(|_| f32::from(rng.next_f32() < 0.4)).collect();
+        let obs: Vec<f32> = (0..b * a * d.obs_dim).map(|_| rng.next_f32()).collect();
+        let h: Vec<f32> = (0..b * a * d.hidden).map(|_| rng.next_normal() * 0.1).collect();
+        let c: Vec<f32> = (0..b * a * d.hidden).map(|_| rng.next_normal() * 0.1).collect();
+        let gate: Vec<f32> = (0..b * a).map(|_| f32::from(rng.next_f32() < 0.7)).collect();
+
+        let reference =
+            policy_fwd(&man, a, b, &params, &mask, &obs, &h, &c, &gate, None).unwrap();
+
+        // sparse path, 1 vs 4 intra-op cores: both must equal the dense
+        // batched reference exactly
+        for cores in [1usize, 4] {
+            let sm = SparseModel::from_dense_masks(&man, &mask, cores).unwrap();
+            let sparse_out =
+                policy_fwd(&man, a, b, &params, &mask, &obs, &h, &c, &gate, Some(&sm))
+                    .unwrap();
+            for (r, s) in reference.iter().zip(&sparse_out) {
+                assert_eq!(r, s, "sparse batched forward, cores={cores}");
+            }
+        }
+
+        // every episode block must equal its own single-episode call
+        let widths = [d.n_actions, 1usize, d.n_gate, d.hidden, d.hidden];
+        for e in 0..b {
+            let single = policy_fwd(
+                &man,
+                a,
+                1,
+                &params,
+                &mask,
+                &obs[e * a * d.obs_dim..(e + 1) * a * d.obs_dim],
+                &h[e * a * d.hidden..(e + 1) * a * d.hidden],
+                &c[e * a * d.hidden..(e + 1) * a * d.hidden],
+                &gate[e * a..(e + 1) * a],
+                None,
+            )
+            .unwrap();
+            for (o, &width) in widths.iter().enumerate() {
+                let batched_rows = reference[o].as_f32().unwrap();
+                let single_rows = single[o].as_f32().unwrap();
+                assert_eq!(
+                    &batched_rows[e * a * width..(e + 1) * a * width],
+                    single_rows,
+                    "episode {e} output {o}"
+                );
+            }
+        }
+    }
+
+    /// The scoped-thread fan-out of the sparse kernels must be
+    /// unobservable: many rows, 1 vs 5 cores, identical outputs.
+    #[test]
+    fn parallel_sparse_kernels_match_sequential() {
+        use crate::manifest::MaskedLayer;
+        let (rows, k, cols) = (23usize, 16usize, 10usize);
+        let mut rng = crate::util::Pcg32::seeded(57);
+        let x: Vec<f32> = (0..rows * k).map(|_| rng.next_normal()).collect();
+        let w: Vec<f32> = (0..k * cols).map(|_| rng.next_normal()).collect();
+        let dy: Vec<f32> = (0..rows * cols).map(|_| rng.next_normal()).collect();
+        let mask: Vec<f32> = (0..k * cols).map(|_| f32::from(rng.next_f32() < 0.4)).collect();
+        let layer = MaskedLayer { name: "w_t".to_string(), rows: k, cols, offset: 0 };
+        let sl1 = SparseLayer::from_dense_mask(&layer, &mask, 1).unwrap();
+        let sl5 = SparseLayer::from_dense_mask(&layer, &mask, 5).unwrap();
+        assert!(sparse_workers(&sl5, rows) > 1, "fan-out must engage at {rows} rows");
+        let mut y1 = vec![0.0f32; rows * cols];
+        matmul_sparse_into(&mut y1, &x, &w, &sl1, rows, k, cols);
+        let mut y5 = vec![0.0f32; rows * cols];
+        matmul_sparse_into(&mut y5, &x, &w, &sl5, rows, k, cols);
+        assert_eq!(y1, y5);
+        let mut dx1 = vec![0.0f32; rows * k];
+        dy_wt_sparse_into(&mut dx1, &dy, &w, &sl1, rows, k, cols);
+        let mut dx5 = vec![0.0f32; rows * k];
+        dy_wt_sparse_into(&mut dx5, &dy, &w, &sl5, rows, k, cols);
+        assert_eq!(dx1, dx5);
     }
 
     #[test]

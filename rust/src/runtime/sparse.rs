@@ -23,9 +23,19 @@
 //!
 //! **Sharing.**  A [`SparseModel`] is built once per mask regeneration
 //! (stage 1) and shared immutably (`Arc`) by all parallel rollout
-//! worker threads; the core count of the row partition is therefore the
-//! rollout worker count.  The partition is contiguous and walked in
-//! row order, so the worker count never changes the numerics.
+//! worker threads.
+//!
+//! **Core count = intra-op thread count.**  The core count of the
+//! row→core partition is the *intra-op* worker count
+//! (`--intra-threads`), deliberately decoupled from the rollout worker
+//! count (`--rollouts`): rollout workers parallelize *across* episodes,
+//! while the partition's cores parallelize *inside* one kernel call —
+//! the native sparse kernels fan their output rows out over one scoped
+//! thread per core when the batched lockstep path makes the row
+//! dimension wide enough (see `runtime::native`).  The partition is
+//! contiguous and walked in row order within each output row, so
+//! neither the core count nor the rollout worker count ever changes
+//! the numerics.
 
 use anyhow::{anyhow, Result};
 

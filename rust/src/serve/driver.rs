@@ -1,22 +1,26 @@
-//! Slab episode driver — the per-worker inner loop of the serving
+//! Slab episode drivers — the per-worker inner loops of the serving
 //! engine.
 //!
-//! IC3Net couples the agents of one episode through the communication
-//! mean inside `policy_fwd`, so episodes cannot be packed into a single
-//! wider forward call without changing the numerics (agents of
-//! different episodes would communicate).  What *can* be batched away
-//! is the per-step host traffic: the training rollout path clones four
-//! fresh input tensors per step, while this driver packs observations,
-//! recurrent state and gates into reusable buffers owned by the worker
-//! — zero per-step input allocation, one `policy_fwd` execution per
-//! live episode step.
+//! Two drivers share the packed-buffer ("slab") discipline — inputs
+//! live in reusable worker-owned buffers, zero per-step allocation:
+//!
+//! * [`EpisodeDriver`] drives one episode at a time through
+//!   `policy_fwd_a{A}`.
+//! * [`LockstepDriver`] drives a whole block of episodes **in
+//!   lockstep** through the batched `policy_fwd_a{A}x{B}` entry point:
+//!   one kernel execution per timestep for the entire block.  The
+//!   batched kernel groups the communication mean per consecutive
+//!   A-row episode block (agents of different episodes never
+//!   communicate), and every other op is row-independent, so each
+//!   packed episode is bit-identical to a separate [`EpisodeDriver`]
+//!   run — asserted by this module's tests.
 //!
 //! Sampling uses the same per-episode PCG32 stream as the training
 //! rollout driver ([`crate::coordinator::rollout`]), so an episode
 //! served at seed S is bit-for-bit the episode a training rollout at
 //! seed S would have produced — asserted by this module's tests.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::coordinator::rollout::SAMPLE_STREAM;
 use crate::env::MultiAgentEnv;
@@ -63,6 +67,15 @@ fn fill(t: &mut HostTensor, src: &[f32]) {
     }
 }
 
+/// Overwrite one row range of a packed f32 buffer in place — how the
+/// lockstep driver refreshes a single episode's rows of the slab.
+fn fill_range(t: &mut HostTensor, offset: usize, src: &[f32]) {
+    if let HostTensor::F32(v) = t {
+        v[offset..offset + src.len()].copy_from_slice(src);
+    }
+}
+
+/// Set every element of a packed f32 buffer to `value`.
 fn set_all(t: &mut HostTensor, value: f32) {
     if let HostTensor::F32(v) = t {
         v.iter_mut().for_each(|x| *x = value);
@@ -70,6 +83,7 @@ fn set_all(t: &mut HostTensor, value: f32) {
 }
 
 impl EpisodeDriver {
+    /// Build a driver whose slabs fit `agents`-agent episodes.
     pub fn new(dims: &Dims, agents: usize) -> Self {
         EpisodeDriver {
             dims: dims.clone(),
@@ -153,6 +167,148 @@ impl EpisodeDriver {
     }
 }
 
+/// Reusable packed lockstep buffers for one worker thread driving
+/// `batch` concurrent episodes through a batched
+/// `policy_fwd_a{A}x{B}` executable.
+///
+/// Episode `e` of a block owns rows `e*A .. (e+1)*A` of every slab.
+/// Early-terminated episodes are masked out of the hot loop (no more
+/// sampling, no more environment steps); their stale rows keep riding
+/// through the kernel, which row independence makes inert.  The block
+/// finishes when every episode has terminated or the static episode
+/// length is reached.
+pub struct LockstepDriver {
+    dims: Dims,
+    agents: usize,
+    batch: usize,
+    obs_t: HostTensor,
+    h_t: HostTensor,
+    c_t: HostTensor,
+    gate_t: HostTensor,
+}
+
+impl LockstepDriver {
+    /// Build a driver for blocks of `batch` episodes of `agents` agents.
+    pub fn new(dims: &Dims, agents: usize, batch: usize) -> Self {
+        LockstepDriver {
+            dims: dims.clone(),
+            agents,
+            batch,
+            obs_t: HostTensor::F32(vec![0.0; batch * agents * dims.obs_dim]),
+            h_t: HostTensor::F32(vec![0.0; batch * agents * dims.hidden]),
+            c_t: HostTensor::F32(vec![0.0; batch * agents * dims.hidden]),
+            gate_t: HostTensor::F32(vec![1.0; batch * agents]),
+        }
+    }
+
+    /// Episodes per lockstep block.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Drive one full block of `batch` episodes to completion.
+    /// `envs`, `indices` and `seeds` must all have length `batch`;
+    /// outcomes return in block order.  Each episode keeps its own
+    /// environment, PCG32 stream and comm-mean block, so every outcome
+    /// is bit-identical to what [`EpisodeDriver::run`] would report for
+    /// the same (index, seed).
+    pub fn run(
+        &mut self,
+        exe_fwd_batched: &Executable,
+        params_dev: &DeviceTensor,
+        masks_dev: &DeviceTensor,
+        envs: &mut [Box<dyn MultiAgentEnv + Send>],
+        indices: &[u64],
+        seeds: &[u64],
+    ) -> Result<Vec<EpisodeOutcome>> {
+        let (a, b) = (self.agents, self.batch);
+        if envs.len() != b || indices.len() != b || seeds.len() != b {
+            return Err(anyhow!(
+                "lockstep block expects {b} envs/indices/seeds, got {}/{}/{}",
+                envs.len(),
+                indices.len(),
+                seeds.len()
+            ));
+        }
+        let env_actions = envs[0].n_actions().min(self.dims.n_actions);
+        let noop = envs[0].noop_action();
+        let mut rngs: Vec<Pcg32> =
+            seeds.iter().map(|&s| Pcg32::new(s, SAMPLE_STREAM)).collect();
+        let mut done = vec![false; b];
+        let mut steps = vec![0usize; b];
+        let mut rewards = vec![0.0f32; b];
+
+        for (e, env) in envs.iter_mut().enumerate() {
+            fill_range(&mut self.obs_t, e * a * self.dims.obs_dim, &env.reset(seeds[e]));
+        }
+        set_all(&mut self.h_t, 0.0);
+        set_all(&mut self.c_t, 0.0);
+        set_all(&mut self.gate_t, 1.0);
+
+        let mut env_acts = Vec::with_capacity(a);
+        let mut gates = Vec::with_capacity(a);
+        for _ in 0..self.dims.episode_len {
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            let outs = exe_fwd_batched.run_args(&[
+                Arg::Device(params_dev),
+                Arg::Device(masks_dev),
+                Arg::Host(&self.obs_t),
+                Arg::Host(&self.h_t),
+                Arg::Host(&self.c_t),
+                Arg::Host(&self.gate_t),
+            ])?;
+            let logits = outs[0].as_f32()?;
+            let gate_logits = outs[2].as_f32()?;
+            let h2 = outs[3].as_f32()?;
+            let c2 = outs[4].as_f32()?;
+
+            for e in 0..b {
+                if done[e] {
+                    continue; // terminated: rows ride along but stay inert
+                }
+                let rng = &mut rngs[e];
+                env_acts.clear();
+                gates.clear();
+                for i in 0..a {
+                    let row = &logits[(e * a + i) * self.dims.n_actions
+                        ..(e * a + i + 1) * self.dims.n_actions];
+                    let sampled = rng.sample_logits(row);
+                    env_acts.push(if sampled < env_actions { sampled } else { noop });
+                    let gl = &gate_logits
+                        [(e * a + i) * self.dims.n_gate..(e * a + i + 1) * self.dims.n_gate];
+                    gates.push(rng.sample_logits(gl) as u8 as f32);
+                }
+
+                let step = envs[e].step(&env_acts);
+                steps[e] += 1;
+                rewards[e] += step.reward;
+
+                fill_range(&mut self.obs_t, e * a * self.dims.obs_dim, &step.obs);
+                let hc = e * a * self.dims.hidden;
+                fill_range(&mut self.h_t, hc, &h2[hc..hc + a * self.dims.hidden]);
+                fill_range(&mut self.c_t, hc, &c2[hc..hc + a * self.dims.hidden]);
+                fill_range(&mut self.gate_t, e * a, &gates);
+                if step.done {
+                    done[e] = true;
+                }
+            }
+        }
+
+        Ok((0..b)
+            .map(|e| EpisodeOutcome {
+                index: indices[e],
+                seed: seeds[e],
+                steps: steps[e],
+                total_reward: rewards[e],
+                success: envs[e].is_success(),
+                success_frac: envs[e].success_fraction(),
+            })
+            .collect())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -196,5 +352,49 @@ mod tests {
             assert_eq!(served.success, reference.success, "seed {seed}");
             assert_eq!(served.success_frac, reference.success_frac, "seed {seed}");
         }
+    }
+
+    /// A lockstep block must report, episode for episode, exactly what
+    /// the single-episode slab driver reports for the same seeds.
+    #[test]
+    fn lockstep_block_matches_single_episode_driver() {
+        let mut rt = Runtime::new(Manifest::builtin()).unwrap();
+        let m = rt.manifest().clone();
+        let exe = rt.load("policy_fwd_a3").unwrap();
+        let exe_b = rt.load("policy_fwd_a3x4").unwrap();
+        let state = ModelState::init(&m).unwrap();
+        let params_dev = exe.upload(0, &HostTensor::F32(state.params.clone())).unwrap();
+        let masks_dev = exe.upload(1, &HostTensor::F32(state.masks.clone())).unwrap();
+        let env_cfg = EnvConfig::default().with_agents(3);
+
+        let seeds = [5u64, 77, 1234, 9];
+        let indices = [0u64, 1, 2, 3];
+        let mut envs: Vec<_> = (0..4).map(|_| env_cfg.build()).collect();
+        let mut lockstep = LockstepDriver::new(&m.dims, 3, 4);
+        assert_eq!(lockstep.batch(), 4);
+        let block = lockstep
+            .run(&exe_b, &params_dev, &masks_dev, &mut envs, &indices, &seeds)
+            .unwrap();
+        assert_eq!(block.len(), 4);
+
+        let mut single = EpisodeDriver::new(&m.dims, 3);
+        for (e, (&seed, &index)) in seeds.iter().zip(&indices).enumerate() {
+            let mut env = env_cfg.build();
+            let reference = single
+                .run(&exe, &params_dev, &masks_dev, env.as_mut(), index, seed)
+                .unwrap();
+            assert_eq!(block[e].index, reference.index, "seed {seed}");
+            assert_eq!(block[e].seed, reference.seed, "seed {seed}");
+            assert_eq!(block[e].steps, reference.steps, "seed {seed}");
+            assert_eq!(block[e].total_reward, reference.total_reward, "seed {seed}");
+            assert_eq!(block[e].success, reference.success, "seed {seed}");
+            assert_eq!(block[e].success_frac, reference.success_frac, "seed {seed}");
+        }
+
+        // a mis-sized block is rejected loudly
+        let mut too_few: Vec<_> = (0..2).map(|_| env_cfg.build()).collect();
+        assert!(lockstep
+            .run(&exe_b, &params_dev, &masks_dev, &mut too_few, &indices, &seeds)
+            .is_err());
     }
 }

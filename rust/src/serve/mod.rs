@@ -7,8 +7,17 @@
 //! module is that serving vertical: a [`PolicyServer`] loads a
 //! checkpoint **once**, uploads the parameters and the OSEL-compressed
 //! mask structure as shared immutable device state, and fans episodes
-//! out over worker threads, each running the allocation-free slab
-//! driver ([`EpisodeDriver`]) against the sparse `policy_fwd` path.
+//! out over worker threads.  Each worker runs an allocation-free slab
+//! driver against the sparse `policy_fwd` path — one episode at a time
+//! ([`EpisodeDriver`]) or, when the server is built with a lockstep
+//! batch > 1, whole blocks of episodes through the batched
+//! `policy_fwd_a{A}x{B}` entry point ([`LockstepDriver`]): workers
+//! claim blocks of consecutive episode indices off the shared counter
+//! and execute one `[B·A, ·]` kernel call per timestep for the whole
+//! block, which amortizes per-call overhead and feeds the sparse
+//! kernels' intra-op row fan-out.  Episodes stay pure functions of
+//! their seed in every mode, so the report is identical whatever the
+//! worker count or batch.
 //!
 //! Two front-ends share the engine:
 //!
@@ -25,7 +34,7 @@
 
 mod driver;
 
-pub use driver::{EpisodeDriver, EpisodeOutcome};
+pub use driver::{EpisodeDriver, EpisodeOutcome, LockstepDriver};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -64,9 +73,13 @@ pub struct ServeOptions {
 /// Aggregate reward statistics over the served episodes.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct RewardStats {
+    /// Mean total team reward.
     pub mean: f32,
+    /// Population standard deviation.
     pub std: f32,
+    /// Lowest episode reward.
     pub min: f32,
+    /// Highest episode reward.
     pub max: f32,
 }
 
@@ -87,20 +100,33 @@ impl RewardStats {
 /// The serving report (`eval`/`serve` JSON payload).
 #[derive(Debug, Clone)]
 pub struct EvalReport {
+    /// Environment spec the checkpoint was trained on.
     pub env: String,
+    /// Agents per episode.
     pub agents: usize,
+    /// Kernel path the episodes executed on.
     pub exec: ExecMode,
+    /// Worker threads that drove the run.
     pub workers: usize,
+    /// Episodes per lockstep block (1 = per-episode driver).
+    pub batch: usize,
     /// Training iterations behind the served checkpoint.
     pub checkpoint_iteration: u64,
     /// Surviving-weight fraction of the served masks (1.0 = dense).
     pub density: f32,
+    /// Episodes completed.
     pub episodes: usize,
-    /// Live environment steps (== `policy_fwd` executions).
+    /// Live environment steps (lockstep kernel calls amortize many
+    /// episodes' steps into one execution, but each live step is still
+    /// counted once per episode).
     pub steps: usize,
+    /// Wall-clock of the whole run in seconds.
     pub wall_s: f64,
+    /// `steps / wall_s` — the headline serving-throughput number.
     pub steps_per_sec: f64,
+    /// `episodes / wall_s`.
     pub episodes_per_sec: f64,
+    /// Reward statistics over the completed episodes.
     pub reward: RewardStats,
     /// Mean graded success over the served episodes.
     pub success_rate: f32,
@@ -112,7 +138,8 @@ impl EvalReport {
     pub fn to_json(&self) -> String {
         format!(
             "{{\n  \"kind\": \"serve_report\",\n  \"env\": \"{}\",\n  \"agents\": {},\n  \
-             \"exec\": \"{}\",\n  \"workers\": {},\n  \"checkpoint_iteration\": {},\n  \
+             \"exec\": \"{}\",\n  \"workers\": {},\n  \"batch\": {},\n  \
+             \"checkpoint_iteration\": {},\n  \
              \"density\": {:.6},\n  \"episodes\": {},\n  \"steps\": {},\n  \
              \"wall_s\": {:.6},\n  \"steps_per_sec\": {:.3},\n  \"episodes_per_sec\": {:.3},\n  \
              \"reward\": {{\"mean\": {:.6}, \"std\": {:.6}, \"min\": {:.6}, \"max\": {:.6}}},\n  \
@@ -121,6 +148,7 @@ impl EvalReport {
             self.agents,
             self.exec.name(),
             self.workers,
+            self.batch,
             self.checkpoint_iteration,
             self.density,
             self.episodes,
@@ -145,9 +173,13 @@ pub struct PolicyServer {
     env_cfg: EnvConfig,
     agents: usize,
     exec: ExecMode,
+    /// Episodes per lockstep block (1 = per-episode slab driver).
+    batch: usize,
     density: f32,
     checkpoint_iteration: u64,
     exe_fwd: Arc<Executable>,
+    /// The batched lockstep forward, present iff `batch` > 1.
+    exe_fwd_batched: Option<Arc<Executable>>,
     params_dev: DeviceTensor,
     masks_dev: DeviceTensor,
 }
@@ -155,13 +187,18 @@ pub struct PolicyServer {
 impl PolicyServer {
     /// Build a server from a decoded checkpoint.  `exec` picks the
     /// kernel path (the two are bit-identical; sparse is the fast
-    /// default), `workers` sizes the row→core partition of the shared
-    /// [`crate::runtime::SparseModel`].
+    /// default); `intra_threads` sizes the row→core partition of the
+    /// shared [`crate::runtime::SparseModel`] — the sparse kernels'
+    /// intra-op fan-out, unobservable in the results; `batch` > 1
+    /// makes every worker drive blocks of that many episodes in
+    /// lockstep through `policy_fwd_a{A}x{B}` (also unobservable in
+    /// the results — episodes are pure functions of their seed).
     pub fn from_checkpoint(
         runtime: &mut Runtime,
         ckpt: &Checkpoint,
         exec: ExecMode,
-        workers: usize,
+        intra_threads: usize,
+        batch: usize,
     ) -> Result<Self> {
         let manifest = runtime.manifest().clone();
         ckpt.validate_manifest(&manifest)?;
@@ -179,6 +216,12 @@ impl PolicyServer {
             ));
         }
         let exe_fwd = runtime.load(&format!("policy_fwd_a{agents}"))?;
+        let batch = batch.max(1);
+        let exe_fwd_batched = if batch > 1 {
+            Some(runtime.load(&format!("policy_fwd_a{agents}x{batch}"))?)
+        } else {
+            None
+        };
         let masks = ckpt.mask_vector(&manifest)?;
         let density = if masks.is_empty() {
             1.0
@@ -190,7 +233,7 @@ impl PolicyServer {
         let masks_dev = match exec {
             ExecMode::DenseMasked => exe_fwd.upload(1, &masks_t)?,
             ExecMode::Sparse => {
-                let model = ckpt.sparse_model(&manifest, workers.max(1))?;
+                let model = ckpt.sparse_model(&manifest, intra_threads.max(1))?;
                 exe_fwd.upload_sparse(1, &masks_t, Arc::new(model))?
             }
         };
@@ -199,9 +242,11 @@ impl PolicyServer {
             env_cfg,
             agents,
             exec,
+            batch,
             density,
             checkpoint_iteration: ckpt.meta.iteration,
             exe_fwd,
+            exe_fwd_batched,
             params_dev,
             masks_dev,
         })
@@ -216,13 +261,18 @@ impl PolicyServer {
     /// termination condition holds, then aggregate the report.
     ///
     /// Work distribution is a shared atomic episode counter: worker
-    /// threads claim the next index, derive its seed, and run it on
-    /// their own environment + slab driver.  In episode mode every
-    /// index below the target runs exactly once; in duration mode
-    /// workers stop claiming once the deadline passes (episodes already
-    /// in flight complete — reported wall time includes them).
+    /// threads claim the next **block** of `batch` consecutive indices
+    /// (1 when the server was built without a lockstep batch), derive
+    /// the seeds, and run the block on their own environments + slab
+    /// driver — the lockstep driver for full blocks, the per-episode
+    /// driver for the ragged tail of an episode-count target.  In
+    /// episode mode every index below the target runs exactly once; in
+    /// duration mode workers stop claiming once the deadline passes
+    /// (blocks already in flight complete — reported wall time includes
+    /// them).
     pub fn run(&self, opts: &ServeOptions) -> Result<EvalReport> {
         let workers = opts.workers.max(1);
+        let batch = self.batch.max(1);
         let next = AtomicU64::new(0);
         let outcomes: Mutex<Vec<EpisodeOutcome>> = Mutex::new(Vec::new());
         let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
@@ -242,8 +292,13 @@ impl PolicyServer {
                 let outcomes = &outcomes;
                 let first_err = &first_err;
                 scope.spawn(move || {
-                    let mut env = self.env_cfg.build();
+                    let mut envs: Vec<_> =
+                        (0..batch).map(|_| self.env_cfg.build()).collect();
                     let mut drv = EpisodeDriver::new(&self.manifest.dims, self.agents);
+                    let mut lockstep = self
+                        .exe_fwd_batched
+                        .as_ref()
+                        .map(|_| LockstepDriver::new(&self.manifest.dims, self.agents, batch));
                     loop {
                         if first_err.lock().expect("serve error lock").is_some() {
                             break;
@@ -253,20 +308,44 @@ impl PolicyServer {
                                 break;
                             }
                         }
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= target {
+                        let i0 = next.fetch_add(batch as u64, Ordering::Relaxed);
+                        if i0 >= target {
                             break;
                         }
-                        let seed = episode_seed(opts.seed, i);
-                        match drv.run(
-                            &self.exe_fwd,
-                            &self.params_dev,
-                            &self.masks_dev,
-                            env.as_mut(),
-                            i,
-                            seed,
-                        ) {
-                            Ok(out) => outcomes.lock().expect("serve outcome lock").push(out),
+                        let n = (target - i0).min(batch as u64) as usize;
+                        let indices: Vec<u64> = (i0..i0 + n as u64).collect();
+                        let seeds: Vec<u64> =
+                            indices.iter().map(|&i| episode_seed(opts.seed, i)).collect();
+                        let block = match (&mut lockstep, &self.exe_fwd_batched) {
+                            // full block: one batched kernel call per step
+                            (Some(ls), Some(exe_b)) if n == batch => ls.run(
+                                exe_b,
+                                &self.params_dev,
+                                &self.masks_dev,
+                                &mut envs,
+                                &indices,
+                                &seeds,
+                            ),
+                            // ragged tail (or batch == 1): per-episode driver
+                            _ => indices
+                                .iter()
+                                .zip(&seeds)
+                                .map(|(&i, &seed)| {
+                                    drv.run(
+                                        &self.exe_fwd,
+                                        &self.params_dev,
+                                        &self.masks_dev,
+                                        envs[0].as_mut(),
+                                        i,
+                                        seed,
+                                    )
+                                })
+                                .collect::<Result<Vec<_>>>(),
+                        };
+                        match block {
+                            Ok(outs) => {
+                                outcomes.lock().expect("serve outcome lock").extend(outs)
+                            }
                             Err(e) => {
                                 let mut guard = first_err.lock().expect("serve error lock");
                                 if guard.is_none() {
@@ -298,6 +377,7 @@ impl PolicyServer {
             agents: self.agents,
             exec: self.exec,
             workers,
+            batch,
             checkpoint_iteration: self.checkpoint_iteration,
             density: self.density,
             episodes,
@@ -335,7 +415,8 @@ mod tests {
     #[test]
     fn eval_is_reproducible_across_worker_counts() {
         let (mut rt, ckpt) = tiny_checkpoint();
-        let server = PolicyServer::from_checkpoint(&mut rt, &ckpt, ExecMode::Sparse, 4).unwrap();
+        let server =
+            PolicyServer::from_checkpoint(&mut rt, &ckpt, ExecMode::Sparse, 4, 1).unwrap();
         let run = |workers: usize| {
             server
                 .run(&ServeOptions {
@@ -355,18 +436,45 @@ mod tests {
         assert_eq!(one.success_rate, four.success_rate);
     }
 
+    /// The lockstep batch is unobservable in the report: same seed +
+    /// same episode count ⇒ identical results at batch 1 and batch 4 —
+    /// including a target that is not a multiple of the batch (the
+    /// ragged tail runs on the per-episode driver).
+    #[test]
+    fn eval_is_reproducible_across_lockstep_batches() {
+        let (mut rt, ckpt) = tiny_checkpoint();
+        let opts = ServeOptions { workers: 2, mode: ServeMode::Episodes(6), seed: 9 };
+        let single = PolicyServer::from_checkpoint(&mut rt, &ckpt, ExecMode::Sparse, 1, 1)
+            .unwrap()
+            .run(&opts)
+            .unwrap();
+        let batched = PolicyServer::from_checkpoint(&mut rt, &ckpt, ExecMode::Sparse, 2, 4)
+            .unwrap()
+            .run(&opts)
+            .unwrap();
+        assert_eq!(single.episodes, 6);
+        assert_eq!(batched.episodes, 6, "ragged 6-episode target over blocks of 4");
+        assert_eq!(single.steps, batched.steps);
+        assert_eq!(single.reward.mean, batched.reward.mean);
+        assert_eq!(single.reward.min, batched.reward.min);
+        assert_eq!(single.reward.max, batched.reward.max);
+        assert_eq!(single.success_rate, batched.success_rate);
+        assert_eq!(batched.batch, 4);
+    }
+
     #[test]
     fn sparse_and_dense_serving_agree() {
         let (mut rt, ckpt) = tiny_checkpoint();
         let opts = ServeOptions { workers: 2, mode: ServeMode::Episodes(4), seed: 21 };
-        let sparse = PolicyServer::from_checkpoint(&mut rt, &ckpt, ExecMode::Sparse, 2)
+        let sparse = PolicyServer::from_checkpoint(&mut rt, &ckpt, ExecMode::Sparse, 2, 1)
             .unwrap()
             .run(&opts)
             .unwrap();
-        let dense = PolicyServer::from_checkpoint(&mut rt, &ckpt, ExecMode::DenseMasked, 2)
-            .unwrap()
-            .run(&opts)
-            .unwrap();
+        let dense =
+            PolicyServer::from_checkpoint(&mut rt, &ckpt, ExecMode::DenseMasked, 2, 1)
+                .unwrap()
+                .run(&opts)
+                .unwrap();
         assert_eq!(sparse.steps, dense.steps);
         assert_eq!(sparse.reward.mean, dense.reward.mean);
         assert_eq!(sparse.success_rate, dense.success_rate);
@@ -376,13 +484,15 @@ mod tests {
     #[test]
     fn report_json_parses() {
         let (mut rt, ckpt) = tiny_checkpoint();
-        let server = PolicyServer::from_checkpoint(&mut rt, &ckpt, ExecMode::Sparse, 1).unwrap();
+        let server =
+            PolicyServer::from_checkpoint(&mut rt, &ckpt, ExecMode::Sparse, 1, 2).unwrap();
         let report = server
             .run(&ServeOptions { workers: 1, mode: ServeMode::Episodes(2), seed: 1 })
             .unwrap();
         let v = Json::parse(&report.to_json()).unwrap();
         assert_eq!(v.get("kind").unwrap().as_str(), Some("serve_report"));
         assert_eq!(v.get("episodes").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("batch").unwrap().as_usize(), Some(2));
         assert_eq!(v.get("env").unwrap().as_str(), Some("predator_prey"));
         assert!(v.get("steps_per_sec").unwrap().as_f64().unwrap() > 0.0);
         assert!(v.get("reward").unwrap().get("mean").is_some());
@@ -391,7 +501,8 @@ mod tests {
     #[test]
     fn duration_mode_terminates() {
         let (mut rt, ckpt) = tiny_checkpoint();
-        let server = PolicyServer::from_checkpoint(&mut rt, &ckpt, ExecMode::Sparse, 2).unwrap();
+        let server =
+            PolicyServer::from_checkpoint(&mut rt, &ckpt, ExecMode::Sparse, 2, 2).unwrap();
         let report = server
             .run(&ServeOptions {
                 workers: 2,
