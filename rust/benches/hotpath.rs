@@ -1,15 +1,21 @@
 //! §Perf — the end-to-end hot path: execute latency per artifact,
 //! full-iteration latency, environment and sampling micro-benches, and
-//! the dense-vs-sparse execution sweep.  This is the bench the
-//! performance pass iterates on (EXPERIMENTS.md §Perf records
-//! before/after), and the sweep is the repo's perf-trajectory anchor:
-//! it writes `BENCH_native_sparse.json` and **exits non-zero** if the
-//! sparse path is slower than dense-masked at 90% sparsity (the CI
-//! bench-smoke gate).
+//! two execution sweeps.  This is the bench the performance pass
+//! iterates on (EXPERIMENTS.md §Perf records before/after), and the
+//! sweeps are the repo's perf-trajectory anchors:
+//!
+//! * the **dense-vs-sparse sweep** writes `BENCH_native_sparse.json`
+//!   and exits non-zero if the sparse path is slower than dense-masked
+//!   at 90% sparsity;
+//! * the **model-size sweep** runs the compiled layer plan at the
+//!   `tiny`/`paper`/`wide` presets (dense vs sparse at ~90% sparsity),
+//!   writes `BENCH_layer_plan.json`, and exits non-zero if sparse is
+//!   slower than dense on the `wide` preset — the capacity axis the
+//!   layer-graph runtime opened (both are CI bench-smoke gates).
 //!
 //! ```bash
 //! cargo bench --bench hotpath              # full run
-//! cargo bench --bench hotpath -- --smoke   # CI smoke: sweep only, few runs
+//! cargo bench --bench hotpath -- --smoke   # CI smoke: sweeps only, few runs
 //! ```
 
 use std::sync::Arc;
@@ -18,6 +24,7 @@ use learning_group::accel::load_alloc::balanced_indexes;
 use learning_group::accel::osel::OselEncoder;
 use learning_group::coordinator::{PrunerChoice, TrainConfig, Trainer};
 use learning_group::env::{MultiAgentEnv, PredatorPrey, PredatorPreyConfig};
+use learning_group::manifest::{Manifest, ModelTopology};
 use learning_group::model::ModelState;
 use learning_group::runtime::{Arg, DeviceTensor, Executable, HostTensor, Runtime, SparseModel};
 use learning_group::util::benchutil::{bench, report};
@@ -227,14 +234,191 @@ fn run_sweep(rt: &mut Runtime, smoke: bool) {
     }
 }
 
+/// One preset of the model-size sweep (`BENCH_layer_plan.json`).
+struct ModelPoint {
+    model: &'static str,
+    hidden: usize,
+    params: usize,
+    masked_layers: usize,
+    sparsity: f64,
+    fwd_dense_us: f64,
+    fwd_sparse_us: f64,
+    grad_dense_us: f64,
+    grad_sparse_us: f64,
+}
+
+impl ModelPoint {
+    fn fwd_speedup(&self) -> f64 {
+        self.fwd_dense_us / self.fwd_sparse_us
+    }
+
+    fn grad_speedup(&self) -> f64 {
+        self.grad_dense_us / self.grad_sparse_us
+    }
+}
+
+/// Model-size sweep: the compiled layer plan at every `--model` preset,
+/// dense vs sparse over ~90%-sparse FLGW-structured masks (G = 10).
+/// Forward outputs are cross-checked for exact parity before timing.
+fn model_size_sweep(smoke: bool) -> Vec<ModelPoint> {
+    let a = 8usize;
+    let g = 10usize;
+    let (fw, fr) = if smoke { (2, 15) } else { (5, 120) };
+    let (gw, gr) = if smoke { (1, 4) } else { (3, 20) };
+    let presets: [(&'static str, ModelTopology); 3] = [
+        ("tiny", ModelTopology::tiny()),
+        ("paper", ModelTopology::paper()),
+        ("wide", ModelTopology::wide()),
+    ];
+
+    let mut points = Vec::new();
+    for (name, topo) in presets {
+        let mut rt = Runtime::new(Manifest::with_model(topo)).unwrap();
+        let m = rt.manifest().clone();
+        let state = ModelState::init(&m).unwrap();
+        let exe_fwd = rt.load("policy_fwd_a8").unwrap();
+        let exe_grad = rt.load("grad_episode_a8").unwrap();
+        let t = m.dims.episode_len;
+
+        let mut rng = Pcg32::seeded(400 + m.dims.hidden as u64);
+        let mut masks = vec![0.0f32; m.mask_size];
+        let mut encodings = Vec::new();
+        for l in &m.masked_layers {
+            let ig = balanced_indexes(l.rows, g, 0.0, &mut rng);
+            let og = balanced_indexes(l.cols, g, 0.0, &mut rng);
+            let (srm, _) = OselEncoder::default().encode(&ig, &og, g);
+            masks[l.offset..l.offset + l.size()]
+                .copy_from_slice(&OselEncoder::materialize_mask(&srm));
+            encodings.push(srm);
+        }
+        let sparse = Arc::new(SparseModel::from_encodings(&m, &encodings, 4).unwrap());
+        let sparsity = 1.0 - f64::from(sparse.density());
+        let params_t = HostTensor::F32(state.params.clone());
+        let masks_t = HostTensor::F32(masks);
+
+        // ---- forward: identical inputs down both paths
+        let obs_t = HostTensor::F32(vec![0.2; a * m.dims.obs_dim]);
+        let h_t = HostTensor::F32(vec![0.1; a * m.dims.hidden]);
+        let c_t = HostTensor::F32(vec![0.1; a * m.dims.hidden]);
+        let gp_t = HostTensor::F32(vec![1.0; a]);
+        let p_dev = exe_fwd.upload(0, &params_t).unwrap();
+        let dense_dev = exe_fwd.upload(1, &masks_t).unwrap();
+        let sparse_dev = exe_fwd.upload_sparse(1, &masks_t, sparse.clone()).unwrap();
+        let fwd_host = [&obs_t, &h_t, &c_t, &gp_t];
+        let dense_out = run_with(&exe_fwd, &p_dev, &dense_dev, fwd_host);
+        let sparse_out = run_with(&exe_fwd, &p_dev, &sparse_dev, fwd_host);
+        assert_eq!(dense_out, sparse_out, "{name}: sparse forward must match dense-masked");
+        let sd = bench(fw, fr, || run_with(&exe_fwd, &p_dev, &dense_dev, fwd_host));
+        let ss = bench(fw, fr, || run_with(&exe_fwd, &p_dev, &sparse_dev, fwd_host));
+
+        // ---- backward (BPTT over T steps)
+        let obs_seq = HostTensor::F32(vec![0.2; t * a * m.dims.obs_dim]);
+        let act_seq = HostTensor::I32(vec![1; t * a]);
+        let gate_seq = HostTensor::F32(vec![1.0; t * a]);
+        let ret_seq = HostTensor::F32(vec![0.1; t]);
+        let pg_dev = exe_grad.upload(0, &params_t).unwrap();
+        let dense_g = exe_grad.upload(1, &masks_t).unwrap();
+        let sparse_g = exe_grad.upload_sparse(1, &masks_t, sparse.clone()).unwrap();
+        let grad_host = [&obs_seq, &act_seq, &gate_seq, &ret_seq];
+        let gd = bench(gw, gr, || run_with(&exe_grad, &pg_dev, &dense_g, grad_host));
+        let gs = bench(gw, gr, || run_with(&exe_grad, &pg_dev, &sparse_g, grad_host));
+
+        let point = ModelPoint {
+            model: name,
+            hidden: m.dims.hidden,
+            params: m.param_size,
+            masked_layers: m.masked_layers.len(),
+            sparsity,
+            fwd_dense_us: sd.median.as_secs_f64() * 1e6,
+            fwd_sparse_us: ss.median.as_secs_f64() * 1e6,
+            grad_dense_us: gd.median.as_secs_f64() * 1e6,
+            grad_sparse_us: gs.median.as_secs_f64() * 1e6,
+        };
+        report(&format!("bench/layer_plan@{name}(fwd dense)"), sd, "");
+        report(
+            &format!("bench/layer_plan@{name}(fwd sparse)"),
+            ss,
+            &format!("{:.2}x", point.fwd_speedup()),
+        );
+        report(&format!("bench/layer_plan@{name}(grad dense)"), gd, "");
+        report(
+            &format!("bench/layer_plan@{name}(grad sparse)"),
+            gs,
+            &format!("{:.2}x", point.grad_speedup()),
+        );
+        points.push(point);
+    }
+    points
+}
+
+/// Serialise the model-size sweep to `BENCH_layer_plan.json` — see
+/// docs/BENCHMARKS.md for the schema.
+fn write_model_sweep_json(points: &[ModelPoint], smoke: bool) -> std::io::Result<()> {
+    let mut rows = String::new();
+    for (i, p) in points.iter().enumerate() {
+        if i > 0 {
+            rows.push_str(",\n");
+        }
+        rows.push_str(&format!(
+            "    {{\"model\": \"{}\", \"hidden\": {}, \"params\": {}, \
+             \"masked_layers\": {}, \"sparsity\": {:.4}, \
+             \"fwd_dense_us\": {:.3}, \"fwd_sparse_us\": {:.3}, \"fwd_speedup\": {:.3}, \
+             \"grad_dense_us\": {:.3}, \"grad_sparse_us\": {:.3}, \"grad_speedup\": {:.3}}}",
+            p.model,
+            p.hidden,
+            p.params,
+            p.masked_layers,
+            p.sparsity,
+            p.fwd_dense_us,
+            p.fwd_sparse_us,
+            p.fwd_speedup(),
+            p.grad_dense_us,
+            p.grad_sparse_us,
+            p.grad_speedup()
+        ));
+    }
+    let text = format!(
+        "{{\n  \"bench\": \"layer_plan\",\n  \"mode\": \"{}\",\n  \"agents\": 8,\n  \
+         \"groups\": 10,\n  \"gate\": \"wide: sparse >= dense at ~90% sparsity\",\n  \
+         \"rows\": [\n{}\n  ]\n}}\n",
+        if smoke { "smoke" } else { "full" },
+        rows
+    );
+    std::fs::write("BENCH_layer_plan.json", text)
+}
+
+/// Run the model-size sweep, write the JSON artifact, and gate: on the
+/// `wide` preset (the largest layers, where compressed execution must
+/// pay off) neither the forward nor the backward sparse path may be
+/// slower than dense-masked at ~90% sparsity.  In smoke (CI) mode a
+/// regression exits non-zero.
+fn run_model_sweep(smoke: bool) {
+    let points = model_size_sweep(smoke);
+    write_model_sweep_json(&points, smoke).expect("writing BENCH_layer_plan.json");
+    println!("model-size sweep written to BENCH_layer_plan.json");
+    let wide = points.iter().find(|p| p.model == "wide").expect("sweep has a wide point");
+    for (what, speedup) in [("forward", wide.fwd_speedup()), ("grad", wide.grad_speedup())] {
+        if speedup < 1.0 {
+            eprintln!(
+                "REGRESSION: sparse {what} on the wide preset is slower than dense-masked \
+                 ({speedup:.2}x at {:.0}% sparsity)",
+                wide.sparsity * 100.0
+            );
+            if smoke {
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
 fn main() {
     let smoke = std::env::args().any(|arg| arg == "--smoke")
         || std::env::var_os("LG_BENCH_SMOKE").is_some();
 
     if smoke {
-        // CI smoke mode: the dense-vs-sparse sweep only, few runs.  The
-        // sweep IS the gate here, so an unavailable runtime is a hard
-        // failure, not a skip.
+        // CI smoke mode: the two sweeps only, few runs.  The sweeps ARE
+        // the gates here, so an unavailable runtime is a hard failure,
+        // not a skip.
         let mut rt = match Runtime::from_default_artifacts() {
             Ok(rt) => rt,
             Err(e) => {
@@ -243,6 +427,7 @@ fn main() {
             }
         };
         run_sweep(&mut rt, true);
+        run_model_sweep(true);
         return;
     }
 
@@ -331,6 +516,9 @@ fn main() {
 
     // --- dense-vs-sparse execution sweep (perf-trajectory artifact)
     run_sweep(&mut rt, false);
+
+    // --- model-size sweep over the --model presets (layer-plan artifact)
+    run_model_sweep(false);
 
     // --- full training iteration (the system-level number)
     let cfg = TrainConfig {

@@ -26,11 +26,21 @@
 //! magic "LGCP" | version u32 | manifest fingerprint u64
 //! meta: iteration u64, episodes_done u64, seed u64, agents u32,
 //!       batch u32, exec u8, env str, pruner str
+//! model topology (v2+): obs_dim u32, hidden u32, n_actions u32,
+//!       n_gate u32, episode_len u32, comm_rounds u32,
+//!       enc count u32 + enc widths u32[]
 //! params f32[] | sq_avg f32[] | dmask_accum f32[]
 //! mask store: tag u8 (0 dense-bits, 1 OSEL) + payload
 //! pruner store: tag u8 (0 stateless, 1 FLGW) + payload
 //! crc32 u32 over every preceding byte
 //! ```
+//!
+//! Version 2 added the model-topology block; version-1 files still
+//! read, defaulting the topology to the builtin `paper` preset (the
+//! only topology v1 builds could train).  The recorded topology is
+//! what lets `eval`/`serve`/`--resume` rebuild the exact manifest a
+//! `--model tiny|wide` run trained, and what turns a mismatched
+//! `--model` on resume into a loud error instead of a shape explosion.
 //!
 //! Corruption detection is layered: the CRC-32 trailer catches bit rot
 //! and truncation, the manifest fingerprint refuses a checkpoint whose
@@ -49,15 +59,18 @@ use anyhow::{anyhow, Context, Result};
 use crate::accel::bitvec::BitVec;
 use crate::accel::osel::OselEncoder;
 use crate::accel::sparse_row_memory::{SparseRowMemory, SparseTuple};
-use crate::manifest::Manifest;
+use crate::manifest::{Manifest, ModelTopology};
 use crate::runtime::{ExecMode, SparseModel};
 
 use bytes::{crc32, ByteReader, ByteWriter};
 
 /// File magic: "LGCP" (LearningGroup CheckPoint).
 pub const MAGIC: [u8; 4] = *b"LGCP";
-/// Current format version.
-pub const VERSION: u32 = 1;
+/// Current format version (2: model topology recorded in the header).
+pub const VERSION: u32 = 2;
+/// Oldest version this build still reads (v1: no topology block —
+/// defaults to the `paper` preset).
+pub const MIN_VERSION: u32 = 1;
 
 /// Per-layer (IG, OG) argmax index lists — the FLGW encode-skip keys
 /// that travel with the encodings (see `FlgwPruner::layer_keys`).
@@ -88,6 +101,10 @@ pub struct CheckpointMeta {
     pub env: String,
     /// Pruner spec string, e.g. `"flgw:4"`.
     pub pruner: String,
+    /// The model topology the run trained (v2; v1 files default to the
+    /// `paper` preset).  `eval`/`serve`/`--resume` rebuild the manifest
+    /// from this, and a conflicting `--model` is rejected against it.
+    pub model: ModelTopology,
 }
 
 /// One masked layer's OSEL-encoded mask: the (IG, OG) argmax index
@@ -327,6 +344,18 @@ impl Checkpoint {
         });
         w.put_str(&self.meta.env);
         w.put_str(&self.meta.pruner);
+        // v2: the model topology block
+        let t = &self.meta.model;
+        w.put_u32(t.obs_dim as u32);
+        w.put_u32(t.hidden as u32);
+        w.put_u32(t.n_actions as u32);
+        w.put_u32(t.n_gate as u32);
+        w.put_u32(t.episode_len as u32);
+        w.put_u32(t.comm_rounds as u32);
+        w.put_u32(t.enc_widths.len() as u32);
+        for &e in &t.enc_widths {
+            w.put_u32(e as u32);
+        }
         w.put_f32_slice(&self.params);
         w.put_f32_slice(&self.sq_avg);
         w.put_f32_slice(&self.dmask_accum);
@@ -387,9 +416,10 @@ impl Checkpoint {
             return Err(anyhow!("bad checkpoint magic {magic:?} (expected \"LGCP\")"));
         }
         let version = r.u32()?;
-        if version != VERSION {
+        if !(MIN_VERSION..=VERSION).contains(&version) {
             return Err(anyhow!(
-                "unsupported checkpoint version {version} (this build reads version {VERSION})"
+                "unsupported checkpoint version {version} \
+                 (this build reads versions {MIN_VERSION}..={VERSION})"
             ));
         }
         let manifest_fingerprint = r.u64()?;
@@ -405,6 +435,37 @@ impl Checkpoint {
         };
         let env = r.str()?;
         let pruner_spec = r.str()?;
+        let model = if version >= 2 {
+            let obs_dim = r.u32()? as usize;
+            let hidden = r.u32()? as usize;
+            let n_actions = r.u32()? as usize;
+            let n_gate = r.u32()? as usize;
+            let episode_len = r.u32()? as usize;
+            let comm_rounds = r.u32()? as usize;
+            let n_enc = r.u32()? as usize;
+            if n_enc > 64 {
+                return Err(anyhow!("implausible encoder stack depth {n_enc} in checkpoint"));
+            }
+            let mut enc_widths = Vec::with_capacity(n_enc);
+            for _ in 0..n_enc {
+                enc_widths.push(r.u32()? as usize);
+            }
+            let model = ModelTopology {
+                obs_dim,
+                hidden,
+                n_actions,
+                n_gate,
+                episode_len,
+                enc_widths,
+                comm_rounds,
+            };
+            model.validate().context("checkpoint model topology")?;
+            model
+        } else {
+            // v1 predates the topology block; those builds only ever
+            // trained the paper layout
+            ModelTopology::paper()
+        };
         let params = r.f32_vec()?;
         let sq_avg = r.f32_vec()?;
         let dmask_accum = r.f32_vec()?;
@@ -461,6 +522,7 @@ impl Checkpoint {
                 exec,
                 env,
                 pruner: pruner_spec,
+                model,
             },
             manifest_fingerprint,
             params,
@@ -492,6 +554,15 @@ impl Checkpoint {
     /// Refuse a checkpoint whose buffer layout disagrees with the
     /// running manifest.
     pub fn validate_manifest(&self, m: &Manifest) -> Result<()> {
+        if self.meta.model != m.model {
+            return Err(anyhow!(
+                "checkpoint records model topology {} but the running manifest is {} — \
+                 rebuild the runtime from the checkpoint header (eval/serve/--resume do \
+                 this automatically) or pass the matching --model",
+                self.meta.model.spec(),
+                m.model.spec()
+            ));
+        }
         let fp = m.fingerprint();
         if self.manifest_fingerprint != fp {
             return Err(anyhow!(
@@ -569,6 +640,7 @@ mod tests {
                 exec: ExecMode::Sparse,
                 env: "predator_prey".to_string(),
                 pruner: format!("flgw:{g}"),
+                model: m.model.clone(),
             },
             manifest_fingerprint: m.fingerprint(),
             params: (0..m.param_size).map(|_| rng.next_normal()).collect(),
@@ -687,6 +759,97 @@ mod tests {
         for (a, b) in sm.layers.iter().zip(&scanned.layers) {
             assert_eq!(a.row_ptr, b.row_ptr, "{}", a.name);
             assert_eq!(a.col_idx, b.col_idx, "{}", a.name);
+        }
+    }
+
+    /// Serialize a checkpoint in the **version-1** layout: identical to
+    /// `to_bytes` minus the topology block.  Only valid for
+    /// paper-topology checkpoints (the only topology v1 builds wrote).
+    fn v1_bytes(ckpt: &Checkpoint) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_bytes(&MAGIC);
+        w.put_u32(1);
+        w.put_u64(ckpt.manifest_fingerprint);
+        w.put_u64(ckpt.meta.iteration);
+        w.put_u64(ckpt.meta.episodes_done);
+        w.put_u64(ckpt.meta.seed);
+        w.put_u32(ckpt.meta.agents);
+        w.put_u32(ckpt.meta.batch);
+        w.put_u8(match ckpt.meta.exec {
+            ExecMode::DenseMasked => 0,
+            ExecMode::Sparse => 1,
+        });
+        w.put_str(&ckpt.meta.env);
+        w.put_str(&ckpt.meta.pruner);
+        w.put_f32_slice(&ckpt.params);
+        w.put_f32_slice(&ckpt.sq_avg);
+        w.put_f32_slice(&ckpt.dmask_accum);
+        match &ckpt.masks {
+            MaskStore::DenseBits { len, words } => {
+                w.put_u8(0);
+                w.put_u64(*len);
+                w.put_u64_slice(words);
+            }
+            MaskStore::Osel(layers) => {
+                w.put_u8(1);
+                w.put_u32(layers.len() as u32);
+                for l in layers {
+                    w.put_u32(l.rows);
+                    w.put_u32(l.cols);
+                    w.put_u32(l.groups);
+                    w.put_u16_slice(&l.ig);
+                    w.put_u16_slice(&l.og);
+                    w.put_u16(l.tuples.len() as u16);
+                    for (mi, words) in &l.tuples {
+                        w.put_u16(*mi);
+                        w.put_u64_slice(words);
+                    }
+                }
+            }
+        }
+        match &ckpt.pruner {
+            PrunerStore::Stateless => w.put_u8(0),
+            PrunerStore::Flgw { g, grouping, sq_avg } => {
+                w.put_u8(1);
+                w.put_u32(*g);
+                w.put_f32_slice(grouping);
+                w.put_f32_slice(sq_avg);
+            }
+        }
+        let crc = crc32(w.as_slice());
+        w.put_u32(crc);
+        w.into_inner()
+    }
+
+    /// Version-1 files (no topology block) still read, defaulting the
+    /// topology to the builtin `paper` preset — the v1-compat contract.
+    #[test]
+    fn reads_version1_checkpoints_with_paper_topology() {
+        let m = Manifest::builtin();
+        let ckpt = flgw_checkpoint(&m, 4);
+        let decoded = Checkpoint::from_bytes(&v1_bytes(&ckpt)).unwrap();
+        assert_eq!(decoded.meta.model, ModelTopology::paper());
+        assert_eq!(decoded, ckpt, "v1 decode must equal the v2 original field for field");
+        decoded.validate_manifest(&m).unwrap();
+        // and re-serializing writes the current version with the block
+        let rewritten = Checkpoint::from_bytes(&decoded.to_bytes()).unwrap();
+        assert_eq!(rewritten, ckpt);
+    }
+
+    /// Non-paper topologies round-trip through the v2 header, and a
+    /// paper manifest refuses them with a topology-naming error.
+    #[test]
+    fn v2_round_trips_non_paper_topologies() {
+        for topo in [ModelTopology::tiny(), ModelTopology::wide()] {
+            let m = Manifest::with_model(topo.clone());
+            let ckpt = flgw_checkpoint(&m, 4);
+            let decoded = Checkpoint::from_bytes(&ckpt.to_bytes()).unwrap();
+            assert_eq!(decoded, ckpt, "{}", topo.spec());
+            assert_eq!(decoded.meta.model, topo);
+            decoded.validate_manifest(&m).unwrap();
+            let err =
+                decoded.validate_manifest(&Manifest::builtin()).unwrap_err().to_string();
+            assert!(err.contains("topology"), "{err}");
         }
     }
 

@@ -3,6 +3,7 @@
 use std::path::PathBuf;
 
 use crate::env::EnvConfig;
+use crate::manifest::ModelTopology;
 use crate::runtime::ExecMode;
 
 /// Which pruning algorithm to run (Fig. 4(a) candidates).
@@ -110,6 +111,13 @@ pub struct TrainConfig {
     /// Stream per-iteration metrics as JSON lines to this path
     /// (`--metrics-out`; `None` disables the sink).
     pub metrics_out: Option<PathBuf>,
+    /// Model topology to train (`--model tiny|paper|wide`, or any
+    /// custom [`ModelTopology`] through the API).  The builtin manifest
+    /// is built from it; checkpoints record it, and `--resume` rejects
+    /// a mismatch.  Ignored when an artifacts manifest on disk already
+    /// pins the topology (requesting a conflicting non-default one is
+    /// an error).
+    pub model: ModelTopology,
 }
 
 impl Default for TrainConfig {
@@ -131,6 +139,7 @@ impl Default for TrainConfig {
             save_every: 0,
             checkpoint_dir: None,
             metrics_out: None,
+            model: ModelTopology::paper(),
         }
     }
 }
@@ -187,6 +196,13 @@ mod tests {
     fn with_agents_updates_env() {
         let c = TrainConfig::default().with_agents(8);
         assert_eq!(c.env.n_agents(), 8);
+    }
+
+    #[test]
+    fn default_model_is_the_paper_preset() {
+        assert_eq!(TrainConfig::default().model, ModelTopology::paper());
+        let tiny = TrainConfig { model: ModelTopology::tiny(), ..TrainConfig::default() };
+        assert_eq!(tiny.with_agents(5).model, ModelTopology::tiny());
     }
 
     #[test]

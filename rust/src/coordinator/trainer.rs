@@ -141,6 +141,13 @@ impl Trainer {
     /// head.
     pub fn new(mut runtime: Runtime, cfg: TrainConfig) -> Result<Self> {
         let manifest = runtime.manifest().clone();
+        if manifest.model != cfg.model {
+            return Err(anyhow!(
+                "config model topology {} != runtime manifest topology {}",
+                cfg.model.spec(),
+                manifest.model.spec()
+            ));
+        }
         if cfg.agents != cfg.env.n_agents() {
             return Err(anyhow!(
                 "config agents {} != env agents {}",
@@ -218,10 +225,19 @@ impl Trainer {
     }
 
     /// Convenience constructor over the default artifacts directory
-    /// (falls back to the built-in manifest + native backend when no
-    /// artifacts were built).
-    pub fn from_default_artifacts(cfg: TrainConfig) -> Result<Self> {
-        Self::new(Runtime::from_default_artifacts()?, cfg)
+    /// (falls back to a built-in manifest for [`TrainConfig::model`] +
+    /// the native backend when no artifacts were built).
+    pub fn from_default_artifacts(mut cfg: TrainConfig) -> Result<Self> {
+        let manifest =
+            crate::manifest::Manifest::load_or_builtin_model(
+                crate::manifest::Manifest::default_dir(),
+                &cfg.model,
+            )?;
+        // An artifacts manifest on disk pins the topology (requesting a
+        // conflicting non-default one errored above); adopt it so the
+        // config, the runtime and the checkpoints all agree.
+        cfg.model = manifest.model.clone();
+        Self::new(Runtime::new(manifest)?, cfg)
     }
 
     /// Resume a run from a checkpoint.  The run's *identity* — seed,
@@ -234,6 +250,8 @@ impl Trainer {
     /// stored iteration: `train()` runs iterations
     /// `ckpt.iteration .. cfg.iterations`.
     pub fn resume(runtime: Runtime, mut cfg: TrainConfig, ckpt: &Checkpoint) -> Result<Self> {
+        // validate_manifest covers both the topology (with a message
+        // naming it) and the layout fingerprint
         ckpt.validate_manifest(runtime.manifest())?;
         let pruner = PrunerChoice::parse(&ckpt.meta.pruner).ok_or_else(|| {
             anyhow!("checkpoint has unknown pruner spec {:?}", ckpt.meta.pruner)
@@ -243,20 +261,33 @@ impl Trainer {
         cfg.pruner = pruner;
         cfg.seed = ckpt.meta.seed;
         cfg.batch = ckpt.meta.batch as usize;
+        cfg.model = ckpt.meta.model.clone();
         cfg = cfg.with_agents(ckpt.meta.agents as usize).with_env(env);
         let mut trainer = Self::new(runtime, cfg)?;
         trainer.restore_from(ckpt)?;
         Ok(trainer)
     }
 
-    /// [`Trainer::resume`] over the default artifacts directory,
-    /// reading (and CRC-verifying) the checkpoint at `path`.
+    /// [`Trainer::resume`] with the runtime rebuilt from the topology
+    /// the checkpoint header records, so a `--model tiny` run resumes
+    /// without re-stating the preset (used by the CLI, which pre-reads
+    /// the checkpoint for its `--model` conflict check).
+    pub fn resume_with_default_artifacts(cfg: TrainConfig, ckpt: &Checkpoint) -> Result<Self> {
+        let manifest = crate::manifest::Manifest::for_topology(
+            crate::manifest::Manifest::default_dir(),
+            &ckpt.meta.model,
+        )?;
+        Self::resume(Runtime::new(manifest)?, cfg, ckpt)
+    }
+
+    /// [`Trainer::resume_with_default_artifacts`], reading (and
+    /// CRC-verifying) the checkpoint at `path`.
     pub fn from_default_artifacts_resumed(
         cfg: TrainConfig,
         path: impl AsRef<Path>,
     ) -> Result<Self> {
         let ckpt = Checkpoint::read(path)?;
-        Self::resume(Runtime::from_default_artifacts()?, cfg, &ckpt)
+        Self::resume_with_default_artifacts(cfg, &ckpt)
     }
 
     /// Install a decoded checkpoint's state into this (freshly built,
@@ -355,6 +386,7 @@ impl Trainer {
                 exec: self.cfg.exec,
                 env: self.cfg.env.name(),
                 pruner: self.cfg.pruner.spec(),
+                model: manifest.model.clone(),
             },
             manifest_fingerprint: manifest.fingerprint(),
             params: self.state.params.clone(),

@@ -7,6 +7,7 @@
 //! ```text
 //! learning-group train [--agents A] [--batch B] [--iterations N]
 //!                      [--env predator_prey|traffic_junction:<level>]
+//!                      [--model tiny|paper|wide] [--print-plan]
 //!                      [--rollouts R] [--exec sparse|dense]
 //!                      [--batch-exec] [--intra-threads T]
 //!                      [--pruner dense|flgw:G|iterative:P|bc:BxF|gst:BxF:P]
@@ -28,6 +29,13 @@
 //! learning-group resources           # Fig 8
 //! ```
 //!
+//! `--model` picks the layer-graph topology the runtime compiles its
+//! execution plan from: `tiny` (H = 32), `paper` (H = 128, the default
+//! and the paper's layout), or `wide` (H = 256 with a two-layer encoder
+//! and two comm rounds).  Checkpoints record the topology; `--resume`,
+//! `eval` and `serve` rebuild the manifest from the header, and an
+//! explicit conflicting `--model` on resume is rejected.  `--print-plan`
+//! dumps the compiled forward/backward plan as JSON and exits.
 //! `--env` picks the scenario: `predator_prey` (the paper's benchmark)
 //! or `traffic_junction:easy|medium|hard` (IC3Net's other benchmark with
 //! a difficulty curriculum).  `--rollouts R` collects each iteration's
@@ -60,7 +68,8 @@ use learning_group::checkpoint::Checkpoint;
 use learning_group::coordinator::{ExecMode, PrunerChoice, TrainConfig, Trainer};
 use learning_group::env::EnvConfig;
 use learning_group::experiments;
-use learning_group::runtime::Runtime;
+use learning_group::manifest::{Manifest, ModelTopology};
+use learning_group::runtime::{plan, Runtime};
 use learning_group::serve::{PolicyServer, ServeMode, ServeOptions};
 
 struct Args {
@@ -133,6 +142,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         .get("checkpoint-dir")
         .cloned()
         .or_else(|| (save_every > 0).then(|| "checkpoints".to_string()));
+    let model_s = args.flags.get("model");
+    let model = match model_s {
+        Some(s) => ModelTopology::preset(s)
+            .ok_or_else(|| anyhow!("unknown model preset {s:?} (tiny | paper | wide)"))?,
+        None => ModelTopology::paper(),
+    };
     let cfg = TrainConfig {
         batch: args.get("batch", 4)?,
         iterations: args.get("iterations", 200)?,
@@ -146,21 +161,58 @@ fn cmd_train(args: &Args) -> Result<()> {
         save_every,
         checkpoint_dir: checkpoint_dir.map(PathBuf::from),
         metrics_out: args.flags.get("metrics-out").map(PathBuf::from),
+        model: model.clone(),
         ..TrainConfig::default().with_agents(agents)
     }
     .with_env(env);
-    // On --resume the run's identity (env/pruner/seed/agents) comes from
-    // the checkpoint header, so the banner prints the *effective* config.
+    // --print-plan: dump the compiled forward/backward layer plan as
+    // JSON (ops, shapes, masked layers, sparse/dense dispatch under the
+    // selected --exec) and exit without training.
+    if args.has("print-plan") {
+        let manifest = Manifest::load_or_builtin_model(Manifest::default_dir(), &cfg.model)?;
+        let batch = if cfg.batch_exec { cfg.batch } else { 1 };
+        print!("{}", plan::plan_report_json(&manifest, cfg.exec, cfg.agents, batch)?);
+        return Ok(());
+    }
+    // On --resume the run's identity (env/pruner/seed/agents/model)
+    // comes from the checkpoint header, so the banner prints the
+    // *effective* config.  An explicit --model that disagrees with the
+    // header is rejected, never silently overridden.
     let mut trainer = match args.flags.get("resume") {
         Some(path) => {
+            let ckpt = Checkpoint::read(path)?;
+            if model_s.is_some() && ckpt.meta.model != model {
+                return Err(anyhow!(
+                    "--model {} conflicts with the checkpoint's recorded topology {}; \
+                     drop --model or pass the matching preset",
+                    model.spec(),
+                    ckpt.meta.model.spec()
+                ));
+            }
             eprintln!("resuming from checkpoint {path}");
-            Trainer::from_default_artifacts_resumed(cfg, path)?
+            Trainer::resume_with_default_artifacts(cfg, &ckpt)?
         }
-        None => Trainer::from_default_artifacts(cfg)?,
+        None => {
+            let trainer = Trainer::from_default_artifacts(cfg)?;
+            // An artifacts manifest on disk pins the topology; an
+            // *explicit* --model that disagrees with it must error even
+            // when it names the default preset (which the loader cannot
+            // distinguish from "no flag").
+            if model_s.is_some() && trainer.cfg.model != model {
+                return Err(anyhow!(
+                    "--model {} conflicts with the artifacts manifest topology {}; \
+                     rebuild the artifacts for that topology or drop --model",
+                    model.spec(),
+                    trainer.cfg.model.spec()
+                ));
+            }
+            trainer
+        }
     };
     eprintln!(
-        "training IC3Net: env={} agents={} batch={} iterations={}..{} rollouts={} exec={} pruner={}",
+        "training IC3Net: env={} model={} agents={} batch={} iterations={}..{} rollouts={} exec={} pruner={}",
         trainer.cfg.env.name(),
+        trainer.cfg.model.spec(),
         trainer.cfg.agents,
         trainer.cfg.batch,
         trainer.start_iteration(),
@@ -215,12 +267,31 @@ fn cmd_eval(args: &Args, sustained: bool) -> Result<()> {
     };
     let intra_threads: usize = args.get("intra-threads", 1)?;
     let batch: usize = args.get("batch", 1)?;
-    let mut rt = Runtime::from_default_artifacts()?;
+    // The manifest is rebuilt from the topology the checkpoint header
+    // records — a `--model tiny` checkpoint serves without re-stating
+    // the preset, whatever lives in the artifacts directory.  An
+    // explicit --model that disagrees with the header is rejected, not
+    // silently ignored.
+    if let Some(s) = args.flags.get("model") {
+        let requested = ModelTopology::preset(s)
+            .ok_or_else(|| anyhow!("unknown model preset {s:?} (tiny | paper | wide)"))?;
+        if requested != ckpt.meta.model {
+            return Err(anyhow!(
+                "--model {} conflicts with the checkpoint's recorded topology {}; \
+                 drop --model (the manifest is rebuilt from the header automatically)",
+                requested.spec(),
+                ckpt.meta.model.spec()
+            ));
+        }
+    }
+    let manifest = Manifest::for_topology(Manifest::default_dir(), &ckpt.meta.model)?;
+    let mut rt = Runtime::new(manifest)?;
     let server = PolicyServer::from_checkpoint(&mut rt, &ckpt, exec, intra_threads, batch)?;
     eprintln!(
-        "serving checkpoint {path}: env={} iteration={} exec={} workers={workers} \
+        "serving checkpoint {path}: env={} model={} iteration={} exec={} workers={workers} \
          batch={batch} intra-threads={intra_threads}",
         server.env_name(),
+        ckpt.meta.model.spec(),
         ckpt.meta.iteration,
         exec.name()
     );
@@ -289,6 +360,8 @@ fn main() -> Result<()> {
             println!("usage: learning-group <train|eval|serve|roofline|accuracy|osel|balance|perf|resources> [flags]");
             println!("train flags: --agents A --batch B --iterations N --seed S --csv PATH");
             println!("             --env predator_prey|traffic_junction:easy|medium|hard");
+            println!("             --model tiny|paper|wide (layer-graph topology preset)");
+            println!("             --print-plan (dump the compiled layer plan as JSON and exit)");
             println!("             --rollouts R (parallel episode workers)");
             println!("             --exec sparse|dense (compressed vs dense-masked kernels)");
             println!("             --batch-exec (lockstep minibatch: one batched kernel call/step)");

@@ -22,6 +22,206 @@ pub struct Dims {
     pub episode_len: usize,
 }
 
+/// The model's layer-graph topology — everything the compiled
+/// execution plan (`runtime::plan`) derives the op list and every
+/// buffer layout from.  The manifest's optional `"model"` section sets
+/// `enc_widths`/`comm_rounds`; manifests without one (including every
+/// manifest the Python AOT path has ever dumped) default to the
+/// paper-shaped single encoder + single comm round.
+///
+/// Three presets are CLI-addressable via `--model`
+/// ([`ModelTopology::preset`]): `tiny` (H = 32, for fast end-to-end
+/// runs), `paper` (H = 128 — exactly the layout `python/compile/
+/// dims.py` defines, so the LSTM gate matrices are the paper's 128x512
+/// mask example), and `wide` (H = 256 with a two-layer encoder and two
+/// communication rounds — the capacity/perf stress preset).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelTopology {
+    /// Observation width per agent (fixed by the environment contract).
+    pub obs_dim: usize,
+    /// LSTM hidden width H.
+    pub hidden: usize,
+    /// Policy head width (≥ every environment's action count).
+    pub n_actions: usize,
+    /// Gate head width.
+    pub n_gate: usize,
+    /// Static episode length T.
+    pub episode_len: usize,
+    /// Widths of the tanh encoder MLP stack; the last must equal
+    /// `hidden` (the LSTM input `x = e [+ comm]` is hidden-wide).
+    pub enc_widths: Vec<usize>,
+    /// Gated communication rounds per step, each with its own masked
+    /// `hidden x hidden` matrix (0 = no communication network).  Round
+    /// 1 gathers the previous hidden state; every later round gathers
+    /// the agents' *updated* intermediate state — iterated message
+    /// passing, not parallel channels.
+    pub comm_rounds: usize,
+}
+
+impl ModelTopology {
+    /// The paper's IC3Net topology (`python/compile/dims.py`).
+    pub fn paper() -> Self {
+        ModelTopology {
+            obs_dim: 6,
+            hidden: 128,
+            n_actions: 5,
+            n_gate: 2,
+            episode_len: 20,
+            enc_widths: vec![128],
+            comm_rounds: 1,
+        }
+    }
+
+    /// Quarter-width preset for fast end-to-end runs and CI smoke.
+    pub fn tiny() -> Self {
+        ModelTopology { hidden: 32, enc_widths: vec![32], ..Self::paper() }
+    }
+
+    /// Double-width preset with a two-layer encoder and two
+    /// communication rounds — the model-size performance axis.
+    pub fn wide() -> Self {
+        ModelTopology {
+            hidden: 256,
+            enc_widths: vec![256, 256],
+            comm_rounds: 2,
+            ..Self::paper()
+        }
+    }
+
+    /// Parse a `--model` CLI value.
+    pub fn preset(name: &str) -> Option<Self> {
+        match name {
+            "tiny" => Some(Self::tiny()),
+            "paper" => Some(Self::paper()),
+            "wide" => Some(Self::wide()),
+            _ => None,
+        }
+    }
+
+    /// The preset name this topology equals, if any.
+    pub fn preset_name(&self) -> Option<&'static str> {
+        for name in ["tiny", "paper", "wide"] {
+            if Self::preset(name).as_ref() == Some(self) {
+                return Some(name);
+            }
+        }
+        None
+    }
+
+    /// Human/CLI-facing spec: the preset name when it is one, a full
+    /// field dump otherwise.
+    pub fn spec(&self) -> String {
+        match self.preset_name() {
+            Some(name) => name.to_string(),
+            None => format!(
+                "custom(obs={}, h={}, enc={:?}, comm={}, actions={}, gate={}, t={})",
+                self.obs_dim,
+                self.hidden,
+                self.enc_widths,
+                self.comm_rounds,
+                self.n_actions,
+                self.n_gate,
+                self.episode_len
+            ),
+        }
+    }
+
+    /// The [`Dims`] this topology implies.
+    pub fn dims(&self) -> Dims {
+        Dims {
+            obs_dim: self.obs_dim,
+            hidden: self.hidden,
+            n_actions: self.n_actions,
+            n_gate: self.n_gate,
+            episode_len: self.episode_len,
+        }
+    }
+
+    /// Reject malformed topologies with actionable errors.
+    pub fn validate(&self) -> Result<()> {
+        if self.obs_dim == 0 {
+            return Err(anyhow!("model topology: obs_dim must be positive"));
+        }
+        if self.hidden == 0 {
+            return Err(anyhow!("model topology: hidden width must be positive"));
+        }
+        if self.n_actions == 0 {
+            return Err(anyhow!("model topology: the policy head needs at least one action"));
+        }
+        if self.n_gate == 0 {
+            return Err(anyhow!("model topology: the gate head needs at least one output"));
+        }
+        if self.episode_len == 0 {
+            return Err(anyhow!("model topology: episode_len must be positive"));
+        }
+        if self.enc_widths.is_empty() {
+            return Err(anyhow!("model topology: the encoder stack needs at least one layer"));
+        }
+        if let Some(pos) = self.enc_widths.iter().position(|&w| w == 0) {
+            return Err(anyhow!("model topology: encoder layer {pos} has zero width"));
+        }
+        let last = *self.enc_widths.last().expect("non-empty encoder stack");
+        if last != self.hidden {
+            return Err(anyhow!(
+                "model topology: last encoder width {last} must equal hidden {} \
+                 (the LSTM input x = e [+ comm] is hidden-wide)",
+                self.hidden
+            ));
+        }
+        Ok(())
+    }
+
+    /// Flat-buffer parameter names of the encoder stack
+    /// (`w_enc`, `w_enc2`, …).
+    pub fn enc_layer_names(&self) -> Vec<String> {
+        (0..self.enc_widths.len())
+            .map(|i| if i == 0 { "w_enc".to_string() } else { format!("w_enc{}", i + 1) })
+            .collect()
+    }
+
+    /// Flat-buffer parameter names of the communication rounds
+    /// (`w_comm`, `w_comm2`, …).
+    pub fn comm_layer_names(&self) -> Vec<String> {
+        (0..self.comm_rounds)
+            .map(|r| if r == 0 { "w_comm".to_string() } else { format!("w_comm{}", r + 1) })
+            .collect()
+    }
+
+    /// Layer-name → shape in flat-buffer order (the generalisation of
+    /// `dims.param_specs`; the paper preset reproduces it exactly).
+    pub fn param_specs(&self) -> Vec<(String, Vec<usize>)> {
+        let h = self.hidden;
+        let mut specs: Vec<(String, Vec<usize>)> = Vec::new();
+        let mut prev = self.obs_dim;
+        for (name, &w) in self.enc_layer_names().into_iter().zip(&self.enc_widths) {
+            specs.push((name, vec![prev, w]));
+            prev = w;
+        }
+        for name in self.comm_layer_names() {
+            specs.push((name, vec![h, h]));
+        }
+        specs.push(("w_x".to_string(), vec![h, 4 * h]));
+        specs.push(("w_h".to_string(), vec![h, 4 * h]));
+        specs.push(("b_lstm".to_string(), vec![4 * h]));
+        specs.push(("w_pi".to_string(), vec![h, self.n_actions]));
+        specs.push(("b_pi".to_string(), vec![self.n_actions]));
+        specs.push(("w_v".to_string(), vec![h, 1]));
+        specs.push(("b_v".to_string(), vec![1]));
+        specs.push(("w_g".to_string(), vec![h, self.n_gate]));
+        specs.push(("b_g".to_string(), vec![self.n_gate]));
+        specs
+    }
+
+    /// Names of the FLGW-masked layers, in mask-buffer order.
+    pub fn masked_layer_names(&self) -> Vec<String> {
+        let mut names = self.enc_layer_names();
+        names.extend(self.comm_layer_names());
+        names.push("w_x".to_string());
+        names.push("w_h".to_string());
+        names
+    }
+}
+
 /// One FLGW-masked layer: an (rows x cols) weight matrix and where its
 /// mask lives in the flat mask vector.
 #[derive(Debug, Clone)]
@@ -86,6 +286,10 @@ pub struct Hyper {
 #[derive(Debug, Clone)]
 pub struct Manifest {
     pub dims: Dims,
+    /// The layer-graph topology the execution plan compiles from
+    /// (defaults to the paper shape when the manifest JSON has no
+    /// `"model"` section).
+    pub model: ModelTopology,
     pub param_size: usize,
     pub mask_size: usize,
     pub masked_layers: Vec<MaskedLayer>,
@@ -138,28 +342,8 @@ fn io_spec(v: &Json) -> Result<IoSpec> {
     })
 }
 
-/// The layers whose weight matrices are FLGW-masked (`dims.MASKED_LAYERS`).
-const MASKED_LAYER_NAMES: [&str; 4] = ["w_enc", "w_comm", "w_x", "w_h"];
-
-/// Parse the `{A}` / `{A}x{B}` suffix of a `policy_fwd_a…` artifact name
-/// into `(agents, batch)` (batch = 1 for the single-episode form).  The
-/// single source of the batched-name grammar — shared by the native-op
-/// parser and [`Manifest::synthesize_artifact`], so the two can never
-/// disagree on which names exist.
-pub(crate) fn parse_policy_fwd_suffix(rest: &str) -> Option<(usize, usize)> {
-    let (a, b) = match rest.split_once('x') {
-        Some((a_s, b_s)) => (a_s.parse::<usize>().ok()?, b_s.parse::<usize>().ok()?),
-        None => (rest.parse::<usize>().ok()?, 1),
-    };
-    (a > 0 && b > 0).then_some((a, b))
-}
-
 fn f32_spec(name: &str, shape: Vec<usize>) -> IoSpec {
     IoSpec { name: name.to_string(), shape, dtype: "f32".to_string() }
-}
-
-fn i32_spec(name: &str, shape: Vec<usize>) -> IoSpec {
-    IoSpec { name: name.to_string(), shape, dtype: "i32".to_string() }
 }
 
 impl Manifest {
@@ -175,6 +359,28 @@ impl Manifest {
             n_gate: req_usize(d, "n_gate")?,
             episode_len: req_usize(d, "episode_len")?,
         };
+
+        // Optional `"model"` section: the layer-graph topology.  Absent
+        // (every historical manifest, and everything aot.py dumps), the
+        // topology defaults to the paper shape the dims imply.
+        let default_model = ModelTopology {
+            obs_dim: dims.obs_dim,
+            hidden: dims.hidden,
+            n_actions: dims.n_actions,
+            n_gate: dims.n_gate,
+            episode_len: dims.episode_len,
+            enc_widths: vec![dims.hidden],
+            comm_rounds: 1,
+        };
+        let model = match v.get("model") {
+            None => default_model,
+            Some(mv) => ModelTopology {
+                enc_widths: usize_arr(req(mv, "enc_widths")?)?,
+                comm_rounds: req_usize(mv, "comm_rounds")?,
+                ..default_model
+            },
+        };
+        model.validate().context("manifest \"model\" section")?;
 
         let masked_layers = req(&v, "masked_layers")?
             .as_arr()
@@ -253,6 +459,7 @@ impl Manifest {
 
         Ok(Manifest {
             dims,
+            model,
             param_size: req_usize(&v, "param_size")?,
             mask_size: req_usize(&v, "mask_size")?,
             masked_layers,
@@ -283,11 +490,47 @@ impl Manifest {
     /// manifest is still an error — silent fallback would mask a broken
     /// `make artifacts` run.
     pub fn load_or_builtin(dir: impl AsRef<Path>) -> Result<Self> {
+        Self::load_or_builtin_model(dir, &ModelTopology::paper())
+    }
+
+    /// [`Manifest::load_or_builtin`] with an explicit model topology for
+    /// the builtin fallback (`--model`).  A manifest on disk still wins
+    /// — but requesting a non-default topology that disagrees with it is
+    /// an error, never a silent override.
+    pub fn load_or_builtin_model(dir: impl AsRef<Path>, model: &ModelTopology) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         if dir.join("manifest.json").is_file() {
-            return Self::load(dir);
+            let m = Self::load(&dir)?;
+            if *model != ModelTopology::paper() && m.model != *model {
+                return Err(anyhow!(
+                    "requested model topology {} conflicts with the artifacts manifest in \
+                     {dir:?} ({}); rebuild the artifacts for that topology or drop --model",
+                    model.spec(),
+                    m.model.spec()
+                ));
+            }
+            return Ok(m);
         }
-        let mut m = Self::builtin();
+        let mut m = Self::try_with_model(model.clone())?;
+        m.dir = dir;
+        Ok(m)
+    }
+
+    /// The manifest for a *recorded* topology (a checkpoint header):
+    /// the artifacts manifest when it matches, the builtin construction
+    /// otherwise.  Unlike [`Manifest::load_or_builtin_model`] this
+    /// never errors on a disagreeing artifacts directory — a checkpoint
+    /// pins its own topology, and `eval`/`serve`/`--resume` must be
+    /// able to rebuild it whatever happens to live in `artifacts/`.
+    pub fn for_topology(dir: impl AsRef<Path>, model: &ModelTopology) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        if dir.join("manifest.json").is_file() {
+            let m = Self::load(&dir)?;
+            if m.model == *model {
+                return Ok(m);
+            }
+        }
+        let mut m = Self::try_with_model(model.clone())?;
         m.dir = dir;
         Ok(m)
     }
@@ -298,43 +541,40 @@ impl Manifest {
     /// any artifacts on disk.  This is what the pure-Rust native runtime
     /// backend runs against when `make artifacts` has not been invoked.
     pub fn builtin() -> Self {
-        let dims = Dims { obs_dim: 6, hidden: 128, n_actions: 5, n_gate: 2, episode_len: 20 };
-        let h = dims.hidden;
-        // Layer-name -> shape, in flat-buffer order (dims.param_specs).
-        let specs: Vec<(&str, Vec<usize>)> = vec![
-            ("w_enc", vec![dims.obs_dim, h]),
-            ("w_comm", vec![h, h]),
-            ("w_x", vec![h, 4 * h]),
-            ("w_h", vec![h, 4 * h]),
-            ("b_lstm", vec![4 * h]),
-            ("w_pi", vec![h, dims.n_actions]),
-            ("b_pi", vec![dims.n_actions]),
-            ("w_v", vec![h, 1]),
-            ("b_v", vec![1]),
-            ("w_g", vec![h, dims.n_gate]),
-            ("b_g", vec![dims.n_gate]),
-        ];
+        Self::with_model(ModelTopology::paper())
+    }
+
+    /// [`Manifest::try_with_model`] for topologies already known valid
+    /// (the presets); panics on a malformed one.
+    pub fn with_model(model: ModelTopology) -> Self {
+        Self::try_with_model(model).expect("valid model topology")
+    }
+
+    /// Build the full manifest — parameter layout, masked-layer table,
+    /// grouping sizes and artifact specs — from a model topology.  This
+    /// is [`Manifest::builtin`] generalised over `--model tiny|paper|
+    /// wide` (and any custom topology).
+    pub fn try_with_model(model: ModelTopology) -> Result<Self> {
+        model.validate()?;
+        let dims = model.dims();
         let mut param_layout = Vec::new();
         let mut off = 0usize;
-        for (name, shape) in &specs {
-            param_layout.push(ParamEntry {
-                name: (*name).to_string(),
-                offset: off,
-                shape: shape.clone(),
-            });
-            off += shape.iter().product::<usize>();
+        for (name, shape) in model.param_specs() {
+            let size = shape.iter().product::<usize>();
+            param_layout.push(ParamEntry { name, offset: off, shape });
+            off += size;
         }
         let param_size = off;
 
         let mut masked_layers = Vec::new();
         let mut moff = 0usize;
-        for name in MASKED_LAYER_NAMES {
+        for name in model.masked_layer_names() {
             let entry = param_layout
                 .iter()
                 .find(|e| e.name == name)
                 .expect("masked layer in param layout");
             let (rows, cols) = (entry.shape[0], entry.shape[1]);
-            masked_layers.push(MaskedLayer { name: name.to_string(), rows, cols, offset: moff });
+            masked_layers.push(MaskedLayer { name, rows, cols, offset: moff });
             moff += rows * cols;
         }
         let mask_size = moff;
@@ -362,6 +602,7 @@ impl Manifest {
 
         let mut m = Manifest {
             dims,
+            model,
             param_size,
             mask_size,
             masked_layers,
@@ -375,36 +616,46 @@ impl Manifest {
             dir: PathBuf::new(),
         };
         let mut artifacts = BTreeMap::new();
+        // one plan compile serves every tabulated policy/grad spec
+        let plan = crate::runtime::plan::ForwardPlan::compile(&m)?;
         for &a in &agents {
-            for name in [format!("policy_fwd_a{a}"), format!("grad_episode_a{a}")] {
-                let spec = m.synthesize_artifact(&name).expect("builtin artifact spec");
-                artifacts.insert(name, spec);
-            }
+            let name = format!("policy_fwd_a{a}");
+            let spec = plan.policy_io(a, 1, format!("{name}.hlo.txt"));
+            artifacts.insert(name, spec);
+            let name = format!("grad_episode_a{a}");
+            let spec = plan.grad_io(a, format!("{name}.hlo.txt"));
+            artifacts.insert(name, spec);
         }
-        artifacts.insert(
-            "apply_update".to_string(),
-            m.synthesize_artifact("apply_update").expect("builtin artifact spec"),
-        );
+        artifacts.insert("apply_update".to_string(), m.synthesize_artifact("apply_update")?);
         for &g in &groups {
             for name in [format!("flgw_update_g{g}"), format!("mask_gen_g{g}")] {
-                let spec = m.synthesize_artifact(&name).expect("builtin artifact spec");
+                let spec = m.synthesize_artifact(&name)?;
                 artifacts.insert(name, spec);
             }
         }
         m.artifacts = artifacts;
-        m
+        Ok(m)
     }
 
-    /// Derive the I/O spec of a known artifact name from the model layout
-    /// alone — the schema the Python AOT path would have dumped for it.
-    /// Used by the native runtime backend for names the loaded manifest
-    /// does not tabulate (e.g. `flgw_update_g3`).
+    /// Derive the I/O spec of a known artifact name from the compiled
+    /// layer-graph plan — the schema the Python AOT path would have
+    /// dumped for it.  Used by the native runtime backend for names the
+    /// loaded manifest does not tabulate (e.g. `flgw_update_g3`, or any
+    /// batched `policy_fwd_a{A}x{B}` variant).  The name grammar and
+    /// the shape arithmetic both live in `runtime::plan`, so the spec
+    /// can never disagree with what the interpreter executes.
     pub fn synthesize_artifact(&self, name: &str) -> Result<ArtifactSpec> {
-        let d = &self.dims;
-        let (p, mk, t) = (self.param_size, self.mask_size, d.episode_len);
+        use crate::runtime::plan::{ForwardPlan, PlanOp};
+        let (p, mk) = (self.param_size, self.mask_size);
         let file = format!("{name}.hlo.txt");
-        if name == "apply_update" {
-            return Ok(ArtifactSpec {
+        match PlanOp::parse(name)? {
+            PlanOp::PolicyFwd { agents, batch } => {
+                Ok(ForwardPlan::compile(self)?.policy_io(agents, batch, file))
+            }
+            PlanOp::GradEpisode { agents } => {
+                Ok(ForwardPlan::compile(self)?.grad_io(agents, file))
+            }
+            PlanOp::ApplyUpdate => Ok(ArtifactSpec {
                 inputs: vec![
                     f32_spec("params", vec![p]),
                     f32_spec("grads", vec![p]),
@@ -412,78 +663,28 @@ impl Manifest {
                 ],
                 outputs: vec![f32_spec("params2", vec![p]), f32_spec("sq_avg2", vec![p])],
                 file,
-            });
-        }
-        if let Some(rest) = name.strip_prefix("policy_fwd_a") {
-            // `policy_fwd_a{A}` (one episode) or the batched lockstep
-            // variant `policy_fwd_a{A}x{B}` (B episodes per call): the
-            // activation block is `[B*A, ·]`, params/masks unchanged.
-            if let Some((a, b)) = parse_policy_fwd_suffix(rest) {
-                let rows = b * a;
-                return Ok(ArtifactSpec {
+            }),
+            PlanOp::FlgwUpdate { groups } => {
+                let s = self.grouping_size(groups)?;
+                Ok(ArtifactSpec {
                     inputs: vec![
-                        f32_spec("params", vec![p]),
-                        f32_spec("masks", vec![mk]),
-                        f32_spec("obs", vec![rows, d.obs_dim]),
-                        f32_spec("h", vec![rows, d.hidden]),
-                        f32_spec("c", vec![rows, d.hidden]),
-                        f32_spec("gate_prev", vec![rows]),
+                        f32_spec("grouping", vec![s]),
+                        f32_spec("dmasks", vec![mk]),
+                        f32_spec("sq_avg", vec![s]),
                     ],
-                    outputs: vec![
-                        f32_spec("logits", vec![rows, d.n_actions]),
-                        f32_spec("value", vec![rows]),
-                        f32_spec("gate_logits", vec![rows, d.n_gate]),
-                        f32_spec("h2", vec![rows, d.hidden]),
-                        f32_spec("c2", vec![rows, d.hidden]),
-                    ],
+                    outputs: vec![f32_spec("grouping2", vec![s]), f32_spec("sq_avg2", vec![s])],
                     file,
-                });
+                })
+            }
+            PlanOp::MaskGen { groups } => {
+                let s = self.grouping_size(groups)?;
+                Ok(ArtifactSpec {
+                    inputs: vec![f32_spec("grouping", vec![s])],
+                    outputs: vec![f32_spec("masks", vec![mk])],
+                    file,
+                })
             }
         }
-        if let Some(a) = name.strip_prefix("grad_episode_a").and_then(|s| s.parse::<usize>().ok())
-        {
-            return Ok(ArtifactSpec {
-                inputs: vec![
-                    f32_spec("params", vec![p]),
-                    f32_spec("masks", vec![mk]),
-                    f32_spec("obs_seq", vec![t, a, d.obs_dim]),
-                    i32_spec("act_seq", vec![t, a]),
-                    f32_spec("gate_seq", vec![t, a]),
-                    f32_spec("returns", vec![t]),
-                ],
-                outputs: vec![
-                    f32_spec("dparams", vec![p]),
-                    f32_spec("dmasks", vec![mk]),
-                    f32_spec("loss", vec![]),
-                    f32_spec("pol_loss", vec![]),
-                    f32_spec("val_loss", vec![]),
-                    f32_spec("entropy", vec![]),
-                ],
-                file,
-            });
-        }
-        if let Some(g) = name.strip_prefix("flgw_update_g").and_then(|s| s.parse::<usize>().ok())
-        {
-            let s = self.grouping_size(g)?;
-            return Ok(ArtifactSpec {
-                inputs: vec![
-                    f32_spec("grouping", vec![s]),
-                    f32_spec("dmasks", vec![mk]),
-                    f32_spec("sq_avg", vec![s]),
-                ],
-                outputs: vec![f32_spec("grouping2", vec![s]), f32_spec("sq_avg2", vec![s])],
-                file,
-            });
-        }
-        if let Some(g) = name.strip_prefix("mask_gen_g").and_then(|s| s.parse::<usize>().ok()) {
-            let s = self.grouping_size(g)?;
-            return Ok(ArtifactSpec {
-                inputs: vec![f32_spec("grouping", vec![s])],
-                outputs: vec![f32_spec("masks", vec![mk])],
-                file,
-            });
-        }
-        Err(anyhow!("no schema for artifact name {name:?}"))
     }
 
     /// Default artifacts directory: `$LEARNING_GROUP_ARTIFACTS` or
@@ -696,5 +897,96 @@ mod tests {
     fn scalar_output_has_one_element() {
         let spec = IoSpec { name: "loss".into(), shape: vec![], dtype: "f32".into() };
         assert_eq!(spec.elements(), 1);
+    }
+
+    #[test]
+    fn model_presets_round_trip_and_stay_distinct() {
+        for name in ["tiny", "paper", "wide"] {
+            let t = ModelTopology::preset(name).unwrap();
+            t.validate().unwrap();
+            assert_eq!(t.preset_name(), Some(name));
+            assert_eq!(t.spec(), name);
+        }
+        assert!(ModelTopology::preset("huge").is_none());
+        let custom = ModelTopology { hidden: 64, enc_widths: vec![64], ..ModelTopology::paper() };
+        assert_eq!(custom.preset_name(), None);
+        assert!(custom.spec().starts_with("custom("));
+    }
+
+    #[test]
+    fn preset_manifests_scale_the_layout() {
+        let paper = Manifest::builtin();
+        let tiny = Manifest::with_model(ModelTopology::tiny());
+        let wide = Manifest::with_model(ModelTopology::wide());
+        // paper == the historical builtin, bit for bit in layout terms
+        assert_eq!(paper.fingerprint(), Manifest::with_model(ModelTopology::paper()).fingerprint());
+        assert!(tiny.param_size < paper.param_size);
+        assert!(paper.param_size < wide.param_size);
+        assert_ne!(tiny.fingerprint(), paper.fingerprint());
+        assert_ne!(wide.fingerprint(), paper.fingerprint());
+        // wide: two encoder layers + two comm rounds ⇒ six masked layers
+        assert_eq!(wide.masked_layers.len(), 6);
+        assert!(wide.masked_layer("w_enc2").is_ok());
+        assert!(wide.masked_layer("w_comm2").is_ok());
+        assert_eq!(tiny.masked_layers.len(), 4);
+        // every preset tabulates the same artifact names
+        for name in ["policy_fwd_a3", "grad_episode_a8", "apply_update", "mask_gen_g4"] {
+            assert!(tiny.artifacts.contains_key(name), "{name}");
+            assert!(wide.artifacts.contains_key(name), "{name}");
+        }
+        // mask buffer covers exactly the masked layers at every preset
+        for m in [&tiny, &wide] {
+            let total: usize = m.masked_layers.iter().map(|l| l.size()).sum();
+            assert_eq!(total, m.mask_size);
+        }
+    }
+
+    #[test]
+    fn model_section_parses_and_is_validated() {
+        let with_model = SAMPLE.replacen(
+            "\"artifacts\"",
+            "\"model\": {\"enc_widths\": [128], \"comm_rounds\": 2},\n      \"artifacts\"",
+            1,
+        );
+        let m = Manifest::parse(&with_model).unwrap();
+        assert_eq!(m.model.comm_rounds, 2);
+        assert_eq!(m.model.enc_widths, vec![128]);
+        assert_eq!(m.model.hidden, 128);
+        // a model section that breaks the topology invariants is rejected
+        let bad = SAMPLE.replacen(
+            "\"artifacts\"",
+            "\"model\": {\"enc_widths\": [64], \"comm_rounds\": 1},\n      \"artifacts\"",
+            1,
+        );
+        let err = Manifest::parse(&bad).unwrap_err().to_string();
+        assert!(err.contains("model"), "{err}");
+    }
+
+    #[test]
+    fn for_topology_always_rebuilds_a_recorded_topology() {
+        // no artifacts directory: any topology rebuilds via the builtin
+        let dir = std::env::temp_dir().join("lg_no_artifacts_here");
+        let m = Manifest::for_topology(&dir, &ModelTopology::tiny()).unwrap();
+        assert_eq!(m.model, ModelTopology::tiny());
+        let m = Manifest::for_topology(&dir, &ModelTopology::wide()).unwrap();
+        assert_eq!(m.model, ModelTopology::wide());
+    }
+
+    #[test]
+    fn malformed_topologies_are_rejected_with_useful_errors() {
+        let cases: Vec<(ModelTopology, &str)> = vec![
+            (ModelTopology { hidden: 0, enc_widths: vec![0], ..ModelTopology::paper() }, "hidden"),
+            (ModelTopology { enc_widths: vec![], ..ModelTopology::paper() }, "encoder"),
+            (ModelTopology { enc_widths: vec![0, 128], ..ModelTopology::paper() }, "zero width"),
+            (ModelTopology { enc_widths: vec![64], ..ModelTopology::paper() }, "must equal hidden"),
+            (ModelTopology { n_actions: 0, ..ModelTopology::paper() }, "action"),
+            (ModelTopology { n_gate: 0, ..ModelTopology::paper() }, "gate"),
+            (ModelTopology { episode_len: 0, ..ModelTopology::paper() }, "episode_len"),
+            (ModelTopology { obs_dim: 0, ..ModelTopology::paper() }, "obs_dim"),
+        ];
+        for (topo, needle) in cases {
+            let err = Manifest::try_with_model(topo).unwrap_err().to_string();
+            assert!(err.contains(needle), "expected {needle:?} in {err:?}");
+        }
     }
 }

@@ -12,14 +12,17 @@ use anyhow::{anyhow, Result};
 
 use crate::manifest::{ArtifactSpec, Manifest};
 use crate::runtime::device::DeviceRepr;
-use crate::runtime::native::{self, NativeOp};
+use crate::runtime::native;
+use crate::runtime::plan::{PlanOp, Plans};
 use crate::runtime::sparse::SparseModel;
 use crate::runtime::{Arg, DeviceTensor, HostTensor};
 
 /// Backend-specific execution state.
 pub(crate) enum ExecBackend {
     /// Native op over the manifest layout (no artifacts needed).
-    Native { op: NativeOp, manifest: Arc<Manifest> },
+    /// `plans` carries the compiled layer plan for the ops that
+    /// interpret it (`policy_fwd`, `grad_episode`).
+    Native { op: PlanOp, manifest: Arc<Manifest>, plans: Option<Arc<Plans>> },
     /// Compiled HLO on the PJRT client.
     #[cfg(feature = "pjrt")]
     Pjrt(crate::runtime::pjrt::PjrtExecutable),
@@ -134,7 +137,7 @@ impl Executable {
             self.check_input(i, arg.len(), arg.dtype())?;
         }
         match &self.backend {
-            ExecBackend::Native { op, manifest } => {
+            ExecBackend::Native { op, manifest, plans } => {
                 // Sparse-exec attachment: a device tensor uploaded via
                 // `upload_sparse` carries the compressed-weight
                 // structure (the trainer attaches it to the masks); the
@@ -179,7 +182,7 @@ impl Executable {
                         },
                     }
                 }
-                let outs = native::execute(op, manifest, &views, sparse)?;
+                let outs = native::execute(op, manifest, plans.as_deref(), &views, sparse)?;
                 self.check_outputs(outs)
             }
             #[cfg(feature = "pjrt")]

@@ -2,10 +2,13 @@
 //!
 //! Two interchangeable backends sit behind one [`Executable`] API:
 //!
-//! * **Native** (default, always available) — `native` reimplements the
+//! * **Native** (default, always available) — `native` implements the
 //!   five artifact entry points (`policy_fwd`, `grad_episode`,
-//!   `apply_update`, `flgw_update`, `mask_gen`) in pure Rust against the
-//!   manifest layout.  No artifacts directory, no Python, no XLA.
+//!   `apply_update`, `flgw_update`, `mask_gen`) in pure Rust as an
+//!   interpreter over the typed layer plan ([`plan`]) compiled once
+//!   from the manifest's model topology (`--model tiny|paper|wide` or
+//!   a custom `"model"` manifest section).  No artifacts directory, no
+//!   Python, no XLA.
 //! * **PJRT** (`--features pjrt`, plus HLO artifacts from `make
 //!   artifacts`) — compiles the HLO *text* the Python compile path
 //!   lowers from JAX/Pallas and executes it through the PJRT CPU client,
@@ -38,11 +41,14 @@ mod executable;
 pub(crate) mod native;
 #[cfg(feature = "pjrt")]
 pub(crate) mod pjrt;
+pub mod plan;
 pub mod sparse;
+
 mod tensor;
 
 pub use device::{Arg, DeviceTensor};
 pub use executable::Executable;
+pub use plan::{BackwardPlan, ForwardPlan, LayerOp, PlanOp, Plans};
 pub use sparse::{ExecMode, SparseLayer, SparseModel};
 pub use tensor::HostTensor;
 
@@ -54,7 +60,6 @@ use anyhow::Result;
 use crate::manifest::Manifest;
 
 use executable::ExecBackend;
-use native::NativeOp;
 
 /// Executable loader + cache over a manifest.
 ///
@@ -63,6 +68,10 @@ use native::NativeOp;
 pub struct Runtime {
     manifest: Arc<Manifest>,
     cache: HashMap<String, Arc<Executable>>,
+    /// The forward/backward layer plan, compiled once from the manifest
+    /// on the first op that interprets it and shared by every loaded
+    /// executable.
+    plans: Option<Arc<Plans>>,
     #[cfg(feature = "pjrt")]
     client: Option<pjrt::PjrtClient>,
 }
@@ -74,6 +83,7 @@ impl Runtime {
         Ok(Runtime {
             manifest: Arc::new(manifest),
             cache: HashMap::new(),
+            plans: None,
             #[cfg(feature = "pjrt")]
             client: None,
         })
@@ -130,16 +140,43 @@ impl Runtime {
         }
         // Native path: derive the spec from the manifest when it is not
         // tabulated (e.g. a group count the Python side never dumped).
-        let op = NativeOp::parse(name)?;
+        let op = PlanOp::parse(name)?;
+        // policy_fwd / grad_episode interpret the compiled layer plan;
+        // the optimizer + grouping ops run straight off the manifest.
+        let plans = match op {
+            PlanOp::PolicyFwd { .. } | PlanOp::GradEpisode { .. } => Some(self.plans()?),
+            _ => None,
+        };
         let spec = match self.manifest.artifact(name) {
             Ok(s) => s.clone(),
-            Err(_) => self.manifest.synthesize_artifact(name)?,
+            // non-tabulated names: derive the spec from the plan we
+            // already hold instead of compiling a fresh one
+            Err(_) => match (&op, &plans) {
+                (PlanOp::PolicyFwd { agents, batch }, Some(p)) => {
+                    p.forward.policy_io(*agents, *batch, format!("{name}.hlo.txt"))
+                }
+                (PlanOp::GradEpisode { agents }, Some(p)) => {
+                    p.forward.grad_io(*agents, format!("{name}.hlo.txt"))
+                }
+                _ => self.manifest.synthesize_artifact(name)?,
+            },
         };
         Ok(Executable::new(
             name.to_string(),
             spec,
-            ExecBackend::Native { op, manifest: self.manifest.clone() },
+            ExecBackend::Native { op, manifest: self.manifest.clone(), plans },
         ))
+    }
+
+    /// The compiled forward/backward plan over this runtime's manifest
+    /// (compiled once, then shared).
+    pub fn plans(&mut self) -> Result<Arc<Plans>> {
+        if let Some(p) = &self.plans {
+            return Ok(p.clone());
+        }
+        let p = Arc::new(Plans::compile(&self.manifest)?);
+        self.plans = Some(p.clone());
+        Ok(p)
     }
 
     /// Number of loaded executables currently cached.

@@ -1,42 +1,53 @@
-//! Native runtime backend — the AOT artifacts' numerics in pure Rust.
+//! Native runtime backend — an interpreter over the compiled
+//! layer-graph plan (`runtime::plan`), in pure Rust.
 //!
 //! The PJRT path executes HLO text lowered from `python/compile/model.py`;
 //! this module implements the *same five entry points* directly on the
 //! flat parameter/mask buffers so the coordinator runs end-to-end with no
 //! artifacts directory and no XLA dependency (the offline default).  The
-//! contract is the manifest: layouts come from `param_layout` /
-//! `masked_layers`, hyper-parameters from `hyper`, so a manifest dumped
-//! by the Python side drives identical shapes here.
+//! contract is the manifest: the [`ForwardPlan`] is compiled once from
+//! its model topology and parameter layout, so a manifest dumped by the
+//! Python side drives identical shapes here — and `--model tiny|paper|
+//! wide` (or any custom topology) drives a different op list through
+//! the *same* kernel stages.
 //!
-//! Ops (named exactly like the artifacts):
-//! * `policy_fwd_a{A}` — one IC3Net step for A agents (encoder → gated
-//!   comm mean → masked LSTM → action/value/gate heads).
-//! * `policy_fwd_a{A}x{B}` — the **batched lockstep** variant: one step
-//!   for B independent episodes of A agents each, packed as a single
-//!   `[B·A, ·]` activation block.  Every kernel is row-independent, so
-//!   each episode's rows compute exactly what a separate
-//!   `policy_fwd_a{A}` call would have computed — the communication
-//!   mean is grouped per consecutive A-row episode block, never across
-//!   episodes.  Bit-identical to B separate calls by construction.
+//! Ops (named exactly like the artifacts; the grammar lives in
+//! [`PlanOp::parse`]):
+//! * `policy_fwd_a{A}` — one IC3Net step for A agents: the interpreter
+//!   walks the forward plan (tanh encoder stack → gated comm mean +
+//!   per-round masked matrices → masked LSTM → action/value/gate
+//!   heads).
+//! * `policy_fwd_a{A}x{B}` — the **batched lockstep** variant: the
+//!   identical plan on a `[B·A, ·]` activation block.  Every kernel is
+//!   row-independent; the only agent-coupling op, the communication
+//!   mean, is grouped per consecutive A-row episode block — so the
+//!   batched step is bit-identical to B separate calls by
+//!   construction (batching is pure row widening).
 //! * `grad_episode_a{A}` — REINFORCE-with-baseline gradients over one
-//!   stored episode via hand-rolled backpropagation through time,
-//!   returning both d/dparams and the d/dmask cotangent FLGW trains on.
+//!   stored episode: the forward plan runs T times storing every
+//!   step's activations, then the [`crate::runtime::plan::BackwardPlan`]
+//!   — the reverse walk of the same ops — runs T times, producing both
+//!   d/dparams and the d/dmask cotangent FLGW trains on.
 //! * `apply_update` — RMSprop with global-norm clipping.
 //! * `flgw_update_g{G}` — straight-through update of grouping matrices.
 //! * `mask_gen_g{G}` — masks from grouping matrices (argmax compare).
 //!
 //! Everything is plain `f32` slices and index loops: the hot shapes are
-//! small (A ≤ 10, H = 128), and keeping the kernels dependency-free is
-//! the point of this backend.
+//! small (A ≤ 10, H ≤ 256), and keeping the kernels dependency-free is
+//! the point of this backend.  One kernel pair serves every `Linear`
+//! stage of the plan — forward `x @ (W ⊙ M)` and backward
+//! `dY @ (W ⊙ M)ᵀ`, each with a dense ⊙-mask and an OSEL-sparse
+//! implementation — reused across forward, BPTT backward, single and
+//! batched execution.
 //!
-//! **Sparse execution.**  `policy_fwd` and `grad_episode` accept an
-//! optional [`SparseModel`] (attached to the masks upload by
-//! [`crate::runtime::Executable::upload_sparse`]): when present, the
-//! masked matmuls and the BPTT transposed products iterate only the
-//! surviving weights through the compressed structure — bit-identical
-//! to the dense ⊙-mask reference, because the skipped terms are exact
-//! `±0.0` additions and the surviving terms accumulate in the same
-//! order (see `runtime::sparse` and `rust/tests/sparse_parity.rs`).
+//! **Sparse execution.**  Each masked `Linear` stage is a dispatch
+//! point: when a [`SparseModel`] is attached to the masks upload
+//! ([`crate::runtime::Executable::upload_sparse`]), the stage iterates
+//! only the surviving weights through the compressed structure —
+//! bit-identical to the dense ⊙-mask reference, because the skipped
+//! terms are exact `±0.0` additions and the surviving terms accumulate
+//! in the same order (see `runtime::sparse` and
+//! `rust/tests/sparse_parity.rs`).
 //!
 //! **Intra-op parallelism.**  The sparse kernels additionally fan their
 //! activation rows out over scoped worker threads — one worker per core
@@ -55,63 +66,27 @@
 use anyhow::{anyhow, Result};
 
 use crate::manifest::Manifest;
+use crate::runtime::plan::{
+    Activation, CommSrc, ForwardPlan, LayerOp, ParamRef, PlanOp, Plans, SrcRef,
+};
 use crate::runtime::sparse::{SparseLayer, SparseModel};
 use crate::runtime::HostTensor;
 
-/// One native op, parsed from an artifact name.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub(crate) enum NativeOp {
-    /// `policy_fwd_a{A}` (`batch` = 1) or the batched lockstep variant
-    /// `policy_fwd_a{A}x{B}` (`batch` = B episodes per call).
-    PolicyFwd { agents: usize, batch: usize },
-    /// `grad_episode_a{A}`.
-    GradEpisode { agents: usize },
-    /// `apply_update`.
-    ApplyUpdate,
-    /// `flgw_update_g{G}`.
-    FlgwUpdate { groups: usize },
-    /// `mask_gen_g{G}`.
-    MaskGen { groups: usize },
-}
-
-impl NativeOp {
-    /// Parse an artifact name into the native op implementing it.
-    pub(crate) fn parse(name: &str) -> Result<Self> {
-        if name == "apply_update" {
-            return Ok(NativeOp::ApplyUpdate);
-        }
-        if let Some(rest) = name.strip_prefix("policy_fwd_a") {
-            // `policy_fwd_a{A}` or the batched `policy_fwd_a{A}x{B}` —
-            // one grammar, shared with `Manifest::synthesize_artifact`.
-            if let Some((agents, batch)) = crate::manifest::parse_policy_fwd_suffix(rest) {
-                return Ok(NativeOp::PolicyFwd { agents, batch });
-            }
-        }
-        if let Some(a) = name.strip_prefix("grad_episode_a").and_then(|s| s.parse().ok()) {
-            return Ok(NativeOp::GradEpisode { agents: a });
-        }
-        if let Some(g) = name.strip_prefix("flgw_update_g").and_then(|s| s.parse().ok()) {
-            return Ok(NativeOp::FlgwUpdate { groups: g });
-        }
-        if let Some(g) = name.strip_prefix("mask_gen_g").and_then(|s| s.parse().ok()) {
-            return Ok(NativeOp::MaskGen { groups: g });
-        }
-        Err(anyhow!("native backend has no op named {name:?}"))
-    }
-}
-
 /// Execute `op` on manifest-validated inputs (the [`super::Executable`]
 /// wrapper has already checked element counts and dtypes against the
-/// artifact spec).
+/// artifact spec).  `plans` carries the compiled forward/backward plan
+/// for the ops that interpret it (`policy_fwd`, `grad_episode`).
 pub(crate) fn execute(
-    op: &NativeOp,
+    op: &PlanOp,
     m: &Manifest,
+    plans: Option<&Plans>,
     inputs: &[&HostTensor],
     sparse: Option<&SparseModel>,
 ) -> Result<Vec<HostTensor>> {
+    let need_plan = || plans.ok_or_else(|| anyhow!("{op:?} needs a compiled layer plan"));
     match *op {
-        NativeOp::PolicyFwd { agents, batch } => policy_fwd(
-            m,
+        PlanOp::PolicyFwd { agents, batch } => policy_fwd(
+            &need_plan()?.forward,
             agents,
             batch,
             inputs[0].as_f32()?,
@@ -122,8 +97,9 @@ pub(crate) fn execute(
             inputs[5].as_f32()?,
             sparse,
         ),
-        NativeOp::GradEpisode { agents } => grad_episode(
+        PlanOp::GradEpisode { agents } => grad_episode(
             m,
+            need_plan()?,
             agents,
             inputs[0].as_f32()?,
             inputs[1].as_f32()?,
@@ -133,107 +109,20 @@ pub(crate) fn execute(
             inputs[5].as_f32()?,
             sparse,
         ),
-        NativeOp::ApplyUpdate => Ok(apply_update(
+        PlanOp::ApplyUpdate => Ok(apply_update(
             m,
             inputs[0].as_f32()?,
             inputs[1].as_f32()?,
             inputs[2].as_f32()?,
         )),
-        NativeOp::FlgwUpdate { groups } => flgw_update(
+        PlanOp::FlgwUpdate { groups } => flgw_update(
             m,
             groups,
             inputs[0].as_f32()?,
             inputs[1].as_f32()?,
             inputs[2].as_f32()?,
         ),
-        NativeOp::MaskGen { groups } => mask_gen(m, groups, inputs[0].as_f32()?),
-    }
-}
-
-// ---------------------------------------------------------------------
-// layout views
-
-/// Named views into the flat parameter / mask buffers.
-struct Net<'a> {
-    obs_dim: usize,
-    hidden: usize,
-    n_actions: usize,
-    n_gate: usize,
-    w_enc: &'a [f32],
-    m_enc: &'a [f32],
-    w_comm: &'a [f32],
-    m_comm: &'a [f32],
-    w_x: &'a [f32],
-    m_x: &'a [f32],
-    w_h: &'a [f32],
-    m_h: &'a [f32],
-    b_lstm: &'a [f32],
-    w_pi: &'a [f32],
-    b_pi: &'a [f32],
-    w_v: &'a [f32],
-    b_v: &'a [f32],
-    w_g: &'a [f32],
-    b_g: &'a [f32],
-    /// Compressed structures per masked layer (sparse exec mode;
-    /// `None` = dense ⊙-mask reference).
-    s_enc: Option<&'a SparseLayer>,
-    s_comm: Option<&'a SparseLayer>,
-    s_x: Option<&'a SparseLayer>,
-    s_h: Option<&'a SparseLayer>,
-}
-
-/// (offset, size) of a named entry in the flat parameter buffer.
-fn pentry(m: &Manifest, name: &str) -> Result<(usize, usize)> {
-    let e = m
-        .param_layout
-        .iter()
-        .find(|e| e.name == name)
-        .ok_or_else(|| anyhow!("no param layer {name:?} in manifest"))?;
-    Ok((e.offset, e.size()))
-}
-
-fn pslice<'a>(m: &Manifest, params: &'a [f32], name: &str) -> Result<&'a [f32]> {
-    let (off, size) = pentry(m, name)?;
-    Ok(&params[off..off + size])
-}
-
-fn mslice<'a>(m: &Manifest, masks: &'a [f32], name: &str) -> Result<&'a [f32]> {
-    let l = m.masked_layer(name)?;
-    Ok(&masks[l.offset..l.offset + l.size()])
-}
-
-impl<'a> Net<'a> {
-    fn new(
-        m: &Manifest,
-        params: &'a [f32],
-        masks: &'a [f32],
-        sparse: Option<&'a SparseModel>,
-    ) -> Result<Self> {
-        Ok(Net {
-            obs_dim: m.dims.obs_dim,
-            hidden: m.dims.hidden,
-            n_actions: m.dims.n_actions,
-            n_gate: m.dims.n_gate,
-            w_enc: pslice(m, params, "w_enc")?,
-            m_enc: mslice(m, masks, "w_enc")?,
-            w_comm: pslice(m, params, "w_comm")?,
-            m_comm: mslice(m, masks, "w_comm")?,
-            w_x: pslice(m, params, "w_x")?,
-            m_x: mslice(m, masks, "w_x")?,
-            w_h: pslice(m, params, "w_h")?,
-            m_h: mslice(m, masks, "w_h")?,
-            b_lstm: pslice(m, params, "b_lstm")?,
-            w_pi: pslice(m, params, "w_pi")?,
-            b_pi: pslice(m, params, "b_pi")?,
-            w_v: pslice(m, params, "w_v")?,
-            b_v: pslice(m, params, "b_v")?,
-            w_g: pslice(m, params, "w_g")?,
-            b_g: pslice(m, params, "b_g")?,
-            s_enc: sparse.and_then(|s| s.layer("w_enc")),
-            s_comm: sparse.and_then(|s| s.layer("w_comm")),
-            s_x: sparse.and_then(|s| s.layer("w_x")),
-            s_h: sparse.and_then(|s| s.layer("w_h")),
-        })
+        PlanOp::MaskGen { groups } => mask_gen(m, groups, inputs[0].as_f32()?),
     }
 }
 
@@ -560,17 +449,57 @@ fn argmax_cols(m: &[f32], rows: usize, cols: usize) -> Vec<usize> {
 }
 
 // ---------------------------------------------------------------------
-// forward
+// plan interpreter — shared execution state
 
-/// Everything one IC3Net step computes, kept for the backward pass.
+/// Per-call interpreter state: the plan plus parameter/mask slices and
+/// the per-op compressed structures (resolved once, not per step).
+struct PlanExec<'a> {
+    plan: &'a ForwardPlan,
+    params: &'a [f32],
+    masks: &'a [f32],
+    /// `sparse_layers[i]` is the compressed structure of `ops[i]` when
+    /// that op is a masked `Linear` executing in sparse mode.
+    sparse_layers: Vec<Option<&'a SparseLayer>>,
+}
+
+impl<'a> PlanExec<'a> {
+    fn new(
+        plan: &'a ForwardPlan,
+        params: &'a [f32],
+        masks: &'a [f32],
+        sparse: Option<&'a SparseModel>,
+    ) -> Self {
+        let sparse_layers = plan
+            .ops
+            .iter()
+            .map(|op| match op {
+                LayerOp::Linear { w, .. } if w.mask_offset.is_some() => {
+                    sparse.and_then(|s| s.layer(&w.name))
+                }
+                _ => None,
+            })
+            .collect();
+        PlanExec { plan, params, masks, sparse_layers }
+    }
+
+    /// The flat-parameter slice of a compiled reference.
+    fn wslice(&self, w: &ParamRef) -> &'a [f32] {
+        &self.params[w.offset..w.offset + w.size()]
+    }
+
+    /// The flat-mask slice of a masked layer reference.
+    fn mslice(&self, w: &ParamRef) -> &'a [f32] {
+        let off = w.mask_offset.expect("masked layer reference");
+        &self.masks[off..off + w.size()]
+    }
+}
+
+/// Everything one plan step computes, kept for the backward pass:
+/// every activation slot plus the LSTM/head internals.
 struct StepActs {
-    /// tanh-encoded observations (A x H).
-    e: Vec<f32>,
-    /// Mean of the other agents' gated hidden states (A x H).
-    comm_in: Vec<f32>,
-    /// LSTM input e + comm (A x H).
-    x: Vec<f32>,
-    /// Post-activation LSTM gates (A x H each).
+    /// Slot values (post-activation), indexed like `ForwardPlan::slots`.
+    slots: Vec<Vec<f32>>,
+    /// Post-activation LSTM gates (rows x H each).
     gi: Vec<f32>,
     gf: Vec<f32>,
     gg: Vec<f32>,
@@ -614,14 +543,15 @@ fn comm_input(h: &[f32], gate_prev: &[f32], batch: usize, a: usize, hd: usize) -
     out
 }
 
-/// One full IC3Net step for `batch` lockstep episodes of `a` agents
-/// each (`batch` = 1 is the plain single-episode step).  All inputs and
-/// outputs pack the episodes as consecutive `a`-row blocks; every
-/// kernel below is row-independent, and the only agent-coupling op —
-/// the communication mean — is grouped per block, so the batched step
-/// is bit-identical to `batch` separate calls.
+/// One full plan step for `batch` lockstep episodes of `a` agents each
+/// (`batch` = 1 is the plain single-episode step): walk the forward
+/// ops in order.  All inputs and outputs pack the episodes as
+/// consecutive `a`-row blocks; every kernel is row-independent, and
+/// the only agent-coupling op — the communication mean — is grouped
+/// per block, so the batched step is bit-identical to `batch` separate
+/// calls.
 fn step_forward(
-    net: &Net<'_>,
+    ex: &PlanExec<'_>,
     batch: usize,
     a: usize,
     obs: &[f32],
@@ -629,29 +559,13 @@ fn step_forward(
     c: &[f32],
     gate_prev: &[f32],
 ) -> StepActs {
-    let hd = net.hidden;
-    let (nact, ngate) = (net.n_actions, net.n_gate);
+    let plan = ex.plan;
+    let hd = plan.hidden;
+    let (nact, ngate) = (plan.n_actions, plan.n_gate);
     let rows = batch * a;
 
-    let mut e = vec![0.0f32; rows * hd];
-    mm_masked(&mut e, obs, net.w_enc, net.m_enc, net.s_enc, rows, net.obs_dim, hd);
-    for v in e.iter_mut() {
-        *v = v.tanh();
-    }
-
-    let comm_in = comm_input(h, gate_prev, batch, a, hd);
-    let mut x = e.clone();
-    mm_masked(&mut x, &comm_in, net.w_comm, net.m_comm, net.s_comm, rows, hd, hd);
-
-    let mut gates = vec![0.0f32; rows * 4 * hd];
-    mm_masked(&mut gates, &x, net.w_x, net.m_x, net.s_x, rows, hd, 4 * hd);
-    mm_masked(&mut gates, h, net.w_h, net.m_h, net.s_h, rows, hd, 4 * hd);
-    for i in 0..rows {
-        for j in 0..4 * hd {
-            gates[i * 4 * hd + j] += net.b_lstm[j];
-        }
-    }
-
+    let mut slots: Vec<Vec<f32>> =
+        plan.slots.iter().map(|s| vec![0.0f32; rows * s.width]).collect();
     let mut gi = vec![0.0f32; rows * hd];
     let mut gf = vec![0.0f32; rows * hd];
     let mut gg = vec![0.0f32; rows * hd];
@@ -659,55 +573,127 @@ fn step_forward(
     let mut c2 = vec![0.0f32; rows * hd];
     let mut tanh_c2 = vec![0.0f32; rows * hd];
     let mut h2 = vec![0.0f32; rows * hd];
-    for i in 0..rows {
-        let base = i * 4 * hd;
-        for j in 0..hd {
-            let idx = i * hd + j;
-            // gate order i, f, g, o (dims.py / init forget-bias slice)
-            let iv = sigmoid(gates[base + j]);
-            let fv = sigmoid(gates[base + hd + j]);
-            let gv = gates[base + 2 * hd + j].tanh();
-            let ov = sigmoid(gates[base + 3 * hd + j]);
-            let cv = fv * c[idx] + iv * gv;
-            let tc = cv.tanh();
-            gi[idx] = iv;
-            gf[idx] = fv;
-            gg[idx] = gv;
-            go[idx] = ov;
-            c2[idx] = cv;
-            tanh_c2[idx] = tc;
-            h2[idx] = ov * tc;
-        }
-    }
-
     let mut logits = vec![0.0f32; rows * nact];
-    matmul_into(&mut logits, &h2, net.w_pi, rows, hd, nact);
-    for i in 0..rows {
-        for j in 0..nact {
-            logits[i * nact + j] += net.b_pi[j];
-        }
-    }
     let mut value = vec![0.0f32; rows];
-    for i in 0..rows {
-        let mut acc = net.b_v[0];
-        for k in 0..hd {
-            acc += h2[i * hd + k] * net.w_v[k];
-        }
-        value[i] = acc;
-    }
     let mut glogits = vec![0.0f32; rows * ngate];
-    matmul_into(&mut glogits, &h2, net.w_g, rows, hd, ngate);
-    for i in 0..rows {
-        for j in 0..ngate {
-            glogits[i * ngate + j] += net.b_g[j];
+
+    for (oi, op) in plan.ops.iter().enumerate() {
+        match op {
+            LayerOp::Linear { w, src, dst, act, .. } => {
+                // take the destination out so the source slot can be
+                // borrowed from the same table (src != dst by
+                // construction)
+                let mut dstv = std::mem::take(&mut slots[*dst]);
+                {
+                    let srcv: &[f32] = match src {
+                        SrcRef::Obs => obs,
+                        SrcRef::HPrev => h,
+                        SrcRef::Slot(i) => &slots[*i],
+                    };
+                    match w.mask_offset {
+                        Some(_) => mm_masked(
+                            &mut dstv,
+                            srcv,
+                            ex.wslice(w),
+                            ex.mslice(w),
+                            ex.sparse_layers[oi],
+                            rows,
+                            w.rows,
+                            w.cols,
+                        ),
+                        None => matmul_into(&mut dstv, srcv, ex.wslice(w), rows, w.rows, w.cols),
+                    }
+                }
+                if *act == Activation::Tanh {
+                    for v in dstv.iter_mut() {
+                        *v = v.tanh();
+                    }
+                }
+                slots[*dst] = dstv;
+            }
+            LayerOp::CommMean { src, dst } => {
+                let out = {
+                    let gathered: &[f32] = match src {
+                        CommSrc::HPrev => h,
+                        CommSrc::Slot(i) => &slots[*i],
+                    };
+                    comm_input(gathered, gate_prev, batch, a, hd)
+                };
+                slots[*dst] = out;
+            }
+            LayerOp::Copy { src, dst } => {
+                let srcv = std::mem::take(&mut slots[*src]);
+                slots[*dst].copy_from_slice(&srcv);
+                slots[*src] = srcv;
+            }
+            LayerOp::LstmCell { gates, b_lstm } => {
+                let bl = ex.wslice(b_lstm);
+                let g4 = &mut slots[*gates];
+                for i in 0..rows {
+                    for j in 0..4 * hd {
+                        g4[i * 4 * hd + j] += bl[j];
+                    }
+                }
+                for i in 0..rows {
+                    let base = i * 4 * hd;
+                    for j in 0..hd {
+                        let idx = i * hd + j;
+                        // gate order i, f, g, o (dims.py / init forget-bias slice)
+                        let iv = sigmoid(g4[base + j]);
+                        let fv = sigmoid(g4[base + hd + j]);
+                        let gv = g4[base + 2 * hd + j].tanh();
+                        let ov = sigmoid(g4[base + 3 * hd + j]);
+                        let cv = fv * c[idx] + iv * gv;
+                        let tc = cv.tanh();
+                        gi[idx] = iv;
+                        gf[idx] = fv;
+                        gg[idx] = gv;
+                        go[idx] = ov;
+                        c2[idx] = cv;
+                        tanh_c2[idx] = tc;
+                        h2[idx] = ov * tc;
+                    }
+                }
+                // The cell is the gates slot's only consumer (by plan
+                // construction: its feeding Linears have no activation
+                // and nothing reads it downstream — the backward pass
+                // recomputes dgates from the post-activation values).
+                // Free it so grad_episode's per-step activation store
+                // does not retain rows x 4H dead floats across T steps.
+                slots[*gates] = Vec::new();
+            }
+            LayerOp::Heads(hs) => {
+                matmul_into(&mut logits, &h2, ex.wslice(&hs.w_pi), rows, hd, nact);
+                let b_pi = ex.wslice(&hs.b_pi);
+                for i in 0..rows {
+                    for j in 0..nact {
+                        logits[i * nact + j] += b_pi[j];
+                    }
+                }
+                let (w_v, b_v) = (ex.wslice(&hs.w_v), ex.wslice(&hs.b_v));
+                for i in 0..rows {
+                    let mut acc = b_v[0];
+                    for k in 0..hd {
+                        acc += h2[i * hd + k] * w_v[k];
+                    }
+                    value[i] = acc;
+                }
+                matmul_into(&mut glogits, &h2, ex.wslice(&hs.w_g), rows, hd, ngate);
+                let b_g = ex.wslice(&hs.b_g);
+                for i in 0..rows {
+                    for j in 0..ngate {
+                        glogits[i * ngate + j] += b_g[j];
+                    }
+                }
+            }
         }
     }
 
-    StepActs { e, comm_in, x, gi, gf, gg, go, c2, tanh_c2, h2, logits, value, glogits }
+    StepActs { slots, gi, gf, gg, go, c2, tanh_c2, h2, logits, value, glogits }
 }
 
 fn policy_fwd(
-    m: &Manifest,
+    plan: &ForwardPlan,
     a: usize,
     batch: usize,
     params: &[f32],
@@ -718,8 +704,8 @@ fn policy_fwd(
     gate_prev: &[f32],
     sparse: Option<&SparseModel>,
 ) -> Result<Vec<HostTensor>> {
-    let net = Net::new(m, params, masks, sparse)?;
-    let acts = step_forward(&net, batch, a, obs, h, c, gate_prev);
+    let ex = PlanExec::new(plan, params, masks, sparse);
+    let acts = step_forward(&ex, batch, a, obs, h, c, gate_prev);
     Ok(vec![
         HostTensor::F32(acts.logits),
         HostTensor::F32(acts.value),
@@ -730,7 +716,7 @@ fn policy_fwd(
 }
 
 // ---------------------------------------------------------------------
-// backward (BPTT)
+// backward (BPTT) — the reverse walk of the forward plan
 
 /// Accumulate a masked layer's raw weight-gradient into both the
 /// parameter gradient (⊙ mask, so pruned weights get exactly zero) and
@@ -738,25 +724,23 @@ fn policy_fwd(
 fn masked_grad(
     dparams: &mut [f32],
     dmasks: &mut [f32],
-    man: &Manifest,
-    name: &str,
+    w: &ParamRef,
     raw: &[f32],
-    w: &[f32],
+    wv: &[f32],
     mk: &[f32],
-) -> Result<()> {
-    let (po, ps) = pentry(man, name)?;
-    let l = man.masked_layer(name)?;
-    let dp = &mut dparams[po..po + ps];
-    let dm = &mut dmasks[l.offset..l.offset + l.size()];
+) {
+    let moff = w.mask_offset.expect("masked layer reference");
+    let dp = &mut dparams[w.offset..w.offset + w.size()];
+    let dm = &mut dmasks[moff..moff + w.size()];
     for idx in 0..raw.len() {
         dp[idx] += raw[idx] * mk[idx];
-        dm[idx] += raw[idx] * w[idx];
+        dm[idx] += raw[idx] * wv[idx];
     }
-    Ok(())
 }
 
 fn grad_episode(
     m: &Manifest,
+    plans: &Plans,
     a: usize,
     params: &[f32],
     masks: &[f32],
@@ -766,10 +750,11 @@ fn grad_episode(
     returns: &[f32],
     sparse: Option<&SparseModel>,
 ) -> Result<Vec<HostTensor>> {
-    let d = m.dims.clone();
-    let (hd, nact, ngate, t_len) = (d.hidden, d.n_actions, d.n_gate, d.episode_len);
+    let plan = &plans.forward;
+    let (hd, nact, ngate) = (plan.hidden, plan.n_actions, plan.n_gate);
+    let (obs_dim, t_len) = (plan.obs_dim, plan.episode_len);
     let hy = m.hyper.clone();
-    let net = Net::new(m, params, masks, sparse)?;
+    let ex = PlanExec::new(plan, params, masks, sparse);
 
     // ---- forward, storing every step's activations and carry inputs
     let mut acts: Vec<StepActs> = Vec::with_capacity(t_len);
@@ -780,21 +765,26 @@ fn grad_episode(
     let mut c = vec![0.0f32; a * hd];
     let mut gate_prev = vec![1.0f32; a]; // first step: everyone communicates
     for t in 0..t_len {
-        let obs = &obs_seq[t * a * d.obs_dim..(t + 1) * a * d.obs_dim];
+        let obs = &obs_seq[t * a * obs_dim..(t + 1) * a * obs_dim];
         h_ins.push(h.clone());
         c_ins.push(c.clone());
         gate_prevs.push(gate_prev.clone());
-        let sa = step_forward(&net, 1, a, obs, &h, &c, &gate_prev);
+        let sa = step_forward(&ex, 1, a, obs, &h, &c, &gate_prev);
         h.copy_from_slice(&sa.h2);
         c.copy_from_slice(&sa.c2);
         gate_prev.copy_from_slice(&gate_seq[t * a..(t + 1) * a]);
         acts.push(sa);
     }
 
-    // ---- backward through time
+    // ---- backward through time: per step, execute the backward plan —
+    // the reverse walk of the forward ops.  Every parameter/mask
+    // gradient slice is written by exactly one stage, and slot/carry
+    // cotangents accumulate additively in reverse dependency order, so
+    // the walk is bitwise identical to the hand-scheduled kernel it
+    // replaced on the paper preset.
     let norm = 1.0 / ((t_len * a) as f32);
-    let mut dparams = vec![0.0f32; m.param_size];
-    let mut dmasks = vec![0.0f32; m.mask_size];
+    let mut dparams = vec![0.0f32; plan.param_size];
+    let mut dmasks = vec![0.0f32; plan.mask_size];
     let mut dh_next = vec![0.0f32; a * hd];
     let mut dc_next = vec![0.0f32; a * hd];
     let (mut pol_sum, mut val_sum, mut ent_sum) = (0.0f32, 0.0f32, 0.0f32);
@@ -802,150 +792,246 @@ fn grad_episode(
     for t in (0..t_len).rev() {
         let sa = &acts[t];
         let (h_in, c_in, gp) = (&h_ins[t], &c_ins[t], &gate_prevs[t]);
-        let obs = &obs_seq[t * a * d.obs_dim..(t + 1) * a * d.obs_dim];
+        let obs = &obs_seq[t * a * obs_dim..(t + 1) * a * obs_dim];
         let ret = returns[t];
 
-        // -- heads: loss terms and logit cotangents
-        let mut dlogits = vec![0.0f32; a * nact];
-        let mut dglogits = vec![0.0f32; a * ngate];
-        let mut dvalue = vec![0.0f32; a];
-        for i in 0..a {
-            let (probs, logp) = softmax_logp(&sa.logits[i * nact..(i + 1) * nact]);
-            let (gprobs, glogp) = softmax_logp(&sa.glogits[i * ngate..(i + 1) * ngate]);
-            let act = (act_seq[t * a + i].max(0) as usize).min(nact - 1);
-            let gate = (gate_seq[t * a + i] as usize).min(ngate - 1);
-            let value = sa.value[i];
-            let adv = ret - value; // stop-gradient
-
-            pol_sum += -(logp[act] * adv) - hy.gate_coef * glogp[gate] * adv;
-            val_sum += (value - ret) * (value - ret);
-            let ent: f32 = -probs.iter().zip(&logp).map(|(p, l)| p * l).sum::<f32>();
-            ent_sum += ent;
-
-            for k in 0..nact {
-                let ind = if k == act { 1.0 } else { 0.0 };
-                // policy term + entropy-bonus term of the total loss
-                dlogits[i * nact + k] = norm * adv * (probs[k] - ind)
-                    + hy.entropy_coef * norm * probs[k] * (logp[k] + ent);
-            }
-            for k in 0..ngate {
-                let ind = if k == gate { 1.0 } else { 0.0 };
-                dglogits[i * ngate + k] = norm * hy.gate_coef * adv * (gprobs[k] - ind);
-            }
-            dvalue[i] = hy.value_coef * norm * 2.0 * (value - ret);
-        }
-
-        // -- head parameter gradients
-        {
-            let (off, size) = pentry(m, "w_pi")?;
-            xt_dy_into(&mut dparams[off..off + size], &sa.h2, &dlogits, a, hd, nact);
-            let (off, _) = pentry(m, "b_pi")?;
-            for i in 0..a {
-                for j in 0..nact {
-                    dparams[off + j] += dlogits[i * nact + j];
-                }
-            }
-            let (off, _) = pentry(m, "w_v")?;
-            for i in 0..a {
-                for k in 0..hd {
-                    dparams[off + k] += sa.h2[i * hd + k] * dvalue[i];
-                }
-            }
-            let (off, _) = pentry(m, "b_v")?;
-            for i in 0..a {
-                dparams[off] += dvalue[i];
-            }
-            let (off, size) = pentry(m, "w_g")?;
-            xt_dy_into(&mut dparams[off..off + size], &sa.h2, &dglogits, a, hd, ngate);
-            let (off, _) = pentry(m, "b_g")?;
-            for i in 0..a {
-                for j in 0..ngate {
-                    dparams[off + j] += dglogits[i * ngate + j];
-                }
-            }
-        }
-
-        // -- dL/dh2: heads plus the carry from step t+1
-        let mut dh2 = dh_next.clone();
-        dy_wt_into(&mut dh2, &dlogits, net.w_pi, a, hd, nact);
-        dy_wt_into(&mut dh2, &dglogits, net.w_g, a, hd, ngate);
-        for i in 0..a {
-            for k in 0..hd {
-                dh2[i * hd + k] += dvalue[i] * net.w_v[k];
-            }
-        }
-
-        // -- LSTM cell backward
-        let mut dgates = vec![0.0f32; a * 4 * hd];
-        let mut dc_prev = vec![0.0f32; a * hd];
-        for i in 0..a {
-            let base = i * 4 * hd;
-            for j in 0..hd {
-                let idx = i * hd + j;
-                let (iv, fv, gv, ov) = (sa.gi[idx], sa.gf[idx], sa.gg[idx], sa.go[idx]);
-                let tc = sa.tanh_c2[idx];
-                let d_o = dh2[idx] * tc;
-                let dc2 = dh2[idx] * ov * (1.0 - tc * tc) + dc_next[idx];
-                let d_f = dc2 * c_in[idx];
-                dc_prev[idx] = dc2 * fv;
-                let d_i = dc2 * gv;
-                let d_g = dc2 * iv;
-                dgates[base + j] = d_i * iv * (1.0 - iv);
-                dgates[base + hd + j] = d_f * fv * (1.0 - fv);
-                dgates[base + 2 * hd + j] = d_g * (1.0 - gv * gv);
-                dgates[base + 3 * hd + j] = d_o * ov * (1.0 - ov);
-            }
-        }
-        {
-            let (off, _) = pentry(m, "b_lstm")?;
-            for i in 0..a {
-                for j in 0..4 * hd {
-                    dparams[off + j] += dgates[i * 4 * hd + j];
-                }
-            }
-        }
-        // The raw weight-gradient products stay dense on purpose: the
-        // mask cotangent needs d/dmask at *every* position (unmasking a
-        // weight is exactly what FLGW trains on), so there is nothing to
-        // skip.  The transposed products below carry the sparse path.
-        let mut raw = vec![0.0f32; hd * 4 * hd];
-        xt_dy_into(&mut raw, &sa.x, &dgates, a, hd, 4 * hd);
-        masked_grad(&mut dparams, &mut dmasks, m, "w_x", &raw, net.w_x, net.m_x)?;
-        raw.iter_mut().for_each(|v| *v = 0.0);
-        xt_dy_into(&mut raw, h_in, &dgates, a, hd, 4 * hd);
-        masked_grad(&mut dparams, &mut dmasks, m, "w_h", &raw, net.w_h, net.m_h)?;
-
-        let mut dx = vec![0.0f32; a * hd];
-        dy_wt_mm(&mut dx, &dgates, net.w_x, net.m_x, net.s_x, a, hd, 4 * hd);
+        // per-step cotangent state: one buffer per slot + the carries
+        let mut d_slots: Vec<Vec<f32>> =
+            plan.slots.iter().map(|s| vec![0.0f32; a * s.width]).collect();
+        let mut dh2 = vec![0.0f32; a * hd];
         let mut dh_prev = vec![0.0f32; a * hd];
-        dy_wt_mm(&mut dh_prev, &dgates, net.w_h, net.m_h, net.s_h, a, hd, 4 * hd);
+        let mut dc_prev = vec![0.0f32; a * hd];
 
-        // -- encoder branch: x = tanh(obs @ W_enc) + comm
-        let mut dpre = vec![0.0f32; a * hd];
-        for idx in 0..a * hd {
-            dpre[idx] = dx[idx] * (1.0 - sa.e[idx] * sa.e[idx]);
-        }
-        let mut raw_enc = vec![0.0f32; d.obs_dim * hd];
-        xt_dy_into(&mut raw_enc, obs, &dpre, a, d.obs_dim, hd);
-        masked_grad(&mut dparams, &mut dmasks, m, "w_enc", &raw_enc, net.w_enc, net.m_enc)?;
+        for stage in &plans.backward.stages {
+            match &plan.ops[stage.op] {
+                LayerOp::Heads(hs) => {
+                    // -- heads: loss terms and logit cotangents
+                    let mut dlogits = vec![0.0f32; a * nact];
+                    let mut dglogits = vec![0.0f32; a * ngate];
+                    let mut dvalue = vec![0.0f32; a];
+                    for i in 0..a {
+                        let (probs, logp) = softmax_logp(&sa.logits[i * nact..(i + 1) * nact]);
+                        let (gprobs, glogp) =
+                            softmax_logp(&sa.glogits[i * ngate..(i + 1) * ngate]);
+                        let act = (act_seq[t * a + i].max(0) as usize).min(nact - 1);
+                        let gate = (gate_seq[t * a + i] as usize).min(ngate - 1);
+                        let value = sa.value[i];
+                        let adv = ret - value; // stop-gradient
 
-        // -- comm branch: comm = comm_in @ W_comm
-        let mut raw_comm = vec![0.0f32; hd * hd];
-        xt_dy_into(&mut raw_comm, &sa.comm_in, &dx, a, hd, hd);
-        masked_grad(&mut dparams, &mut dmasks, m, "w_comm", &raw_comm, net.w_comm, net.m_comm)?;
-        let mut dcomm_in = vec![0.0f32; a * hd];
-        dy_wt_mm(&mut dcomm_in, &dx, net.w_comm, net.m_comm, net.s_comm, a, hd, hd);
+                        pol_sum += -(logp[act] * adv) - hy.gate_coef * glogp[gate] * adv;
+                        val_sum += (value - ret) * (value - ret);
+                        let ent: f32 =
+                            -probs.iter().zip(&logp).map(|(p, l)| p * l).sum::<f32>();
+                        ent_sum += ent;
 
-        // -- comm_in -> previous hidden state (exclude-self mean)
-        let denom = (a.max(2) - 1) as f32;
-        for j in 0..hd {
-            let mut sum = 0.0f32;
-            for i in 0..a {
-                sum += dcomm_in[i * hd + j];
-            }
-            for i in 0..a {
-                let dgated = (sum - dcomm_in[i * hd + j]) / denom;
-                dh_prev[i * hd + j] += gp[i] * dgated;
+                        for k in 0..nact {
+                            let ind = if k == act { 1.0 } else { 0.0 };
+                            // policy term + entropy-bonus term of the total loss
+                            dlogits[i * nact + k] = norm * adv * (probs[k] - ind)
+                                + hy.entropy_coef * norm * probs[k] * (logp[k] + ent);
+                        }
+                        for k in 0..ngate {
+                            let ind = if k == gate { 1.0 } else { 0.0 };
+                            dglogits[i * ngate + k] =
+                                norm * hy.gate_coef * adv * (gprobs[k] - ind);
+                        }
+                        dvalue[i] = hy.value_coef * norm * 2.0 * (value - ret);
+                    }
+
+                    // -- head parameter gradients
+                    {
+                        let (off, size) = (hs.w_pi.offset, hs.w_pi.size());
+                        xt_dy_into(&mut dparams[off..off + size], &sa.h2, &dlogits, a, hd, nact);
+                        let off = hs.b_pi.offset;
+                        for i in 0..a {
+                            for j in 0..nact {
+                                dparams[off + j] += dlogits[i * nact + j];
+                            }
+                        }
+                        let off = hs.w_v.offset;
+                        for i in 0..a {
+                            for k in 0..hd {
+                                dparams[off + k] += sa.h2[i * hd + k] * dvalue[i];
+                            }
+                        }
+                        let off = hs.b_v.offset;
+                        for i in 0..a {
+                            dparams[off] += dvalue[i];
+                        }
+                        let (off, size) = (hs.w_g.offset, hs.w_g.size());
+                        xt_dy_into(&mut dparams[off..off + size], &sa.h2, &dglogits, a, hd, ngate);
+                        let off = hs.b_g.offset;
+                        for i in 0..a {
+                            for j in 0..ngate {
+                                dparams[off + j] += dglogits[i * ngate + j];
+                            }
+                        }
+                    }
+
+                    // -- dL/dh2: heads plus the carry from step t+1
+                    dh2.copy_from_slice(&dh_next);
+                    dy_wt_into(&mut dh2, &dlogits, ex.wslice(&hs.w_pi), a, hd, nact);
+                    dy_wt_into(&mut dh2, &dglogits, ex.wslice(&hs.w_g), a, hd, ngate);
+                    let w_v = ex.wslice(&hs.w_v);
+                    for i in 0..a {
+                        for k in 0..hd {
+                            dh2[i * hd + k] += dvalue[i] * w_v[k];
+                        }
+                    }
+                }
+                LayerOp::LstmCell { gates, b_lstm } => {
+                    // -- LSTM cell backward
+                    let mut dgates = std::mem::take(&mut d_slots[*gates]);
+                    for i in 0..a {
+                        let base = i * 4 * hd;
+                        for j in 0..hd {
+                            let idx = i * hd + j;
+                            let (iv, fv, gv, ov) =
+                                (sa.gi[idx], sa.gf[idx], sa.gg[idx], sa.go[idx]);
+                            let tc = sa.tanh_c2[idx];
+                            let d_o = dh2[idx] * tc;
+                            let dc2 = dh2[idx] * ov * (1.0 - tc * tc) + dc_next[idx];
+                            let d_f = dc2 * c_in[idx];
+                            dc_prev[idx] = dc2 * fv;
+                            let d_i = dc2 * gv;
+                            let d_g = dc2 * iv;
+                            dgates[base + j] = d_i * iv * (1.0 - iv);
+                            dgates[base + hd + j] = d_f * fv * (1.0 - fv);
+                            dgates[base + 2 * hd + j] = d_g * (1.0 - gv * gv);
+                            dgates[base + 3 * hd + j] = d_o * ov * (1.0 - ov);
+                        }
+                    }
+                    {
+                        let off = b_lstm.offset;
+                        for i in 0..a {
+                            for j in 0..4 * hd {
+                                dparams[off + j] += dgates[i * 4 * hd + j];
+                            }
+                        }
+                    }
+                    d_slots[*gates] = dgates;
+                }
+                LayerOp::Linear { w, src, dst, act, .. } => {
+                    // activation backward (tanh reads the stored
+                    // post-activation slot; None passes the cotangent
+                    // through verbatim — taken, not cloned, and put
+                    // back below).  `dst != src` by plan construction.
+                    let d_dst = std::mem::take(&mut d_slots[*dst]);
+                    let dpre_tanh: Vec<f32>;
+                    let dpre: &[f32] = match act {
+                        Activation::Tanh => {
+                            let vals = &sa.slots[*dst];
+                            dpre_tanh = d_dst
+                                .iter()
+                                .zip(vals)
+                                .map(|(&d, &v)| d * (1.0 - v * v))
+                                .collect();
+                            &dpre_tanh
+                        }
+                        Activation::None => &d_dst,
+                    };
+                    // raw weight-gradient product.  It stays dense on
+                    // purpose for masked layers: the mask cotangent
+                    // needs d/dmask at *every* position (unmasking a
+                    // weight is exactly what FLGW trains on), so there
+                    // is nothing to skip.  The transposed products
+                    // below carry the sparse path.
+                    let srcv: &[f32] = match src {
+                        SrcRef::Obs => obs,
+                        SrcRef::HPrev => h_in,
+                        SrcRef::Slot(i) => &sa.slots[*i],
+                    };
+                    let mut raw = vec![0.0f32; w.size()];
+                    xt_dy_into(&mut raw, srcv, dpre, a, w.rows, w.cols);
+                    match w.mask_offset {
+                        Some(_) => masked_grad(
+                            &mut dparams,
+                            &mut dmasks,
+                            w,
+                            &raw,
+                            ex.wslice(w),
+                            ex.mslice(w),
+                        ),
+                        None => {
+                            let dp = &mut dparams[w.offset..w.offset + w.size()];
+                            for (d, r) in dp.iter_mut().zip(&raw) {
+                                *d += r;
+                            }
+                        }
+                    }
+                    // input cotangent through the (masked) transposed
+                    // product — the sparse-dispatch point of the
+                    // backward pass
+                    match src {
+                        SrcRef::Obs => {}
+                        SrcRef::HPrev => match w.mask_offset {
+                            Some(_) => dy_wt_mm(
+                                &mut dh_prev,
+                                dpre,
+                                ex.wslice(w),
+                                ex.mslice(w),
+                                ex.sparse_layers[stage.op],
+                                a,
+                                w.rows,
+                                w.cols,
+                            ),
+                            None => {
+                                dy_wt_into(&mut dh_prev, dpre, ex.wslice(w), a, w.rows, w.cols)
+                            }
+                        },
+                        SrcRef::Slot(i) => {
+                            let mut dsrc = std::mem::take(&mut d_slots[*i]);
+                            match w.mask_offset {
+                                Some(_) => dy_wt_mm(
+                                    &mut dsrc,
+                                    dpre,
+                                    ex.wslice(w),
+                                    ex.mslice(w),
+                                    ex.sparse_layers[stage.op],
+                                    a,
+                                    w.rows,
+                                    w.cols,
+                                ),
+                                None => {
+                                    dy_wt_into(&mut dsrc, dpre, ex.wslice(w), a, w.rows, w.cols)
+                                }
+                            }
+                            d_slots[*i] = dsrc;
+                        }
+                    }
+                    d_slots[*dst] = d_dst;
+                }
+                LayerOp::Copy { src, dst } => {
+                    let dd = std::mem::take(&mut d_slots[*dst]);
+                    for (s, d) in d_slots[*src].iter_mut().zip(&dd) {
+                        *s += d;
+                    }
+                    d_slots[*dst] = dd;
+                }
+                LayerOp::CommMean { src, dst } => {
+                    // -- comm_in -> gathered state (exclude-self mean
+                    // backward): into the h carry for round 1, into the
+                    // updated-x cotangent for iterated rounds
+                    let dcomm = std::mem::take(&mut d_slots[*dst]);
+                    let denom = (a.max(2) - 1) as f32;
+                    {
+                        let dtarget: &mut [f32] = match src {
+                            CommSrc::HPrev => &mut dh_prev,
+                            CommSrc::Slot(i) => &mut d_slots[*i],
+                        };
+                        for j in 0..hd {
+                            let mut sum = 0.0f32;
+                            for i in 0..a {
+                                sum += dcomm[i * hd + j];
+                            }
+                            for i in 0..a {
+                                let dgated = (sum - dcomm[i * hd + j]) / denom;
+                                dtarget[i * hd + j] += gp[i] * dgated;
+                            }
+                        }
+                    }
+                    d_slots[*dst] = dcomm;
+                }
             }
         }
 
@@ -1094,31 +1180,8 @@ fn mask_gen(m: &Manifest, g: usize, grouping: &[f32]) -> Result<Vec<HostTensor>>
 mod tests {
     use super::*;
 
-    #[test]
-    fn parses_artifact_names() {
-        assert_eq!(NativeOp::parse("apply_update").unwrap(), NativeOp::ApplyUpdate);
-        assert_eq!(
-            NativeOp::parse("policy_fwd_a3").unwrap(),
-            NativeOp::PolicyFwd { agents: 3, batch: 1 }
-        );
-        assert_eq!(
-            NativeOp::parse("policy_fwd_a3x16").unwrap(),
-            NativeOp::PolicyFwd { agents: 3, batch: 16 }
-        );
-        assert_eq!(
-            NativeOp::parse("grad_episode_a10").unwrap(),
-            NativeOp::GradEpisode { agents: 10 }
-        );
-        assert_eq!(
-            NativeOp::parse("flgw_update_g4").unwrap(),
-            NativeOp::FlgwUpdate { groups: 4 }
-        );
-        assert_eq!(NativeOp::parse("mask_gen_g8").unwrap(), NativeOp::MaskGen { groups: 8 });
-        assert!(NativeOp::parse("policy_fwd_aX").is_err());
-        assert!(NativeOp::parse("policy_fwd_a3x").is_err());
-        assert!(NativeOp::parse("policy_fwd_ax4").is_err());
-        assert!(NativeOp::parse("policy_fwd_a3x0").is_err());
-        assert!(NativeOp::parse("nope").is_err());
+    fn plans(m: &Manifest) -> Plans {
+        Plans::compile(m).expect("plan compiles")
     }
 
     #[test]
@@ -1167,11 +1230,12 @@ mod tests {
         assert_eq!(argmax_cols(&m, 2, 3), vec![1, 0, 1]);
     }
 
-    /// Finite-difference check of the full BPTT path on a tiny manifest —
-    /// the native backend's correctness anchor.
+    /// Finite-difference check of the full plan-driven BPTT path on the
+    /// builtin manifest — the native backend's correctness anchor.
     #[test]
     fn grad_episode_matches_finite_differences() {
         let man = Manifest::builtin();
+        let pl = plans(&man);
         let a = 3usize;
         let d = man.dims.clone();
         let mut rng = crate::util::Pcg32::seeded(17);
@@ -1185,10 +1249,12 @@ mod tests {
         let ret: Vec<f32> = (0..t).map(|i| 0.05 * i as f32).collect();
 
         let loss_of = |p: &[f32]| -> f32 {
-            let outs = grad_episode(&man, a, p, &masks, &obs, &act, &gate, &ret, None).unwrap();
+            let outs =
+                grad_episode(&man, &pl, a, p, &masks, &obs, &act, &gate, &ret, None).unwrap();
             outs[2].scalar_f32().unwrap()
         };
-        let outs = grad_episode(&man, a, &params, &masks, &obs, &act, &gate, &ret, None).unwrap();
+        let outs =
+            grad_episode(&man, &pl, a, &params, &masks, &obs, &act, &gate, &ret, None).unwrap();
         let dparams = outs[0].as_f32().unwrap().to_vec();
         // probe a few parameters spread across layers
         let probes = [
@@ -1216,6 +1282,7 @@ mod tests {
     #[test]
     fn masked_weights_get_zero_gradient() {
         let man = Manifest::builtin();
+        let pl = plans(&man);
         let a = 3usize;
         let d = man.dims.clone();
         let mut rng = crate::util::Pcg32::seeded(23);
@@ -1232,11 +1299,16 @@ mod tests {
         let act = vec![1i32; t * a];
         let gate = vec![1.0f32; t * a];
         let ret: Vec<f32> = (0..t).map(|i| 0.1 * i as f32).collect();
-        let outs = grad_episode(&man, a, &params, &masks, &obs, &act, &gate, &ret, None).unwrap();
+        let outs =
+            grad_episode(&man, &pl, a, &params, &masks, &obs, &act, &gate, &ret, None).unwrap();
         let dparams = outs[0].as_f32().unwrap();
         for l in &man.masked_layers {
-            let (po, ps) = pentry(&man, &l.name).unwrap();
-            let wgrad = &dparams[po..po + ps];
+            let e = man
+                .param_layout
+                .iter()
+                .find(|e| e.name == l.name)
+                .expect("masked layer in param layout");
+            let wgrad = &dparams[e.offset..e.offset + e.size()];
             let mk = &masks[l.offset..l.offset + l.size()];
             for (gv, mv) in wgrad.iter().zip(mk) {
                 if *mv == 0.0 {
@@ -1281,6 +1353,8 @@ mod tests {
     #[test]
     fn batched_policy_fwd_matches_per_episode_calls() {
         let man = Manifest::builtin();
+        let pl = plans(&man);
+        let plan = &pl.forward;
         let d = man.dims.clone();
         let (a, b) = (3usize, 4usize);
         let mut rng = crate::util::Pcg32::seeded(41);
@@ -1294,14 +1368,14 @@ mod tests {
         let gate: Vec<f32> = (0..b * a).map(|_| f32::from(rng.next_f32() < 0.7)).collect();
 
         let reference =
-            policy_fwd(&man, a, b, &params, &mask, &obs, &h, &c, &gate, None).unwrap();
+            policy_fwd(plan, a, b, &params, &mask, &obs, &h, &c, &gate, None).unwrap();
 
         // sparse path, 1 vs 4 intra-op cores: both must equal the dense
         // batched reference exactly
         for cores in [1usize, 4] {
             let sm = SparseModel::from_dense_masks(&man, &mask, cores).unwrap();
             let sparse_out =
-                policy_fwd(&man, a, b, &params, &mask, &obs, &h, &c, &gate, Some(&sm))
+                policy_fwd(plan, a, b, &params, &mask, &obs, &h, &c, &gate, Some(&sm))
                     .unwrap();
             for (r, s) in reference.iter().zip(&sparse_out) {
                 assert_eq!(r, s, "sparse batched forward, cores={cores}");
@@ -1312,7 +1386,7 @@ mod tests {
         let widths = [d.n_actions, 1usize, d.n_gate, d.hidden, d.hidden];
         for e in 0..b {
             let single = policy_fwd(
-                &man,
+                plan,
                 a,
                 1,
                 &params,
@@ -1391,6 +1465,63 @@ mod tests {
                 let expect = f32::from(ig_idx[r] == og_idx[j]);
                 assert_eq!(masks[l.offset + r * l.cols + j], expect);
             }
+        }
+    }
+
+    /// A deeper topology (two encoder layers, two comm rounds) runs
+    /// through the same interpreter, and its sparse path stays
+    /// bit-identical to the dense-masked reference on every layer —
+    /// including the new `w_enc2`/`w_comm2` dispatch points.
+    #[test]
+    fn deeper_topology_sparse_parity() {
+        use crate::manifest::ModelTopology;
+        let topo = ModelTopology {
+            obs_dim: 6,
+            hidden: 24,
+            n_actions: 5,
+            n_gate: 2,
+            episode_len: 6,
+            enc_widths: vec![16, 24],
+            comm_rounds: 2,
+        };
+        let man = Manifest::try_with_model(topo).unwrap();
+        let pl = plans(&man);
+        let a = 3usize;
+        let mut rng = crate::util::Pcg32::seeded(67);
+        let params: Vec<f32> =
+            (0..man.param_size).map(|_| rng.next_normal() * 0.1).collect();
+        let mask: Vec<f32> =
+            (0..man.mask_size).map(|_| f32::from(rng.next_f32() < 0.4)).collect();
+        let obs: Vec<f32> = (0..a * man.dims.obs_dim).map(|_| rng.next_f32()).collect();
+        let h: Vec<f32> = (0..a * man.dims.hidden).map(|_| rng.next_normal() * 0.2).collect();
+        let c: Vec<f32> = (0..a * man.dims.hidden).map(|_| rng.next_normal() * 0.2).collect();
+        let gate = vec![1.0f32; a];
+        let dense =
+            policy_fwd(&pl.forward, a, 1, &params, &mask, &obs, &h, &c, &gate, None).unwrap();
+        let sm = SparseModel::from_dense_masks(&man, &mask, 2).unwrap();
+        let sparse =
+            policy_fwd(&pl.forward, a, 1, &params, &mask, &obs, &h, &c, &gate, Some(&sm))
+                .unwrap();
+        for (d, s) in dense.iter().zip(&sparse) {
+            assert_eq!(d, s);
+        }
+        // grad path too: sparse == dense on dparams, dmasks and losses
+        let t = man.dims.episode_len;
+        let obs_seq: Vec<f32> =
+            (0..t * a * man.dims.obs_dim).map(|_| rng.next_f32()).collect();
+        let act_seq = vec![1i32; t * a];
+        let gate_seq = vec![1.0f32; t * a];
+        let ret: Vec<f32> = (0..t).map(|i| 0.1 * i as f32).collect();
+        let gd = grad_episode(
+            &man, &pl, a, &params, &mask, &obs_seq, &act_seq, &gate_seq, &ret, None,
+        )
+        .unwrap();
+        let gs = grad_episode(
+            &man, &pl, a, &params, &mask, &obs_seq, &act_seq, &gate_seq, &ret, Some(&sm),
+        )
+        .unwrap();
+        for (d, s) in gd.iter().zip(&gs) {
+            assert_eq!(d, s);
         }
     }
 }

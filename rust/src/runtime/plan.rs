@@ -1,0 +1,833 @@
+//! The layer-graph execution plan — a typed IR compiled once from the
+//! [`Manifest`], interpreted by the native backend.
+//!
+//! Before this module existed, `policy_fwd`/`grad_episode` were two
+//! monolithic kernels with the IC3Net topology (encoder width, hidden
+//! size, comm structure, head sizes) baked in, dispatched by
+//! string-parsing artifact names.  The plan splits that into three
+//! explicit layers:
+//!
+//! 1. **Op grammar** — [`PlanOp::parse`] is the single home of the
+//!    artifact-name grammar (`policy_fwd_a{A}`, the batched lockstep
+//!    variant `policy_fwd_a{A}x{B}`, `grad_episode_a{A}`,
+//!    `apply_update`, `flgw_update_g{G}`, `mask_gen_g{G}`), shared by
+//!    the runtime loader and [`Manifest::synthesize_artifact`] so the
+//!    two can never disagree on which names exist.
+//! 2. **Forward IR** — [`ForwardPlan::compile`] turns the manifest's
+//!    [`crate::manifest::ModelTopology`] + parameter layout into a flat list of
+//!    [`LayerOp`]s over named activation slots: the tanh encoder stack,
+//!    the gated communication mean and its per-round masked matrices,
+//!    the masked LSTM cell, and the policy/value/gate heads.  Every
+//!    [`ParamRef`] is resolved to flat-buffer offsets at compile time
+//!    (shape-checked against `param_layout`/`masked_layers`, so a
+//!    manifest whose tables disagree with its topology is rejected with
+//!    a useful error), and every masked `Linear` is a **sparse-dispatch
+//!    point**: at execution it runs either the OSEL-compressed kernel
+//!    or the dense ⊙-mask reference, per [`crate::runtime::ExecMode`].
+//! 3. **Backward IR** — [`BackwardPlan::compile`] is the reverse walk
+//!    of the forward ops, each stage annotated with the parameter
+//!    gradients, mask cotangents and carry/slot cotangents it
+//!    produces.  The BPTT interpreter in `runtime::native` executes
+//!    exactly this walk.
+//!
+//! **Batching is row widening.**  The plan is expressed per activation
+//! *row*; `policy_fwd_a{A}` runs it on `A` rows and the batched
+//! lockstep variant `policy_fwd_a{A}x{B}` on `B·A` rows of the same
+//! plan — the only row-coupled op, [`LayerOp::CommMean`], groups per
+//! consecutive `A`-row episode block.  [`ForwardPlan::policy_io`]
+//! derives both I/O specs from that one rule, which is what deleted
+//! the duplicated single/batched spec synthesis from the manifest.
+//!
+//! **Parity contract.**  For the `paper` preset the compiled plan
+//! replays the pre-refactor kernels' arithmetic in the identical
+//! order, so plan-driven execution is bitwise identical to the old
+//! megakernels (`rust/tests/sparse_parity.rs`,
+//! `rust/tests/batched_exec.rs`, `rust/tests/checkpoint.rs` all run
+//! unmodified).
+//!
+//! `--print-plan` dumps [`plan_report_json`] — ops, shapes, masked
+//! layers and the sparse/dense dispatch choice per stage — for docs
+//! and bug reports.
+
+use anyhow::{anyhow, Result};
+
+use crate::manifest::{ArtifactSpec, IoSpec, Manifest};
+use crate::runtime::sparse::ExecMode;
+
+// ---------------------------------------------------------------------
+// op grammar
+
+/// One native entry point, parsed from an artifact name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanOp {
+    /// `policy_fwd_a{A}` (`batch` = 1) or the batched lockstep variant
+    /// `policy_fwd_a{A}x{B}` (`batch` = B episodes per call).
+    PolicyFwd { agents: usize, batch: usize },
+    /// `grad_episode_a{A}`.
+    GradEpisode { agents: usize },
+    /// `apply_update`.
+    ApplyUpdate,
+    /// `flgw_update_g{G}`.
+    FlgwUpdate { groups: usize },
+    /// `mask_gen_g{G}`.
+    MaskGen { groups: usize },
+}
+
+/// Parse the `{A}` / `{A}x{B}` suffix of a `policy_fwd_a…` name into
+/// `(agents, batch)` (batch = 1 for the single-episode form).
+fn parse_policy_fwd_suffix(rest: &str) -> Option<(usize, usize)> {
+    let (a, b) = match rest.split_once('x') {
+        Some((a_s, b_s)) => (a_s.parse::<usize>().ok()?, b_s.parse::<usize>().ok()?),
+        None => (rest.parse::<usize>().ok()?, 1),
+    };
+    (a > 0 && b > 0).then_some((a, b))
+}
+
+impl PlanOp {
+    /// Parse an artifact name into the op implementing it — the single
+    /// source of the artifact-name grammar.
+    pub fn parse(name: &str) -> Result<Self> {
+        if name == "apply_update" {
+            return Ok(PlanOp::ApplyUpdate);
+        }
+        if let Some(rest) = name.strip_prefix("policy_fwd_a") {
+            if let Some((agents, batch)) = parse_policy_fwd_suffix(rest) {
+                return Ok(PlanOp::PolicyFwd { agents, batch });
+            }
+        }
+        if let Some(a) = name.strip_prefix("grad_episode_a").and_then(|s| s.parse().ok()) {
+            return Ok(PlanOp::GradEpisode { agents: a });
+        }
+        if let Some(g) = name.strip_prefix("flgw_update_g").and_then(|s| s.parse().ok()) {
+            return Ok(PlanOp::FlgwUpdate { groups: g });
+        }
+        if let Some(g) = name.strip_prefix("mask_gen_g").and_then(|s| s.parse().ok()) {
+            return Ok(PlanOp::MaskGen { groups: g });
+        }
+        Err(anyhow!("no op named {name:?} in the artifact grammar"))
+    }
+}
+
+// ---------------------------------------------------------------------
+// forward IR
+
+/// Elementwise activation applied after a [`LayerOp::Linear`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    None,
+    Tanh,
+}
+
+impl Activation {
+    /// JSON-facing name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Activation::None => "none",
+            Activation::Tanh => "tanh",
+        }
+    }
+}
+
+/// Where a [`LayerOp::Linear`] reads its activation rows from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SrcRef {
+    /// The `obs` kernel input (`[rows, obs_dim]`).
+    Obs,
+    /// The `h` carry input (`[rows, hidden]`) — the previous step's
+    /// hidden state.
+    HPrev,
+    /// An activation slot computed by an earlier op.
+    Slot(usize),
+}
+
+/// What a [`LayerOp::CommMean`] gathers from: the first round reads
+/// the `h` carry (IC3Net's communication input); later rounds read the
+/// agents' *updated* intermediate state `x`, making multi-round
+/// topologies genuine iterated message passing rather than a sum of
+/// parallel channels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommSrc {
+    /// The `h` carry input (round 1).
+    HPrev,
+    /// An activation slot (rounds ≥ 2 gather from `x`).
+    Slot(usize),
+}
+
+/// A parameter tensor resolved to its place in the flat buffers at
+/// plan-compile time: weight matrices carry `(rows, cols)` row-major,
+/// biases are `rows == 1`.  `mask_offset` is present iff the layer is
+/// FLGW-masked — exactly the ops that dispatch sparse-vs-dense.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamRef {
+    pub name: String,
+    /// Offset into the flat parameter buffer.
+    pub offset: usize,
+    /// Input width (k) of a weight matrix; 1 for biases.
+    pub rows: usize,
+    /// Output width (n) of a weight matrix; the length for biases.
+    pub cols: usize,
+    /// Offset into the flat mask buffer when this layer is masked.
+    pub mask_offset: Option<usize>,
+}
+
+impl ParamRef {
+    /// Flat element count.
+    pub fn size(&self) -> usize {
+        self.rows * self.cols
+    }
+}
+
+/// A named intermediate activation buffer (`[rows, width]` at
+/// execution, where rows = B·A).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SlotDef {
+    pub name: String,
+    pub width: usize,
+}
+
+/// The policy/value/gate head parameters, boxed as one group (the
+/// heads execute as a single fused stage so the value head's
+/// bias-first accumulation order is preserved exactly).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HeadRefs {
+    pub w_pi: ParamRef,
+    pub b_pi: ParamRef,
+    pub w_v: ParamRef,
+    pub b_v: ParamRef,
+    pub w_g: ParamRef,
+    pub b_g: ParamRef,
+}
+
+/// One stage of the forward plan.  Kernel stages are shared: every
+/// `Linear` runs the same matmul kernel pair (dense ⊙-mask reference
+/// or OSEL-sparse, forward `x @ W` and backward `dY @ Wᵀ`), whatever
+/// its place in the graph and whatever the row count — single-episode,
+/// batched-lockstep and BPTT-backward execution all reuse them.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LayerOp {
+    /// `dst += act(src @ (W ⊙ mask))`.  `accumulate` records whether
+    /// `dst` carries an earlier op's value (the comm rounds add into
+    /// the encoder copy; first writers find the slot zeroed).
+    Linear { w: ParamRef, src: SrcRef, dst: usize, act: Activation, accumulate: bool },
+    /// `dst = exclude-self mean of the gate-weighted `src` rows`,
+    /// grouped per consecutive A-row episode block (IC3Net's
+    /// communication input; the only row-coupled op).  Round 1 gathers
+    /// the `h` carry; later rounds gather the updated `x`.
+    CommMean { src: CommSrc, dst: usize },
+    /// `dst = src` (the LSTM input starts as a copy of the encoder
+    /// output so the comm rounds can accumulate into it while the
+    /// encoder activation survives for the backward pass).
+    Copy { src: usize, dst: usize },
+    /// LSTM cell over the pre-activation `gates` slot (+ bias) and the
+    /// `c` carry → `h2`/`c2` (gate order i, f, g, o).
+    LstmCell { gates: usize, b_lstm: ParamRef },
+    /// Policy logits, value and gate logits over `h2`.
+    Heads(Box<HeadRefs>),
+}
+
+/// The compiled forward plan: slots + ops in execution order, plus the
+/// shape constants every I/O spec derives from.
+#[derive(Debug, Clone)]
+pub struct ForwardPlan {
+    pub obs_dim: usize,
+    pub hidden: usize,
+    pub n_actions: usize,
+    pub n_gate: usize,
+    pub episode_len: usize,
+    pub param_size: usize,
+    pub mask_size: usize,
+    pub slots: Vec<SlotDef>,
+    pub ops: Vec<LayerOp>,
+}
+
+/// Resolve a named parameter against the manifest tables, verifying
+/// its shape against what the topology implies.
+fn param_ref(m: &Manifest, name: &str, rows: usize, cols: usize, masked: bool) -> Result<ParamRef> {
+    let e = m
+        .param_layout
+        .iter()
+        .find(|e| e.name == name)
+        .ok_or_else(|| anyhow!("plan compile: no param layer {name:?} in the manifest"))?;
+    let shape_ok = match e.shape.len() {
+        2 => e.shape[0] == rows && e.shape[1] == cols,
+        1 => rows == 1 && e.shape[0] == cols,
+        _ => false,
+    };
+    if !shape_ok {
+        return Err(anyhow!(
+            "plan compile: param {name:?} has shape {:?} but the model topology implies [{rows}, {cols}]",
+            e.shape
+        ));
+    }
+    let mask_offset = if masked {
+        let l = m.masked_layer(name)?;
+        if l.rows != rows || l.cols != cols {
+            return Err(anyhow!(
+                "plan compile: masked layer {name:?} is {}x{}, topology implies {rows}x{cols}",
+                l.rows,
+                l.cols
+            ));
+        }
+        Some(l.offset)
+    } else {
+        None
+    };
+    Ok(ParamRef { name: name.to_string(), offset: e.offset, rows, cols, mask_offset })
+}
+
+impl ForwardPlan {
+    /// Compile the manifest's model topology into the forward op list,
+    /// resolving and shape-checking every parameter reference.
+    pub fn compile(m: &Manifest) -> Result<Self> {
+        let model = &m.model;
+        model.validate()?;
+        let d = &m.dims;
+        if d.hidden != model.hidden
+            || d.obs_dim != model.obs_dim
+            || d.n_actions != model.n_actions
+            || d.n_gate != model.n_gate
+            || d.episode_len != model.episode_len
+        {
+            return Err(anyhow!(
+                "plan compile: manifest dims disagree with its model topology ({})",
+                model.spec()
+            ));
+        }
+        let hd = model.hidden;
+        let mut slots: Vec<SlotDef> = Vec::new();
+        let mut ops: Vec<LayerOp> = Vec::new();
+
+        // tanh encoder stack
+        let mut src = SrcRef::Obs;
+        let mut src_width = model.obs_dim;
+        let mut last_enc = 0usize;
+        for (i, (name, &w)) in model.enc_layer_names().iter().zip(&model.enc_widths).enumerate()
+        {
+            let slot = slots.len();
+            slots.push(SlotDef { name: format!("enc{}", i + 1), width: w });
+            ops.push(LayerOp::Linear {
+                w: param_ref(m, name, src_width, w, true)?,
+                src,
+                dst: slot,
+                act: Activation::Tanh,
+                accumulate: false,
+            });
+            src = SrcRef::Slot(slot);
+            src_width = w;
+            last_enc = slot;
+        }
+
+        // gated communication rounds: round 1 gathers the h carry
+        // (x = e + comm(h) @ W_comm), every later round gathers the
+        // *updated* x (iterated message passing:
+        // x ← x + comm(x) @ W_comm_r)
+        let x_slot = if model.comm_rounds == 0 {
+            last_enc
+        } else {
+            let x = slots.len() + 1; // comm slot first, then x
+            let comm1 = slots.len();
+            slots.push(SlotDef { name: "comm".to_string(), width: hd });
+            slots.push(SlotDef { name: "x".to_string(), width: hd });
+            ops.push(LayerOp::CommMean { src: CommSrc::HPrev, dst: comm1 });
+            ops.push(LayerOp::Copy { src: last_enc, dst: x });
+            for (r, name) in model.comm_layer_names().iter().enumerate() {
+                let comm_r = if r == 0 {
+                    comm1
+                } else {
+                    let slot = slots.len();
+                    slots.push(SlotDef { name: format!("comm{}", r + 1), width: hd });
+                    ops.push(LayerOp::CommMean { src: CommSrc::Slot(x), dst: slot });
+                    slot
+                };
+                ops.push(LayerOp::Linear {
+                    w: param_ref(m, name, hd, hd, true)?,
+                    src: SrcRef::Slot(comm_r),
+                    dst: x,
+                    act: Activation::None,
+                    accumulate: true,
+                });
+            }
+            x
+        };
+
+        // masked LSTM + heads
+        let gates = slots.len();
+        slots.push(SlotDef { name: "gates".to_string(), width: 4 * hd });
+        ops.push(LayerOp::Linear {
+            w: param_ref(m, "w_x", hd, 4 * hd, true)?,
+            src: SrcRef::Slot(x_slot),
+            dst: gates,
+            act: Activation::None,
+            accumulate: false,
+        });
+        ops.push(LayerOp::Linear {
+            w: param_ref(m, "w_h", hd, 4 * hd, true)?,
+            src: SrcRef::HPrev,
+            dst: gates,
+            act: Activation::None,
+            accumulate: true,
+        });
+        ops.push(LayerOp::LstmCell { gates, b_lstm: param_ref(m, "b_lstm", 1, 4 * hd, false)? });
+        ops.push(LayerOp::Heads(Box::new(HeadRefs {
+            w_pi: param_ref(m, "w_pi", hd, model.n_actions, false)?,
+            b_pi: param_ref(m, "b_pi", 1, model.n_actions, false)?,
+            w_v: param_ref(m, "w_v", hd, 1, false)?,
+            b_v: param_ref(m, "b_v", 1, 1, false)?,
+            w_g: param_ref(m, "w_g", hd, model.n_gate, false)?,
+            b_g: param_ref(m, "b_g", 1, model.n_gate, false)?,
+        })));
+
+        Ok(ForwardPlan {
+            obs_dim: model.obs_dim,
+            hidden: hd,
+            n_actions: model.n_actions,
+            n_gate: model.n_gate,
+            episode_len: model.episode_len,
+            param_size: m.param_size,
+            mask_size: m.mask_size,
+            slots,
+            ops,
+        })
+    }
+
+    /// I/O spec of `policy_fwd_a{A}` / `policy_fwd_a{A}x{B}`: the
+    /// batched variant is the same plan on `B·A` activation rows —
+    /// params/masks unchanged, every activation row-widened by B.
+    pub fn policy_io(&self, agents: usize, batch: usize, file: String) -> ArtifactSpec {
+        let rows = batch * agents;
+        ArtifactSpec {
+            inputs: vec![
+                f32_io("params", vec![self.param_size]),
+                f32_io("masks", vec![self.mask_size]),
+                f32_io("obs", vec![rows, self.obs_dim]),
+                f32_io("h", vec![rows, self.hidden]),
+                f32_io("c", vec![rows, self.hidden]),
+                f32_io("gate_prev", vec![rows]),
+            ],
+            outputs: vec![
+                f32_io("logits", vec![rows, self.n_actions]),
+                f32_io("value", vec![rows]),
+                f32_io("gate_logits", vec![rows, self.n_gate]),
+                f32_io("h2", vec![rows, self.hidden]),
+                f32_io("c2", vec![rows, self.hidden]),
+            ],
+            file,
+        }
+    }
+
+    /// I/O spec of `grad_episode_a{A}` (BPTT over the stored episode).
+    pub fn grad_io(&self, agents: usize, file: String) -> ArtifactSpec {
+        let t = self.episode_len;
+        ArtifactSpec {
+            inputs: vec![
+                f32_io("params", vec![self.param_size]),
+                f32_io("masks", vec![self.mask_size]),
+                f32_io("obs_seq", vec![t, agents, self.obs_dim]),
+                i32_io("act_seq", vec![t, agents]),
+                f32_io("gate_seq", vec![t, agents]),
+                f32_io("returns", vec![t]),
+            ],
+            outputs: vec![
+                f32_io("dparams", vec![self.param_size]),
+                f32_io("dmasks", vec![self.mask_size]),
+                f32_io("loss", vec![]),
+                f32_io("pol_loss", vec![]),
+                f32_io("val_loss", vec![]),
+                f32_io("entropy", vec![]),
+            ],
+            file,
+        }
+    }
+
+    /// Render a [`SrcRef`] for reports and error messages.
+    fn src_name(&self, src: &SrcRef) -> String {
+        match src {
+            SrcRef::Obs => "obs".to_string(),
+            SrcRef::HPrev => "h_prev".to_string(),
+            SrcRef::Slot(i) => self.slots[*i].name.clone(),
+        }
+    }
+}
+
+fn f32_io(name: &str, shape: Vec<usize>) -> IoSpec {
+    IoSpec { name: name.to_string(), shape, dtype: "f32".to_string() }
+}
+
+fn i32_io(name: &str, shape: Vec<usize>) -> IoSpec {
+    IoSpec { name: name.to_string(), shape, dtype: "i32".to_string() }
+}
+
+// ---------------------------------------------------------------------
+// backward IR
+
+/// One stage of the backward plan: the forward op it reverses plus
+/// what it computes.  The BPTT interpreter executes the stages in
+/// order; every parameter/mask gradient slice is written by exactly
+/// one stage, and slot/carry cotangents accumulate additively in
+/// reverse dependency order — which is what keeps the reverse walk
+/// bitwise identical to the hand-scheduled megakernel it replaced on
+/// the paper preset.
+#[derive(Debug, Clone)]
+pub struct BackwardStage {
+    /// Index into [`ForwardPlan::ops`] of the forward op this reverses.
+    pub op: usize,
+    /// Flat-buffer parameter gradients this stage accumulates.
+    pub param_grads: Vec<String>,
+    /// Mask cotangents (FLGW's training signal) this stage accumulates.
+    pub mask_grads: Vec<String>,
+    /// Where this stage's activation cotangent flows.
+    pub propagates_to: String,
+}
+
+/// The compiled backward plan — the reverse walk of the forward ops.
+#[derive(Debug, Clone)]
+pub struct BackwardPlan {
+    pub stages: Vec<BackwardStage>,
+}
+
+impl BackwardPlan {
+    /// Derive the backward walk from a compiled forward plan.
+    pub fn compile(f: &ForwardPlan) -> Self {
+        let mut stages = Vec::with_capacity(f.ops.len());
+        for (i, op) in f.ops.iter().enumerate().rev() {
+            let (param_grads, mask_grads, propagates_to) = match op {
+                LayerOp::Linear { w, src, .. } => (
+                    vec![w.name.clone()],
+                    if w.mask_offset.is_some() { vec![w.name.clone()] } else { Vec::new() },
+                    match src {
+                        SrcRef::Obs => "none (obs has no cotangent)".to_string(),
+                        SrcRef::HPrev => "h carry".to_string(),
+                        SrcRef::Slot(s) => format!("slot {}", f.slots[*s].name),
+                    },
+                ),
+                LayerOp::CommMean { src, .. } => (
+                    Vec::new(),
+                    Vec::new(),
+                    match src {
+                        CommSrc::HPrev => {
+                            "h carry (gated exclude-self mean backward)".to_string()
+                        }
+                        CommSrc::Slot(s) => format!(
+                            "slot {} (gated exclude-self mean backward)",
+                            f.slots[*s].name
+                        ),
+                    },
+                ),
+                LayerOp::Copy { src, .. } => {
+                    (Vec::new(), Vec::new(), format!("slot {}", f.slots[*src].name))
+                }
+                LayerOp::LstmCell { gates, b_lstm } => (
+                    vec![b_lstm.name.clone()],
+                    Vec::new(),
+                    format!("slot {} + c carry", f.slots[*gates].name),
+                ),
+                LayerOp::Heads(h) => (
+                    vec![
+                        h.w_pi.name.clone(),
+                        h.b_pi.name.clone(),
+                        h.w_v.name.clone(),
+                        h.b_v.name.clone(),
+                        h.w_g.name.clone(),
+                        h.b_g.name.clone(),
+                    ],
+                    Vec::new(),
+                    "h2 (heads + next-step carry)".to_string(),
+                ),
+            };
+            stages.push(BackwardStage { op: i, param_grads, mask_grads, propagates_to });
+        }
+        BackwardPlan { stages }
+    }
+}
+
+/// The forward + backward plan pair the runtime compiles once per
+/// manifest and shares across every loaded executable.
+#[derive(Debug, Clone)]
+pub struct Plans {
+    pub forward: ForwardPlan,
+    pub backward: BackwardPlan,
+}
+
+impl Plans {
+    /// Compile both directions from the manifest.
+    pub fn compile(m: &Manifest) -> Result<Self> {
+        let forward = ForwardPlan::compile(m)?;
+        let backward = BackwardPlan::compile(&forward);
+        Ok(Plans { forward, backward })
+    }
+}
+
+// ---------------------------------------------------------------------
+// --print-plan report
+
+/// Serialize the compiled forward/backward plan as a JSON report —
+/// ops, shapes, masked layers, and the sparse/dense kernel choice per
+/// stage under `exec` (`--print-plan`; the repo's own `util::json`
+/// parser round-trips it).
+pub fn plan_report_json(
+    m: &Manifest,
+    exec: ExecMode,
+    agents: usize,
+    batch: usize,
+) -> Result<String> {
+    let plans = Plans::compile(m)?;
+    let f = &plans.forward;
+    let rows = agents * batch;
+
+    let slots: Vec<String> = f
+        .slots
+        .iter()
+        .map(|s| format!("{{\"name\": \"{}\", \"width\": {}}}", s.name, s.width))
+        .collect();
+
+    let mut fwd_rows = Vec::new();
+    for (i, op) in f.ops.iter().enumerate() {
+        let row = match op {
+            LayerOp::Linear { w, src, dst, act, accumulate } => format!(
+                "{{\"op\": {i}, \"kind\": \"linear\", \"param\": \"{}\", \"shape\": [{}, {}], \
+                 \"src\": \"{}\", \"dst\": \"{}\", \"activation\": \"{}\", \"masked\": {}, \
+                 \"accumulate\": {}, \"dispatch\": \"{}\"}}",
+                w.name,
+                w.rows,
+                w.cols,
+                f.src_name(src),
+                f.slots[*dst].name,
+                act.name(),
+                w.mask_offset.is_some(),
+                accumulate,
+                if w.mask_offset.is_some() { exec.name() } else { "dense" },
+            ),
+            LayerOp::CommMean { src, dst } => format!(
+                "{{\"op\": {i}, \"kind\": \"comm_mean\", \"src\": \"{}\", \"dst\": \"{}\", \
+                 \"group_rows\": {agents}, \"dispatch\": \"dense\"}}",
+                match src {
+                    CommSrc::HPrev => "h_prev".to_string(),
+                    CommSrc::Slot(s) => f.slots[*s].name.clone(),
+                },
+                f.slots[*dst].name
+            ),
+            LayerOp::Copy { src, dst } => format!(
+                "{{\"op\": {i}, \"kind\": \"copy\", \"src\": \"{}\", \"dst\": \"{}\", \
+                 \"dispatch\": \"dense\"}}",
+                f.slots[*src].name, f.slots[*dst].name
+            ),
+            LayerOp::LstmCell { gates, b_lstm } => format!(
+                "{{\"op\": {i}, \"kind\": \"lstm_cell\", \"gates\": \"{}\", \"bias\": \"{}\", \
+                 \"hidden\": {}, \"dispatch\": \"dense\"}}",
+                f.slots[*gates].name, b_lstm.name, f.hidden
+            ),
+            LayerOp::Heads(h) => format!(
+                "{{\"op\": {i}, \"kind\": \"heads\", \"params\": [\"{}\", \"{}\", \"{}\", \
+                 \"{}\", \"{}\", \"{}\"], \"n_actions\": {}, \"n_gate\": {}, \
+                 \"dispatch\": \"dense\"}}",
+                h.w_pi.name,
+                h.b_pi.name,
+                h.w_v.name,
+                h.b_v.name,
+                h.w_g.name,
+                h.b_g.name,
+                f.n_actions,
+                f.n_gate
+            ),
+        };
+        fwd_rows.push(row);
+    }
+
+    let bwd_rows: Vec<String> = plans
+        .backward
+        .stages
+        .iter()
+        .enumerate()
+        .map(|(si, s)| {
+            let quote = |xs: &[String]| {
+                xs.iter().map(|x| format!("\"{x}\"")).collect::<Vec<_>>().join(", ")
+            };
+            format!(
+                "{{\"stage\": {si}, \"reverses_op\": {}, \"param_grads\": [{}], \
+                 \"mask_grads\": [{}], \"propagates_to\": \"{}\"}}",
+                s.op,
+                quote(&s.param_grads),
+                quote(&s.mask_grads),
+                s.propagates_to
+            )
+        })
+        .collect();
+
+    let io = f.policy_io(agents, batch, String::new());
+    let io_row = |specs: &[IoSpec]| {
+        specs
+            .iter()
+            .map(|s| {
+                let dims =
+                    s.shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ");
+                format!(
+                    "{{\"name\": \"{}\", \"shape\": [{dims}], \"dtype\": \"{}\"}}",
+                    s.name, s.dtype
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(", ")
+    };
+
+    Ok(format!(
+        "{{\n  \"kind\": \"layer_plan\",\n  \"model\": \"{}\",\n  \"exec\": \"{}\",\n  \
+         \"agents\": {agents},\n  \"batch\": {batch},\n  \"rows\": {rows},\n  \
+         \"dims\": {{\"obs_dim\": {}, \"hidden\": {}, \"n_actions\": {}, \"n_gate\": {}, \
+         \"episode_len\": {}}},\n  \"param_size\": {},\n  \"mask_size\": {},\n  \
+         \"slots\": [{}],\n  \"forward\": [\n    {}\n  ],\n  \"backward\": [\n    {}\n  ],\n  \
+         \"policy_io\": {{\"inputs\": [{}], \"outputs\": [{}]}}\n}}\n",
+        m.model.spec(),
+        exec.name(),
+        f.obs_dim,
+        f.hidden,
+        f.n_actions,
+        f.n_gate,
+        f.episode_len,
+        f.param_size,
+        f.mask_size,
+        slots.join(", "),
+        fwd_rows.join(",\n    "),
+        bwd_rows.join(",\n    "),
+        io_row(&io.inputs),
+        io_row(&io.outputs),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::ModelTopology;
+    use crate::util::json::Json;
+
+    #[test]
+    fn parses_artifact_names() {
+        assert_eq!(PlanOp::parse("apply_update").unwrap(), PlanOp::ApplyUpdate);
+        assert_eq!(
+            PlanOp::parse("policy_fwd_a3").unwrap(),
+            PlanOp::PolicyFwd { agents: 3, batch: 1 }
+        );
+        assert_eq!(
+            PlanOp::parse("policy_fwd_a3x16").unwrap(),
+            PlanOp::PolicyFwd { agents: 3, batch: 16 }
+        );
+        assert_eq!(
+            PlanOp::parse("grad_episode_a10").unwrap(),
+            PlanOp::GradEpisode { agents: 10 }
+        );
+        assert_eq!(PlanOp::parse("flgw_update_g4").unwrap(), PlanOp::FlgwUpdate { groups: 4 });
+        assert_eq!(PlanOp::parse("mask_gen_g8").unwrap(), PlanOp::MaskGen { groups: 8 });
+        assert!(PlanOp::parse("policy_fwd_aX").is_err());
+        assert!(PlanOp::parse("policy_fwd_a3x").is_err());
+        assert!(PlanOp::parse("policy_fwd_ax4").is_err());
+        assert!(PlanOp::parse("policy_fwd_a3x0").is_err());
+        assert!(PlanOp::parse("nope").is_err());
+    }
+
+    #[test]
+    fn paper_plan_matches_the_megakernel_structure() {
+        let m = Manifest::builtin();
+        let plan = ForwardPlan::compile(&m).unwrap();
+        // enc1, comm, x, gates
+        assert_eq!(plan.slots.len(), 4);
+        // encoder, comm mean, copy, comm matmul, w_x, w_h, cell, heads
+        assert_eq!(plan.ops.len(), 8);
+        let masked: Vec<&str> = plan
+            .ops
+            .iter()
+            .filter_map(|op| match op {
+                LayerOp::Linear { w, .. } if w.mask_offset.is_some() => Some(w.name.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(masked, vec!["w_enc", "w_comm", "w_x", "w_h"]);
+        assert!(matches!(plan.ops.last(), Some(LayerOp::Heads(_))));
+        assert_eq!(plan.param_size, m.param_size);
+        assert_eq!(plan.mask_size, m.mask_size);
+    }
+
+    #[test]
+    fn deeper_topologies_grow_the_plan() {
+        let topo = ModelTopology {
+            enc_widths: vec![64, 128],
+            comm_rounds: 2,
+            ..ModelTopology::paper()
+        };
+        let m = Manifest::try_with_model(topo).unwrap();
+        let plan = ForwardPlan::compile(&m).unwrap();
+        // enc1, enc2, comm, x, comm2, gates
+        assert_eq!(plan.slots.len(), 6);
+        // 2 encoders + comm mean + copy + round-1 linear + round-2
+        // comm mean (gathering x) + round-2 linear + w_x + w_h + cell + heads
+        assert_eq!(plan.ops.len(), 11);
+        // round 2 must gather the *updated* x, not the h carry again —
+        // iterated message passing, not parallel channels
+        let second_comm = plan
+            .ops
+            .iter()
+            .filter_map(|op| match op {
+                LayerOp::CommMean { src, .. } => Some(*src),
+                _ => None,
+            })
+            .nth(1)
+            .expect("two comm rounds emit two comm means");
+        assert!(matches!(second_comm, CommSrc::Slot(_)));
+        // no-comm topologies skip the comm slots entirely
+        let topo0 = ModelTopology { comm_rounds: 0, ..ModelTopology::paper() };
+        let m0 = Manifest::try_with_model(topo0).unwrap();
+        let plan0 = ForwardPlan::compile(&m0).unwrap();
+        assert_eq!(plan0.slots.len(), 2); // enc1, gates
+        assert_eq!(plan0.ops.len(), 5);
+    }
+
+    #[test]
+    fn backward_plan_reverses_the_forward_walk() {
+        let m = Manifest::builtin();
+        let plans = Plans::compile(&m).unwrap();
+        let n = plans.forward.ops.len();
+        assert_eq!(plans.backward.stages.len(), n);
+        let order: Vec<usize> = plans.backward.stages.iter().map(|s| s.op).collect();
+        assert_eq!(order, (0..n).rev().collect::<Vec<_>>());
+        // every masked layer's cotangent is produced by exactly one stage
+        let mut mask_grads: Vec<String> =
+            plans.backward.stages.iter().flat_map(|s| s.mask_grads.clone()).collect();
+        mask_grads.sort();
+        let mut expect: Vec<String> =
+            m.masked_layers.iter().map(|l| l.name.clone()).collect();
+        expect.sort();
+        assert_eq!(mask_grads, expect);
+    }
+
+    #[test]
+    fn batched_io_is_row_widening() {
+        let m = Manifest::builtin();
+        let plan = ForwardPlan::compile(&m).unwrap();
+        let single = plan.policy_io(3, 1, String::new());
+        let batched = plan.policy_io(3, 8, String::new());
+        assert_eq!(batched.inputs[0].elements(), single.inputs[0].elements());
+        assert_eq!(batched.inputs[1].elements(), single.inputs[1].elements());
+        for io in 2..6 {
+            assert_eq!(batched.inputs[io].elements(), 8 * single.inputs[io].elements());
+        }
+        for io in 0..5 {
+            assert_eq!(batched.outputs[io].elements(), 8 * single.outputs[io].elements());
+        }
+    }
+
+    #[test]
+    fn report_json_parses_and_names_dispatch() {
+        let m = Manifest::builtin();
+        let json = plan_report_json(&m, ExecMode::Sparse, 3, 4).unwrap();
+        let v = Json::parse(&json).unwrap();
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("layer_plan"));
+        assert_eq!(v.get("model").unwrap().as_str(), Some("paper"));
+        assert_eq!(v.get("rows").unwrap().as_usize(), Some(12));
+        let fwd = v.get("forward").unwrap().as_arr().unwrap();
+        assert_eq!(fwd.len(), 8);
+        assert_eq!(fwd[0].get("dispatch").unwrap().as_str(), Some("sparse"));
+        let bwd = v.get("backward").unwrap().as_arr().unwrap();
+        assert_eq!(bwd.len(), 8);
+        // dense exec flips every masked dispatch to "dense"
+        let dense = plan_report_json(&m, ExecMode::DenseMasked, 3, 1).unwrap();
+        assert!(!dense.contains("\"dispatch\": \"sparse\""));
+    }
+}

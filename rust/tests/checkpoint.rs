@@ -221,6 +221,56 @@ fn train_writes_periodic_checkpoints_and_metrics() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Checkpoints record the model topology (format v2): a `--model tiny`
+/// run resumes only against the matching manifest — a paper runtime
+/// refuses it with a topology-naming error — and the default resume
+/// path rebuilds the right manifest from the header automatically.
+#[test]
+fn resume_rejects_mismatched_model_topology() {
+    use learning_group::manifest::{Manifest, ModelTopology};
+    use learning_group::runtime::Runtime;
+
+    let cfg = TrainConfig {
+        model: ModelTopology::tiny(),
+        ..base_cfg(PrunerChoice::Flgw(4), 12, 1)
+    };
+    let mut t = Trainer::from_default_artifacts(cfg).unwrap();
+    t.train().unwrap();
+    let ckpt = t.checkpoint().unwrap();
+    assert_eq!(ckpt.meta.model, ModelTopology::tiny());
+
+    // a paper runtime must refuse the tiny checkpoint, naming the topology
+    let err = Trainer::resume(
+        Runtime::new(Manifest::builtin()).unwrap(),
+        base_cfg(PrunerChoice::Flgw(4), 12, 2),
+        &ckpt,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("topology"), "{err}");
+
+    // the matching runtime resumes, and continues bit-identically from
+    // iteration 1 (the resume path adopts the checkpoint's topology)
+    let resumed = Trainer::resume(
+        Runtime::new(Manifest::with_model(ModelTopology::tiny())).unwrap(),
+        base_cfg(PrunerChoice::Flgw(4), 12, 2),
+        &ckpt,
+    )
+    .unwrap();
+    assert_eq!(resumed.start_iteration(), 1);
+    assert_eq!(resumed.cfg.model, ModelTopology::tiny());
+
+    // the file path resumes too: the manifest is rebuilt from the header
+    let path = tmp_path("tiny_model");
+    t.save_checkpoint(&path).unwrap();
+    let resumed =
+        Trainer::from_default_artifacts_resumed(base_cfg(PrunerChoice::Flgw(4), 12, 2), &path)
+            .unwrap();
+    assert_eq!(resumed.cfg.model, ModelTopology::tiny());
+    assert_eq!(resumed.manifest().model, ModelTopology::tiny());
+    let _ = std::fs::remove_file(&path);
+}
+
 /// A resume whose iteration target is already met must neither train
 /// nor clobber existing checkpoints with a mismatched final save.
 #[test]

@@ -284,3 +284,53 @@ fn mismatched_env_configs_are_rejected() {
     cfg.env = EnvConfig::default().with_agents(4);
     assert!(Trainer::from_default_artifacts(cfg).is_err());
 }
+
+/// The `--model` presets train end-to-end on both scenarios, checkpoint
+/// with their topology recorded, and serve straight back through a
+/// runtime rebuilt from that header — the capacity-per-environment axis
+/// the layer-graph runtime opened.
+#[test]
+fn model_presets_train_checkpoint_and_eval() {
+    use learning_group::manifest::{Manifest, ModelTopology};
+    use learning_group::serve::{PolicyServer, ServeMode, ServeOptions};
+
+    let cases = [
+        (ModelTopology::tiny(), "predator_prey", 2usize),
+        (ModelTopology::tiny(), "traffic_junction:easy", 2),
+        (ModelTopology::wide(), "predator_prey", 1),
+    ];
+    for (topo, env, iterations) in cases {
+        let label = format!("{} on {env}", topo.spec());
+        let cfg = TrainConfig {
+            iterations,
+            model: topo.clone(),
+            ..base_cfg(PrunerChoice::Flgw(4), 31)
+        }
+        .with_env(EnvConfig::parse(env).unwrap());
+        let mut trainer = Trainer::from_default_artifacts(cfg).unwrap();
+        assert_eq!(trainer.manifest().model, topo, "{label}");
+        assert_eq!(trainer.manifest().dims.hidden, topo.hidden, "{label}");
+        let log = trainer.train().unwrap();
+        assert_eq!(log.len(), iterations, "{label}");
+        assert!(log.records.iter().all(|r| r.loss.is_finite()), "{label}");
+
+        let ckpt = trainer.checkpoint().unwrap();
+        assert_eq!(ckpt.meta.model, topo, "{label}: topology must be recorded");
+        // serve through a runtime rebuilt from the recorded topology
+        let mut rt = Runtime::new(Manifest::with_model(ckpt.meta.model.clone())).unwrap();
+        let server = PolicyServer::from_checkpoint(
+            &mut rt,
+            &ckpt,
+            learning_group::runtime::ExecMode::Sparse,
+            1,
+            1,
+        )
+        .unwrap();
+        let report = server
+            .run(&ServeOptions { workers: 2, mode: ServeMode::Episodes(4), seed: 7 })
+            .unwrap();
+        assert_eq!(report.episodes, 4, "{label}");
+        assert!(report.steps > 0, "{label}");
+        assert!(report.density < 1.0, "{label}: FLGW must prune every preset");
+    }
+}

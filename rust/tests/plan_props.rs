@@ -1,0 +1,260 @@
+//! Property tests for the layer-graph plan compiler (`runtime::plan`).
+//!
+//! Three invariants, over the CLI presets *and* randomized topologies:
+//!
+//! 1. Every artifact spec the manifest can name compiles to a plan
+//!    whose I/O shapes match `synthesize_artifact` — and match what the
+//!    interpreter actually produces when executed.
+//! 2. Malformed topologies (zero widths, mismatched encoder/hidden,
+//!    empty heads) are rejected with errors that name the problem, as
+//!    are manifests whose parameter tables disagree with their
+//!    topology.
+//! 3. The generalized BPTT backward (multi-layer encoders, multiple
+//!    comm rounds — shapes the old megakernel never supported) agrees
+//!    with finite differences of its own loss.
+
+use learning_group::manifest::{Manifest, ModelTopology};
+use learning_group::runtime::plan::{self, ForwardPlan, LayerOp};
+use learning_group::runtime::{ExecMode, HostTensor, Runtime};
+use learning_group::util::json::Json;
+use learning_group::util::Pcg32;
+
+/// A random *valid* topology: 1–3 tanh encoder layers ending at
+/// `hidden`, 0–2 comm rounds, small widths so execution stays fast.
+fn rand_topology(rng: &mut Pcg32) -> ModelTopology {
+    let hidden = 8 * (1 + rng.next_below(5) as usize); // 8..40
+    let depth = 1 + rng.next_below(3) as usize; // 1..3
+    let mut enc_widths: Vec<usize> =
+        (0..depth - 1).map(|_| 4 * (1 + rng.next_below(8) as usize)).collect();
+    enc_widths.push(hidden);
+    ModelTopology {
+        obs_dim: 1 + rng.next_below(9) as usize,
+        hidden,
+        n_actions: 1 + rng.next_below(6) as usize,
+        n_gate: 1 + rng.next_below(3) as usize,
+        episode_len: 1 + rng.next_below(10) as usize,
+        enc_widths,
+        comm_rounds: rng.next_below(3) as usize,
+    }
+}
+
+#[test]
+fn prop_every_nameable_artifact_spec_matches_the_plan() {
+    let mut rng = Pcg32::seeded(0x9A11);
+    let mut topos = vec![ModelTopology::tiny(), ModelTopology::paper(), ModelTopology::wide()];
+    for _ in 0..25 {
+        topos.push(rand_topology(&mut rng));
+    }
+    for (case, topo) in topos.into_iter().enumerate() {
+        let m = Manifest::try_with_model(topo.clone()).unwrap();
+        let plan = ForwardPlan::compile(&m).unwrap();
+        assert_eq!(plan.param_size, m.param_size, "case {case}");
+        assert_eq!(plan.mask_size, m.mask_size, "case {case}");
+        // masked Linear stages cover exactly the manifest's masked layers
+        let masked: Vec<String> = plan
+            .ops
+            .iter()
+            .filter_map(|op| match op {
+                LayerOp::Linear { w, .. } if w.mask_offset.is_some() => Some(w.name.clone()),
+                _ => None,
+            })
+            .collect();
+        let expect: Vec<String> = m.masked_layers.iter().map(|l| l.name.clone()).collect();
+        assert_eq!(masked, expect, "case {case}");
+
+        for &a in &[1usize, 3, 5] {
+            for &b in &[1usize, 2, 8] {
+                let name = if b == 1 {
+                    format!("policy_fwd_a{a}")
+                } else {
+                    format!("policy_fwd_a{a}x{b}")
+                };
+                let spec = m.synthesize_artifact(&name).unwrap();
+                let rows = a * b;
+                assert_eq!(spec.inputs[0].elements(), m.param_size, "case {case} {name}");
+                assert_eq!(spec.inputs[1].elements(), m.mask_size, "case {case} {name}");
+                assert_eq!(spec.inputs[2].elements(), rows * topo.obs_dim, "case {case} {name}");
+                assert_eq!(spec.inputs[3].elements(), rows * topo.hidden, "case {case} {name}");
+                assert_eq!(spec.inputs[4].elements(), rows * topo.hidden, "case {case} {name}");
+                assert_eq!(spec.inputs[5].elements(), rows, "case {case} {name}");
+                assert_eq!(
+                    spec.outputs[0].elements(),
+                    rows * topo.n_actions,
+                    "case {case} {name}"
+                );
+                assert_eq!(spec.outputs[1].elements(), rows, "case {case} {name}");
+                assert_eq!(spec.outputs[2].elements(), rows * topo.n_gate, "case {case} {name}");
+                assert_eq!(spec.outputs[3].elements(), rows * topo.hidden, "case {case} {name}");
+                assert_eq!(spec.outputs[4].elements(), rows * topo.hidden, "case {case} {name}");
+            }
+            let gspec = m.synthesize_artifact(&format!("grad_episode_a{a}")).unwrap();
+            assert_eq!(
+                gspec.inputs[2].elements(),
+                topo.episode_len * a * topo.obs_dim,
+                "case {case}"
+            );
+            assert_eq!(gspec.inputs[3].dtype, "i32", "case {case}");
+            assert_eq!(gspec.outputs[0].elements(), m.param_size, "case {case}");
+            assert_eq!(gspec.outputs[1].elements(), m.mask_size, "case {case}");
+            assert_eq!(gspec.outputs[2].elements(), 1, "case {case}");
+        }
+        for &g in &[2usize, 4] {
+            let spec = m.synthesize_artifact(&format!("flgw_update_g{g}")).unwrap();
+            assert_eq!(spec.inputs[0].elements(), m.grouping_size(g).unwrap(), "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_plan_execution_matches_its_spec() {
+    // run policy_fwd on random topologies through the full Runtime
+    // path: the Executable validates outputs against the synthesized
+    // spec, and we additionally check finiteness and determinism
+    let mut rng = Pcg32::seeded(0xE4EC);
+    for case in 0..8 {
+        let topo = rand_topology(&mut rng);
+        let m = Manifest::try_with_model(topo.clone()).unwrap();
+        let mut rt = Runtime::new(m.clone()).unwrap();
+        let a = 3usize;
+        let exe = rt.load("policy_fwd_a3").unwrap();
+        let params: Vec<f32> = (0..m.param_size).map(|_| rng.next_normal() * 0.1).collect();
+        let masks: Vec<f32> =
+            (0..m.mask_size).map(|_| f32::from(rng.next_f32() < 0.6)).collect();
+        let inputs = vec![
+            HostTensor::F32(params),
+            HostTensor::F32(masks),
+            HostTensor::F32((0..a * topo.obs_dim).map(|_| rng.next_f32()).collect()),
+            HostTensor::F32((0..a * topo.hidden).map(|_| rng.next_normal() * 0.1).collect()),
+            HostTensor::F32((0..a * topo.hidden).map(|_| rng.next_normal() * 0.1).collect()),
+            HostTensor::F32(vec![1.0; a]),
+        ];
+        let out1 = exe.run(&inputs).unwrap();
+        let out2 = exe.run(&inputs).unwrap();
+        assert_eq!(out1, out2, "case {case}: plan execution must be deterministic");
+        assert_eq!(out1[0].as_f32().unwrap().len(), a * topo.n_actions, "case {case}");
+        assert_eq!(out1[3].as_f32().unwrap().len(), a * topo.hidden, "case {case}");
+        for (o, t) in out1.iter().enumerate() {
+            assert!(
+                t.as_f32().unwrap().iter().all(|v| v.is_finite()),
+                "case {case}: output {o} not finite"
+            );
+        }
+    }
+}
+
+#[test]
+fn mismatched_param_tables_are_rejected_with_the_layer_name() {
+    // a manifest whose param table disagrees with its topology (e.g. a
+    // policy head narrower than n_actions) must fail plan compilation
+    // with the offending layer named
+    let mut m = Manifest::builtin();
+    let entry = m.param_layout.iter_mut().find(|e| e.name == "w_pi").unwrap();
+    entry.shape = vec![128, 4];
+    let err = ForwardPlan::compile(&m).unwrap_err().to_string();
+    assert!(err.contains("w_pi"), "{err}");
+
+    // ... and a masked-layer table that disagrees too
+    let mut m2 = Manifest::builtin();
+    m2.masked_layers[0].cols += 1;
+    let err2 = ForwardPlan::compile(&m2).unwrap_err().to_string();
+    assert!(err2.contains("w_enc"), "{err2}");
+
+    // a missing layer is named as missing
+    let mut m3 = Manifest::builtin();
+    m3.param_layout.retain(|e| e.name != "w_comm");
+    let err3 = ForwardPlan::compile(&m3).unwrap_err().to_string();
+    assert!(err3.contains("w_comm"), "{err3}");
+}
+
+/// The generalized BPTT backward — two encoder layers and two comm
+/// rounds, shapes the pre-plan megakernel never supported — must agree
+/// with finite differences of its own loss.
+#[test]
+fn generalized_backward_matches_finite_differences() {
+    let topo = ModelTopology {
+        obs_dim: 5,
+        hidden: 16,
+        n_actions: 4,
+        n_gate: 2,
+        episode_len: 6,
+        enc_widths: vec![12, 16],
+        comm_rounds: 2,
+    };
+    let m = Manifest::try_with_model(topo.clone()).unwrap();
+    let mut rt = Runtime::new(m.clone()).unwrap();
+    let a = 3usize;
+    let exe = rt.load("grad_episode_a3").unwrap();
+    let t = topo.episode_len;
+    let mut rng = Pcg32::seeded(71);
+    let params: Vec<f32> = (0..m.param_size).map(|_| rng.next_normal() * 0.1).collect();
+    let masks = vec![1.0f32; m.mask_size];
+    let obs: Vec<f32> = (0..t * a * topo.obs_dim).map(|_| rng.next_f32()).collect();
+    let act: Vec<i32> =
+        (0..t * a).map(|_| rng.next_below(topo.n_actions as u32) as i32).collect();
+    let gate: Vec<f32> = (0..t * a).map(|_| rng.next_below(2) as f32).collect();
+    let ret: Vec<f32> = (0..t).map(|i| 0.05 * i as f32).collect();
+
+    let run = |p: &[f32]| -> Vec<HostTensor> {
+        exe.run(&[
+            HostTensor::F32(p.to_vec()),
+            HostTensor::F32(masks.clone()),
+            HostTensor::F32(obs.clone()),
+            HostTensor::I32(act.clone()),
+            HostTensor::F32(gate.clone()),
+            HostTensor::F32(ret.clone()),
+        ])
+        .unwrap()
+    };
+    let outs = run(&params);
+    let dparams = outs[0].as_f32().unwrap().to_vec();
+
+    // probe one parameter inside every interesting layer, including the
+    // new w_enc2 / w_comm2 regions
+    let probe_names = ["w_enc", "w_enc2", "w_comm", "w_comm2", "w_x", "w_h", "w_pi"];
+    let eps = 1e-2f32;
+    for name in probe_names {
+        let e = m.param_layout.iter().find(|e| e.name == name).unwrap();
+        let idx = e.offset + e.shape.iter().product::<usize>() / 2;
+        let mut hi = params.clone();
+        hi[idx] += eps;
+        let mut lo = params.clone();
+        lo[idx] -= eps;
+        let fd =
+            (run(&hi)[2].scalar_f32().unwrap() - run(&lo)[2].scalar_f32().unwrap()) / (2.0 * eps);
+        let an = dparams[idx];
+        assert!(
+            (fd - an).abs() < 2e-3 + 0.05 * fd.abs().max(an.abs()),
+            "{name}[{idx}]: finite-diff {fd} vs analytic {an}"
+        );
+    }
+}
+
+#[test]
+fn print_plan_report_is_wellformed_json_for_every_preset() {
+    for name in ["tiny", "paper", "wide"] {
+        let m = Manifest::with_model(ModelTopology::preset(name).unwrap());
+        let json = plan::plan_report_json(&m, ExecMode::Sparse, 3, 4).unwrap();
+        let v = Json::parse(&json).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("layer_plan"));
+        assert_eq!(v.get("model").unwrap().as_str(), Some(name));
+        let fwd = v.get("forward").unwrap().as_arr().unwrap();
+        let bwd = v.get("backward").unwrap().as_arr().unwrap();
+        assert_eq!(fwd.len(), bwd.len(), "{name}");
+        // every masked layer appears as a sparse-dispatched linear stage
+        for l in &m.masked_layers {
+            assert!(
+                fwd.iter().any(|op| {
+                    op.get("param").and_then(|p| p.as_str()) == Some(l.name.as_str())
+                        && op.get("dispatch").and_then(|d| d.as_str()) == Some("sparse")
+                }),
+                "{name}: masked layer {} missing from the forward dump",
+                l.name
+            );
+        }
+        // the io block mirrors the batched row widening
+        let io = v.get("policy_io").unwrap();
+        let obs = &io.get("inputs").unwrap().as_arr().unwrap()[2];
+        let shape = obs.get("shape").unwrap().as_arr().unwrap();
+        assert_eq!(shape[0].as_usize(), Some(12)); // 3 agents x batch 4
+    }
+}
