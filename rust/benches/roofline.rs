@@ -1,9 +1,288 @@
-//! E1 / Fig. 1 — regenerate the MARL roofline table and time the model.
+//! Host-kernel roofline — measured vs predicted per SIMD kernel stage,
+//! plus the paper's Fig. 1 system roofline table in full mode.
+//!
+//! For every FLGW-masked layer of the `paper` preset, at the batched
+//! lockstep row count (B·A = 8·3 = 24 activation rows), three stages
+//! are timed with the scalar backend and with the dispatched vector
+//! backend (`LG_SIMD` honoured):
+//!
+//! * `dense_fwd`   — the dense forward `matmul`;
+//! * `panel_fwd`   — the sparse forward through the lane-padded OSEL
+//!   CSC panels at ~90% sparsity (FLGW G=10 masks);
+//! * `panel_dywt`  — the sparse BPTT transposed product through the
+//!   CSR panels.
+//!
+//! Next to each measured time sits the
+//! [`learning_group::accel::perf::HostKernelModel`] prediction: issue
+//! slots per stage for scalar and vector issue, the predicted speedup
+//! ceiling, and the measured ns per predicted issue.  Results land in
+//! `BENCH_roofline.json` (schema in docs/BENCHMARKS.md).
+//!
+//! **CI smoke gate** (`--smoke` / `LG_BENCH_SMOKE`): reports which
+//! backend dispatched and fails loudly if (a) an x86_64 host silently
+//! falls back to scalar without `LG_SIMD=scalar` asking for it, or
+//! (b) the SIMD dense matmul on the preset's widest layer runs below
+//! 2x the scalar kernel.
+//!
+//! ```bash
+//! cargo bench --bench roofline              # full run + Fig. 1 table
+//! cargo bench --bench roofline -- --smoke   # CI gate, few runs
+//! ```
+
+use learning_group::accel::load_alloc::balanced_indexes;
+use learning_group::accel::osel::OselEncoder;
+use learning_group::accel::perf::HostKernelModel;
 use learning_group::experiments::fig1_roofline;
+use learning_group::manifest::{Manifest, ModelTopology};
+use learning_group::runtime::{simd, SimdBackend, SparseLayer, LANES};
 use learning_group::util::benchutil::{bench, report};
+use learning_group::util::Pcg32;
+
+/// Activation rows of the measured kernel calls: the B·A lockstep
+/// block (B = 8 episodes × A = 3 agents) the batched execution path
+/// feeds the shared kernels.
+const BLOCK_ROWS: usize = 24;
+
+/// One (layer, stage) measurement with its model prediction.
+struct StageRow {
+    layer: String,
+    stage: &'static str,
+    k: usize,
+    cols: usize,
+    sparsity: f64,
+    issues_scalar: u64,
+    issues_simd: u64,
+    scalar_us: f64,
+    simd_us: f64,
+    predicted_speedup: f64,
+}
+
+impl StageRow {
+    fn measured_speedup(&self) -> f64 {
+        self.scalar_us / self.simd_us
+    }
+
+    /// Measured cost of one predicted vector issue on the dispatched
+    /// backend — the "measured cycles per stage" column, in ns.
+    fn ns_per_issue(&self) -> f64 {
+        self.simd_us * 1e3 / self.issues_simd.max(1) as f64
+    }
+}
+
+fn data(n: usize, rng: &mut Pcg32) -> Vec<f32> {
+    (0..n).map(|_| rng.next_f32() - 0.5).collect()
+}
+
+/// Measure every stage of every masked layer of the `paper` preset.
+fn stage_sweep(backend: SimdBackend, smoke: bool) -> Vec<StageRow> {
+    let m = Manifest::with_model(ModelTopology::paper());
+    let g = 10usize; // ~90% sparsity
+    let (warm, runs) = if smoke { (3, 15) } else { (10, 100) };
+    let scalar_model = HostKernelModel::scalar();
+    let simd_model = if backend == SimdBackend::Scalar {
+        HostKernelModel::scalar()
+    } else {
+        HostKernelModel::vector(LANES)
+    };
+
+    let mut rng = Pcg32::seeded(0x0f1);
+    let mut rows_out = Vec::new();
+    for l in &m.masked_layers {
+        let (k, cols) = (l.rows, l.cols);
+        let ig = balanced_indexes(k, g, 0.0, &mut rng);
+        let og = balanced_indexes(cols, g, 0.0, &mut rng);
+        let (srm, _) = OselEncoder::default().encode(&ig, &og, g);
+        let sl = SparseLayer::from_encoding(l, &srm, 1).expect("sparse layer");
+        let sparsity = 1.0 - sl.nnz() as f64 / (k * cols) as f64;
+        let csc_slots = *sl.csc_ptr.last().unwrap() as usize;
+        let csr_slots = *sl.pad_row_ptr.last().unwrap() as usize;
+
+        let x = data(BLOCK_ROWS * k, &mut rng);
+        let w = data(k * cols, &mut rng);
+        let dy = data(BLOCK_ROWS * cols, &mut rng);
+        let mut y = vec![0.0f32; BLOCK_ROWS * cols];
+        let mut dx = vec![0.0f32; BLOCK_ROWS * k];
+
+        // dense forward
+        let ts = bench(warm, runs, || {
+            y.fill(0.0);
+            simd::matmul(SimdBackend::Scalar, &mut y, &x, &w, BLOCK_ROWS, k, cols);
+        });
+        let tv = bench(warm, runs, || {
+            y.fill(0.0);
+            simd::matmul(backend, &mut y, &x, &w, BLOCK_ROWS, k, cols);
+        });
+        rows_out.push(StageRow {
+            layer: l.name.clone(),
+            stage: "dense_fwd",
+            k,
+            cols,
+            sparsity: 0.0,
+            issues_scalar: scalar_model.dense_issues(BLOCK_ROWS, k, cols),
+            issues_simd: simd_model.dense_issues(BLOCK_ROWS, k, cols),
+            scalar_us: ts.median.as_secs_f64() * 1e6,
+            simd_us: tv.median.as_secs_f64() * 1e6,
+            predicted_speedup: simd_model.predicted_dense_speedup(BLOCK_ROWS, k, cols),
+        });
+
+        // sparse forward through the CSC panels
+        let ts = bench(warm, runs, || {
+            y.fill(0.0);
+            simd::matmul_csc_rows(SimdBackend::Scalar, &mut y, &x, &w, sl.csc_view(), 0, k, cols);
+        });
+        let tv = bench(warm, runs, || {
+            y.fill(0.0);
+            simd::matmul_csc_rows(backend, &mut y, &x, &w, sl.csc_view(), 0, k, cols);
+        });
+        rows_out.push(StageRow {
+            layer: l.name.clone(),
+            stage: "panel_fwd",
+            k,
+            cols,
+            sparsity,
+            issues_scalar: scalar_model.panel_issues(BLOCK_ROWS, csc_slots),
+            issues_simd: simd_model.panel_issues(BLOCK_ROWS, csc_slots),
+            scalar_us: ts.median.as_secs_f64() * 1e6,
+            simd_us: tv.median.as_secs_f64() * 1e6,
+            predicted_speedup: scalar_model.panel_issues(BLOCK_ROWS, csc_slots) as f64
+                / simd_model.panel_issues(BLOCK_ROWS, csc_slots).max(1) as f64,
+        });
+
+        // sparse transposed product through the CSR panels
+        let ts = bench(warm, runs, || {
+            dx.fill(0.0);
+            simd::dy_wt_csr_rows(SimdBackend::Scalar, &mut dx, &dy, &w, sl.csr_view(), 0, k, cols);
+        });
+        let tv = bench(warm, runs, || {
+            dx.fill(0.0);
+            simd::dy_wt_csr_rows(backend, &mut dx, &dy, &w, sl.csr_view(), 0, k, cols);
+        });
+        rows_out.push(StageRow {
+            layer: l.name.clone(),
+            stage: "panel_dywt",
+            k,
+            cols,
+            sparsity,
+            issues_scalar: scalar_model.panel_issues(BLOCK_ROWS, csr_slots),
+            issues_simd: simd_model.panel_issues(BLOCK_ROWS, csr_slots),
+            scalar_us: ts.median.as_secs_f64() * 1e6,
+            simd_us: tv.median.as_secs_f64() * 1e6,
+            predicted_speedup: scalar_model.panel_issues(BLOCK_ROWS, csr_slots) as f64
+                / simd_model.panel_issues(BLOCK_ROWS, csr_slots).max(1) as f64,
+        });
+    }
+    rows_out
+}
+
+/// Serialise the sweep to `BENCH_roofline.json` — see docs/BENCHMARKS.md.
+fn write_json(rows: &[StageRow], backend: SimdBackend, smoke: bool) -> std::io::Result<()> {
+    let mut body = String::new();
+    for (i, r) in rows.iter().enumerate() {
+        if i > 0 {
+            body.push_str(",\n");
+        }
+        body.push_str(&format!(
+            "    {{\"layer\": \"{}\", \"stage\": \"{}\", \"k\": {}, \"cols\": {}, \
+             \"sparsity\": {:.4}, \"issues_scalar\": {}, \"issues_simd\": {}, \
+             \"scalar_us\": {:.3}, \"simd_us\": {:.3}, \"speedup\": {:.3}, \
+             \"predicted_speedup\": {:.3}, \"ns_per_issue\": {:.3}}}",
+            r.layer,
+            r.stage,
+            r.k,
+            r.cols,
+            r.sparsity,
+            r.issues_scalar,
+            r.issues_simd,
+            r.scalar_us,
+            r.simd_us,
+            r.measured_speedup(),
+            r.predicted_speedup,
+            r.ns_per_issue()
+        ));
+    }
+    let text = format!(
+        "{{\n  \"bench\": \"roofline\",\n  \"mode\": \"{}\",\n  \"backend\": \"{}\",\n  \
+         \"lanes\": {},\n  \"block_rows\": {},\n  \
+         \"gate\": \"smoke: dense_fwd speedup >= 2x on the widest paper layer\",\n  \
+         \"rows\": [\n{}\n  ]\n}}\n",
+        if smoke { "smoke" } else { "full" },
+        backend.name(),
+        LANES,
+        BLOCK_ROWS,
+        body
+    );
+    std::fs::write("BENCH_roofline.json", text)
+}
 
 fn main() {
-    println!("{}", fig1_roofline());
-    let stats = bench(3, 20, fig1_roofline);
-    report("bench/roofline(fig1_table)", stats, "");
+    let smoke = std::env::args().any(|arg| arg == "--smoke")
+        || std::env::var_os("LG_BENCH_SMOKE").is_some();
+
+    let backend = SimdBackend::from_env().resolve();
+    let forced_scalar =
+        std::env::var("LG_SIMD").map(|v| v.trim().eq_ignore_ascii_case("scalar")).unwrap_or(false);
+    println!(
+        "roofline: dispatched backend = {} (lanes {}), LG_SIMD {}",
+        backend.name(),
+        if backend == SimdBackend::Scalar { 1 } else { LANES },
+        std::env::var("LG_SIMD").map_or_else(|_| "unset".to_string(), |v| format!("\"{v}\""))
+    );
+    if cfg!(target_arch = "x86_64") && backend == SimdBackend::Scalar && !forced_scalar {
+        eprintln!(
+            "REGRESSION: silent scalar fallback — x86_64 host dispatched the scalar backend \
+             without LG_SIMD=scalar asking for it"
+        );
+        std::process::exit(1);
+    }
+
+    let rows = stage_sweep(backend, smoke);
+    for r in &rows {
+        println!(
+            "{:<40} scalar {:>9.1}us  {} {:>9.1}us  speedup {:>5.2}x (predicted {:>5.2}x)  \
+             {:>6.2} ns/issue",
+            format!("bench/roofline@{}({})", r.layer, r.stage),
+            r.scalar_us,
+            backend.name(),
+            r.simd_us,
+            r.measured_speedup(),
+            r.predicted_speedup,
+            r.ns_per_issue()
+        );
+    }
+    write_json(&rows, backend, smoke).expect("writing BENCH_roofline.json");
+    println!("roofline sweep written to BENCH_roofline.json");
+
+    // smoke gate: SIMD dense matmul must carry its weight on the widest
+    // layer (skipped when scalar was explicitly requested)
+    if backend != SimdBackend::Scalar {
+        let widest = rows
+            .iter()
+            .filter(|r| r.stage == "dense_fwd")
+            .max_by_key(|r| r.k * r.cols)
+            .expect("sweep has a dense stage");
+        let speedup = widest.measured_speedup();
+        println!(
+            "gate: dense_fwd on {} ({}x{}): {speedup:.2}x vs scalar (need >= 2x)",
+            widest.layer, widest.k, widest.cols
+        );
+        if speedup < 2.0 {
+            eprintln!(
+                "REGRESSION: SIMD dense matmul on the widest paper layer is only {speedup:.2}x \
+                 scalar (backend {}, need >= 2x)",
+                backend.name()
+            );
+            if smoke {
+                std::process::exit(1);
+            }
+        }
+    } else {
+        println!("gate: skipped (scalar backend explicitly requested)");
+    }
+
+    if !smoke {
+        // the Fig. 1 system roofline table this bench originally carried
+        println!("{}", fig1_roofline());
+        let stats = bench(3, 20, fig1_roofline);
+        report("bench/roofline(fig1_table)", stats, "");
+    }
 }

@@ -290,6 +290,61 @@ impl FpgaModel {
     }
 }
 
+/// Cost model for the *host* SIMD kernel stages (`runtime::simd`) —
+/// the CPU mirror of the accelerator's VPU lane array.  Where
+/// [`FpgaModel`] predicts cycles for the FPGA datapath,
+/// `HostKernelModel` predicts issue slots for the vectorized host
+/// kernels, so `benches/roofline.rs` can put a predicted ceiling next
+/// to every measured stage: a dense stage issues `ceil(cols/lanes)`
+/// vector ops per (row, weight-row) pair, and a lane-padded OSEL panel
+/// stage issues exactly its padded survivor slots.  Scalar issue
+/// (`lanes = 1`) is the baseline the measured speedups are read
+/// against.
+#[derive(Debug, Clone, Copy)]
+pub struct HostKernelModel {
+    /// MAC slots retired per issue per worker: the SIMD lane count of
+    /// the dispatched backend, or 1 for the scalar reference.
+    pub lanes: usize,
+}
+
+impl HostKernelModel {
+    /// The scalar-issue baseline.
+    pub fn scalar() -> Self {
+        HostKernelModel { lanes: 1 }
+    }
+
+    /// A vector backend retiring `lanes` MACs per issue.
+    pub fn vector(lanes: usize) -> Self {
+        HostKernelModel { lanes: lanes.max(1) }
+    }
+
+    /// Predicted issue slots for a dense stage (`matmul` /
+    /// `matmul_masked` / `xt_dy` / `dy_wt`): every activation row walks
+    /// `k` weight rows of `ceil(cols / lanes)` vector issues (the
+    /// ragged tail rounds up to one issue).
+    pub fn dense_issues(&self, rows: usize, k: usize, cols: usize) -> u64 {
+        (rows * k) as u64 * cols.div_ceil(self.lanes) as u64
+    }
+
+    /// Predicted issue slots for a lane-padded panel stage
+    /// (`matmul_csc_rows` / `dy_wt_csr_rows`): `padded_slots` is the
+    /// panel's total padded survivor count (`csc_ptr`/`pad_row_ptr`
+    /// last entry — already a multiple of the lane width), streamed
+    /// once per activation row.
+    pub fn panel_issues(&self, rows: usize, padded_slots: usize) -> u64 {
+        rows as u64 * (padded_slots as u64).div_ceil(self.lanes as u64)
+    }
+
+    /// The model's predicted speedup of this backend over scalar issue
+    /// on a dense stage — the roofline ceiling the measured speedup is
+    /// plotted under (ties to `lanes` exactly on lane-multiple widths,
+    /// less on ragged ones).
+    pub fn predicted_dense_speedup(&self, rows: usize, k: usize, cols: usize) -> f64 {
+        HostKernelModel::scalar().dense_issues(rows, k, cols) as f64
+            / self.dense_issues(rows, k, cols) as f64
+    }
+}
+
 /// Published speedup ranges of the state-of-the-art sparse training
 /// accelerators (Fig. 13's comparison row), linearly interpolated over
 /// their evaluated sparsity span — the same interpolation the paper uses
@@ -390,6 +445,31 @@ mod tests {
         assert!(dense.latency_s < 0.045, "dense latency {}", dense.latency_s);
         let g4 = m.iteration(Scenario { agents: 8, batch: 16, groups: 4 });
         assert!(g4.latency_s < 0.012, "G=4 latency {}", g4.latency_s);
+    }
+
+    #[test]
+    fn host_model_dense_issue_accounting() {
+        let v = HostKernelModel::vector(8);
+        let s = HostKernelModel::scalar();
+        // lane-multiple width: exactly lanes× fewer issues
+        assert_eq!(s.dense_issues(4, 16, 64), 4 * 16 * 64);
+        assert_eq!(v.dense_issues(4, 16, 64), 4 * 16 * 8);
+        assert!((v.predicted_dense_speedup(4, 16, 64) - 8.0).abs() < 1e-12);
+        // ragged width rounds the tail up to one issue per weight row
+        assert_eq!(v.dense_issues(1, 1, 9), 2);
+        assert!(v.predicted_dense_speedup(1, 1, 9) < 8.0);
+        // lanes clamp: vector(0) degenerates to scalar issue
+        assert_eq!(HostKernelModel::vector(0).dense_issues(2, 3, 5), 2 * 3 * 5);
+    }
+
+    #[test]
+    fn host_model_panel_issue_accounting() {
+        let v = HostKernelModel::vector(8);
+        // padded slots are already lane multiples: one issue per chunk
+        assert_eq!(v.panel_issues(3, 24), 3 * 3);
+        // scalar streams every padded slot
+        assert_eq!(HostKernelModel::scalar().panel_issues(3, 24), 72);
+        assert_eq!(v.panel_issues(5, 0), 0, "empty panel issues nothing");
     }
 
     #[test]

@@ -7,6 +7,8 @@
 //! simulator integration tests to validate the datapath against a plain
 //! matvec); cycle accounting lives in [`crate::accel::core`].
 
+use crate::runtime::simd;
+
 /// Functional VPU: one MAC per cycle into one of four row accumulators.
 #[derive(Debug, Clone, Default)]
 pub struct Vpu {
@@ -42,9 +44,59 @@ impl Vpu {
     }
 }
 
+/// A row of [`simd::LANES`] VPUs — the functional twin of one host
+/// vector register.  The host SIMD panel kernels (`runtime::simd`)
+/// stream a compressed row's survivors 8 to a register and reduce the
+/// lane partials in fixed order; this array performs the identical
+/// reduction on the modelled FPGA datapath: survivors round-robin
+/// across the lane VPUs (slot 0), then the accumulators drain in lane
+/// order through [`simd::hsum`].  The `vpu_lane_array_matches_simd`
+/// test pins the two bitwise, which is what lets the performance model
+/// treat measured host-kernel stage times as a proxy for VPU-array
+/// occupancy (see [`crate::accel::perf::HostKernelModel`] and
+/// `benches/roofline.rs`).
+#[derive(Debug, Clone)]
+pub struct VpuLaneArray {
+    vpus: [Vpu; simd::LANES],
+}
+
+impl Default for VpuLaneArray {
+    fn default() -> Self {
+        VpuLaneArray { vpus: std::array::from_fn(|_| Vpu::new()) }
+    }
+}
+
+impl VpuLaneArray {
+    pub fn new() -> Self {
+        VpuLaneArray::default()
+    }
+
+    /// Reduce one output element: stream `(activation, weight)` survivor
+    /// pairs round-robin across the lane VPUs, then drain in fixed lane
+    /// order.  Bit-identical to the host panel kernels' vector
+    /// accumulate + [`simd::hsum`].
+    pub fn reduce(&mut self, acts: &[f32], weights: &[f32]) -> f32 {
+        debug_assert_eq!(acts.len(), weights.len());
+        for (i, (&a, &w)) in acts.iter().zip(weights).enumerate() {
+            self.vpus[i % simd::LANES].mac(&[a, 0.0, 0.0, 0.0], 0, w);
+        }
+        let mut lanes = [0.0f32; simd::LANES];
+        for (l, v) in self.vpus.iter_mut().enumerate() {
+            lanes[l] = v.drain(0);
+        }
+        simd::hsum(&lanes)
+    }
+
+    /// Total MACs retired across the lane array.
+    pub fn macs(&self) -> u64 {
+        self.vpus.iter().map(|v| v.macs).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Pcg32;
 
     #[test]
     fn mac_accumulates_per_slot() {
@@ -57,5 +109,29 @@ mod tests {
         assert_eq!(v.macs, 3);
         assert_eq!(v.drain(0), 11.0);
         assert_eq!(v.accumulators()[0], 0.0);
+    }
+
+    /// The VPU lane array must perform bit-for-bit the reduction the
+    /// host SIMD panel kernels perform on a survivor chunk: lane
+    /// `i % 8` accumulates survivor `i`, partials reduce through
+    /// [`simd::hsum`] in fixed lane order.
+    #[test]
+    fn vpu_lane_array_matches_simd() {
+        let mut rng = Pcg32::seeded(31);
+        for &n in &[0usize, 1, 7, 8, 9, 23, 64, 67] {
+            let acts: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+            let weights: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+
+            let mut lanes = [0.0f32; simd::LANES];
+            for i in 0..n {
+                lanes[i % simd::LANES] += acts[i] * weights[i];
+            }
+            let want = simd::hsum(&lanes);
+
+            let mut arr = VpuLaneArray::new();
+            let got = arr.reduce(&acts, &weights);
+            assert_eq!(got.to_bits(), want.to_bits(), "n={n}");
+            assert_eq!(arr.macs(), n as u64, "n={n}");
+        }
     }
 }

@@ -4,7 +4,7 @@ use std::path::PathBuf;
 
 use crate::env::EnvConfig;
 use crate::manifest::ModelTopology;
-use crate::runtime::ExecMode;
+use crate::runtime::{ExecMode, SimdBackend};
 
 /// Which pruning algorithm to run (Fig. 4(a) candidates).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -86,8 +86,9 @@ pub struct TrainConfig {
     /// Native-runtime execution path for the masked matmuls (`--exec`):
     /// [`ExecMode::Sparse`] computes on the OSEL-compressed weights
     /// (default), [`ExecMode::DenseMasked`] is the dense ⊙-mask
-    /// reference.  Bit-identical results either way (parity-tested);
-    /// only throughput differs.
+    /// reference.  ULP-equivalent results (bit-identical under
+    /// [`TrainConfig::strict_accum`], parity-tested); only throughput
+    /// differs.
     pub exec: ExecMode,
     /// Step the whole minibatch in lockstep through one batched
     /// `policy_fwd_a{A}x{B}` kernel call per timestep (`--batch-exec`)
@@ -118,6 +119,17 @@ pub struct TrainConfig {
     /// pins the topology (requesting a conflicting non-default one is
     /// an error).
     pub model: ModelTopology,
+    /// SIMD kernel backend for the native runtime (`--simd
+    /// scalar|auto|avx2|neon`; default: the `LG_SIMD` environment
+    /// override, else CPU auto-detection).  The dense execution path is
+    /// bit-identical across backends, so this only changes throughput.
+    pub simd: SimdBackend,
+    /// Force the sparse kernels to accumulate in exact dense-reference
+    /// order (`--strict-accum`): bit-identical to `--exec dense` at the
+    /// cost of the vectorized OSEL panel path.  Off by default — the
+    /// panel path reorders only the survivor-lane grouping and is
+    /// ULP-bounded against dense (`rust/tests/simd_kernels.rs`).
+    pub strict_accum: bool,
 }
 
 impl Default for TrainConfig {
@@ -140,6 +152,8 @@ impl Default for TrainConfig {
             checkpoint_dir: None,
             metrics_out: None,
             model: ModelTopology::paper(),
+            simd: SimdBackend::from_env(),
+            strict_accum: false,
         }
     }
 }

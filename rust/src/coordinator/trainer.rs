@@ -174,6 +174,9 @@ impl Trainer {
                 manifest.dims.n_actions
             ));
         }
+        // Stamp the configured SIMD kernel backend before any loads so
+        // every cached executable dispatches consistently.
+        runtime.set_simd(cfg.simd);
         let exe_fwd = runtime.load(&format!("policy_fwd_a{}", cfg.agents))?;
         let exe_fwd_batched = if cfg.batch_exec && cfg.batch > 1 {
             Some(runtime.load(&format!("policy_fwd_a{}x{}", cfg.agents, cfg.batch))?)
@@ -444,7 +447,8 @@ impl Trainer {
                             SparseModel::from_encodings(manifest, &f.encodings, cores)?
                         }
                         _ => SparseModel::from_dense_masks(manifest, &self.state.masks, cores)?,
-                    };
+                    }
+                    .strict(self.cfg.strict_accum);
                     self.exe_fwd.upload_sparse(1, &masks_t, Arc::new(model))?
                 }
             };

@@ -10,15 +10,18 @@
 //!                      [--model tiny|paper|wide] [--print-plan]
 //!                      [--rollouts R] [--exec sparse|dense]
 //!                      [--batch-exec] [--intra-threads T]
+//!                      [--simd scalar|auto|avx2|neon] [--strict-accum]
 //!                      [--pruner dense|flgw:G|iterative:P|bc:BxF|gst:BxF:P]
 //!                      [--seed S] [--csv PATH] [--metrics-out PATH]
 //!                      [--save-every N] [--checkpoint-dir DIR]
 //!                      [--resume CKPT]
 //! learning-group eval  --checkpoint CKPT [--episodes E] [--rollouts R]
 //!                      [--batch B] [--intra-threads T]
+//!                      [--simd B] [--strict-accum]
 //!                      [--exec sparse|dense] [--seed S] [--json PATH]
 //! learning-group serve --checkpoint CKPT [--seconds S] [--rollouts R]
 //!                      [--batch B] [--intra-threads T]
+//!                      [--simd B] [--strict-accum]
 //!                      [--exec sparse|dense] [--seed S] [--json PATH]
 //! learning-group roofline            # Fig 1
 //! learning-group accuracy [--iterations N] [--env E] [--rollouts R] [--fig9]
@@ -42,8 +45,11 @@
 //! minibatch on R parallel worker threads; metrics are identical to the
 //! sequential run for a fixed seed.  `--exec sparse|dense` picks the
 //! native-runtime path: compute on the OSEL-compressed weights
-//! (default) or the dense ⊙-mask reference — bit-identical results,
-//! different throughput (see `cargo bench --bench hotpath`).
+//! (default) or the dense ⊙-mask reference — ULP-equivalent results
+//! (bit-identical under `--strict-accum`), different throughput (see
+//! `cargo bench --bench hotpath`).  `--simd` pins the vector kernel
+//! backend (`LG_SIMD` is the env equivalent); the dense path is
+//! bit-identical across backends.
 //! `--batch-exec` steps the whole minibatch in lockstep through one
 //! batched `policy_fwd_a{A}x{B}` kernel call per timestep, and
 //! `--intra-threads T` fans the sparse kernels' rows out over T scoped
@@ -69,7 +75,7 @@ use learning_group::coordinator::{ExecMode, PrunerChoice, TrainConfig, Trainer};
 use learning_group::env::EnvConfig;
 use learning_group::experiments;
 use learning_group::manifest::{Manifest, ModelTopology};
-use learning_group::runtime::{plan, Runtime};
+use learning_group::runtime::{plan, Runtime, SimdBackend};
 use learning_group::serve::{PolicyServer, ServeMode, ServeOptions};
 
 struct Args {
@@ -112,6 +118,17 @@ impl Args {
     }
 }
 
+/// `--simd scalar|auto|avx2|neon` — defaults to the `LG_SIMD`
+/// environment override, else CPU auto-detection; an explicit flag that
+/// names an unsupported backend is clamped to scalar by the runtime.
+fn parse_simd(args: &Args) -> Result<SimdBackend> {
+    match args.flags.get("simd") {
+        None => Ok(SimdBackend::from_env()),
+        Some(s) => SimdBackend::parse(s)
+            .ok_or_else(|| anyhow!("unknown simd backend {s:?} (scalar | auto | avx2 | neon)")),
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let agents: usize = args.get("agents", 3)?;
     let pruner_s = args
@@ -148,6 +165,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             .ok_or_else(|| anyhow!("unknown model preset {s:?} (tiny | paper | wide)"))?,
         None => ModelTopology::paper(),
     };
+    let simd = parse_simd(args)?;
     let cfg = TrainConfig {
         batch: args.get("batch", 4)?,
         iterations: args.get("iterations", 200)?,
@@ -162,6 +180,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         checkpoint_dir: checkpoint_dir.map(PathBuf::from),
         metrics_out: args.flags.get("metrics-out").map(PathBuf::from),
         model: model.clone(),
+        simd,
+        strict_accum: args.has("strict-accum"),
         ..TrainConfig::default().with_agents(agents)
     }
     .with_env(env);
@@ -286,7 +306,15 @@ fn cmd_eval(args: &Args, sustained: bool) -> Result<()> {
     }
     let manifest = Manifest::for_topology(Manifest::default_dir(), &ckpt.meta.model)?;
     let mut rt = Runtime::new(manifest)?;
-    let server = PolicyServer::from_checkpoint(&mut rt, &ckpt, exec, intra_threads, batch)?;
+    rt.set_simd(parse_simd(args)?);
+    let server = PolicyServer::from_checkpoint_opts(
+        &mut rt,
+        &ckpt,
+        exec,
+        intra_threads,
+        batch,
+        args.has("strict-accum"),
+    )?;
     eprintln!(
         "serving checkpoint {path}: env={} model={} iteration={} exec={} workers={workers} \
          batch={batch} intra-threads={intra_threads}",
@@ -366,6 +394,8 @@ fn main() -> Result<()> {
             println!("             --exec sparse|dense (compressed vs dense-masked kernels)");
             println!("             --batch-exec (lockstep minibatch: one batched kernel call/step)");
             println!("             --intra-threads T (sparse-kernel row fan-out threads)");
+            println!("             --simd scalar|auto|avx2|neon (kernel backend; also LG_SIMD env)");
+            println!("             --strict-accum (sparse kernels keep exact dense accumulation order)");
             println!("             --pruner dense|flgw:G|iterative:P|bc:BxF|gst:BxF:P");
             println!("             --save-every N --checkpoint-dir DIR (periodic checkpoints)");
             println!("             --resume CKPT (continue bit-identically from a checkpoint)");

@@ -14,6 +14,7 @@ use crate::manifest::{ArtifactSpec, Manifest};
 use crate::runtime::device::DeviceRepr;
 use crate::runtime::native;
 use crate::runtime::plan::{PlanOp, Plans};
+use crate::runtime::simd::SimdBackend;
 use crate::runtime::sparse::SparseModel;
 use crate::runtime::{Arg, DeviceTensor, HostTensor};
 
@@ -35,11 +36,25 @@ pub struct Executable {
     name: String,
     spec: ArtifactSpec,
     backend: ExecBackend,
+    simd: SimdBackend,
 }
 
 impl Executable {
     pub(crate) fn new(name: String, spec: ArtifactSpec, backend: ExecBackend) -> Self {
-        Executable { name, spec, backend }
+        Executable { name, spec, backend, simd: SimdBackend::from_env() }
+    }
+
+    /// Override the SIMD kernel backend (resolved against what the CPU
+    /// supports).  The runtime applies this at load time from its own
+    /// setting; tests use it to force scalar execution.
+    pub(crate) fn with_simd(mut self, simd: SimdBackend) -> Self {
+        self.simd = simd.resolve();
+        self
+    }
+
+    /// Which SIMD kernel backend native executions dispatch to.
+    pub fn simd(&self) -> SimdBackend {
+        self.simd
     }
 
     /// Artifact name (e.g. `"policy_fwd_a3"`).
@@ -182,7 +197,8 @@ impl Executable {
                         },
                     }
                 }
-                let outs = native::execute(op, manifest, plans.as_deref(), &views, sparse)?;
+                let outs =
+                    native::execute(op, manifest, plans.as_deref(), &views, sparse, self.simd)?;
                 self.check_outputs(outs)
             }
             #[cfg(feature = "pjrt")]

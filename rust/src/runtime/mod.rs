@@ -42,13 +42,16 @@ pub(crate) mod native;
 #[cfg(feature = "pjrt")]
 pub(crate) mod pjrt;
 pub mod plan;
+pub mod simd;
 pub mod sparse;
 
 mod tensor;
 
 pub use device::{Arg, DeviceTensor};
 pub use executable::Executable;
+pub use native::{dy_wt_sparse_into, matmul_sparse_into};
 pub use plan::{BackwardPlan, ForwardPlan, LayerOp, PlanOp, Plans};
+pub use simd::{SimdBackend, LANES};
 pub use sparse::{ExecMode, SparseLayer, SparseModel};
 pub use tensor::HostTensor;
 
@@ -72,6 +75,10 @@ pub struct Runtime {
     /// on the first op that interprets it and shared by every loaded
     /// executable.
     plans: Option<Arc<Plans>>,
+    /// SIMD kernel backend stamped onto every loaded executable
+    /// (defaults to the `LG_SIMD` environment override, else CPU
+    /// auto-detection).
+    simd: SimdBackend,
     #[cfg(feature = "pjrt")]
     client: Option<pjrt::PjrtClient>,
 }
@@ -84,6 +91,7 @@ impl Runtime {
             manifest: Arc::new(manifest),
             cache: HashMap::new(),
             plans: None,
+            simd: SimdBackend::from_env(),
             #[cfg(feature = "pjrt")]
             client: None,
         })
@@ -97,6 +105,23 @@ impl Runtime {
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
+    }
+
+    /// Select the SIMD kernel backend for all subsequently loaded
+    /// executables (resolved against CPU support).  Drops the
+    /// executable cache so already-loaded artifacts pick up the new
+    /// backend on their next `load`.
+    pub fn set_simd(&mut self, simd: SimdBackend) {
+        let resolved = simd.resolve();
+        if resolved != self.simd {
+            self.simd = resolved;
+            self.cache.clear();
+        }
+    }
+
+    /// The SIMD kernel backend new executables dispatch to.
+    pub fn simd(&self) -> SimdBackend {
+        self.simd
     }
 
     /// Backend platform description (e.g. `"native-cpu"`).
@@ -165,7 +190,8 @@ impl Runtime {
             name.to_string(),
             spec,
             ExecBackend::Native { op, manifest: self.manifest.clone(), plans },
-        ))
+        )
+        .with_simd(self.simd))
     }
 
     /// The compiled forward/backward plan over this runtime's manifest

@@ -69,19 +69,23 @@ use crate::manifest::Manifest;
 use crate::runtime::plan::{
     Activation, CommSrc, ForwardPlan, LayerOp, ParamRef, PlanOp, Plans, SrcRef,
 };
+use crate::runtime::simd::{self, SimdBackend};
 use crate::runtime::sparse::{SparseLayer, SparseModel};
 use crate::runtime::HostTensor;
 
 /// Execute `op` on manifest-validated inputs (the [`super::Executable`]
 /// wrapper has already checked element counts and dtypes against the
 /// artifact spec).  `plans` carries the compiled forward/backward plan
-/// for the ops that interpret it (`policy_fwd`, `grad_episode`).
+/// for the ops that interpret it (`policy_fwd`, `grad_episode`);
+/// `backend` selects the SIMD kernel implementation (see
+/// `runtime::simd`).
 pub(crate) fn execute(
     op: &PlanOp,
     m: &Manifest,
     plans: Option<&Plans>,
     inputs: &[&HostTensor],
     sparse: Option<&SparseModel>,
+    backend: SimdBackend,
 ) -> Result<Vec<HostTensor>> {
     let need_plan = || plans.ok_or_else(|| anyhow!("{op:?} needs a compiled layer plan"));
     match *op {
@@ -96,6 +100,7 @@ pub(crate) fn execute(
             inputs[4].as_f32()?,
             inputs[5].as_f32()?,
             sparse,
+            backend,
         ),
         PlanOp::GradEpisode { agents } => grad_episode(
             m,
@@ -108,6 +113,7 @@ pub(crate) fn execute(
             inputs[4].as_f32()?,
             inputs[5].as_f32()?,
             sparse,
+            backend,
         ),
         PlanOp::ApplyUpdate => Ok(apply_update(
             m,
@@ -133,104 +139,9 @@ fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
 }
 
-/// y (rows x cols) += x (rows x k) @ w (k x cols).
-fn matmul_into(y: &mut [f32], x: &[f32], w: &[f32], rows: usize, k: usize, cols: usize) {
-    for i in 0..rows {
-        for kk in 0..k {
-            let xv = x[i * k + kk];
-            if xv == 0.0 {
-                continue;
-            }
-            let wrow = &w[kk * cols..(kk + 1) * cols];
-            let yrow = &mut y[i * cols..(i + 1) * cols];
-            for j in 0..cols {
-                yrow[j] += xv * wrow[j];
-            }
-        }
-    }
-}
-
-/// y (rows x cols) += x (rows x k) @ (w ⊙ mask) (k x cols).
-fn matmul_masked_into(
-    y: &mut [f32],
-    x: &[f32],
-    w: &[f32],
-    mask: &[f32],
-    rows: usize,
-    k: usize,
-    cols: usize,
-) {
-    for i in 0..rows {
-        for kk in 0..k {
-            let xv = x[i * k + kk];
-            if xv == 0.0 {
-                continue;
-            }
-            let wrow = &w[kk * cols..(kk + 1) * cols];
-            let mrow = &mask[kk * cols..(kk + 1) * cols];
-            let yrow = &mut y[i * cols..(i + 1) * cols];
-            for j in 0..cols {
-                yrow[j] += xv * wrow[j] * mrow[j];
-            }
-        }
-    }
-}
-
-/// dw (k x cols) += x^T @ dy, with x (rows x k) and dy (rows x cols).
-fn xt_dy_into(dw: &mut [f32], x: &[f32], dy: &[f32], rows: usize, k: usize, cols: usize) {
-    for i in 0..rows {
-        for kk in 0..k {
-            let xv = x[i * k + kk];
-            if xv == 0.0 {
-                continue;
-            }
-            let dyrow = &dy[i * cols..(i + 1) * cols];
-            let dwrow = &mut dw[kk * cols..(kk + 1) * cols];
-            for j in 0..cols {
-                dwrow[j] += xv * dyrow[j];
-            }
-        }
-    }
-}
-
-/// dx (rows x k) += dy (rows x cols) @ w^T, with w (k x cols).
-fn dy_wt_into(dx: &mut [f32], dy: &[f32], w: &[f32], rows: usize, k: usize, cols: usize) {
-    for i in 0..rows {
-        let dyrow = &dy[i * cols..(i + 1) * cols];
-        for kk in 0..k {
-            let wrow = &w[kk * cols..(kk + 1) * cols];
-            let mut acc = 0.0f32;
-            for j in 0..cols {
-                acc += dyrow[j] * wrow[j];
-            }
-            dx[i * k + kk] += acc;
-        }
-    }
-}
-
-/// dx (rows x k) += dy (rows x cols) @ (w ⊙ mask)^T, with w (k x cols).
-fn dy_wt_masked_into(
-    dx: &mut [f32],
-    dy: &[f32],
-    w: &[f32],
-    mask: &[f32],
-    rows: usize,
-    k: usize,
-    cols: usize,
-) {
-    for i in 0..rows {
-        let dyrow = &dy[i * cols..(i + 1) * cols];
-        for kk in 0..k {
-            let wrow = &w[kk * cols..(kk + 1) * cols];
-            let mrow = &mask[kk * cols..(kk + 1) * cols];
-            let mut acc = 0.0f32;
-            for j in 0..cols {
-                acc += dyrow[j] * wrow[j] * mrow[j];
-            }
-            dx[i * k + kk] += acc;
-        }
-    }
-}
+// The five dense kernel stages (`matmul`, `matmul_masked`, `xt_dy`,
+// `dy_wt`, `dy_wt_masked`) live in `runtime::simd` now — one generic
+// 8-lane body each, dispatched over the runtime-selected backend.
 
 /// Minimum output rows each worker must receive before the sparse
 /// kernels fan out over scoped threads: below this the spawn cost
@@ -250,8 +161,10 @@ fn sparse_workers(sl: &SparseLayer, rows: usize) -> usize {
         .max(1)
 }
 
-/// The sequential body of [`matmul_sparse_into`] over output rows
-/// `row0 .. row0 + y.len() / cols` (`y` is that chunk of the output).
+/// The strict-accumulation body of [`matmul_sparse_into`] over output
+/// rows `row0 .. row0 + y.len() / cols` (`y` is that chunk of the
+/// output): the original scalar scatter walk, which visits the
+/// surviving terms in exactly the dense kernel's order.
 fn matmul_sparse_rows(
     y: &mut [f32],
     x: &[f32],
@@ -278,13 +191,35 @@ fn matmul_sparse_rows(
     }
 }
 
+/// One chunk of the sparse forward: the strict scatter walk, or the
+/// lane-padded CSC panels through the SIMD gather kernel.
+fn matmul_sparse_chunk(
+    y: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    sl: &SparseLayer,
+    backend: SimdBackend,
+    row0: usize,
+    k: usize,
+    cols: usize,
+) {
+    if sl.strict {
+        matmul_sparse_rows(y, x, w, sl, row0, k, cols);
+    } else {
+        simd::matmul_csc_rows(backend, y, x, w, sl.csc_view(), row0, k, cols);
+    }
+}
+
 /// y (rows x cols) += x (rows x k) @ (w ⊙ mask), with the surviving
 /// positions taken from the compressed layer structure instead of the
-/// dense mask.  Bit-identical to [`matmul_masked_into`] up to the sign
-/// of exact zeros: every skipped term multiplies a 0.0 mask entry.
-/// Weight rows are walked core by core through the load allocation
-/// (row-based partition — contiguous chunks in ascending order, so the
-/// accumulation order matches the dense kernel exactly).
+/// dense mask.  The default path streams the lane-padded OSEL panels
+/// through the SIMD gather kernel (ULP-bounded against the dense
+/// reference — only the survivor lane-grouping reassociates); with
+/// `sl.strict` set (`--strict-accum`) it replays the scalar scatter
+/// walk, bit-identical to the dense kernel up to the sign of exact
+/// zeros (every skipped term multiplies a 0.0 mask entry, and weight
+/// rows are walked core by core through the contiguous ascending
+/// row-based partition).
 ///
 /// When the partition has more than one core and there are enough
 /// output rows (the batched lockstep path), the output rows are split
@@ -292,11 +227,12 @@ fn matmul_sparse_rows(
 /// threads.  Workers write disjoint output chunks and each runs the
 /// identical sequential walk for its rows, so the thread count is
 /// unobservable in the results.
-fn matmul_sparse_into(
+pub fn matmul_sparse_into(
     y: &mut [f32],
     x: &[f32],
     w: &[f32],
     sl: &SparseLayer,
+    backend: SimdBackend,
     rows: usize,
     k: usize,
     cols: usize,
@@ -305,19 +241,24 @@ fn matmul_sparse_into(
     debug_assert_eq!(y.len(), rows * cols);
     let workers = sparse_workers(sl, rows);
     if workers <= 1 {
-        matmul_sparse_rows(y, x, w, sl, 0, k, cols);
+        matmul_sparse_chunk(y, x, w, sl, backend, 0, k, cols);
         return;
     }
     let rows_per = rows.div_ceil(workers);
     std::thread::scope(|scope| {
         for (t, chunk) in y.chunks_mut(rows_per * cols).enumerate() {
-            scope.spawn(move || matmul_sparse_rows(chunk, x, w, sl, t * rows_per, k, cols));
+            scope
+                .spawn(move || matmul_sparse_chunk(chunk, x, w, sl, backend, t * rows_per, k, cols));
         }
     });
 }
 
-/// The sequential body of [`dy_wt_sparse_into`] over output rows
-/// `row0 .. row0 + dx.len() / k` (`dx` is that chunk of the output).
+/// The strict-accumulation body of [`dy_wt_sparse_into`] over output
+/// rows `row0 .. row0 + dx.len() / k` (`dx` is that chunk of the
+/// output).  The surviving terms bucket into lane `j % 8` and reduce
+/// in fixed lane order — exactly the dense `dy_wt` lane layout, so the
+/// skipped terms are the only difference (exact `±0.0` additions into
+/// the same buckets).
 fn dy_wt_sparse_rows(
     dx: &mut [f32],
     dy: &[f32],
@@ -332,13 +273,33 @@ fn dy_wt_sparse_rows(
         for core in &sl.alloc.per_core {
             for &kk in &core.rows {
                 let wrow = &w[kk * cols..(kk + 1) * cols];
-                let mut acc = 0.0f32;
+                let mut lanes = [0.0f32; simd::LANES];
                 for &j in sl.row(kk) {
-                    acc += dyrow[j as usize] * wrow[j as usize];
+                    let j = j as usize;
+                    lanes[j % simd::LANES] += dyrow[j] * wrow[j];
                 }
-                dxrow[kk] += acc;
+                dxrow[kk] += simd::hsum(&lanes);
             }
         }
+    }
+}
+
+/// One chunk of the sparse transposed product: strict lane buckets, or
+/// the lane-padded CSR panels through the SIMD gather kernel.
+fn dy_wt_sparse_chunk(
+    dx: &mut [f32],
+    dy: &[f32],
+    w: &[f32],
+    sl: &SparseLayer,
+    backend: SimdBackend,
+    row0: usize,
+    k: usize,
+    cols: usize,
+) {
+    if sl.strict {
+        dy_wt_sparse_rows(dx, dy, w, sl, row0, k, cols);
+    } else {
+        simd::dy_wt_csr_rows(backend, dx, dy, w, sl.csr_view(), row0, k, cols);
     }
 }
 
@@ -346,11 +307,12 @@ fn dy_wt_sparse_rows(
 /// compressed structure — the BPTT transposed product.  Same parity
 /// contract and same scoped-thread row fan-out as
 /// [`matmul_sparse_into`].
-fn dy_wt_sparse_into(
+pub fn dy_wt_sparse_into(
     dx: &mut [f32],
     dy: &[f32],
     w: &[f32],
     sl: &SparseLayer,
+    backend: SimdBackend,
     rows: usize,
     k: usize,
     cols: usize,
@@ -359,13 +321,14 @@ fn dy_wt_sparse_into(
     debug_assert_eq!(dx.len(), rows * k);
     let workers = sparse_workers(sl, rows);
     if workers <= 1 {
-        dy_wt_sparse_rows(dx, dy, w, sl, 0, k, cols);
+        dy_wt_sparse_chunk(dx, dy, w, sl, backend, 0, k, cols);
         return;
     }
     let rows_per = rows.div_ceil(workers);
     std::thread::scope(|scope| {
         for (t, chunk) in dx.chunks_mut(rows_per * k).enumerate() {
-            scope.spawn(move || dy_wt_sparse_rows(chunk, dy, w, sl, t * rows_per, k, cols));
+            scope
+                .spawn(move || dy_wt_sparse_chunk(chunk, dy, w, sl, backend, t * rows_per, k, cols));
         }
     });
 }
@@ -378,13 +341,14 @@ fn mm_masked(
     w: &[f32],
     mask: &[f32],
     sl: Option<&SparseLayer>,
+    backend: SimdBackend,
     rows: usize,
     k: usize,
     cols: usize,
 ) {
     match sl {
-        Some(sl) => matmul_sparse_into(y, x, w, sl, rows, k, cols),
-        None => matmul_masked_into(y, x, w, mask, rows, k, cols),
+        Some(sl) => matmul_sparse_into(y, x, w, sl, backend, rows, k, cols),
+        None => simd::matmul_masked(backend, y, x, w, mask, rows, k, cols),
     }
 }
 
@@ -395,13 +359,14 @@ fn dy_wt_mm(
     w: &[f32],
     mask: &[f32],
     sl: Option<&SparseLayer>,
+    backend: SimdBackend,
     rows: usize,
     k: usize,
     cols: usize,
 ) {
     match sl {
-        Some(sl) => dy_wt_sparse_into(dx, dy, w, sl, rows, k, cols),
-        None => dy_wt_masked_into(dx, dy, w, mask, rows, k, cols),
+        Some(sl) => dy_wt_sparse_into(dx, dy, w, sl, backend, rows, k, cols),
+        None => simd::dy_wt_masked(backend, dx, dy, w, mask, rows, k, cols),
     }
 }
 
@@ -460,6 +425,8 @@ struct PlanExec<'a> {
     /// `sparse_layers[i]` is the compressed structure of `ops[i]` when
     /// that op is a masked `Linear` executing in sparse mode.
     sparse_layers: Vec<Option<&'a SparseLayer>>,
+    /// Which SIMD kernel implementation every stage dispatches to.
+    simd: SimdBackend,
 }
 
 impl<'a> PlanExec<'a> {
@@ -468,6 +435,7 @@ impl<'a> PlanExec<'a> {
         params: &'a [f32],
         masks: &'a [f32],
         sparse: Option<&'a SparseModel>,
+        simd: SimdBackend,
     ) -> Self {
         let sparse_layers = plan
             .ops
@@ -479,7 +447,7 @@ impl<'a> PlanExec<'a> {
                 _ => None,
             })
             .collect();
-        PlanExec { plan, params, masks, sparse_layers }
+        PlanExec { plan, params, masks, sparse_layers, simd }
     }
 
     /// The flat-parameter slice of a compiled reference.
@@ -597,11 +565,20 @@ fn step_forward(
                             ex.wslice(w),
                             ex.mslice(w),
                             ex.sparse_layers[oi],
+                            ex.simd,
                             rows,
                             w.rows,
                             w.cols,
                         ),
-                        None => matmul_into(&mut dstv, srcv, ex.wslice(w), rows, w.rows, w.cols),
+                        None => simd::matmul(
+                            ex.simd,
+                            &mut dstv,
+                            srcv,
+                            ex.wslice(w),
+                            rows,
+                            w.rows,
+                            w.cols,
+                        ),
                     }
                 }
                 if *act == Activation::Tanh {
@@ -663,7 +640,7 @@ fn step_forward(
                 slots[*gates] = Vec::new();
             }
             LayerOp::Heads(hs) => {
-                matmul_into(&mut logits, &h2, ex.wslice(&hs.w_pi), rows, hd, nact);
+                simd::matmul(ex.simd, &mut logits, &h2, ex.wslice(&hs.w_pi), rows, hd, nact);
                 let b_pi = ex.wslice(&hs.b_pi);
                 for i in 0..rows {
                     for j in 0..nact {
@@ -678,7 +655,7 @@ fn step_forward(
                     }
                     value[i] = acc;
                 }
-                matmul_into(&mut glogits, &h2, ex.wslice(&hs.w_g), rows, hd, ngate);
+                simd::matmul(ex.simd, &mut glogits, &h2, ex.wslice(&hs.w_g), rows, hd, ngate);
                 let b_g = ex.wslice(&hs.b_g);
                 for i in 0..rows {
                     for j in 0..ngate {
@@ -703,8 +680,9 @@ fn policy_fwd(
     c: &[f32],
     gate_prev: &[f32],
     sparse: Option<&SparseModel>,
+    backend: SimdBackend,
 ) -> Result<Vec<HostTensor>> {
-    let ex = PlanExec::new(plan, params, masks, sparse);
+    let ex = PlanExec::new(plan, params, masks, sparse, backend);
     let acts = step_forward(&ex, batch, a, obs, h, c, gate_prev);
     Ok(vec![
         HostTensor::F32(acts.logits),
@@ -749,12 +727,13 @@ fn grad_episode(
     gate_seq: &[f32],
     returns: &[f32],
     sparse: Option<&SparseModel>,
+    backend: SimdBackend,
 ) -> Result<Vec<HostTensor>> {
     let plan = &plans.forward;
     let (hd, nact, ngate) = (plan.hidden, plan.n_actions, plan.n_gate);
     let (obs_dim, t_len) = (plan.obs_dim, plan.episode_len);
     let hy = m.hyper.clone();
-    let ex = PlanExec::new(plan, params, masks, sparse);
+    let ex = PlanExec::new(plan, params, masks, sparse, backend);
 
     // ---- forward, storing every step's activations and carry inputs
     let mut acts: Vec<StepActs> = Vec::with_capacity(t_len);
@@ -841,7 +820,15 @@ fn grad_episode(
                     // -- head parameter gradients
                     {
                         let (off, size) = (hs.w_pi.offset, hs.w_pi.size());
-                        xt_dy_into(&mut dparams[off..off + size], &sa.h2, &dlogits, a, hd, nact);
+                        simd::xt_dy(
+                            ex.simd,
+                            &mut dparams[off..off + size],
+                            &sa.h2,
+                            &dlogits,
+                            a,
+                            hd,
+                            nact,
+                        );
                         let off = hs.b_pi.offset;
                         for i in 0..a {
                             for j in 0..nact {
@@ -859,7 +846,15 @@ fn grad_episode(
                             dparams[off] += dvalue[i];
                         }
                         let (off, size) = (hs.w_g.offset, hs.w_g.size());
-                        xt_dy_into(&mut dparams[off..off + size], &sa.h2, &dglogits, a, hd, ngate);
+                        simd::xt_dy(
+                            ex.simd,
+                            &mut dparams[off..off + size],
+                            &sa.h2,
+                            &dglogits,
+                            a,
+                            hd,
+                            ngate,
+                        );
                         let off = hs.b_g.offset;
                         for i in 0..a {
                             for j in 0..ngate {
@@ -870,8 +865,8 @@ fn grad_episode(
 
                     // -- dL/dh2: heads plus the carry from step t+1
                     dh2.copy_from_slice(&dh_next);
-                    dy_wt_into(&mut dh2, &dlogits, ex.wslice(&hs.w_pi), a, hd, nact);
-                    dy_wt_into(&mut dh2, &dglogits, ex.wslice(&hs.w_g), a, hd, ngate);
+                    simd::dy_wt(ex.simd, &mut dh2, &dlogits, ex.wslice(&hs.w_pi), a, hd, nact);
+                    simd::dy_wt(ex.simd, &mut dh2, &dglogits, ex.wslice(&hs.w_g), a, hd, ngate);
                     let w_v = ex.wslice(&hs.w_v);
                     for i in 0..a {
                         for k in 0..hd {
@@ -942,7 +937,7 @@ fn grad_episode(
                         SrcRef::Slot(i) => &sa.slots[*i],
                     };
                     let mut raw = vec![0.0f32; w.size()];
-                    xt_dy_into(&mut raw, srcv, dpre, a, w.rows, w.cols);
+                    simd::xt_dy(ex.simd, &mut raw, srcv, dpre, a, w.rows, w.cols);
                     match w.mask_offset {
                         Some(_) => masked_grad(
                             &mut dparams,
@@ -971,13 +966,20 @@ fn grad_episode(
                                 ex.wslice(w),
                                 ex.mslice(w),
                                 ex.sparse_layers[stage.op],
+                                ex.simd,
                                 a,
                                 w.rows,
                                 w.cols,
                             ),
-                            None => {
-                                dy_wt_into(&mut dh_prev, dpre, ex.wslice(w), a, w.rows, w.cols)
-                            }
+                            None => simd::dy_wt(
+                                ex.simd,
+                                &mut dh_prev,
+                                dpre,
+                                ex.wslice(w),
+                                a,
+                                w.rows,
+                                w.cols,
+                            ),
                         },
                         SrcRef::Slot(i) => {
                             let mut dsrc = std::mem::take(&mut d_slots[*i]);
@@ -988,13 +990,20 @@ fn grad_episode(
                                     ex.wslice(w),
                                     ex.mslice(w),
                                     ex.sparse_layers[stage.op],
+                                    ex.simd,
                                     a,
                                     w.rows,
                                     w.cols,
                                 ),
-                                None => {
-                                    dy_wt_into(&mut dsrc, dpre, ex.wslice(w), a, w.rows, w.cols)
-                                }
+                                None => simd::dy_wt(
+                                    ex.simd,
+                                    &mut dsrc,
+                                    dpre,
+                                    ex.wslice(w),
+                                    a,
+                                    w.rows,
+                                    w.cols,
+                                ),
                             }
                             d_slots[*i] = dsrc;
                         }
@@ -1248,13 +1257,15 @@ mod tests {
         let gate: Vec<f32> = (0..t * a).map(|_| (rng.next_below(2)) as f32).collect();
         let ret: Vec<f32> = (0..t).map(|i| 0.05 * i as f32).collect();
 
+        let be = SimdBackend::detect();
         let loss_of = |p: &[f32]| -> f32 {
             let outs =
-                grad_episode(&man, &pl, a, p, &masks, &obs, &act, &gate, &ret, None).unwrap();
+                grad_episode(&man, &pl, a, p, &masks, &obs, &act, &gate, &ret, None, be).unwrap();
             outs[2].scalar_f32().unwrap()
         };
         let outs =
-            grad_episode(&man, &pl, a, &params, &masks, &obs, &act, &gate, &ret, None).unwrap();
+            grad_episode(&man, &pl, a, &params, &masks, &obs, &act, &gate, &ret, None, be)
+                .unwrap();
         let dparams = outs[0].as_f32().unwrap().to_vec();
         // probe a few parameters spread across layers
         let probes = [
@@ -1299,8 +1310,20 @@ mod tests {
         let act = vec![1i32; t * a];
         let gate = vec![1.0f32; t * a];
         let ret: Vec<f32> = (0..t).map(|i| 0.1 * i as f32).collect();
-        let outs =
-            grad_episode(&man, &pl, a, &params, &masks, &obs, &act, &gate, &ret, None).unwrap();
+        let outs = grad_episode(
+            &man,
+            &pl,
+            a,
+            &params,
+            &masks,
+            &obs,
+            &act,
+            &gate,
+            &ret,
+            None,
+            SimdBackend::detect(),
+        )
+        .unwrap();
         let dparams = outs[0].as_f32().unwrap();
         for l in &man.masked_layers {
             let e = man
@@ -1318,9 +1341,11 @@ mod tests {
         }
     }
 
-    /// Kernel-level parity: the sparse matmul and transposed product
-    /// must equal their dense ⊙-mask references exactly (`==`, which
-    /// only forgives the sign of exact zeros).
+    /// Kernel-level parity: in strict-accumulation mode the sparse
+    /// matmul and transposed product must equal their dense ⊙-mask
+    /// references exactly (`==`, which only forgives the sign of exact
+    /// zeros); the default panel path must be bit-identical across
+    /// every available SIMD backend.
     #[test]
     fn sparse_kernels_match_dense_masked() {
         use crate::manifest::MaskedLayer;
@@ -1331,19 +1356,132 @@ mod tests {
         let dy: Vec<f32> = (0..rows * cols).map(|_| rng.next_normal()).collect();
         let mask: Vec<f32> = (0..k * cols).map(|_| f32::from(rng.next_f32() < 0.3)).collect();
         let layer = MaskedLayer { name: "w_t".to_string(), rows: k, cols, offset: 0 };
+        let be = SimdBackend::detect();
+        let mut y_dense = vec![0.0f32; rows * cols];
+        simd::matmul_masked(be, &mut y_dense, &x, &w, &mask, rows, k, cols);
+        let mut dx_dense = vec![0.0f32; rows * k];
+        simd::dy_wt_masked(be, &mut dx_dense, &dy, &w, &mask, rows, k, cols);
         for cores in [1usize, 3] {
-            let sl = SparseLayer::from_dense_mask(&layer, &mask, cores).unwrap();
-            let mut y_dense = vec![0.0f32; rows * cols];
-            matmul_masked_into(&mut y_dense, &x, &w, &mask, rows, k, cols);
+            let mut sl = SparseLayer::from_dense_mask(&layer, &mask, cores).unwrap();
+            sl.strict = true;
             let mut y_sparse = vec![0.0f32; rows * cols];
-            matmul_sparse_into(&mut y_sparse, &x, &w, &sl, rows, k, cols);
-            assert_eq!(y_dense, y_sparse, "forward, cores={cores}");
-            let mut dx_dense = vec![0.0f32; rows * k];
-            dy_wt_masked_into(&mut dx_dense, &dy, &w, &mask, rows, k, cols);
+            matmul_sparse_into(&mut y_sparse, &x, &w, &sl, be, rows, k, cols);
+            assert_eq!(y_dense, y_sparse, "strict forward, cores={cores}");
             let mut dx_sparse = vec![0.0f32; rows * k];
-            dy_wt_sparse_into(&mut dx_sparse, &dy, &w, &sl, rows, k, cols);
-            assert_eq!(dx_dense, dx_sparse, "transposed, cores={cores}");
+            dy_wt_sparse_into(&mut dx_sparse, &dy, &w, &sl, be, rows, k, cols);
+            assert_eq!(dx_dense, dx_sparse, "strict transposed, cores={cores}");
+
+            // default panel path: identical bits on every backend
+            sl.strict = false;
+            let mut y_ref: Option<Vec<f32>> = None;
+            let mut dx_ref: Option<Vec<f32>> = None;
+            for b in SimdBackend::available() {
+                let mut y = vec![0.0f32; rows * cols];
+                matmul_sparse_into(&mut y, &x, &w, &sl, b, rows, k, cols);
+                let mut dx = vec![0.0f32; rows * k];
+                dy_wt_sparse_into(&mut dx, &dy, &w, &sl, b, rows, k, cols);
+                match (&y_ref, &dx_ref) {
+                    (None, _) => {
+                        y_ref = Some(y);
+                        dx_ref = Some(dx);
+                    }
+                    (Some(yr), Some(dxr)) => {
+                        let same = yr.iter().zip(&y).all(|(a, b)| a.to_bits() == b.to_bits())
+                            && dxr.iter().zip(&dx).all(|(a, b)| a.to_bits() == b.to_bits());
+                        assert!(same, "panel path diverges on backend {}", b.name());
+                    }
+                    _ => unreachable!(),
+                }
+            }
         }
+    }
+
+    /// Ragged edges: output widths around the lane width (1, 7, 8, 9)
+    /// and OSEL rows/columns with zero survivors must stay exact in
+    /// strict mode and backend-identical on the panel path — the
+    /// boundary cases the scalar kernels never exercised.
+    #[test]
+    fn ragged_and_empty_rows_survive_all_paths() {
+        use crate::manifest::MaskedLayer;
+        let be = SimdBackend::detect();
+        for &(rows, k, cols) in &[
+            (1usize, 1usize, 1usize),
+            (2, 7, 7),
+            (3, 8, 9),
+            (5, 9, 8),
+            (4, 19, 67),
+        ] {
+            let mut rng = crate::util::Pcg32::seeded(1000 + (rows * k * cols) as u64);
+            let x: Vec<f32> = (0..rows * k).map(|_| rng.next_f32() - 0.5).collect();
+            let w: Vec<f32> = (0..k * cols).map(|_| rng.next_f32() - 0.5).collect();
+            let dy: Vec<f32> = (0..rows * cols).map(|_| rng.next_f32() - 0.5).collect();
+            // ~60% sparsity, then force weight row 0 (and, when it
+            // exists, column 1) to zero survivors
+            let mut mask: Vec<f32> =
+                (0..k * cols).map(|_| f32::from(rng.next_below(5) < 2)).collect();
+            for j in 0..cols {
+                mask[j] = 0.0;
+            }
+            if cols > 1 {
+                for r in 0..k {
+                    mask[r * cols + 1] = 0.0;
+                }
+            }
+            let layer = MaskedLayer { name: "w_t".to_string(), rows: k, cols, offset: 0 };
+            let mut sl = SparseLayer::from_dense_mask(&layer, &mask, 2).unwrap();
+            assert!(sl.row(0).is_empty(), "row 0 must have zero survivors");
+
+            let mut y_dense = vec![0.0f32; rows * cols];
+            simd::matmul_masked(be, &mut y_dense, &x, &w, &mask, rows, k, cols);
+            let mut dx_dense = vec![0.0f32; rows * k];
+            simd::dy_wt_masked(be, &mut dx_dense, &dy, &w, &mask, rows, k, cols);
+
+            sl.strict = true;
+            let mut y_s = vec![0.0f32; rows * cols];
+            matmul_sparse_into(&mut y_s, &x, &w, &sl, be, rows, k, cols);
+            assert_eq!(y_dense, y_s, "strict forward {rows}x{k}x{cols}");
+            let mut dx_s = vec![0.0f32; rows * k];
+            dy_wt_sparse_into(&mut dx_s, &dy, &w, &sl, be, rows, k, cols);
+            assert_eq!(dx_dense, dx_s, "strict transposed {rows}x{k}x{cols}");
+
+            sl.strict = false;
+            for b in SimdBackend::available() {
+                let mut y_p = vec![0.0f32; rows * cols];
+                matmul_sparse_into(&mut y_p, &x, &w, &sl, b, rows, k, cols);
+                let mut dx_p = vec![0.0f32; rows * k];
+                dy_wt_sparse_into(&mut dx_p, &dy, &w, &sl, b, rows, k, cols);
+                // the panel path may reassociate, but every element
+                // must stay within a few ULP of the dense reference,
+                // and empty rows/columns must match exactly
+                for (i, (d, p)) in y_dense.iter().zip(&y_p).enumerate() {
+                    assert!(
+                        ulp_distance(*d, *p) <= 8,
+                        "panel fwd {rows}x{k}x{cols} [{i}] {d} vs {p} ({})",
+                        b.name()
+                    );
+                }
+                for (i, (d, p)) in dx_dense.iter().zip(&dx_p).enumerate() {
+                    assert!(
+                        ulp_distance(*d, *p) <= 8,
+                        "panel bwd {rows}x{k}x{cols} [{i}] {d} vs {p} ({})",
+                        b.name()
+                    );
+                }
+                assert_eq!(dx_p[0], dx_dense[0], "empty weight row 0 stays untouched");
+            }
+        }
+    }
+
+    /// |a - b| in units in the last place, with `±0.0` (and exactly
+    /// equal values) at distance 0.
+    fn ulp_distance(a: f32, b: f32) -> u32 {
+        if a == b {
+            return 0;
+        }
+        let (ia, ib) = (a.to_bits() as i32, b.to_bits() as i32);
+        // map the sign-magnitude float order onto a monotone integer
+        let m = |i: i32| if i < 0 { i32::MIN - i } else { i };
+        (m(ia) as i64 - m(ib) as i64).unsigned_abs().min(u32::MAX as u64) as u32
     }
 
     /// The batched lockstep forward must equal B separate
@@ -1367,15 +1505,17 @@ mod tests {
         let c: Vec<f32> = (0..b * a * d.hidden).map(|_| rng.next_normal() * 0.1).collect();
         let gate: Vec<f32> = (0..b * a).map(|_| f32::from(rng.next_f32() < 0.7)).collect();
 
+        let be = SimdBackend::detect();
         let reference =
-            policy_fwd(plan, a, b, &params, &mask, &obs, &h, &c, &gate, None).unwrap();
+            policy_fwd(plan, a, b, &params, &mask, &obs, &h, &c, &gate, None, be).unwrap();
 
-        // sparse path, 1 vs 4 intra-op cores: both must equal the dense
-        // batched reference exactly
+        // sparse path (strict accumulation), 1 vs 4 intra-op cores:
+        // both must equal the dense batched reference exactly
         for cores in [1usize, 4] {
-            let sm = SparseModel::from_dense_masks(&man, &mask, cores).unwrap();
+            let sm =
+                SparseModel::from_dense_masks(&man, &mask, cores).unwrap().strict(true);
             let sparse_out =
-                policy_fwd(plan, a, b, &params, &mask, &obs, &h, &c, &gate, Some(&sm))
+                policy_fwd(plan, a, b, &params, &mask, &obs, &h, &c, &gate, Some(&sm), be)
                     .unwrap();
             for (r, s) in reference.iter().zip(&sparse_out) {
                 assert_eq!(r, s, "sparse batched forward, cores={cores}");
@@ -1396,6 +1536,7 @@ mod tests {
                 &c[e * a * d.hidden..(e + 1) * a * d.hidden],
                 &gate[e * a..(e + 1) * a],
                 None,
+                be,
             )
             .unwrap();
             for (o, &width) in widths.iter().enumerate() {
@@ -1422,19 +1563,24 @@ mod tests {
         let dy: Vec<f32> = (0..rows * cols).map(|_| rng.next_normal()).collect();
         let mask: Vec<f32> = (0..k * cols).map(|_| f32::from(rng.next_f32() < 0.4)).collect();
         let layer = MaskedLayer { name: "w_t".to_string(), rows: k, cols, offset: 0 };
-        let sl1 = SparseLayer::from_dense_mask(&layer, &mask, 1).unwrap();
-        let sl5 = SparseLayer::from_dense_mask(&layer, &mask, 5).unwrap();
-        assert!(sparse_workers(&sl5, rows) > 1, "fan-out must engage at {rows} rows");
-        let mut y1 = vec![0.0f32; rows * cols];
-        matmul_sparse_into(&mut y1, &x, &w, &sl1, rows, k, cols);
-        let mut y5 = vec![0.0f32; rows * cols];
-        matmul_sparse_into(&mut y5, &x, &w, &sl5, rows, k, cols);
-        assert_eq!(y1, y5);
-        let mut dx1 = vec![0.0f32; rows * k];
-        dy_wt_sparse_into(&mut dx1, &dy, &w, &sl1, rows, k, cols);
-        let mut dx5 = vec![0.0f32; rows * k];
-        dy_wt_sparse_into(&mut dx5, &dy, &w, &sl5, rows, k, cols);
-        assert_eq!(dx1, dx5);
+        let be = SimdBackend::detect();
+        for strict in [true, false] {
+            let mut sl1 = SparseLayer::from_dense_mask(&layer, &mask, 1).unwrap();
+            let mut sl5 = SparseLayer::from_dense_mask(&layer, &mask, 5).unwrap();
+            sl1.strict = strict;
+            sl5.strict = strict;
+            assert!(sparse_workers(&sl5, rows) > 1, "fan-out must engage at {rows} rows");
+            let mut y1 = vec![0.0f32; rows * cols];
+            matmul_sparse_into(&mut y1, &x, &w, &sl1, be, rows, k, cols);
+            let mut y5 = vec![0.0f32; rows * cols];
+            matmul_sparse_into(&mut y5, &x, &w, &sl5, be, rows, k, cols);
+            assert_eq!(y1, y5, "forward, strict={strict}");
+            let mut dx1 = vec![0.0f32; rows * k];
+            dy_wt_sparse_into(&mut dx1, &dy, &w, &sl1, be, rows, k, cols);
+            let mut dx5 = vec![0.0f32; rows * k];
+            dy_wt_sparse_into(&mut dx5, &dy, &w, &sl5, be, rows, k, cols);
+            assert_eq!(dx1, dx5, "transposed, strict={strict}");
+        }
     }
 
     #[test]
@@ -1496,11 +1642,13 @@ mod tests {
         let h: Vec<f32> = (0..a * man.dims.hidden).map(|_| rng.next_normal() * 0.2).collect();
         let c: Vec<f32> = (0..a * man.dims.hidden).map(|_| rng.next_normal() * 0.2).collect();
         let gate = vec![1.0f32; a];
+        let be = SimdBackend::detect();
         let dense =
-            policy_fwd(&pl.forward, a, 1, &params, &mask, &obs, &h, &c, &gate, None).unwrap();
-        let sm = SparseModel::from_dense_masks(&man, &mask, 2).unwrap();
+            policy_fwd(&pl.forward, a, 1, &params, &mask, &obs, &h, &c, &gate, None, be)
+                .unwrap();
+        let sm = SparseModel::from_dense_masks(&man, &mask, 2).unwrap().strict(true);
         let sparse =
-            policy_fwd(&pl.forward, a, 1, &params, &mask, &obs, &h, &c, &gate, Some(&sm))
+            policy_fwd(&pl.forward, a, 1, &params, &mask, &obs, &h, &c, &gate, Some(&sm), be)
                 .unwrap();
         for (d, s) in dense.iter().zip(&sparse) {
             assert_eq!(d, s);
@@ -1513,11 +1661,11 @@ mod tests {
         let gate_seq = vec![1.0f32; t * a];
         let ret: Vec<f32> = (0..t).map(|i| 0.1 * i as f32).collect();
         let gd = grad_episode(
-            &man, &pl, a, &params, &mask, &obs_seq, &act_seq, &gate_seq, &ret, None,
+            &man, &pl, a, &params, &mask, &obs_seq, &act_seq, &gate_seq, &ret, None, be,
         )
         .unwrap();
         let gs = grad_episode(
-            &man, &pl, a, &params, &mask, &obs_seq, &act_seq, &gate_seq, &ret, Some(&sm),
+            &man, &pl, a, &params, &mask, &obs_seq, &act_seq, &gate_seq, &ret, Some(&sm), be,
         )
         .unwrap();
         for (d, s) in gd.iter().zip(&gs) {

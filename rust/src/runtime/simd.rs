@@ -1,0 +1,1028 @@
+//! Runtime-dispatched SIMD kernel stages — the software realization of
+//! the paper's per-core vector processing units (VPUs).
+//!
+//! The four shared `Linear` kernel stages of the native backend
+//! (forward `x @ W`, masked forward, weight-gradient `xᵀ @ dY`, and
+//! the BPTT transposed product `dY @ Wᵀ`) all funnel through this
+//! module.  Each kernel has one generic 8-lane body, monomorphized
+//! over a [`Lane`] — a portable `f32x8` with three implementations:
+//!
+//! * [`ScalarLane`] — `[f32; 8]`, element loops, every platform.  This
+//!   is the *reference*: the vector backends must reproduce it bit for
+//!   bit.
+//! * `Avx2Lane` — `__m256` on x86_64, selected at runtime via
+//!   `is_x86_feature_detected!("avx2")`.
+//! * `NeonLane` — 2×`float32x4_t` on aarch64 (baseline feature, no
+//!   detection needed).
+//!
+//! **Bit-exactness contract.**  No FMA is emitted anywhere — every
+//! term is a mul followed by an add, and horizontal reductions happen
+//! in one fixed order ([`hsum`], lane 0 → lane 7).  IEEE-754 makes
+//! each lane's mul/add chain identical across backends, so for a given
+//! lane *layout* all three backends are bitwise interchangeable; which
+//! layout a kernel uses is part of its numerics contract:
+//!
+//! * `matmul` / `matmul_masked` / `xt_dy` vectorize the *output*
+//!   column dimension — each output element keeps the exact scalar
+//!   accumulation chain, so these are bit-identical to the pre-SIMD
+//!   scalar kernels too.
+//! * `dy_wt` / `dy_wt_masked` reduce over columns: column `j`
+//!   contributes to lane `j % 8`, and the 8 partials are summed in
+//!   fixed lane order.  That lane layout *is* the scalar reference
+//!   (the scalar backend computes the same 8 partials).
+//! * `matmul_csc` / `dy_wt_csr` stream the lane-padded OSEL panels of
+//!   a compressed layer (see `runtime::sparse`): survivors are packed
+//!   8 to a vector register and gathered, so the reduction groups
+//!   *surviving* terms instead of all columns — a documented, ULP-
+//!   bounded reassociation relative to the dense reference (the terms
+//!   themselves and their relative order are unchanged; only the
+//!   grouping into partials moves).  `--strict-accum` switches the
+//!   sparse path back to the dense accumulation order (implemented in
+//!   `runtime::native`).
+//!
+//! Backend selection is plumbed, not global: the [`SimdBackend`] value
+//! lives on the `Executable` (default [`SimdBackend::from_env`], i.e.
+//! the `LG_SIMD` env override or auto-detection).
+#![allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+
+use std::sync::Once;
+
+/// Vector width of the lane abstraction, in `f32` elements.  The OSEL
+/// panel padding in `runtime::sparse` and the strict-accumulation lane
+/// buckets in `runtime::native` are sized off this constant.
+pub const LANES: usize = 8;
+
+/// Which kernel implementation executes.  `Avx2`/`Neon` degrade to
+/// `Scalar` (via [`SimdBackend::resolve`] or at dispatch) when the
+/// running CPU lacks them, so a stored config never crashes a machine
+/// it didn't come from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdBackend {
+    /// Portable `[f32; 8]` reference — bit-identical to the vector
+    /// backends by construction.
+    Scalar,
+    /// 256-bit AVX2 on x86_64 (runtime-detected).
+    Avx2,
+    /// 128-bit NEON pairs on aarch64 (baseline feature).
+    Neon,
+}
+
+static ENV_WARN: Once = Once::new();
+
+impl SimdBackend {
+    /// The widest backend the running CPU supports.
+    pub fn detect() -> Self {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") {
+                return SimdBackend::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            return SimdBackend::Neon;
+        }
+        #[allow(unreachable_code)]
+        SimdBackend::Scalar
+    }
+
+    /// Parse a backend name (`--simd` / `LG_SIMD` grammar): `scalar`,
+    /// `auto` (detection), `avx2`, `neon`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "scalar" => Some(SimdBackend::Scalar),
+            "auto" => Some(Self::detect()),
+            "avx2" => Some(SimdBackend::Avx2),
+            "neon" => Some(SimdBackend::Neon),
+            _ => None,
+        }
+    }
+
+    /// The backend the `LG_SIMD` environment variable requests, clamped
+    /// to what this CPU supports; unset or invalid values fall back to
+    /// [`Self::detect`] (invalid values warn once on stderr).
+    pub fn from_env() -> Self {
+        match std::env::var("LG_SIMD") {
+            Ok(v) => match Self::parse(&v) {
+                Some(b) => b.resolve(),
+                None => {
+                    ENV_WARN.call_once(|| {
+                        eprintln!(
+                            "warning: LG_SIMD={v:?} is not scalar|auto|avx2|neon; \
+                             using auto-detection"
+                        );
+                    });
+                    Self::detect()
+                }
+            },
+            Err(_) => Self::detect(),
+        }
+    }
+
+    /// Clamp to a backend the running CPU can execute.
+    pub fn resolve(self) -> Self {
+        match self {
+            SimdBackend::Scalar => SimdBackend::Scalar,
+            SimdBackend::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    if is_x86_feature_detected!("avx2") {
+                        return SimdBackend::Avx2;
+                    }
+                }
+                SimdBackend::Scalar
+            }
+            SimdBackend::Neon => {
+                #[cfg(target_arch = "aarch64")]
+                {
+                    return SimdBackend::Neon;
+                }
+                #[allow(unreachable_code)]
+                SimdBackend::Scalar
+            }
+        }
+    }
+
+    /// Every backend executable on this CPU (scalar first).  Parity
+    /// suites iterate this to cover the vector backends wherever the
+    /// suite actually runs.
+    pub fn available() -> Vec<Self> {
+        let mut v = vec![SimdBackend::Scalar];
+        let d = Self::detect();
+        if d != SimdBackend::Scalar {
+            v.push(d);
+        }
+        v
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdBackend::Scalar => "scalar",
+            SimdBackend::Avx2 => "avx2",
+            SimdBackend::Neon => "neon",
+        }
+    }
+}
+
+/// Sum 8 lane partials in fixed order (lane 0 → lane 7) — the single
+/// reduction order every backend and the strict sparse path share.
+#[inline(always)]
+pub fn hsum(l: &[f32; LANES]) -> f32 {
+    let mut s = l[0];
+    for p in 1..LANES {
+        s += l[p];
+    }
+    s
+}
+
+// ---------------------------------------------------------------------
+// the lane abstraction
+
+/// A portable 8×`f32` register.  All methods are `unsafe`: `load` /
+/// `store` / `gather` read 8 elements starting at the slice head and
+/// require `p.len() >= 8` (gather additionally requires every index to
+/// be in bounds of `src`); the arithmetic ops are unsafe only because
+/// the vector types need their target feature enabled by the caller.
+trait Lane: Copy {
+    unsafe fn zero() -> Self;
+    unsafe fn splat(v: f32) -> Self;
+    unsafe fn load(p: &[f32]) -> Self;
+    unsafe fn store(self, p: &mut [f32]);
+    unsafe fn add(self, o: Self) -> Self;
+    unsafe fn mul(self, o: Self) -> Self;
+    unsafe fn to_array(self) -> [f32; LANES];
+    /// `[src[idx[0]], .., src[idx[7]]]` (indices as element offsets).
+    unsafe fn gather(src: &[f32], idx: &[u32]) -> Self;
+}
+
+/// The portable reference lanes — plain element loops over `[f32; 8]`.
+#[derive(Clone, Copy)]
+struct ScalarLane([f32; LANES]);
+
+impl Lane for ScalarLane {
+    #[inline(always)]
+    unsafe fn zero() -> Self {
+        ScalarLane([0.0; LANES])
+    }
+    #[inline(always)]
+    unsafe fn splat(v: f32) -> Self {
+        ScalarLane([v; LANES])
+    }
+    #[inline(always)]
+    unsafe fn load(p: &[f32]) -> Self {
+        let mut a = [0.0f32; LANES];
+        a.copy_from_slice(&p[..LANES]);
+        ScalarLane(a)
+    }
+    #[inline(always)]
+    unsafe fn store(self, p: &mut [f32]) {
+        p[..LANES].copy_from_slice(&self.0);
+    }
+    #[inline(always)]
+    unsafe fn add(self, o: Self) -> Self {
+        let mut a = self.0;
+        for i in 0..LANES {
+            a[i] += o.0[i];
+        }
+        ScalarLane(a)
+    }
+    #[inline(always)]
+    unsafe fn mul(self, o: Self) -> Self {
+        let mut a = self.0;
+        for i in 0..LANES {
+            a[i] *= o.0[i];
+        }
+        ScalarLane(a)
+    }
+    #[inline(always)]
+    unsafe fn to_array(self) -> [f32; LANES] {
+        self.0
+    }
+    #[inline(always)]
+    unsafe fn gather(src: &[f32], idx: &[u32]) -> Self {
+        let mut a = [0.0f32; LANES];
+        for i in 0..LANES {
+            a[i] = src[idx[i] as usize];
+        }
+        ScalarLane(a)
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{Lane, LANES};
+    use std::arch::x86_64::*;
+
+    /// 256-bit AVX2 lanes.  Mul and add stay separate (`vmulps` +
+    /// `vaddps`, never `vfmadd*`) so results are bit-identical to
+    /// [`super::ScalarLane`].
+    #[derive(Clone, Copy)]
+    pub(super) struct Avx2Lane(__m256);
+
+    impl Lane for Avx2Lane {
+        #[inline(always)]
+        unsafe fn zero() -> Self {
+            Avx2Lane(unsafe { _mm256_setzero_ps() })
+        }
+        #[inline(always)]
+        unsafe fn splat(v: f32) -> Self {
+            Avx2Lane(unsafe { _mm256_set1_ps(v) })
+        }
+        #[inline(always)]
+        unsafe fn load(p: &[f32]) -> Self {
+            debug_assert!(p.len() >= LANES);
+            Avx2Lane(unsafe { _mm256_loadu_ps(p.as_ptr()) })
+        }
+        #[inline(always)]
+        unsafe fn store(self, p: &mut [f32]) {
+            debug_assert!(p.len() >= LANES);
+            unsafe { _mm256_storeu_ps(p.as_mut_ptr(), self.0) }
+        }
+        #[inline(always)]
+        unsafe fn add(self, o: Self) -> Self {
+            Avx2Lane(unsafe { _mm256_add_ps(self.0, o.0) })
+        }
+        #[inline(always)]
+        unsafe fn mul(self, o: Self) -> Self {
+            Avx2Lane(unsafe { _mm256_mul_ps(self.0, o.0) })
+        }
+        #[inline(always)]
+        unsafe fn to_array(self) -> [f32; LANES] {
+            let mut a = [0.0f32; LANES];
+            unsafe { _mm256_storeu_ps(a.as_mut_ptr(), self.0) };
+            a
+        }
+        #[inline(always)]
+        unsafe fn gather(src: &[f32], idx: &[u32]) -> Self {
+            debug_assert!(idx.len() >= LANES);
+            debug_assert!(idx[..LANES].iter().all(|&i| (i as usize) < src.len()));
+            // u32 element offsets reinterpret as i32: every index the
+            // sparse panels produce is < rows·cols « 2³¹.
+            let off = unsafe { _mm256_loadu_si256(idx.as_ptr() as *const __m256i) };
+            Avx2Lane(unsafe { _mm256_i32gather_ps::<4>(src.as_ptr(), off) })
+        }
+    }
+}
+#[cfg(target_arch = "x86_64")]
+use avx2::Avx2Lane;
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{Lane, LANES};
+    use std::arch::aarch64::*;
+
+    /// Two 128-bit NEON halves.  No `vfmaq_f32` — mul then add, for
+    /// bit-parity with [`super::ScalarLane`].
+    #[derive(Clone, Copy)]
+    pub(super) struct NeonLane(float32x4_t, float32x4_t);
+
+    impl Lane for NeonLane {
+        #[inline(always)]
+        unsafe fn zero() -> Self {
+            let z = unsafe { vdupq_n_f32(0.0) };
+            NeonLane(z, z)
+        }
+        #[inline(always)]
+        unsafe fn splat(v: f32) -> Self {
+            let s = unsafe { vdupq_n_f32(v) };
+            NeonLane(s, s)
+        }
+        #[inline(always)]
+        unsafe fn load(p: &[f32]) -> Self {
+            debug_assert!(p.len() >= LANES);
+            unsafe { NeonLane(vld1q_f32(p.as_ptr()), vld1q_f32(p.as_ptr().add(4))) }
+        }
+        #[inline(always)]
+        unsafe fn store(self, p: &mut [f32]) {
+            debug_assert!(p.len() >= LANES);
+            unsafe {
+                vst1q_f32(p.as_mut_ptr(), self.0);
+                vst1q_f32(p.as_mut_ptr().add(4), self.1);
+            }
+        }
+        #[inline(always)]
+        unsafe fn add(self, o: Self) -> Self {
+            unsafe { NeonLane(vaddq_f32(self.0, o.0), vaddq_f32(self.1, o.1)) }
+        }
+        #[inline(always)]
+        unsafe fn mul(self, o: Self) -> Self {
+            unsafe { NeonLane(vmulq_f32(self.0, o.0), vmulq_f32(self.1, o.1)) }
+        }
+        #[inline(always)]
+        unsafe fn to_array(self) -> [f32; LANES] {
+            let mut a = [0.0f32; LANES];
+            unsafe {
+                vst1q_f32(a.as_mut_ptr(), self.0);
+                vst1q_f32(a.as_mut_ptr().add(4), self.1);
+            }
+            a
+        }
+        #[inline(always)]
+        unsafe fn gather(src: &[f32], idx: &[u32]) -> Self {
+            // no hardware gather on NEON: build on the stack, then load
+            let mut a = [0.0f32; LANES];
+            for i in 0..LANES {
+                a[i] = src[idx[i] as usize];
+            }
+            unsafe { Self::load(&a) }
+        }
+    }
+}
+#[cfg(target_arch = "aarch64")]
+use neon::NeonLane;
+
+// ---------------------------------------------------------------------
+// generic kernel bodies (monomorphized per backend)
+
+/// y (rows × cols) += x (rows × k) @ w (k × cols).  Output columns ride
+/// the lanes; each output element keeps the exact scalar accumulation
+/// chain (ascending kk, `y[j] + xv·w[j]`), so this is bit-identical to
+/// the scalar kernel on every backend.
+#[inline(always)]
+unsafe fn matmul_body<L: Lane>(
+    y: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    rows: usize,
+    k: usize,
+    cols: usize,
+) {
+    let jc = cols - cols % LANES;
+    for i in 0..rows {
+        let yrow = &mut y[i * cols..(i + 1) * cols];
+        for kk in 0..k {
+            let xv = x[i * k + kk];
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[kk * cols..(kk + 1) * cols];
+            let xs = unsafe { L::splat(xv) };
+            let mut j = 0;
+            while j < jc {
+                let wv = unsafe { L::load(&wrow[j..]) };
+                let yv = unsafe { L::load(&yrow[j..]) };
+                unsafe { yv.add(xs.mul(wv)).store(&mut yrow[j..]) };
+                j += LANES;
+            }
+            for j in jc..cols {
+                yrow[j] += xv * wrow[j];
+            }
+        }
+    }
+}
+
+/// y (rows × cols) += x (rows × k) @ (w ⊙ mask) (k × cols).  Same lane
+/// layout and bitwise contract as [`matmul_body`]; the per-term product
+/// keeps the scalar association `(xv·w[j])·m[j]`.
+#[inline(always)]
+unsafe fn matmul_masked_body<L: Lane>(
+    y: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    mask: &[f32],
+    rows: usize,
+    k: usize,
+    cols: usize,
+) {
+    let jc = cols - cols % LANES;
+    for i in 0..rows {
+        let yrow = &mut y[i * cols..(i + 1) * cols];
+        for kk in 0..k {
+            let xv = x[i * k + kk];
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[kk * cols..(kk + 1) * cols];
+            let mrow = &mask[kk * cols..(kk + 1) * cols];
+            let xs = unsafe { L::splat(xv) };
+            let mut j = 0;
+            while j < jc {
+                let wv = unsafe { L::load(&wrow[j..]) };
+                let mv = unsafe { L::load(&mrow[j..]) };
+                let yv = unsafe { L::load(&yrow[j..]) };
+                unsafe { yv.add(xs.mul(wv).mul(mv)).store(&mut yrow[j..]) };
+                j += LANES;
+            }
+            for j in jc..cols {
+                yrow[j] += xv * wrow[j] * mrow[j];
+            }
+        }
+    }
+}
+
+/// dw (k × cols) += xᵀ @ dy, with x (rows × k) and dy (rows × cols).
+/// Output columns ride the lanes; bit-identical to the scalar kernel
+/// (ascending i per element).
+#[inline(always)]
+unsafe fn xt_dy_body<L: Lane>(
+    dw: &mut [f32],
+    x: &[f32],
+    dy: &[f32],
+    rows: usize,
+    k: usize,
+    cols: usize,
+) {
+    let jc = cols - cols % LANES;
+    for i in 0..rows {
+        let dyrow = &dy[i * cols..(i + 1) * cols];
+        for kk in 0..k {
+            let xv = x[i * k + kk];
+            if xv == 0.0 {
+                continue;
+            }
+            let dwrow = &mut dw[kk * cols..(kk + 1) * cols];
+            let xs = unsafe { L::splat(xv) };
+            let mut j = 0;
+            while j < jc {
+                let dv = unsafe { L::load(&dyrow[j..]) };
+                let wv = unsafe { L::load(&dwrow[j..]) };
+                unsafe { wv.add(xs.mul(dv)).store(&mut dwrow[j..]) };
+                j += LANES;
+            }
+            for j in jc..cols {
+                dwrow[j] += xv * dyrow[j];
+            }
+        }
+    }
+}
+
+/// dx (rows × k) += dy (rows × cols) @ wᵀ, with w (k × cols).  The
+/// column reduction: column `j` accumulates into lane `j % 8` and the
+/// partials are [`hsum`]-reduced in fixed lane order — the reference
+/// layout the scalar backend computes identically.
+#[inline(always)]
+unsafe fn dy_wt_body<L: Lane>(
+    dx: &mut [f32],
+    dy: &[f32],
+    w: &[f32],
+    rows: usize,
+    k: usize,
+    cols: usize,
+) {
+    let jc = cols - cols % LANES;
+    for i in 0..rows {
+        let dyrow = &dy[i * cols..(i + 1) * cols];
+        for kk in 0..k {
+            let wrow = &w[kk * cols..(kk + 1) * cols];
+            let mut acc = unsafe { L::zero() };
+            let mut j = 0;
+            while j < jc {
+                let dv = unsafe { L::load(&dyrow[j..]) };
+                let wv = unsafe { L::load(&wrow[j..]) };
+                acc = unsafe { acc.add(dv.mul(wv)) };
+                j += LANES;
+            }
+            let mut lanes = unsafe { acc.to_array() };
+            for j in jc..cols {
+                lanes[j - jc] += dyrow[j] * wrow[j];
+            }
+            dx[i * k + kk] += hsum(&lanes);
+        }
+    }
+}
+
+/// dx (rows × k) += dy (rows × cols) @ (w ⊙ mask)ᵀ.  Same lane layout
+/// as [`dy_wt_body`]; per-term association `(dy[j]·w[j])·m[j]`.
+#[inline(always)]
+unsafe fn dy_wt_masked_body<L: Lane>(
+    dx: &mut [f32],
+    dy: &[f32],
+    w: &[f32],
+    mask: &[f32],
+    rows: usize,
+    k: usize,
+    cols: usize,
+) {
+    let jc = cols - cols % LANES;
+    for i in 0..rows {
+        let dyrow = &dy[i * cols..(i + 1) * cols];
+        for kk in 0..k {
+            let wrow = &w[kk * cols..(kk + 1) * cols];
+            let mrow = &mask[kk * cols..(kk + 1) * cols];
+            let mut acc = unsafe { L::zero() };
+            let mut j = 0;
+            while j < jc {
+                let dv = unsafe { L::load(&dyrow[j..]) };
+                let wv = unsafe { L::load(&wrow[j..]) };
+                let mv = unsafe { L::load(&mrow[j..]) };
+                acc = unsafe { acc.add(dv.mul(wv).mul(mv)) };
+                j += LANES;
+            }
+            let mut lanes = unsafe { acc.to_array() };
+            for j in jc..cols {
+                lanes[j - jc] += dyrow[j] * wrow[j] * mrow[j];
+            }
+            dx[i * k + kk] += hsum(&lanes);
+        }
+    }
+}
+
+/// Lane-padded OSEL panels of one compressed layer, column-major
+/// (CSC): per output column `j`, the surviving weight-row indices in
+/// ascending order, padded to a multiple of [`LANES`].  Built by
+/// `runtime::sparse::SparseLayer`; consumed by [`matmul_csc_rows`].
+#[derive(Clone, Copy)]
+pub struct CscView<'a> {
+    /// `cols + 1` chunk boundaries, in padded-element units (every
+    /// entry is a multiple of [`LANES`]).
+    pub ptr: &'a [u32],
+    /// Padded surviving row indices `kk` (pad entries are 0).
+    pub row_idx: &'a [u32],
+    /// The same indices premultiplied by `cols` — element offsets into
+    /// `w[j..]`, so the weight gather needs no per-lane arithmetic.
+    pub row_scaled: &'a [u32],
+    /// 1.0 for survivors, 0.0 for pad lanes.
+    pub mask: &'a [f32],
+}
+
+/// Lane-padded OSEL panels, row-major (CSR): per weight row `kk`, the
+/// surviving column indices in ascending order, padded to a multiple
+/// of [`LANES`].  Consumed by [`dy_wt_csr_rows`].
+#[derive(Clone, Copy)]
+pub struct CsrView<'a> {
+    /// `k + 1` chunk boundaries, in padded-element units.
+    pub ptr: &'a [u32],
+    /// Padded surviving column indices `j` (pad entries are 0).
+    pub col_idx: &'a [u32],
+    /// 1.0 for survivors, 0.0 for pad lanes.
+    pub mask: &'a [f32],
+}
+
+/// Sparse forward through the CSC panels: `y` is the output chunk for
+/// activation rows `row0 ..`, `y (len/cols rows × cols) += x @ (w ⊙
+/// mask)` with survivors gathered 8 at a time.  The pad mask is folded
+/// into the *activation* gather before the weight multiply, so pad
+/// lanes contribute exact `±0.0` terms.  Columns with no survivors are
+/// skipped entirely.
+#[inline(always)]
+unsafe fn matmul_csc_body<L: Lane>(
+    y: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    v: CscView<'_>,
+    row0: usize,
+    k: usize,
+    cols: usize,
+) {
+    for (i, yrow) in y.chunks_exact_mut(cols).enumerate() {
+        let xrow = &x[(row0 + i) * k..(row0 + i + 1) * k];
+        for j in 0..cols {
+            let (lo, hi) = (v.ptr[j] as usize, v.ptr[j + 1] as usize);
+            if lo == hi {
+                continue;
+            }
+            let wcol = &w[j..];
+            let mut acc = unsafe { L::zero() };
+            let mut c = lo;
+            while c < hi {
+                let xg = unsafe { L::gather(xrow, &v.row_idx[c..]) };
+                let xm = unsafe { xg.mul(L::load(&v.mask[c..])) };
+                let wg = unsafe { L::gather(wcol, &v.row_scaled[c..]) };
+                acc = unsafe { acc.add(xm.mul(wg)) };
+                c += LANES;
+            }
+            yrow[j] += hsum(&unsafe { acc.to_array() });
+        }
+    }
+}
+
+/// Sparse transposed product through the CSR panels: `dx` is the
+/// output chunk for activation rows `row0 ..`, `dx (len/k rows × k) +=
+/// dy @ (w ⊙ mask)ᵀ`.  Same pad-mask-first contract as
+/// [`matmul_csc_body`]; weight rows with no survivors are skipped.
+#[inline(always)]
+unsafe fn dy_wt_csr_body<L: Lane>(
+    dx: &mut [f32],
+    dy: &[f32],
+    w: &[f32],
+    v: CsrView<'_>,
+    row0: usize,
+    k: usize,
+    cols: usize,
+) {
+    for (i, dxrow) in dx.chunks_exact_mut(k).enumerate() {
+        let dyrow = &dy[(row0 + i) * cols..(row0 + i + 1) * cols];
+        for kk in 0..k {
+            let (lo, hi) = (v.ptr[kk] as usize, v.ptr[kk + 1] as usize);
+            if lo == hi {
+                continue;
+            }
+            let wrow = &w[kk * cols..(kk + 1) * cols];
+            let mut acc = unsafe { L::zero() };
+            let mut c = lo;
+            while c < hi {
+                let dg = unsafe { L::gather(dyrow, &v.col_idx[c..]) };
+                let dm = unsafe { dg.mul(L::load(&v.mask[c..])) };
+                let wg = unsafe { L::gather(wrow, &v.col_idx[c..]) };
+                acc = unsafe { acc.add(dm.mul(wg)) };
+                c += LANES;
+            }
+            dxrow[kk] += hsum(&unsafe { acc.to_array() });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// per-backend monomorphizations + dispatch
+
+#[cfg(target_arch = "x86_64")]
+mod avx2_fns {
+    use super::*;
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn matmul(y: &mut [f32], x: &[f32], w: &[f32], r: usize, k: usize, c: usize) {
+        unsafe { matmul_body::<Avx2Lane>(y, x, w, r, k, c) }
+    }
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn matmul_masked(
+        y: &mut [f32],
+        x: &[f32],
+        w: &[f32],
+        m: &[f32],
+        r: usize,
+        k: usize,
+        c: usize,
+    ) {
+        unsafe { matmul_masked_body::<Avx2Lane>(y, x, w, m, r, k, c) }
+    }
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn xt_dy(dw: &mut [f32], x: &[f32], dy: &[f32], r: usize, k: usize, c: usize) {
+        unsafe { xt_dy_body::<Avx2Lane>(dw, x, dy, r, k, c) }
+    }
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dy_wt(dx: &mut [f32], dy: &[f32], w: &[f32], r: usize, k: usize, c: usize) {
+        unsafe { dy_wt_body::<Avx2Lane>(dx, dy, w, r, k, c) }
+    }
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dy_wt_masked(
+        dx: &mut [f32],
+        dy: &[f32],
+        w: &[f32],
+        m: &[f32],
+        r: usize,
+        k: usize,
+        c: usize,
+    ) {
+        unsafe { dy_wt_masked_body::<Avx2Lane>(dx, dy, w, m, r, k, c) }
+    }
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn matmul_csc(
+        y: &mut [f32],
+        x: &[f32],
+        w: &[f32],
+        v: CscView<'_>,
+        row0: usize,
+        k: usize,
+        c: usize,
+    ) {
+        unsafe { matmul_csc_body::<Avx2Lane>(y, x, w, v, row0, k, c) }
+    }
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dy_wt_csr(
+        dx: &mut [f32],
+        dy: &[f32],
+        w: &[f32],
+        v: CsrView<'_>,
+        row0: usize,
+        k: usize,
+        c: usize,
+    ) {
+        unsafe { dy_wt_csr_body::<Avx2Lane>(dx, dy, w, v, row0, k, c) }
+    }
+}
+
+/// Dispatch a kernel body over the selected backend.  The AVX2 arm is
+/// guarded by runtime detection, so an `Avx2` value on a CPU without
+/// the feature silently (and safely) degrades to scalar — `resolve()`
+/// normally clamps before it gets here.
+macro_rules! dispatch {
+    ($b:expr, $avx2:path, $body:ident, $($a:expr),*) => {
+        match $b {
+            #[cfg(target_arch = "x86_64")]
+            SimdBackend::Avx2 if is_x86_feature_detected!("avx2") => unsafe {
+                $avx2($($a),*)
+            },
+            #[cfg(target_arch = "aarch64")]
+            SimdBackend::Neon => unsafe { $body::<NeonLane>($($a),*) },
+            _ => unsafe { $body::<ScalarLane>($($a),*) },
+        }
+    };
+}
+
+/// y (rows × cols) += x (rows × k) @ w (k × cols) — bit-identical on
+/// every backend.
+pub fn matmul(b: SimdBackend, y: &mut [f32], x: &[f32], w: &[f32], rows: usize, k: usize, cols: usize) {
+    dispatch!(b, avx2_fns::matmul, matmul_body, y, x, w, rows, k, cols)
+}
+
+/// y (rows × cols) += x (rows × k) @ (w ⊙ mask) — bit-identical on
+/// every backend.
+pub fn matmul_masked(
+    b: SimdBackend,
+    y: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    mask: &[f32],
+    rows: usize,
+    k: usize,
+    cols: usize,
+) {
+    dispatch!(b, avx2_fns::matmul_masked, matmul_masked_body, y, x, w, mask, rows, k, cols)
+}
+
+/// dw (k × cols) += xᵀ @ dy — bit-identical on every backend.
+pub fn xt_dy(b: SimdBackend, dw: &mut [f32], x: &[f32], dy: &[f32], rows: usize, k: usize, cols: usize) {
+    dispatch!(b, avx2_fns::xt_dy, xt_dy_body, dw, x, dy, rows, k, cols)
+}
+
+/// dx (rows × k) += dy (rows × cols) @ wᵀ — bit-identical on every
+/// backend (column `j` → lane `j % 8`, fixed-order [`hsum`]).
+pub fn dy_wt(b: SimdBackend, dx: &mut [f32], dy: &[f32], w: &[f32], rows: usize, k: usize, cols: usize) {
+    dispatch!(b, avx2_fns::dy_wt, dy_wt_body, dx, dy, w, rows, k, cols)
+}
+
+/// dx (rows × k) += dy (rows × cols) @ (w ⊙ mask)ᵀ — bit-identical on
+/// every backend.
+pub fn dy_wt_masked(
+    b: SimdBackend,
+    dx: &mut [f32],
+    dy: &[f32],
+    w: &[f32],
+    mask: &[f32],
+    rows: usize,
+    k: usize,
+    cols: usize,
+) {
+    dispatch!(b, avx2_fns::dy_wt_masked, dy_wt_masked_body, dx, dy, w, mask, rows, k, cols)
+}
+
+/// Sparse forward over the lane-padded CSC panels for the activation
+/// rows starting at `row0` (`y` is that chunk).  Bit-identical across
+/// backends; ULP-bounded against the dense reference (survivor
+/// lane-grouping is the only reassociation).
+pub fn matmul_csc_rows(
+    b: SimdBackend,
+    y: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    v: CscView<'_>,
+    row0: usize,
+    k: usize,
+    cols: usize,
+) {
+    dispatch!(b, avx2_fns::matmul_csc, matmul_csc_body, y, x, w, v, row0, k, cols)
+}
+
+/// Sparse transposed product over the lane-padded CSR panels for the
+/// activation rows starting at `row0` (`dx` is that chunk).  Same
+/// contract as [`matmul_csc_rows`].
+pub fn dy_wt_csr_rows(
+    b: SimdBackend,
+    dx: &mut [f32],
+    dy: &[f32],
+    w: &[f32],
+    v: CsrView<'_>,
+    row0: usize,
+    k: usize,
+    cols: usize,
+) {
+    dispatch!(b, avx2_fns::dy_wt_csr, dy_wt_csr_body, dx, dy, w, v, row0, k, cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Naive scalar references, written independently of the lane
+    // bodies (these are the PR 5 kernel loops verbatim for the
+    // column-lane kernels, and the lane-bucket definition for dy_wt).
+    fn naive_matmul(y: &mut [f32], x: &[f32], w: &[f32], rows: usize, k: usize, cols: usize) {
+        for i in 0..rows {
+            for kk in 0..k {
+                let xv = x[i * k + kk];
+                if xv == 0.0 {
+                    continue;
+                }
+                for j in 0..cols {
+                    y[i * cols + j] += xv * w[kk * cols + j];
+                }
+            }
+        }
+    }
+
+    fn naive_dy_wt(dx: &mut [f32], dy: &[f32], w: &[f32], rows: usize, k: usize, cols: usize) {
+        for i in 0..rows {
+            for kk in 0..k {
+                let mut lanes = [0.0f32; LANES];
+                for j in 0..cols {
+                    lanes[j % LANES] += dy[i * cols + j] * w[kk * cols + j];
+                }
+                dx[i * k + kk] += hsum(&lanes);
+            }
+        }
+    }
+
+    fn data(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::Pcg32::seeded(seed);
+        (0..n).map(|_| rng.next_f32() - 0.5).collect()
+    }
+
+    #[test]
+    fn backend_parsing_and_resolution() {
+        assert_eq!(SimdBackend::parse("scalar"), Some(SimdBackend::Scalar));
+        assert_eq!(SimdBackend::parse("auto"), Some(SimdBackend::detect()));
+        assert_eq!(SimdBackend::parse("avx2"), Some(SimdBackend::Avx2));
+        assert_eq!(SimdBackend::parse("neon"), Some(SimdBackend::Neon));
+        assert_eq!(SimdBackend::parse("sse9"), None);
+        // resolve() never yields a backend this CPU can't run
+        for b in [SimdBackend::Scalar, SimdBackend::Avx2, SimdBackend::Neon] {
+            let r = b.resolve();
+            assert!(SimdBackend::available().contains(&r), "{:?} -> {:?}", b, r);
+        }
+        assert_eq!(SimdBackend::Scalar.resolve(), SimdBackend::Scalar);
+        assert_eq!(SimdBackend::available()[0], SimdBackend::Scalar);
+    }
+
+    #[test]
+    fn hsum_reduces_in_lane_order() {
+        // 1e8 swallows 1.0: a tree reduction would give a different
+        // bit pattern than the fixed left-to-right chain
+        let l = [1e8f32, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0];
+        let mut s = l[0];
+        for p in 1..LANES {
+            s += l[p];
+        }
+        assert_eq!(hsum(&l).to_bits(), s.to_bits());
+    }
+
+    /// Every available backend must reproduce the naive references bit
+    /// for bit on ragged shapes (tails of every length, rows/cols
+    /// around the lane width).
+    #[test]
+    fn dense_kernels_match_naive_bitwise_on_all_backends() {
+        for &(rows, k, cols) in
+            &[(1usize, 1usize, 1usize), (3, 7, 7), (2, 8, 8), (5, 9, 9), (4, 16, 67), (8, 67, 5)]
+        {
+            let x = data(rows * k, 1000 + cols as u64);
+            let w = data(k * cols, 2000 + rows as u64);
+            let dy = data(rows * cols, 3000 + k as u64);
+            let mask: Vec<f32> =
+                data(k * cols, 4000).iter().map(|v| f32::from(*v > 0.0)).collect();
+
+            let mut y_ref = vec![0.0f32; rows * cols];
+            naive_matmul(&mut y_ref, &x, &w, rows, k, cols);
+            let mut dx_ref = vec![0.0f32; rows * k];
+            naive_dy_wt(&mut dx_ref, &dy, &w, rows, k, cols);
+
+            for b in SimdBackend::available() {
+                let mut y = vec![0.0f32; rows * cols];
+                matmul(b, &mut y, &x, &w, rows, k, cols);
+                assert_bits(&y_ref, &y, &format!("matmul {b:?} {rows}x{k}x{cols}"));
+
+                let mut dx = vec![0.0f32; rows * k];
+                dy_wt(b, &mut dx, &dy, &w, rows, k, cols);
+                assert_bits(&dx_ref, &dx, &format!("dy_wt {b:?} {rows}x{k}x{cols}"));
+
+                // masked variants against mask folded into the weights:
+                // per-term association differs, so compare across
+                // backends instead (scalar backend is the reference)
+                let mut y_s = vec![0.0f32; rows * cols];
+                matmul_masked(SimdBackend::Scalar, &mut y_s, &x, &w, &mask, rows, k, cols);
+                let mut y_b = vec![0.0f32; rows * cols];
+                matmul_masked(b, &mut y_b, &x, &w, &mask, rows, k, cols);
+                assert_bits(&y_s, &y_b, &format!("matmul_masked {b:?}"));
+
+                let mut dx_s = vec![0.0f32; rows * k];
+                dy_wt_masked(SimdBackend::Scalar, &mut dx_s, &dy, &w, &mask, rows, k, cols);
+                let mut dx_b = vec![0.0f32; rows * k];
+                dy_wt_masked(b, &mut dx_b, &dy, &w, &mask, rows, k, cols);
+                assert_bits(&dx_s, &dx_b, &format!("dy_wt_masked {b:?}"));
+
+                let mut dw_s = vec![0.0f32; k * cols];
+                xt_dy(SimdBackend::Scalar, &mut dw_s, &x, &dy, rows, k, cols);
+                let mut dw_b = vec![0.0f32; k * cols];
+                xt_dy(b, &mut dw_b, &x, &dy, rows, k, cols);
+                assert_bits(&dw_s, &dw_b, &format!("xt_dy {b:?}"));
+            }
+        }
+    }
+
+    fn assert_bits(a: &[f32], b: &[f32], tag: &str) {
+        assert_eq!(a.len(), b.len(), "{tag}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}: element {i}: {x} vs {y}");
+        }
+    }
+
+    /// Hand-built panels: the gather kernels must agree with the dense
+    /// masked kernels exactly when every value is dyadic (sums of
+    /// small multiples of 0.25 are exact in f32, so association cannot
+    /// matter and any mismatch is an indexing bug).
+    #[test]
+    fn panel_gathers_index_correctly() {
+        let (rows, k, cols) = (3usize, 5usize, 11usize);
+        let mut rng = crate::util::Pcg32::seeded(99);
+        let quart = |rng: &mut crate::util::Pcg32| (rng.next_below(16) as f32 - 8.0) * 0.25;
+        let x: Vec<f32> = (0..rows * k).map(|_| quart(&mut rng)).collect();
+        let w: Vec<f32> = (0..k * cols).map(|_| quart(&mut rng)).collect();
+        let dy: Vec<f32> = (0..rows * cols).map(|_| quart(&mut rng)).collect();
+        let mask: Vec<f32> = (0..k * cols).map(|_| f32::from(rng.next_below(2) == 1)).collect();
+
+        // CSR panels (per weight row kk, surviving j ascending)
+        let mut csr_ptr = vec![0u32];
+        let (mut csr_idx, mut csr_mask) = (Vec::new(), Vec::new());
+        for kk in 0..k {
+            for j in 0..cols {
+                if mask[kk * cols + j] != 0.0 {
+                    csr_idx.push(j as u32);
+                    csr_mask.push(1.0f32);
+                }
+            }
+            while csr_idx.len() % LANES != 0 {
+                csr_idx.push(0);
+                csr_mask.push(0.0);
+            }
+            csr_ptr.push(csr_idx.len() as u32);
+        }
+        // CSC panels (per output column j, surviving kk ascending)
+        let mut csc_ptr = vec![0u32];
+        let (mut csc_idx, mut csc_scaled, mut csc_mask) = (Vec::new(), Vec::new(), Vec::new());
+        for j in 0..cols {
+            for kk in 0..k {
+                if mask[kk * cols + j] != 0.0 {
+                    csc_idx.push(kk as u32);
+                    csc_scaled.push((kk * cols) as u32);
+                    csc_mask.push(1.0f32);
+                }
+            }
+            while csc_idx.len() % LANES != 0 {
+                csc_idx.push(0);
+                csc_scaled.push(0);
+                csc_mask.push(0.0);
+            }
+            csc_ptr.push(csc_idx.len() as u32);
+        }
+
+        let mut y_ref = vec![0.0f32; rows * cols];
+        matmul_masked(SimdBackend::Scalar, &mut y_ref, &x, &w, &mask, rows, k, cols);
+        let mut dx_ref = vec![0.0f32; rows * k];
+        dy_wt_masked(SimdBackend::Scalar, &mut dx_ref, &dy, &w, &mask, rows, k, cols);
+
+        for b in SimdBackend::available() {
+            let csc = CscView {
+                ptr: &csc_ptr,
+                row_idx: &csc_idx,
+                row_scaled: &csc_scaled,
+                mask: &csc_mask,
+            };
+            let mut y = vec![0.0f32; rows * cols];
+            matmul_csc_rows(b, &mut y, &x, &w, csc, 0, k, cols);
+            assert_eq!(y_ref, y, "csc forward {b:?}");
+
+            let csr = CsrView { ptr: &csr_ptr, col_idx: &csr_idx, mask: &csr_mask };
+            let mut dx = vec![0.0f32; rows * k];
+            dy_wt_csr_rows(b, &mut dx, &dy, &w, csr, 0, k, cols);
+            assert_eq!(dx_ref, dx, "csr transposed {b:?}");
+        }
+    }
+}

@@ -14,12 +14,18 @@
 //! and in the BPTT transposed products — instead of walking the full
 //! dense matrix under an explicit `⊙ mask`.
 //!
-//! **Parity contract.**  The sparse kernels accumulate the surviving
-//! terms in exactly the order the dense-masked reference visits them,
-//! and every skipped term is an exact `±0.0` addition — so the two
-//! paths agree bit-for-bit (up to the sign of exact zeros, which `==`
-//! treats as equal).  `rust/tests/sparse_parity.rs` asserts this across
-//! the FLGW curriculum's sparsity levels.
+//! **Parity contract.**  In `--strict-accum` mode the sparse kernels
+//! accumulate the surviving terms in exactly the order the dense-masked
+//! reference visits them, and every skipped term is an exact `±0.0`
+//! addition — so the two paths agree bit-for-bit (up to the sign of
+//! exact zeros, which `==` treats as equal).  The default (fast) mode
+//! streams the lane-padded OSEL panels through the SIMD kernels
+//! instead: survivors are grouped 8 to a vector register, which
+//! reassociates the reduction — ULP-bounded against the dense
+//! reference (`rust/tests/simd_kernels.rs` asserts the bound, and
+//! `rust/tests/sparse_parity.rs` asserts the strict path bitwise
+//! across the FLGW curriculum's sparsity levels).  Either mode is
+//! itself fully deterministic and identical across SIMD backends.
 //!
 //! **Sharing.**  A [`SparseModel`] is built once per mask regeneration
 //! (stage 1) and shared immutably (`Arc`) by all parallel rollout
@@ -42,6 +48,7 @@ use anyhow::{anyhow, Result};
 use crate::accel::load_alloc::{Allocation, LoadAllocator};
 use crate::accel::sparse_row_memory::SparseRowMemory;
 use crate::manifest::{Manifest, MaskedLayer};
+use crate::runtime::simd;
 
 /// Which kernels the native backend runs for the FLGW-masked matmuls.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -76,7 +83,10 @@ impl ExecMode {
 
 /// One masked layer's compressed structure: for every weight-matrix row
 /// (input channel), the ascending column indexes of surviving weights,
-/// plus the row→core workload partition.
+/// plus the row→core workload partition — and the lane-padded OSEL
+/// panels the SIMD kernels stream (survivors padded to multiples of
+/// [`simd::LANES`] so groups fill vector registers; see
+/// `runtime::simd`).
 #[derive(Debug, Clone)]
 pub struct SparseLayer {
     pub name: String,
@@ -90,6 +100,29 @@ pub struct SparseLayer {
     /// scheme: contiguous chunks, so walking core by core visits rows
     /// in ascending order).
     pub alloc: Allocation,
+    /// When set, the kernels replay the dense accumulation order
+    /// exactly (`--strict-accum`) instead of streaming the padded
+    /// panels — bit-identical to dense-masked, at scalar speed.
+    pub strict: bool,
+    /// Lane-padded CSR panel: offsets into `pad_col_idx`, length
+    /// `rows + 1`, every entry a multiple of [`simd::LANES`].
+    pub pad_row_ptr: Vec<u32>,
+    /// Lane-padded surviving column indexes (pad entries are 0).
+    pub pad_col_idx: Vec<u32>,
+    /// 1.0 for survivors, 0.0 for pad lanes (same layout as
+    /// `pad_col_idx`).
+    pub pad_col_mask: Vec<f32>,
+    /// Lane-padded CSC panel: offsets into `csc_row_idx`, length
+    /// `cols + 1`, every entry a multiple of [`simd::LANES`].
+    pub csc_ptr: Vec<u32>,
+    /// Per output column, the ascending surviving weight-row indexes,
+    /// lane-padded (pad entries are 0).
+    pub csc_row_idx: Vec<u32>,
+    /// `csc_row_idx` premultiplied by `cols` — ready-made element
+    /// offsets into `w[j..]` for the weight gather.
+    pub csc_row_scaled: Vec<u32>,
+    /// 1.0 for survivors, 0.0 for pad lanes (CSC layout).
+    pub csc_mask: Vec<f32>,
 }
 
 impl SparseLayer {
@@ -154,13 +187,72 @@ impl SparseLayer {
     fn finish(layer: &MaskedLayer, row_ptr: Vec<u32>, col_idx: Vec<u32>, cores: usize) -> Self {
         let workloads: Vec<u32> = row_ptr.windows(2).map(|w| w[1] - w[0]).collect();
         let alloc = LoadAllocator::new(cores.max(1)).row_based(&workloads);
+        let (rows, cols) = (layer.rows, layer.cols);
+
+        // lane-padded CSR panel: survivors per weight row, ascending,
+        // padded to the vector width (pad index 0, pad mask 0.0 — the
+        // kernels fold the mask in before any weight multiply, so pad
+        // lanes contribute exact ±0.0 terms)
+        let mut pad_row_ptr = Vec::with_capacity(rows + 1);
+        let mut pad_col_idx = Vec::new();
+        let mut pad_col_mask = Vec::new();
+        pad_row_ptr.push(0u32);
+        for r in 0..rows {
+            let survivors =
+                &col_idx[row_ptr[r] as usize..row_ptr[r + 1] as usize];
+            pad_col_idx.extend_from_slice(survivors);
+            pad_col_mask.extend(std::iter::repeat(1.0f32).take(survivors.len()));
+            while pad_col_idx.len() % simd::LANES != 0 {
+                pad_col_idx.push(0);
+                pad_col_mask.push(0.0);
+            }
+            pad_row_ptr.push(pad_col_idx.len() as u32);
+        }
+
+        // lane-padded CSC twin: survivors per output column, weight
+        // rows ascending (walk rows in order so the relative term
+        // order of the dense reduction is preserved), with the weight
+        // offsets `kk * cols` precomputed for the gather
+        let mut csc_ptr = Vec::with_capacity(cols + 1);
+        let mut csc_row_idx = Vec::new();
+        let mut csc_row_scaled = Vec::new();
+        let mut csc_mask = Vec::new();
+        let mut per_col: Vec<Vec<u32>> = vec![Vec::new(); cols];
+        for r in 0..rows {
+            for &j in &col_idx[row_ptr[r] as usize..row_ptr[r + 1] as usize] {
+                per_col[j as usize].push(r as u32);
+            }
+        }
+        csc_ptr.push(0u32);
+        for j in 0..cols {
+            for &r in &per_col[j] {
+                csc_row_idx.push(r);
+                csc_row_scaled.push(r * cols as u32);
+                csc_mask.push(1.0);
+            }
+            while csc_row_idx.len() % simd::LANES != 0 {
+                csc_row_idx.push(0);
+                csc_row_scaled.push(0);
+                csc_mask.push(0.0);
+            }
+            csc_ptr.push(csc_row_idx.len() as u32);
+        }
+
         SparseLayer {
             name: layer.name.clone(),
-            rows: layer.rows,
-            cols: layer.cols,
+            rows,
+            cols,
             row_ptr,
             col_idx,
             alloc,
+            strict: false,
+            pad_row_ptr,
+            pad_col_idx,
+            pad_col_mask,
+            csc_ptr,
+            csc_row_idx,
+            csc_row_scaled,
+            csc_mask,
         }
     }
 
@@ -172,6 +264,26 @@ impl SparseLayer {
     /// Column indexes of row `r`'s surviving weights.
     pub fn row(&self, r: usize) -> &[u32] {
         &self.col_idx[self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize]
+    }
+
+    /// Borrow the lane-padded CSC panels for the SIMD forward kernel.
+    pub fn csc_view(&self) -> simd::CscView<'_> {
+        simd::CscView {
+            ptr: &self.csc_ptr,
+            row_idx: &self.csc_row_idx,
+            row_scaled: &self.csc_row_scaled,
+            mask: &self.csc_mask,
+        }
+    }
+
+    /// Borrow the lane-padded CSR panels for the SIMD transposed
+    /// product.
+    pub fn csr_view(&self) -> simd::CsrView<'_> {
+        simd::CsrView {
+            ptr: &self.pad_row_ptr,
+            col_idx: &self.pad_col_idx,
+            mask: &self.pad_col_mask,
+        }
     }
 }
 
@@ -224,6 +336,21 @@ impl SparseModel {
             .map(|l| SparseLayer::from_dense_mask(l, &masks[l.offset..l.offset + l.size()], cores))
             .collect::<Result<Vec<_>>>()?;
         Ok(SparseModel { layers, mask_size: m.mask_size })
+    }
+
+    /// Builder: switch every layer between strict dense-order
+    /// accumulation (`--strict-accum`, bit-identical to dense-masked)
+    /// and the default lane-padded SIMD panels.
+    pub fn strict(mut self, on: bool) -> Self {
+        for l in &mut self.layers {
+            l.strict = on;
+        }
+        self
+    }
+
+    /// Whether the layers replay the dense accumulation order.
+    pub fn is_strict(&self) -> bool {
+        self.layers.first().is_some_and(|l| l.strict)
     }
 
     /// The compressed structure of one masked layer, by name.
@@ -309,6 +436,75 @@ mod tests {
         assert_eq!((wx.rows, wx.cols), (128, 512));
         assert_eq!(wx.row(0).len(), 512);
         assert!(sm.layer("nope").is_none());
+    }
+
+    /// The lane-padded panels must cover exactly the survivors of the
+    /// CSR structure, in the same order, with chunk boundaries on lane
+    /// multiples — for ragged rows, empty rows, and empty columns.
+    #[test]
+    fn padded_panels_mirror_the_csr_structure() {
+        let (rows, cols) = (9usize, 13usize);
+        let l = layer(rows, cols);
+        let mut rng = Pcg32::seeded(77);
+        // ~70% sparsity plus a guaranteed all-zero row and column
+        let mut mask: Vec<f32> =
+            (0..rows * cols).map(|_| f32::from(rng.next_below(10) < 3)).collect();
+        for j in 0..cols {
+            mask[4 * cols + j] = 0.0;
+        }
+        for r in 0..rows {
+            mask[r * cols + 11] = 0.0;
+        }
+        let sl = SparseLayer::from_dense_mask(&l, &mask, 2).unwrap();
+
+        // CSR panel: per row, the unpadded prefix equals row(r)
+        assert_eq!(sl.pad_row_ptr.len(), rows + 1);
+        for r in 0..rows {
+            let (lo, hi) = (sl.pad_row_ptr[r] as usize, sl.pad_row_ptr[r + 1] as usize);
+            assert_eq!(lo % simd::LANES, 0);
+            assert_eq!(hi % simd::LANES, 0);
+            let n = sl.row(r).len();
+            assert!(hi - lo >= n && hi - lo < n + simd::LANES);
+            assert_eq!(&sl.pad_col_idx[lo..lo + n], sl.row(r));
+            assert!(sl.pad_col_mask[lo..lo + n].iter().all(|&m| m == 1.0));
+            assert!(sl.pad_col_mask[lo + n..hi].iter().all(|&m| m == 0.0));
+        }
+        let row4 = (sl.pad_row_ptr[4], sl.pad_row_ptr[5]);
+        assert_eq!(row4.0, row4.1, "all-zero row gets an empty panel");
+
+        // CSC panel: per column, ascending rows, mask count = column nnz
+        assert_eq!(sl.csc_ptr.len(), cols + 1);
+        let mut total = 0usize;
+        for j in 0..cols {
+            let (lo, hi) = (sl.csc_ptr[j] as usize, sl.csc_ptr[j + 1] as usize);
+            assert_eq!(lo % simd::LANES, 0);
+            let col_nnz =
+                (0..rows).filter(|&r| mask[r * cols + j] != 0.0).count();
+            let live: Vec<u32> = sl.csc_row_idx[lo..lo + col_nnz].to_vec();
+            assert!(live.windows(2).all(|w| w[0] < w[1]), "column {j} rows ascend");
+            for (p, &r) in live.iter().enumerate() {
+                assert!(mask[r as usize * cols + j] != 0.0);
+                assert_eq!(sl.csc_row_scaled[lo + p], r * cols as u32);
+            }
+            assert!(sl.csc_mask[lo..lo + col_nnz].iter().all(|&m| m == 1.0));
+            assert!(sl.csc_mask[lo + col_nnz..hi].iter().all(|&m| m == 0.0));
+            total += col_nnz;
+        }
+        assert_eq!(total, sl.nnz(), "CSC covers every survivor exactly once");
+        let col11 = (sl.csc_ptr[11], sl.csc_ptr[12]);
+        assert_eq!(col11.0, col11.1, "all-zero column gets an empty panel");
+    }
+
+    #[test]
+    fn strict_builder_flips_every_layer() {
+        let m = Manifest::builtin();
+        let masks = vec![1.0f32; m.mask_size];
+        let sm = SparseModel::from_dense_masks(&m, &masks, 2).unwrap();
+        assert!(!sm.is_strict(), "panels are the default");
+        let sm = sm.strict(true);
+        assert!(sm.is_strict());
+        assert!(sm.layers.iter().all(|l| l.strict));
+        assert!(!sm.strict(false).is_strict());
     }
 
     #[test]

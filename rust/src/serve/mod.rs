@@ -186,8 +186,9 @@ pub struct PolicyServer {
 
 impl PolicyServer {
     /// Build a server from a decoded checkpoint.  `exec` picks the
-    /// kernel path (the two are bit-identical; sparse is the fast
-    /// default); `intra_threads` sizes the row→core partition of the
+    /// kernel path (ULP-equivalent, bit-identical under strict
+    /// accumulation; sparse is the fast default); `intra_threads`
+    /// sizes the row→core partition of the
     /// shared [`crate::runtime::SparseModel`] — the sparse kernels'
     /// intra-op fan-out, unobservable in the results; `batch` > 1
     /// makes every worker drive blocks of that many episodes in
@@ -199,6 +200,21 @@ impl PolicyServer {
         exec: ExecMode,
         intra_threads: usize,
         batch: usize,
+    ) -> Result<Self> {
+        Self::from_checkpoint_opts(runtime, ckpt, exec, intra_threads, batch, false)
+    }
+
+    /// [`Self::from_checkpoint`] with the sparse accumulation order
+    /// pinned: `strict_accum` forces the sparse kernels to reduce in
+    /// exact dense-reference order (`--strict-accum`), making sparse
+    /// and dense serving bit-identical instead of ULP-equivalent.
+    pub fn from_checkpoint_opts(
+        runtime: &mut Runtime,
+        ckpt: &Checkpoint,
+        exec: ExecMode,
+        intra_threads: usize,
+        batch: usize,
+        strict_accum: bool,
     ) -> Result<Self> {
         let manifest = runtime.manifest().clone();
         ckpt.validate_manifest(&manifest)?;
@@ -233,7 +249,8 @@ impl PolicyServer {
         let masks_dev = match exec {
             ExecMode::DenseMasked => exe_fwd.upload(1, &masks_t)?,
             ExecMode::Sparse => {
-                let model = ckpt.sparse_model(&manifest, intra_threads.max(1))?;
+                let model =
+                    ckpt.sparse_model(&manifest, intra_threads.max(1))?.strict(strict_accum);
                 exe_fwd.upload_sparse(1, &masks_t, Arc::new(model))?
             }
         };
@@ -462,14 +479,19 @@ mod tests {
         assert_eq!(batched.batch, 4);
     }
 
+    /// Strict accumulation pins the sparse kernels to the dense
+    /// reduction order, so the two serving paths are bit-identical
+    /// (the default panel path is only ULP-equivalent, which can flip
+    /// sampled actions).
     #[test]
     fn sparse_and_dense_serving_agree() {
         let (mut rt, ckpt) = tiny_checkpoint();
         let opts = ServeOptions { workers: 2, mode: ServeMode::Episodes(4), seed: 21 };
-        let sparse = PolicyServer::from_checkpoint(&mut rt, &ckpt, ExecMode::Sparse, 2, 1)
-            .unwrap()
-            .run(&opts)
-            .unwrap();
+        let sparse =
+            PolicyServer::from_checkpoint_opts(&mut rt, &ckpt, ExecMode::Sparse, 2, 1, true)
+                .unwrap()
+                .run(&opts)
+                .unwrap();
         let dense =
             PolicyServer::from_checkpoint(&mut rt, &ckpt, ExecMode::DenseMasked, 2, 1)
                 .unwrap()

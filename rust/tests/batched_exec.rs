@@ -14,7 +14,7 @@ use learning_group::coordinator::{
 };
 use learning_group::env::{EnvConfig, PredatorPreyConfig};
 use learning_group::model::ModelState;
-use learning_group::runtime::{HostTensor, Runtime};
+use learning_group::runtime::{HostTensor, Runtime, SimdBackend};
 use learning_group::Manifest;
 
 /// Train a short FLGW run and return every per-iteration metric that
@@ -27,6 +27,18 @@ fn train_metrics(
     intra_threads: usize,
     rollouts: usize,
 ) -> Vec<[f32; 7]> {
+    train_metrics_simd(batch, g, exec, batch_exec, intra_threads, rollouts, SimdBackend::from_env())
+}
+
+fn train_metrics_simd(
+    batch: usize,
+    g: usize,
+    exec: ExecMode,
+    batch_exec: bool,
+    intra_threads: usize,
+    rollouts: usize,
+    simd: SimdBackend,
+) -> Vec<[f32; 7]> {
     let cfg = TrainConfig {
         batch,
         iterations: 3,
@@ -37,6 +49,7 @@ fn train_metrics(
         batch_exec,
         intra_threads,
         rollouts,
+        simd,
         ..TrainConfig::default().with_agents(3)
     };
     let mut trainer = Trainer::from_default_artifacts(cfg).expect("building trainer");
@@ -72,6 +85,38 @@ fn lockstep_training_is_bit_identical() {
                     lockstep,
                     "B={batch} G={g} exec={}",
                     exec.name()
+                );
+            }
+        }
+    }
+}
+
+/// Forced-scalar vs auto-dispatched SIMD must be bitwise unobservable
+/// across the whole lockstep matrix — both exec modes, per-episode and
+/// batched drivers, multi-threaded fan-out.  This is the end-to-end
+/// `LG_SIMD=scalar` vs `LG_SIMD=auto` guarantee on the training loop.
+#[test]
+fn simd_dispatch_is_unobservable_in_lockstep_training() {
+    let auto = SimdBackend::detect();
+    for &batch in &[2usize, 8] {
+        for exec in [ExecMode::Sparse, ExecMode::DenseMasked] {
+            for batch_exec in [false, true] {
+                let scalar = train_metrics_simd(
+                    batch,
+                    4,
+                    exec,
+                    batch_exec,
+                    2,
+                    1,
+                    SimdBackend::Scalar,
+                );
+                let vector = train_metrics_simd(batch, 4, exec, batch_exec, 2, 1, auto);
+                assert_eq!(
+                    scalar,
+                    vector,
+                    "B={batch} exec={} batch_exec={batch_exec} (scalar vs {})",
+                    exec.name(),
+                    auto.name()
                 );
             }
         }

@@ -1,0 +1,313 @@
+//! SIMD kernel parity harness — every runtime-dispatchable backend ×
+//! dense/sparse × forward/dY·Wᵀ, over every ragged relation to the
+//! 8-lane vector width and the FLGW curriculum's sparsity range.
+//!
+//! Three contracts from `runtime::simd` / `runtime::native`:
+//!
+//! 1. **Dense stages are bit-identical across backends.**  The vector
+//!    kernels keep each output element's scalar accumulation chain
+//!    (output columns ride the lanes), so AVX2/NEON/scalar must agree
+//!    bit for bit — asserted with `to_bits` over the full shape sweep.
+//! 2. **Strict sparse replays dense exactly.**  With
+//!    [`SparseLayer::strict`] set (`--strict-accum`), the compressed
+//!    kernels accumulate survivors in the dense visiting order; every
+//!    skipped term is an exact `±0.0`, so `==` equality holds.
+//! 3. **The default panel path is ULP-bounded and tight.**  The
+//!    lane-padded OSEL panels group survivors 8 to a register, which
+//!    reassociates the reduction.  The result is still bit-identical
+//!    *across backends*, and its distance from the dense reference is
+//!    bounded by [`MAX_ULP`] — a constant pinned against an independent
+//!    bit-exact replay of both accumulation orders (IEEE-754 single
+//!    precision, same Pcg32 data).  The bound is asserted *tight*: if
+//!    the observed worst case drifts more than [`MAX_SLACK`] below the
+//!    constant, the test fails so the constant gets retightened rather
+//!    than rotting loose.
+//!
+//! Shapes sweep rows/K/cols ∈ {1, lane−1, lane, lane+1, 8·lane+3} so
+//! every kernel exercises its vector body, its scalar tail, and its
+//! empty/ragged chunk edges; sparsity sweeps {0, 50, 90, 100}%.  The
+//! whole suite is deterministic and must pass unchanged under
+//! `LG_SIMD=scalar` and `LG_SIMD=auto` — the env-resolved backend is
+//! folded into the comparison set.
+
+use learning_group::manifest::MaskedLayer;
+use learning_group::runtime::{
+    dy_wt_sparse_into, matmul_sparse_into, simd, SimdBackend, SparseLayer, LANES,
+};
+use learning_group::util::Pcg32;
+
+/// Documented upper bound on the ULP distance between the lane-grouped
+/// OSEL panel kernels and the dense-masked reference over this suite's
+/// shape × sparsity matrix.  The observed worst case is 4096 ULP —
+/// a near-cancellation output element (magnitude ~1e-4 from ~±0.5-range
+/// terms) where the survivor regrouping shifts the absolute rounding
+/// error of the reduction into a tiny result; the bound carries a +2
+/// margin over it.  Derived by replaying both accumulation orders
+/// bit-exactly in IEEE-754 single precision on the identical Pcg32
+/// data; the companion tightness assert keeps it honest.
+const MAX_ULP: u32 = 4098;
+
+/// Max slack allowed between [`MAX_ULP`] and the observed worst case
+/// before the bound counts as loose and the test demands retightening.
+const MAX_SLACK: u32 = 4;
+
+/// Every ragged relation to the vector width, for each of rows/K/cols:
+/// 1, lane−1, lane, lane+1, and 8·lane+3.
+const DIMS: [usize; 5] = [1, LANES - 1, LANES, LANES + 1, 8 * LANES + 3];
+
+/// FLGW curriculum sparsity range, percent zeroed: dense, half, the
+/// paper's operating point, and fully pruned.
+const SPARSITY_PCT: [u32; 4] = [0, 50, 90, 100];
+
+/// Order-preserving ULP distance; `==` first so `-0.0` and `+0.0`
+/// count as identical.
+fn ulp_distance(a: f32, b: f32) -> u32 {
+    if a == b {
+        return 0;
+    }
+    let (ia, ib) = (a.to_bits() as i32, b.to_bits() as i32);
+    let m = |i: i32| if i < 0 { i32::MIN - i } else { i };
+    (m(ia) as i64 - m(ib) as i64).unsigned_abs().min(u32::MAX as u64) as u32
+}
+
+/// One point of the shape × sparsity matrix with its deterministic
+/// data.  The seed and the draw order (x, w, dy, mask — all from
+/// `next_f32`/`next_below`) are part of the [`MAX_ULP`] contract: the
+/// out-of-band replay regenerates exactly this data.
+struct Case {
+    rows: usize,
+    k: usize,
+    cols: usize,
+    sp: u32,
+    x: Vec<f32>,
+    w: Vec<f32>,
+    dy: Vec<f32>,
+    mask: Vec<f32>,
+}
+
+impl Case {
+    fn label(&self) -> String {
+        format!("rows={} k={} cols={} sparsity={}%", self.rows, self.k, self.cols, self.sp)
+    }
+}
+
+fn cases() -> Vec<Case> {
+    let mut out = Vec::new();
+    for &rows in &DIMS {
+        for &k in &DIMS {
+            for &cols in &DIMS {
+                for &sp in &SPARSITY_PCT {
+                    let seed = (((rows * 100 + k) * 100 + cols) * 1000) as u64 + sp as u64;
+                    let mut rng = Pcg32::seeded(seed);
+                    let x: Vec<f32> = (0..rows * k).map(|_| rng.next_f32() - 0.5).collect();
+                    let w: Vec<f32> = (0..k * cols).map(|_| rng.next_f32() - 0.5).collect();
+                    let dy: Vec<f32> =
+                        (0..rows * cols).map(|_| rng.next_f32() - 0.5).collect();
+                    let mask: Vec<f32> = (0..k * cols)
+                        .map(|_| f32::from(rng.next_below(100) >= sp))
+                        .collect();
+                    out.push(Case { rows, k, cols, sp, x, w, dy, mask });
+                }
+            }
+        }
+    }
+    out
+}
+
+fn sparse_layer(c: &Case, strict: bool) -> SparseLayer {
+    let layer =
+        MaskedLayer { name: "w_t".to_string(), rows: c.k, cols: c.cols, offset: 0 };
+    let mut sl = SparseLayer::from_dense_mask(&layer, &c.mask, 3).expect("sparse layer");
+    sl.strict = strict;
+    sl
+}
+
+/// All backends this host can run, plus whatever `LG_SIMD` resolves to
+/// — so the suite exercises the env override path it runs under.
+fn backends() -> Vec<SimdBackend> {
+    let mut v = SimdBackend::available();
+    let env = SimdBackend::from_env().resolve();
+    if !v.contains(&env) {
+        v.push(env);
+    }
+    v
+}
+
+fn assert_bits(a: &[f32], b: &[f32], what: &str) {
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            x.to_bits() == y.to_bits(),
+            "{what} [{i}]: {x:?} ({:#010x}) vs {y:?} ({:#010x})",
+            x.to_bits(),
+            y.to_bits()
+        );
+    }
+}
+
+/// Contract 1: all five dense stages produce the same bits on every
+/// dispatchable backend, for every ragged shape and every mask.
+#[test]
+fn dense_stages_bitwise_identical_across_backends() {
+    let backends = backends();
+    for c in cases() {
+        let (rows, k, cols) = (c.rows, c.k, c.cols);
+        let mut refs: Option<[Vec<f32>; 5]> = None;
+        for &be in &backends {
+            let mut y = vec![0.0f32; rows * cols];
+            let mut ym = vec![0.0f32; rows * cols];
+            let mut dw = vec![0.0f32; k * cols];
+            let mut dx = vec![0.0f32; rows * k];
+            let mut dxm = vec![0.0f32; rows * k];
+            simd::matmul(be, &mut y, &c.x, &c.w, rows, k, cols);
+            simd::matmul_masked(be, &mut ym, &c.x, &c.w, &c.mask, rows, k, cols);
+            simd::xt_dy(be, &mut dw, &c.x, &c.dy, rows, k, cols);
+            simd::dy_wt(be, &mut dx, &c.dy, &c.w, rows, k, cols);
+            simd::dy_wt_masked(be, &mut dxm, &c.dy, &c.w, &c.mask, rows, k, cols);
+            let got = [y, ym, dw, dx, dxm];
+            match &refs {
+                None => refs = Some(got),
+                Some(want) => {
+                    for (stage, (a, b)) in
+                        ["matmul", "matmul_masked", "xt_dy", "dy_wt", "dy_wt_masked"]
+                            .iter()
+                            .zip(want.iter().zip(&got))
+                    {
+                        assert_bits(
+                            a,
+                            b,
+                            &format!("{stage} {} on {}", c.label(), be.name()),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Contract 2: the strict sparse kernels (`--strict-accum`) equal the
+/// dense-masked reference under `==` for every shape × sparsity point,
+/// on every backend (the strict walk is scalar; the backend argument
+/// must be inert).
+#[test]
+fn strict_sparse_matches_dense_masked_exactly() {
+    let backends = backends();
+    for c in cases() {
+        let (rows, k, cols) = (c.rows, c.k, c.cols);
+        let sl = sparse_layer(&c, true);
+        let mut y_dense = vec![0.0f32; rows * cols];
+        let mut dx_dense = vec![0.0f32; rows * k];
+        simd::matmul_masked(SimdBackend::Scalar, &mut y_dense, &c.x, &c.w, &c.mask, rows, k, cols);
+        simd::dy_wt_masked(SimdBackend::Scalar, &mut dx_dense, &c.dy, &c.w, &c.mask, rows, k, cols);
+        for &be in &backends {
+            let mut y = vec![0.0f32; rows * cols];
+            let mut dx = vec![0.0f32; rows * k];
+            matmul_sparse_into(&mut y, &c.x, &c.w, &sl, be, rows, k, cols);
+            dy_wt_sparse_into(&mut dx, &c.dy, &c.w, &sl, be, rows, k, cols);
+            for (i, (d, s)) in y_dense.iter().zip(&y).enumerate() {
+                assert!(
+                    d == s,
+                    "strict forward {} [{i}] on {}: dense {d:?} vs sparse {s:?}",
+                    c.label(),
+                    be.name()
+                );
+            }
+            for (i, (d, s)) in dx_dense.iter().zip(&dx).enumerate() {
+                assert!(
+                    d == s,
+                    "strict dY·Wᵀ {} [{i}] on {}: dense {d:?} vs sparse {s:?}",
+                    c.label(),
+                    be.name()
+                );
+            }
+        }
+    }
+}
+
+/// Contract 3: the default lane-padded panel path is (a) bit-identical
+/// across backends and (b) ULP-bounded against dense with a *tight*
+/// bound — the suite fails if the worst case exceeds [`MAX_ULP`] or
+/// undershoots it by more than [`MAX_SLACK`].
+#[test]
+fn panel_sparse_ulp_bounded_and_backend_invariant() {
+    let backends = backends();
+    let mut observed = 0u32;
+    let mut worst = String::new();
+    for c in cases() {
+        let (rows, k, cols) = (c.rows, c.k, c.cols);
+        let sl = sparse_layer(&c, false);
+        let mut y_dense = vec![0.0f32; rows * cols];
+        let mut dx_dense = vec![0.0f32; rows * k];
+        simd::matmul_masked(SimdBackend::Scalar, &mut y_dense, &c.x, &c.w, &c.mask, rows, k, cols);
+        simd::dy_wt_masked(SimdBackend::Scalar, &mut dx_dense, &c.dy, &c.w, &c.mask, rows, k, cols);
+
+        let mut y_ref: Option<Vec<f32>> = None;
+        let mut dx_ref: Option<Vec<f32>> = None;
+        for &be in &backends {
+            let mut y = vec![0.0f32; rows * cols];
+            let mut dx = vec![0.0f32; rows * k];
+            matmul_sparse_into(&mut y, &c.x, &c.w, &sl, be, rows, k, cols);
+            dy_wt_sparse_into(&mut dx, &c.dy, &c.w, &sl, be, rows, k, cols);
+            match (&y_ref, &dx_ref) {
+                (Some(yr), Some(dr)) => {
+                    assert_bits(yr, &y, &format!("panel forward {} on {}", c.label(), be.name()));
+                    assert_bits(dr, &dx, &format!("panel dY·Wᵀ {} on {}", c.label(), be.name()));
+                }
+                _ => {
+                    y_ref = Some(y);
+                    dx_ref = Some(dx);
+                }
+            }
+        }
+
+        let (y, dx) = (y_ref.unwrap(), dx_ref.unwrap());
+        for (tag, dense, panel) in
+            [("forward", &y_dense, &y), ("dY·Wᵀ", &dx_dense, &dx)]
+        {
+            for (i, (d, p)) in dense.iter().zip(panel).enumerate() {
+                let u = ulp_distance(*d, *p);
+                if u > observed {
+                    observed = u;
+                    worst = format!("{tag} {} [{i}]: dense {d:?} vs panel {p:?}", c.label());
+                }
+            }
+        }
+    }
+    assert!(
+        observed <= MAX_ULP,
+        "panel path drifted past the documented bound: {observed} ULP > {MAX_ULP} at {worst}"
+    );
+    assert!(
+        MAX_ULP - observed <= MAX_SLACK,
+        "ULP bound is loose: observed {observed} but the constant is {MAX_ULP} \
+         (slack > {MAX_SLACK}) — retighten MAX_ULP (worst: {worst})"
+    );
+}
+
+/// The panel path at 100% sparsity leaves the output untouched (all
+/// panels empty), and a fully-dense mask still exercises the gather
+/// path — two degenerate corners worth pinning explicitly on top of
+/// the sweep above.
+#[test]
+fn panel_degenerate_sparsities_behave() {
+    let backends = backends();
+    for c in cases().into_iter().filter(|c| c.sp == 100 || c.sp == 0) {
+        let (rows, k, cols) = (c.rows, c.k, c.cols);
+        let sl = sparse_layer(&c, false);
+        for &be in &backends {
+            let mut y = vec![0.0f32; rows * cols];
+            let mut dx = vec![0.0f32; rows * k];
+            matmul_sparse_into(&mut y, &c.x, &c.w, &sl, be, rows, k, cols);
+            dy_wt_sparse_into(&mut dx, &c.dy, &c.w, &sl, be, rows, k, cols);
+            if c.sp == 100 {
+                assert_eq!(sl.nnz(), 0, "{}", c.label());
+                assert!(
+                    y.iter().chain(&dx).all(|v| v.to_bits() == 0),
+                    "fully-pruned layer must leave +0.0 outputs untouched ({})",
+                    c.label()
+                );
+            } else {
+                assert_eq!(sl.nnz(), k * cols, "{}", c.label());
+            }
+        }
+    }
+}

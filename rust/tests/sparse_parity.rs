@@ -2,13 +2,20 @@
 //!
 //! The native backend's sparse kernels compute on the OSEL-compressed
 //! weights ([`learning_group::runtime::SparseModel`]); these tests
-//! prove they are numerically *identical* to the dense ⊙-mask reference
-//! — exact f32 equality, the strongest check feasible (`==` only
-//! forgives the sign of exact zeros, which is the single place the two
-//! paths may differ: every skipped term is a `±0.0` addition) — across
-//! the sparsity levels the FLGW curriculum produces (G ∈ {2, 4, 8, 16}
-//! → 50–93.75%), for `policy_fwd`, `grad_episode`, and whole training
-//! runs.
+//! prove that under **strict accumulation** (`--strict-accum`) they are
+//! numerically *identical* to the dense ⊙-mask reference — exact f32
+//! equality, the strongest check feasible (`==` only forgives the sign
+//! of exact zeros, which is the single place the two paths may differ:
+//! every skipped term is a `±0.0` addition) — across the sparsity
+//! levels the FLGW curriculum produces (G ∈ {2, 4, 8, 16} → 50–93.75%),
+//! for `policy_fwd`, `grad_episode`, and whole training runs.  The
+//! default lane-padded panel path is exercised too: deterministic
+//! (sparse run vs sparse run) and ULP-close to dense
+//! (`tests/simd_kernels.rs` owns the tight per-kernel bound).
+//!
+//! The whole-run matrices additionally run under forced-scalar vs
+//! auto-dispatched SIMD ([`SimdBackend`]), proving end-to-end metrics
+//! are bit-identical whichever vector backend executes the kernels.
 
 use std::sync::Arc;
 
@@ -16,7 +23,7 @@ use learning_group::coordinator::{ExecMode, PrunerChoice, TrainConfig, Trainer};
 use learning_group::manifest::Manifest;
 use learning_group::model::{GroupingState, ModelState};
 use learning_group::pruning::{FlgwPruner, PruneContext, PruningAlgorithm};
-use learning_group::runtime::{Arg, HostTensor, Runtime, SparseModel};
+use learning_group::runtime::{Arg, HostTensor, Runtime, SimdBackend, SparseModel};
 use learning_group::util::Pcg32;
 
 /// Model state + FLGW pruner with freshly encoded masks at group count
@@ -49,8 +56,10 @@ fn policy_fwd_sparse_matches_dense_masked() {
     let a = 3usize;
     for &g in &[2usize, 4, 8, 16] {
         let (state, pruner) = flgw_state(&m, g, 100 + g as u64);
-        let from_enc = SparseModel::from_encodings(&m, &pruner.encodings, 2).unwrap();
-        let from_scan = SparseModel::from_dense_masks(&m, &state.masks, 3).unwrap();
+        let from_enc =
+            SparseModel::from_encodings(&m, &pruner.encodings, 2).unwrap().strict(true);
+        let from_scan =
+            SparseModel::from_dense_masks(&m, &state.masks, 3).unwrap().strict(true);
         // curriculum sanity: density ≈ 1/G
         let density = from_scan.density();
         assert!(
@@ -95,6 +104,37 @@ fn policy_fwd_sparse_matches_dense_masked() {
                 .unwrap();
             assert_outputs_equal(&dense_out, &sparse_out, &format!("policy_fwd G={g} {label}"));
         }
+
+        // default panel path: deterministic (run-to-run identical) and
+        // every element within a few ULP of the dense reference
+        let panel = SparseModel::from_encodings(&m, &pruner.encodings, 2).unwrap();
+        let panel_dev = exe.upload_sparse(1, &masks, Arc::new(panel)).unwrap();
+        let run_panel = || {
+            exe.run_args(&[
+                Arg::Device(&p_dev),
+                Arg::Device(&panel_dev),
+                Arg::Host(&obs),
+                Arg::Host(&h),
+                Arg::Host(&c),
+                Arg::Host(&gp),
+            ])
+            .unwrap()
+        };
+        let panel_a = run_panel();
+        let panel_b = run_panel();
+        assert_outputs_equal(&panel_a, &panel_b, &format!("panel determinism G={g}"));
+        for (o, (d, p)) in dense_out.iter().zip(&panel_a).enumerate() {
+            let (d, p) = (d.as_f32().unwrap(), p.as_f32().unwrap());
+            for (i, (a, b)) in d.iter().zip(p).enumerate() {
+                // per-kernel ULP differences compound through the layer
+                // stack, so the end-to-end gate is a tolerance, not a
+                // tight ULP count (tests/simd_kernels.rs owns that)
+                assert!(
+                    (a - b).abs() <= 1e-4 + 1e-4 * a.abs(),
+                    "panel G={g} output {o} [{i}]: {a} vs {b}"
+                );
+            }
+        }
     }
 }
 
@@ -106,7 +146,7 @@ fn grad_episode_sparse_matches_dense_masked() {
     let (t, a) = (m.dims.episode_len, 3usize);
     for &g in &[2usize, 4, 16] {
         let (state, pruner) = flgw_state(&m, g, 200 + g as u64);
-        let model = SparseModel::from_encodings(&m, &pruner.encodings, 4).unwrap();
+        let model = SparseModel::from_encodings(&m, &pruner.encodings, 4).unwrap().strict(true);
 
         let mut rng = Pcg32::seeded(50 + g as u64);
         let obs =
@@ -148,10 +188,10 @@ fn grad_episode_sparse_matches_dense_masked() {
     }
 }
 
-/// End-to-end: whole training runs under `--exec sparse` and `--exec
-/// dense` must be bit-identical — metrics, final weights, and the FLGW
-/// grouping matrices (which train on the dmask cotangent the sparse
-/// path also produces).
+/// End-to-end: whole training runs under `--exec sparse
+/// --strict-accum` and `--exec dense` must be bit-identical — metrics,
+/// final weights, and the FLGW grouping matrices (which train on the
+/// dmask cotangent the sparse path also produces).
 #[test]
 fn trainer_sparse_and_dense_exec_match_bitwise() {
     let base = TrainConfig {
@@ -162,7 +202,8 @@ fn trainer_sparse_and_dense_exec_match_bitwise() {
         log_every: 0,
         ..TrainConfig::default().with_agents(3)
     };
-    let cfg_sparse = TrainConfig { exec: ExecMode::Sparse, ..base.clone() };
+    let cfg_sparse =
+        TrainConfig { exec: ExecMode::Sparse, strict_accum: true, ..base.clone() };
     let cfg_dense = TrainConfig { exec: ExecMode::DenseMasked, ..base };
     let mut ts = Trainer::from_default_artifacts(cfg_sparse).unwrap();
     let mut td = Trainer::from_default_artifacts(cfg_dense).unwrap();
@@ -184,7 +225,8 @@ fn trainer_sparse_and_dense_exec_match_bitwise() {
 }
 
 /// Non-FLGW masks are not group-structured; the sparse path must fall
-/// back to the dense-mask scan and still match exactly.
+/// back to the dense-mask scan and (under strict accumulation) still
+/// match exactly.
 #[test]
 fn sparse_exec_covers_unstructured_masks() {
     let base = TrainConfig {
@@ -197,6 +239,7 @@ fn sparse_exec_covers_unstructured_masks() {
     };
     let mut ts = Trainer::from_default_artifacts(TrainConfig {
         exec: ExecMode::Sparse,
+        strict_accum: true,
         ..base.clone()
     })
     .unwrap();
@@ -236,4 +279,49 @@ fn sparse_parallel_rollouts_match_sequential() {
         assert_eq!(a.loss, b.loss, "iteration {}", a.iteration);
     }
     assert_eq!(seq.state.params, par.state.params);
+}
+
+/// Whole training runs under forced-scalar vs auto-dispatched SIMD
+/// must be bit-identical at every G / exec mode / thread count: the
+/// dense kernels keep per-element accumulation order backend-invariant
+/// by construction, and the sparse panel kernels are
+/// backend-bitwise-identical too (the lane layout, not the ISA,
+/// defines the reduction tree).  This is the `LG_SIMD=scalar` vs
+/// `LG_SIMD=auto` contract, pinned through `TrainConfig::simd`.
+#[test]
+fn simd_backends_are_unobservable_in_training() {
+    for &(g, exec, intra) in &[
+        (2usize, ExecMode::Sparse, 1usize),
+        (4, ExecMode::Sparse, 3),
+        (4, ExecMode::DenseMasked, 1),
+        (8, ExecMode::Sparse, 1),
+    ] {
+        let base = TrainConfig {
+            batch: 2,
+            iterations: 2,
+            pruner: PrunerChoice::Flgw(g),
+            seed: 90 + g as u64,
+            log_every: 0,
+            exec,
+            intra_threads: intra,
+            ..TrainConfig::default().with_agents(3)
+        };
+        let scalar =
+            TrainConfig { simd: SimdBackend::Scalar, ..base.clone() };
+        let auto = TrainConfig { simd: SimdBackend::detect(), ..base };
+        let mut ts = Trainer::from_default_artifacts(scalar).unwrap();
+        let mut ta = Trainer::from_default_artifacts(auto).unwrap();
+        let log_s = ts.train().unwrap();
+        let log_a = ta.train().unwrap();
+        for (s, a) in log_s.records.iter().zip(&log_a.records) {
+            assert_eq!(s.loss, a.loss, "G={g} exec={} it {}", exec.name(), s.iteration);
+            assert_eq!(s.mean_reward, a.mean_reward, "G={g} it {}", s.iteration);
+            assert_eq!(s.success_rate, a.success_rate, "G={g} it {}", s.iteration);
+        }
+        assert_eq!(
+            ts.state.params, ta.state.params,
+            "G={g} exec={}: weights must match bitwise across SIMD backends",
+            exec.name()
+        );
+    }
 }
