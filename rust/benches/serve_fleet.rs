@@ -1,0 +1,218 @@
+//! Serving-fleet benchmark → `BENCH_serve_fleet.json`.
+//!
+//! Trains a short FLGW run, starts a real daemon (2 replicas, dynamic
+//! lockstep batching) on a loopback unix socket, and sweeps offered
+//! load — concurrent load-generator connections — recording per-level
+//! p50/p99 step latency and steps/sec, the saturation point (smallest
+//! concurrency within 95% of peak throughput), and the dynamic
+//! batcher's block-size histogram.
+//!
+//! ```bash
+//! cargo bench --bench serve_fleet              # full sweep
+//! cargo bench --bench serve_fleet -- --smoke   # CI smoke: tiny sweep
+//! ```
+//!
+//! Hard gates (exit non-zero): any load level that loses episodes, or
+//! any level whose aggregate rewards/steps diverge from an offline
+//! `eval` of the same checkpoint — the fleet's bit-identity contract
+//! under concurrency — or a daemon that fails to shut down cleanly.
+
+use std::time::Duration;
+
+use learning_group::coordinator::{ExecMode, PrunerChoice, TrainConfig, Trainer};
+use learning_group::env::EnvConfig;
+use learning_group::runtime::{Runtime, SimdBackend};
+use learning_group::serve::{
+    run_loadgen, Daemon, DaemonClient, DaemonConfig, EvalReport, ListenAddr, LoadgenOptions,
+    LoadgenReport, PolicyServer, ServeMode, ServeOptions,
+};
+
+const REPLICAS: usize = 2;
+const MAX_BATCH: usize = 16;
+
+fn write_json(
+    rows: &[LoadgenReport],
+    offline: &EvalReport,
+    batch_hist: &[(u32, u64)],
+    saturation: usize,
+    peak: f64,
+    smoke: bool,
+) -> std::io::Result<()> {
+    let mut row_text = String::new();
+    for (i, r) in rows.iter().enumerate() {
+        if i > 0 {
+            row_text.push_str(",\n");
+        }
+        row_text.push_str(&format!(
+            "    {{\"concurrency\": {}, \"episodes\": {}, \"steps\": {}, \"wall_s\": {:.6}, \
+             \"steps_per_sec\": {:.3}, \"episodes_per_sec\": {:.3}, \"p50_ms\": {:.4}, \
+             \"p99_ms\": {:.4}, \"reward_mean\": {:.6}, \"success_rate\": {:.6}}}",
+            r.concurrency,
+            r.episodes,
+            r.steps,
+            r.wall_s,
+            r.steps_per_sec,
+            r.episodes_per_sec,
+            r.p50_ms,
+            r.p99_ms,
+            r.reward.mean,
+            r.success_rate,
+        ));
+    }
+    let mut hist_text = String::new();
+    for (i, &(block, calls)) in batch_hist.iter().enumerate() {
+        if i > 0 {
+            hist_text.push_str(", ");
+        }
+        hist_text.push_str(&format!("{{\"block\": {block}, \"calls\": {calls}}}"));
+    }
+    let text = format!(
+        "{{\n  \"bench\": \"serve_fleet\",\n  \"mode\": \"{}\",\n  \"env\": \"{}\",\n  \
+         \"agents\": {},\n  \"exec\": \"sparse\",\n  \"density\": {:.6},\n  \
+         \"checkpoint_iteration\": {},\n  \"replicas\": {REPLICAS},\n  \
+         \"max_batch\": {MAX_BATCH},\n  \"offline_steps_per_sec\": {:.3},\n  \
+         \"saturation_concurrency\": {saturation},\n  \"peak_steps_per_sec\": {peak:.3},\n  \
+         \"batch_hist\": [{hist_text}],\n  \"rows\": [\n{row_text}\n  ]\n}}\n",
+        if smoke { "smoke" } else { "full" },
+        offline.env,
+        offline.agents,
+        offline.density,
+        offline.checkpoint_iteration,
+        offline.steps_per_sec,
+    );
+    std::fs::write("BENCH_serve_fleet.json", text)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|arg| arg == "--smoke")
+        || std::env::var_os("LG_BENCH_SMOKE").is_some();
+
+    // --- a checkpoint to serve: short FLGW training run
+    let cfg = TrainConfig {
+        batch: 2,
+        iterations: if smoke { 2 } else { 10 },
+        pruner: PrunerChoice::Flgw(4),
+        seed: 1,
+        log_every: 0,
+        ..TrainConfig::default().with_agents(3)
+    };
+    let mut trainer = Trainer::from_default_artifacts(cfg).expect("building trainer");
+    trainer.train().expect("training the checkpoint source");
+    let ckpt = trainer.checkpoint().expect("snapshotting checkpoint");
+    let agents = ckpt.meta.agents as usize;
+    let env_cfg = EnvConfig::parse(&ckpt.meta.env)
+        .expect("checkpoint env spec")
+        .with_agents(agents);
+
+    // --- offline reference: the same episode workload through the
+    // in-process serving engine (the parity baseline)
+    let episodes = if smoke { 8 } else { 48 };
+    let master_seed = 9u64;
+    let mut rt = Runtime::from_default_artifacts().expect("building runtime");
+    let offline = PolicyServer::from_checkpoint(&mut rt, &ckpt, ExecMode::Sparse, 1, 1)
+        .expect("building offline reference server")
+        .run(&ServeOptions {
+            workers: 2,
+            mode: ServeMode::Episodes(episodes),
+            seed: master_seed,
+        })
+        .expect("offline reference eval");
+
+    // --- the daemon under test: loopback unix socket, 2 replicas,
+    // dynamic batching up to MAX_BATCH
+    let sock_dir =
+        std::env::temp_dir().join(format!("lg_serve_fleet_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&sock_dir);
+    std::fs::create_dir_all(&sock_dir).expect("creating socket dir");
+    let listen = ListenAddr::Unix(sock_dir.join("daemon.sock"));
+    let handle = Daemon::start(
+        &listen,
+        &ckpt,
+        DaemonConfig {
+            replicas: REPLICAS,
+            max_batch: MAX_BATCH,
+            simd: SimdBackend::from_env(),
+            reload_poll: Duration::from_millis(200),
+            ..DaemonConfig::default()
+        },
+    )
+    .expect("starting daemon");
+
+    // --- sweep offered load
+    let levels: &[usize] = if smoke { &[1, 4] } else { &[1, 2, 4, 8, 16, 32] };
+    let mut rows: Vec<LoadgenReport> = Vec::new();
+    for &concurrency in levels {
+        // warmup pass, then the measured pass
+        run_loadgen(
+            handle.addr(),
+            env_cfg,
+            &LoadgenOptions { concurrency, episodes: episodes / 4 + 1, seed: 3 },
+        )
+        .expect("warmup loadgen pass");
+        let report = run_loadgen(
+            handle.addr(),
+            env_cfg,
+            &LoadgenOptions { concurrency, episodes, seed: master_seed },
+        )
+        .expect("measured loadgen pass");
+        println!(
+            "serve_fleet C={concurrency:>2}: {:>10.1} steps/s  p50 {:>7.3} ms  p99 {:>7.3} ms  \
+             ({} episodes, {:.3} s)",
+            report.steps_per_sec, report.p50_ms, report.p99_ms, report.episodes, report.wall_s
+        );
+        if report.episodes != episodes {
+            eprintln!(
+                "REGRESSION: C={concurrency} completed {} of {episodes} episodes",
+                report.episodes
+            );
+            std::process::exit(1);
+        }
+        // bit-identity under load: every level reproduces the offline
+        // eval exactly (same seed stream, index-ordered aggregation)
+        if report.steps != offline.steps
+            || report.reward.mean != offline.reward.mean
+            || report.reward.min != offline.reward.min
+            || report.reward.max != offline.reward.max
+            || report.success_rate != offline.success_rate
+        {
+            eprintln!(
+                "REGRESSION: C={concurrency} diverged from offline eval \
+                 (steps {} vs {}, reward mean {} vs {})",
+                report.steps, offline.steps, report.reward.mean, offline.reward.mean
+            );
+            std::process::exit(1);
+        }
+        rows.push(report);
+    }
+
+    // --- batcher histogram + saturation point
+    let mut client = DaemonClient::connect(handle.addr()).expect("stats connection");
+    let stats = client.stats().expect("daemon stats");
+    let peak = rows.iter().map(|r| r.steps_per_sec).fold(0.0f64, f64::max);
+    let saturation = rows
+        .iter()
+        .find(|r| r.steps_per_sec >= 0.95 * peak)
+        .map(|r| r.concurrency)
+        .unwrap_or_else(|| rows.last().expect("at least one row").concurrency);
+    if stats.proto_errors != 0 {
+        eprintln!("REGRESSION: daemon observed {} protocol errors", stats.proto_errors);
+        std::process::exit(1);
+    }
+
+    write_json(&rows, &offline, &stats.batch_hist, saturation, peak, smoke)
+        .expect("writing BENCH_serve_fleet.json");
+    println!(
+        "saturation at C={saturation} ({peak:.1} steps/s peak); batch histogram {:?}",
+        stats.batch_hist
+    );
+    println!("sweep written to BENCH_serve_fleet.json");
+
+    // --- clean teardown is part of the contract
+    client.shutdown().expect("daemon shutdown");
+    drop(client);
+    if let Err(e) = handle.wait() {
+        eprintln!("REGRESSION: daemon did not shut down cleanly: {e:#}");
+        std::process::exit(1);
+    }
+    let _ = std::fs::remove_dir_all(&sock_dir);
+}

@@ -50,11 +50,11 @@
 //! mismatch — a flipped bit inside a mask cannot slip through even if
 //! it survived the CRC.
 
-mod bytes;
+pub(crate) mod bytes;
 
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Context, Error, Result};
 
 use crate::accel::bitvec::BitVec;
 use crate::accel::osel::OselEncoder;
@@ -63,6 +63,70 @@ use crate::manifest::{Manifest, ModelTopology};
 use crate::runtime::{ExecMode, SparseModel};
 
 use bytes::{crc32, ByteReader, ByteWriter};
+
+/// Why a checkpoint could not be loaded — the named error behind
+/// `eval`/`serve`/`daemon` checkpoint failures.
+///
+/// The split matters operationally: the daemon's hot-reload watcher
+/// must *skip and retry* a file that is still being written or was cut
+/// short ([`CheckpointError::is_transient`]) instead of dying on it,
+/// while a layout mismatch against the running manifest is permanent
+/// and should be surfaced once, loudly.  The CLI maps every variant to
+/// a one-line message and a non-zero exit (no raw `io::Error` panics).
+#[derive(Debug)]
+pub enum CheckpointError {
+    /// The file could not be read at all (missing path, permissions,
+    /// I/O failure).
+    Io {
+        /// The checkpoint path that failed.
+        path: std::path::PathBuf,
+        /// The underlying I/O error.
+        source: std::io::Error,
+    },
+    /// The bytes do not decode as a checkpoint: bad magic, unsupported
+    /// version, CRC mismatch, truncation, or a corrupt payload.  A
+    /// half-written file lands here.
+    Corrupt {
+        /// The checkpoint path that failed.
+        path: std::path::PathBuf,
+        /// Human-readable decode failure (full context chain).
+        detail: String,
+    },
+    /// The checkpoint decoded cleanly but belongs to a different model
+    /// layout than the running manifest (topology or fingerprint
+    /// mismatch) — permanent, retrying cannot help.
+    Mismatch {
+        /// Human-readable mismatch description.
+        detail: String,
+    },
+}
+
+impl CheckpointError {
+    /// True when retrying later could succeed — a missing or
+    /// half-written file (the reload watcher's skip condition).  Layout
+    /// mismatches are permanent.
+    pub fn is_transient(&self) -> bool {
+        matches!(self, CheckpointError::Io { .. } | CheckpointError::Corrupt { .. })
+    }
+}
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointError::Io { path, source } => {
+                write!(f, "checkpoint {}: {source}", path.display())
+            }
+            CheckpointError::Corrupt { path, detail } => {
+                write!(f, "checkpoint {} is corrupt or truncated: {detail}", path.display())
+            }
+            CheckpointError::Mismatch { detail } => {
+                write!(f, "checkpoint does not match the running model: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
 
 /// File magic: "LGCP" (LearningGroup CheckPoint).
 pub const MAGIC: [u8; 4] = *b"LGCP";
@@ -546,9 +610,22 @@ impl Checkpoint {
 
     /// Read + verify from disk.
     pub fn read(path: impl AsRef<Path>) -> Result<Self> {
+        Self::try_read(path).map_err(Error::from)
+    }
+
+    /// [`Self::read`] with the failure classified as a
+    /// [`CheckpointError`]: unreadable path, corrupt/truncated bytes,
+    /// or (for callers that check) a layout mismatch — the reload
+    /// watcher keys its skip-and-retry decision off
+    /// [`CheckpointError::is_transient`].
+    pub fn try_read(path: impl AsRef<Path>) -> std::result::Result<Self, CheckpointError> {
         let path = path.as_ref();
-        let bytes = std::fs::read(path).with_context(|| format!("reading checkpoint {path:?}"))?;
-        Self::from_bytes(&bytes).with_context(|| format!("decoding checkpoint {path:?}"))
+        let bytes = std::fs::read(path)
+            .map_err(|source| CheckpointError::Io { path: path.to_path_buf(), source })?;
+        Self::from_bytes(&bytes).map_err(|e| CheckpointError::Corrupt {
+            path: path.to_path_buf(),
+            detail: format!("{e:#}"),
+        })
     }
 
     /// Refuse a checkpoint whose buffer layout disagrees with the
@@ -851,6 +928,30 @@ mod tests {
                 decoded.validate_manifest(&Manifest::builtin()).unwrap_err().to_string();
             assert!(err.contains("topology"), "{err}");
         }
+    }
+
+    #[test]
+    fn try_read_classifies_failures_as_named_errors() {
+        // missing path → transient Io, one-line Display
+        let err = Checkpoint::try_read("/nonexistent/lg_no_such.lgcp").unwrap_err();
+        assert!(matches!(err, CheckpointError::Io { .. }), "{err}");
+        assert!(err.is_transient());
+        assert!(!err.to_string().contains('\n'), "{err}");
+        // truncated file (a half-written checkpoint) → transient Corrupt
+        let m = Manifest::builtin();
+        let ckpt = flgw_checkpoint(&m, 2);
+        let path = std::env::temp_dir().join("lg_ckpt_named_err_test.lgcp");
+        let mut bytes = ckpt.to_bytes();
+        bytes.truncate(bytes.len() / 2);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::try_read(&path).unwrap_err();
+        assert!(matches!(err, CheckpointError::Corrupt { .. }), "{err}");
+        assert!(err.is_transient());
+        assert!(!err.to_string().contains('\n'), "{err}");
+        let _ = std::fs::remove_file(path);
+        // a layout mismatch is permanent — retrying cannot help
+        let err = CheckpointError::Mismatch { detail: "topology".to_string() };
+        assert!(!err.is_transient());
     }
 
     #[test]

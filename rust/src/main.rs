@@ -23,6 +23,13 @@
 //!                      [--batch B] [--intra-threads T]
 //!                      [--simd B] [--strict-accum]
 //!                      [--exec sparse|dense] [--seed S] [--json PATH]
+//! learning-group daemon --checkpoint CKPT --listen <unix:/p.sock|host:port>
+//!                      [--replicas N] [--max-batch B] [--intra-threads T]
+//!                      [--simd B] [--strict-accum] [--exec sparse|dense]
+//!                      [--reload-watch PATH] [--reload-poll-ms MS]
+//! learning-group loadgen --connect <unix:/p.sock|host:port> --checkpoint CKPT
+//!                      [--concurrency C] [--episodes E] [--seed S]
+//!                      [--json PATH] [--shutdown]
 //! learning-group roofline            # Fig 1
 //! learning-group accuracy [--iterations N] [--env E] [--rollouts R] [--fig9]
 //!                                    # Fig 4(a) / Fig 9
@@ -64,6 +71,15 @@
 //! replays a checkpointed policy over a fixed episode count on R
 //! worker threads; `serve` sustains it for a wall-clock budget — both
 //! report steps/sec, episodes/sec and reward statistics as JSON.
+//!
+//! `daemon` is the long-lived serving fleet: it binds a unix or TCP
+//! socket, batches in-flight client episodes into lockstep kernel
+//! blocks across `--replicas` workers, and (with `--reload-watch`)
+//! hot-swaps to new `.lgcp` checkpoints without dropping in-flight
+//! episodes.  `loadgen` is its load-generator client: it drives
+//! `--episodes` client-owned environments over `--concurrency`
+//! connections and prints an `eval`-comparable JSON report (same seed
+//! stream, bit-identical episodes — the CI parity gate diffs the two).
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -76,7 +92,10 @@ use learning_group::env::EnvConfig;
 use learning_group::experiments;
 use learning_group::manifest::{Manifest, ModelTopology};
 use learning_group::runtime::{plan, Runtime, SimdBackend};
-use learning_group::serve::{PolicyServer, ServeMode, ServeOptions};
+use learning_group::serve::{
+    run_loadgen, Daemon, DaemonClient, DaemonConfig, ListenAddr, LoadgenOptions, PolicyServer,
+    ServeMode, ServeOptions,
+};
 
 struct Args {
     flags: std::collections::HashMap<String, String>,
@@ -333,7 +352,100 @@ fn cmd_eval(args: &Args, sustained: bool) -> Result<()> {
     Ok(())
 }
 
-fn main() -> Result<()> {
+/// `learning-group daemon`: build the boot snapshot, bind the socket,
+/// serve until a client sends a shutdown frame.
+fn cmd_daemon(args: &Args) -> Result<()> {
+    let path = args
+        .flags
+        .get("checkpoint")
+        .ok_or_else(|| anyhow!("--checkpoint <path> is required"))?;
+    let ckpt = Checkpoint::read(path)?;
+    let listen_s = args
+        .flags
+        .get("listen")
+        .ok_or_else(|| anyhow!("--listen <unix:/path.sock | host:port> is required"))?;
+    let listen = ListenAddr::parse(listen_s)?;
+    let exec_s = args
+        .flags
+        .get("exec")
+        .cloned()
+        .unwrap_or_else(|| "sparse".to_string());
+    let exec = ExecMode::parse(&exec_s)
+        .ok_or_else(|| anyhow!("unknown exec mode {exec_s:?} (sparse | dense)"))?;
+    let cfg = DaemonConfig {
+        replicas: args.get("replicas", 2)?,
+        max_batch: args.get("max-batch", 8)?,
+        exec,
+        intra_threads: args.get("intra-threads", 1)?,
+        strict_accum: args.has("strict-accum"),
+        simd: parse_simd(args)?,
+        reload_watch: args.flags.get("reload-watch").map(PathBuf::from),
+        reload_poll: Duration::from_millis(args.get("reload-poll-ms", 200u64)?),
+    };
+    let replicas = cfg.replicas;
+    let max_batch = cfg.max_batch;
+    let handle = Daemon::start(&listen, &ckpt, cfg)?;
+    eprintln!(
+        "daemon serving checkpoint {path} on {}: env={} model={} iteration={} \
+         replicas={replicas} max-batch={max_batch} exec={}",
+        handle.addr(),
+        ckpt.meta.env,
+        ckpt.meta.model.spec(),
+        ckpt.meta.iteration,
+        exec.name()
+    );
+    handle.wait()
+}
+
+/// `learning-group loadgen`: drive client-owned episodes against a
+/// running daemon and print an `eval`-comparable JSON report.  The
+/// checkpoint is read only for the env spec + agent count (the daemon
+/// owns the model).
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let addr_s = args
+        .flags
+        .get("connect")
+        .ok_or_else(|| anyhow!("--connect <unix:/path.sock | host:port> is required"))?;
+    let addr = ListenAddr::parse(addr_s)?;
+    let path = args
+        .flags
+        .get("checkpoint")
+        .ok_or_else(|| anyhow!("--checkpoint <path> is required (for the env spec)"))?;
+    let ckpt = Checkpoint::read(path)?;
+    let agents = ckpt.meta.agents as usize;
+    let env_cfg = EnvConfig::parse(&ckpt.meta.env)
+        .ok_or_else(|| anyhow!("checkpoint has unknown env spec {:?}", ckpt.meta.env))?
+        .with_agents(agents);
+    let opts = LoadgenOptions {
+        concurrency: args.get("concurrency", 4)?,
+        episodes: args.get("episodes", 32)?,
+        seed: args.get("seed", 1)?,
+    };
+    let report = run_loadgen(&addr, env_cfg, &opts)?;
+    print!("{}", report.to_json());
+    if let Some(out) = args.flags.get("json") {
+        std::fs::write(out, report.to_json())
+            .map_err(|e| anyhow!("writing report to {out}: {e}"))?;
+        eprintln!("report written to {out}");
+    }
+    if args.has("shutdown") {
+        DaemonClient::connect(&addr)?.shutdown()?;
+        eprintln!("daemon at {addr} acknowledged shutdown");
+    }
+    Ok(())
+}
+
+fn main() {
+    // one-line error contract: a truncated/mismatched checkpoint (or
+    // any other failure) exits non-zero with the full cause chain on a
+    // single stderr line — what scripts and the CI jobs grep for
+    if let Err(e) = run() {
+        eprintln!("learning-group: error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = argv.first().map(String::as_str).unwrap_or("help");
     let args = Args::parse(&argv[1.min(argv.len())..]);
@@ -341,6 +453,8 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args)?,
         "eval" => cmd_eval(&args, false)?,
         "serve" => cmd_eval(&args, true)?,
+        "daemon" => cmd_daemon(&args)?,
+        "loadgen" => cmd_loadgen(&args)?,
         "roofline" => print!("{}", experiments::fig1_roofline()),
         "osel" => {
             print!("{}", experiments::fig10a_cycles());
@@ -385,7 +499,7 @@ fn main() -> Result<()> {
             }
         }
         "help" | "--help" | "-h" => {
-            println!("usage: learning-group <train|eval|serve|roofline|accuracy|osel|balance|perf|resources> [flags]");
+            println!("usage: learning-group <train|eval|serve|daemon|loadgen|roofline|accuracy|osel|balance|perf|resources> [flags]");
             println!("train flags: --agents A --batch B --iterations N --seed S --csv PATH");
             println!("             --env predator_prey|traffic_junction:easy|medium|hard");
             println!("             --model tiny|paper|wide (layer-graph topology preset)");
@@ -405,6 +519,13 @@ fn main() -> Result<()> {
             println!("             --intra-threads T (sparse-kernel row fan-out threads)");
             println!("             --seed S --json PATH (also write the report to a file)");
             println!("serve flags: like eval, but --seconds S (sustained-throughput mode)");
+            println!("daemon flags: --checkpoint CKPT --listen unix:/path.sock|host:port");
+            println!("             --replicas N (model replica workers, default 2)");
+            println!("             --max-batch B (lockstep batching ceiling, default 8)");
+            println!("             --reload-watch PATH (.lgcp file or dir: hot checkpoint reload)");
+            println!("             --reload-poll-ms MS (watch poll interval, default 200)");
+            println!("loadgen flags: --connect ADDR --checkpoint CKPT --concurrency C");
+            println!("             --episodes E --seed S --json PATH --shutdown (stop the daemon after)");
             println!("see README.md for the full CLI reference and paper-figure mapping");
         }
         other => return Err(anyhow!("unknown command {other:?}; try help")),

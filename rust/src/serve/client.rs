@@ -1,0 +1,391 @@
+//! Client side of the daemon protocol: a blocking request/response
+//! [`DaemonClient`], the episode loop that drives a client-owned
+//! environment against the daemon ([`run_served_episode`]), and the
+//! multi-connection load generator behind `learning-group loadgen`
+//! ([`run_loadgen`]).
+//!
+//! The division of labour mirrors the daemon's: the client owns the
+//! environment (reset, step, reward bookkeeping), the daemon owns the
+//! model (recurrent state, sampling).  Because the daemon samples from
+//! the same per-episode PCG32 stream as the offline drivers, an episode
+//! served over the socket reports bit-for-bit what
+//! [`crate::serve::EpisodeDriver`] reports for the same (index, seed) —
+//! the loadgen report's aggregate rows are therefore directly
+//! comparable (`grep`-diffable in CI) against an offline `eval` of the
+//! same checkpoint.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::rollout::episode_seed;
+use crate::env::{EnvConfig, MultiAgentEnv};
+use crate::serve::daemon::{ListenAddr, Stream};
+use crate::serve::proto::{self, DaemonStats, Msg};
+use crate::serve::{EpisodeOutcome, RewardStats};
+use crate::util::mean;
+
+/// What the daemon announced when an episode was opened.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpenedInfo {
+    /// Training iteration of the snapshot the episode is pinned to.
+    pub iteration: u64,
+    /// Agents per episode.
+    pub agents: usize,
+    /// Observation width per agent.
+    pub obs_dim: usize,
+    /// Static episode length (the step budget).
+    pub episode_len: usize,
+}
+
+/// One actioned step as returned by the daemon.
+#[derive(Debug, Clone)]
+pub struct SteppedActions {
+    /// 1-based step counter within the episode.
+    pub step: u32,
+    /// Per-agent environment actions (already noop-mapped).
+    pub actions: Vec<u16>,
+    /// Per-agent sampled communication gates.
+    pub gates: Vec<u8>,
+}
+
+/// A blocking request/response connection to a running daemon.  One
+/// client = one connection = one episode id namespace; calls are
+/// strictly serial, so each request sees exactly its own reply.
+pub struct DaemonClient {
+    stream: Stream,
+}
+
+impl DaemonClient {
+    /// Connect to a daemon at `addr` (either address family).
+    pub fn connect(addr: &ListenAddr) -> Result<Self> {
+        let stream = Stream::connect(addr)
+            .with_context(|| format!("connecting to daemon at {addr}"))?;
+        Ok(DaemonClient { stream })
+    }
+
+    /// One request/response round trip.
+    fn call(&mut self, msg: &Msg) -> Result<Msg> {
+        proto::write_frame(&mut self.stream, msg).context("writing request frame")?;
+        proto::read_frame(&mut self.stream)
+            .map_err(|e| anyhow!("reading reply frame: {e}"))
+    }
+
+    fn unexpected(context: &str, reply: Msg) -> anyhow::Error {
+        match reply {
+            Msg::Error { code, episode, message } => {
+                anyhow!("daemon error {code} on episode {episode} ({context}): {message}")
+            }
+            other => anyhow!("unexpected daemon reply to {context}: {other:?}"),
+        }
+    }
+
+    /// Open an episode under this connection's namespace.
+    pub fn open(&mut self, episode: u64, seed: u64) -> Result<OpenedInfo> {
+        match self.call(&Msg::Open { episode, seed })? {
+            Msg::Opened { episode: ep, iteration, agents, obs_dim, episode_len }
+                if ep == episode =>
+            {
+                Ok(OpenedInfo {
+                    iteration,
+                    agents: agents as usize,
+                    obs_dim: obs_dim as usize,
+                    episode_len: episode_len as usize,
+                })
+            }
+            other => Err(Self::unexpected("open", other)),
+        }
+    }
+
+    /// Submit one observation, receive the sampled joint action.
+    pub fn step(&mut self, episode: u64, obs: &[f32]) -> Result<SteppedActions> {
+        match self.call(&Msg::Step { episode, obs: obs.to_vec() })? {
+            Msg::StepActions { episode: ep, step, actions, gates } if ep == episode => {
+                Ok(SteppedActions { step, actions, gates })
+            }
+            other => Err(Self::unexpected("step", other)),
+        }
+    }
+
+    /// Close an episode; returns the daemon-side step count.
+    pub fn close_episode(&mut self, episode: u64) -> Result<u32> {
+        match self.call(&Msg::Close { episode })? {
+            Msg::Closed { episode: ep, steps } if ep == episode => Ok(steps),
+            other => Err(Self::unexpected("close", other)),
+        }
+    }
+
+    /// Fetch the daemon's operational counters.
+    pub fn stats(&mut self) -> Result<DaemonStats> {
+        match self.call(&Msg::Stats)? {
+            Msg::StatsReport(stats) => Ok(stats),
+            other => Err(Self::unexpected("stats", other)),
+        }
+    }
+
+    /// Ask the daemon to shut down (acknowledged, then the daemon
+    /// drains its queue and exits).
+    pub fn shutdown(&mut self) -> Result<()> {
+        match self.call(&Msg::Shutdown)? {
+            Msg::ShutdownAck => Ok(()),
+            other => Err(Self::unexpected("shutdown", other)),
+        }
+    }
+}
+
+/// Drive one client-owned environment episode against the daemon and
+/// report the same outcome shape as the offline drivers, plus the
+/// per-step round-trip latencies in milliseconds.
+///
+/// The loop is the serving contract in miniature: reset locally with
+/// the episode seed, stream each observation, apply the daemon's
+/// actions locally, stop on `done` or the announced step budget.
+pub fn run_served_episode(
+    client: &mut DaemonClient,
+    env: &mut dyn MultiAgentEnv,
+    index: u64,
+    seed: u64,
+) -> Result<(EpisodeOutcome, Vec<f64>)> {
+    let info = client.open(index, seed)?;
+    let mut obs = env.reset(seed);
+    let mut steps = 0usize;
+    let mut total_reward = 0.0f32;
+    let mut latencies_ms = Vec::with_capacity(info.episode_len);
+    let mut env_acts = Vec::with_capacity(info.agents);
+    for _ in 0..info.episode_len {
+        let t0 = Instant::now();
+        let stepped = client.step(index, &obs)?;
+        latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        env_acts.clear();
+        env_acts.extend(stepped.actions.iter().map(|&x| x as usize));
+        let step = env.step(&env_acts);
+        steps += 1;
+        total_reward += step.reward;
+        obs = step.obs;
+        if step.done {
+            break;
+        }
+    }
+    let served_steps = client.close_episode(index)?;
+    if served_steps as usize != steps {
+        return Err(anyhow!(
+            "daemon counted {served_steps} steps for episode {index}, client counted {steps}"
+        ));
+    }
+    Ok((
+        EpisodeOutcome {
+            index,
+            seed,
+            steps,
+            total_reward,
+            success: env.is_success(),
+            success_frac: env.success_fraction(),
+        },
+        latencies_ms,
+    ))
+}
+
+/// Load-generator options (`learning-group loadgen`).
+#[derive(Debug, Clone)]
+pub struct LoadgenOptions {
+    /// Concurrent client connections (the offered load).
+    pub concurrency: usize,
+    /// Episodes to complete across all connections.
+    pub episodes: usize,
+    /// Master seed for the per-episode seed stream (same stream as
+    /// offline `eval`, so reports are comparable).
+    pub seed: u64,
+}
+
+/// Aggregate loadgen report.  The `episodes`/`steps`/`reward`/
+/// `success_rate` rows use the exact key names and formatting of the
+/// offline [`crate::serve::EvalReport`] JSON, so CI can diff the two
+/// reports textually for the parity gate.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    /// Environment the served checkpoint replays.
+    pub env: String,
+    /// Agents per episode.
+    pub agents: usize,
+    /// Concurrent client connections that generated the load.
+    pub concurrency: usize,
+    /// Episodes completed.
+    pub episodes: usize,
+    /// Total environment steps across all episodes.
+    pub steps: usize,
+    /// Wall-clock of the whole sweep in seconds.
+    pub wall_s: f64,
+    /// `steps / wall_s` — served throughput at this offered load.
+    pub steps_per_sec: f64,
+    /// `episodes / wall_s`.
+    pub episodes_per_sec: f64,
+    /// Reward statistics over the completed episodes.
+    pub reward: RewardStats,
+    /// Mean graded success over the completed episodes.
+    pub success_rate: f32,
+    /// Median per-step round-trip latency (milliseconds).
+    pub p50_ms: f64,
+    /// 99th-percentile per-step round-trip latency (milliseconds).
+    pub p99_ms: f64,
+}
+
+/// `q`-th percentile (0 ≤ q ≤ 1) by nearest-rank over a sorted copy.
+fn percentile(samples: &mut [f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).expect("latency NaN"));
+    let rank = ((samples.len() - 1) as f64 * q).round() as usize;
+    samples[rank.min(samples.len() - 1)]
+}
+
+impl LoadgenReport {
+    /// Serialise as a single JSON object (manual emission, same idiom
+    /// as [`crate::serve::EvalReport::to_json`]).  The parity-gated
+    /// keys are formatted identically to the offline report *including
+    /// trailing commas* — `episodes`/`steps` mid-object, `reward` then
+    /// `success_rate` closing it — so CI can diff the grepped lines
+    /// verbatim against an `eval` report.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\n  \"kind\": \"loadgen_report\",\n  \"env\": \"{}\",\n  \"agents\": {},\n  \
+             \"concurrency\": {},\n  \"episodes\": {},\n  \"steps\": {},\n  \
+             \"wall_s\": {:.6},\n  \"steps_per_sec\": {:.3},\n  \"episodes_per_sec\": {:.3},\n  \
+             \"p50_ms\": {:.4},\n  \"p99_ms\": {:.4},\n  \
+             \"reward\": {{\"mean\": {:.6}, \"std\": {:.6}, \"min\": {:.6}, \"max\": {:.6}}},\n  \
+             \"success_rate\": {:.6}\n}}\n",
+            self.env,
+            self.agents,
+            self.concurrency,
+            self.episodes,
+            self.steps,
+            self.wall_s,
+            self.steps_per_sec,
+            self.episodes_per_sec,
+            self.p50_ms,
+            self.p99_ms,
+            self.reward.mean,
+            self.reward.std,
+            self.reward.min,
+            self.reward.max,
+            self.success_rate,
+        )
+    }
+}
+
+/// Sweep `opts.episodes` episodes over `opts.concurrency` connections
+/// against the daemon at `addr`.  Each connection owns one environment
+/// and claims episode indices off a shared counter; seeds come from the
+/// same `episode_seed` stream as offline `eval`, and the aggregation
+/// sorts by index, so the report rows are deterministic whatever the
+/// connection interleaving was.
+pub fn run_loadgen(
+    addr: &ListenAddr,
+    env_cfg: EnvConfig,
+    opts: &LoadgenOptions,
+) -> Result<LoadgenReport> {
+    let concurrency = opts.concurrency.max(1);
+    let agents = env_cfg.build().n_agents();
+    let next = AtomicU64::new(0);
+    let outcomes: Mutex<Vec<EpisodeOutcome>> = Mutex::new(Vec::new());
+    let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::new());
+    let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    let target = opts.episodes as u64;
+
+    let start = Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..concurrency {
+            let next = &next;
+            let outcomes = &outcomes;
+            let latencies = &latencies;
+            let first_err = &first_err;
+            let env_cfg = env_cfg;
+            scope.spawn(move || {
+                let mut client = match DaemonClient::connect(addr) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        let mut guard = first_err.lock().expect("loadgen error lock");
+                        if guard.is_none() {
+                            *guard = Some(e);
+                        }
+                        return;
+                    }
+                };
+                let mut env = env_cfg.build();
+                loop {
+                    if first_err.lock().expect("loadgen error lock").is_some() {
+                        break;
+                    }
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= target {
+                        break;
+                    }
+                    let seed = episode_seed(opts.seed, i);
+                    match run_served_episode(&mut client, env.as_mut(), i, seed) {
+                        Ok((outcome, mut lats)) => {
+                            outcomes.lock().expect("loadgen outcome lock").push(outcome);
+                            latencies
+                                .lock()
+                                .expect("loadgen latency lock")
+                                .append(&mut lats);
+                        }
+                        Err(e) => {
+                            let mut guard = first_err.lock().expect("loadgen error lock");
+                            if guard.is_none() {
+                                *guard = Some(e);
+                            }
+                            break;
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let wall_s = start.elapsed().as_secs_f64();
+
+    if let Some(e) = first_err.into_inner().expect("loadgen error lock") {
+        return Err(e);
+    }
+    let mut outcomes = outcomes.into_inner().expect("loadgen outcome lock");
+    outcomes.sort_by_key(|o| o.index);
+    let mut lats = latencies.into_inner().expect("loadgen latency lock");
+
+    let rewards: Vec<f32> = outcomes.iter().map(|o| o.total_reward).collect();
+    let successes: Vec<f32> = outcomes.iter().map(|o| o.success_frac).collect();
+    let steps: usize = outcomes.iter().map(|o| o.steps).sum();
+    let episodes = outcomes.len();
+    Ok(LoadgenReport {
+        env: env_cfg.name(),
+        agents,
+        concurrency,
+        episodes,
+        steps,
+        wall_s,
+        steps_per_sec: steps as f64 / wall_s.max(1e-9),
+        episodes_per_sec: episodes as f64 / wall_s.max(1e-9),
+        reward: RewardStats::over(&rewards),
+        success_rate: mean(&successes),
+        p50_ms: percentile(&mut lats, 0.50),
+        p99_ms: percentile(&mut lats, 0.99),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let mut one = vec![7.0];
+        assert_eq!(percentile(&mut one, 0.5), 7.0);
+        assert_eq!(percentile(&mut one, 0.99), 7.0);
+        let mut v: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        assert_eq!(percentile(&mut v, 0.50), 50.0);
+        assert_eq!(percentile(&mut v, 0.99), 99.0);
+        assert_eq!(percentile(&mut v, 1.0), 100.0);
+        let mut empty: Vec<f64> = Vec::new();
+        assert_eq!(percentile(&mut empty, 0.5), 0.0);
+    }
+}

@@ -1,0 +1,1281 @@
+//! The policy daemon — a long-lived serving fleet process behind
+//! `learning-group daemon`.
+//!
+//! The offline engine ([`crate::serve::PolicyServer`]) owns its
+//! episodes end to end: it builds the environments, drives them, and
+//! reports aggregates.  The daemon inverts that: **clients** own their
+//! environments and stream observations over a small length-prefixed
+//! protocol ([`crate::serve::proto`]); the daemon owns the model — it
+//! keeps per-episode recurrent state (h, c, comm gates, the PCG32
+//! sampling stream) and answers every observation with the sampled
+//! joint action.  Because sampling, state layout and kernel row order
+//! are identical to the offline slab drivers, a daemon-served episode
+//! is **bitwise identical** to the same (seed, index) episode under
+//! offline `eval` — whatever the batch size, replica count, or reload
+//! timing (integration-tested in `rust/tests/daemon_e2e.rs`).
+//!
+//! Three moving parts:
+//!
+//! * **Dynamic lockstep batcher.**  Every in-flight step request lands
+//!   in one shared admission queue.  A replica worker drains whatever
+//!   is queued (up to `max_batch`), groups it by snapshot, and packs
+//!   each group into lockstep `[B·A, ·]` activation blocks through the
+//!   batched `policy_fwd_a{A}x{B}` entry points — the PR 5 row-widened
+//!   plan.  Block sizes come from a power-of-two ladder; a ragged tail
+//!   falls back to the per-episode entry point.  Row independence (comm
+//!   mean grouped per consecutive A-row episode block) is what makes
+//!   any packing bit-identical to per-episode execution.
+//! * **Replicas.**  `replicas` worker threads share the queue; all
+//!   device state is immutable and shared (`Arc<Snapshot>`), so a
+//!   replica is pure compute — more replicas, more concurrent blocks.
+//! * **Hot checkpoint reload.**  A watcher polls `--reload-watch` (a
+//!   `.lgcp` file or a directory of them).  A new checkpoint is decoded
+//!   off to the side, built into a fresh [`Snapshot`], and swapped in
+//!   atomically: episodes opened after the swap run the new snapshot,
+//!   episodes already in flight keep their pinned `Arc` and finish on
+//!   the old one.  Half-written or corrupt files are *skipped* (named
+//!   transient [`crate::checkpoint::CheckpointError`]s), never fatal.
+
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::checkpoint::Checkpoint;
+use crate::coordinator::rollout::SAMPLE_STREAM;
+use crate::env::EnvConfig;
+use crate::manifest::{Dims, Manifest};
+use crate::runtime::{
+    Arg, DeviceTensor, ExecMode, Executable, HostTensor, Runtime, SimdBackend,
+};
+use crate::serve::proto::{self, err_code, DaemonStats, Msg, ProtoError};
+use crate::util::Pcg32;
+
+/// Where the daemon listens (and where clients connect).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ListenAddr {
+    /// A unix-domain socket path.
+    Unix(PathBuf),
+    /// A TCP address, e.g. `127.0.0.1:7447` (`0` port = ephemeral).
+    Tcp(String),
+}
+
+impl ListenAddr {
+    /// Parse a CLI address: `unix:/path.sock`, `tcp:host:port`, a bare
+    /// path (anything with a `/`) as unix, anything else as TCP.
+    pub fn parse(s: &str) -> Result<Self> {
+        if let Some(rest) = s.strip_prefix("unix:") {
+            return Ok(ListenAddr::Unix(PathBuf::from(rest)));
+        }
+        if let Some(rest) = s.strip_prefix("tcp:") {
+            return Ok(ListenAddr::Tcp(rest.to_string()));
+        }
+        if s.is_empty() {
+            return Err(anyhow!("empty listen address"));
+        }
+        if s.contains('/') {
+            Ok(ListenAddr::Unix(PathBuf::from(s)))
+        } else {
+            Ok(ListenAddr::Tcp(s.to_string()))
+        }
+    }
+}
+
+impl std::fmt::Display for ListenAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ListenAddr::Unix(p) => write!(f, "unix:{}", p.display()),
+            ListenAddr::Tcp(a) => write!(f, "tcp:{a}"),
+        }
+    }
+}
+
+/// A connected transport (either family), used by both daemon and
+/// client sides.
+pub(crate) enum Stream {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Stream {
+    pub(crate) fn connect(addr: &ListenAddr) -> std::io::Result<Stream> {
+        match addr {
+            ListenAddr::Unix(p) => UnixStream::connect(p).map(Stream::Unix),
+            ListenAddr::Tcp(a) => {
+                let s = TcpStream::connect(a.as_str())?;
+                s.set_nodelay(true)?;
+                Ok(Stream::Tcp(s))
+            }
+        }
+    }
+
+    fn try_clone(&self) -> std::io::Result<Stream> {
+        match self {
+            Stream::Unix(s) => s.try_clone().map(Stream::Unix),
+            Stream::Tcp(s) => s.try_clone().map(Stream::Tcp),
+        }
+    }
+
+    fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.set_read_timeout(d),
+            Stream::Tcp(s) => s.set_read_timeout(d),
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.set_nonblocking(nb),
+            Stream::Tcp(s) => s.set_nonblocking(nb),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.read(buf),
+            Stream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.write(buf),
+            Stream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.flush(),
+            Stream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// Daemon construction options (everything but the listen address).
+#[derive(Debug, Clone)]
+pub struct DaemonConfig {
+    /// Replica worker threads sharing the admission queue.
+    pub replicas: usize,
+    /// Lockstep block ceiling — the batcher coalesces at most this many
+    /// episodes into one kernel call.
+    pub max_batch: usize,
+    /// Kernel path (sparse is the fast default).
+    pub exec: ExecMode,
+    /// Sparse-kernel row fan-out threads per kernel call.
+    pub intra_threads: usize,
+    /// Pin sparse accumulation to exact dense order (`--strict-accum`).
+    pub strict_accum: bool,
+    /// SIMD kernel backend for the snapshot runtimes.
+    pub simd: SimdBackend,
+    /// Hot-reload watch target: a `.lgcp` file, or a directory whose
+    /// newest `.lgcp` is served.
+    pub reload_watch: Option<PathBuf>,
+    /// Watcher poll interval.
+    pub reload_poll: Duration,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        DaemonConfig {
+            replicas: 2,
+            max_batch: 8,
+            exec: ExecMode::Sparse,
+            intra_threads: 1,
+            strict_accum: false,
+            simd: SimdBackend::from_env(),
+            reload_watch: None,
+            reload_poll: Duration::from_millis(200),
+        }
+    }
+}
+
+/// The descending power-of-two lockstep block sizes loaded for a
+/// `max_batch` ceiling (block 1 is the per-episode entry point and is
+/// always available).
+fn ladder_sizes(max_batch: usize) -> Vec<usize> {
+    let mut sizes = Vec::new();
+    let mut b = 1usize;
+    while b.saturating_mul(2) <= max_batch {
+        b *= 2;
+        sizes.push(b);
+    }
+    sizes.reverse();
+    sizes
+}
+
+/// One served model generation: a checkpoint decoded once, its
+/// parameters and OSEL mask structure uploaded once, plus the lockstep
+/// executable ladder — shared immutably (`Arc<Snapshot>`) by every
+/// episode pinned to it.  Hot reload builds a new `Snapshot` and swaps
+/// the `Arc`; nothing in here is ever mutated.
+pub struct Snapshot {
+    iteration: u64,
+    fingerprint: u64,
+    env_cfg: EnvConfig,
+    agents: usize,
+    dims: Dims,
+    env_actions: usize,
+    noop: usize,
+    density: f32,
+    exe_single: Arc<Executable>,
+    /// (block size, batched executable), descending block size.
+    ladder: Vec<(usize, Arc<Executable>)>,
+    params_dev: DeviceTensor,
+    masks_dev: DeviceTensor,
+}
+
+impl Snapshot {
+    /// Build a snapshot from a decoded checkpoint: rebuild the manifest
+    /// from the recorded topology, load the per-episode entry point and
+    /// the power-of-two lockstep ladder up to `cfg.max_batch`, upload
+    /// params + masks once.
+    pub fn load(ckpt: &Checkpoint, cfg: &DaemonConfig) -> Result<Snapshot> {
+        let manifest = Manifest::for_topology(Manifest::default_dir(), &ckpt.meta.model)?;
+        let mut rt = Runtime::new(manifest)?;
+        rt.set_simd(cfg.simd);
+        ckpt.validate_manifest(rt.manifest())?;
+        let manifest = rt.manifest().clone();
+        let agents = ckpt.meta.agents as usize;
+        let env_cfg = EnvConfig::parse(&ckpt.meta.env)
+            .ok_or_else(|| anyhow!("checkpoint has unknown env spec {:?}", ckpt.meta.env))?
+            .with_agents(agents);
+        let probe = env_cfg.build();
+        let dims = manifest.dims.clone();
+        if probe.obs_dim() != dims.obs_dim {
+            return Err(anyhow!(
+                "checkpoint env {} obs_dim {} != manifest obs_dim {}",
+                ckpt.meta.env,
+                probe.obs_dim(),
+                dims.obs_dim
+            ));
+        }
+        let env_actions = probe.n_actions().min(dims.n_actions);
+        let noop = probe.noop_action();
+        let exe_single = rt.load(&format!("policy_fwd_a{agents}"))?;
+        let mut ladder = Vec::new();
+        for b in ladder_sizes(cfg.max_batch.max(1)) {
+            ladder.push((b, rt.load(&format!("policy_fwd_a{agents}x{b}"))?));
+        }
+        let masks = ckpt.mask_vector(&manifest)?;
+        let density = if masks.is_empty() {
+            1.0
+        } else {
+            masks.iter().sum::<f32>() / masks.len() as f32
+        };
+        let masks_t = HostTensor::F32(masks);
+        let params_dev = exe_single.upload(0, &HostTensor::F32(ckpt.params.clone()))?;
+        let masks_dev = match cfg.exec {
+            ExecMode::DenseMasked => exe_single.upload(1, &masks_t)?,
+            ExecMode::Sparse => {
+                let model = ckpt
+                    .sparse_model(&manifest, cfg.intra_threads.max(1))?
+                    .strict(cfg.strict_accum);
+                exe_single.upload_sparse(1, &masks_t, Arc::new(model))?
+            }
+        };
+        Ok(Snapshot {
+            iteration: ckpt.meta.iteration,
+            fingerprint: ckpt.manifest_fingerprint,
+            env_cfg,
+            agents,
+            dims,
+            env_actions,
+            noop,
+            density,
+            exe_single,
+            ladder,
+            params_dev,
+            masks_dev,
+        })
+    }
+
+    /// Training iteration of the served checkpoint.
+    pub fn iteration(&self) -> u64 {
+        self.iteration
+    }
+
+    /// Environment the snapshot serves (from the checkpoint header).
+    pub fn env_cfg(&self) -> EnvConfig {
+        self.env_cfg
+    }
+
+    /// Agents per episode.
+    pub fn agents(&self) -> usize {
+        self.agents
+    }
+
+    /// Model dimensions (episode length, obs/hidden widths).
+    pub fn dims(&self) -> &Dims {
+        &self.dims
+    }
+
+    /// Surviving-weight fraction of the served masks.
+    pub fn density(&self) -> f32 {
+        self.density
+    }
+
+    /// Largest ladder block ≤ `remaining` (1 when only the per-episode
+    /// entry point fits).
+    fn pick_block(&self, remaining: usize) -> usize {
+        self.ladder
+            .iter()
+            .map(|(b, _)| *b)
+            .find(|&b| b <= remaining)
+            .unwrap_or(1)
+    }
+
+    /// Execute one lockstep block over `chunk` (length must be 1 or a
+    /// ladder size): pack obs + recurrent state into `[B·A, ·]` slabs,
+    /// run one kernel call, sample each episode's actions from its own
+    /// PCG32 stream, advance the recurrent state, and return the
+    /// per-episode replies in chunk order.
+    fn run_block(&self, chunk: &mut [(StepJob, EpisodeState)]) -> Result<Vec<Msg>> {
+        let b = chunk.len();
+        let a = self.agents;
+        let d = &self.dims;
+        let exe: &Executable = if b == 1 {
+            &self.exe_single
+        } else {
+            &self
+                .ladder
+                .iter()
+                .find(|(size, _)| *size == b)
+                .ok_or_else(|| anyhow!("no lockstep executable for block size {b}"))?
+                .1
+        };
+        let mut obs = vec![0.0f32; b * a * d.obs_dim];
+        let mut h = vec![0.0f32; b * a * d.hidden];
+        let mut c = vec![0.0f32; b * a * d.hidden];
+        let mut gate = vec![0.0f32; b * a];
+        for (e, (job, st)) in chunk.iter().enumerate() {
+            obs[e * a * d.obs_dim..(e + 1) * a * d.obs_dim].copy_from_slice(&job.obs);
+            h[e * a * d.hidden..(e + 1) * a * d.hidden].copy_from_slice(&st.h);
+            c[e * a * d.hidden..(e + 1) * a * d.hidden].copy_from_slice(&st.c);
+            gate[e * a..(e + 1) * a].copy_from_slice(&st.gate);
+        }
+        let obs_t = HostTensor::F32(obs);
+        let h_t = HostTensor::F32(h);
+        let c_t = HostTensor::F32(c);
+        let gate_t = HostTensor::F32(gate);
+        let outs = exe.run_args(&[
+            Arg::Device(&self.params_dev),
+            Arg::Device(&self.masks_dev),
+            Arg::Host(&obs_t),
+            Arg::Host(&h_t),
+            Arg::Host(&c_t),
+            Arg::Host(&gate_t),
+        ])?;
+        let logits = outs[0].as_f32()?;
+        let gate_logits = outs[2].as_f32()?;
+        let h2 = outs[3].as_f32()?;
+        let c2 = outs[4].as_f32()?;
+        let mut replies = Vec::with_capacity(b);
+        for (e, (job, st)) in chunk.iter_mut().enumerate() {
+            let mut actions = Vec::with_capacity(a);
+            let mut gates = Vec::with_capacity(a);
+            for i in 0..a {
+                let row = &logits[(e * a + i) * d.n_actions..(e * a + i + 1) * d.n_actions];
+                let sampled = st.rng.sample_logits(row);
+                let act = if sampled < self.env_actions { sampled } else { self.noop };
+                actions.push(act as u16);
+                let gl = &gate_logits[(e * a + i) * d.n_gate..(e * a + i + 1) * d.n_gate];
+                gates.push(st.rng.sample_logits(gl) as u8);
+            }
+            st.h.copy_from_slice(&h2[e * a * d.hidden..(e + 1) * a * d.hidden]);
+            st.c.copy_from_slice(&c2[e * a * d.hidden..(e + 1) * a * d.hidden]);
+            for (g_dst, &g) in st.gate.iter_mut().zip(&gates) {
+                *g_dst = f32::from(g);
+            }
+            st.steps += 1;
+            replies.push(Msg::StepActions {
+                episode: job.key.1,
+                step: st.steps,
+                actions,
+                gates,
+            });
+        }
+        Ok(replies)
+    }
+}
+
+/// (connection id, client-chosen episode id) — the registry key.
+type EpKey = (u64, u64);
+
+/// Daemon-side state of one open episode, pinned to the snapshot it
+/// opened on.
+struct EpisodeState {
+    snapshot: Arc<Snapshot>,
+    rng: Pcg32,
+    h: Vec<f32>,
+    c: Vec<f32>,
+    gate: Vec<f32>,
+    steps: u32,
+}
+
+impl EpisodeState {
+    fn new(snapshot: Arc<Snapshot>, seed: u64) -> Self {
+        let a = snapshot.agents;
+        let hidden = snapshot.dims.hidden;
+        EpisodeState {
+            rng: Pcg32::new(seed, SAMPLE_STREAM),
+            h: vec![0.0; a * hidden],
+            c: vec![0.0; a * hidden],
+            gate: vec![1.0; a],
+            steps: 0,
+            snapshot,
+        }
+    }
+}
+
+/// Registry slot: `InFlight` marks a state checked out by a replica —
+/// the episode exists, but a second concurrent step is a client
+/// protocol violation handled by requeueing behind the running one.
+enum Slot {
+    Ready(Box<EpisodeState>),
+    InFlight,
+}
+
+/// One pending step request in the admission queue.
+struct StepJob {
+    conn: Arc<ConnHandle>,
+    key: EpKey,
+    obs: Vec<f32>,
+}
+
+/// The writer half of a connection, shared by the reader thread (error
+/// replies) and the replica workers (step replies).
+struct ConnHandle {
+    id: u64,
+    writer: Mutex<Stream>,
+    closed: AtomicBool,
+}
+
+/// Serialize a reply to a connection; a failed write marks the
+/// connection closed (its episodes are reaped on reinsert).
+fn send(conn: &ConnHandle, msg: &Msg) {
+    let mut w = conn.writer.lock().expect("daemon conn writer lock");
+    if proto::write_frame(&mut *w, msg).is_err() {
+        conn.closed.store(true, Ordering::Relaxed);
+    }
+}
+
+#[derive(Default)]
+struct StatsInner {
+    steps: u64,
+    opened: u64,
+    closed: u64,
+    reloads: u64,
+    reload_skips: u64,
+    proto_errors: u64,
+    batch_hist: BTreeMap<usize, u64>,
+}
+
+/// State shared by the accept loop, reader threads, replica workers and
+/// the reload watcher.
+struct Shared {
+    cfg: DaemonConfig,
+    boot_env: String,
+    boot_agents: u32,
+    boot_fingerprint: u64,
+    current: Mutex<Arc<Snapshot>>,
+    registry: Mutex<HashMap<EpKey, Slot>>,
+    queue: Mutex<VecDeque<StepJob>>,
+    queue_cv: Condvar,
+    shutdown: AtomicBool,
+    stats: Mutex<StatsInner>,
+    readers: Mutex<Vec<JoinHandle<()>>>,
+    worker_err: Mutex<Option<String>>,
+}
+
+impl Shared {
+    fn make_stats(&self) -> DaemonStats {
+        let snapshot_iteration =
+            self.current.lock().expect("daemon snapshot lock").iteration;
+        let s = self.stats.lock().expect("daemon stats lock");
+        DaemonStats {
+            steps: s.steps,
+            opened: s.opened,
+            closed: s.closed,
+            reloads: s.reloads,
+            reload_skips: s.reload_skips,
+            proto_errors: s.proto_errors,
+            snapshot_iteration,
+            replicas: self.cfg.replicas.max(1) as u32,
+            max_batch: self.cfg.max_batch.max(1) as u32,
+            batch_hist: s
+                .batch_hist
+                .iter()
+                .map(|(&size, &count)| (size as u32, count))
+                .collect(),
+        }
+    }
+}
+
+enum ListenerKind {
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+/// Entry point: [`Daemon::start`] builds the boot snapshot, binds the
+/// socket and spawns the fleet's threads, returning a
+/// [`DaemonHandle`].
+pub struct Daemon;
+
+impl Daemon {
+    /// Start serving `ckpt` on `listen`.  Returns once the socket is
+    /// bound and every worker is running; the daemon then serves until
+    /// a client sends `Shutdown` (or [`DaemonHandle::shutdown`] is
+    /// called) — block on [`DaemonHandle::wait`] for that.
+    pub fn start(listen: &ListenAddr, ckpt: &Checkpoint, cfg: DaemonConfig) -> Result<DaemonHandle> {
+        let snapshot = Arc::new(Snapshot::load(ckpt, &cfg)?);
+        let listener = match listen {
+            ListenAddr::Unix(path) => {
+                if path.exists() {
+                    std::fs::remove_file(path)
+                        .with_context(|| format!("removing stale socket {path:?}"))?;
+                }
+                let l = UnixListener::bind(path)
+                    .with_context(|| format!("binding unix socket {path:?}"))?;
+                l.set_nonblocking(true)?;
+                ListenerKind::Unix(l)
+            }
+            ListenAddr::Tcp(addr) => {
+                let l = TcpListener::bind(addr.as_str())
+                    .with_context(|| format!("binding tcp address {addr}"))?;
+                l.set_nonblocking(true)?;
+                ListenerKind::Tcp(l)
+            }
+        };
+        // resolve the actual address (an ephemeral :0 port in tests)
+        let addr = match &listener {
+            ListenerKind::Unix(_) => listen.clone(),
+            ListenerKind::Tcp(l) => ListenAddr::Tcp(l.local_addr()?.to_string()),
+        };
+        let shared = Arc::new(Shared {
+            boot_env: ckpt.meta.env.clone(),
+            boot_agents: ckpt.meta.agents,
+            boot_fingerprint: ckpt.manifest_fingerprint,
+            current: Mutex::new(snapshot),
+            registry: Mutex::new(HashMap::new()),
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            stats: Mutex::new(StatsInner::default()),
+            readers: Mutex::new(Vec::new()),
+            worker_err: Mutex::new(None),
+            cfg,
+        });
+        let mut replicas = Vec::new();
+        for r in 0..shared.cfg.replicas.max(1) {
+            let shared = shared.clone();
+            replicas.push(
+                std::thread::Builder::new()
+                    .name(format!("lg-replica-{r}"))
+                    .spawn(move || replica_loop(&shared))?,
+            );
+        }
+        let watcher = match shared.cfg.reload_watch.clone() {
+            Some(path) => {
+                let shared = shared.clone();
+                Some(
+                    std::thread::Builder::new()
+                        .name("lg-reload-watcher".to_string())
+                        .spawn(move || watcher_loop(&shared, &path))?,
+                )
+            }
+            None => None,
+        };
+        let accept = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("lg-accept".to_string())
+                .spawn(move || accept_loop(&shared, listener))?
+        };
+        Ok(DaemonHandle { shared, accept: Some(accept), replicas, watcher, addr })
+    }
+}
+
+/// Handle on a running daemon: its resolved address, live stats, and
+/// the shutdown/join lifecycle.
+pub struct DaemonHandle {
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    replicas: Vec<JoinHandle<()>>,
+    watcher: Option<JoinHandle<()>>,
+    addr: ListenAddr,
+}
+
+impl DaemonHandle {
+    /// The bound address (ephemeral TCP ports resolved).
+    pub fn addr(&self) -> &ListenAddr {
+        &self.addr
+    }
+
+    /// Current operational counters (same payload as the wire `Stats`).
+    pub fn stats(&self) -> DaemonStats {
+        self.shared.make_stats()
+    }
+
+    /// Trigger shutdown (idempotent): stop accepting, let replicas
+    /// drain the queue, wake every sleeper.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        self.shared.queue_cv.notify_all();
+    }
+
+    /// Block until the daemon has shut down (a client `Shutdown` frame
+    /// or [`Self::shutdown`]) and every thread has exited; surfaces the
+    /// first replica error, if any.
+    pub fn wait(mut self) -> Result<()> {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.replicas.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(h) = self.watcher.take() {
+            let _ = h.join();
+        }
+        let readers: Vec<JoinHandle<()>> = {
+            let mut guard = self.shared.readers.lock().expect("daemon readers lock");
+            guard.drain(..).collect()
+        };
+        for h in readers {
+            let _ = h.join();
+        }
+        if let ListenAddr::Unix(path) = &self.addr {
+            let _ = std::fs::remove_file(path);
+        }
+        let err = self.shared.worker_err.lock().expect("daemon error lock").take();
+        match err {
+            Some(e) => Err(anyhow!("daemon replica failed: {e}")),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for DaemonHandle {
+    fn drop(&mut self) {
+        // best-effort: a dropped handle must not leave threads serving
+        self.shutdown();
+    }
+}
+
+fn accept_loop(shared: &Arc<Shared>, listener: ListenerKind) {
+    let next_conn_id = AtomicU64::new(1);
+    while !shared.shutdown.load(Ordering::Relaxed) {
+        let accepted = match &listener {
+            ListenerKind::Unix(l) => match l.accept() {
+                Ok((s, _)) => Some(Stream::Unix(s)),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => None,
+                Err(_) => None,
+            },
+            ListenerKind::Tcp(l) => match l.accept() {
+                Ok((s, _)) => {
+                    let _ = s.set_nodelay(true);
+                    Some(Stream::Tcp(s))
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => None,
+                Err(_) => None,
+            },
+        };
+        let stream = match accepted {
+            Some(s) => s,
+            None => {
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        // accepted sockets are blocking; reads poll on a short timeout
+        // so reader threads observe shutdown promptly
+        let _ = stream.set_nonblocking(false);
+        if stream.set_read_timeout(Some(Duration::from_millis(50))).is_err() {
+            continue;
+        }
+        let writer = match stream.try_clone() {
+            Ok(w) => w,
+            Err(_) => continue,
+        };
+        let conn = Arc::new(ConnHandle {
+            id: next_conn_id.fetch_add(1, Ordering::Relaxed),
+            writer: Mutex::new(writer),
+            closed: AtomicBool::new(false),
+        });
+        let shared_c = shared.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("lg-conn-{}", conn.id))
+            .spawn(move || conn_reader(&shared_c, &conn, stream));
+        if let Ok(h) = handle {
+            shared.readers.lock().expect("daemon readers lock").push(h);
+        }
+    }
+}
+
+/// [`proto::read_frame`] over a timeout-polled stream: timeouts between
+/// frames are quiet poll ticks (checking the shutdown flag), `Ok(None)`
+/// means "stop reading" (shutdown or clean EOF), errors are real
+/// protocol violations.
+fn read_frame_polled(
+    stream: &mut Stream,
+    shutdown: &AtomicBool,
+) -> Result<Option<Msg>, ProtoError> {
+    let mut len_bytes = [0u8; 4];
+    let mut filled = 0usize;
+    while filled < len_bytes.len() {
+        match stream.read(&mut len_bytes[filled..]) {
+            Ok(0) => {
+                return if filled == 0 {
+                    Ok(None) // clean EOF between frames
+                } else {
+                    Err(ProtoError::Truncated { context: "length prefix" })
+                };
+            }
+            Ok(n) => filled += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                if shutdown.load(Ordering::Relaxed) {
+                    return Ok(None);
+                }
+            }
+            Err(e) => return Err(ProtoError::Io(e)),
+        }
+    }
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    if len > proto::MAX_FRAME {
+        return Err(ProtoError::Oversized(len));
+    }
+    let mut payload = vec![0u8; len];
+    let mut filled = 0usize;
+    while filled < len {
+        match stream.read(&mut payload[filled..]) {
+            Ok(0) => return Err(ProtoError::Truncated { context: "payload" }),
+            Ok(n) => filled += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                if shutdown.load(Ordering::Relaxed) {
+                    return Ok(None);
+                }
+            }
+            Err(e) => return Err(ProtoError::Io(e)),
+        }
+    }
+    Msg::decode(&payload).map(Some)
+}
+
+fn conn_reader(shared: &Arc<Shared>, conn: &Arc<ConnHandle>, mut stream: Stream) {
+    loop {
+        if shared.shutdown.load(Ordering::Relaxed) {
+            break;
+        }
+        match read_frame_polled(&mut stream, &shared.shutdown) {
+            Ok(None) => break,
+            Ok(Some(msg)) => {
+                if !handle_client_msg(shared, conn, msg) {
+                    break;
+                }
+            }
+            Err(e) => {
+                shared.stats.lock().expect("daemon stats lock").proto_errors += 1;
+                send(
+                    conn,
+                    &Msg::Error {
+                        code: err_code::PROTO,
+                        episode: 0,
+                        message: e.to_string(),
+                    },
+                );
+                break; // framing is lost — the connection is unusable
+            }
+        }
+    }
+    // reap this connection's episodes; states checked out by a replica
+    // are dropped on reinsert via the closed flag
+    conn.closed.store(true, Ordering::Relaxed);
+    shared
+        .registry
+        .lock()
+        .expect("daemon registry lock")
+        .retain(|key, _| key.0 != conn.id);
+}
+
+/// Handle one decoded client message; returns false when the reader
+/// should stop (shutdown requested or protocol misuse).
+fn handle_client_msg(shared: &Arc<Shared>, conn: &Arc<ConnHandle>, msg: Msg) -> bool {
+    match msg {
+        Msg::Open { episode, seed } => {
+            let key = (conn.id, episode);
+            let snapshot = shared.current.lock().expect("daemon snapshot lock").clone();
+            let reply = {
+                let mut reg = shared.registry.lock().expect("daemon registry lock");
+                if reg.contains_key(&key) {
+                    Msg::Error {
+                        code: err_code::ALREADY_OPEN,
+                        episode,
+                        message: format!("episode {episode} is already open"),
+                    }
+                } else {
+                    let st = EpisodeState::new(snapshot.clone(), seed);
+                    reg.insert(key, Slot::Ready(Box::new(st)));
+                    Msg::Opened {
+                        episode,
+                        iteration: snapshot.iteration,
+                        agents: snapshot.agents as u32,
+                        obs_dim: snapshot.dims.obs_dim as u32,
+                        episode_len: snapshot.dims.episode_len as u32,
+                    }
+                }
+            };
+            if matches!(reply, Msg::Opened { .. }) {
+                shared.stats.lock().expect("daemon stats lock").opened += 1;
+            }
+            send(conn, &reply);
+            true
+        }
+        Msg::Step { episode, obs } => {
+            let key = (conn.id, episode);
+            let known =
+                shared.registry.lock().expect("daemon registry lock").contains_key(&key);
+            if !known {
+                send(
+                    conn,
+                    &Msg::Error {
+                        code: err_code::UNKNOWN_EPISODE,
+                        episode,
+                        message: format!("episode {episode} is not open"),
+                    },
+                );
+                return true;
+            }
+            let mut q = shared.queue.lock().expect("daemon queue lock");
+            q.push_back(StepJob { conn: conn.clone(), key, obs });
+            drop(q);
+            shared.queue_cv.notify_one();
+            true
+        }
+        Msg::Close { episode } => {
+            let key = (conn.id, episode);
+            let removed = {
+                let mut reg = shared.registry.lock().expect("daemon registry lock");
+                match reg.remove(&key) {
+                    Some(Slot::Ready(st)) => Ok(st.steps),
+                    Some(Slot::InFlight) => {
+                        // a step is mid-kernel: the close is a client
+                        // ordering violation; keep the marker
+                        reg.insert(key, Slot::InFlight);
+                        Err(Msg::Error {
+                            code: err_code::BUSY,
+                            episode,
+                            message: format!("episode {episode} has a step in flight"),
+                        })
+                    }
+                    None => Err(Msg::Error {
+                        code: err_code::UNKNOWN_EPISODE,
+                        episode,
+                        message: format!("episode {episode} is not open"),
+                    }),
+                }
+            };
+            match removed {
+                Ok(steps) => {
+                    shared.stats.lock().expect("daemon stats lock").closed += 1;
+                    send(conn, &Msg::Closed { episode, steps });
+                }
+                Err(reply) => send(conn, &reply),
+            }
+            true
+        }
+        Msg::Stats => {
+            send(conn, &Msg::StatsReport(shared.make_stats()));
+            true
+        }
+        Msg::Shutdown => {
+            send(conn, &Msg::ShutdownAck);
+            shared.shutdown.store(true, Ordering::Relaxed);
+            shared.queue_cv.notify_all();
+            false
+        }
+        // server-side messages arriving at the server are a violation
+        _ => {
+            shared.stats.lock().expect("daemon stats lock").proto_errors += 1;
+            send(
+                conn,
+                &Msg::Error {
+                    code: err_code::PROTO,
+                    episode: 0,
+                    message: "client sent a server-side message".to_string(),
+                },
+            );
+            false
+        }
+    }
+}
+
+fn replica_loop(shared: &Arc<Shared>) {
+    loop {
+        let jobs = {
+            let mut q = shared.queue.lock().expect("daemon queue lock");
+            loop {
+                if !q.is_empty() {
+                    break;
+                }
+                if shared.shutdown.load(Ordering::Relaxed) {
+                    return;
+                }
+                let (guard, _) = shared
+                    .queue_cv
+                    .wait_timeout(q, Duration::from_millis(100))
+                    .expect("daemon queue wait");
+                q = guard;
+            }
+            // claim up to max_batch jobs, at most one per episode —
+            // a pipelined duplicate goes back to the queue front and
+            // runs after the in-flight step completes
+            let cap = shared.cfg.max_batch.max(1);
+            let mut claimed: Vec<StepJob> = Vec::new();
+            let mut dup: Vec<StepJob> = Vec::new();
+            let mut seen: HashSet<EpKey> = HashSet::new();
+            while claimed.len() < cap {
+                match q.pop_front() {
+                    Some(job) => {
+                        if seen.insert(job.key) {
+                            claimed.push(job);
+                        } else {
+                            dup.push(job);
+                        }
+                    }
+                    None => break,
+                }
+            }
+            for job in dup.into_iter().rev() {
+                q.push_front(job);
+            }
+            claimed
+        };
+        if jobs.is_empty() {
+            continue;
+        }
+        process_batch(shared, jobs);
+    }
+}
+
+/// One batcher round: claim the jobs' episode states, group by
+/// snapshot, run lockstep blocks, reply, reinsert.
+fn process_batch(shared: &Arc<Shared>, jobs: Vec<StepJob>) {
+    let mut replies: Vec<(Arc<ConnHandle>, Msg)> = Vec::new();
+    let mut requeue: Vec<StepJob> = Vec::new();
+    let mut claimed: Vec<(StepJob, EpisodeState)> = Vec::with_capacity(jobs.len());
+    {
+        let mut reg = shared.registry.lock().expect("daemon registry lock");
+        for job in jobs {
+            match reg.get_mut(&job.key) {
+                Some(slot) => match std::mem::replace(slot, Slot::InFlight) {
+                    Slot::Ready(st) => claimed.push((job, *st)),
+                    Slot::InFlight => requeue.push(job), // another replica owns it
+                },
+                None => replies.push((
+                    job.conn.clone(),
+                    Msg::Error {
+                        code: err_code::UNKNOWN_EPISODE,
+                        episode: job.key.1,
+                        message: format!("episode {} is not open", job.key.1),
+                    },
+                )),
+            }
+        }
+    }
+
+    // validate before packing: wrong-shape observations keep the
+    // episode alive; an episode stepped past the static length is
+    // closed server-side
+    let mut reinsert: Vec<(StepJob, EpisodeState)> = Vec::new();
+    let mut drop_keys: Vec<EpKey> = Vec::new();
+    let mut runnable: Vec<(StepJob, EpisodeState)> = Vec::with_capacity(claimed.len());
+    for (job, st) in claimed {
+        let want = st.snapshot.agents * st.snapshot.dims.obs_dim;
+        if job.obs.len() != want {
+            replies.push((
+                job.conn.clone(),
+                Msg::Error {
+                    code: err_code::BAD_OBS,
+                    episode: job.key.1,
+                    message: format!("observation length {} != {want}", job.obs.len()),
+                },
+            ));
+            reinsert.push((job, st));
+        } else if st.steps as usize >= st.snapshot.dims.episode_len {
+            replies.push((
+                job.conn.clone(),
+                Msg::Error {
+                    code: err_code::OVERRUN,
+                    episode: job.key.1,
+                    message: format!(
+                        "episode exceeded the static length {}",
+                        st.snapshot.dims.episode_len
+                    ),
+                },
+            ));
+            drop_keys.push(job.key);
+        } else {
+            runnable.push((job, st));
+        }
+    }
+
+    // group by snapshot generation (old + new coexist across a hot
+    // reload; one kernel call serves exactly one generation)
+    let mut groups: Vec<(Arc<Snapshot>, Vec<(StepJob, EpisodeState)>)> = Vec::new();
+    for (job, st) in runnable {
+        let snap = st.snapshot.clone();
+        match groups.iter_mut().find(|(s, _)| Arc::ptr_eq(s, &snap)) {
+            Some((_, members)) => members.push((job, st)),
+            None => groups.push((snap, vec![(job, st)])),
+        }
+    }
+
+    for (snap, mut group) in groups {
+        let mut idx = 0usize;
+        while idx < group.len() {
+            let b = snap.pick_block(group.len() - idx);
+            let chunk = &mut group[idx..idx + b];
+            match snap.run_block(chunk) {
+                Ok(msgs) => {
+                    for ((job, _), msg) in chunk.iter().zip(msgs) {
+                        replies.push((job.conn.clone(), msg));
+                    }
+                    let mut s = shared.stats.lock().expect("daemon stats lock");
+                    s.steps += b as u64;
+                    *s.batch_hist.entry(b).or_insert(0) += 1;
+                }
+                Err(e) => {
+                    // a kernel failure is a daemon bug, not a client
+                    // one: report, close the affected episodes, record
+                    // the first error for `wait()`
+                    for (job, _) in chunk.iter() {
+                        replies.push((
+                            job.conn.clone(),
+                            Msg::Error {
+                                code: err_code::INTERNAL,
+                                episode: job.key.1,
+                                message: format!("kernel execution failed: {e:#}"),
+                            },
+                        ));
+                        drop_keys.push(job.key);
+                    }
+                    let mut err =
+                        shared.worker_err.lock().expect("daemon error lock");
+                    if err.is_none() {
+                        *err = Some(format!("{e:#}"));
+                    }
+                    idx += b;
+                    continue;
+                }
+            }
+            idx += b;
+        }
+        // every successfully-stepped episode goes back in the registry
+        reinsert.extend(
+            group.into_iter().filter(|(job, _)| !drop_keys.contains(&job.key)),
+        );
+    }
+
+    {
+        let mut reg = shared.registry.lock().expect("daemon registry lock");
+        for (job, st) in reinsert {
+            if job.conn.closed.load(Ordering::Relaxed) {
+                reg.remove(&job.key); // client vanished mid-step
+            } else {
+                reg.insert(job.key, Slot::Ready(Box::new(st)));
+            }
+        }
+        for key in &drop_keys {
+            reg.remove(key);
+        }
+    }
+    if !requeue.is_empty() {
+        let mut q = shared.queue.lock().expect("daemon queue lock");
+        for job in requeue.into_iter().rev() {
+            q.push_front(job);
+        }
+    }
+    // wake peers: requeued jobs become runnable now that their states
+    // are back, and more queued work may be waiting
+    shared.queue_cv.notify_all();
+    for (conn, msg) in replies {
+        send(&conn, &msg);
+    }
+}
+
+/// Newest `.lgcp` under a directory watch target, or the file itself.
+fn resolve_candidate(path: &Path) -> Option<PathBuf> {
+    if !path.is_dir() {
+        return Some(path.to_path_buf());
+    }
+    let mut best: Option<(std::time::SystemTime, PathBuf)> = None;
+    for entry in std::fs::read_dir(path).ok()? {
+        let entry = entry.ok()?;
+        let p = entry.path();
+        if p.extension().and_then(|e| e.to_str()) != Some("lgcp") {
+            continue;
+        }
+        let modified = entry.metadata().ok()?.modified().ok()?;
+        if best.as_ref().map(|(m, _)| modified > *m).unwrap_or(true) {
+            best = Some((modified, p));
+        }
+    }
+    best.map(|(_, p)| p)
+}
+
+/// (mtime, length) change signature of a watch candidate.
+fn file_sig(path: &Path) -> Option<(std::time::SystemTime, u64)> {
+    let md = std::fs::metadata(path).ok()?;
+    Some((md.modified().ok()?, md.len()))
+}
+
+fn watcher_loop(shared: &Arc<Shared>, watch: &Path) {
+    // prime: if the watch target currently holds the checkpoint the
+    // daemon booted on, don't count it as a reload
+    let mut last_sig: Option<(std::time::SystemTime, u64)> = None;
+    if let Some(candidate) = resolve_candidate(watch) {
+        if let (Some(sig), Ok(ckpt)) =
+            (file_sig(&candidate), Checkpoint::try_read(&candidate))
+        {
+            let boot_iteration =
+                shared.current.lock().expect("daemon snapshot lock").iteration;
+            if ckpt.manifest_fingerprint == shared.boot_fingerprint
+                && ckpt.meta.iteration == boot_iteration
+            {
+                last_sig = Some(sig);
+            }
+        }
+    }
+    while !shared.shutdown.load(Ordering::Relaxed) {
+        // poll in short slices so shutdown is prompt
+        let mut slept = Duration::ZERO;
+        while slept < shared.cfg.reload_poll {
+            if shared.shutdown.load(Ordering::Relaxed) {
+                return;
+            }
+            let slice = Duration::from_millis(25).min(shared.cfg.reload_poll - slept);
+            std::thread::sleep(slice);
+            slept += slice;
+        }
+        let candidate = match resolve_candidate(watch) {
+            Some(c) => c,
+            None => continue,
+        };
+        let sig = match file_sig(&candidate) {
+            Some(s) => s,
+            None => continue,
+        };
+        if last_sig == Some(sig) {
+            continue;
+        }
+        match Checkpoint::try_read(&candidate) {
+            Err(e) => {
+                // half-written / corrupt / vanished: skip this
+                // signature and retry when the file changes again
+                shared.stats.lock().expect("daemon stats lock").reload_skips += 1;
+                eprintln!("daemon: reload skipped ({e})");
+                last_sig = Some(sig);
+            }
+            Ok(ckpt) => {
+                last_sig = Some(sig);
+                if ckpt.manifest_fingerprint != shared.boot_fingerprint
+                    || ckpt.meta.env != shared.boot_env
+                    || ckpt.meta.agents != shared.boot_agents
+                {
+                    shared.stats.lock().expect("daemon stats lock").reload_skips += 1;
+                    eprintln!(
+                        "daemon: reload skipped (checkpoint {} is for a different \
+                         run: env {:?} agents {} fingerprint {:016x})",
+                        candidate.display(),
+                        ckpt.meta.env,
+                        ckpt.meta.agents,
+                        ckpt.manifest_fingerprint
+                    );
+                    continue;
+                }
+                match Snapshot::load(&ckpt, &shared.cfg) {
+                    Ok(snap) => {
+                        let iteration = snap.iteration;
+                        *shared.current.lock().expect("daemon snapshot lock") =
+                            Arc::new(snap);
+                        shared.stats.lock().expect("daemon stats lock").reloads += 1;
+                        eprintln!(
+                            "daemon: hot-reloaded {} (iteration {iteration}); new \
+                             episodes serve the new snapshot, in-flight episodes \
+                             finish on the old one",
+                            candidate.display()
+                        );
+                    }
+                    Err(e) => {
+                        shared.stats.lock().expect("daemon stats lock").reload_skips += 1;
+                        eprintln!("daemon: reload skipped (building snapshot: {e:#})");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_is_descending_powers_of_two_within_the_ceiling() {
+        assert_eq!(ladder_sizes(1), Vec::<usize>::new());
+        assert_eq!(ladder_sizes(2), vec![2]);
+        assert_eq!(ladder_sizes(8), vec![8, 4, 2]);
+        assert_eq!(ladder_sizes(6), vec![4, 2]);
+        assert_eq!(ladder_sizes(16), vec![16, 8, 4, 2]);
+    }
+
+    #[test]
+    fn listen_addr_parses_both_families() {
+        assert_eq!(
+            ListenAddr::parse("unix:/tmp/lg.sock").unwrap(),
+            ListenAddr::Unix(PathBuf::from("/tmp/lg.sock"))
+        );
+        assert_eq!(
+            ListenAddr::parse("/tmp/lg.sock").unwrap(),
+            ListenAddr::Unix(PathBuf::from("/tmp/lg.sock"))
+        );
+        assert_eq!(
+            ListenAddr::parse("tcp:127.0.0.1:0").unwrap(),
+            ListenAddr::Tcp("127.0.0.1:0".to_string())
+        );
+        assert_eq!(
+            ListenAddr::parse("127.0.0.1:7447").unwrap(),
+            ListenAddr::Tcp("127.0.0.1:7447".to_string())
+        );
+        assert!(ListenAddr::parse("").is_err());
+        assert_eq!(
+            ListenAddr::parse("unix:/a/b.sock").unwrap().to_string(),
+            "unix:/a/b.sock"
+        );
+    }
+}

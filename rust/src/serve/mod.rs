@@ -31,9 +31,24 @@
 //! ([`crate::coordinator::rollout::episode_seed`]), so an eval run is
 //! reproducible end-to-end: same checkpoint + same seed + same episode
 //! count ⇒ the same report, whatever the worker count.
+//!
+//! The third front-end is the long-lived **serving fleet**
+//! (`learning-group daemon`): clients stream observations over a
+//! length-prefixed socket protocol ([`proto`]) and a dynamic batcher
+//! coalesces whatever episodes are in flight into the same lockstep
+//! B·A blocks, with hot checkpoint reload and N replicas — see
+//! [`Daemon`] and the [`run_loadgen`] load generator.
 
+mod client;
+mod daemon;
 mod driver;
+pub mod proto;
 
+pub use client::{
+    run_loadgen, run_served_episode, DaemonClient, LoadgenOptions, LoadgenReport, OpenedInfo,
+    SteppedActions,
+};
+pub use daemon::{Daemon, DaemonConfig, DaemonHandle, ListenAddr, Snapshot};
 pub use driver::{EpisodeDriver, EpisodeOutcome, LockstepDriver};
 
 use std::sync::atomic::{AtomicU64, Ordering};

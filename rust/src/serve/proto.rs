@@ -1,0 +1,489 @@
+//! The daemon wire protocol — small, length-prefixed, binary.
+//!
+//! Every message travels as one **frame**:
+//!
+//! ```text
+//! +----------------+---------------------------------------+
+//! | len: u32 LE    | payload: len bytes                    |
+//! +----------------+---------------------------------------+
+//!                    payload = tag: u8 | body (per message)
+//! ```
+//!
+//! `len` counts the payload only (tag included) and is bounded by
+//! [`MAX_FRAME`]; a larger prefix is rejected before anything is
+//! allocated, so a garbage stream cannot OOM the daemon.  The body is
+//! encoded with the same bounded little-endian cursor codec the
+//! checkpoint format uses ([`crate::checkpoint::bytes`]) — every
+//! variable-length read is checked against the bytes actually present,
+//! so truncated or hostile frames fail with a clean [`ProtoError`],
+//! never a panic or an unbounded allocation (property-tested in
+//! `rust/tests/daemon_proto.rs`).
+//!
+//! The message set is deliberately tiny.  A client opens an episode
+//! (snapshot pinned at open), streams one observation per step, and
+//! receives the sampled per-agent actions back; gates ride along so a
+//! client can reconstruct the full IC3Net trajectory if it wants to.
+//! `Stats`/`Shutdown` are the operational side channel the
+//! load-generator bench and the CI teardown gate use.
+
+use std::io::{Read, Write};
+
+use crate::checkpoint::bytes::{ByteReader, ByteWriter};
+
+/// Hard ceiling on a frame's payload size (1 MiB).  The largest honest
+/// frame is a `Step` observation block — `A x obs_dim` f32s, a few KB
+/// on every shipped topology — so anything near the ceiling is a
+/// corrupt or hostile length prefix.
+pub const MAX_FRAME: usize = 1 << 20;
+
+/// Upper bound on per-message element counts (agents, actions, hist
+/// buckets) — frames are small; this only exists so a corrupt count
+/// fails fast with a named error.
+const MAX_ELEMS: usize = 1 << 16;
+
+/// Error codes carried by [`Msg::Error`].
+pub mod err_code {
+    /// The episode id is not open on this connection.
+    pub const UNKNOWN_EPISODE: u8 = 1;
+    /// The episode id is already open on this connection.
+    pub const ALREADY_OPEN: u8 = 2;
+    /// A step is already in flight for this episode (pipelining two
+    /// steps of one episode is a protocol violation).
+    pub const BUSY: u8 = 3;
+    /// Observation length does not match `agents * obs_dim`.
+    pub const BAD_OBS: u8 = 4;
+    /// The episode ran past the model's static episode length.
+    pub const OVERRUN: u8 = 5;
+    /// The peer sent a frame the daemon could not decode.
+    pub const PROTO: u8 = 6;
+    /// Kernel execution failed daemon-side (a server bug, not a client
+    /// one); the episode is closed.
+    pub const INTERNAL: u8 = 7;
+}
+
+/// Decode-side failures.  Every variant is a *clean* error: the codec
+/// never panics, never hangs, and never allocates from an unvalidated
+/// length.
+#[derive(Debug)]
+pub enum ProtoError {
+    /// The stream ended exactly on a frame boundary — a clean EOF, not
+    /// a protocol violation.
+    Eof,
+    /// Transport-level read/write failure.
+    Io(std::io::Error),
+    /// The stream ended inside a frame (header or payload cut short).
+    Truncated {
+        /// What was being read when the stream ended.
+        context: &'static str,
+    },
+    /// The length prefix exceeds [`MAX_FRAME`].
+    Oversized(usize),
+    /// The payload's leading message tag is not part of the protocol.
+    UnknownTag(u8),
+    /// The payload failed structural decoding (bad counts, trailing
+    /// bytes, non-UTF-8 text…).
+    Malformed(String),
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::Eof => write!(f, "connection closed"),
+            ProtoError::Io(e) => write!(f, "transport error: {e}"),
+            ProtoError::Truncated { context } => {
+                write!(f, "frame truncated while reading {context}")
+            }
+            ProtoError::Oversized(n) => {
+                write!(f, "frame length {n} exceeds the {MAX_FRAME}-byte ceiling")
+            }
+            ProtoError::UnknownTag(t) => write!(f, "unknown message tag {t:#04x}"),
+            ProtoError::Malformed(m) => write!(f, "malformed frame: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+/// Operational counters the daemon reports over the wire
+/// ([`Msg::Stats`] → [`Msg::StatsReport`]).  The batch histogram is the
+/// dynamic batcher's observable behaviour — the load-generator bench
+/// records it as `BENCH_serve_fleet.json`'s `batch_hist`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DaemonStats {
+    /// Policy steps served (kernel rows / A).
+    pub steps: u64,
+    /// Episodes opened.
+    pub opened: u64,
+    /// Episodes closed (client-initiated).
+    pub closed: u64,
+    /// Hot checkpoint reloads applied.
+    pub reloads: u64,
+    /// Reload candidates skipped (half-written, corrupt, or
+    /// incompatible checkpoint files).
+    pub reload_skips: u64,
+    /// Protocol errors observed across all connections.
+    pub proto_errors: u64,
+    /// Training iteration of the snapshot new episodes currently open
+    /// on.
+    pub snapshot_iteration: u64,
+    /// Replica worker count the daemon runs.
+    pub replicas: u32,
+    /// The batcher's lockstep block ceiling.
+    pub max_batch: u32,
+    /// (block size, kernel calls at that size) — ascending block size.
+    pub batch_hist: Vec<(u32, u64)>,
+}
+
+/// One protocol message (both directions share the enum; the tag's top
+/// bit distinguishes server-sent replies).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Client → server: open episode `episode` (connection-scoped id)
+    /// with the per-episode sampling seed `seed`.
+    Open {
+        /// Connection-scoped episode id.
+        episode: u64,
+        /// Per-episode sampling seed (the training rollout stream).
+        seed: u64,
+    },
+    /// Client → server: one step's packed per-agent observations
+    /// (`agents * obs_dim` f32s, row-major).
+    Step {
+        /// Episode this observation belongs to.
+        episode: u64,
+        /// Packed observation block.
+        obs: Vec<f32>,
+    },
+    /// Client → server: the episode is finished (env terminated or the
+    /// client gave up); frees the daemon-side state.
+    Close {
+        /// Episode to close.
+        episode: u64,
+    },
+    /// Client → server: report operational counters.
+    Stats,
+    /// Client → server: stop accepting, drain in-flight work, exit.
+    Shutdown,
+
+    /// Server → client: the episode is open; everything the client
+    /// needs to drive its environment in lockstep with the daemon.
+    Opened {
+        /// Echo of the opened episode id.
+        episode: u64,
+        /// Training iteration of the snapshot the episode is pinned to.
+        iteration: u64,
+        /// Agents per episode (rows per step).
+        agents: u32,
+        /// Observation vector length per agent.
+        obs_dim: u32,
+        /// Static episode length — the step ceiling the client must
+        /// respect (mirrors the offline driver's loop bound).
+        episode_len: u32,
+    },
+    /// Server → client: the sampled joint action for one step.
+    StepActions {
+        /// Episode the actions belong to.
+        episode: u64,
+        /// 1-based step index after this action (== steps served).
+        step: u32,
+        /// Per-agent environment actions (surplus head actions already
+        /// mapped to the env's no-op, exactly like offline eval).
+        actions: Vec<u16>,
+        /// Per-agent sampled communication gates (0/1).
+        gates: Vec<u8>,
+    },
+    /// Server → client: the episode is closed.
+    Closed {
+        /// Echo of the closed episode id.
+        episode: u64,
+        /// Steps the episode was served.
+        steps: u32,
+    },
+    /// Server → client: operational counters.
+    StatsReport(DaemonStats),
+    /// Server → client: a request failed (the connection stays usable
+    /// unless the error was a framing violation).
+    Error {
+        /// One of [`err_code`]'s constants.
+        code: u8,
+        /// Episode the error refers to (0 when not episode-scoped).
+        episode: u64,
+        /// Human-readable description.
+        message: String,
+    },
+    /// Server → client: shutdown acknowledged; the daemon is draining.
+    ShutdownAck,
+}
+
+impl Msg {
+    /// Encode as a frame payload (tag + body, no length prefix).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        match self {
+            Msg::Open { episode, seed } => {
+                w.put_u8(0x01);
+                w.put_u64(*episode);
+                w.put_u64(*seed);
+            }
+            Msg::Step { episode, obs } => {
+                w.put_u8(0x02);
+                w.put_u64(*episode);
+                w.put_f32_slice(obs);
+            }
+            Msg::Close { episode } => {
+                w.put_u8(0x03);
+                w.put_u64(*episode);
+            }
+            Msg::Stats => w.put_u8(0x04),
+            Msg::Shutdown => w.put_u8(0x05),
+            Msg::Opened { episode, iteration, agents, obs_dim, episode_len } => {
+                w.put_u8(0x81);
+                w.put_u64(*episode);
+                w.put_u64(*iteration);
+                w.put_u32(*agents);
+                w.put_u32(*obs_dim);
+                w.put_u32(*episode_len);
+            }
+            Msg::StepActions { episode, step, actions, gates } => {
+                w.put_u8(0x82);
+                w.put_u64(*episode);
+                w.put_u32(*step);
+                w.put_u16_slice(actions);
+                w.put_u32(gates.len() as u32);
+                w.put_bytes(gates);
+            }
+            Msg::Closed { episode, steps } => {
+                w.put_u8(0x83);
+                w.put_u64(*episode);
+                w.put_u32(*steps);
+            }
+            Msg::StatsReport(s) => {
+                w.put_u8(0x84);
+                w.put_u64(s.steps);
+                w.put_u64(s.opened);
+                w.put_u64(s.closed);
+                w.put_u64(s.reloads);
+                w.put_u64(s.reload_skips);
+                w.put_u64(s.proto_errors);
+                w.put_u64(s.snapshot_iteration);
+                w.put_u32(s.replicas);
+                w.put_u32(s.max_batch);
+                w.put_u32(s.batch_hist.len() as u32);
+                for &(size, count) in &s.batch_hist {
+                    w.put_u32(size);
+                    w.put_u64(count);
+                }
+            }
+            Msg::Error { code, episode, message } => {
+                w.put_u8(0x8E);
+                w.put_u8(*code);
+                w.put_u64(*episode);
+                w.put_str(message);
+            }
+            Msg::ShutdownAck => w.put_u8(0x8F),
+        }
+        w.into_inner()
+    }
+
+    /// Decode a frame payload.  Trailing bytes after a well-formed body
+    /// are malformed (a frame carries exactly one message).
+    pub fn decode(payload: &[u8]) -> Result<Msg, ProtoError> {
+        let mut r = ByteReader::new(payload);
+        let tag = r.u8().map_err(|_| ProtoError::Malformed("empty payload".to_string()))?;
+        let msg = match tag {
+            0x01 => Msg::Open { episode: de_u64(&mut r)?, seed: de_u64(&mut r)? },
+            0x02 => Msg::Step { episode: de_u64(&mut r)?, obs: de_f32s(&mut r)? },
+            0x03 => Msg::Close { episode: de_u64(&mut r)? },
+            0x04 => Msg::Stats,
+            0x05 => Msg::Shutdown,
+            0x81 => Msg::Opened {
+                episode: de_u64(&mut r)?,
+                iteration: de_u64(&mut r)?,
+                agents: de_u32(&mut r)?,
+                obs_dim: de_u32(&mut r)?,
+                episode_len: de_u32(&mut r)?,
+            },
+            0x82 => {
+                let episode = de_u64(&mut r)?;
+                let step = de_u32(&mut r)?;
+                let actions = de_u16s(&mut r)?;
+                let n_gates = de_u32(&mut r)? as usize;
+                if n_gates > MAX_ELEMS {
+                    return Err(ProtoError::Malformed(format!("gate count {n_gates}")));
+                }
+                let gates = r
+                    .take(n_gates)
+                    .map_err(|e| ProtoError::Malformed(format!("{e:#}")))?
+                    .to_vec();
+                Msg::StepActions { episode, step, actions, gates }
+            }
+            0x83 => Msg::Closed { episode: de_u64(&mut r)?, steps: de_u32(&mut r)? },
+            0x84 => {
+                let mut s = DaemonStats {
+                    steps: de_u64(&mut r)?,
+                    opened: de_u64(&mut r)?,
+                    closed: de_u64(&mut r)?,
+                    reloads: de_u64(&mut r)?,
+                    reload_skips: de_u64(&mut r)?,
+                    proto_errors: de_u64(&mut r)?,
+                    snapshot_iteration: de_u64(&mut r)?,
+                    replicas: de_u32(&mut r)?,
+                    max_batch: de_u32(&mut r)?,
+                    batch_hist: Vec::new(),
+                };
+                let n = de_u32(&mut r)? as usize;
+                if n > MAX_ELEMS {
+                    return Err(ProtoError::Malformed(format!("hist bucket count {n}")));
+                }
+                s.batch_hist.reserve(n.min(1024));
+                for _ in 0..n {
+                    let size = de_u32(&mut r)?;
+                    let count = de_u64(&mut r)?;
+                    s.batch_hist.push((size, count));
+                }
+                Msg::StatsReport(s)
+            }
+            0x8E => Msg::Error {
+                code: de_u8(&mut r)?,
+                episode: de_u64(&mut r)?,
+                message: r.str().map_err(|e| ProtoError::Malformed(format!("{e:#}")))?,
+            },
+            0x8F => Msg::ShutdownAck,
+            other => return Err(ProtoError::UnknownTag(other)),
+        };
+        if r.remaining() != 0 {
+            return Err(ProtoError::Malformed(format!(
+                "{} trailing bytes after message",
+                r.remaining()
+            )));
+        }
+        Ok(msg)
+    }
+}
+
+fn de_u8(r: &mut ByteReader<'_>) -> Result<u8, ProtoError> {
+    r.u8().map_err(|e| ProtoError::Malformed(format!("{e:#}")))
+}
+
+fn de_u32(r: &mut ByteReader<'_>) -> Result<u32, ProtoError> {
+    r.u32().map_err(|e| ProtoError::Malformed(format!("{e:#}")))
+}
+
+fn de_u64(r: &mut ByteReader<'_>) -> Result<u64, ProtoError> {
+    r.u64().map_err(|e| ProtoError::Malformed(format!("{e:#}")))
+}
+
+fn de_f32s(r: &mut ByteReader<'_>) -> Result<Vec<f32>, ProtoError> {
+    r.f32_vec().map_err(|e| ProtoError::Malformed(format!("{e:#}")))
+}
+
+fn de_u16s(r: &mut ByteReader<'_>) -> Result<Vec<u16>, ProtoError> {
+    r.u16_vec().map_err(|e| ProtoError::Malformed(format!("{e:#}")))
+}
+
+/// Write one frame (length prefix + payload) and flush.
+pub fn write_frame(w: &mut impl Write, msg: &Msg) -> std::io::Result<()> {
+    let payload = msg.encode();
+    debug_assert!(payload.len() <= MAX_FRAME, "outbound frame exceeds MAX_FRAME");
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&payload)?;
+    w.flush()
+}
+
+/// Read exactly `buf.len()` bytes, classifying EOF: clean ([`ProtoError::Eof`])
+/// when `at_boundary` and nothing was read yet, truncation otherwise.
+fn read_exact_classified(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    at_boundary: bool,
+    context: &'static str,
+) -> Result<(), ProtoError> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return if at_boundary && filled == 0 {
+                    Err(ProtoError::Eof)
+                } else {
+                    Err(ProtoError::Truncated { context })
+                };
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(ProtoError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame, blocking.  A stream that ends exactly between frames
+/// yields [`ProtoError::Eof`]; anything else short of a full, decodable
+/// frame yields the matching clean error.
+pub fn read_frame(r: &mut impl Read) -> Result<Msg, ProtoError> {
+    let mut len_bytes = [0u8; 4];
+    read_exact_classified(r, &mut len_bytes, true, "length prefix")?;
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    if len > MAX_FRAME {
+        return Err(ProtoError::Oversized(len));
+    }
+    let mut payload = vec![0u8; len];
+    read_exact_classified(r, &mut payload, false, "payload")?;
+    Msg::decode(&payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_round_trip_over_a_pipe_buffer() {
+        let msgs = vec![
+            Msg::Open { episode: 7, seed: 0xDEAD_BEEF },
+            Msg::Step { episode: 7, obs: vec![0.5, -1.0, f32::MIN_POSITIVE] },
+            Msg::StepActions { episode: 7, step: 1, actions: vec![0, 4], gates: vec![1, 0] },
+            Msg::Stats,
+            Msg::StatsReport(DaemonStats {
+                steps: 10,
+                batch_hist: vec![(1, 3), (4, 2)],
+                ..DaemonStats::default()
+            }),
+            Msg::Error { code: err_code::BAD_OBS, episode: 7, message: "nope".to_string() },
+            Msg::Close { episode: 7 },
+            Msg::Closed { episode: 7, steps: 20 },
+            Msg::Shutdown,
+            Msg::ShutdownAck,
+            Msg::Opened { episode: 7, iteration: 3, agents: 3, obs_dim: 28, episode_len: 20 },
+        ];
+        let mut buf = Vec::new();
+        for m in &msgs {
+            write_frame(&mut buf, m).unwrap();
+        }
+        let mut cursor = std::io::Cursor::new(buf);
+        for m in &msgs {
+            assert_eq!(&read_frame(&mut cursor).unwrap(), m);
+        }
+        assert!(matches!(read_frame(&mut cursor), Err(ProtoError::Eof)));
+    }
+
+    #[test]
+    fn oversized_prefix_is_rejected_before_allocation() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        buf.extend_from_slice(&[0u8; 16]);
+        match read_frame(&mut std::io::Cursor::new(buf)) {
+            Err(ProtoError::Oversized(n)) => assert_eq!(n, MAX_FRAME + 1),
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_payload_is_a_clean_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Msg::Open { episode: 1, seed: 2 }).unwrap();
+        buf.truncate(buf.len() - 3);
+        assert!(matches!(
+            read_frame(&mut std::io::Cursor::new(buf)),
+            Err(ProtoError::Truncated { .. })
+        ));
+    }
+}

@@ -1,0 +1,420 @@
+//! End-to-end tests of the serving fleet: a real daemon bound to a
+//! loopback socket, driven by real protocol clients.
+//!
+//! The headline contract is **bit-identity**: a daemon-served episode —
+//! whatever the replica count, lockstep batch packing, or hot-reload
+//! timing — reports exactly what the offline serving engine reports for
+//! the same (index, seed).  On top of that: hot checkpoint reload must
+//! swap snapshots without touching in-flight episodes, and corrupt
+//! reload candidates must be skipped, never fatal.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use learning_group::checkpoint::Checkpoint;
+use learning_group::coordinator::rollout::episode_seed;
+use learning_group::coordinator::{PrunerChoice, TrainConfig, Trainer};
+use learning_group::env::EnvConfig;
+use learning_group::runtime::{ExecMode, Runtime, SimdBackend};
+use learning_group::serve::{
+    run_served_episode, Daemon, DaemonClient, DaemonConfig, EpisodeOutcome, ListenAddr,
+    PolicyServer, ServeMode, ServeOptions,
+};
+
+fn tiny_checkpoint(iterations: usize) -> Checkpoint {
+    let cfg = TrainConfig {
+        batch: 1,
+        iterations,
+        pruner: PrunerChoice::Flgw(4),
+        seed: 5,
+        log_every: 0,
+        ..TrainConfig::default().with_agents(3)
+    };
+    let mut trainer = Trainer::from_default_artifacts(cfg).unwrap();
+    trainer.train().unwrap();
+    trainer.checkpoint().unwrap()
+}
+
+fn daemon_cfg() -> DaemonConfig {
+    DaemonConfig {
+        max_batch: 4,
+        simd: SimdBackend::from_env(),
+        reload_poll: Duration::from_millis(25),
+        ..DaemonConfig::default()
+    }
+}
+
+fn env_for(ckpt: &Checkpoint) -> EnvConfig {
+    EnvConfig::parse(&ckpt.meta.env)
+        .unwrap()
+        .with_agents(ckpt.meta.agents as usize)
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("lg_daemon_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Stop a daemon through the protocol (the same path CI uses) and join
+/// its threads.
+fn stop(handle: learning_group::serve::DaemonHandle) {
+    let mut client = DaemonClient::connect(handle.addr()).unwrap();
+    client.shutdown().unwrap();
+    handle.wait().unwrap();
+}
+
+/// Poll the daemon's stats until `pred` holds (or fail after 10 s).
+fn wait_for_stats(
+    client: &mut DaemonClient,
+    what: &str,
+    pred: impl Fn(&learning_group::serve::proto::DaemonStats) -> bool,
+) -> learning_group::serve::proto::DaemonStats {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let stats = client.stats().unwrap();
+        if pred(&stats) {
+            return stats;
+        }
+        assert!(Instant::now() < deadline, "timed out waiting for {what}: {stats:?}");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// Serve `episodes` episodes over `concurrency` client connections and
+/// return the per-episode outcomes in index order.
+fn serve_outcomes(
+    addr: &ListenAddr,
+    env_cfg: EnvConfig,
+    episodes: usize,
+    concurrency: usize,
+    master_seed: u64,
+) -> Vec<EpisodeOutcome> {
+    let next = std::sync::atomic::AtomicU64::new(0);
+    let all: std::sync::Mutex<Vec<EpisodeOutcome>> = std::sync::Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for _ in 0..concurrency {
+            let next = &next;
+            let all = &all;
+            scope.spawn(move || {
+                let mut client = DaemonClient::connect(addr).unwrap();
+                let mut env = env_cfg.build();
+                loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= episodes as u64 {
+                        break;
+                    }
+                    let seed = episode_seed(master_seed, i);
+                    let (outcome, _lat) =
+                        run_served_episode(&mut client, env.as_mut(), i, seed).unwrap();
+                    all.lock().unwrap().push(outcome);
+                }
+            });
+        }
+    });
+    let mut outcomes = all.into_inner().unwrap();
+    outcomes.sort_by_key(|o| o.index);
+    outcomes
+}
+
+/// Daemon-served episodes are bitwise identical to offline `eval` of
+/// the same checkpoint — across replica counts 1/2/4, concurrency
+/// levels that exercise every lockstep block size, and both address
+/// families.
+#[test]
+fn served_episodes_match_offline_eval_bitwise() {
+    let ckpt = tiny_checkpoint(2);
+    let env_cfg = env_for(&ckpt);
+    let episodes = 8usize;
+    let master_seed = 9u64;
+
+    // offline reference: the PolicyServer engine, same checkpoint,
+    // same seed stream
+    let manifest = learning_group::manifest::Manifest::for_topology(
+        learning_group::manifest::Manifest::default_dir(),
+        &ckpt.meta.model,
+    )
+    .unwrap();
+    let mut rt = Runtime::new(manifest).unwrap();
+    rt.set_simd(SimdBackend::from_env());
+    let offline = PolicyServer::from_checkpoint(&mut rt, &ckpt, ExecMode::Sparse, 1, 1)
+        .unwrap()
+        .run(&ServeOptions {
+            workers: 2,
+            mode: ServeMode::Episodes(episodes),
+            seed: master_seed,
+        })
+        .unwrap();
+
+    for (replicas, concurrency, listen) in [
+        (1usize, 1usize, ListenAddr::Tcp("127.0.0.1:0".to_string())),
+        (2, 4, ListenAddr::Tcp("127.0.0.1:0".to_string())),
+        (
+            4,
+            8,
+            ListenAddr::Unix(tmp_dir("parity").join("daemon.sock")),
+        ),
+    ] {
+        let cfg = DaemonConfig { replicas, ..daemon_cfg() };
+        let handle = Daemon::start(&listen, &ckpt, cfg).unwrap();
+        let outcomes =
+            serve_outcomes(handle.addr(), env_cfg, episodes, concurrency, master_seed);
+        assert_eq!(outcomes.len(), episodes, "replicas={replicas}");
+
+        // aggregate parity with the offline report, exact f32 equality
+        let steps: usize = outcomes.iter().map(|o| o.steps).sum();
+        let rewards: Vec<f32> = outcomes.iter().map(|o| o.total_reward).collect();
+        assert_eq!(steps, offline.steps, "replicas={replicas}");
+        assert_eq!(
+            learning_group::util::mean(&rewards),
+            offline.reward.mean,
+            "replicas={replicas}"
+        );
+        let min = rewards.iter().cloned().fold(f32::INFINITY, f32::min);
+        let max = rewards.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert_eq!(min, offline.reward.min, "replicas={replicas}");
+        assert_eq!(max, offline.reward.max, "replicas={replicas}");
+        let successes: Vec<f32> = outcomes.iter().map(|o| o.success_frac).collect();
+        assert_eq!(
+            learning_group::util::mean(&successes),
+            offline.success_rate,
+            "replicas={replicas}"
+        );
+
+        // no protocol errors, and the batcher actually served the steps
+        let mut client = DaemonClient::connect(handle.addr()).unwrap();
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.proto_errors, 0, "replicas={replicas}");
+        assert_eq!(stats.opened, episodes as u64, "replicas={replicas}");
+        assert_eq!(stats.closed, episodes as u64, "replicas={replicas}");
+        assert_eq!(stats.steps, steps as u64, "replicas={replicas}");
+        let hist_calls: u64 = stats.batch_hist.iter().map(|&(_, c)| c).sum();
+        assert!(hist_calls > 0, "replicas={replicas}: empty batch histogram");
+        if concurrency >= 8 {
+            assert!(
+                stats.batch_hist.iter().any(|&(size, _)| size > 1),
+                "concurrency {concurrency} never coalesced a lockstep block: {stats:?}"
+            );
+        }
+        stop(handle);
+    }
+}
+
+/// The same (index, seed) episode reports identically from two
+/// independent daemons — the cross-daemon determinism the hot-reload
+/// test below leans on.
+fn assert_same_outcome(a: &EpisodeOutcome, b: &EpisodeOutcome, what: &str) {
+    assert_eq!(a.index, b.index, "{what}");
+    assert_eq!(a.seed, b.seed, "{what}");
+    assert_eq!(a.steps, b.steps, "{what}");
+    assert_eq!(a.total_reward, b.total_reward, "{what}: reward must match bitwise");
+    assert_eq!(a.success, b.success, "{what}");
+    assert_eq!(a.success_frac, b.success_frac, "{what}");
+}
+
+/// Drive one episode against a fresh daemon serving `ckpt` and return
+/// its outcome — the reference for the reload test.
+fn reference_outcome(ckpt: &Checkpoint, index: u64, seed: u64) -> EpisodeOutcome {
+    let handle = Daemon::start(
+        &ListenAddr::Tcp("127.0.0.1:0".to_string()),
+        ckpt,
+        DaemonConfig { replicas: 1, ..daemon_cfg() },
+    )
+    .unwrap();
+    let mut client = DaemonClient::connect(handle.addr()).unwrap();
+    let mut env = env_for(ckpt).build();
+    let (outcome, _) = run_served_episode(&mut client, env.as_mut(), index, seed).unwrap();
+    drop(client);
+    stop(handle);
+    outcome
+}
+
+/// Hot reload: dropping a new `.lgcp` mid-run swaps the snapshot for
+/// *new* episodes while the episode already in flight finishes —
+/// bitwise — on the snapshot it opened on.  Nothing is dropped or
+/// corrupted across the swap.
+#[test]
+fn hot_reload_preserves_in_flight_episodes_and_serves_new_snapshot() {
+    let ckpt_a = tiny_checkpoint(2);
+    let ckpt_b = tiny_checkpoint(3);
+    assert_ne!(ckpt_a.meta.iteration, ckpt_b.meta.iteration);
+    assert_eq!(ckpt_a.manifest_fingerprint, ckpt_b.manifest_fingerprint);
+    let env_cfg = env_for(&ckpt_a);
+    let master_seed = 31u64;
+    let seed0 = episode_seed(master_seed, 0);
+    let seed1 = episode_seed(master_seed, 1);
+    let ref_a0 = reference_outcome(&ckpt_a, 0, seed0);
+    let ref_b1 = reference_outcome(&ckpt_b, 1, seed1);
+
+    let dir = tmp_dir("reload");
+    let live = dir.join("live.lgcp");
+    ckpt_a.write(&live).unwrap();
+
+    let handle = Daemon::start(
+        &ListenAddr::Unix(dir.join("daemon.sock")),
+        &ckpt_a,
+        DaemonConfig { reload_watch: Some(live.clone()), ..daemon_cfg() },
+    )
+    .unwrap();
+    let mut client = DaemonClient::connect(handle.addr()).unwrap();
+
+    // open episode 0 on snapshot A and step it partway
+    let info = client.open(0, seed0).unwrap();
+    assert_eq!(info.iteration, ckpt_a.meta.iteration);
+    let mut env = env_cfg.build();
+    let mut obs = env.reset(seed0);
+    let mut steps = 0usize;
+    let mut total_reward = 0.0f32;
+    let mut done = false;
+    let mut drive = |client: &mut DaemonClient,
+                     env: &mut Box<dyn learning_group::env::MultiAgentEnv + Send>,
+                     obs: &mut Vec<f32>,
+                     steps: &mut usize,
+                     total_reward: &mut f32,
+                     done: &mut bool,
+                     budget: usize| {
+        for _ in 0..budget {
+            if *done || *steps >= info.episode_len {
+                break;
+            }
+            let stepped = client.step(0, obs).unwrap();
+            let acts: Vec<usize> = stepped.actions.iter().map(|&x| x as usize).collect();
+            let step = env.step(&acts);
+            *steps += 1;
+            *total_reward += step.reward;
+            *obs = step.obs;
+            *done = step.done;
+        }
+    };
+    drive(&mut client, &mut env, &mut obs, &mut steps, &mut total_reward, &mut done, 3);
+    assert!(steps > 0, "episode 0 must be in flight before the swap");
+    assert!(!done && steps < ref_a0.steps, "reference episode too short for a mid-run swap");
+
+    // drop checkpoint B onto the watch path (atomic rename, the way a
+    // trainer would publish it)
+    let tmp = dir.join("incoming.lgcp.tmp");
+    ckpt_b.write(&tmp).unwrap();
+    std::fs::rename(&tmp, &live).unwrap();
+    let stats = wait_for_stats(&mut client, "hot reload", |s| s.reloads == 1);
+    assert_eq!(stats.reload_skips, 0);
+    assert_eq!(stats.snapshot_iteration, ckpt_b.meta.iteration);
+
+    // the in-flight episode finishes on snapshot A, bitwise
+    drive(
+        &mut client,
+        &mut env,
+        &mut obs,
+        &mut steps,
+        &mut total_reward,
+        &mut done,
+        info.episode_len,
+    );
+    let closed_steps = client.close_episode(0).unwrap();
+    assert_eq!(closed_steps as usize, steps);
+    let outcome0 = EpisodeOutcome {
+        index: 0,
+        seed: seed0,
+        steps,
+        total_reward,
+        success: env.is_success(),
+        success_frac: env.success_fraction(),
+    };
+    assert_same_outcome(&outcome0, &ref_a0, "in-flight episode across reload");
+
+    // a new episode opens on snapshot B and matches a fresh B daemon
+    let info1 = client.open(1, seed1).unwrap();
+    assert_eq!(info1.iteration, ckpt_b.meta.iteration);
+    client.close_episode(1).unwrap();
+    let mut env1 = env_cfg.build();
+    let (outcome1, _) = run_served_episode(&mut client, env1.as_mut(), 1, seed1).unwrap();
+    assert_same_outcome(&outcome1, &ref_b1, "post-reload episode");
+
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.proto_errors, 0, "no episode dropped or corrupted: {stats:?}");
+    drop(client);
+    stop(handle);
+}
+
+/// A half-written or corrupt reload candidate is skipped — the daemon
+/// keeps serving the old snapshot and applies the next good file.
+#[test]
+fn corrupt_reload_candidates_are_skipped_not_fatal() {
+    let ckpt_a = tiny_checkpoint(2);
+    let ckpt_b = tiny_checkpoint(3);
+    let dir = tmp_dir("corrupt_reload");
+    let live = dir.join("live.lgcp");
+    ckpt_a.write(&live).unwrap();
+
+    let handle = Daemon::start(
+        &ListenAddr::Tcp("127.0.0.1:0".to_string()),
+        &ckpt_a,
+        DaemonConfig { reload_watch: Some(live.clone()), ..daemon_cfg() },
+    )
+    .unwrap();
+    let mut client = DaemonClient::connect(handle.addr()).unwrap();
+
+    // a truncated "half-written" file: skipped, old snapshot keeps serving
+    let good = ckpt_b.to_bytes();
+    std::fs::write(&live, &good[..good.len() / 2]).unwrap();
+    let stats = wait_for_stats(&mut client, "reload skip", |s| s.reload_skips >= 1);
+    assert_eq!(stats.reloads, 0);
+    assert_eq!(stats.snapshot_iteration, ckpt_a.meta.iteration);
+    let info = client.open(0, 1).unwrap();
+    assert_eq!(info.iteration, ckpt_a.meta.iteration, "old snapshot must keep serving");
+    client.close_episode(0).unwrap();
+
+    // the completed write is applied
+    std::fs::write(&live, &good).unwrap();
+    let stats = wait_for_stats(&mut client, "reload after repair", |s| s.reloads == 1);
+    assert_eq!(stats.snapshot_iteration, ckpt_b.meta.iteration);
+    drop(client);
+    stop(handle);
+}
+
+/// Client-facing error paths: duplicate opens, unknown episodes and
+/// wrong-shape observations are named errors that leave the connection
+/// and the episode usable.
+#[test]
+fn protocol_misuse_yields_named_errors_and_keeps_serving() {
+    let ckpt = tiny_checkpoint(2);
+    let env_cfg = env_for(&ckpt);
+    let handle = Daemon::start(
+        &ListenAddr::Tcp("127.0.0.1:0".to_string()),
+        &ckpt,
+        DaemonConfig { replicas: 1, ..daemon_cfg() },
+    )
+    .unwrap();
+    let mut client = DaemonClient::connect(handle.addr()).unwrap();
+
+    // unknown episode
+    let err = client.step(99, &[0.0; 4]).unwrap_err().to_string();
+    assert!(err.contains("not open"), "{err}");
+
+    // duplicate open
+    let info = client.open(0, 7).unwrap();
+    let err = client.open(0, 7).unwrap_err().to_string();
+    assert!(err.contains("already open"), "{err}");
+
+    // wrong-shape observation: named error, episode still alive
+    let err = client.step(0, &[0.0; 3]).unwrap_err().to_string();
+    assert!(err.contains("observation length"), "{err}");
+    let mut env = env_cfg.build();
+    let obs = env.reset(7);
+    assert_eq!(obs.len(), info.agents * info.obs_dim);
+    let stepped = client.step(0, &obs).unwrap();
+    assert_eq!(stepped.step, 1);
+    assert_eq!(stepped.actions.len(), info.agents);
+    assert_eq!(client.close_episode(0).unwrap(), 1);
+
+    // a second connection has its own episode-id namespace
+    let mut client2 = DaemonClient::connect(handle.addr()).unwrap();
+    client.open(5, 1).unwrap();
+    client2.open(5, 2).unwrap();
+    client.close_episode(5).unwrap();
+    client2.close_episode(5).unwrap();
+
+    drop(client2);
+    drop(client);
+    stop(handle);
+}

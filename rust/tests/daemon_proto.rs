@@ -1,0 +1,244 @@
+//! Property tests for the daemon wire protocol
+//! (`learning_group::serve::proto`).
+//!
+//! The codec is the daemon's attack surface: every byte a client sends
+//! crosses it.  The contract under test is *clean failure* — random
+//! payloads, truncated prefixes, oversized frames and garbage streams
+//! must round-trip or yield a named [`ProtoError`], never a panic, a
+//! hang, or an allocation driven by an unvalidated length.  Both sides
+//! of the wire use the same codec (`write_frame`/`read_frame`), so one
+//! harness covers client and server.
+
+use learning_group::serve::proto::{
+    err_code, read_frame, write_frame, DaemonStats, Msg, ProtoError, MAX_FRAME,
+};
+use learning_group::util::Pcg32;
+
+fn rand_u64(rng: &mut Pcg32) -> u64 {
+    (u64::from(rng.next_u32()) << 32) | u64::from(rng.next_u32())
+}
+
+fn rand_string(rng: &mut Pcg32) -> String {
+    let alphabet = b"abcdefghijklmnopqrstuvwxyz0123456789 _-:/.";
+    let len = rng.next_below(24) as usize;
+    (0..len)
+        .map(|_| alphabet[rng.next_below(alphabet.len() as u32) as usize] as char)
+        .collect()
+}
+
+fn rand_f32s(rng: &mut Pcg32, max_len: u32) -> Vec<f32> {
+    let len = rng.next_below(max_len) as usize;
+    (0..len).map(|_| rng.next_normal()).collect()
+}
+
+/// Draw a random message covering every variant, with payload sizes up
+/// to a few hundred elements.
+fn rand_msg(rng: &mut Pcg32) -> Msg {
+    match rng.next_below(11) {
+        0 => Msg::Open { episode: rand_u64(rng), seed: rand_u64(rng) },
+        1 => Msg::Step { episode: rand_u64(rng), obs: rand_f32s(rng, 300) },
+        2 => Msg::Close { episode: rand_u64(rng) },
+        3 => Msg::Stats,
+        4 => Msg::Shutdown,
+        5 => Msg::Opened {
+            episode: rand_u64(rng),
+            iteration: rand_u64(rng),
+            agents: rng.next_below(64),
+            obs_dim: rng.next_below(512),
+            episode_len: rng.next_below(200),
+        },
+        6 => {
+            let n = rng.next_below(32) as usize;
+            Msg::StepActions {
+                episode: rand_u64(rng),
+                step: rng.next_below(1000),
+                actions: (0..n).map(|_| rng.next_below(10) as u16).collect(),
+                gates: (0..n).map(|_| (rng.next_below(2)) as u8).collect(),
+            }
+        }
+        7 => Msg::Closed { episode: rand_u64(rng), steps: rng.next_below(200) },
+        8 => {
+            let n = rng.next_below(8) as usize;
+            Msg::StatsReport(DaemonStats {
+                steps: rand_u64(rng),
+                opened: rand_u64(rng),
+                closed: rand_u64(rng),
+                reloads: rand_u64(rng),
+                reload_skips: rand_u64(rng),
+                proto_errors: rand_u64(rng),
+                snapshot_iteration: rand_u64(rng),
+                replicas: rng.next_below(16),
+                max_batch: rng.next_below(64),
+                batch_hist: (0..n)
+                    .map(|_| (rng.next_below(64), rand_u64(rng)))
+                    .collect(),
+            })
+        }
+        9 => Msg::Error {
+            code: [
+                err_code::UNKNOWN_EPISODE,
+                err_code::ALREADY_OPEN,
+                err_code::BUSY,
+                err_code::BAD_OBS,
+                err_code::OVERRUN,
+                err_code::PROTO,
+                err_code::INTERNAL,
+            ][rng.next_below(7) as usize],
+            episode: rand_u64(rng),
+            message: rand_string(rng),
+        },
+        _ => Msg::ShutdownAck,
+    }
+}
+
+/// Random messages survive encode → frame → read_frame bit-for-bit, in
+/// long multi-frame streams, and the stream ends with a clean EOF.
+#[test]
+fn random_messages_round_trip_through_frames() {
+    let mut rng = Pcg32::new(0xF00D, 1);
+    for round in 0..50 {
+        let msgs: Vec<Msg> = (0..20).map(|_| rand_msg(&mut rng)).collect();
+        let mut wire = Vec::new();
+        for m in &msgs {
+            write_frame(&mut wire, m).unwrap();
+        }
+        let mut cursor = std::io::Cursor::new(wire);
+        for (i, m) in msgs.iter().enumerate() {
+            let got = read_frame(&mut cursor)
+                .unwrap_or_else(|e| panic!("round {round} frame {i}: {e}"));
+            assert_eq!(&got, m, "round {round} frame {i}");
+        }
+        assert!(
+            matches!(read_frame(&mut cursor), Err(ProtoError::Eof)),
+            "round {round}: stream end must be a clean Eof"
+        );
+    }
+}
+
+/// Every proper prefix of a valid frame stream fails cleanly: a cut at
+/// a frame boundary is `Eof`, anywhere else is `Truncated` — never a
+/// panic, never a hang.
+#[test]
+fn every_truncation_point_fails_cleanly() {
+    let mut rng = Pcg32::new(0xBEEF, 2);
+    let msgs = [
+        rand_msg(&mut rng),
+        Msg::Step { episode: 1, obs: vec![1.0; 32] },
+        Msg::Error { code: err_code::PROTO, episode: 0, message: "x".repeat(40) },
+    ];
+    let mut wire = Vec::new();
+    let mut boundaries = vec![0usize];
+    for m in &msgs {
+        write_frame(&mut wire, m).unwrap();
+        boundaries.push(wire.len());
+    }
+    for cut in 0..wire.len() {
+        let mut cursor = std::io::Cursor::new(&wire[..cut]);
+        // drain: whole frames before the cut decode, then the tail errors
+        let err = loop {
+            match read_frame(&mut cursor) {
+                Ok(_) => continue,
+                Err(e) => break e,
+            }
+        };
+        if boundaries.contains(&cut) {
+            assert!(
+                matches!(err, ProtoError::Eof),
+                "cut {cut} is a frame boundary, expected Eof, got {err:?}"
+            );
+        } else {
+            assert!(
+                matches!(err, ProtoError::Truncated { .. } | ProtoError::Malformed(_)),
+                "cut {cut} mid-frame, expected Truncated/Malformed, got {err:?}"
+            );
+        }
+    }
+}
+
+/// A length prefix over the ceiling is rejected *before* any payload
+/// allocation, whatever follows it.
+#[test]
+fn oversized_prefixes_are_rejected() {
+    let mut rng = Pcg32::new(7, 3);
+    for _ in 0..100 {
+        let len = MAX_FRAME as u32 + 1 + rng.next_below(1 << 20);
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&len.to_le_bytes());
+        wire.extend_from_slice(&[0xAA; 8]);
+        match read_frame(&mut std::io::Cursor::new(wire)) {
+            Err(ProtoError::Oversized(n)) => assert_eq!(n, len as usize),
+            other => panic!("expected Oversized({len}), got {other:?}"),
+        }
+    }
+}
+
+/// Pure garbage streams terminate with a clean error in bounded time:
+/// whatever the bytes, each `read_frame` either consumes a frame or
+/// fails with a named error — the drain loop always reaches the end.
+#[test]
+fn garbage_streams_never_panic_or_hang() {
+    let mut rng = Pcg32::new(0xDEAD, 4);
+    for round in 0..200 {
+        let len = rng.next_below(512) as usize;
+        let garbage: Vec<u8> = (0..len).map(|_| rng.next_below(256) as u8).collect();
+        let mut cursor = std::io::Cursor::new(&garbage);
+        let mut frames = 0usize;
+        loop {
+            let before = cursor.position();
+            match read_frame(&mut cursor) {
+                Ok(_) => {
+                    frames += 1;
+                    assert!(
+                        cursor.position() > before,
+                        "round {round}: a successful read must consume bytes"
+                    );
+                    // a garbage stream can contain at most len/4 valid
+                    // empty-ish frames; far below this bound in practice
+                    assert!(frames <= len, "round {round}: runaway frame loop");
+                }
+                Err(
+                    ProtoError::Eof
+                    | ProtoError::Truncated { .. }
+                    | ProtoError::Oversized(_)
+                    | ProtoError::UnknownTag(_)
+                    | ProtoError::Malformed(_),
+                ) => break,
+                Err(ProtoError::Io(e)) => panic!("round {round}: io error from memory: {e}"),
+            }
+        }
+    }
+}
+
+/// Single-byte corruption of a valid payload decodes or fails cleanly —
+/// and a corrupted leading tag specifically reports `UnknownTag` for
+/// bytes outside the protocol's tag set.
+#[test]
+fn payload_corruption_fails_cleanly() {
+    let mut rng = Pcg32::new(0xCAFE, 5);
+    let known_tags = [0x01, 0x02, 0x03, 0x04, 0x05, 0x81, 0x82, 0x83, 0x84, 0x8E, 0x8F];
+    for _ in 0..200 {
+        let msg = rand_msg(&mut rng);
+        let mut payload = msg.encode();
+        let idx = rng.next_below(payload.len() as u32) as usize;
+        let flip = 1u8 << rng.next_below(8);
+        payload[idx] ^= flip;
+        match Msg::decode(&payload) {
+            Ok(_) => {} // the flip landed in a value field — still well-formed
+            Err(ProtoError::UnknownTag(t)) => {
+                assert_eq!(idx, 0, "UnknownTag must come from the tag byte");
+                assert!(!known_tags.contains(&t));
+            }
+            Err(ProtoError::Truncated { .. } | ProtoError::Malformed(_)) => {}
+            Err(other) => panic!("unexpected error class for byte flip: {other:?}"),
+        }
+    }
+}
+
+/// Trailing bytes after a well-formed message are rejected — a frame
+/// carries exactly one message.
+#[test]
+fn trailing_bytes_are_malformed() {
+    let mut payload = Msg::Close { episode: 9 }.encode();
+    payload.push(0);
+    assert!(matches!(Msg::decode(&payload), Err(ProtoError::Malformed(_))));
+}
