@@ -1,0 +1,32 @@
+//! Stamp the git revision into the binary so `--version` and every
+//! `BENCH_*.json` artifact can say exactly which tree produced them.
+//!
+//! Offline-safe: when git is unavailable (a source tarball, a
+//! sandboxed builder) the hash degrades to `"unknown"` instead of
+//! failing the build.
+
+use std::process::Command;
+
+fn git_short_hash() -> Option<String> {
+    let out = Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()?;
+    if !out.status.success() {
+        return None;
+    }
+    let hash = String::from_utf8(out.stdout).ok()?.trim().to_string();
+    if hash.is_empty() {
+        None
+    } else {
+        Some(hash)
+    }
+}
+
+fn main() {
+    // Re-stamp when HEAD moves (commit, checkout); .git is absent in
+    // tarball builds, where the rerun hint is simply ignored.
+    println!("cargo:rerun-if-changed=.git/HEAD");
+    let hash = git_short_hash().unwrap_or_else(|| "unknown".to_string());
+    println!("cargo:rustc-env=LG_GIT_HASH={hash}");
+}

@@ -174,9 +174,11 @@ fn write_sweep_json(rows: &[SweepRow], smoke: bool) -> std::io::Result<()> {
         ));
     }
     let text = format!(
-        "{{\n  \"bench\": \"batched_exec\",\n  \"mode\": \"{}\",\n  \"agents\": {AGENTS},\n  \
+        "{{\n  \"bench\": \"batched_exec\",\n  \"build\": {},\n  \"mode\": \"{}\",\n  \
+         \"agents\": {AGENTS},\n  \
          \"groups\": {GROUPS},\n  \"intra_threads\": {INTRA},\n  \"exec\": \"sparse\",\n  \
          \"gate\": \"lockstep_par@B=16 >= sequential\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+        learning_group::util::buildinfo::build_info_json(),
         if smoke { "smoke" } else { "full" },
         row_text,
     );

@@ -1,0 +1,170 @@
+//! Distributed-training scaling sweep → `BENCH_distributed.json`.
+//!
+//! Trains the same workload at `--workers` ∈ {1, 2, 4} — W = 1 is the
+//! plain in-process trainer, W ≥ 2 spawns real `learning-group worker`
+//! processes (the exact production path behind `train --workers W`) —
+//! and records the W-scaling curve.  Two gates ride along:
+//!
+//! * **parity** (always): every W must reproduce the W = 1 run bitwise
+//!   — per-iteration metrics and the final checkpoint image — or the
+//!   bench exits non-zero.  A scaling number from a run that computed
+//!   something different is not a scaling number.
+//! * **speedup** (smoke / CI): W = 4 wall-clock must beat W = 1.  The
+//!   sharded rollout+backward is embarrassingly parallel; if four
+//!   worker processes cannot beat one process on this workload, the
+//!   broadcast/collect path has regressed.
+//!
+//! Schema documented in docs/BENCHMARKS.md; run via
+//! `cargo bench --bench distributed [-- --smoke]`.
+
+use std::time::Instant;
+
+use learning_group::coordinator::{MetricsLog, PrunerChoice, TrainConfig, Trainer};
+use learning_group::dist::{DistCoordinator, DistOptions, SpawnMode};
+
+const WORKER_COUNTS: [usize; 3] = [1, 2, 4];
+
+fn cfg(iterations: usize) -> TrainConfig {
+    TrainConfig {
+        batch: 16,
+        iterations,
+        pruner: PrunerChoice::Flgw(4),
+        seed: 7,
+        log_every: 0,
+        ..TrainConfig::default().with_agents(3)
+    }
+}
+
+struct Row {
+    workers: usize,
+    wall_s: f64,
+    iters_per_sec: f64,
+    episodes_per_sec: f64,
+    speedup: f64,
+}
+
+/// Train the workload at one worker count; returns the wall time, the
+/// metrics log and the final checkpoint bytes (the parity evidence).
+fn run(workers: usize, iterations: usize) -> (f64, MetricsLog, Vec<u8>) {
+    let mut trainer = Trainer::from_default_artifacts(cfg(iterations)).expect("building trainer");
+    let t0 = Instant::now();
+    let log = if workers == 1 {
+        trainer.train().expect("single-process run")
+    } else {
+        let coordinator = DistCoordinator::bind(DistOptions {
+            spawn: SpawnMode::SpawnWith(vec![env!("CARGO_BIN_EXE_learning-group").to_string()]),
+            ..DistOptions::new(workers)
+        })
+        .expect("binding dist coordinator");
+        coordinator
+            .train(&mut trainer)
+            .unwrap_or_else(|e| panic!("distributed run W={workers}: {e:#}"))
+    };
+    let wall = t0.elapsed().as_secs_f64();
+    let bytes = trainer.checkpoint().expect("final checkpoint").to_bytes();
+    (wall, log, bytes)
+}
+
+fn write_json(rows: &[Row], c: &TrainConfig, smoke: bool) -> std::io::Result<()> {
+    let mut row_text = String::new();
+    for (i, r) in rows.iter().enumerate() {
+        if i > 0 {
+            row_text.push_str(",\n");
+        }
+        row_text.push_str(&format!(
+            "    {{\"workers\": {}, \"wall_s\": {:.6}, \"iters_per_sec\": {:.3}, \
+             \"episodes_per_sec\": {:.3}, \"speedup\": {:.3}}}",
+            r.workers, r.wall_s, r.iters_per_sec, r.episodes_per_sec, r.speedup,
+        ));
+    }
+    let text = format!(
+        "{{\n  \"bench\": \"distributed\",\n  \"build\": {},\n  \"mode\": \"{}\",\n  \
+         \"env\": \"{}\",\n  \"agents\": {},\n  \"batch\": {},\n  \"iterations\": {},\n  \
+         \"parity\": \"metrics and final checkpoint bitwise identical across workers\",\n  \
+         \"gate\": \"smoke: W=4 wall-clock < W=1\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+        learning_group::util::buildinfo::build_info_json(),
+        if smoke { "smoke" } else { "full" },
+        c.env.name(),
+        c.agents,
+        c.batch,
+        c.iterations,
+        row_text,
+    );
+    std::fs::write("BENCH_distributed.json", text)
+}
+
+/// Exact bit equality of two metrics logs (wall_s excluded — it is the
+/// measurement, not the computation).
+fn logs_bitwise_equal(a: &MetricsLog, b: &MetricsLog) -> bool {
+    a.records.len() == b.records.len()
+        && a.records.iter().zip(&b.records).all(|(x, y)| {
+            x.iteration == y.iteration
+                && x.loss.to_bits() == y.loss.to_bits()
+                && x.policy_loss.to_bits() == y.policy_loss.to_bits()
+                && x.value_loss.to_bits() == y.value_loss.to_bits()
+                && x.entropy.to_bits() == y.entropy.to_bits()
+                && x.mean_reward.to_bits() == y.mean_reward.to_bits()
+                && x.success_rate.to_bits() == y.success_rate.to_bits()
+                && x.sparsity.to_bits() == y.sparsity.to_bits()
+        })
+}
+
+fn main() {
+    let smoke = std::env::args().any(|arg| arg == "--smoke")
+        || std::env::var_os("LG_BENCH_SMOKE").is_some();
+    let iterations = if smoke { 3 } else { 10 };
+    let c = cfg(iterations);
+
+    // Warmup: one tiny run so artifact loading / page-cache effects
+    // don't land inside the first measured point.
+    Trainer::from_default_artifacts(cfg(1))
+        .expect("warmup trainer")
+        .train()
+        .expect("warmup run");
+
+    let mut rows: Vec<Row> = Vec::new();
+    let mut reference: Option<(MetricsLog, Vec<u8>)> = None;
+    for &workers in &WORKER_COUNTS {
+        let (wall_s, log, bytes) = run(workers, iterations);
+        match &reference {
+            None => reference = Some((log, bytes)),
+            Some((ref_log, ref_bytes)) => {
+                if !logs_bitwise_equal(ref_log, &log) || &bytes != ref_bytes {
+                    eprintln!(
+                        "REGRESSION: W={workers} diverged from the W=1 run \
+                         (metrics or final checkpoint not bitwise identical)"
+                    );
+                    std::process::exit(1);
+                }
+            }
+        }
+        let w1 = rows.first().map(|r: &Row| r.wall_s).unwrap_or(wall_s);
+        let row = Row {
+            workers,
+            wall_s,
+            iters_per_sec: iterations as f64 / wall_s,
+            episodes_per_sec: (iterations * c.batch) as f64 / wall_s,
+            speedup: w1 / wall_s,
+        };
+        println!(
+            "distributed W={workers}: {:>7.3} s  {:>6.2} iters/s  {:>7.1} episodes/s  \
+             speedup {:.2}x",
+            row.wall_s, row.iters_per_sec, row.episodes_per_sec, row.speedup
+        );
+        rows.push(row);
+    }
+
+    let w1 = rows[0].wall_s;
+    let w4 = rows.last().expect("W=4 row").wall_s;
+    write_json(&rows, &c, smoke).expect("writing BENCH_distributed.json");
+    println!("sweep written to BENCH_distributed.json");
+    if w4 >= w1 {
+        eprintln!(
+            "{}: W=4 ({w4:.3} s) did not beat W=1 ({w1:.3} s)",
+            if smoke { "REGRESSION" } else { "note" }
+        );
+        if smoke {
+            std::process::exit(1);
+        }
+    }
+}

@@ -200,9 +200,10 @@ fn write_sweep_json(points: &[SweepPoint], smoke: bool) -> std::io::Result<()> {
         ));
     }
     let text = format!(
-        "{{\n  \"bench\": \"native_sparse\",\n  \"mode\": \"{}\",\n  \"agents\": 8,\n  \
-         \"simd\": \"{}\",\n  \
+        "{{\n  \"bench\": \"native_sparse\",\n  \"build\": {},\n  \"mode\": \"{}\",\n  \
+         \"agents\": 8,\n  \"simd\": \"{}\",\n  \
          \"fwd_speedup_target_90\": {FWD_SPEEDUP_TARGET_90:.1},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        learning_group::util::buildinfo::build_info_json(),
         if smoke { "smoke" } else { "full" },
         SimdBackend::from_env().name(),
         rows
@@ -395,10 +396,11 @@ fn write_model_sweep_json(points: &[ModelPoint], smoke: bool) -> std::io::Result
         ));
     }
     let text = format!(
-        "{{\n  \"bench\": \"layer_plan\",\n  \"mode\": \"{}\",\n  \"agents\": 8,\n  \
-         \"groups\": 10,\n  \"simd\": \"{}\",\n  \
+        "{{\n  \"bench\": \"layer_plan\",\n  \"build\": {},\n  \"mode\": \"{}\",\n  \
+         \"agents\": 8,\n  \"groups\": 10,\n  \"simd\": \"{}\",\n  \
          \"gate\": \"wide: sparse >= dense at ~90% sparsity\",\n  \
          \"rows\": [\n{}\n  ]\n}}\n",
+        learning_group::util::buildinfo::build_info_json(),
         if smoke { "smoke" } else { "full" },
         SimdBackend::from_env().name(),
         rows

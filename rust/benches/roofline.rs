@@ -201,10 +201,12 @@ fn write_json(rows: &[StageRow], backend: SimdBackend, smoke: bool) -> std::io::
         ));
     }
     let text = format!(
-        "{{\n  \"bench\": \"roofline\",\n  \"mode\": \"{}\",\n  \"backend\": \"{}\",\n  \
+        "{{\n  \"bench\": \"roofline\",\n  \"build\": {},\n  \"mode\": \"{}\",\n  \
+         \"backend\": \"{}\",\n  \
          \"lanes\": {},\n  \"block_rows\": {},\n  \
          \"gate\": \"smoke: dense_fwd speedup >= 2x on the widest paper layer\",\n  \
          \"rows\": [\n{}\n  ]\n}}\n",
+        learning_group::util::buildinfo::build_info_json(),
         if smoke { "smoke" } else { "full" },
         backend.name(),
         LANES,

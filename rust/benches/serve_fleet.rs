@@ -67,12 +67,13 @@ fn write_json(
         hist_text.push_str(&format!("{{\"block\": {block}, \"calls\": {calls}}}"));
     }
     let text = format!(
-        "{{\n  \"bench\": \"serve_fleet\",\n  \"mode\": \"{}\",\n  \"env\": \"{}\",\n  \
+        "{{\n  \"bench\": \"serve_fleet\",\n  \"build\": {},\n  \"mode\": \"{}\",\n  \"env\": \"{}\",\n  \
          \"agents\": {},\n  \"exec\": \"sparse\",\n  \"density\": {:.6},\n  \
          \"checkpoint_iteration\": {},\n  \"replicas\": {REPLICAS},\n  \
          \"max_batch\": {MAX_BATCH},\n  \"offline_steps_per_sec\": {:.3},\n  \
          \"saturation_concurrency\": {saturation},\n  \"peak_steps_per_sec\": {peak:.3},\n  \
          \"batch_hist\": [{hist_text}],\n  \"rows\": [\n{row_text}\n  ]\n}}\n",
+        learning_group::util::buildinfo::build_info_json(),
         if smoke { "smoke" } else { "full" },
         offline.env,
         offline.agents,

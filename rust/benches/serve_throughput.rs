@@ -66,11 +66,12 @@ fn write_json(rows: &[EvalReport], scaling: f64, note: &str, smoke: bool) -> std
     }
     let first = rows.first().expect("at least one row");
     let text = format!(
-        "{{\n  \"bench\": \"serve_throughput\",\n  \"mode\": \"{}\",\n  \"env\": \"{}\",\n  \
+        "{{\n  \"bench\": \"serve_throughput\",\n  \"build\": {},\n  \"mode\": \"{}\",\n  \"env\": \"{}\",\n  \
          \"agents\": {},\n  \"exec\": \"sparse\",\n  \"density\": {:.6},\n  \
          \"checkpoint_iteration\": {},\n  \"scaling_r1_to_r4\": {:.3},\n  \
          \"scaling_target\": {SCALING_TARGET:.1},\n  \"scaling_note\": \"{}\",\n  \
          \"rows\": [\n{}\n  ]\n}}\n",
+        learning_group::util::buildinfo::build_info_json(),
         if smoke { "smoke" } else { "full" },
         first.env,
         first.agents,

@@ -50,7 +50,7 @@
 //! mismatch — a flipped bit inside a mask cannot slip through even if
 //! it survived the CRC.
 
-pub(crate) mod bytes;
+pub mod bytes;
 
 use std::path::Path;
 
@@ -337,6 +337,71 @@ impl MaskStore {
         Ok(Some((encodings, keys)))
     }
 
+    /// Serialise the mask section (tag byte + payload) into `w` — the
+    /// exact byte layout the checkpoint file uses, shared with the
+    /// distributed mask broadcast (`dist::proto`), which ships masks in
+    /// OSEL form instead of dense vectors.
+    pub fn write_to(&self, w: &mut ByteWriter) {
+        match self {
+            MaskStore::DenseBits { len, words } => {
+                w.put_u8(0);
+                w.put_u64(*len);
+                w.put_u64_slice(words);
+            }
+            MaskStore::Osel(layers) => {
+                w.put_u8(1);
+                w.put_u32(layers.len() as u32);
+                for l in layers {
+                    w.put_u32(l.rows);
+                    w.put_u32(l.cols);
+                    w.put_u32(l.groups);
+                    w.put_u16_slice(&l.ig);
+                    w.put_u16_slice(&l.og);
+                    w.put_u16(l.tuples.len() as u16);
+                    for (mi, words) in &l.tuples {
+                        w.put_u16(*mi);
+                        w.put_u64_slice(words);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Decode the mask section written by [`MaskStore::write_to`],
+    /// validating every OSEL layer (bitvector/argmax consistency).
+    pub fn read_from(r: &mut ByteReader<'_>) -> Result<Self> {
+        match r.u8()? {
+            0 => {
+                let len = r.u64()?;
+                let words = r.u64_vec()?;
+                Ok(MaskStore::DenseBits { len, words })
+            }
+            1 => {
+                let n_layers = r.u32()? as usize;
+                let mut layers = Vec::with_capacity(n_layers.min(1024));
+                for _ in 0..n_layers {
+                    let rows = r.u32()?;
+                    let cols = r.u32()?;
+                    let groups = r.u32()?;
+                    let ig = r.u16_vec()?;
+                    let og = r.u16_vec()?;
+                    let n_tuples = r.u16()? as usize;
+                    let mut tuples = Vec::with_capacity(n_tuples);
+                    for _ in 0..n_tuples {
+                        let mi = r.u16()?;
+                        let words = r.u64_vec()?;
+                        tuples.push((mi, words));
+                    }
+                    let layer = OselLayerStore { rows, cols, groups, ig, og, tuples };
+                    layer.decode().context("decoding OSEL mask layer")?;
+                    layers.push(layer);
+                }
+                Ok(MaskStore::Osel(layers))
+            }
+            other => Err(anyhow!("bad mask-store tag {other}")),
+        }
+    }
+
     /// On-disk size of the mask section payload in bytes (what the
     /// compression claim is measured on; the dense 0/1 baseline is one
     /// byte per weight).
@@ -423,29 +488,7 @@ impl Checkpoint {
         w.put_f32_slice(&self.params);
         w.put_f32_slice(&self.sq_avg);
         w.put_f32_slice(&self.dmask_accum);
-        match &self.masks {
-            MaskStore::DenseBits { len, words } => {
-                w.put_u8(0);
-                w.put_u64(*len);
-                w.put_u64_slice(words);
-            }
-            MaskStore::Osel(layers) => {
-                w.put_u8(1);
-                w.put_u32(layers.len() as u32);
-                for l in layers {
-                    w.put_u32(l.rows);
-                    w.put_u32(l.cols);
-                    w.put_u32(l.groups);
-                    w.put_u16_slice(&l.ig);
-                    w.put_u16_slice(&l.og);
-                    w.put_u16(l.tuples.len() as u16);
-                    for (mi, words) in &l.tuples {
-                        w.put_u16(*mi);
-                        w.put_u64_slice(words);
-                    }
-                }
-            }
-        }
+        self.masks.write_to(&mut w);
         match &self.pruner {
             PrunerStore::Stateless => w.put_u8(0),
             PrunerStore::Flgw { g, grouping, sq_avg } => {
@@ -533,36 +576,7 @@ impl Checkpoint {
         let params = r.f32_vec()?;
         let sq_avg = r.f32_vec()?;
         let dmask_accum = r.f32_vec()?;
-        let masks = match r.u8()? {
-            0 => {
-                let len = r.u64()?;
-                let words = r.u64_vec()?;
-                MaskStore::DenseBits { len, words }
-            }
-            1 => {
-                let n_layers = r.u32()? as usize;
-                let mut layers = Vec::with_capacity(n_layers.min(1024));
-                for _ in 0..n_layers {
-                    let rows = r.u32()?;
-                    let cols = r.u32()?;
-                    let groups = r.u32()?;
-                    let ig = r.u16_vec()?;
-                    let og = r.u16_vec()?;
-                    let n_tuples = r.u16()? as usize;
-                    let mut tuples = Vec::with_capacity(n_tuples);
-                    for _ in 0..n_tuples {
-                        let mi = r.u16()?;
-                        let words = r.u64_vec()?;
-                        tuples.push((mi, words));
-                    }
-                    let layer = OselLayerStore { rows, cols, groups, ig, og, tuples };
-                    layer.decode().context("decoding OSEL mask layer")?;
-                    layers.push(layer);
-                }
-                MaskStore::Osel(layers)
-            }
-            other => return Err(anyhow!("bad mask-store tag {other}")),
-        };
+        let masks = MaskStore::read_from(&mut r)?;
         let pruner = match r.u8()? {
             0 => PrunerStore::Stateless,
             1 => {

@@ -32,5 +32,5 @@ pub use config::{PrunerChoice, TrainConfig};
 pub use crate::runtime::ExecMode;
 pub use metrics::{IterationMetrics, MetricsLog, MetricsSink};
 pub use rollout::{collect_lockstep, collect_parallel, episode_seed, run_episode};
-pub use scheduler::{Stage, StageTimer};
-pub use trainer::{Pruner, Trainer};
+pub use scheduler::{DensitySchedule, Stage, StageTimer};
+pub use trainer::{EpisodeGrad, Pruner, ReducedBatch, Trainer};

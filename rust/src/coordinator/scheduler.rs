@@ -36,6 +36,71 @@ impl Stage {
     }
 }
 
+/// A warmup → anneal → hold density curve, the scheduler-level knob
+/// behind gradual pruning: hold `start` density for `warmup`
+/// iterations, anneal to `target` over the next `anneal` iterations,
+/// then hold `target` for the rest of training.
+///
+/// With `steps == 0` the anneal is continuous (a new density every
+/// iteration).  With `steps = N` it is a staircase of N plateaus — the
+/// shape hardware wants, because every density change invalidates the
+/// compressed sparse structures (OSEL encodings, the device mask
+/// upload), so fewer, chunkier drops mean fewer re-encodes.  Plateau
+/// boundaries are pure integer arithmetic on the iteration index, so
+/// the curve is exactly reproducible across runs and worker counts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DensitySchedule {
+    /// Density during warmup (usually 1.0 — train dense first).
+    pub start: f32,
+    /// Final density (e.g. `1/G` for G weight groups).
+    pub target: f32,
+    /// Iterations at `start` before the anneal begins.
+    pub warmup: usize,
+    /// Iterations the anneal spans; 0 jumps straight to `target`.
+    pub anneal: usize,
+    /// Plateau count over the anneal window; 0 = continuous.
+    pub steps: usize,
+}
+
+impl DensitySchedule {
+    /// The scheduled density at `iteration` (0-based).
+    pub fn density_at(&self, iteration: usize) -> f32 {
+        if iteration < self.warmup {
+            return self.start;
+        }
+        let t = iteration - self.warmup;
+        if self.anneal == 0 || t >= self.anneal {
+            return self.target;
+        }
+        let frac = if self.steps == 0 {
+            t as f32 / self.anneal as f32
+        } else {
+            // plateau k ∈ 1..=steps: the k-th drop lands at the start
+            // of its window, so the first anneal iteration already
+            // moves off `start` and the last plateau sits at `target`.
+            let k = (t * self.steps / self.anneal) + 1;
+            k.min(self.steps) as f32 / self.steps as f32
+        };
+        self.start + (self.target - self.start) * frac
+    }
+
+    /// Iteration indices (within the anneal window) where the density
+    /// changes — what a pruner wanting to re-encode only on plateau
+    /// boundaries iterates over.
+    pub fn change_points(&self) -> Vec<usize> {
+        let mut points = Vec::new();
+        let mut last = self.start;
+        for it in self.warmup..=self.warmup + self.anneal {
+            let d = self.density_at(it);
+            if d != last {
+                points.push(it);
+                last = d;
+            }
+        }
+        points
+    }
+}
+
 /// Accumulates wall time per stage.
 #[derive(Debug, Clone, Default)]
 pub struct StageTimer {
@@ -96,6 +161,85 @@ impl StageTimer {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn staircase() -> DensitySchedule {
+        DensitySchedule { start: 1.0, target: 0.25, warmup: 10, anneal: 40, steps: 4 }
+    }
+
+    #[test]
+    fn warmup_holds_start_then_anneal_reaches_target() {
+        let s = staircase();
+        for it in 0..10 {
+            assert_eq!(s.density_at(it), 1.0, "iteration {it} is warmup");
+        }
+        // the first anneal iteration already steps off `start`
+        assert!(s.density_at(10) < 1.0);
+        // the anneal endpoint and everything after hold the target
+        assert_eq!(s.density_at(50), 0.25);
+        assert_eq!(s.density_at(49), 0.25, "last plateau sits at target");
+        assert_eq!(s.density_at(10_000), 0.25);
+    }
+
+    #[test]
+    fn densities_are_monotone_nonincreasing() {
+        for steps in [0, 1, 3, 4, 7] {
+            let s = DensitySchedule { steps, ..staircase() };
+            let mut prev = s.density_at(0);
+            for it in 1..60 {
+                let d = s.density_at(it);
+                assert!(d <= prev, "steps={steps}: density rose at iteration {it}");
+                assert!((0.25..=1.0).contains(&d), "steps={steps}: density {d} out of range");
+                prev = d;
+            }
+        }
+    }
+
+    #[test]
+    fn staircase_has_exact_step_boundaries() {
+        let s = staircase();
+        // 4 plateaus over 40 iterations → drops at 10, 20, 30, 40... the
+        // last "drop" is absorbed by the hold (plateau 4 == target).
+        assert_eq!(s.change_points(), vec![10, 20, 30, 40]);
+        // plateaus are flat between boundaries
+        for (lo, d) in [(10, 0.8125), (20, 0.625), (30, 0.4375), (40, 0.25)] {
+            for it in lo..lo + 10 {
+                assert_eq!(s.density_at(it), d, "iteration {it}");
+            }
+        }
+        // plateau count == steps (distinct densities in the anneal window)
+        let mut seen: Vec<f32> = Vec::new();
+        for it in 10..50 {
+            let d = s.density_at(it);
+            if seen.last() != Some(&d) {
+                seen.push(d);
+            }
+        }
+        assert_eq!(seen.len(), s.steps);
+    }
+
+    #[test]
+    fn continuous_mode_interpolates_linearly() {
+        let s = DensitySchedule { steps: 0, ..staircase() };
+        assert_eq!(s.density_at(10), 1.0); // t = 0 of the anneal
+        let mid = s.density_at(30); // halfway: t = 20 of 40
+        assert!((mid - 0.625).abs() < 1e-6, "midpoint {mid}");
+        assert_eq!(s.density_at(50), 0.25);
+    }
+
+    #[test]
+    fn degenerate_windows_jump_to_target() {
+        let s = DensitySchedule { start: 1.0, target: 0.5, warmup: 0, anneal: 0, steps: 3 };
+        assert_eq!(s.density_at(0), 0.5);
+        let s = DensitySchedule { start: 1.0, target: 0.5, warmup: 5, anneal: 0, steps: 0 };
+        assert_eq!(s.density_at(4), 1.0);
+        assert_eq!(s.density_at(5), 0.5);
+        // start == target is a flat line whatever the windows
+        let s = DensitySchedule { start: 0.5, target: 0.5, warmup: 3, anneal: 9, steps: 2 };
+        for it in 0..20 {
+            assert_eq!(s.density_at(it), 0.5);
+        }
+        assert!(s.change_points().is_empty());
+    }
 
     #[test]
     fn accumulates_per_stage() {

@@ -102,6 +102,69 @@ impl Pruner {
     }
 }
 
+/// One episode's gradient contribution, as produced by
+/// [`Trainer::backward_episode`] — nothing accumulated yet, so the
+/// reduce phase owns the summation order.
+#[derive(Debug, Clone)]
+pub struct EpisodeGrad {
+    /// dL/dparams over the episode.
+    pub dparams: Vec<f32>,
+    /// dL/dmask over the episode (FLGW's training signal).
+    pub dmasks: Vec<f32>,
+    /// `[loss, policy_loss, value_loss, entropy]`.
+    pub stats: [f32; 4],
+}
+
+/// A minibatch's gradients after the reduce phase, ready for
+/// [`Trainer::apply_reduced`]: the big buffers are summed in the fixed
+/// tree order of [`crate::dist::reduce`], the scalars folded linearly
+/// in episode-index order.  Everything is still *unscaled* (sums, not
+/// means) — stage 4 applies the 1/B.
+#[derive(Debug, Clone)]
+pub struct ReducedBatch {
+    /// Tree-ordered sum of the episodes' dparams.
+    pub dparams: Vec<f32>,
+    /// Tree-ordered sum of the episodes' dmasks.
+    pub dmasks: Vec<f32>,
+    /// Linear (index-order) sum of the episodes' loss stats.
+    pub loss_stats: [f32; 4],
+    /// Mean total team reward over the minibatch.
+    pub mean_reward: f32,
+    /// Mean graded success over the minibatch.
+    pub success_rate: f32,
+}
+
+impl ReducedBatch {
+    /// Reduce a locally-computed minibatch (the `--workers 1` path):
+    /// tree-sum the per-episode buffers, fold the scalars in index
+    /// order.
+    pub fn from_episode_grads(grads: Vec<EpisodeGrad>, episodes: &[Episode]) -> Self {
+        let mut loss_stats = [0.0f32; 4];
+        let mut dparams_bufs = Vec::with_capacity(grads.len());
+        let mut dmasks_bufs = Vec::with_capacity(grads.len());
+        for g in grads {
+            for (a, s) in loss_stats.iter_mut().zip(&g.stats) {
+                *a += s;
+            }
+            dparams_bufs.push(g.dparams);
+            dmasks_bufs.push(g.dmasks);
+        }
+        let mean_reward = crate::util::mean(
+            &episodes.iter().map(|e| e.total_reward()).collect::<Vec<_>>(),
+        );
+        let success_rate = crate::util::mean(
+            &episodes.iter().map(|e| e.success_frac).collect::<Vec<_>>(),
+        );
+        ReducedBatch {
+            dparams: crate::dist::reduce::tree_sum(&mut dparams_bufs),
+            dmasks: crate::dist::reduce::tree_sum(&mut dmasks_bufs),
+            loss_stats,
+            mean_reward,
+            success_rate,
+        }
+    }
+}
+
 /// End-to-end trainer: owns the runtime, environment, model state and
 /// pruner; `train` runs the paper's four-stage loop.
 pub struct Trainer {
@@ -365,12 +428,7 @@ impl Trainer {
     /// grouping state, and the counters a bit-identical resume needs.
     pub fn checkpoint(&self) -> Result<Checkpoint> {
         let manifest = self.runtime.manifest();
-        let masks = match self.pruner.as_flgw() {
-            Some(f) if f.encodings.len() == manifest.masked_layers.len() => {
-                MaskStore::from_encodings(manifest, &f.encodings, f.layer_keys())?
-            }
-            _ => MaskStore::from_dense_masks(&self.state.masks),
-        };
+        let masks = self.mask_store()?;
         let pruner = match self.pruner.as_flgw() {
             Some(f) => PrunerStore::Flgw {
                 g: f.groups() as u32,
@@ -409,6 +467,26 @@ impl Trainer {
     /// 0 for a fresh run, the stored iteration count after a resume.
     pub fn start_iteration(&self) -> usize {
         self.start_iteration
+    }
+
+    /// Episodes rolled out so far — the cursor into the per-episode
+    /// seed stream.
+    pub fn episodes_done(&self) -> u64 {
+        self.episodes_done
+    }
+
+    /// The current masks in their compact stored form: OSEL per-layer
+    /// encodings when FLGW runs, packed dense bits otherwise.  This is
+    /// both what checkpoints persist and what the distributed
+    /// coordinator broadcasts after a mask regeneration.
+    pub fn mask_store(&self) -> Result<MaskStore> {
+        let manifest = self.runtime.manifest();
+        Ok(match self.pruner.as_flgw() {
+            Some(f) if f.encodings.len() == manifest.masked_layers.len() => {
+                MaskStore::from_encodings(manifest, &f.encodings, f.layer_keys())?
+            }
+            _ => MaskStore::from_dense_masks(&self.state.masks),
+        })
     }
 
     /// The manifest the runtime was built over.
@@ -483,9 +561,11 @@ impl Trainer {
         )
     }
 
-    /// Run the backward artifact for one episode; returns (dparams, loss
-    /// stats), accumulating dmasks internally.
-    fn backward(&mut self, episode: &Episode) -> Result<(Vec<f32>, [f32; 4])> {
+    /// Run the backward artifact for one episode; returns the episode's
+    /// full gradient contribution (dparams, dmasks, loss stats) without
+    /// accumulating anything — accumulation order is the reduce phase's
+    /// contract (see [`crate::dist::reduce`]).
+    pub fn backward_episode(&mut self, episode: &Episode) -> Result<EpisodeGrad> {
         let returns = discounted_returns(&episode.rewards, self.cfg.gamma);
         self.device_state()?;
         let (obs_t, act_t, gate_t, ret_t) = (
@@ -502,53 +582,69 @@ impl Trainer {
             Arg::Host(&gate_t),
             Arg::Host(&ret_t),
         ])?;
-        let dparams = outs[0].as_f32()?.to_vec();
-        for (acc, d) in self.dmask_accum.iter_mut().zip(outs[1].as_f32()?) {
-            *acc += d;
-        }
-        let stats = [
-            outs[2].scalar_f32()?,
-            outs[3].scalar_f32()?,
-            outs[4].scalar_f32()?,
-            outs[5].scalar_f32()?,
-        ];
-        Ok((dparams, stats))
+        Ok(EpisodeGrad {
+            dparams: outs[0].as_f32()?.to_vec(),
+            dmasks: outs[1].as_f32()?.to_vec(),
+            stats: [
+                outs[2].scalar_f32()?,
+                outs[3].scalar_f32()?,
+                outs[4].scalar_f32()?,
+                outs[5].scalar_f32()?,
+            ],
+        })
     }
 
-    /// One full training iteration (the four stages).  Returns metrics.
-    pub fn run_iteration(&mut self, iteration: usize) -> Result<IterationMetrics> {
-        let start = std::time::Instant::now();
-        let total_iterations = self.cfg.iterations;
-
-        // -------- stage 1: weight grouping / mask regeneration
-        {
-            let dmasks = std::mem::take(&mut self.dmask_accum);
-            let manifest = self.runtime.manifest().clone();
-            let ctx = PruneContext {
-                manifest: &manifest,
-                iteration,
-                total_iterations,
-                dmasks: &dmasks,
-            };
-            let state = &mut self.state;
-            let pruner = &mut self.pruner;
-            self.timer
-                .time(Stage::WeightGrouping, || pruner.update_masks(state, &ctx))?;
-            self.dmask_accum = dmasks;
-            // Invalidate the device masks only when they actually
-            // changed — a no-op regeneration (FLGW with stable argmax
-            // signatures, the primed dense baseline) keeps the uploaded
-            // masks and the sparse structure attached to them valid.
-            if self.pruner.masks_changed() {
-                self.masks_dev = None; // masks changed: re-upload lazily
-            }
+    /// Stage 1: weight grouping / mask regeneration over the previous
+    /// iteration's dmask accumulator.  Returns whether the masks
+    /// actually changed (the distributed coordinator broadcasts the new
+    /// store exactly then).
+    pub fn regroup(&mut self, iteration: usize) -> Result<bool> {
+        let dmasks = std::mem::take(&mut self.dmask_accum);
+        let manifest = self.runtime.manifest().clone();
+        let ctx = PruneContext {
+            manifest: &manifest,
+            iteration,
+            total_iterations: self.cfg.iterations,
+            dmasks: &dmasks,
+        };
+        let state = &mut self.state;
+        let pruner = &mut self.pruner;
+        self.timer
+            .time(Stage::WeightGrouping, || pruner.update_masks(state, &ctx))?;
+        self.dmask_accum = dmasks;
+        // Invalidate the device masks only when they actually
+        // changed — a no-op regeneration (FLGW with stable argmax
+        // signatures, the primed dense baseline) keeps the uploaded
+        // masks and the sparse structure attached to them valid.
+        let changed = self.pruner.masks_changed();
+        if changed {
+            self.masks_dev = None; // masks changed: re-upload lazily
         }
+        Ok(changed)
+    }
 
-        // -------- stage 2: forward (B rollouts, parallel when asked)
-        let dims = self.runtime.manifest().dims.clone();
-        let seeds: Vec<u64> = (0..self.cfg.batch)
+    /// The per-episode seed slice of the next minibatch (episode index →
+    /// PCG32 stream; the same function of `(master seed, episode index)`
+    /// whatever process rolls the episode out).
+    pub fn iteration_seeds(&self) -> Vec<u64> {
+        (0..self.cfg.batch)
             .map(|b| rollout::episode_seed(self.cfg.seed, self.episodes_done + b as u64))
-            .collect();
+            .collect()
+    }
+
+    /// Advance the global episode counter by one minibatch — rank 0
+    /// calls this instead of [`Trainer::collect_batch`] when workers
+    /// own the rollouts (the counter is the seed-stream cursor, so it
+    /// must advance identically either way).
+    pub fn note_minibatch_dispatched(&mut self) {
+        self.episodes_done += self.cfg.batch as u64;
+    }
+
+    /// Stage 2: collect the minibatch locally (B rollouts, parallel or
+    /// lockstep per config) and advance the episode counter.
+    pub fn collect_batch(&mut self) -> Result<Vec<Episode>> {
+        let dims = self.runtime.manifest().dims.clone();
+        let seeds = self.iteration_seeds();
         self.device_state()?;
         let t0 = std::time::Instant::now();
         // Three interchangeable drivers, one determinism contract: the
@@ -577,34 +673,93 @@ impl Trainer {
             )?,
         };
         self.timer.add(Stage::Forward, t0.elapsed());
-        self.episodes_done += self.cfg.batch as u64;
+        self.note_minibatch_dispatched();
+        Ok(episodes)
+    }
 
-        // -------- stage 3: backward (grad accumulation)
-        self.dmask_accum.iter_mut().for_each(|x| *x = 0.0);
-        let mut grad_accum = vec![0.0f32; self.state.params.len()];
-        let mut loss_stats = [0.0f32; 4];
-        for ep in &episodes {
-            let t0 = std::time::Instant::now();
-            let (dparams, stats) = self.backward(ep)?;
-            self.timer.add(Stage::Backward, t0.elapsed());
-            for (a, g) in grad_accum.iter_mut().zip(&dparams) {
-                *a += g;
-            }
-            for (a, s) in loss_stats.iter_mut().zip(&stats) {
-                *a += s;
-            }
+    /// Install a rank-0 `Sync` broadcast (dist worker side): the
+    /// post-update params, plus — when stage 1 regenerated them — the
+    /// masks in stored form.  OSEL stores restore FLGW's encode cache
+    /// too, so the worker's `SparseModel` is rebuilt from the exact
+    /// encodings rank 0 computed, never from a dense scan.
+    pub fn install_sync(&mut self, params: Vec<f32>, masks: Option<&MaskStore>) -> Result<()> {
+        if params.len() != self.state.params.len() {
+            return Err(anyhow!(
+                "sync params length {} != model params length {}",
+                params.len(),
+                self.state.params.len()
+            ));
         }
+        self.state.params = params;
+        self.params_dev = None;
+        if let Some(store) = masks {
+            let manifest = self.runtime.manifest().clone();
+            self.state.masks = store.materialize(&manifest)?;
+            if let (Some((encodings, keys)), true) =
+                (store.encodings()?, self.pruner.as_flgw().is_some())
+            {
+                let flgw = self.pruner.as_flgw_mut().expect("checked above");
+                flgw.restore_encodings(encodings, keys)?;
+            }
+            self.masks_dev = None;
+        }
+        Ok(())
+    }
+
+    /// Roll out episodes for an explicit seed slice on the per-episode
+    /// parallel driver (dist worker side: the shard's seeds come from
+    /// rank 0's episode counter, not this trainer's).  Does not touch
+    /// the episode counter.
+    pub fn collect_episodes(&mut self, seeds: &[u64]) -> Result<Vec<Episode>> {
+        let dims = self.runtime.manifest().dims.clone();
+        self.device_state()?;
+        let t0 = std::time::Instant::now();
+        let episodes = rollout::collect_parallel(
+            &self.exe_fwd,
+            self.params_dev.as_ref().expect("device state refreshed"),
+            self.masks_dev.as_ref().expect("device state refreshed"),
+            &dims,
+            &self.cfg.env,
+            seeds,
+            self.cfg.rollouts,
+        )?;
+        self.timer.add(Stage::Forward, t0.elapsed());
+        Ok(episodes)
+    }
+
+    /// Stage 4 + metrics: scale the reduced sums by 1/B, run the
+    /// optimizer + FLGW grouping kernels, and assemble the iteration
+    /// record.  `red` carries the minibatch's gradient sums in the tree
+    /// order and its scalar stats already folded in episode-index order
+    /// — whoever produced them (the local loop or W remote shards), the
+    /// numbers entering this stage are bitwise identical.
+    pub fn apply_reduced(
+        &mut self,
+        iteration: usize,
+        red: ReducedBatch,
+        start: std::time::Instant,
+    ) -> Result<IterationMetrics> {
+        let ReducedBatch { mut dparams, mut dmasks, mut loss_stats, mean_reward, success_rate } =
+            red;
         let inv_b = 1.0 / self.cfg.batch as f32;
-        grad_accum.iter_mut().for_each(|g| *g *= inv_b);
-        self.dmask_accum.iter_mut().for_each(|g| *g *= inv_b);
+        dparams.iter_mut().for_each(|g| *g *= inv_b);
+        dmasks.iter_mut().for_each(|g| *g *= inv_b);
         loss_stats.iter_mut().for_each(|s| *s *= inv_b);
+        if dmasks.len() != self.dmask_accum.len() {
+            return Err(anyhow!(
+                "reduced dmasks length {} != mask accumulator length {}",
+                dmasks.len(),
+                self.dmask_accum.len()
+            ));
+        }
+        self.dmask_accum = dmasks;
 
         // -------- stage 4: weight update (+ FLGW grouping update)
         {
             let t0 = std::time::Instant::now();
             let outs = self.exe_update.run(&[
                 HostTensor::F32(std::mem::take(&mut self.state.params)),
-                HostTensor::F32(grad_accum),
+                HostTensor::F32(dparams),
                 HostTensor::F32(std::mem::take(&mut self.state.sq_avg)),
             ])?;
             self.state.params = outs[0].as_f32()?.to_vec();
@@ -623,12 +778,6 @@ impl Trainer {
             self.timer.add(Stage::WeightUpdate, t0.elapsed());
         }
 
-        let success_frac = crate::util::mean(
-            &episodes.iter().map(|e| e.success_frac).collect::<Vec<_>>(),
-        );
-        let mean_reward = crate::util::mean(
-            &episodes.iter().map(|e| e.total_reward()).collect::<Vec<_>>(),
-        );
         self.iterations_done = iteration as u64 + 1;
         let [pol, val, ent, _] = [loss_stats[1], loss_stats[2], loss_stats[3], 0.0];
         Ok(IterationMetrics {
@@ -638,10 +787,37 @@ impl Trainer {
             value_loss: val,
             entropy: ent,
             mean_reward,
-            success_rate: success_frac,
+            success_rate,
             sparsity: 1.0 - self.state.mask_density(),
             wall_s: start.elapsed().as_secs_f64(),
         })
+    }
+
+    /// One full training iteration (the four stages).  Returns metrics.
+    ///
+    /// The gradient accumulation over episodes uses the fixed-order
+    /// binary tree of [`crate::dist::reduce`] — the same order the
+    /// distributed coordinator reconstructs from worker shards — so
+    /// `--workers 1` (this path) and `--workers W` are bitwise
+    /// identical.
+    pub fn run_iteration(&mut self, iteration: usize) -> Result<IterationMetrics> {
+        let start = std::time::Instant::now();
+
+        // -------- stage 1: weight grouping / mask regeneration
+        self.regroup(iteration)?;
+
+        // -------- stage 2: forward (B rollouts, parallel when asked)
+        let episodes = self.collect_batch()?;
+
+        // -------- stage 3: backward, reduced in tree order
+        let mut grads = Vec::with_capacity(episodes.len());
+        for ep in &episodes {
+            let t0 = std::time::Instant::now();
+            grads.push(self.backward_episode(ep)?);
+            self.timer.add(Stage::Backward, t0.elapsed());
+        }
+        let red = ReducedBatch::from_episode_grads(grads, &episodes);
+        self.apply_reduced(iteration, red, start)
     }
 
     /// Train up to the configured total iteration count, starting from
@@ -651,6 +827,18 @@ impl Trainer {
     /// the end of the run; when [`TrainConfig::metrics_out`] is set,
     /// every iteration's metrics stream to it as a JSON line.
     pub fn train(&mut self) -> Result<MetricsLog> {
+        self.train_with(|t, it| t.run_iteration(it))
+    }
+
+    /// The training loop with the per-iteration step pluggable: `step`
+    /// is [`Trainer::run_iteration`] for the single-process path and
+    /// the distributed coordinator's broadcast/collect step for
+    /// `--workers W` — logging, the metrics sink and periodic
+    /// checkpointing are identical either way.
+    pub fn train_with(
+        &mut self,
+        mut step: impl FnMut(&mut Self, usize) -> Result<IterationMetrics>,
+    ) -> Result<MetricsLog> {
         let mut log = MetricsLog::default();
         // Fresh runs truncate the metrics sink; resumed runs append to
         // it — the interrupted run's lines are history worth keeping.
@@ -664,7 +852,7 @@ impl Trainer {
         let (start, total) = (self.start_iteration, self.cfg.iterations);
         let save_every = self.cfg.save_every;
         for it in start..total {
-            let m = self.run_iteration(it)?;
+            let m = step(self, it)?;
             if self.cfg.log_every > 0 && it % self.cfg.log_every == 0 {
                 eprintln!(
                     "[{:>5}] loss={:>8.4} reward={:>7.3} success={:>5.1}% sparsity={:>5.1}% ({:.0} ms)",

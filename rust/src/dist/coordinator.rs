@@ -1,0 +1,456 @@
+//! Rank 0 of a distributed run: socket lifecycle, worker spawning, the
+//! per-iteration broadcast/collect protocol, and the fault paths.
+//!
+//! The coordinator owns everything the single-process trainer owns —
+//! optimizer state, the FLGW pruner, metrics, checkpoints — and *only*
+//! delegates stage 2+3 (rollout + backward) to the workers.  Each
+//! iteration:
+//!
+//! 1. stage 1 (regroup) runs locally; if the masks changed, their OSEL
+//!    encoding rides the next broadcast;
+//! 2. `Sync{params, masks?}` goes to every worker; the shared episode
+//!    counter advances by `batch` exactly like the local path;
+//! 3. gradient shards are collected **in rank order** (= episode-index
+//!    order) and the per-shard partial sums are combined with the same
+//!    floor-midpoint tree the workers used internally, so the final sum
+//!    is bitwise the `--workers 1` sum;
+//! 4. stage 4 (scale, update, FLGW importance) runs locally via
+//!    [`Trainer::apply_reduced`].
+//!
+//! Fault handling is deliberately loud and fast: a worker that misses
+//! the per-iteration deadline, drops its connection, or reports an
+//! internal error turns into a named `dist: worker rank N ...` error on
+//! rank 0, and every child process is killed on the way out (the
+//! [`ChildGuard`] drop).  Workers conversely exit when their stream to
+//! rank 0 reports EOF, so neither side can hang the fleet.
+
+use std::net::TcpListener;
+use std::os::unix::net::UnixListener;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::{IterationMetrics, MetricsLog, ReducedBatch, Stage, Trainer};
+use crate::dist::proto::{
+    read_frame, write_frame, DistMsg, EpStat, FrameError, InitPayload, DIST_PROTO_VERSION,
+};
+use crate::dist::reduce::{shard_bounds, tree_sum, validate};
+use crate::serve::{ListenAddr, Stream};
+
+/// How the coordinator obtains its worker processes.
+#[derive(Debug, Clone)]
+pub enum SpawnMode {
+    /// Spawn `current_exe() worker --connect ... --rank r` children.
+    /// The production path behind `train --workers W`.
+    Spawn,
+    /// Spawn children from an explicit argv prefix (program + leading
+    /// args) — lets tests and benches point at `CARGO_BIN_EXE_*`.
+    SpawnWith(Vec<String>),
+    /// Spawn nothing; something else (test threads) connects the
+    /// workers to [`DistCoordinator::addr`].
+    External,
+}
+
+/// Options for a distributed training run.
+#[derive(Debug, Clone)]
+pub struct DistOptions {
+    /// Worker process count (power of two dividing the batch).
+    pub workers: usize,
+    /// Listen address; `None` picks a fresh unix socket in the temp
+    /// directory.
+    pub listen: Option<ListenAddr>,
+    /// Per-read deadline on worker traffic (handshake and shards).
+    pub timeout: Duration,
+    /// Worker process acquisition.
+    pub spawn: SpawnMode,
+}
+
+impl DistOptions {
+    pub fn new(workers: usize) -> Self {
+        DistOptions {
+            workers,
+            listen: None,
+            timeout: Duration::from_millis(30_000),
+            spawn: SpawnMode::Spawn,
+        }
+    }
+}
+
+enum DistListener {
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+/// Distinguishes concurrently bound coordinators within one process
+/// (the parity tests run several) in the default socket path.
+static SOCKET_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A bound, not-yet-started distributed coordinator.  Bind first, so
+/// callers (and spawned children) know the resolved address before the
+/// training loop begins.
+pub struct DistCoordinator {
+    opts: DistOptions,
+    listener: DistListener,
+    addr: ListenAddr,
+    /// Unix socket file to unlink on drop (owned by us iff we bound it).
+    cleanup: Option<PathBuf>,
+}
+
+impl DistCoordinator {
+    /// Bind the listen socket (an ephemeral TCP port or a fresh unix
+    /// socket path is resolved here) without accepting anything yet.
+    pub fn bind(opts: DistOptions) -> Result<Self> {
+        let listen = match &opts.listen {
+            Some(a) => a.clone(),
+            None => {
+                let seq = SOCKET_SEQ.fetch_add(1, Ordering::Relaxed);
+                ListenAddr::Unix(std::env::temp_dir().join(format!(
+                    "lg-dist-{}-{seq}.sock",
+                    std::process::id()
+                )))
+            }
+        };
+        let listener = match &listen {
+            ListenAddr::Unix(path) => {
+                if path.exists() {
+                    std::fs::remove_file(path)
+                        .with_context(|| format!("removing stale socket {path:?}"))?;
+                }
+                let l = UnixListener::bind(path)
+                    .with_context(|| format!("binding dist unix socket {path:?}"))?;
+                l.set_nonblocking(true)?;
+                DistListener::Unix(l)
+            }
+            ListenAddr::Tcp(addr) => {
+                let l = TcpListener::bind(addr.as_str())
+                    .with_context(|| format!("binding dist tcp address {addr}"))?;
+                l.set_nonblocking(true)?;
+                DistListener::Tcp(l)
+            }
+        };
+        // resolve the actual address (an ephemeral :0 port in tests)
+        let addr = match &listener {
+            DistListener::Unix(_) => listen.clone(),
+            DistListener::Tcp(l) => ListenAddr::Tcp(l.local_addr()?.to_string()),
+        };
+        let cleanup = match &addr {
+            ListenAddr::Unix(p) => Some(p.clone()),
+            ListenAddr::Tcp(_) => None,
+        };
+        Ok(DistCoordinator { opts, listener, addr, cleanup })
+    }
+
+    /// The resolved listen address (what workers must connect to).
+    pub fn addr(&self) -> &ListenAddr {
+        &self.addr
+    }
+
+    /// Run the full training loop on `trainer`, delegating rollout +
+    /// backward to the worker fleet.  Consumes the coordinator: the
+    /// sockets die with the run.
+    pub fn train(mut self, trainer: &mut Trainer) -> Result<MetricsLog> {
+        validate(trainer.cfg.batch, self.opts.workers)?;
+        let mut guards = self.spawn_children()?;
+        let mut workers = self.handshake(trainer)?;
+        let result = trainer.train_with(|t, it| step(&mut workers, &self.opts, t, it));
+        if result.is_ok() {
+            // Clean shutdown: tell everyone, then reap the children.
+            for (rank, stream) in workers.iter_mut().enumerate() {
+                if let Err(e) = write_frame(stream, &DistMsg::Done) {
+                    eprintln!("dist: worker rank {rank}: sending done: {e}");
+                }
+            }
+            drop(workers);
+            for (rank, guard) in guards.iter_mut().enumerate() {
+                guard.reap(rank);
+            }
+        }
+        // On error the ChildGuard drops kill any stragglers.
+        result
+    }
+
+    fn spawn_children(&self) -> Result<Vec<ChildGuard>> {
+        let (program, prefix): (PathBuf, &[String]) = match &self.opts.spawn {
+            SpawnMode::External => return Ok(Vec::new()),
+            SpawnMode::Spawn => {
+                (std::env::current_exe().context("resolving current executable")?, &[])
+            }
+            SpawnMode::SpawnWith(argv) => {
+                let (head, tail) = argv
+                    .split_first()
+                    .ok_or_else(|| anyhow!("dist: empty spawn command"))?;
+                (PathBuf::from(head), tail)
+            }
+        };
+        let mut guards = Vec::with_capacity(self.opts.workers);
+        for rank in 0..self.opts.workers {
+            let child = Command::new(&program)
+                .args(prefix)
+                .arg("worker")
+                .arg("--connect")
+                .arg(self.addr.to_string())
+                .arg("--rank")
+                .arg(rank.to_string())
+                .stdin(Stdio::null())
+                .stdout(Stdio::null())
+                .stderr(Stdio::inherit())
+                .spawn()
+                .with_context(|| format!("dist: spawning worker rank {rank}"))?;
+            guards.push(ChildGuard { child: Some(child) });
+        }
+        Ok(guards)
+    }
+
+    /// Accept one connection per worker, read their `Hello`s, and send
+    /// each its `Init` (shard bounds + full checkpoint image).
+    fn handshake(&mut self, trainer: &Trainer) -> Result<Vec<Stream>> {
+        let w = self.opts.workers;
+        let deadline = Instant::now() + self.opts.timeout;
+        let mut by_rank: Vec<Option<Stream>> = (0..w).map(|_| None).collect();
+        let mut connected = 0usize;
+        while connected < w {
+            let mut stream = self.accept_until(deadline, connected)?;
+            stream.set_read_timeout(Some(self.opts.timeout))?;
+            let rank = match read_frame(&mut stream) {
+                Ok(DistMsg::Hello { rank, version }) => {
+                    if version != DIST_PROTO_VERSION {
+                        return Err(anyhow!(
+                            "dist: worker rank {rank} speaks protocol v{version}, \
+                             coordinator speaks v{DIST_PROTO_VERSION} (mixed binaries?)"
+                        ));
+                    }
+                    rank as usize
+                }
+                Ok(other) => return Err(anyhow!("dist: expected Hello, got {other:?}")),
+                Err(e) => return Err(anyhow!("dist: reading worker hello: {e}")),
+            };
+            if rank >= w {
+                return Err(anyhow!("dist: worker announced rank {rank}, have {w} shards"));
+            }
+            if by_rank[rank].is_some() {
+                return Err(anyhow!("dist: two workers announced rank {rank}"));
+            }
+            by_rank[rank] = Some(stream);
+            connected += 1;
+        }
+        let ckpt_bytes = trainer.checkpoint()?.to_bytes();
+        let mut workers = Vec::with_capacity(w);
+        for (rank, slot) in by_rank.into_iter().enumerate() {
+            let mut stream = slot.expect("all ranks connected");
+            let (lo, hi) = shard_bounds(trainer.cfg.batch, w, rank);
+            let init = DistMsg::Init(InitPayload {
+                workers: w as u32,
+                rank: rank as u32,
+                shard_lo: lo as u32,
+                shard_hi: hi as u32,
+                gamma: trainer.cfg.gamma,
+                exec: trainer.cfg.exec,
+                simd: trainer.cfg.simd.resolve().name().to_string(),
+                intra_threads: trainer.cfg.intra_threads as u32,
+                rollouts: trainer.cfg.rollouts as u32,
+                strict_accum: trainer.cfg.strict_accum,
+                checkpoint: ckpt_bytes.clone(),
+            });
+            write_frame(&mut stream, &init)
+                .map_err(|e| anyhow!("dist: worker rank {rank}: sending init: {e}"))?;
+            workers.push(stream);
+        }
+        Ok(workers)
+    }
+
+    /// Poll-accept one connection, failing with a named error at the
+    /// deadline.
+    fn accept_until(&self, deadline: Instant, have: usize) -> Result<Stream> {
+        loop {
+            let accepted = match &self.listener {
+                DistListener::Unix(l) => match l.accept() {
+                    Ok((s, _)) => Some(Stream::Unix(s)),
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => None,
+                    Err(e) => return Err(e).context("dist: accepting worker connection"),
+                },
+                DistListener::Tcp(l) => match l.accept() {
+                    Ok((s, _)) => {
+                        s.set_nodelay(true)?;
+                        Some(Stream::Tcp(s))
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => None,
+                    Err(e) => return Err(e).context("dist: accepting worker connection"),
+                },
+            };
+            if let Some(s) = accepted {
+                // listeners are non-blocking; the accepted stream must
+                // not be (reads use SO_RCVTIMEO deadlines instead).
+                s.set_nonblocking_off()?;
+                return Ok(s);
+            }
+            if Instant::now() >= deadline {
+                return Err(anyhow!(
+                    "dist: worker rank {have} timed out after {}ms connecting \
+                     (only {have} of {} workers showed up)",
+                    self.opts.timeout.as_millis(),
+                    self.opts.workers
+                ));
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+}
+
+impl Drop for DistCoordinator {
+    fn drop(&mut self) {
+        if let Some(path) = &self.cleanup {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// One distributed iteration: regroup locally, broadcast, collect
+/// shards in rank order, tree-combine, apply.
+fn step(
+    workers: &mut [Stream],
+    opts: &DistOptions,
+    t: &mut Trainer,
+    iteration: usize,
+) -> Result<IterationMetrics> {
+    let start = Instant::now();
+    let masks_changed = t.regroup(iteration)?;
+    let masks = if masks_changed { Some(t.mask_store()?) } else { None };
+    let sync = DistMsg::Sync {
+        iteration: iteration as u64,
+        episodes_done: t.episodes_done(),
+        params: t.state.params.clone(),
+        masks,
+    };
+    for (rank, stream) in workers.iter_mut().enumerate() {
+        write_frame(stream, &sync)
+            .map_err(|e| anyhow!("dist: worker rank {rank} disconnected (sync): {e}"))?;
+    }
+    t.note_minibatch_dispatched();
+
+    // Collect shards in rank order == episode-index order.  The wait is
+    // the distributed analogue of stage 2+3, charged to Forward (the
+    // workers time their own stages; rank 0 only sees the wall wait).
+    let wait0 = Instant::now();
+    let batch = t.cfg.batch;
+    let nparams = t.state.params.len();
+    let mut loss_stats = [0.0f32; 4];
+    let mut rewards = Vec::with_capacity(batch);
+    let mut successes = Vec::with_capacity(batch);
+    let mut dparams_parts = Vec::with_capacity(workers.len());
+    let mut dmasks_parts = Vec::with_capacity(workers.len());
+    for (rank, stream) in workers.iter_mut().enumerate() {
+        let (lo, hi) = shard_bounds(batch, opts.workers, rank);
+        let msg = read_frame(stream).map_err(|e| match e {
+            FrameError::Timeout => anyhow!(
+                "dist: worker rank {rank} timed out after {}ms waiting for its \
+                 gradient shard (iteration {iteration})",
+                opts.timeout.as_millis()
+            ),
+            FrameError::Eof => anyhow!(
+                "dist: worker rank {rank} disconnected before sending its gradient \
+                 shard (iteration {iteration})"
+            ),
+            other => anyhow!("dist: worker rank {rank}: reading gradient shard: {other}"),
+        })?;
+        let (w_rank, w_iter, stats, dparams, dmasks) = match msg {
+            DistMsg::GradShard { rank, iteration, stats, dparams, dmasks } => {
+                (rank, iteration, stats, dparams, dmasks)
+            }
+            DistMsg::WorkerAbort { rank, message } => {
+                return Err(anyhow!("dist: worker rank {rank} failed: {message}"))
+            }
+            other => {
+                return Err(anyhow!(
+                    "dist: worker rank {rank}: expected GradShard, got {other:?}"
+                ))
+            }
+        };
+        if w_rank as usize != rank || w_iter != iteration as u64 {
+            return Err(anyhow!(
+                "dist: worker rank {rank} answered out of step \
+                 (got rank {w_rank} iteration {w_iter}, expected iteration {iteration})"
+            ));
+        }
+        if stats.len() != hi - lo {
+            return Err(anyhow!(
+                "dist: worker rank {rank} sent {} episode stats for a {}-episode shard",
+                stats.len(),
+                hi - lo
+            ));
+        }
+        if dparams.len() != nparams {
+            return Err(anyhow!(
+                "dist: worker rank {rank} sent a {}-element dparams shard, model has {}",
+                dparams.len(),
+                nparams
+            ));
+        }
+        for EpStat { loss, reward, success_frac } in &stats {
+            for (a, s) in loss_stats.iter_mut().zip(loss) {
+                *a += s;
+            }
+            rewards.push(*reward);
+            successes.push(*success_frac);
+        }
+        dparams_parts.push(dparams);
+        dmasks_parts.push(dmasks);
+    }
+    t.timer.add(Stage::Forward, wait0.elapsed());
+
+    // The per-shard sums are exactly the tree's top-level partials, so
+    // combining them with the same recursion reproduces the full tree.
+    let red = ReducedBatch {
+        dparams: tree_sum(&mut dparams_parts),
+        dmasks: tree_sum(&mut dmasks_parts),
+        loss_stats,
+        mean_reward: crate::util::mean(&rewards),
+        success_rate: crate::util::mean(&successes),
+    };
+    t.apply_reduced(iteration, red, start)
+}
+
+trait NonblockingOff {
+    fn set_nonblocking_off(&self) -> std::io::Result<()>;
+}
+
+impl NonblockingOff for Stream {
+    fn set_nonblocking_off(&self) -> std::io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.set_nonblocking(false),
+            Stream::Tcp(s) => s.set_nonblocking(false),
+        }
+    }
+}
+
+/// A spawned worker process, killed on drop unless reaped first.
+struct ChildGuard {
+    child: Option<Child>,
+}
+
+impl ChildGuard {
+    /// Clean-shutdown path: wait for the child to exit on its own
+    /// (it just got `Done`).
+    fn reap(&mut self, rank: usize) {
+        if let Some(mut child) = self.child.take() {
+            match child.wait() {
+                Ok(status) if !status.success() => {
+                    eprintln!("dist: worker rank {rank} exited with {status}");
+                }
+                Ok(_) => {}
+                Err(e) => eprintln!("dist: worker rank {rank}: wait failed: {e}"),
+            }
+        }
+    }
+}
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        if let Some(mut child) = self.child.take() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}

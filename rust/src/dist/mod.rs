@@ -1,0 +1,40 @@
+//! Distributed data-parallel training.
+//!
+//! `train --workers W` splits each minibatch's episodes over W worker
+//! processes.  Three properties make the result *bitwise identical* to
+//! the single-process trainer, not merely statistically equivalent:
+//!
+//! 1. **Episode identity is global.**  Episode `b` of an iteration is
+//!    seeded from the master seed and its global index
+//!    (`episodes_done + b`), whichever process rolls it out — so the
+//!    trajectories themselves are shard-invariant (see
+//!    [`crate::coordinator::rollout::episode_seed`]).
+//! 2. **Summation order is a function of episode index only.**
+//!    Per-episode gradients are combined with a fixed floor-midpoint
+//!    binary tree over the episode index range ([`reduce`]).  With W a
+//!    power of two dividing the batch, the tree's top `log2(W)` levels
+//!    split exactly at shard boundaries: each worker computes the
+//!    subtree for its contiguous shard locally, and rank 0 combines the
+//!    W partial sums with the same recursion.  `--workers 1` uses the
+//!    identical tree, so changing W never reassociates a single float
+//!    addition.
+//! 3. **One process owns all stateful math.**  Rank 0 runs the
+//!    optimizer step and FLGW regrouping and broadcasts the results;
+//!    masks travel in their compact OSEL encoding (the checkpoint
+//!    codec, [`crate::checkpoint::MaskStore`]), so a mask broadcast
+//!    costs roughly density x rows x 16 bits instead of a dense
+//!    rows x cols bitmap per layer.
+//!
+//! The wire protocol ([`proto`]) is a length-prefixed tagged frame
+//! stream in the style of [`crate::serve::proto`], over unix or TCP
+//! sockets.  Faults fail fast with named `dist: worker rank N ...`
+//! errors (timeout, disconnect, worker-side abort) rather than hanging
+//! the fleet — see [`DistCoordinator`].
+
+mod coordinator;
+pub mod proto;
+pub mod reduce;
+mod worker;
+
+pub use coordinator::{DistCoordinator, DistOptions, SpawnMode};
+pub use worker::run_worker;

@@ -1,0 +1,489 @@
+//! Wire protocol of the distributed trainer — length-prefixed binary
+//! frames in the style of `serve/proto.rs`, carried over the same
+//! unix/TCP [`Stream`](crate::serve::ListenAddr) transports.
+//!
+//! Framing: a `u32` little-endian payload length, then the payload;
+//! payload byte 0 is the message tag, the rest is the body encoded with
+//! the checkpoint byte codec ([`ByteWriter`]/[`ByteReader`]).  Unlike
+//! the serving protocol (1 MiB frames of observations/actions), dist
+//! frames carry whole flat gradient buffers, so the ceiling here is
+//! [`DIST_MAX_FRAME`] = 256 MiB — still enforced *before* any
+//! allocation on the read side.
+//!
+//! Worker → rank 0 tags use the low range, rank 0 → worker tags the
+//! high range (mirroring the client/server split in `serve/proto.rs`):
+//!
+//! | tag  | message      | direction        |
+//! |------|--------------|------------------|
+//! | 0x01 | `Hello`      | worker → rank 0  |
+//! | 0x02 | `GradShard`  | worker → rank 0  |
+//! | 0x0E | `WorkerAbort`| worker → rank 0  |
+//! | 0x81 | `Init`       | rank 0 → worker  |
+//! | 0x82 | `Sync`       | rank 0 → worker  |
+//! | 0x83 | `Done`       | rank 0 → worker  |
+//!
+//! Masks ride in [`Sync`](DistMsg::Sync) as a [`MaskStore`] — the OSEL
+//! per-layer encoding when FLGW runs (a few hundred bytes), the packed
+//! bitvector fallback otherwise — written with the *same*
+//! `MaskStore::write_to`/`read_from` the `.lgcp` checkpoint format
+//! uses, so the broadcast never ships a dense f32 mask vector.
+
+use std::io::{Read, Write};
+
+use crate::checkpoint::bytes::{ByteReader, ByteWriter};
+use crate::checkpoint::MaskStore;
+use crate::runtime::ExecMode;
+
+/// Frame ceiling (bytes) — sized for flat f32 gradient buffers of the
+/// `wide` topology with headroom, enforced before allocation.
+pub const DIST_MAX_FRAME: usize = 1 << 28;
+
+/// Protocol version carried in `Hello`/`Init` (bump on wire changes).
+pub const DIST_PROTO_VERSION: u32 = 1;
+
+/// Per-episode scalar statistics a worker reports alongside its reduced
+/// gradient shard.  Rank 0 folds these linearly in episode-index order
+/// — exactly the order the single-process trainer uses — so the small
+/// aggregates (loss, reward means) stay bitwise W-invariant without
+/// going through the tree.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EpStat {
+    /// `[loss, policy_loss, value_loss, entropy]` from the backward pass.
+    pub loss: [f32; 4],
+    /// Total team reward of the episode.
+    pub reward: f32,
+    /// Graded success fraction of the episode.
+    pub success_frac: f32,
+}
+
+/// Everything a worker needs to reconstruct the training context,
+/// shipped once at startup.  The model/optimizer state arrives as the
+/// byte image of a [`crate::checkpoint::Checkpoint`] — the exact codec
+/// (and validation) a `--resume` uses.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InitPayload {
+    /// Total worker count W.
+    pub workers: u32,
+    /// This worker's rank in `0..W`.
+    pub rank: u32,
+    /// Shard start (inclusive), a local index into the minibatch.
+    pub shard_lo: u32,
+    /// Shard end (exclusive).
+    pub shard_hi: u32,
+    /// Return-discount factor (not part of the checkpoint header).
+    pub gamma: f32,
+    /// Kernel path (sparse OSEL vs dense-masked).
+    pub exec: ExecMode,
+    /// Resolved SIMD backend name (`scalar` / `avx2` / `neon`).
+    pub simd: String,
+    /// Sparse-kernel row fan-out threads.
+    pub intra_threads: u32,
+    /// Parallel rollout threads for the shard.
+    pub rollouts: u32,
+    /// Exact-order sparse accumulation flag.
+    pub strict_accum: bool,
+    /// Serialized checkpoint (params, masks, counters, env/model specs).
+    pub checkpoint: Vec<u8>,
+}
+
+/// One protocol message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DistMsg {
+    /// Worker announces itself after connecting.
+    Hello { rank: u32, version: u32 },
+    /// Worker's reduced gradient shard for one iteration: the tree-sum
+    /// of its episodes' dparams/dmasks plus per-episode stats in shard
+    /// order.
+    GradShard { rank: u32, iteration: u64, stats: Vec<EpStat>, dparams: Vec<f32>, dmasks: Vec<f32> },
+    /// Worker failed; `message` becomes part of rank 0's named error.
+    WorkerAbort { rank: u32, message: String },
+    /// Rank 0's startup payload.
+    Init(InitPayload),
+    /// Rank 0's per-iteration broadcast: the params after the last
+    /// optimizer step, plus the regenerated masks when (and only when)
+    /// stage 1 actually changed them.
+    Sync { iteration: u64, episodes_done: u64, params: Vec<f32>, masks: Option<MaskStore> },
+    /// Training finished; workers exit cleanly.
+    Done,
+}
+
+/// Framing/decoding errors, classified so the coordinator can turn a
+/// read timeout or a torn connection into its named fault errors.
+#[derive(Debug)]
+pub enum FrameError {
+    /// Clean EOF at a frame boundary (peer closed the socket).
+    Eof,
+    /// The transport read timed out (`set_read_timeout` elapsed).
+    Timeout,
+    /// Any other I/O failure.
+    Io(std::io::Error),
+    /// Frame length exceeds [`DIST_MAX_FRAME`].
+    Oversized(usize),
+    /// Tag/body decoding failure.
+    Malformed(String),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Eof => write!(f, "connection closed"),
+            FrameError::Timeout => write!(f, "read timed out"),
+            FrameError::Io(e) => write!(f, "i/o error: {e}"),
+            FrameError::Oversized(n) => {
+                write!(f, "frame of {n} bytes exceeds the {DIST_MAX_FRAME}-byte ceiling")
+            }
+            FrameError::Malformed(m) => write!(f, "malformed frame: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> Self {
+        match e.kind() {
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => FrameError::Timeout,
+            std::io::ErrorKind::UnexpectedEof => FrameError::Eof,
+            _ => FrameError::Io(e),
+        }
+    }
+}
+
+impl DistMsg {
+    /// Encode tag + body (no length prefix).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        match self {
+            DistMsg::Hello { rank, version } => {
+                w.put_u8(0x01);
+                w.put_u32(*rank);
+                w.put_u32(*version);
+            }
+            DistMsg::GradShard { rank, iteration, stats, dparams, dmasks } => {
+                w.put_u8(0x02);
+                w.put_u32(*rank);
+                w.put_u64(*iteration);
+                w.put_u32(stats.len() as u32);
+                for s in stats {
+                    for v in s.loss {
+                        w.put_f32(v);
+                    }
+                    w.put_f32(s.reward);
+                    w.put_f32(s.success_frac);
+                }
+                w.put_f32_slice(dparams);
+                w.put_f32_slice(dmasks);
+            }
+            DistMsg::WorkerAbort { rank, message } => {
+                w.put_u8(0x0E);
+                w.put_u32(*rank);
+                w.put_str(message);
+            }
+            DistMsg::Init(p) => {
+                w.put_u8(0x81);
+                w.put_u32(DIST_PROTO_VERSION);
+                w.put_u32(p.workers);
+                w.put_u32(p.rank);
+                w.put_u32(p.shard_lo);
+                w.put_u32(p.shard_hi);
+                w.put_f32(p.gamma);
+                w.put_u8(match p.exec {
+                    ExecMode::DenseMasked => 0,
+                    ExecMode::Sparse => 1,
+                });
+                w.put_str(&p.simd);
+                w.put_u32(p.intra_threads);
+                w.put_u32(p.rollouts);
+                w.put_u8(u8::from(p.strict_accum));
+                w.put_u32(p.checkpoint.len() as u32);
+                w.put_bytes(&p.checkpoint);
+            }
+            DistMsg::Sync { iteration, episodes_done, params, masks } => {
+                w.put_u8(0x82);
+                w.put_u64(*iteration);
+                w.put_u64(*episodes_done);
+                w.put_f32_slice(params);
+                match masks {
+                    None => w.put_u8(0),
+                    Some(store) => {
+                        w.put_u8(1);
+                        store.write_to(&mut w);
+                    }
+                }
+            }
+            DistMsg::Done => w.put_u8(0x83),
+        }
+        w.into_inner()
+    }
+
+    /// Decode one tag + body payload (the full frame body, trailing
+    /// bytes rejected).
+    pub fn decode(payload: &[u8]) -> Result<DistMsg, FrameError> {
+        let mal = |m: String| FrameError::Malformed(m);
+        if payload.is_empty() {
+            return Err(mal("empty frame".into()));
+        }
+        let mut r = ByteReader::new(&payload[1..]);
+        let msg = match payload[0] {
+            0x01 => DistMsg::Hello {
+                rank: de_u32(&mut r)?,
+                version: de_u32(&mut r)?,
+            },
+            0x02 => {
+                let rank = de_u32(&mut r)?;
+                let iteration = de_u64(&mut r)?;
+                let n = de_u32(&mut r)? as usize;
+                if n > 1 << 20 {
+                    return Err(mal(format!("implausible episode count {n}")));
+                }
+                let mut stats = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let mut loss = [0.0f32; 4];
+                    for v in &mut loss {
+                        *v = de_f32(&mut r)?;
+                    }
+                    stats.push(EpStat {
+                        loss,
+                        reward: de_f32(&mut r)?,
+                        success_frac: de_f32(&mut r)?,
+                    });
+                }
+                let dparams = de_f32s(&mut r)?;
+                let dmasks = de_f32s(&mut r)?;
+                DistMsg::GradShard { rank, iteration, stats, dparams, dmasks }
+            }
+            0x0E => DistMsg::WorkerAbort {
+                rank: de_u32(&mut r)?,
+                message: r.str().map_err(|e| mal(format!("abort message: {e}")))?,
+            },
+            0x81 => {
+                let version = de_u32(&mut r)?;
+                if version != DIST_PROTO_VERSION {
+                    return Err(mal(format!(
+                        "dist protocol version {version} != {DIST_PROTO_VERSION} \
+                         (mixed binaries across ranks?)"
+                    )));
+                }
+                let workers = de_u32(&mut r)?;
+                let rank = de_u32(&mut r)?;
+                let shard_lo = de_u32(&mut r)?;
+                let shard_hi = de_u32(&mut r)?;
+                let gamma = de_f32(&mut r)?;
+                let exec = match de_u8(&mut r)? {
+                    0 => ExecMode::DenseMasked,
+                    1 => ExecMode::Sparse,
+                    other => return Err(mal(format!("bad exec-mode tag {other}"))),
+                };
+                let simd = r.str().map_err(|e| mal(format!("simd name: {e}")))?;
+                let intra_threads = de_u32(&mut r)?;
+                let rollouts = de_u32(&mut r)?;
+                let strict_accum = de_u8(&mut r)? != 0;
+                let ckpt_len = de_u32(&mut r)? as usize;
+                if ckpt_len > r.remaining() {
+                    return Err(mal(format!(
+                        "checkpoint length {ckpt_len} exceeds the {} remaining frame bytes",
+                        r.remaining()
+                    )));
+                }
+                let checkpoint = r
+                    .take(ckpt_len)
+                    .map_err(|e| mal(format!("checkpoint bytes: {e}")))?
+                    .to_vec();
+                DistMsg::Init(InitPayload {
+                    workers,
+                    rank,
+                    shard_lo,
+                    shard_hi,
+                    gamma,
+                    exec,
+                    simd,
+                    intra_threads,
+                    rollouts,
+                    strict_accum,
+                    checkpoint,
+                })
+            }
+            0x82 => {
+                let iteration = de_u64(&mut r)?;
+                let episodes_done = de_u64(&mut r)?;
+                let params = de_f32s(&mut r)?;
+                let masks = match de_u8(&mut r)? {
+                    0 => None,
+                    1 => Some(
+                        MaskStore::read_from(&mut r)
+                            .map_err(|e| mal(format!("mask store: {e:#}")))?,
+                    ),
+                    other => return Err(mal(format!("bad mask-presence tag {other}"))),
+                };
+                DistMsg::Sync { iteration, episodes_done, params, masks }
+            }
+            0x83 => DistMsg::Done,
+            other => return Err(mal(format!("unknown dist tag 0x{other:02x}"))),
+        };
+        if r.remaining() != 0 {
+            return Err(mal(format!("{} trailing bytes after message body", r.remaining())));
+        }
+        Ok(msg)
+    }
+}
+
+fn de_u8(r: &mut ByteReader<'_>) -> Result<u8, FrameError> {
+    r.u8().map_err(|e| FrameError::Malformed(format!("{e}")))
+}
+
+fn de_u32(r: &mut ByteReader<'_>) -> Result<u32, FrameError> {
+    r.u32().map_err(|e| FrameError::Malformed(format!("{e}")))
+}
+
+fn de_u64(r: &mut ByteReader<'_>) -> Result<u64, FrameError> {
+    r.u64().map_err(|e| FrameError::Malformed(format!("{e}")))
+}
+
+fn de_f32(r: &mut ByteReader<'_>) -> Result<f32, FrameError> {
+    r.f32().map_err(|e| FrameError::Malformed(format!("{e}")))
+}
+
+fn de_f32s(r: &mut ByteReader<'_>) -> Result<Vec<f32>, FrameError> {
+    r.f32_vec().map_err(|e| FrameError::Malformed(format!("{e}")))
+}
+
+/// Write one length-prefixed frame and flush.
+pub fn write_frame(w: &mut impl Write, msg: &DistMsg) -> Result<(), FrameError> {
+    let payload = msg.encode();
+    debug_assert!(payload.len() <= DIST_MAX_FRAME, "oversized outbound dist frame");
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame.  EOF *at* the length prefix is a clean
+/// [`FrameError::Eof`]; EOF inside a frame is malformed truncation.
+pub fn read_frame(r: &mut impl Read) -> Result<DistMsg, FrameError> {
+    let mut len_buf = [0u8; 4];
+    read_exact_classified(r, &mut len_buf, true)?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > DIST_MAX_FRAME {
+        return Err(FrameError::Oversized(len));
+    }
+    let mut payload = vec![0u8; len];
+    read_exact_classified(r, &mut payload, false)?;
+    DistMsg::decode(&payload)
+}
+
+/// `read_exact` that distinguishes a clean close (EOF before any byte
+/// of a frame boundary read) from mid-frame truncation.
+fn read_exact_classified(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    at_boundary: bool,
+) -> Result<(), FrameError> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(if at_boundary && filled == 0 {
+                    FrameError::Eof
+                } else {
+                    FrameError::Malformed(format!(
+                        "truncated frame: EOF after {filled} of {} bytes",
+                        buf.len()
+                    ))
+                });
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: DistMsg) {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg).unwrap();
+        let got = read_frame(&mut buf.as_slice()).unwrap();
+        assert_eq!(got, msg);
+    }
+
+    #[test]
+    fn frames_roundtrip() {
+        roundtrip(DistMsg::Hello { rank: 3, version: DIST_PROTO_VERSION });
+        roundtrip(DistMsg::Done);
+        roundtrip(DistMsg::WorkerAbort { rank: 1, message: "rollout failed".into() });
+        roundtrip(DistMsg::GradShard {
+            rank: 2,
+            iteration: 41,
+            stats: vec![EpStat {
+                loss: [1.0, 2.0, 3.0, 4.0],
+                reward: -0.5,
+                success_frac: 1.0,
+            }],
+            dparams: vec![0.25, -1.0, 3.5],
+            dmasks: vec![0.0, 1.0],
+        });
+        roundtrip(DistMsg::Init(InitPayload {
+            workers: 4,
+            rank: 2,
+            shard_lo: 4,
+            shard_hi: 6,
+            gamma: 0.99,
+            exec: ExecMode::Sparse,
+            simd: "scalar".into(),
+            intra_threads: 2,
+            rollouts: 1,
+            strict_accum: true,
+            checkpoint: vec![1, 2, 3, 4, 5],
+        }));
+        roundtrip(DistMsg::Sync {
+            iteration: 7,
+            episodes_done: 28,
+            params: vec![0.5; 9],
+            masks: None,
+        });
+        roundtrip(DistMsg::Sync {
+            iteration: 8,
+            episodes_done: 32,
+            params: vec![-2.0; 3],
+            masks: Some(MaskStore::from_dense_masks(&[1.0, 0.0, 1.0, 1.0])),
+        });
+    }
+
+    #[test]
+    fn eof_at_boundary_vs_truncation() {
+        let empty: &[u8] = &[];
+        assert!(matches!(read_frame(&mut { empty }), Err(FrameError::Eof)));
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &DistMsg::Done).unwrap();
+        buf.truncate(buf.len() - 1);
+        // Done is 1 byte; truncating eats into the payload
+        match read_frame(&mut buf.as_slice()) {
+            Err(FrameError::Malformed(m)) => assert!(m.contains("truncated"), "{m}"),
+            other => panic!("expected truncation, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_frames_rejected_before_allocation() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(DIST_MAX_FRAME as u32 + 1).to_le_bytes());
+        match read_frame(&mut buf.as_slice()) {
+            Err(FrameError::Oversized(n)) => assert_eq!(n, DIST_MAX_FRAME + 1),
+            other => panic!("expected oversized, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut payload = DistMsg::Done.encode();
+        payload.push(0xAA);
+        match DistMsg::decode(&payload) {
+            Err(FrameError::Malformed(m)) => assert!(m.contains("trailing"), "{m}"),
+            other => panic!("expected trailing-byte rejection, got {other:?}"),
+        }
+    }
+}

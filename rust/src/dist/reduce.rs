@@ -1,0 +1,176 @@
+//! The fixed-order binary tree reduce — the numerical contract that
+//! makes distributed training bitwise reproducible at any worker count.
+//!
+//! f32 addition is not associative, so "sum the per-episode gradients"
+//! is only well-defined once the *order* of the additions is pinned.
+//! This module pins it to a binary tree over the episode index range:
+//! `[lo, hi)` splits at `lo + (hi - lo) / 2`, recursively, and every
+//! internal node adds its left subtree's sum to its right subtree's sum
+//! element-wise.  The tree shape is a function of the range length
+//! alone — it never mentions the worker count — so the reduction order
+//! is a function of episode index only.
+//!
+//! Shard alignment: worker `r` of `W` owns the contiguous episode range
+//! `[r·B/W, (r+1)·B/W)`.  With `W` a power of two dividing `B`, the top
+//! `log2(W)` levels of the tree split exactly at those shard
+//! boundaries, so each worker can reduce its own shard locally (the
+//! subtree shape depends only on the shard length) and rank 0 combines
+//! the `W` partial sums with the *same* recursion over the partial
+//! list.  The result is bit-identical to a single process reducing all
+//! `B` episodes — which is exactly what the in-process trainer now
+//! does (see `Trainer::run_iteration`), so `--workers 1|2|4` produce
+//! byte-identical metrics and checkpoints.
+
+use anyhow::{anyhow, Result};
+
+/// Reject worker counts the tree cannot align with: `workers` must be a
+/// power of two and divide the minibatch size evenly (shards are
+/// contiguous and must land on subtree boundaries).
+pub fn validate(batch: usize, workers: usize) -> Result<()> {
+    if workers == 0 {
+        return Err(anyhow!("dist: --workers must be at least 1"));
+    }
+    if !workers.is_power_of_two() {
+        return Err(anyhow!(
+            "dist: --workers {workers} is not a power of two (the fixed-order \
+             tree reduce shards the minibatch at power-of-two boundaries)"
+        ));
+    }
+    if batch % workers != 0 {
+        return Err(anyhow!(
+            "dist: --batch {batch} is not divisible by --workers {workers} \
+             (shards are contiguous equal slices of the minibatch)"
+        ));
+    }
+    Ok(())
+}
+
+/// Contiguous episode shard `[lo, hi)` of worker `rank` (0-based, local
+/// indices into the minibatch).  Requires [`validate`]d inputs.
+pub fn shard_bounds(batch: usize, workers: usize, rank: usize) -> (usize, usize) {
+    let per = batch / workers;
+    (rank * per, (rank + 1) * per)
+}
+
+/// Element-wise sum of `bufs` in the fixed tree order (floor-midpoint
+/// recursion).  Consumes the buffers; returns an empty vector for an
+/// empty list.  All buffers must share one length.
+pub fn tree_sum(bufs: &mut [Vec<f32>]) -> Vec<f32> {
+    match bufs.len() {
+        0 => Vec::new(),
+        1 => std::mem::take(&mut bufs[0]),
+        n => {
+            let (l, r) = bufs.split_at_mut(n / 2);
+            let mut left = tree_sum(l);
+            let right = tree_sum(r);
+            debug_assert_eq!(left.len(), right.len(), "tree_sum over ragged buffers");
+            for (a, b) in left.iter_mut().zip(&right) {
+                *a += *b;
+            }
+            left
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A deterministic pseudo-gradient whose partial sums differ under
+    /// reassociation (mixes magnitudes so f32 rounding is visible).
+    fn grad(ep: usize, len: usize) -> Vec<f32> {
+        (0..len)
+            .map(|i| {
+                let x = ((ep * 31 + i * 7 + 1) % 97) as f32;
+                (x - 48.0) * (1.0 + ((ep * 13 + i) % 7) as f32 * 1e3) * 1e-3
+            })
+            .collect()
+    }
+
+    #[test]
+    fn validate_rejects_misaligned_configs() {
+        assert!(validate(8, 1).is_ok());
+        assert!(validate(8, 2).is_ok());
+        assert!(validate(8, 4).is_ok());
+        assert!(validate(6, 2).is_ok());
+        assert!(validate(0, 1).is_ok());
+        assert!(validate(8, 0).is_err());
+        assert!(validate(8, 3).is_err());
+        assert!(validate(6, 4).is_err());
+    }
+
+    #[test]
+    fn shards_are_contiguous_and_cover() {
+        for &(b, w) in &[(8usize, 2usize), (8, 4), (12, 4), (4, 1)] {
+            let mut next = 0;
+            for r in 0..w {
+                let (lo, hi) = shard_bounds(b, w, r);
+                assert_eq!(lo, next);
+                assert_eq!(hi - lo, b / w);
+                next = hi;
+            }
+            assert_eq!(next, b);
+        }
+    }
+
+    /// Sharded reduce-then-combine must be bit-identical to the full
+    /// tree over all episodes, for every supported worker count.
+    #[test]
+    fn shard_partials_combine_bitwise() {
+        for &batch in &[4usize, 8, 12, 16] {
+            let mut full: Vec<Vec<f32>> = (0..batch).map(|e| grad(e, 33)).collect();
+            let reference = tree_sum(&mut full);
+            for &workers in &[1usize, 2, 4] {
+                if batch % workers != 0 {
+                    continue;
+                }
+                let mut partials: Vec<Vec<f32>> = (0..workers)
+                    .map(|r| {
+                        let (lo, hi) = shard_bounds(batch, workers, r);
+                        let mut shard: Vec<Vec<f32>> =
+                            (lo..hi).map(|e| grad(e, 33)).collect();
+                        tree_sum(&mut shard)
+                    })
+                    .collect();
+                let combined = tree_sum(&mut partials);
+                let a: Vec<u32> = reference.iter().map(|x| x.to_bits()).collect();
+                let b: Vec<u32> = combined.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(a, b, "W={workers} B={batch} diverged from the full tree");
+            }
+        }
+    }
+
+    /// The tree order deliberately differs from a linear left fold (that
+    /// is the point: the linear fold cannot be sharded bit-identically).
+    #[test]
+    fn tree_order_is_not_the_linear_fold() {
+        let batch = 8;
+        let mut bufs: Vec<Vec<f32>> = (0..batch).map(|e| grad(e, 50)).collect();
+        let linear: Vec<f32> = bufs
+            .iter()
+            .skip(1)
+            .fold(bufs[0].clone(), |mut acc, g| {
+                for (a, b) in acc.iter_mut().zip(g) {
+                    *a += *b;
+                }
+                acc
+            });
+        let tree = tree_sum(&mut bufs);
+        // Same values up to rounding...
+        for (a, b) in tree.iter().zip(&linear) {
+            assert!((a - b).abs() <= 1e-3 * a.abs().max(1.0));
+        }
+        // ...but at least one element lands on a different f32.
+        assert!(
+            tree.iter().zip(&linear).any(|(a, b)| a.to_bits() != b.to_bits()),
+            "expected the tree and linear orders to round differently"
+        );
+    }
+
+    #[test]
+    fn tree_sum_edge_cases() {
+        assert!(tree_sum(&mut []).is_empty());
+        let mut one = vec![vec![1.5f32, -2.0]];
+        assert_eq!(tree_sum(&mut one), vec![1.5, -2.0]);
+    }
+}

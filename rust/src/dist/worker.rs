@@ -1,0 +1,141 @@
+//! The worker side of distributed training (`learning-group worker`).
+//!
+//! A worker is deliberately thin: it owns no optimizer, no pruner
+//! schedule, no metrics — just the rollout + backward kernels over the
+//! state rank 0 broadcasts.  Lifecycle:
+//!
+//! 1. connect to rank 0, send `Hello{rank}`;
+//! 2. receive `Init` — rebuild the full training context from the
+//!    embedded checkpoint bytes (the same codec and validation a
+//!    `--resume` runs), pin the SIMD backend/exec mode/thread counts
+//!    rank 0 resolved;
+//! 3. per iteration, receive `Sync{params, masks?}` — install the
+//!    post-update params and (only when stage 1 changed them) rebuild
+//!    the `SparseModel` from the broadcast OSEL encodings; roll out the
+//!    assigned episode shard on the shared per-episode seed stream; run
+//!    backward per episode; tree-reduce the shard locally; send one
+//!    `GradShard` back;
+//! 4. exit 0 on `Done`, or exit with the connection error if rank 0
+//!    goes away (a dead coordinator must never leave workers hanging).
+//!
+//! Any internal failure is reported upstream as `WorkerAbort` before
+//! exiting, so rank 0 fails with a named error instead of a timeout.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::checkpoint::Checkpoint;
+use crate::coordinator::rollout::episode_seed;
+use crate::coordinator::{TrainConfig, Trainer};
+use crate::dist::proto::{read_frame, write_frame, DistMsg, EpStat, InitPayload, DIST_PROTO_VERSION};
+use crate::dist::reduce::tree_sum;
+use crate::runtime::SimdBackend;
+use crate::serve::{ListenAddr, Stream};
+
+/// Connect to the coordinator at `addr` as `rank` and serve gradient
+/// shards until `Done`.  Blocks for the whole training run.
+pub fn run_worker(addr: &ListenAddr, rank: usize) -> Result<()> {
+    let mut stream = Stream::connect(addr)
+        .with_context(|| format!("dist worker rank {rank}: connecting to {addr}"))?;
+    write_frame(
+        &mut stream,
+        &DistMsg::Hello { rank: rank as u32, version: DIST_PROTO_VERSION },
+    )
+    .map_err(|e| anyhow!("dist worker rank {rank}: sending hello: {e}"))?;
+    let init = match read_frame(&mut stream) {
+        Ok(DistMsg::Init(p)) => p,
+        Ok(other) => {
+            return Err(anyhow!("dist worker rank {rank}: expected Init, got {other:?}"))
+        }
+        Err(e) => return Err(anyhow!("dist worker rank {rank}: reading init: {e}")),
+    };
+    if init.rank as usize != rank {
+        return Err(anyhow!(
+            "dist worker rank {rank}: coordinator addressed rank {} (mixed-up handshake?)",
+            init.rank
+        ));
+    }
+    // Serve the loop; any failure is reported upstream before exiting
+    // so rank 0 gets a named cause instead of a bare disconnect.
+    let result = serve(&mut stream, &init);
+    if let Err(e) = &result {
+        let _ = write_frame(
+            &mut stream,
+            &DistMsg::WorkerAbort { rank: rank as u32, message: format!("{e:#}") },
+        );
+    }
+    result
+}
+
+/// Build the worker's trainer from the Init payload and run the
+/// Sync → GradShard loop.
+fn serve(stream: &mut Stream, init: &InitPayload) -> Result<()> {
+    let rank = init.rank as usize;
+    let ckpt = Checkpoint::from_bytes(&init.checkpoint)
+        .with_context(|| format!("dist worker rank {rank}: decoding init checkpoint"))?;
+    let simd = SimdBackend::parse(&init.simd)
+        .ok_or_else(|| anyhow!("dist worker rank {rank}: unknown simd backend {:?}", init.simd))?;
+    let cfg = TrainConfig {
+        gamma: init.gamma,
+        exec: init.exec,
+        simd,
+        intra_threads: init.intra_threads as usize,
+        rollouts: init.rollouts as usize,
+        strict_accum: init.strict_accum,
+        log_every: 0,
+        ..TrainConfig::default()
+    };
+    // The run identity (env, agents, batch, seed, pruner, model) comes
+    // from the checkpoint header — the exact path `--resume` takes.
+    let mut trainer = Trainer::resume_with_default_artifacts(cfg, &ckpt)
+        .with_context(|| format!("dist worker rank {rank}: rebuilding training context"))?;
+    let (lo, hi) = (init.shard_lo as usize, init.shard_hi as usize);
+    let master_seed = trainer.cfg.seed;
+
+    loop {
+        let msg = read_frame(stream)
+            .map_err(|e| anyhow!("dist worker rank {rank}: reading from coordinator: {e}"))?;
+        let (iteration, episodes_done, params, masks) = match msg {
+            DistMsg::Sync { iteration, episodes_done, params, masks } => {
+                (iteration, episodes_done, params, masks)
+            }
+            DistMsg::Done => return Ok(()),
+            other => {
+                return Err(anyhow!(
+                    "dist worker rank {rank}: expected Sync or Done, got {other:?}"
+                ))
+            }
+        };
+        trainer.install_sync(params, masks.as_ref())?;
+
+        // The shard's seeds come straight off the shared episode-index
+        // stream: episode b of this iteration is global index
+        // episodes_done + b, whichever process rolls it out.
+        let seeds: Vec<u64> = (lo..hi)
+            .map(|b| episode_seed(master_seed, episodes_done + b as u64))
+            .collect();
+        let episodes = trainer.collect_episodes(&seeds)?;
+
+        let mut stats = Vec::with_capacity(episodes.len());
+        let mut dparams_bufs = Vec::with_capacity(episodes.len());
+        let mut dmasks_bufs = Vec::with_capacity(episodes.len());
+        for ep in &episodes {
+            let g = trainer.backward_episode(ep)?;
+            stats.push(EpStat {
+                loss: g.stats,
+                reward: ep.total_reward(),
+                success_frac: ep.success_frac,
+            });
+            dparams_bufs.push(g.dparams);
+            dmasks_bufs.push(g.dmasks);
+        }
+        let shard = DistMsg::GradShard {
+            rank: rank as u32,
+            iteration,
+            stats,
+            dparams: tree_sum(&mut dparams_bufs),
+            dmasks: tree_sum(&mut dmasks_bufs),
+        };
+        write_frame(stream, &shard)
+            .map_err(|e| anyhow!("dist worker rank {rank}: sending gradient shard: {e}"))?;
+    }
+}

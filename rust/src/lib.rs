@@ -28,6 +28,7 @@
 pub mod accel;
 pub mod checkpoint;
 pub mod coordinator;
+pub mod dist;
 pub mod env;
 pub mod experiments;
 pub mod manifest;

@@ -15,6 +15,9 @@
 //!                      [--seed S] [--csv PATH] [--metrics-out PATH]
 //!                      [--save-every N] [--checkpoint-dir DIR]
 //!                      [--resume CKPT]
+//!                      [--workers W] [--dist-listen <unix:/p.sock|host:port>]
+//!                      [--dist-timeout-ms MS]
+//! learning-group worker --connect <unix:/p.sock|host:port> --rank R
 //! learning-group eval  --checkpoint CKPT [--episodes E] [--rollouts R]
 //!                      [--batch B] [--intra-threads T]
 //!                      [--simd B] [--strict-accum]
@@ -30,6 +33,7 @@
 //! learning-group loadgen --connect <unix:/p.sock|host:port> --checkpoint CKPT
 //!                      [--concurrency C] [--episodes E] [--seed S]
 //!                      [--json PATH] [--shutdown]
+//! learning-group --version           # build provenance (also: version, -V)
 //! learning-group roofline            # Fig 1
 //! learning-group accuracy [--iterations N] [--env E] [--rollouts R] [--fig9]
 //!                                    # Fig 4(a) / Fig 9
@@ -80,6 +84,15 @@
 //! `--episodes` client-owned environments over `--concurrency`
 //! connections and prints an `eval`-comparable JSON report (same seed
 //! stream, bit-identical episodes — the CI parity gate diffs the two).
+//!
+//! `train --workers W` shards each iteration's minibatch over W worker
+//! *processes* (`learning-group worker` is the per-rank entrypoint the
+//! coordinator spawns; `--dist-listen` pins the rendezvous socket,
+//! `--dist-timeout-ms` bounds how long a missing worker can stall the
+//! run before the named `dist: worker rank …` error).  Gradients come
+//! back as flat frames and are summed in a fixed-order binary tree, so
+//! any power-of-two W is bit-identical to `--workers 1` — see
+//! DESIGN.md §Distributed training.
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -88,6 +101,7 @@ use anyhow::{anyhow, Result};
 
 use learning_group::checkpoint::Checkpoint;
 use learning_group::coordinator::{ExecMode, PrunerChoice, TrainConfig, Trainer};
+use learning_group::dist::{DistCoordinator, DistOptions};
 use learning_group::env::EnvConfig;
 use learning_group::experiments;
 use learning_group::manifest::{Manifest, ModelTopology};
@@ -260,7 +274,23 @@ fn cmd_train(args: &Args) -> Result<()> {
         trainer.cfg.exec.name(),
         trainer.cfg.pruner.spec()
     );
-    let log = trainer.train()?;
+    // --workers W: shard each minibatch over W worker processes.  W = 1
+    // stays the plain in-process path (no sockets, no children); the
+    // distributed path is bit-identical to it for any power-of-two W
+    // that divides --batch (enforced by DistCoordinator::train).
+    let workers: usize = args.get("workers", 1)?;
+    let log = if workers > 1 {
+        let mut opts = DistOptions::new(workers);
+        if let Some(s) = args.flags.get("dist-listen") {
+            opts.listen = Some(ListenAddr::parse(s)?);
+        }
+        opts.timeout = Duration::from_millis(args.get("dist-timeout-ms", 30_000u64)?);
+        let coordinator = DistCoordinator::bind(opts)?;
+        eprintln!("distributed: {workers} workers rendezvous on {}", coordinator.addr());
+        coordinator.train(&mut trainer)?
+    } else {
+        trainer.train()?
+    };
     println!(
         "final success rate (last 25%): {:.1}%   average: {:.1}%   sparsity: {:.1}%",
         log.final_success_rate(0.25),
@@ -451,6 +481,25 @@ fn run() -> Result<()> {
     let args = Args::parse(&argv[1.min(argv.len())..]);
     match cmd {
         "train" => cmd_train(&args)?,
+        // The per-rank entrypoint `train --workers W` spawns; also
+        // usable standalone against --dist-listen for debugging.
+        "worker" => {
+            let addr_s = args
+                .flags
+                .get("connect")
+                .ok_or_else(|| anyhow!("--connect <unix:/path.sock | host:port> is required"))?;
+            let addr = ListenAddr::parse(addr_s)?;
+            let rank: usize = args
+                .flags
+                .get("rank")
+                .ok_or_else(|| anyhow!("--rank <r> is required"))?
+                .parse()
+                .map_err(|_| anyhow!("invalid value for --rank"))?;
+            learning_group::dist::run_worker(&addr, rank)?
+        }
+        "version" | "--version" | "-V" => {
+            print!("{}", learning_group::util::buildinfo::version_text())
+        }
         "eval" => cmd_eval(&args, false)?,
         "serve" => cmd_eval(&args, true)?,
         "daemon" => cmd_daemon(&args)?,
@@ -499,7 +548,7 @@ fn run() -> Result<()> {
             }
         }
         "help" | "--help" | "-h" => {
-            println!("usage: learning-group <train|eval|serve|daemon|loadgen|roofline|accuracy|osel|balance|perf|resources> [flags]");
+            println!("usage: learning-group <train|worker|eval|serve|daemon|loadgen|roofline|accuracy|osel|balance|perf|resources|version> [flags]");
             println!("train flags: --agents A --batch B --iterations N --seed S --csv PATH");
             println!("             --env predator_prey|traffic_junction:easy|medium|hard");
             println!("             --model tiny|paper|wide (layer-graph topology preset)");
@@ -514,6 +563,12 @@ fn run() -> Result<()> {
             println!("             --save-every N --checkpoint-dir DIR (periodic checkpoints)");
             println!("             --resume CKPT (continue bit-identically from a checkpoint)");
             println!("             --metrics-out PATH (per-iteration JSONL metrics sink)");
+            println!("             --workers W (shard the minibatch over W worker processes;");
+            println!("               bit-identical to --workers 1 for power-of-two W dividing --batch)");
+            println!("             --dist-listen unix:/path.sock|host:port (worker rendezvous socket)");
+            println!("             --dist-timeout-ms MS (worker handshake/frame deadline, default 30000)");
+            println!("worker flags: --connect ADDR --rank R (per-rank entrypoint; spawned by train)");
+            println!("version: print crate version, git hash, features and detected SIMD backend");
             println!("eval flags:  --checkpoint CKPT --episodes E --rollouts R --exec sparse|dense");
             println!("             --batch B (lockstep episodes per worker block)");
             println!("             --intra-threads T (sparse-kernel row fan-out threads)");

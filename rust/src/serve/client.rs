@@ -24,7 +24,7 @@ use crate::coordinator::rollout::episode_seed;
 use crate::env::{EnvConfig, MultiAgentEnv};
 use crate::serve::daemon::{ListenAddr, Stream};
 use crate::serve::proto::{self, DaemonStats, Msg};
-use crate::serve::{EpisodeOutcome, RewardStats};
+use crate::serve::{report, EpisodeOutcome, RewardStats};
 use crate::util::mean;
 
 /// What the daemon announced when an episode was opened.
@@ -229,6 +229,13 @@ pub struct LoadgenReport {
     pub p50_ms: f64,
     /// 99th-percentile per-step round-trip latency (milliseconds).
     pub p99_ms: f64,
+    /// Hot checkpoint reloads the daemon applied during (or before)
+    /// the sweep.
+    pub daemon_reloads: u64,
+    /// Reload candidates the daemon rejected (unreadable, wrong
+    /// fingerprint, stale) — CI asserts on this, so it rides the
+    /// report instead of living only in the daemon's stderr.
+    pub daemon_reload_skips: u64,
 }
 
 /// `q`-th percentile (0 ≤ q ≤ 1) by nearest-rank over a sorted copy.
@@ -251,26 +258,19 @@ impl LoadgenReport {
     pub fn to_json(&self) -> String {
         format!(
             "{{\n  \"kind\": \"loadgen_report\",\n  \"env\": \"{}\",\n  \"agents\": {},\n  \
-             \"concurrency\": {},\n  \"episodes\": {},\n  \"steps\": {},\n  \
-             \"wall_s\": {:.6},\n  \"steps_per_sec\": {:.3},\n  \"episodes_per_sec\": {:.3},\n  \
+             \"concurrency\": {},\n{}{}  \
              \"p50_ms\": {:.4},\n  \"p99_ms\": {:.4},\n  \
-             \"reward\": {{\"mean\": {:.6}, \"std\": {:.6}, \"min\": {:.6}, \"max\": {:.6}}},\n  \
-             \"success_rate\": {:.6}\n}}\n",
+             \"daemon_reloads\": {},\n  \"daemon_reload_skips\": {},\n{}}}\n",
             self.env,
             self.agents,
             self.concurrency,
-            self.episodes,
-            self.steps,
-            self.wall_s,
-            self.steps_per_sec,
-            self.episodes_per_sec,
+            report::volume_rows(self.episodes, self.steps),
+            report::throughput_rows(self.wall_s, self.steps_per_sec, self.episodes_per_sec),
             self.p50_ms,
             self.p99_ms,
-            self.reward.mean,
-            self.reward.std,
-            self.reward.min,
-            self.reward.max,
-            self.success_rate,
+            self.daemon_reloads,
+            self.daemon_reload_skips,
+            report::outcome_rows(&self.reward, self.success_rate),
         )
     }
 }
@@ -356,6 +356,9 @@ pub fn run_loadgen(
     let successes: Vec<f32> = outcomes.iter().map(|o| o.success_frac).collect();
     let steps: usize = outcomes.iter().map(|o| o.steps).sum();
     let episodes = outcomes.len();
+    // One post-sweep stats call picks up the daemon's reload counters
+    // (CI's reload gates assert on the report, not on daemon stderr).
+    let daemon_stats = DaemonClient::connect(addr)?.stats()?;
     Ok(LoadgenReport {
         env: env_cfg.name(),
         agents,
@@ -369,6 +372,8 @@ pub fn run_loadgen(
         success_rate: mean(&successes),
         p50_ms: percentile(&mut lats, 0.50),
         p99_ms: percentile(&mut lats, 0.99),
+        daemon_reloads: daemon_stats.reloads,
+        daemon_reload_skips: daemon_stats.reload_skips,
     })
 }
 

@@ -123,7 +123,7 @@ impl Stream {
         }
     }
 
-    fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+    pub(crate) fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
         match self {
             Stream::Unix(s) => s.set_read_timeout(d),
             Stream::Tcp(s) => s.set_read_timeout(d),
@@ -658,6 +658,21 @@ impl DaemonHandle {
         if let ListenAddr::Unix(path) = &self.addr {
             let _ = std::fs::remove_file(path);
         }
+        // One-line operational summary on the way out.  `reload_skips`
+        // in particular is otherwise only visible as scattered watcher
+        // eprintlns; the summary (and the loadgen report) give CI a
+        // single place to assert on it.
+        let stats = self.shared.make_stats();
+        eprintln!(
+            "daemon shutdown: steps={} opened={} closed={} reloads={} reload_skips={} \
+             proto_errors={}",
+            stats.steps,
+            stats.opened,
+            stats.closed,
+            stats.reloads,
+            stats.reload_skips,
+            stats.proto_errors
+        );
         let err = self.shared.worker_err.lock().expect("daemon error lock").take();
         match err {
             Some(e) => Err(anyhow!("daemon replica failed: {e}")),

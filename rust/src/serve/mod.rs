@@ -43,12 +43,14 @@ mod client;
 mod daemon;
 mod driver;
 pub mod proto;
+pub mod report;
 
 pub use client::{
     run_loadgen, run_served_episode, DaemonClient, LoadgenOptions, LoadgenReport, OpenedInfo,
     SteppedActions,
 };
 pub use daemon::{Daemon, DaemonConfig, DaemonHandle, ListenAddr, Snapshot};
+pub(crate) use daemon::Stream;
 pub use driver::{EpisodeDriver, EpisodeOutcome, LockstepDriver};
 
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -154,11 +156,7 @@ impl EvalReport {
         format!(
             "{{\n  \"kind\": \"serve_report\",\n  \"env\": \"{}\",\n  \"agents\": {},\n  \
              \"exec\": \"{}\",\n  \"workers\": {},\n  \"batch\": {},\n  \
-             \"checkpoint_iteration\": {},\n  \
-             \"density\": {:.6},\n  \"episodes\": {},\n  \"steps\": {},\n  \
-             \"wall_s\": {:.6},\n  \"steps_per_sec\": {:.3},\n  \"episodes_per_sec\": {:.3},\n  \
-             \"reward\": {{\"mean\": {:.6}, \"std\": {:.6}, \"min\": {:.6}, \"max\": {:.6}}},\n  \
-             \"success_rate\": {:.6}\n}}\n",
+             \"checkpoint_iteration\": {},\n  \"density\": {:.6},\n{}{}{}}}\n",
             self.env,
             self.agents,
             self.exec.name(),
@@ -166,16 +164,9 @@ impl EvalReport {
             self.batch,
             self.checkpoint_iteration,
             self.density,
-            self.episodes,
-            self.steps,
-            self.wall_s,
-            self.steps_per_sec,
-            self.episodes_per_sec,
-            self.reward.mean,
-            self.reward.std,
-            self.reward.min,
-            self.reward.max,
-            self.success_rate,
+            report::volume_rows(self.episodes, self.steps),
+            report::throughput_rows(self.wall_s, self.steps_per_sec, self.episodes_per_sec),
+            report::outcome_rows(&self.reward, self.success_rate),
         )
     }
 }

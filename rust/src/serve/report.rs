@@ -1,0 +1,74 @@
+//! Shared JSON report rows for every serving/training front-end.
+//!
+//! CI's parity gates diff report lines *textually*: it greps the
+//! `episodes` / `steps` / `reward` / `success_rate` rows out of an
+//! offline `eval` report and a daemon `loadgen` report and requires the
+//! bytes to match.  That only works if every report formats those rows
+//! identically — same key order, same float precision, same trailing
+//! commas.  These helpers are that single definition: [`EvalReport`]
+//! (`eval`/`serve`), [`LoadgenReport`] (`loadgen`) and the distributed
+//! trainer's rank-0 summaries all assemble their JSON from the same
+//! row strings instead of each hand-rolling a format string that can
+//! drift.
+//!
+//! Layout contract (stable, CI-grepped):
+//! * `episodes`/`steps` are mid-object rows — trailing comma;
+//! * `reward` is one nested object on a single row — trailing comma;
+//! * `success_rate` closes the parity block — **no** trailing comma, so
+//!   it must stay the last row of any report that includes it.
+//!
+//! [`EvalReport`]: crate::serve::EvalReport
+//! [`LoadgenReport`]: crate::serve::LoadgenReport
+
+use super::RewardStats;
+
+/// The `episodes`/`steps` volume rows (mid-object, trailing commas).
+pub fn volume_rows(episodes: usize, steps: usize) -> String {
+    format!("  \"episodes\": {episodes},\n  \"steps\": {steps},\n")
+}
+
+/// The `wall_s`/`steps_per_sec`/`episodes_per_sec` throughput rows
+/// (mid-object, trailing commas).
+pub fn throughput_rows(wall_s: f64, steps_per_sec: f64, episodes_per_sec: f64) -> String {
+    format!(
+        "  \"wall_s\": {wall_s:.6},\n  \"steps_per_sec\": {steps_per_sec:.3},\n  \
+         \"episodes_per_sec\": {episodes_per_sec:.3},\n"
+    )
+}
+
+/// The closing `reward` + `success_rate` rows.  `success_rate` carries
+/// no trailing comma: these rows end the object.
+pub fn outcome_rows(reward: &RewardStats, success_rate: f32) -> String {
+    format!(
+        "  \"reward\": {{\"mean\": {:.6}, \"std\": {:.6}, \"min\": {:.6}, \"max\": {:.6}}},\n  \
+         \"success_rate\": {:.6}\n",
+        reward.mean, reward.std, reward.min, reward.max, success_rate
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_keep_the_parity_format() {
+        assert_eq!(volume_rows(12, 340), "  \"episodes\": 12,\n  \"steps\": 340,\n");
+        let tp = throughput_rows(1.5, 200.0, 8.0);
+        assert_eq!(
+            tp,
+            "  \"wall_s\": 1.500000,\n  \"steps_per_sec\": 200.000,\n  \
+             \"episodes_per_sec\": 8.000,\n"
+        );
+        let out = outcome_rows(
+            &RewardStats { mean: -0.5, std: 0.25, min: -1.0, max: 0.0 },
+            0.75,
+        );
+        assert_eq!(
+            out,
+            "  \"reward\": {\"mean\": -0.500000, \"std\": 0.250000, \"min\": -1.000000, \
+             \"max\": 0.000000},\n  \"success_rate\": 0.750000\n"
+        );
+        // the parity block must close the object: no trailing comma
+        assert!(!out.trim_end().ends_with(','));
+    }
+}

@@ -1,0 +1,85 @@
+//! Build provenance: crate version, git revision, enabled features and
+//! the SIMD backend the running CPU dispatches to.
+//!
+//! Two consumers, one definition: `learning-group --version` prints it
+//! for humans, and every `BENCH_*.json` artifact embeds the same object
+//! under `"build"` — so a benchmark number can always be traced to the
+//! exact tree, feature set and kernel backend that produced it.  The
+//! git hash comes from `build.rs` (`LG_GIT_HASH`, `"unknown"` when the
+//! build ran outside a git tree).
+
+use crate::runtime::SimdBackend;
+
+/// Crate version (`CARGO_PKG_VERSION`).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Short git hash the binary was built from (`"unknown"` outside git).
+pub fn git_hash() -> &'static str {
+    env!("LG_GIT_HASH")
+}
+
+/// Comma-separated enabled cargo features (`"none"` when empty).
+pub fn features() -> &'static str {
+    if cfg!(feature = "pjrt") {
+        "pjrt"
+    } else {
+        "none"
+    }
+}
+
+/// The build-provenance JSON object embedded in bench artifacts:
+/// `{"version": ..., "git": ..., "features": ..., "simd": ...}` on one
+/// line (`simd` is the backend *detected on the running CPU*, i.e. what
+/// `--simd auto` dispatches to).
+pub fn build_info_json() -> String {
+    format!(
+        "{{\"version\": \"{}\", \"git\": \"{}\", \"features\": \"{}\", \"simd\": \"{}\"}}",
+        version(),
+        git_hash(),
+        features(),
+        SimdBackend::detect().name()
+    )
+}
+
+/// The human `--version` text (multi-line, stable keys).
+pub fn version_text() -> String {
+    format!(
+        "learning-group {}\ngit: {}\nfeatures: {}\nsimd: {}\n",
+        version(),
+        git_hash(),
+        features(),
+        SimdBackend::detect().name()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_info_is_one_json_object_line() {
+        let s = build_info_json();
+        assert!(s.starts_with('{') && s.ends_with('}'));
+        assert!(!s.contains('\n'));
+        for key in ["\"version\"", "\"git\"", "\"features\"", "\"simd\""] {
+            assert!(s.contains(key), "missing {key} in {s}");
+        }
+        // parses with the repo's own JSON parser
+        let v = crate::util::json::Json::parse(&s).expect("build info parses");
+        assert_eq!(
+            v.get("version").and_then(|x| x.as_str()),
+            Some(env!("CARGO_PKG_VERSION"))
+        );
+    }
+
+    #[test]
+    fn version_text_names_every_field() {
+        let t = version_text();
+        assert!(t.starts_with("learning-group "));
+        for key in ["git: ", "features: ", "simd: "] {
+            assert!(t.contains(key), "missing {key} in {t}");
+        }
+    }
+}

@@ -2,6 +2,7 @@
 //! a minimal JSON parser (the build environment is offline — no serde).
 
 pub mod benchutil;
+pub mod buildinfo;
 pub mod json;
 mod rng;
 mod stats;

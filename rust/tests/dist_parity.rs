@@ -1,0 +1,206 @@
+//! Distributed-training parity: `--workers W` must be **bitwise**
+//! identical to the single-process trainer — per-iteration metrics and
+//! the final checkpoint image — for every supported worker count.
+//!
+//! The determinism contract under test (see DESIGN.md §Distributed
+//! training): episode seeds are a function of the *global* episode
+//! index only, and gradient summation follows a fixed-order binary tree
+//! over that same index — so where an episode is rolled out (which
+//! rank, thread or process) cannot perturb a single bit.
+//!
+//! Workers run three ways here: in-process threads (fast, the parity
+//! sweep), real spawned `learning-group worker` processes (the smoke
+//! test of the production path), and deliberately broken fakes (the
+//! named fault-path errors CI greps for).
+
+use std::time::Duration;
+
+use learning_group::coordinator::{MetricsLog, PrunerChoice, TrainConfig, Trainer};
+use learning_group::dist::proto::{read_frame, write_frame, DistMsg, DIST_PROTO_VERSION};
+use learning_group::dist::{run_worker, DistCoordinator, DistOptions, SpawnMode};
+use learning_group::serve::ListenAddr;
+
+fn train_cfg(batch: usize, iterations: usize) -> TrainConfig {
+    TrainConfig {
+        batch,
+        iterations,
+        pruner: PrunerChoice::Flgw(4),
+        seed: 11,
+        log_every: 0,
+        ..TrainConfig::default().with_agents(3)
+    }
+}
+
+/// The single-process reference: metrics log + final checkpoint bytes.
+fn baseline(batch: usize, iterations: usize) -> (MetricsLog, Vec<u8>) {
+    let mut trainer = Trainer::from_default_artifacts(train_cfg(batch, iterations)).unwrap();
+    let log = trainer.train().unwrap();
+    (log, trainer.checkpoint().unwrap().to_bytes())
+}
+
+/// Run a distributed training with `workers` in-process worker threads
+/// (SpawnMode::External) and return its log + final checkpoint bytes.
+fn distributed(
+    batch: usize,
+    iterations: usize,
+    workers: usize,
+    listen: Option<ListenAddr>,
+) -> (MetricsLog, Vec<u8>) {
+    let mut trainer = Trainer::from_default_artifacts(train_cfg(batch, iterations)).unwrap();
+    let coordinator = DistCoordinator::bind(DistOptions {
+        listen,
+        spawn: SpawnMode::External,
+        ..DistOptions::new(workers)
+    })
+    .unwrap();
+    let addr = coordinator.addr().clone();
+    let (log, bytes) = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|rank| {
+                let addr = addr.clone();
+                scope.spawn(move || run_worker(&addr, rank))
+            })
+            .collect();
+        let log = coordinator.train(&mut trainer).unwrap();
+        for (rank, h) in handles.into_iter().enumerate() {
+            h.join().unwrap().unwrap_or_else(|e| panic!("worker rank {rank}: {e:#}"));
+        }
+        (log, trainer.checkpoint().unwrap().to_bytes())
+    });
+    (log, bytes)
+}
+
+/// Exact f32 bit equality across every per-iteration metric (wall_s is
+/// wall clock, the one legitimately differing field).
+fn assert_logs_bitwise_equal(a: &MetricsLog, b: &MetricsLog, what: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{what}: iteration count");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.iteration, y.iteration, "{what}");
+        let it = x.iteration;
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{what}: loss @ {it}");
+        assert_eq!(x.policy_loss.to_bits(), y.policy_loss.to_bits(), "{what}: policy @ {it}");
+        assert_eq!(x.value_loss.to_bits(), y.value_loss.to_bits(), "{what}: value @ {it}");
+        assert_eq!(x.entropy.to_bits(), y.entropy.to_bits(), "{what}: entropy @ {it}");
+        assert_eq!(x.mean_reward.to_bits(), y.mean_reward.to_bits(), "{what}: reward @ {it}");
+        assert_eq!(
+            x.success_rate.to_bits(),
+            y.success_rate.to_bits(),
+            "{what}: success @ {it}"
+        );
+        assert_eq!(x.sparsity.to_bits(), y.sparsity.to_bits(), "{what}: sparsity @ {it}");
+    }
+}
+
+/// W ∈ {2, 4} over both address families reproduce the W = 1 run
+/// bitwise: every iteration's metrics and the final checkpoint image.
+#[test]
+fn distributed_training_is_bitwise_identical_to_single_process() {
+    let (batch, iterations) = (4usize, 3usize);
+    let (ref_log, ref_bytes) = baseline(batch, iterations);
+    assert_eq!(ref_log.records.len(), iterations);
+
+    for (workers, listen) in [
+        (2usize, None),
+        (4, Some(ListenAddr::Tcp("127.0.0.1:0".to_string()))),
+    ] {
+        let (log, bytes) = distributed(batch, iterations, workers, listen);
+        assert_logs_bitwise_equal(&ref_log, &log, &format!("workers={workers}"));
+        assert_eq!(bytes, ref_bytes, "workers={workers}: final checkpoint bytes differ");
+    }
+}
+
+/// The production path: real `learning-group worker` child processes
+/// spawned from the built binary, still bitwise.
+#[test]
+fn spawned_worker_processes_are_bitwise_identical_too() {
+    let (batch, iterations) = (4usize, 2usize);
+    let (ref_log, ref_bytes) = baseline(batch, iterations);
+
+    let mut trainer = Trainer::from_default_artifacts(train_cfg(batch, iterations)).unwrap();
+    let coordinator = DistCoordinator::bind(DistOptions {
+        spawn: SpawnMode::SpawnWith(vec![env!("CARGO_BIN_EXE_learning-group").to_string()]),
+        ..DistOptions::new(2)
+    })
+    .unwrap();
+    let log = coordinator.train(&mut trainer).unwrap();
+    assert_logs_bitwise_equal(&ref_log, &log, "spawned workers=2");
+    assert_eq!(
+        trainer.checkpoint().unwrap().to_bytes(),
+        ref_bytes,
+        "spawned workers=2: final checkpoint bytes differ"
+    );
+}
+
+/// A worker count that cannot shard the batch evenly is rejected before
+/// any socket is touched.
+#[test]
+fn invalid_worker_counts_are_rejected_up_front() {
+    let mut trainer = Trainer::from_default_artifacts(train_cfg(4, 1)).unwrap();
+    let coordinator = DistCoordinator::bind(DistOptions {
+        spawn: SpawnMode::External,
+        timeout: Duration::from_millis(100),
+        ..DistOptions::new(3)
+    })
+    .unwrap();
+    let err = coordinator.train(&mut trainer).unwrap_err().to_string();
+    assert!(err.contains("power of two"), "unexpected error: {err}");
+}
+
+/// Nobody connects: the handshake fails at the deadline with the named
+/// timeout error instead of hanging.
+#[test]
+fn missing_workers_time_out_with_a_named_error() {
+    let mut trainer = Trainer::from_default_artifacts(train_cfg(4, 1)).unwrap();
+    let coordinator = DistCoordinator::bind(DistOptions {
+        spawn: SpawnMode::External,
+        timeout: Duration::from_millis(200),
+        ..DistOptions::new(2)
+    })
+    .unwrap();
+    let err = coordinator.train(&mut trainer).unwrap_err().to_string();
+    assert!(err.contains("dist: worker rank"), "unexpected error: {err}");
+    assert!(err.contains("timed out"), "unexpected error: {err}");
+}
+
+/// A worker that dies mid-run (here: a fake that handshakes, then
+/// drops) turns into a named `dist: worker rank N` error on rank 0 —
+/// the e2e worker-kill CI job greps for exactly this.
+#[test]
+fn a_worker_dying_mid_run_fails_fast_with_a_named_error() {
+    let mut trainer = Trainer::from_default_artifacts(train_cfg(2, 2)).unwrap();
+    let coordinator = DistCoordinator::bind(DistOptions {
+        listen: Some(ListenAddr::Tcp("127.0.0.1:0".to_string())),
+        spawn: SpawnMode::External,
+        timeout: Duration::from_millis(2_000),
+        ..DistOptions::new(2)
+    })
+    .unwrap();
+    let addr = coordinator.addr().clone();
+    let ListenAddr::Tcp(tcp_addr) = addr.clone() else { panic!("expected a tcp addr") };
+    let err = std::thread::scope(|scope| {
+        // rank 0 is a real worker; rank 1 handshakes and vanishes
+        let real = {
+            let addr = addr.clone();
+            scope.spawn(move || run_worker(&addr, 0))
+        };
+        scope.spawn(move || {
+            let mut stream = std::net::TcpStream::connect(&tcp_addr).unwrap();
+            write_frame(
+                &mut stream,
+                &DistMsg::Hello { rank: 1, version: DIST_PROTO_VERSION },
+            )
+            .unwrap();
+            match read_frame(&mut stream) {
+                Ok(DistMsg::Init(_)) => {} // now drop the connection
+                other => panic!("fake worker expected Init, got {other:?}"),
+            }
+        });
+        let err = coordinator.train(&mut trainer).unwrap_err().to_string();
+        // the real worker exits once its stream to rank 0 dies
+        let _ = real.join().unwrap();
+        err
+    });
+    // The exact cause depends on when the kernel surfaces the reset
+    // (sync write vs shard read), but the rank is always named.
+    assert!(err.contains("dist: worker rank 1"), "unexpected error: {err}");
+}
