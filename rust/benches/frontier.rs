@@ -1,0 +1,281 @@
+//! The reward / density / throughput frontier → `BENCH_frontier.json`.
+//!
+//! Sweeps pruner × density-schedule × model preset, training each combo
+//! three times on the same seed: once under `--exec dense` (reference),
+//! once under `--exec sparse --strict-accum` (the parity witness) and
+//! once under the default lane-padded sparse panels (the throughput
+//! number).  Each row records the final reward, the realized per-layer
+//! density and env-steps/sec on both paths — the data behind "which
+//! pruner buys how much speed at what accuracy cost", the trade-off the
+//! paper's Fig. 4(a) and Fig. 11 frame.
+//!
+//! Three gates ride along (all fatal in smoke / CI):
+//!
+//! * **parity** — the strict sparse run must reproduce the dense run
+//!   bitwise, per combo.  A frontier point whose sparse path computed
+//!   something different is not a frontier point.
+//! * **density** — the realized final density must sit at (or, mid
+//!   anneal, above) the density the combo's schedule assigns to the
+//!   last iteration, and never below the pruner's structural floor —
+//!   within ±0.15 either way.
+//! * **sanity** — final reward and both throughput numbers are finite.
+//!
+//! Schema documented in docs/BENCHMARKS.md; run via
+//! `cargo bench --bench frontier [-- --smoke]`.
+
+use std::time::Instant;
+
+use learning_group::coordinator::{
+    DensityScheduleChoice, ExecMode, MetricsLog, PrunerChoice, TrainConfig, Trainer,
+};
+use learning_group::manifest::ModelTopology;
+
+/// The sweep's pruner axis: every zoo member, each paired with the
+/// structural density floor it clamps the schedule to (all four knobs
+/// are chosen so the floor is 0.25 — one comparable frontier column).
+const PRUNERS: [(&str, f32); 4] =
+    [("flgw:4", 0.25), ("gst:2x4:75", 0.25), ("iterative:75", 0.25), ("bc:2x4", 0.25)];
+
+/// The schedule axis: the fully-annealed steady state from iteration 0
+/// vs a one-warmup-iteration cosine anneal toward the same target.
+const SCHEDULES: [&str; 2] = ["constant", "cosine:1,0.25"];
+
+struct Row {
+    pruner: &'static str,
+    schedule: &'static str,
+    model: &'static str,
+    final_reward: f32,
+    density: f32,
+    layer_density: Vec<(String, f32)>,
+    dense_steps_s: f64,
+    sparse_steps_s: f64,
+    strict_steps_s: f64,
+}
+
+fn topology(model: &str) -> ModelTopology {
+    match model {
+        "tiny" => ModelTopology::tiny(),
+        "paper" => ModelTopology::paper(),
+        "wide" => ModelTopology::wide(),
+        other => panic!("unknown model preset {other:?}"),
+    }
+}
+
+fn cfg(
+    pruner: &str,
+    schedule: &str,
+    model: &str,
+    exec: ExecMode,
+    strict: bool,
+    iterations: usize,
+    batch: usize,
+) -> TrainConfig {
+    TrainConfig {
+        batch,
+        iterations,
+        pruner: PrunerChoice::parse(pruner).expect("pruner spec"),
+        density_schedule: Some(DensityScheduleChoice::parse(schedule).expect("schedule spec")),
+        seed: 11,
+        log_every: 0,
+        exec,
+        strict_accum: strict,
+        model: topology(model),
+        ..TrainConfig::default().with_agents(3)
+    }
+}
+
+/// Train one combo variant; returns (wall seconds, metrics log, final
+/// masks, per-layer (name, density), manifest episode length).
+fn run(c: TrainConfig) -> (f64, MetricsLog, f32, Vec<(String, f32)>, usize) {
+    let mut t = Trainer::from_default_artifacts(c).expect("building trainer");
+    let t0 = Instant::now();
+    let log = t.train().expect("training run");
+    let wall = t0.elapsed().as_secs_f64();
+    let m = t.manifest();
+    let layer_density = m
+        .masked_layers
+        .iter()
+        .map(|l| {
+            let mask = &t.state.masks[l.offset..l.offset + l.size()];
+            let kept = mask.iter().filter(|&&x| x != 0.0).count();
+            (l.name.clone(), kept as f32 / l.size().max(1) as f32)
+        })
+        .collect();
+    let episode_len = m.dims.episode_len;
+    (wall, log, t.state.mask_density(), layer_density, episode_len)
+}
+
+/// Exact bit equality of two metrics logs (the parity gate).
+fn logs_bitwise_equal(a: &MetricsLog, b: &MetricsLog) -> bool {
+    a.records.len() == b.records.len()
+        && a.records.iter().zip(&b.records).all(|(x, y)| {
+            x.iteration == y.iteration
+                && x.loss.to_bits() == y.loss.to_bits()
+                && x.policy_loss.to_bits() == y.policy_loss.to_bits()
+                && x.value_loss.to_bits() == y.value_loss.to_bits()
+                && x.entropy.to_bits() == y.entropy.to_bits()
+                && x.mean_reward.to_bits() == y.mean_reward.to_bits()
+                && x.success_rate.to_bits() == y.success_rate.to_bits()
+                && x.sparsity.to_bits() == y.sparsity.to_bits()
+        })
+}
+
+fn write_json(rows: &[Row], smoke: bool, iterations: usize, batch: usize) -> std::io::Result<()> {
+    let mut row_text = String::new();
+    for (i, r) in rows.iter().enumerate() {
+        if i > 0 {
+            row_text.push_str(",\n");
+        }
+        let mut layers = String::new();
+        for (j, (name, d)) in r.layer_density.iter().enumerate() {
+            if j > 0 {
+                layers.push_str(", ");
+            }
+            layers.push_str(&format!("{{\"layer\": \"{name}\", \"density\": {d:.4}}}"));
+        }
+        row_text.push_str(&format!(
+            "    {{\"pruner\": \"{}\", \"schedule\": \"{}\", \"model\": \"{}\", \
+             \"final_reward\": {:.6}, \"density\": {:.4}, \"layers\": [{}], \
+             \"dense_steps_s\": {:.1}, \"sparse_steps_s\": {:.1}, \
+             \"strict_steps_s\": {:.1}, \"sparse_speedup\": {:.3}}}",
+            r.pruner,
+            r.schedule,
+            r.model,
+            r.final_reward,
+            r.density,
+            layers,
+            r.dense_steps_s,
+            r.sparse_steps_s,
+            r.strict_steps_s,
+            r.sparse_steps_s / r.dense_steps_s.max(1e-12),
+        ));
+    }
+    let text = format!(
+        "{{\n  \"bench\": \"frontier\",\n  \"build\": {},\n  \"mode\": \"{}\",\n  \
+         \"env\": \"predator_prey\",\n  \"agents\": 3,\n  \"batch\": {},\n  \
+         \"iterations\": {},\n  \
+         \"parity\": \"strict-accum sparse run bitwise identical to dense, per combo\",\n  \
+         \"gate\": \"smoke: parity bitwise; realized density within 0.15 of the schedule's \
+         final ask clamped to the pruner floor; finite reward and throughput\",\n  \
+         \"rows\": [\n{}\n  ]\n}}\n",
+        learning_group::util::buildinfo::build_info_json(),
+        if smoke { "smoke" } else { "full" },
+        batch,
+        iterations,
+        row_text,
+    );
+    std::fs::write("BENCH_frontier.json", text)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|arg| arg == "--smoke")
+        || std::env::var_os("LG_BENCH_SMOKE").is_some();
+    let (iterations, batch) = if smoke { (4, 2) } else { (10, 4) };
+    let models: &[&str] = if smoke { &["tiny"] } else { &["tiny", "paper"] };
+
+    // Warmup: artifact loading / page-cache effects stay out of the
+    // first measured point.
+    Trainer::from_default_artifacts(cfg(
+        "flgw:4",
+        "constant",
+        models[0],
+        ExecMode::Sparse,
+        false,
+        1,
+        1,
+    ))
+    .expect("warmup trainer")
+    .train()
+    .expect("warmup run");
+
+    let mut rows: Vec<Row> = Vec::new();
+    let mut failed = false;
+    for &model in models {
+        for &(pruner, floor) in &PRUNERS {
+            for &schedule in &SCHEDULES {
+                let tag = format!("{pruner} × {schedule} × {model}");
+                let (dense_wall, dense_log, _, _, episode_len) = run(cfg(
+                    pruner,
+                    schedule,
+                    model,
+                    ExecMode::DenseMasked,
+                    false,
+                    iterations,
+                    batch,
+                ));
+                let (strict_wall, strict_log, _, _, _) = run(cfg(
+                    pruner,
+                    schedule,
+                    model,
+                    ExecMode::Sparse,
+                    true,
+                    iterations,
+                    batch,
+                ));
+                let (sparse_wall, sparse_log, density, layer_density, _) = run(cfg(
+                    pruner,
+                    schedule,
+                    model,
+                    ExecMode::Sparse,
+                    false,
+                    iterations,
+                    batch,
+                ));
+
+                // gate 1: the strict sparse run is the dense run, bitwise
+                if !logs_bitwise_equal(&dense_log, &strict_log) {
+                    eprintln!("REGRESSION: {tag}: strict sparse run diverged from dense");
+                    failed = true;
+                }
+                // gate 2: realized density within 0.15 of the schedule's
+                // final ask, clamped to the pruner's structural floor
+                let sched = DensityScheduleChoice::parse(schedule)
+                    .expect("schedule spec")
+                    .schedule(iterations);
+                let expected = sched.density_at(iterations.saturating_sub(1)).max(floor);
+                if (density - expected).abs() > 0.15 {
+                    eprintln!(
+                        "REGRESSION: {tag}: realized density {density:.3} vs expected \
+                         {expected:.3} (schedule ask clamped to floor {floor})"
+                    );
+                    failed = true;
+                }
+                // gate 3: sanity
+                let final_reward =
+                    sparse_log.records.last().map(|r| r.mean_reward).unwrap_or(f32::NAN);
+                let steps = (iterations * batch * episode_len) as f64;
+                let (dense_sps, sparse_sps, strict_sps) =
+                    (steps / dense_wall, steps / sparse_wall, steps / strict_wall);
+                if !final_reward.is_finite() || !dense_sps.is_finite() || !sparse_sps.is_finite()
+                {
+                    eprintln!("REGRESSION: {tag}: non-finite reward or throughput");
+                    failed = true;
+                }
+
+                println!(
+                    "frontier {tag}: reward {final_reward:>8.4}  density {density:.3}  \
+                     dense {dense_sps:>7.1} steps/s  sparse {sparse_sps:>7.1} steps/s  \
+                     ({:.2}x)",
+                    sparse_sps / dense_sps
+                );
+                rows.push(Row {
+                    pruner,
+                    schedule,
+                    model,
+                    final_reward,
+                    density,
+                    layer_density,
+                    dense_steps_s: dense_sps,
+                    sparse_steps_s: sparse_sps,
+                    strict_steps_s: strict_sps,
+                });
+            }
+        }
+    }
+
+    write_json(&rows, smoke, iterations, batch).expect("writing BENCH_frontier.json");
+    println!("frontier written to BENCH_frontier.json ({} rows)", rows.len());
+    if failed {
+        std::process::exit(1);
+    }
+}

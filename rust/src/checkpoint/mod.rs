@@ -15,9 +15,11 @@
 //! 0/1 matrix.  At G groups a layer costs `2 bytes x (rows + cols) +
 //! G x ceil(cols/8)` bytes instead of `rows x cols` — for the built-in
 //! 128x512 LSTM gate layers at G = 4 that is ~2.5 KB against 64 KB.
-//! Pruners whose masks are not group-structured (iterative magnitude,
-//! block-circulant, GST) fall back to one packed bit per weight
-//! ([`MaskStore::DenseBits`]).
+//! Block-circulant masks are OSEL-structured too (the circulant rule is
+//! a group-match with G = factor), so they store the same way; pruners
+//! whose masks are not group-structured (iterative magnitude, GST, and
+//! any pruner mid dense-warmup blend) fall back to one packed bit per
+//! weight ([`MaskStore::DenseBits`]).
 //!
 //! On-disk layout (all integers little-endian; see DESIGN.md
 //! §Checkpoint format & serving path for the diagram):
@@ -29,18 +31,24 @@
 //! model topology (v2+): obs_dim u32, hidden u32, n_actions u32,
 //!       n_gate u32, episode_len u32, comm_rounds u32,
 //!       enc count u32 + enc widths u32[]
+//! density schedule str (v3+)
 //! params f32[] | sq_avg f32[] | dmask_accum f32[]
 //! mask store: tag u8 (0 dense-bits, 1 OSEL) + payload
 //! pruner store: tag u8 (0 stateless, 1 FLGW) + payload
 //! crc32 u32 over every preceding byte
 //! ```
 //!
-//! Version 2 added the model-topology block; version-1 files still
-//! read, defaulting the topology to the builtin `paper` preset (the
-//! only topology v1 builds could train).  The recorded topology is
-//! what lets `eval`/`serve`/`--resume` rebuild the exact manifest a
-//! `--model tiny|wide` run trained, and what turns a mismatched
-//! `--model` on resume into a loud error instead of a shape explosion.
+//! Version 2 added the model-topology block; version 3 the
+//! density-schedule spec string (`"default"` = the pruner's historical
+//! curve).  Older files still read: v1 defaults the topology to the
+//! builtin `paper` preset (the only topology v1 builds could train),
+//! and v1/v2 default the schedule to `"default"` (the only curve those
+//! builds could run).  The recorded topology is what lets
+//! `eval`/`serve`/`--resume` rebuild the exact manifest a `--model
+//! tiny|wide` run trained, and what turns a mismatched `--model` on
+//! resume into a loud error instead of a shape explosion; the recorded
+//! schedule is what lets `--resume` continue the density curve bitwise
+//! and reject a contradicting `--density-schedule` flag.
 //!
 //! Corruption detection is layered: the CRC-32 trailer catches bit rot
 //! and truncation, the manifest fingerprint refuses a checkpoint whose
@@ -130,8 +138,9 @@ impl std::error::Error for CheckpointError {}
 
 /// File magic: "LGCP" (LearningGroup CheckPoint).
 pub const MAGIC: [u8; 4] = *b"LGCP";
-/// Current format version (2: model topology recorded in the header).
-pub const VERSION: u32 = 2;
+/// Current format version (3: density-schedule spec recorded in the
+/// header; 2 added the model topology).
+pub const VERSION: u32 = 3;
 /// Oldest version this build still reads (v1: no topology block —
 /// defaults to the `paper` preset).
 pub const MIN_VERSION: u32 = 1;
@@ -165,6 +174,11 @@ pub struct CheckpointMeta {
     pub env: String,
     /// Pruner spec string, e.g. `"flgw:4"`.
     pub pruner: String,
+    /// Density-schedule spec string (v3), e.g. `"cosine:50,0.25"`, or
+    /// `"default"` for the pruner's historical curve (what v1/v2 files
+    /// decode to).  Run identity: `--resume` continues this curve and
+    /// rejects a contradicting `--density-schedule` flag.
+    pub schedule: String,
     /// The model topology the run trained (v2; v1 files default to the
     /// `paper` preset).  `eval`/`serve`/`--resume` rebuild the manifest
     /// from this, and a conflicting `--model` is rejected against it.
@@ -485,6 +499,8 @@ impl Checkpoint {
         for &e in &t.enc_widths {
             w.put_u32(e as u32);
         }
+        // v3: the density-schedule spec
+        w.put_str(&self.meta.schedule);
         w.put_f32_slice(&self.params);
         w.put_f32_slice(&self.sq_avg);
         w.put_f32_slice(&self.dmask_accum);
@@ -573,6 +589,12 @@ impl Checkpoint {
             // trained the paper layout
             ModelTopology::paper()
         };
+        let schedule = if version >= 3 {
+            r.str()?
+        } else {
+            // pre-v3 builds only ever ran each pruner's built-in curve
+            "default".to_string()
+        };
         let params = r.f32_vec()?;
         let sq_avg = r.f32_vec()?;
         let dmask_accum = r.f32_vec()?;
@@ -600,6 +622,7 @@ impl Checkpoint {
                 exec,
                 env,
                 pruner: pruner_spec,
+                schedule,
                 model,
             },
             manifest_fingerprint,
@@ -731,6 +754,7 @@ mod tests {
                 exec: ExecMode::Sparse,
                 env: "predator_prey".to_string(),
                 pruner: format!("flgw:{g}"),
+                schedule: "default".to_string(),
                 model: m.model.clone(),
             },
             manifest_fingerprint: m.fingerprint(),
@@ -912,6 +936,54 @@ mod tests {
         w.into_inner()
     }
 
+    /// Serialize a checkpoint in the **version-2** layout: identical to
+    /// `to_bytes` minus the density-schedule string.  Only valid for
+    /// default-schedule checkpoints (the only curve v2 builds ran).
+    fn v2_bytes(ckpt: &Checkpoint) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_bytes(&MAGIC);
+        w.put_u32(2);
+        w.put_u64(ckpt.manifest_fingerprint);
+        w.put_u64(ckpt.meta.iteration);
+        w.put_u64(ckpt.meta.episodes_done);
+        w.put_u64(ckpt.meta.seed);
+        w.put_u32(ckpt.meta.agents);
+        w.put_u32(ckpt.meta.batch);
+        w.put_u8(match ckpt.meta.exec {
+            ExecMode::DenseMasked => 0,
+            ExecMode::Sparse => 1,
+        });
+        w.put_str(&ckpt.meta.env);
+        w.put_str(&ckpt.meta.pruner);
+        let t = &ckpt.meta.model;
+        w.put_u32(t.obs_dim as u32);
+        w.put_u32(t.hidden as u32);
+        w.put_u32(t.n_actions as u32);
+        w.put_u32(t.n_gate as u32);
+        w.put_u32(t.episode_len as u32);
+        w.put_u32(t.comm_rounds as u32);
+        w.put_u32(t.enc_widths.len() as u32);
+        for &e in &t.enc_widths {
+            w.put_u32(e as u32);
+        }
+        w.put_f32_slice(&ckpt.params);
+        w.put_f32_slice(&ckpt.sq_avg);
+        w.put_f32_slice(&ckpt.dmask_accum);
+        ckpt.masks.write_to(&mut w);
+        match &ckpt.pruner {
+            PrunerStore::Stateless => w.put_u8(0),
+            PrunerStore::Flgw { g, grouping, sq_avg } => {
+                w.put_u8(1);
+                w.put_u32(*g);
+                w.put_f32_slice(grouping);
+                w.put_f32_slice(sq_avg);
+            }
+        }
+        let crc = crc32(w.as_slice());
+        w.put_u32(crc);
+        w.into_inner()
+    }
+
     /// Version-1 files (no topology block) still read, defaulting the
     /// topology to the builtin `paper` preset — the v1-compat contract.
     #[test]
@@ -923,6 +995,21 @@ mod tests {
         assert_eq!(decoded, ckpt, "v1 decode must equal the v2 original field for field");
         decoded.validate_manifest(&m).unwrap();
         // and re-serializing writes the current version with the block
+        let rewritten = Checkpoint::from_bytes(&decoded.to_bytes()).unwrap();
+        assert_eq!(rewritten, ckpt);
+    }
+
+    /// Version-2 files (no schedule string) still read, defaulting the
+    /// schedule to `"default"` — the v2-compat contract.
+    #[test]
+    fn reads_version2_checkpoints_with_default_schedule() {
+        let m = Manifest::builtin();
+        let ckpt = flgw_checkpoint(&m, 4);
+        let decoded = Checkpoint::from_bytes(&v2_bytes(&ckpt)).unwrap();
+        assert_eq!(decoded.meta.schedule, "default");
+        assert_eq!(decoded, ckpt, "v2 decode must equal the v3 original field for field");
+        decoded.validate_manifest(&m).unwrap();
+        // and re-serializing writes the current version with the string
         let rewritten = Checkpoint::from_bytes(&decoded.to_bytes()).unwrap();
         assert_eq!(rewritten, ckpt);
     }

@@ -2,6 +2,7 @@
 
 use std::path::PathBuf;
 
+use crate::coordinator::scheduler::{DensitySchedule, ScheduleShape};
 use crate::env::EnvConfig;
 use crate::manifest::ModelTopology;
 use crate::runtime::{ExecMode, SimdBackend};
@@ -55,6 +56,83 @@ impl PrunerChoice {
             PrunerChoice::Iterative(p) => format!("iterative:{p}"),
             PrunerChoice::BlockCirculant(b, f) => format!("bc:{b}x{f}"),
             PrunerChoice::Gst(b, f, p) => format!("gst:{b}x{f}:{p}"),
+        }
+    }
+}
+
+/// The `--density-schedule` knob: how the density target handed to the
+/// pruner's regeneration step moves over the run.
+///
+/// `Constant` pins the fully-annealed target from iteration 0 (each
+/// pruner clamps it to its own configured ceiling — e.g. `iterative:75`
+/// never goes below 25 % density).  `Linear`/`Cosine` hold density 1.0
+/// for `warmup` iterations, then anneal to `target` over the remaining
+/// iterations with the named [`ScheduleShape`].  Absent (`None` in
+/// [`TrainConfig`]), each pruner supplies its historical default curve
+/// via `PruningAlgorithm::default_schedule`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DensityScheduleChoice {
+    Constant,
+    /// Linear anneal: (warmup iterations, target density).
+    Linear(usize, f32),
+    /// Half-cosine anneal: (warmup iterations, target density).
+    Cosine(usize, f32),
+}
+
+impl DensityScheduleChoice {
+    /// Parse e.g. "constant", "linear:10,0.25", "cosine:50,0.25".
+    pub fn parse(s: &str) -> Option<Self> {
+        let (kind, rest) = match s.split_once(':') {
+            Some((k, r)) => (k, Some(r)),
+            None => (s, None),
+        };
+        match kind {
+            "constant" if rest.is_none() => Some(DensityScheduleChoice::Constant),
+            "linear" | "cosine" => {
+                let (w, t) = rest?.split_once(',')?;
+                let warmup = w.parse().ok()?;
+                let target: f32 = t.parse().ok()?;
+                if !(0.0..=1.0).contains(&target) {
+                    return None;
+                }
+                Some(match kind {
+                    "linear" => DensityScheduleChoice::Linear(warmup, target),
+                    _ => DensityScheduleChoice::Cosine(warmup, target),
+                })
+            }
+            _ => None,
+        }
+    }
+
+    /// The CLI spec string (round-trips through
+    /// [`DensityScheduleChoice::parse`]) — what the checkpoint header
+    /// records so `--resume` continues the same curve.
+    pub fn spec(&self) -> String {
+        match self {
+            DensityScheduleChoice::Constant => "constant".to_string(),
+            DensityScheduleChoice::Linear(w, t) => format!("linear:{w},{t}"),
+            DensityScheduleChoice::Cosine(w, t) => format!("cosine:{w},{t}"),
+        }
+    }
+
+    /// Materialize the concrete curve for a run of `total_iterations`.
+    ///
+    /// Density 0.0 means "fully annealed": each pruner clamps it to the
+    /// densest mask its own parameters allow, so `Constant` reproduces
+    /// the pruner's steady-state behavior from iteration 0.
+    pub fn schedule(&self, total_iterations: usize) -> DensitySchedule {
+        let (start, target, warmup, shape) = match *self {
+            DensityScheduleChoice::Constant => (0.0, 0.0, 0, ScheduleShape::Linear),
+            DensityScheduleChoice::Linear(w, t) => (1.0, t, w, ScheduleShape::Linear),
+            DensityScheduleChoice::Cosine(w, t) => (1.0, t, w, ScheduleShape::Cosine),
+        };
+        DensitySchedule {
+            start,
+            target,
+            warmup,
+            anneal: total_iterations.saturating_sub(warmup),
+            steps: 0,
+            shape,
         }
     }
 }
@@ -130,6 +208,12 @@ pub struct TrainConfig {
     /// panel path reorders only the survivor-lane grouping and is
     /// ULP-bounded against dense (`rust/tests/simd_kernels.rs`).
     pub strict_accum: bool,
+    /// Density schedule driving every pruner's regeneration step
+    /// (`--density-schedule constant|linear:<warmup>,<target>|`
+    /// `cosine:<warmup>,<target>`).  `None` keeps each pruner's
+    /// historical default curve.  Recorded in checkpoint headers;
+    /// `--resume` rejects a contradicting flag.
+    pub density_schedule: Option<DensityScheduleChoice>,
 }
 
 impl Default for TrainConfig {
@@ -154,6 +238,7 @@ impl Default for TrainConfig {
             model: ModelTopology::paper(),
             simd: SimdBackend::from_env(),
             strict_accum: false,
+            density_schedule: None,
         }
     }
 }
@@ -204,6 +289,53 @@ mod tests {
             assert_eq!(parsed.spec(), spec);
             assert_eq!(PrunerChoice::parse(&parsed.spec()), Some(parsed));
         }
+    }
+
+    #[test]
+    fn parses_density_schedule_choices() {
+        assert_eq!(
+            DensityScheduleChoice::parse("constant"),
+            Some(DensityScheduleChoice::Constant)
+        );
+        assert_eq!(
+            DensityScheduleChoice::parse("linear:10,0.25"),
+            Some(DensityScheduleChoice::Linear(10, 0.25))
+        );
+        assert_eq!(
+            DensityScheduleChoice::parse("cosine:50,0.5"),
+            Some(DensityScheduleChoice::Cosine(50, 0.5))
+        );
+        assert_eq!(DensityScheduleChoice::parse("constant:1"), None);
+        assert_eq!(DensityScheduleChoice::parse("linear"), None);
+        assert_eq!(DensityScheduleChoice::parse("linear:10"), None);
+        assert_eq!(DensityScheduleChoice::parse("cosine:10,1.5"), None);
+        assert_eq!(DensityScheduleChoice::parse("nope:1,0.5"), None);
+    }
+
+    #[test]
+    fn density_schedule_spec_round_trips() {
+        for spec in ["constant", "linear:10,0.25", "cosine:50,0.5", "cosine:0,0.1"] {
+            let parsed = DensityScheduleChoice::parse(spec).unwrap();
+            assert_eq!(parsed.spec(), spec);
+            assert_eq!(DensityScheduleChoice::parse(&parsed.spec()), Some(parsed));
+        }
+    }
+
+    #[test]
+    fn schedule_materializes_over_the_run() {
+        let s = DensityScheduleChoice::Constant.schedule(100);
+        for it in [0, 50, 99] {
+            assert_eq!(s.density_at(it), 0.0, "constant is fully annealed at {it}");
+        }
+        let s = DensityScheduleChoice::Cosine(20, 0.25).schedule(100);
+        assert_eq!(s.density_at(0), 1.0);
+        assert_eq!(s.density_at(19), 1.0);
+        assert!(s.density_at(60) < 1.0);
+        assert!(s.density_at(99) > 0.25, "last anneal iteration is still easing in");
+        assert_eq!(s.density_at(100), 0.25, "anneal spans exactly the run");
+        // warmup past the end of the run never anneals
+        let s = DensityScheduleChoice::Linear(10, 0.5).schedule(5);
+        assert_eq!(s.density_at(4), 1.0);
     }
 
     #[test]

@@ -28,9 +28,9 @@ pub mod rollout;
 mod scheduler;
 mod trainer;
 
-pub use config::{PrunerChoice, TrainConfig};
+pub use config::{DensityScheduleChoice, PrunerChoice, TrainConfig};
 pub use crate::runtime::ExecMode;
 pub use metrics::{IterationMetrics, MetricsLog, MetricsSink};
 pub use rollout::{collect_lockstep, collect_parallel, episode_seed, run_episode};
-pub use scheduler::{DensitySchedule, Stage, StageTimer};
+pub use scheduler::{DensitySchedule, ScheduleShape, Stage, StageTimer};
 pub use trainer::{EpisodeGrad, Pruner, ReducedBatch, Trainer};

@@ -36,6 +36,22 @@ impl Stage {
     }
 }
 
+/// How the anneal fraction is shaped between `start` and `target`.
+///
+/// `Linear` moves density at a constant rate; `Cosine` follows the
+/// half-cosine easing Stamatelis et al. use for actor-critic sparsity
+/// (slow start, fast middle, slow landing).  The shape only bends the
+/// *fraction* — warmup/anneal windows and staircase plateau boundaries
+/// are identical integer arithmetic either way, and host-side `cos` is
+/// deterministic per machine, so bit-identity across SIMD backends,
+/// worker counts and resume is preserved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ScheduleShape {
+    #[default]
+    Linear,
+    Cosine,
+}
+
 /// A warmup → anneal → hold density curve, the scheduler-level knob
 /// behind gradual pruning: hold `start` density for `warmup`
 /// iterations, anneal to `target` over the next `anneal` iterations,
@@ -60,6 +76,8 @@ pub struct DensitySchedule {
     pub anneal: usize,
     /// Plateau count over the anneal window; 0 = continuous.
     pub steps: usize,
+    /// Easing applied to the anneal fraction.
+    pub shape: ScheduleShape,
 }
 
 impl DensitySchedule {
@@ -80,6 +98,10 @@ impl DensitySchedule {
             // moves off `start` and the last plateau sits at `target`.
             let k = (t * self.steps / self.anneal) + 1;
             k.min(self.steps) as f32 / self.steps as f32
+        };
+        let frac = match self.shape {
+            ScheduleShape::Linear => frac,
+            ScheduleShape::Cosine => (1.0 - (std::f32::consts::PI * frac).cos()) / 2.0,
         };
         self.start + (self.target - self.start) * frac
     }
@@ -162,8 +184,19 @@ impl StageTimer {
 mod tests {
     use super::*;
 
+    fn flat(start: f32, target: f32) -> DensitySchedule {
+        DensitySchedule {
+            start,
+            target,
+            warmup: 0,
+            anneal: 0,
+            steps: 0,
+            shape: ScheduleShape::Linear,
+        }
+    }
+
     fn staircase() -> DensitySchedule {
-        DensitySchedule { start: 1.0, target: 0.25, warmup: 10, anneal: 40, steps: 4 }
+        DensitySchedule { warmup: 10, anneal: 40, steps: 4, ..flat(1.0, 0.25) }
     }
 
     #[test]
@@ -228,17 +261,40 @@ mod tests {
 
     #[test]
     fn degenerate_windows_jump_to_target() {
-        let s = DensitySchedule { start: 1.0, target: 0.5, warmup: 0, anneal: 0, steps: 3 };
+        let s = DensitySchedule { warmup: 0, anneal: 0, steps: 3, ..flat(1.0, 0.5) };
         assert_eq!(s.density_at(0), 0.5);
-        let s = DensitySchedule { start: 1.0, target: 0.5, warmup: 5, anneal: 0, steps: 0 };
+        let s = DensitySchedule { warmup: 5, anneal: 0, steps: 0, ..flat(1.0, 0.5) };
         assert_eq!(s.density_at(4), 1.0);
         assert_eq!(s.density_at(5), 0.5);
         // start == target is a flat line whatever the windows
-        let s = DensitySchedule { start: 0.5, target: 0.5, warmup: 3, anneal: 9, steps: 2 };
+        let s = DensitySchedule { warmup: 3, anneal: 9, steps: 2, ..flat(0.5, 0.5) };
         for it in 0..20 {
             assert_eq!(s.density_at(it), 0.5);
         }
         assert!(s.change_points().is_empty());
+    }
+
+    #[test]
+    fn cosine_shape_eases_but_keeps_endpoints() {
+        let lin = DensitySchedule { steps: 0, ..staircase() };
+        let cos = DensitySchedule { shape: ScheduleShape::Cosine, ..lin };
+        // endpoints and hold regions are identical to linear
+        assert_eq!(cos.density_at(0), 1.0);
+        assert_eq!(cos.density_at(10), 1.0);
+        assert_eq!(cos.density_at(50), 0.25);
+        assert_eq!(cos.density_at(10_000), 0.25);
+        // halfway through the anneal the two shapes agree...
+        assert!((cos.density_at(30) - lin.density_at(30)).abs() < 1e-6);
+        // ...but early on cosine lags (slow start), late it leads
+        assert!(cos.density_at(15) > lin.density_at(15));
+        assert!(cos.density_at(45) < lin.density_at(45));
+        // and it stays monotone non-increasing
+        let mut prev = cos.density_at(0);
+        for it in 1..60 {
+            let d = cos.density_at(it);
+            assert!(d <= prev, "cosine density rose at iteration {it}");
+            prev = d;
+        }
     }
 
     #[test]

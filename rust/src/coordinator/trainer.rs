@@ -28,11 +28,12 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
+use crate::accel::sparse_row_memory::SparseRowMemory;
 use crate::checkpoint::{Checkpoint, CheckpointMeta, MaskStore, PrunerStore};
-use crate::coordinator::config::{PrunerChoice, TrainConfig};
+use crate::coordinator::config::{DensityScheduleChoice, PrunerChoice, TrainConfig};
 use crate::coordinator::metrics::{IterationMetrics, MetricsLog, MetricsSink};
 use crate::coordinator::rollout;
-use crate::coordinator::scheduler::{Stage, StageTimer};
+use crate::coordinator::scheduler::{DensitySchedule, Stage, StageTimer};
 use crate::env::{discounted_returns, Episode, EnvConfig};
 use crate::model::ModelState;
 use crate::pruning::{
@@ -82,6 +83,31 @@ impl Pruner {
             Pruner::Iterative(p) => p.masks_changed(),
             Pruner::BlockCirculant(p) => p.masks_changed(),
             Pruner::Gst(p) => p.masks_changed(),
+        }
+    }
+
+    /// The OSEL encodings behind the current masks, when every layer's
+    /// mask is exactly OSEL-structured (see
+    /// [`PruningAlgorithm::encodings`]).
+    fn encodings(&self) -> Option<(&[SparseRowMemory], &[(Vec<u16>, Vec<u16>)])> {
+        match self {
+            Pruner::Dense(p) => p.encodings(),
+            Pruner::Flgw(p) => p.encodings(),
+            Pruner::Iterative(p) => p.encodings(),
+            Pruner::BlockCirculant(p) => p.encodings(),
+            Pruner::Gst(p) => p.encodings(),
+        }
+    }
+
+    /// The pruner's historical density curve (see
+    /// [`PruningAlgorithm::default_schedule`]).
+    fn default_schedule(&self, total_iterations: usize) -> DensitySchedule {
+        match self {
+            Pruner::Dense(p) => p.default_schedule(total_iterations),
+            Pruner::Flgw(p) => p.default_schedule(total_iterations),
+            Pruner::Iterative(p) => p.default_schedule(total_iterations),
+            Pruner::BlockCirculant(p) => p.default_schedule(total_iterations),
+            Pruner::Gst(p) => p.default_schedule(total_iterations),
         }
     }
 
@@ -328,6 +354,26 @@ impl Trainer {
         cfg.seed = ckpt.meta.seed;
         cfg.batch = ckpt.meta.batch as usize;
         cfg.model = ckpt.meta.model.clone();
+        // The density schedule is run identity too: the curve must
+        // continue bitwise.  Adopt the header's schedule; an explicit
+        // flag is only accepted when it restates what the header says.
+        let header_schedule = match ckpt.meta.schedule.as_str() {
+            "default" => None,
+            s => Some(DensityScheduleChoice::parse(s).ok_or_else(|| {
+                anyhow!("checkpoint has unknown density schedule spec {s:?}")
+            })?),
+        };
+        if let Some(flag) = cfg.density_schedule {
+            if header_schedule != Some(flag) {
+                return Err(anyhow!(
+                    "--density-schedule {} contradicts the checkpoint's schedule ({}) — \
+                     a resumed run continues the stored curve; drop the flag",
+                    flag.spec(),
+                    ckpt.meta.schedule
+                ));
+            }
+        }
+        cfg.density_schedule = header_schedule;
         cfg = cfg.with_agents(ckpt.meta.agents as usize).with_env(env);
         let mut trainer = Self::new(runtime, cfg)?;
         trainer.restore_from(ckpt)?;
@@ -424,8 +470,9 @@ impl Trainer {
 
     /// Snapshot the full training state as a [`Checkpoint`] — dense
     /// params + optimizer state, the masks in their OSEL-compressed form
-    /// when FLGW is running (dense packed bits otherwise), the FLGW
-    /// grouping state, and the counters a bit-identical resume needs.
+    /// when the pruner's masks are exactly OSEL-structured (dense packed
+    /// bits otherwise), the FLGW grouping state, and the counters a
+    /// bit-identical resume needs.
     pub fn checkpoint(&self) -> Result<Checkpoint> {
         let manifest = self.runtime.manifest();
         let masks = self.mask_store()?;
@@ -447,6 +494,11 @@ impl Trainer {
                 exec: self.cfg.exec,
                 env: self.cfg.env.name(),
                 pruner: self.cfg.pruner.spec(),
+                schedule: self
+                    .cfg
+                    .density_schedule
+                    .map(|c| c.spec())
+                    .unwrap_or_else(|| "default".to_string()),
                 model: manifest.model.clone(),
             },
             manifest_fingerprint: manifest.fingerprint(),
@@ -476,14 +528,16 @@ impl Trainer {
     }
 
     /// The current masks in their compact stored form: OSEL per-layer
-    /// encodings when FLGW runs, packed dense bits otherwise.  This is
-    /// both what checkpoints persist and what the distributed
-    /// coordinator broadcasts after a mask regeneration.
+    /// encodings when the running pruner's masks are exactly
+    /// OSEL-structured (FLGW once annealed, block-circulant), packed
+    /// dense bits otherwise (GST, iterative magnitude, mid-blend
+    /// warmups).  This is both what checkpoints persist and what the
+    /// distributed coordinator broadcasts after a mask regeneration.
     pub fn mask_store(&self) -> Result<MaskStore> {
         let manifest = self.runtime.manifest();
-        Ok(match self.pruner.as_flgw() {
-            Some(f) if f.encodings.len() == manifest.masked_layers.len() => {
-                MaskStore::from_encodings(manifest, &f.encodings, f.layer_keys())?
+        Ok(match self.pruner.encodings() {
+            Some((encodings, keys)) if encodings.len() == manifest.masked_layers.len() => {
+                MaskStore::from_encodings(manifest, encodings, keys)?
             }
             _ => MaskStore::from_dense_masks(&self.state.masks),
         })
@@ -500,9 +554,11 @@ impl Trainer {
     /// no-op regeneration deliberately keeps valid).
     ///
     /// In sparse exec mode the masks upload also carries the compressed
-    /// structure the native kernels compute on: straight from FLGW's
-    /// per-layer OSEL encodings when that pruner is running (and has
-    /// encoded at least once), else from a scan of the dense masks.
+    /// structure the native kernels compute on: straight from the
+    /// pruner's per-layer OSEL encodings when its masks are exactly
+    /// OSEL-structured (FLGW, block-circulant — and they have encoded
+    /// at least once), else from a scan of the dense masks — so every
+    /// pruner, structured or not, trains under `--exec sparse`.
     /// The row→core partition is sized by [`TrainConfig::intra_threads`]
     /// — the intra-op threads of the sparse kernels' row fan-out —
     /// deliberately decoupled from the rollout worker count (neither
@@ -520,9 +576,9 @@ impl Trainer {
                 ExecMode::Sparse => {
                     let manifest = self.runtime.manifest();
                     let cores = self.cfg.intra_threads.max(1);
-                    let model = match self.pruner.as_flgw() {
-                        Some(f) if f.encodings.len() == manifest.masked_layers.len() => {
-                            SparseModel::from_encodings(manifest, &f.encodings, cores)?
+                    let model = match self.pruner.encodings() {
+                        Some((encodings, _)) if encodings.len() == manifest.masked_layers.len() => {
+                            SparseModel::from_encodings(manifest, encodings, cores)?
                         }
                         _ => SparseModel::from_dense_masks(manifest, &self.state.masks, cores)?,
                     }
@@ -594,10 +650,21 @@ impl Trainer {
         })
     }
 
+    /// The density curve this run follows: the configured
+    /// `--density-schedule` when set, else the pruner's historical
+    /// default (see [`PruningAlgorithm::default_schedule`]).
+    pub fn density_schedule(&self) -> DensitySchedule {
+        match self.cfg.density_schedule {
+            Some(c) => c.schedule(self.cfg.iterations),
+            None => self.pruner.default_schedule(self.cfg.iterations),
+        }
+    }
+
     /// Stage 1: weight grouping / mask regeneration over the previous
-    /// iteration's dmask accumulator.  Returns whether the masks
-    /// actually changed (the distributed coordinator broadcasts the new
-    /// store exactly then).
+    /// iteration's dmask accumulator, at the density the run's schedule
+    /// assigns to `iteration`.  Returns whether the masks actually
+    /// changed (the distributed coordinator broadcasts the new store
+    /// exactly then).
     pub fn regroup(&mut self, iteration: usize) -> Result<bool> {
         let dmasks = std::mem::take(&mut self.dmask_accum);
         let manifest = self.runtime.manifest().clone();
@@ -606,6 +673,7 @@ impl Trainer {
             iteration,
             total_iterations: self.cfg.iterations,
             dmasks: &dmasks,
+            target_density: self.density_schedule().density_at(iteration),
         };
         let state = &mut self.state;
         let pruner = &mut self.pruner;

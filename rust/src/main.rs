@@ -12,6 +12,7 @@
 //!                      [--batch-exec] [--intra-threads T]
 //!                      [--simd scalar|auto|avx2|neon] [--strict-accum]
 //!                      [--pruner dense|flgw:G|iterative:P|bc:BxF|gst:BxF:P]
+//!                      [--density-schedule constant|linear:W,T|cosine:W,T]
 //!                      [--seed S] [--csv PATH] [--metrics-out PATH]
 //!                      [--save-every N] [--checkpoint-dir DIR]
 //!                      [--resume CKPT]
@@ -68,10 +69,21 @@
 //! knobs (see `cargo bench --bench batched_exec` and
 //! docs/BENCHMARKS.md).
 //!
+//! `--density-schedule` moves the density target the pruner's
+//! regeneration step receives over the run: `constant` pins the
+//! fully-annealed target from iteration 0, `linear:W,T`/`cosine:W,T`
+//! hold density 1.0 for W warmup iterations then anneal to target T
+//! with the named shape.  Every pruner honors it (FLGW and
+//! block-circulant blend dense rows in deterministically; iterative and
+//! GST re-threshold).  Absent, each pruner runs its historical default
+//! curve.
+//!
 //! Checkpointing: `--checkpoint-dir` (plus optional `--save-every N`)
 //! writes versioned, OSEL-compressed, CRC-protected checkpoints;
 //! `--resume CKPT` continues a run bit-identically to one that never
-//! stopped (the total `--iterations` still counts from 0).  `eval`
+//! stopped (the total `--iterations` still counts from 0; the density
+//! schedule rides in the header, and a contradicting
+//! `--density-schedule` flag on resume is rejected).  `eval`
 //! replays a checkpointed policy over a fixed episode count on R
 //! worker threads; `serve` sustains it for a wall-clock budget — both
 //! report steps/sec, episodes/sec and reward statistics as JSON.
@@ -100,7 +112,9 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use learning_group::checkpoint::Checkpoint;
-use learning_group::coordinator::{ExecMode, PrunerChoice, TrainConfig, Trainer};
+use learning_group::coordinator::{
+    DensityScheduleChoice, ExecMode, PrunerChoice, TrainConfig, Trainer,
+};
 use learning_group::dist::{DistCoordinator, DistOptions};
 use learning_group::env::EnvConfig;
 use learning_group::experiments;
@@ -171,6 +185,18 @@ fn cmd_train(args: &Args) -> Result<()> {
         .unwrap_or_else(|| "flgw:4".to_string());
     let pruner = PrunerChoice::parse(&pruner_s)
         .ok_or_else(|| anyhow!("unknown pruner spec {pruner_s:?}"))?;
+    let density_schedule = args
+        .flags
+        .get("density-schedule")
+        .map(|s| {
+            DensityScheduleChoice::parse(s).ok_or_else(|| {
+                anyhow!(
+                    "unknown density schedule {s:?} \
+                     (constant | linear:<warmup>,<target> | cosine:<warmup>,<target>)"
+                )
+            })
+        })
+        .transpose()?;
     let env_s = args
         .flags
         .get("env")
@@ -203,6 +229,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         batch: args.get("batch", 4)?,
         iterations: args.get("iterations", 200)?,
         pruner,
+        density_schedule,
         seed: args.get("seed", 1)?,
         rollouts: args.get("rollouts", 1)?,
         log_every: args.get("log-every", 10)?,
@@ -560,6 +587,9 @@ fn run() -> Result<()> {
             println!("             --simd scalar|auto|avx2|neon (kernel backend; also LG_SIMD env)");
             println!("             --strict-accum (sparse kernels keep exact dense accumulation order)");
             println!("             --pruner dense|flgw:G|iterative:P|bc:BxF|gst:BxF:P");
+            println!("             --density-schedule constant|linear:W,T|cosine:W,T");
+            println!("               (density target over the run: W warmup iterations, target T;");
+            println!("                absent = the pruner's historical default curve)");
             println!("             --save-every N --checkpoint-dir DIR (periodic checkpoints)");
             println!("             --resume CKPT (continue bit-identically from a checkpoint)");
             println!("             --metrics-out PATH (per-iteration JSONL metrics sink)");

@@ -5,9 +5,19 @@
 //! (structured sparsity with cheap encoding but a low compression ratio —
 //! the weakness the paper notes).  Keep ratio = 1 / `factor`: block-row
 //! `r` keeps tiles at columns `c` with `(c - r) mod factor == 0`.
+//!
+//! That keep rule is exactly OSEL-structured: with `ig[i] = (i / block)
+//! mod factor` and `og[j] = (j / block) mod factor`, the circulant mask
+//! is the group-match mask `ig[i] == og[j]` with G = `factor` — so this
+//! pruner runs through the same [`OselEncoder`] as FLGW and exposes
+//! [`SparseRowMemory`] encodings for compact checkpoints and the sparse
+//! execution path.
 
 use anyhow::Result;
 
+use crate::accel::osel::OselEncoder;
+use crate::accel::sparse_row_memory::SparseRowMemory;
+use crate::manifest::Manifest;
 use crate::model::ModelState;
 use crate::pruning::{PruneContext, PruningAlgorithm};
 
@@ -17,12 +27,102 @@ pub struct BlockCirculantPruner {
     pub block: usize,
     /// Compression factor: 1 of every `factor` tiles survives.
     pub factor: usize,
+    encoder: OselEncoder,
+    /// Per-layer OSEL encodings behind the current masks (layer order;
+    /// empty before the first `update_masks`).
+    encodings: Vec<SparseRowMemory>,
+    /// Per-layer (IG, OG) circulant group assignments — fixed by the
+    /// layer shape, stored so checkpoints can carry them alongside the
+    /// encodings like FLGW's learned keys.
+    layer_key: Vec<(Vec<u16>, Vec<u16>)>,
+    /// Per-layer count of rows carrying the structural mask at the last
+    /// write (smaller than the row count during a dense-warmup blend).
+    blend_rows: Vec<usize>,
+    /// Whether the last `update_masks` wrote any layer.
+    changed: bool,
 }
 
 impl BlockCirculantPruner {
     pub fn new(block: usize, factor: usize) -> Self {
         assert!(block > 0 && factor > 0);
-        BlockCirculantPruner { block, factor }
+        BlockCirculantPruner {
+            block,
+            factor,
+            encoder: OselEncoder::default(),
+            encodings: Vec::new(),
+            layer_key: Vec::new(),
+            blend_rows: Vec::new(),
+            changed: true,
+        }
+    }
+
+    /// The circulant group index of a row/column coordinate.
+    fn group_of(&self, idx: usize) -> u16 {
+        ((idx / self.block) % self.factor) as u16
+    }
+
+    /// Write the masks at scheduled density `d`, keeping the leading
+    /// rows structural and the rest dense during a warmup blend (the
+    /// same deterministic row-prefix blend FLGW uses).  `force` rewrites
+    /// even when the blend level is cached — GST needs that, because its
+    /// phase-2 magnitude pruning dirties the mask after every phase-1
+    /// write.
+    pub(crate) fn write_masks(
+        &mut self,
+        state: &mut ModelState,
+        manifest: &Manifest,
+        target_density: f32,
+        force: bool,
+    ) -> Result<()> {
+        if self.encodings.len() != manifest.masked_layers.len() {
+            self.encodings.clear();
+            self.layer_key.clear();
+            self.blend_rows.clear();
+        }
+        self.changed = false;
+        let s = 1.0 / self.factor as f32;
+        for (li, layer) in manifest.masked_layers.iter().enumerate() {
+            let (rows, cols) = (layer.rows, layer.cols);
+            let k = if target_density <= s || s >= 1.0 {
+                rows
+            } else {
+                let f = ((1.0 - target_density) / (1.0 - s)).clamp(0.0, 1.0);
+                ((f * rows as f32).round() as usize).min(rows)
+            };
+            // the circulant assignment never moves, so only a blend
+            // step (or the first write) re-encodes
+            if !force && li < self.encodings.len() && self.blend_rows[li] == k {
+                continue;
+            }
+            let ig: Vec<u16> = (0..rows).map(|i| self.group_of(i)).collect();
+            let og: Vec<u16> = (0..cols).map(|j| self.group_of(j)).collect();
+            let (srm, _stats) = self.encoder.encode(&ig, &og, self.factor);
+            let mut mask = OselEncoder::materialize_mask(&srm);
+            for v in mask.iter_mut().skip(k * cols) {
+                *v = 1.0; // dense-warmup rows
+            }
+            state.masks[layer.offset..layer.offset + layer.size()]
+                .copy_from_slice(&mask);
+            self.changed = true;
+            if li < self.encodings.len() {
+                self.encodings[li] = srm;
+                self.layer_key[li] = (ig, og);
+                self.blend_rows[li] = k;
+            } else {
+                self.encodings.push(srm);
+                self.layer_key.push((ig, og));
+                self.blend_rows.push(k);
+            }
+        }
+        Ok(())
+    }
+
+    /// Whether any layer currently carries dense-warmup rows.
+    fn blended(&self) -> bool {
+        self.encodings
+            .iter()
+            .zip(&self.blend_rows)
+            .any(|(e, &k)| k < e.index_list().len())
     }
 }
 
@@ -32,19 +132,18 @@ impl PruningAlgorithm for BlockCirculantPruner {
     }
 
     fn update_masks(&mut self, state: &mut ModelState, ctx: &PruneContext<'_>) -> Result<()> {
-        for layer in ctx.manifest.masked_layers.clone() {
-            let (rows, cols) = (layer.rows, layer.cols);
-            let mask = state.layer_mask_mut(ctx.manifest, &layer.name)?;
-            for i in 0..rows {
-                let br = i / self.block;
-                for j in 0..cols {
-                    let bc = j / self.block;
-                    let keep = (bc + self.factor - br % self.factor) % self.factor == 0;
-                    mask[i * cols + j] = if keep { 1.0 } else { 0.0 };
-                }
-            }
+        self.write_masks(state, ctx.manifest, ctx.target_density, false)
+    }
+
+    fn masks_changed(&self) -> bool {
+        self.changed
+    }
+
+    fn encodings(&self) -> Option<(&[SparseRowMemory], &[(Vec<u16>, Vec<u16>)])> {
+        if self.encodings.is_empty() || self.blended() {
+            return None;
         }
-        Ok(())
+        Some((&self.encodings, &self.layer_key))
     }
 }
 
@@ -111,8 +210,46 @@ mod tests {
         let mut s = tiny_state(&m);
         let mut p = BlockCirculantPruner::new(2, 4);
         p.update_masks(&mut s, &ctx(&m, 0, &[])).unwrap();
+        assert!(p.masks_changed());
         let first = s.masks.clone();
         p.update_masks(&mut s, &ctx(&m, 10, &[])).unwrap();
+        assert!(!p.masks_changed(), "fixed structure ⇒ no-op regeneration");
         assert_eq!(first, s.masks);
+    }
+
+    #[test]
+    fn encodings_reproduce_the_circulant_mask() {
+        let m = tiny_manifest();
+        let mut s = tiny_state(&m);
+        let mut p = BlockCirculantPruner::new(2, 2);
+        p.update_masks(&mut s, &ctx(&m, 0, &[])).unwrap();
+        let (enc, keys) = p.encodings().expect("unblended BC is pure OSEL");
+        assert_eq!(enc.len(), m.masked_layers.len());
+        assert_eq!(keys.len(), m.masked_layers.len());
+        for (e, layer) in enc.iter().zip(&m.masked_layers) {
+            let mask = OselEncoder::materialize_mask(e);
+            assert_eq!(
+                &s.masks[layer.offset..layer.offset + layer.size()],
+                &mask[..],
+                "layer {}",
+                layer.name
+            );
+        }
+    }
+
+    #[test]
+    fn dense_warmup_blends_then_anneals() {
+        let m = tiny_manifest();
+        let mut s = tiny_state(&m);
+        let mut p = BlockCirculantPruner::new(2, 2);
+        p.update_masks(&mut s, &ctx_d(&m, 0, &[], 1.0)).unwrap();
+        assert!(s.masks.iter().all(|&x| x == 1.0));
+        assert!(p.encodings().is_none());
+        p.update_masks(&mut s, &ctx_d(&m, 1, &[], 0.75)).unwrap();
+        let d_mid = s.mask_density();
+        assert!(d_mid < 1.0 && d_mid > 0.5, "blend density {d_mid}");
+        p.update_masks(&mut s, &ctx_d(&m, 2, &[], 0.0)).unwrap();
+        assert!((s.mask_density() - 0.5).abs() < 0.05);
+        assert!(p.encodings().is_some());
     }
 }

@@ -39,6 +39,13 @@ pub struct FlgwPruner {
     /// hundred u16s per layer, so a hash would trade exactness for
     /// nothing).
     layer_key: Vec<(Vec<u16>, Vec<u16>)>,
+    /// Per-layer count of rows carrying the structural (OSEL) mask at
+    /// the last encode; rows past the count are dense.  Equal to the
+    /// layer's row count when the scheduled density is at or below the
+    /// structural density (the fully-annealed steady state); smaller
+    /// during a dense-warmup blend.  Part of the skip key — a density
+    /// step re-encodes even when the grouping is stable.
+    blend_rows: Vec<usize>,
     /// Whether the last `update_masks` re-encoded at least one layer.
     changed: bool,
 }
@@ -51,6 +58,7 @@ impl FlgwPruner {
             encodings: Vec::new(),
             stats: OselStats::default(),
             layer_key: Vec::new(),
+            blend_rows: Vec::new(),
             changed: true,
         }
     }
@@ -97,46 +105,98 @@ impl FlgwPruner {
                 layer_key.len()
             ));
         }
+        // A checkpointed OSEL encoding is by construction unblended:
+        // every row carries the structural mask.
+        self.blend_rows = encodings.iter().map(|e| e.index_list().len()).collect();
         self.encodings = encodings;
         self.layer_key = layer_key;
         self.changed = false;
         Ok(())
     }
 
+    /// How many leading rows of a `rows × cols` layer keep the
+    /// structural mask at scheduled density `d`, the rest staying
+    /// dense.  `s` is the layer's structural density.  Deterministic
+    /// integer blend: d ≤ s (incl. the fully-annealed 0.0) ⇒ all rows
+    /// structural; d = 1 ⇒ none.
+    fn structural_rows(rows: usize, s: f32, d: f32) -> usize {
+        if d <= s || s >= 1.0 {
+            return rows;
+        }
+        let f = ((1.0 - d) / (1.0 - s)).clamp(0.0, 1.0);
+        ((f * rows as f32).round() as usize).min(rows)
+    }
+
     /// Encode the masked layers and write the masks into `state`,
     /// skipping layers whose argmax index lists — and therefore masks —
-    /// are unchanged since the last encode.
-    fn encode_all(&mut self, state: &mut ModelState, manifest: &Manifest) -> Result<()> {
+    /// are unchanged since the last encode at the same blend level.
+    ///
+    /// `target_density` above the layer's structural density blends a
+    /// dense warmup in: the leading [`Self::structural_rows`] rows keep
+    /// the OSEL mask, the rest stay dense.  At or below it (including
+    /// the fully-annealed 0.0) the mask is pure OSEL structure.
+    fn encode_all(
+        &mut self,
+        state: &mut ModelState,
+        manifest: &Manifest,
+        target_density: f32,
+    ) -> Result<()> {
         if self.encodings.len() != manifest.masked_layers.len() {
             // first run (or a manifest swap): encode everything
             self.encodings.clear();
             self.layer_key.clear();
+            self.blend_rows.clear();
         }
         self.changed = false;
         for (li, layer) in manifest.masked_layers.iter().enumerate() {
             let ig = self.grouping.ig_indexes(manifest, &layer.name)?;
             let og = self.grouping.og_indexes(manifest, &layer.name)?;
+            let (rows, cols) = (ig.len(), og.len());
+            // structural density: row i keeps the columns assigned to
+            // its group, so the kept count is Σ_i |{j : og[j] = ig[i]}|
+            let mut cnt = vec![0usize; self.grouping.g];
+            for &o in &og {
+                cnt[o as usize] += 1;
+            }
+            let kept: usize = ig.iter().map(|&i| cnt[i as usize]).sum();
+            let s = kept as f32 / (rows * cols).max(1) as f32;
+            let k = Self::structural_rows(rows, s, target_density);
             if li < self.encodings.len()
                 && self.layer_key[li].0 == ig
                 && self.layer_key[li].1 == og
+                && self.blend_rows[li] == k
             {
-                continue; // unchanged assignments ⇒ identical mask
+                continue; // unchanged assignments + blend ⇒ identical mask
             }
             let (srm, stats) = self.encoder.encode(&ig, &og, self.grouping.g);
-            let mask = OselEncoder::materialize_mask(&srm);
+            let mut mask = OselEncoder::materialize_mask(&srm);
+            for v in mask.iter_mut().skip(k * cols) {
+                *v = 1.0; // dense-warmup rows
+            }
             state.masks[layer.offset..layer.offset + layer.size()]
                 .copy_from_slice(&mask);
             self.changed = true;
             if li < self.encodings.len() {
                 self.encodings[li] = srm;
                 self.layer_key[li] = (ig, og);
+                self.blend_rows[li] = k;
             } else {
                 self.encodings.push(srm);
                 self.layer_key.push((ig, og));
+                self.blend_rows.push(k);
             }
             merge_stats(&mut self.stats, stats);
         }
         Ok(())
+    }
+
+    /// Whether any layer currently carries dense-warmup rows (in which
+    /// case the cached encodings do not describe the masks).
+    fn blended(&self) -> bool {
+        self.encodings
+            .iter()
+            .zip(&self.blend_rows)
+            .any(|(e, &k)| k < e.index_list().len())
     }
 }
 
@@ -155,11 +215,18 @@ impl PruningAlgorithm for FlgwPruner {
     }
 
     fn update_masks(&mut self, state: &mut ModelState, ctx: &PruneContext<'_>) -> Result<()> {
-        self.encode_all(state, ctx.manifest)
+        self.encode_all(state, ctx.manifest, ctx.target_density)
     }
 
     fn masks_changed(&self) -> bool {
         self.changed
+    }
+
+    fn encodings(&self) -> Option<(&[SparseRowMemory], &[(Vec<u16>, Vec<u16>)])> {
+        if self.encodings.is_empty() || self.blended() {
+            return None;
+        }
+        Some((&self.encodings, &self.layer_key))
     }
 }
 
@@ -270,6 +337,32 @@ mod tests {
         // mismatched lengths are rejected
         let mut r = pruner(&m, 4);
         assert!(r.restore_encodings(Vec::new(), vec![(vec![0], vec![0])]).is_err());
+    }
+
+    #[test]
+    fn dense_warmup_blends_rows_then_anneals() {
+        let m = tiny_manifest();
+        let mut s = tiny_state(&m);
+        let mut p = pruner(&m, 4);
+        // full warmup: every row dense, encodings don't describe the mask
+        p.update_masks(&mut s, &ctx_d(&m, 0, &[], 1.0)).unwrap();
+        assert!(s.masks.iter().all(|&x| x == 1.0));
+        assert!(p.encodings().is_none());
+        // mid-anneal: leading rows structural, trailing rows still dense
+        p.update_masks(&mut s, &ctx_d(&m, 1, &[], 0.7)).unwrap();
+        assert!(p.masks_changed());
+        let d_mid = s.mask_density();
+        assert!(d_mid < 1.0, "blend must prune something at d=0.7");
+        assert!(p.encodings().is_none(), "blended masks are not pure OSEL");
+        // same density again ⇒ no-op regeneration
+        p.update_masks(&mut s, &ctx_d(&m, 2, &[], 0.7)).unwrap();
+        assert!(!p.masks_changed());
+        // fully annealed ⇒ pure structure, encodings exposed
+        p.update_masks(&mut s, &ctx_d(&m, 3, &[], 0.0)).unwrap();
+        assert!(s.mask_density() < d_mid);
+        let (enc, keys) = p.encodings().expect("annealed FLGW is pure OSEL");
+        assert_eq!(enc.len(), m.masked_layers.len());
+        assert_eq!(keys.len(), m.masked_layers.len());
     }
 
     #[test]

@@ -2,12 +2,18 @@
 //!
 //! Combines block-circulant compression with iterative magnitude pruning
 //! *within* the surviving blocks until a target sparsity is reached.  The
-//! paper's concern: pruning inside already-compressed blocks harms MARL's
-//! shared centralized network — visible as the GST accuracy gap in
-//! Fig. 4(a).
+//! stage-wise density ramp GST prescribes is owned by the run's
+//! [`DensitySchedule`]; the pruner applies whatever density the scheduler
+//! hands it, clamped between the block-circulant floor and its configured
+//! target.  Its [`PruningAlgorithm::default_schedule`] reproduces the
+//! historical curve (floor immediately, extra in-block sparsity ramping
+//! over the first half of training).  The paper's concern: pruning inside
+//! already-compressed blocks harms MARL's shared centralized network —
+//! visible as the GST accuracy gap in Fig. 4(a).
 
 use anyhow::Result;
 
+use crate::coordinator::{DensitySchedule, ScheduleShape};
 use crate::model::ModelState;
 use crate::pruning::block_circulant::BlockCirculantPruner;
 use crate::pruning::{PruneContext, PruningAlgorithm};
@@ -17,8 +23,8 @@ pub struct GroupSparseTrainingPruner {
     pub block_circulant: BlockCirculantPruner,
     /// Overall target sparsity (>= the block-circulant floor).
     pub target_sparsity: f32,
-    /// Ramp fraction for the in-block magnitude phase.
-    pub ramp_fraction: f32,
+    /// Whether the last `update_masks` call changed any mask bit.
+    changed: bool,
 }
 
 impl GroupSparseTrainingPruner {
@@ -26,8 +32,13 @@ impl GroupSparseTrainingPruner {
         GroupSparseTrainingPruner {
             block_circulant: BlockCirculantPruner::new(block, factor),
             target_sparsity,
-            ramp_fraction: 0.5,
+            changed: true,
         }
+    }
+
+    /// The structural sparsity floor of the block-circulant phase.
+    fn floor(&self) -> f32 {
+        1.0 - 1.0 / self.block_circulant.factor as f32
     }
 }
 
@@ -37,19 +48,21 @@ impl PruningAlgorithm for GroupSparseTrainingPruner {
     }
 
     fn update_masks(&mut self, state: &mut ModelState, ctx: &PruneContext<'_>) -> Result<()> {
-        // phase 1: structural floor
-        self.block_circulant.update_masks(state, ctx)?;
-        let floor = 1.0 - 1.0 / self.block_circulant.factor as f32;
-        if self.target_sparsity <= floor {
-            return Ok(());
-        }
-        // phase 2: in-block magnitude pruning ramping to target
-        let ramp_len = (ctx.total_iterations as f32 * self.ramp_fraction).max(1.0);
-        let progress = (ctx.iteration as f32 / ramp_len).min(1.0);
-        let extra_target = (self.target_sparsity - floor) * progress;
-        // fraction of the *surviving* weights to prune
-        let in_block = extra_target / (1.0 - floor);
+        let before = state.masks.clone();
+        // phase 1: the circulant structure at the scheduled density
+        // (rows blend dense→structural during a warmup, exactly like
+        // the standalone block-circulant pruner); forced, because
+        // phase 2 dirties the mask after every write
+        self.block_circulant
+            .write_masks(state, ctx.manifest, ctx.target_density, true)?;
+        let floor = self.floor();
+        // total sparsity to reach: the schedule's ask, never below what
+        // phase 1 already established, never above the configured target
+        // (the fully-annealed 0.0 density clamps *to* the target)
+        let applied =
+            (1.0 - ctx.target_density).clamp(0.0, self.target_sparsity.max(floor));
 
+        // phase 2: magnitude pruning inside the surviving blocks
         for layer in ctx.manifest.masked_layers.clone() {
             let w = state.layer(ctx.manifest, &layer.name)?.to_vec();
             let mask = state.layer_mask_mut(ctx.manifest, &layer.name)?;
@@ -59,13 +72,39 @@ impl PruningAlgorithm for GroupSparseTrainingPruner {
                 .filter(|(_, &mk)| mk == 1.0)
                 .map(|(i, _)| (i, w[i].abs()))
                 .collect();
+            let s_now = 1.0 - surviving.len() as f32 / mask.len().max(1) as f32;
+            if applied <= s_now || s_now >= 1.0 {
+                continue;
+            }
+            // fraction of the *surviving* weights to prune
+            let in_block = (applied - s_now) / (1.0 - s_now);
             surviving.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
             let k = (surviving.len() as f32 * in_block) as usize;
             for &(i, _) in surviving.iter().take(k) {
                 mask[i] = 0.0;
             }
         }
+        self.changed = state.masks != before;
         Ok(())
+    }
+
+    fn masks_changed(&self) -> bool {
+        self.changed
+    }
+
+    /// The pre-scheduler ramp: the block floor from iteration 0, extra
+    /// in-block sparsity ramping linearly to `target_sparsity` over the
+    /// first half of training, then hold.
+    fn default_schedule(&self, total_iterations: usize) -> DensitySchedule {
+        let floor = self.floor();
+        DensitySchedule {
+            start: 1.0 - floor,
+            target: 1.0 - self.target_sparsity.max(floor),
+            warmup: 0,
+            anneal: ((total_iterations as f32 * 0.5).max(1.0)) as usize,
+            steps: 0,
+            shape: ScheduleShape::Linear,
+        }
     }
 }
 
@@ -75,14 +114,15 @@ mod tests {
     use crate::pruning::testutil::*;
 
     #[test]
-    fn respects_block_floor_then_ramps() {
+    fn default_schedule_respects_block_floor_then_ramps() {
         let m = tiny_manifest();
         let mut s = tiny_state(&m);
         let mut p = GroupSparseTrainingPruner::new(2, 2, 0.8);
-        p.update_masks(&mut s, &ctx(&m, 0, &[])).unwrap();
+        let sched = p.default_schedule(100);
+        p.update_masks(&mut s, &ctx_d(&m, 0, &[], sched.density_at(0))).unwrap();
         let early = 1.0 - s.mask_density();
         assert!((early - 0.5).abs() < 0.05, "early sparsity {early}");
-        p.update_masks(&mut s, &ctx(&m, 99, &[])).unwrap();
+        p.update_masks(&mut s, &ctx_d(&m, 99, &[], sched.density_at(99))).unwrap();
         let late = 1.0 - s.mask_density();
         assert!((late - 0.8).abs() < 0.05, "late sparsity {late}");
     }
@@ -101,16 +141,18 @@ mod tests {
     fn in_block_pruning_removes_smallest_survivors() {
         let m = tiny_manifest();
         let mut s = tiny_state(&m);
+        // fully annealed context jumps straight to the 0.75 target
         let mut p = GroupSparseTrainingPruner::new(2, 2, 0.75);
-        p.ramp_fraction = 0.01;
         p.update_masks(&mut s, &ctx(&m, 99, &[])).unwrap();
         // pruned-within-block weights are smaller than kept ones
         for layer in &m.masked_layers {
             let w = s.layer(&m, &layer.name).unwrap().to_vec();
             let mask = s.layer_mask(&m, &layer.name).unwrap().to_vec();
-            // recompute the structural mask to identify in-block prunes
+            // recompute the structural mask (fresh pruner: the embedded
+            // one would skip the write as a cached no-op) to identify
+            // in-block prunes
             let mut s2 = tiny_state(&m);
-            p.block_circulant.update_masks(&mut s2, &ctx(&m, 0, &[])).unwrap();
+            BlockCirculantPruner::new(2, 2).update_masks(&mut s2, &ctx(&m, 0, &[])).unwrap();
             let structural = s2.layer_mask(&m, &layer.name).unwrap();
             let min_kept = w
                 .iter()
@@ -126,5 +168,20 @@ mod tests {
                 .fold(0.0f32, f32::max);
             assert!(min_kept >= max_inblock_pruned);
         }
+        let sp = 1.0 - s.mask_density();
+        assert!((sp - 0.75).abs() < 0.05, "annealed sparsity {sp}");
+    }
+
+    #[test]
+    fn noop_regeneration_reports_unchanged() {
+        let m = tiny_manifest();
+        let mut s = tiny_state(&m);
+        let mut p = GroupSparseTrainingPruner::new(2, 2, 0.75);
+        p.update_masks(&mut s, &ctx_d(&m, 0, &[], 0.25)).unwrap();
+        assert!(p.masks_changed());
+        let first = s.masks.clone();
+        p.update_masks(&mut s, &ctx_d(&m, 1, &[], 0.25)).unwrap();
+        assert!(!p.masks_changed(), "same weights + density ⇒ same mask");
+        assert_eq!(s.masks, first);
     }
 }

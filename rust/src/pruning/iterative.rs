@@ -1,35 +1,39 @@
 //! Iterative magnitude pruning (EagerPruning-style baseline, §III-A).
 //!
 //! "Eliminates the parameters with the smallest value every iteration, so
-//! the pruning ratio increases as the training progresses."  The ratio
-//! ramps linearly from 0 to `target_sparsity` over the first
-//! `ramp_fraction` of training, then holds — the gradual schedule whose
-//! low starting sparsity costs the hardware its early-stage speedup
-//! (§II-B), and whose per-iteration sort is what OSEL avoids.
+//! the pruning ratio increases as the training progresses."  The ramp is
+//! owned by the run's [`DensitySchedule`] — the pruner just applies
+//! whatever density the scheduler hands it, clamped to its configured
+//! `target_sparsity` ceiling.  Its [`PruningAlgorithm::default_schedule`]
+//! reproduces the historical curve (linear 0 → target over the first half
+//! of training, then hold) — the gradual schedule whose low starting
+//! sparsity costs the hardware its early-stage speedup (§II-B), and whose
+//! per-iteration sort is what OSEL avoids.
 
 use anyhow::Result;
 
+use crate::coordinator::{DensitySchedule, ScheduleShape};
 use crate::model::ModelState;
 use crate::pruning::{PruneContext, PruningAlgorithm};
 
 #[derive(Debug, Clone)]
 pub struct IterativeMagnitudePruner {
     pub target_sparsity: f32,
-    /// Fraction of total iterations over which sparsity ramps to target.
-    pub ramp_fraction: f32,
+    /// Whether the last `update_masks` call changed any mask bit.
+    changed: bool,
 }
 
 impl IterativeMagnitudePruner {
     pub fn new(target_sparsity: f32) -> Self {
         assert!((0.0..1.0).contains(&target_sparsity));
-        IterativeMagnitudePruner { target_sparsity, ramp_fraction: 0.5 }
+        IterativeMagnitudePruner { target_sparsity, changed: true }
     }
 
-    /// Current scheduled sparsity at `iteration` of `total`.
-    pub fn scheduled_sparsity(&self, iteration: usize, total: usize) -> f32 {
-        let ramp_len = (total as f32 * self.ramp_fraction).max(1.0);
-        let progress = (iteration as f32 / ramp_len).min(1.0);
-        self.target_sparsity * progress
+    /// The sparsity actually applied at scheduled density `d`: the
+    /// schedule's ask, never exceeding the configured target (and a
+    /// fully-annealed 0.0 density clamps *to* the target).
+    fn applied_sparsity(&self, target_density: f32) -> f32 {
+        (1.0 - target_density).clamp(0.0, self.target_sparsity)
     }
 }
 
@@ -39,7 +43,8 @@ impl PruningAlgorithm for IterativeMagnitudePruner {
     }
 
     fn update_masks(&mut self, state: &mut ModelState, ctx: &PruneContext<'_>) -> Result<()> {
-        let sparsity = self.scheduled_sparsity(ctx.iteration, ctx.total_iterations);
+        let sparsity = self.applied_sparsity(ctx.target_density);
+        self.changed = false;
         for layer in ctx.manifest.masked_layers.clone() {
             let w = state.layer(ctx.manifest, &layer.name)?.to_vec();
             // the per-iteration sort the paper calls out as
@@ -52,15 +57,36 @@ impl PruningAlgorithm for IterativeMagnitudePruner {
             let mut pruned = 0usize;
             for (mi, wi) in mask.iter_mut().zip(&w) {
                 // prune exactly k weights (ties broken by first-come)
-                if wi.abs() <= threshold && pruned < k {
-                    *mi = 0.0;
+                let bit = if wi.abs() <= threshold && pruned < k {
                     pruned += 1;
+                    0.0
                 } else {
-                    *mi = 1.0;
+                    1.0
+                };
+                if *mi != bit {
+                    *mi = bit;
+                    self.changed = true;
                 }
             }
         }
         Ok(())
+    }
+
+    fn masks_changed(&self) -> bool {
+        self.changed
+    }
+
+    /// The pre-scheduler ramp: linear from dense to `target_sparsity`
+    /// over the first half of training, then hold.
+    fn default_schedule(&self, total_iterations: usize) -> DensitySchedule {
+        DensitySchedule {
+            start: 1.0,
+            target: 1.0 - self.target_sparsity,
+            warmup: 0,
+            anneal: ((total_iterations as f32 * 0.5).max(1.0)) as usize,
+            steps: 0,
+            shape: ScheduleShape::Linear,
+        }
     }
 }
 
@@ -70,13 +96,24 @@ mod tests {
     use crate::pruning::testutil::*;
 
     #[test]
-    fn sparsity_ramps_then_holds() {
+    fn default_schedule_pins_the_old_ramp() {
+        // the deleted `scheduled_sparsity(it, total)` curve was
+        // target * min(it / (total*0.5), 1); the default schedule must
+        // reproduce it exactly at every probe point
         let p = IterativeMagnitudePruner::new(0.8);
-        assert_eq!(p.scheduled_sparsity(0, 100), 0.0);
-        let mid = p.scheduled_sparsity(25, 100);
-        assert!((mid - 0.4).abs() < 1e-5);
-        assert_eq!(p.scheduled_sparsity(50, 100), 0.8);
-        assert_eq!(p.scheduled_sparsity(99, 100), 0.8);
+        let s = p.default_schedule(100);
+        let old = |it: usize| 0.8 * ((it as f32 / 50.0).min(1.0));
+        for it in [0usize, 1, 10, 25, 49, 50, 51, 75, 99] {
+            let new_sparsity = 1.0 - s.density_at(it);
+            assert!(
+                (new_sparsity - old(it)).abs() < 1e-5,
+                "iteration {it}: schedule gives {new_sparsity}, old ramp {}",
+                old(it)
+            );
+        }
+        assert_eq!(s.density_at(0), 1.0, "training starts dense");
+        // a one-iteration run still anneals over a nonzero window
+        assert!(p.default_schedule(1).anneal >= 1);
     }
 
     #[test]
@@ -84,8 +121,7 @@ mod tests {
         let m = tiny_manifest();
         let mut s = tiny_state(&m);
         let mut p = IterativeMagnitudePruner::new(0.5);
-        p.ramp_fraction = 0.01; // jump straight to target
-        p.update_masks(&mut s, &ctx(&m, 50, &[])).unwrap();
+        p.update_masks(&mut s, &ctx_d(&m, 50, &[], 0.5)).unwrap();
         // every surviving weight's |w| >= every pruned weight's |w|
         for layer in &m.masked_layers {
             let w = s.layer(&m, &layer.name).unwrap().to_vec();
@@ -109,11 +145,39 @@ mod tests {
     }
 
     #[test]
-    fn zero_sparsity_at_start_keeps_dense() {
+    fn annealed_density_clamps_to_the_target_ceiling() {
+        let m = tiny_manifest();
+        let mut s = tiny_state(&m);
+        let mut p = IterativeMagnitudePruner::new(0.5);
+        // fully annealed (0.0) asks for everything — the pruner stops
+        // at its configured target sparsity
+        p.update_masks(&mut s, &ctx(&m, 0, &[])).unwrap();
+        let sp = 1.0 - s.mask_density();
+        assert!((sp - 0.5).abs() < 0.02, "sparsity {sp}");
+    }
+
+    #[test]
+    fn noop_regeneration_reports_unchanged() {
+        let m = tiny_manifest();
+        let mut s = tiny_state(&m);
+        let mut p = IterativeMagnitudePruner::new(0.5);
+        p.update_masks(&mut s, &ctx_d(&m, 0, &[], 0.5)).unwrap();
+        assert!(p.masks_changed());
+        let first = s.masks.clone();
+        p.update_masks(&mut s, &ctx_d(&m, 1, &[], 0.5)).unwrap();
+        assert!(!p.masks_changed(), "same weights + density ⇒ same mask");
+        assert_eq!(s.masks, first);
+        // a density step re-prunes
+        p.update_masks(&mut s, &ctx_d(&m, 2, &[], 0.8)).unwrap();
+        assert!(p.masks_changed());
+    }
+
+    #[test]
+    fn dense_warmup_keeps_everything() {
         let m = tiny_manifest();
         let mut s = tiny_state(&m);
         let mut p = IterativeMagnitudePruner::new(0.9);
-        p.update_masks(&mut s, &ctx(&m, 0, &[])).unwrap();
+        p.update_masks(&mut s, &ctx_d(&m, 0, &[], 1.0)).unwrap();
         assert_eq!(s.mask_density(), 1.0);
     }
 }

@@ -31,6 +31,8 @@ pub use iterative::IterativeMagnitudePruner;
 
 use anyhow::Result;
 
+use crate::accel::sparse_row_memory::SparseRowMemory;
+use crate::coordinator::{DensitySchedule, ScheduleShape};
 use crate::manifest::Manifest;
 use crate::model::ModelState;
 
@@ -45,6 +47,13 @@ pub struct PruneContext<'a> {
     /// layout) — consumed by FLGW's grouping update; empty before the
     /// first backward.
     pub dmasks: &'a [f32],
+    /// Scheduled density target for this iteration, from the run's
+    /// [`DensitySchedule`].  1.0 = dense warmup; **0.0 = fully
+    /// annealed** — each pruner clamps the target to the densest mask
+    /// its own parameters allow (`iterative:75` stops at 0.25,
+    /// `flgw:4`/`bc` at their structural density), so 0.0 always means
+    /// "your steady state", never an all-zero mask.
+    pub target_density: f32,
 }
 
 /// A pruning algorithm: owns whatever auxiliary state it needs (grouping
@@ -71,6 +80,32 @@ pub trait PruningAlgorithm {
     /// Average sparsity currently induced (0 = dense).
     fn sparsity(&self, state: &ModelState) -> f32 {
         1.0 - state.mask_density()
+    }
+
+    /// The OSEL encodings behind the current masks, one
+    /// [`SparseRowMemory`] + (ig, og) argmax pair per masked layer —
+    /// `Some` only when every layer's mask is exactly OSEL-structured
+    /// (FLGW always; block-circulant when unblended).  The trainer uses
+    /// these for compact checkpoint storage and device refresh; `None`
+    /// falls back to packed dense mask bits, which is always correct.
+    fn encodings(&self) -> Option<(&[SparseRowMemory], &[(Vec<u16>, Vec<u16>)])> {
+        None
+    }
+
+    /// The density curve this pruner follows when the run sets no
+    /// `--density-schedule` — its historical, pre-scheduler behavior,
+    /// reproduced bit-for-bit.  Structural pruners (dense, FLGW,
+    /// block-circulant) default to "fully annealed from iteration 0";
+    /// magnitude pruners reproduce their old half-run ramp.
+    fn default_schedule(&self, _total_iterations: usize) -> DensitySchedule {
+        DensitySchedule {
+            start: 0.0,
+            target: 0.0,
+            warmup: 0,
+            anneal: 0,
+            steps: 0,
+            shape: ScheduleShape::Linear,
+        }
     }
 }
 
@@ -146,8 +181,20 @@ pub(crate) mod testutil {
         ModelState::new(manifest, params).unwrap()
     }
 
+    /// Context at the fully-annealed density (0.0) — every pruner's
+    /// steady state, matching pre-scheduler behavior.
     pub fn ctx<'a>(manifest: &'a Manifest, iteration: usize, dmasks: &'a [f32]) -> PruneContext<'a> {
-        PruneContext { manifest, iteration, total_iterations: 100, dmasks }
+        ctx_d(manifest, iteration, dmasks, 0.0)
+    }
+
+    /// Context with an explicit scheduled density target.
+    pub fn ctx_d<'a>(
+        manifest: &'a Manifest,
+        iteration: usize,
+        dmasks: &'a [f32],
+        target_density: f32,
+    ) -> PruneContext<'a> {
+        PruneContext { manifest, iteration, total_iterations: 100, dmasks, target_density }
     }
 }
 

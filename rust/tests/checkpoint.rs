@@ -5,7 +5,9 @@
 //! both execution modes.
 
 use learning_group::checkpoint::{Checkpoint, MaskStore};
-use learning_group::coordinator::{ExecMode, PrunerChoice, TrainConfig, Trainer};
+use learning_group::coordinator::{
+    DensityScheduleChoice, ExecMode, PrunerChoice, TrainConfig, Trainer,
+};
 
 fn base_cfg(pruner: PrunerChoice, seed: u64, iterations: usize) -> TrainConfig {
     TrainConfig {
@@ -70,22 +72,26 @@ fn osel_mask_store_beats_dense_bytes_at_high_sparsity() {
     }
 }
 
-/// Unstructured pruners (plus the dense baseline) take the packed-bit
-/// fallback and still round-trip exactly.
+/// The rest of the zoo round-trips exactly too, each in the store its
+/// structure earns: block-circulant masks are OSEL-structured (the
+/// circulant rule is a group-match with G = factor) and store compact;
+/// the dense baseline, iterative magnitude and GST take the packed-bit
+/// fallback.
 #[test]
-fn unstructured_pruner_checkpoints_round_trip() {
-    for (pruner, seed) in [
-        (PrunerChoice::Dense, 1u64),
-        (PrunerChoice::Iterative(75), 2),
-        (PrunerChoice::BlockCirculant(2, 4), 3),
-        (PrunerChoice::Gst(2, 4, 75), 4),
+fn pruner_zoo_checkpoints_round_trip_in_their_stores() {
+    for (pruner, osel, seed) in [
+        (PrunerChoice::Dense, false, 1u64),
+        (PrunerChoice::Iterative(75), false, 2),
+        (PrunerChoice::BlockCirculant(2, 4), true, 3),
+        (PrunerChoice::Gst(2, 4, 75), false, 4),
     ] {
         let mut t = Trainer::from_default_artifacts(base_cfg(pruner, seed, 2)).unwrap();
         t.train().unwrap();
         let ckpt = t.checkpoint().unwrap();
-        assert!(
-            matches!(ckpt.masks, MaskStore::DenseBits { .. }),
-            "{}: non-FLGW pruners store packed bits",
+        assert_eq!(
+            matches!(ckpt.masks, MaskStore::Osel(_)),
+            osel,
+            "{}: wrong mask store kind",
             ckpt.meta.pruner
         );
         let decoded = Checkpoint::from_bytes(&ckpt.to_bytes()).unwrap();
@@ -129,24 +135,40 @@ fn corrupt_and_truncated_files_are_rejected() {
 /// the optimizer state, the masks and the FLGW grouping matrices must
 /// all agree **bitwise**.
 fn resume_matches_uninterrupted(exec: ExecMode, pruner: PrunerChoice, seed: u64) {
+    resume_matches_uninterrupted_sched(exec, pruner, None, seed)
+}
+
+fn resume_matches_uninterrupted_sched(
+    exec: ExecMode,
+    pruner: PrunerChoice,
+    schedule: Option<DensityScheduleChoice>,
+    seed: u64,
+) {
     let n = 3usize;
-    let full_cfg = TrainConfig { exec, ..base_cfg(pruner, seed, 2 * n) };
+    let full_cfg =
+        TrainConfig { exec, density_schedule: schedule, ..base_cfg(pruner, seed, 2 * n) };
     let mut full = Trainer::from_default_artifacts(full_cfg).unwrap();
     let full_log = full.train().unwrap();
 
     // the half run uses the same *total* iteration budget (ramp
     // schedules read it) but stops at N via run_iteration
-    let mut half =
-        Trainer::from_default_artifacts(TrainConfig { exec, ..base_cfg(pruner, seed, 2 * n) })
-            .unwrap();
+    let mut half = Trainer::from_default_artifacts(TrainConfig {
+        exec,
+        density_schedule: schedule,
+        ..base_cfg(pruner, seed, 2 * n)
+    })
+    .unwrap();
     for it in 0..n {
         half.run_iteration(it).unwrap();
     }
     let path = tmp_path(&format!("resume_{}_{seed}", exec.name()));
     half.save_checkpoint(&path).unwrap();
 
+    // the resumed config names no schedule: the header's curve must be
+    // adopted (the flag is only legal when it restates the header)
     let resumed_cfg = TrainConfig { exec, ..base_cfg(pruner, seed, 2 * n) };
     let mut resumed = Trainer::from_default_artifacts_resumed(resumed_cfg, &path).unwrap();
+    assert_eq!(resumed.cfg.density_schedule, schedule, "schedule must ride in the header");
     assert_eq!(resumed.start_iteration(), n);
     let resumed_log = resumed.train().unwrap();
     assert_eq!(resumed_log.len(), n);
@@ -184,6 +206,85 @@ fn resume_bit_identity_under_dense_exec() {
 #[test]
 fn resume_bit_identity_with_unstructured_pruner() {
     resume_matches_uninterrupted(ExecMode::Sparse, PrunerChoice::Iterative(60), 9);
+}
+
+/// A resume mid-anneal must continue the cosine curve bitwise for the
+/// non-FLGW pruners too: the schedule spec rides in the v3 header, the
+/// resumed trainer adopts it, and the density handed to every
+/// regeneration after the cut matches the uninterrupted run exactly.
+#[test]
+fn resume_continues_cosine_schedule_bitwise() {
+    let cosine = DensityScheduleChoice::parse("cosine:2,0.4");
+    assert!(cosine.is_some());
+    resume_matches_uninterrupted_sched(ExecMode::Sparse, PrunerChoice::Iterative(70), cosine, 21);
+    resume_matches_uninterrupted_sched(ExecMode::Sparse, PrunerChoice::Gst(2, 2, 75), cosine, 22);
+    resume_matches_uninterrupted_sched(
+        ExecMode::Sparse,
+        PrunerChoice::BlockCirculant(2, 4),
+        cosine,
+        23,
+    );
+    // FLGW too: grouping state and schedule restore together
+    resume_matches_uninterrupted_sched(ExecMode::Sparse, PrunerChoice::Flgw(4), cosine, 24);
+}
+
+/// The density schedule is run identity: the header records the spec
+/// (`"default"` when none was configured), and a `--density-schedule`
+/// flag that contradicts the header is rejected at resume — the flag is
+/// only accepted when it restates what the header says.
+#[test]
+fn resume_rejects_contradicting_density_schedule() {
+    let cosine = DensityScheduleChoice::parse("cosine:2,0.5").unwrap();
+    let cfg = TrainConfig {
+        density_schedule: Some(cosine),
+        ..base_cfg(PrunerChoice::Iterative(60), 14, 1)
+    };
+    let mut t = Trainer::from_default_artifacts(cfg).unwrap();
+    t.train().unwrap();
+    let ckpt = t.checkpoint().unwrap();
+    assert_eq!(ckpt.meta.schedule, "cosine:2,0.5");
+    let path = tmp_path("sched_conflict");
+    t.save_checkpoint(&path).unwrap();
+
+    // a contradicting flag is rejected, naming both curves
+    let bad = TrainConfig {
+        density_schedule: DensityScheduleChoice::parse("linear:2,0.5"),
+        ..base_cfg(PrunerChoice::Iterative(60), 14, 2)
+    };
+    let err = Trainer::from_default_artifacts_resumed(bad, &path).unwrap_err().to_string();
+    assert!(err.contains("contradicts"), "{err}");
+    assert!(err.contains("cosine:2,0.5"), "{err}");
+
+    // restating the header's spec is accepted
+    let same = TrainConfig {
+        density_schedule: Some(cosine),
+        ..base_cfg(PrunerChoice::Iterative(60), 14, 2)
+    };
+    let resumed = Trainer::from_default_artifacts_resumed(same, &path).unwrap();
+    assert_eq!(resumed.cfg.density_schedule, Some(cosine));
+    let _ = std::fs::remove_file(&path);
+
+    // a default-schedule checkpoint rejects any explicit flag: the old
+    // curve cannot be restated by spec, so the flag must be dropped
+    let mut t = Trainer::from_default_artifacts(base_cfg(PrunerChoice::Iterative(60), 15, 1))
+        .unwrap();
+    t.train().unwrap();
+    assert_eq!(t.checkpoint().unwrap().meta.schedule, "default");
+    let path = tmp_path("sched_default");
+    t.save_checkpoint(&path).unwrap();
+    let bad = TrainConfig {
+        density_schedule: Some(cosine),
+        ..base_cfg(PrunerChoice::Iterative(60), 15, 2)
+    };
+    let err = Trainer::from_default_artifacts_resumed(bad, &path).unwrap_err().to_string();
+    assert!(err.contains("contradicts"), "{err}");
+    let resumed = Trainer::from_default_artifacts_resumed(
+        base_cfg(PrunerChoice::Iterative(60), 15, 2),
+        &path,
+    )
+    .unwrap();
+    assert_eq!(resumed.cfg.density_schedule, None);
+    let _ = std::fs::remove_file(&path);
 }
 
 /// The trainer's own save hooks: periodic checkpoints land under

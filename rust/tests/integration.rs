@@ -157,6 +157,7 @@ fn grad_episode_respects_masks_through_runtime() {
         iteration: 0,
         total_iterations: 1,
         dmasks: &[],
+        target_density: 0.0,
     };
     learning_group::pruning::PruningAlgorithm::update_masks(&mut pruner, &mut state, &ctx)
         .unwrap();

@@ -1,0 +1,279 @@
+//! Cross-pruner conformance suite: the contract every member of the
+//! pruner zoo must honor to be a first-class citizen of the sparse
+//! execution path, checked over all four algorithms × G ∈ {1, 2, 4, 8,
+//! 16} on the builtin (paper) manifest:
+//!
+//! * **No-op regeneration** — a second `update_masks` at the same
+//!   density over unchanged weights reports `masks_changed() == false`
+//!   and leaves the mask bytes untouched (the trainer keeps device
+//!   uploads across exactly these calls).
+//! * **Encode round-trip** — the mask survives
+//!   store → materialize bit-for-bit, whichever store the pruner earns:
+//!   OSEL encodings when `encodings()` is `Some` (FLGW,
+//!   block-circulant), packed dense bits otherwise — and the
+//!   [`SparseModel`] built from encodings names exactly the same
+//!   survivors as one scanned from the dense mask.
+//! * **Density** — the realized density lands within tolerance of the
+//!   algorithm's target at the fully-annealed steady state.
+//! * **Edges** — all-zero weights (maximal ties), a fully dense warmup
+//!   row, and the single-group/factor-1 degenerate never panic and
+//!   still produce valid binary masks.
+
+use learning_group::accel::osel::OselEncoder;
+use learning_group::checkpoint::MaskStore;
+use learning_group::manifest::Manifest;
+use learning_group::model::{GroupingState, ModelState};
+use learning_group::pruning::{
+    BlockCirculantPruner, FlgwPruner, GroupSparseTrainingPruner, IterativeMagnitudePruner,
+    PruneContext, PruningAlgorithm,
+};
+use learning_group::runtime::SparseModel;
+use learning_group::util::Pcg32;
+
+const GROUPS: [usize; 5] = [1, 2, 4, 8, 16];
+
+/// The zoo at "group count" g — each algorithm's knob mapped onto one
+/// sweep axis (bc/gst reuse g as the circulant factor, iterative as
+/// 1 - 1/g target sparsity).
+fn zoo(m: &Manifest, g: usize) -> Vec<(Box<dyn PruningAlgorithm>, &'static str)> {
+    vec![
+        (Box::new(FlgwPruner::new(GroupingState::init(m, g).unwrap())), "flgw"),
+        (Box::new(BlockCirculantPruner::new(2, g)), "bc"),
+        (Box::new(GroupSparseTrainingPruner::new(2, g, 0.75)), "gst"),
+        (Box::new(IterativeMagnitudePruner::new(1.0 - 1.0 / g as f32)), "iterative"),
+    ]
+}
+
+fn state(m: &Manifest, seed: u64) -> ModelState {
+    let mut s = ModelState::init(m).unwrap();
+    let mut rng = Pcg32::seeded(seed);
+    for p in s.params.iter_mut() {
+        *p = rng.next_normal() * 0.1;
+    }
+    s
+}
+
+fn ctx(m: &Manifest, iteration: usize, target_density: f32) -> PruneContext<'_> {
+    PruneContext {
+        manifest: m,
+        iteration,
+        total_iterations: 10,
+        dmasks: &[],
+        target_density,
+    }
+}
+
+#[test]
+fn noop_regeneration_reports_unchanged() {
+    let m = Manifest::builtin();
+    for g in GROUPS {
+        for (mut p, name) in zoo(&m, g) {
+            let mut s = state(&m, 7 + g as u64);
+            p.update_masks(&mut s, &ctx(&m, 0, 0.0)).unwrap();
+            let first = s.masks.clone();
+            p.update_masks(&mut s, &ctx(&m, 1, 0.0)).unwrap();
+            assert!(
+                !p.masks_changed(),
+                "{name} G={g}: same weights + density must be a no-op regeneration"
+            );
+            assert_eq!(s.masks, first, "{name} G={g}: no-op must not touch mask bytes");
+        }
+    }
+}
+
+#[test]
+fn mask_store_round_trips_bit_for_bit() {
+    let m = Manifest::builtin();
+    for g in GROUPS {
+        for (mut p, name) in zoo(&m, g) {
+            let mut s = state(&m, 20 + g as u64);
+            p.update_masks(&mut s, &ctx(&m, 0, 0.0)).unwrap();
+            assert!(
+                s.masks.iter().all(|&x| x == 0.0 || x == 1.0),
+                "{name} G={g}: masks must be binary"
+            );
+            // the store this pruner earns on the trainer's path
+            let store = match p.encodings() {
+                Some((enc, keys)) => {
+                    assert_eq!(enc.len(), m.masked_layers.len(), "{name} G={g}");
+                    // each encoding materializes its layer's mask exactly
+                    for (e, layer) in enc.iter().zip(&m.masked_layers) {
+                        let mask = OselEncoder::materialize_mask(e);
+                        assert_eq!(
+                            &s.masks[layer.offset..layer.offset + layer.size()],
+                            &mask[..],
+                            "{name} G={g}: encoding for {} diverges from the mask",
+                            layer.name
+                        );
+                    }
+                    MaskStore::from_encodings(&m, enc, keys).unwrap()
+                }
+                None => MaskStore::from_dense_masks(&s.masks),
+            };
+            assert_eq!(
+                store.materialize(&m).unwrap(),
+                s.masks,
+                "{name} G={g}: store must round-trip the mask bit-for-bit"
+            );
+        }
+    }
+}
+
+#[test]
+fn sparse_model_from_encodings_matches_dense_scan() {
+    let m = Manifest::builtin();
+    for g in GROUPS {
+        for (mut p, name) in zoo(&m, g) {
+            let mut s = state(&m, 40 + g as u64);
+            p.update_masks(&mut s, &ctx(&m, 0, 0.0)).unwrap();
+            let scanned = SparseModel::from_dense_masks(&m, &s.masks, 2).unwrap();
+            if let Some((enc, _)) = p.encodings() {
+                let from_enc = SparseModel::from_encodings(&m, enc, 2).unwrap();
+                assert_eq!(from_enc.nnz(), scanned.nnz(), "{name} G={g}");
+                for (a, b) in from_enc.layers.iter().zip(&scanned.layers) {
+                    assert_eq!(a.row_ptr, b.row_ptr, "{name} G={g} layer {}", a.name);
+                    assert_eq!(a.col_idx, b.col_idx, "{name} G={g} layer {}", a.name);
+                }
+            }
+            // the scan path must cover every pruner, structured or not
+            assert!(scanned.nnz() > 0, "{name} G={g}: a valid mask keeps something");
+        }
+    }
+}
+
+#[test]
+fn realized_density_tracks_the_target() {
+    let m = Manifest::builtin();
+    for g in GROUPS {
+        for (mut p, name) in zoo(&m, g) {
+            let mut s = state(&m, 60 + g as u64);
+            p.update_masks(&mut s, &ctx(&m, 0, 0.0)).unwrap();
+            let d = s.mask_density();
+            match name {
+                // structural density ≈ 1/G (argmax group sizes and the
+                // ragged encoder layer add slack)
+                "flgw" | "bc" => assert!(
+                    (d - 1.0 / g as f32).abs() < 0.1,
+                    "{name} G={g}: density {d} vs 1/{g}"
+                ),
+                // sparsity = max(configured 0.75, circulant floor)
+                "gst" => {
+                    let want = 0.75f32.max(1.0 - 1.0 / g as f32);
+                    assert!(
+                        ((1.0 - d) - want).abs() < 0.05,
+                        "{name} G={g}: sparsity {} vs {want}",
+                        1.0 - d
+                    );
+                }
+                // magnitude thresholding hits its count exactly (± the
+                // per-layer rounding of k)
+                "iterative" => assert!(
+                    ((1.0 - d) - (1.0 - 1.0 / g as f32)).abs() < 0.01,
+                    "{name} G={g}: sparsity {}",
+                    1.0 - d
+                ),
+                _ => unreachable!(),
+            }
+        }
+    }
+}
+
+/// All-zero weights are the maximal-tie edge: magnitude pruners must
+/// still prune exactly their count, structural pruners are oblivious —
+/// nobody panics, masks stay binary, and (all-zero-row edge) a
+/// [`SparseModel`] still builds even when whole rows lose every weight.
+#[test]
+fn all_zero_weights_never_panic() {
+    let m = Manifest::builtin();
+    for g in [1usize, 4, 16] {
+        for (mut p, name) in zoo(&m, g) {
+            let mut s = ModelState::init(&m).unwrap();
+            s.params.fill(0.0);
+            p.update_masks(&mut s, &ctx(&m, 0, 0.0)).unwrap();
+            assert!(
+                s.masks.iter().all(|&x| x == 0.0 || x == 1.0),
+                "{name} G={g}: masks must stay binary on all-zero weights"
+            );
+            let model = SparseModel::from_dense_masks(&m, &s.masks, 2).unwrap();
+            let dense_count = s.masks.iter().filter(|&&x| x != 0.0).count();
+            assert_eq!(model.nnz(), dense_count, "{name} G={g}");
+        }
+    }
+}
+
+/// Dense-row edge: a full warmup (density 1.0) keeps every weight for
+/// every pruner, and no pruner advertises OSEL encodings for an
+/// all-ones mask it blended dense.
+#[test]
+fn dense_warmup_keeps_everything() {
+    let m = Manifest::builtin();
+    for g in [2usize, 8] {
+        for (mut p, name) in zoo(&m, g) {
+            let mut s = state(&m, 80 + g as u64);
+            p.update_masks(&mut s, &ctx(&m, 0, 1.0)).unwrap();
+            assert!(
+                s.masks.iter().all(|&x| x == 1.0),
+                "{name} G={g}: density 1.0 must keep every weight"
+            );
+            if let Some((enc, _)) = p.encodings() {
+                // encodings may only be advertised if they actually
+                // reproduce the all-ones mask (G=1's legitimate case)
+                for (e, layer) in enc.iter().zip(&m.masked_layers) {
+                    assert!(
+                        OselEncoder::materialize_mask(e).iter().all(|&x| x == 1.0),
+                        "{name} G={g}: stale encodings advertised for {}",
+                        layer.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Single-group degenerate (G = factor = 1): every algorithm's
+/// structure collapses to "keep everything" (iterative's sweep target
+/// collapses to sparsity 0) except GST, whose configured in-block
+/// target still applies.
+#[test]
+fn single_group_degenerates_cleanly() {
+    let m = Manifest::builtin();
+    for (mut p, name) in zoo(&m, 1) {
+        let mut s = state(&m, 99);
+        p.update_masks(&mut s, &ctx(&m, 0, 0.0)).unwrap();
+        let d = s.mask_density();
+        match name {
+            "flgw" | "bc" | "iterative" => {
+                assert_eq!(d, 1.0, "{name}: G=1 must keep everything")
+            }
+            "gst" => assert!(
+                ((1.0 - d) - 0.75).abs() < 0.05,
+                "gst: factor 1 leaves only the in-block 0.75 target, got {}",
+                1.0 - d
+            ),
+            _ => unreachable!(),
+        }
+    }
+}
+
+/// The scheduled density flows through every pruner: a mid-anneal
+/// target lands between the dense warmup and the steady state, and
+/// moving the target re-prunes (masks_changed goes true again).
+#[test]
+fn scheduled_density_moves_every_pruner() {
+    let m = Manifest::builtin();
+    for (mut p, name) in zoo(&m, 4) {
+        let mut s = state(&m, 120);
+        p.update_masks(&mut s, &ctx(&m, 0, 1.0)).unwrap();
+        let d_warm = s.mask_density();
+        assert_eq!(d_warm, 1.0, "{name}");
+        p.update_masks(&mut s, &ctx(&m, 1, 0.6)).unwrap();
+        assert!(p.masks_changed(), "{name}: density step must re-prune");
+        let d_mid = s.mask_density();
+        p.update_masks(&mut s, &ctx(&m, 2, 0.0)).unwrap();
+        let d_final = s.mask_density();
+        assert!(
+            d_final <= d_mid && d_mid < d_warm,
+            "{name}: densities must anneal monotonically, got {d_warm} → {d_mid} → {d_final}"
+        );
+    }
+}

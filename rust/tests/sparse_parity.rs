@@ -19,7 +19,9 @@
 
 use std::sync::Arc;
 
-use learning_group::coordinator::{ExecMode, PrunerChoice, TrainConfig, Trainer};
+use learning_group::coordinator::{
+    DensityScheduleChoice, ExecMode, PrunerChoice, TrainConfig, Trainer,
+};
 use learning_group::manifest::Manifest;
 use learning_group::model::{GroupingState, ModelState};
 use learning_group::pruning::{FlgwPruner, PruneContext, PruningAlgorithm};
@@ -36,7 +38,13 @@ fn flgw_state(m: &Manifest, g: usize, seed: u64) -> (ModelState, FlgwPruner) {
     }
     let grouping = GroupingState::init(m, g).unwrap();
     let mut pruner = FlgwPruner::new(grouping);
-    let ctx = PruneContext { manifest: m, iteration: 0, total_iterations: 1, dmasks: &[] };
+    let ctx = PruneContext {
+        manifest: m,
+        iteration: 0,
+        total_iterations: 1,
+        dmasks: &[],
+        target_density: 0.0,
+    };
     pruner.update_masks(&mut state, &ctx).unwrap();
     (state, pruner)
 }
@@ -222,6 +230,52 @@ fn trainer_sparse_and_dense_exec_match_bitwise() {
         td.pruner.as_flgw().unwrap().grouping.grouping,
         "grouping matrices must match bitwise"
     );
+}
+
+/// The whole pruner zoo rides the sparse path: entire training runs
+/// under `--exec sparse --strict-accum` vs `--exec dense` must be
+/// bit-identical for every built-in pruner, not just FLGW.
+/// Block-circulant supplies OSEL encodings like FLGW; GST and
+/// iterative fall back to the dense-mask scan.  One combo trains under
+/// a cosine density schedule so the dense-warmup blend (which forces
+/// the scan fallback mid-run) is on the parity contract too.
+#[test]
+fn pruner_zoo_sparse_and_dense_exec_match_bitwise() {
+    for (pruner, schedule, seed) in [
+        (PrunerChoice::Gst(2, 4, 75), None, 31u64),
+        (PrunerChoice::BlockCirculant(2, 4), None, 32),
+        (PrunerChoice::Iterative(50), None, 33),
+        (
+            PrunerChoice::BlockCirculant(2, 2),
+            DensityScheduleChoice::parse("cosine:1,0.5"),
+            34,
+        ),
+    ] {
+        let tag = pruner.spec();
+        let base = TrainConfig {
+            batch: 2,
+            iterations: 3,
+            pruner,
+            density_schedule: schedule,
+            seed,
+            log_every: 0,
+            ..TrainConfig::default().with_agents(3)
+        };
+        let cfg_sparse =
+            TrainConfig { exec: ExecMode::Sparse, strict_accum: true, ..base.clone() };
+        let cfg_dense = TrainConfig { exec: ExecMode::DenseMasked, ..base };
+        let mut ts = Trainer::from_default_artifacts(cfg_sparse).unwrap();
+        let mut td = Trainer::from_default_artifacts(cfg_dense).unwrap();
+        let log_s = ts.train().unwrap();
+        let log_d = td.train().unwrap();
+        assert_eq!(log_s.len(), log_d.len(), "{tag}");
+        for (a, b) in log_s.records.iter().zip(&log_d.records) {
+            assert_eq!(a.loss, b.loss, "{tag} iteration {}", a.iteration);
+            assert_eq!(a.mean_reward, b.mean_reward, "{tag} iteration {}", a.iteration);
+            assert_eq!(a.sparsity, b.sparsity, "{tag} iteration {}", a.iteration);
+        }
+        assert_eq!(ts.state.params, td.state.params, "{tag}: weights must match bitwise");
+    }
 }
 
 /// Non-FLGW masks are not group-structured; the sparse path must fall
