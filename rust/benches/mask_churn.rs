@@ -1,0 +1,440 @@
+//! Mask-churn latency: regroup → kernels-ready → `BENCH_mask_churn.json`.
+//!
+//! The paper's real-time claim hinges on how fast a *changed* mask
+//! becomes executable sparse structure.  This bench drives every pruner
+//! through a density anneal and then a steady-state churn phase — one
+//! layer perturbed per step (FLGW: its grouping block, so the argmax
+//! regroups; magnitude pruners: that layer's weight span) — and times
+//! the two ways to get from the regroup to kernel-ready panels:
+//!
+//! * **scratch** — the historical path: rebuild every layer's CSR/CSC
+//!   panels from the masks (or OSEL encodings) each time;
+//! * **incremental** — [`SparseModel::rebuild_incremental`]: `Arc`-reuse
+//!   the clean layers, rebuild only the pruner's dirty set into
+//!   capacity-preserving builder scratch ([`SparseBuildArena`]).
+//!
+//! A counting `#[global_allocator]` wraps the incremental call so the
+//! steady-state allocation story is measured, not asserted: once the
+//! arena and the donated layer buffers are warm, a churn step must not
+//! touch the heap for panel data — only constant-size control blocks
+//! (an `Arc` header or two) are tolerated, bounded at 4 KB whatever the
+//! model preset.
+//!
+//! Gates (fatal, any mode):
+//!
+//! * **identity** — the incremental model names exactly the survivors
+//!   of a from-scratch build, every churn step (`row_ptr`/`col_idx`).
+//! * **speedup** — at the paper preset under the cosine schedule,
+//!   incremental is ≥ 2x faster than from-scratch for every pruner.
+//! * **steady-state allocations** — the best warm churn step allocates
+//!   ≤ 4096 bytes (no per-element panel allocation survives warmup).
+//!
+//! Schema documented in docs/BENCHMARKS.md; run via
+//! `cargo bench --bench mask_churn [-- --smoke]`.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use learning_group::coordinator::{DensitySchedule, ScheduleShape};
+use learning_group::manifest::{Manifest, ModelTopology};
+use learning_group::model::{GroupingState, ModelState};
+use learning_group::pruning::{
+    BlockCirculantPruner, FlgwPruner, GroupSparseTrainingPruner, IterativeMagnitudePruner,
+    PruneContext, PruningAlgorithm,
+};
+use learning_group::runtime::{MaskSource, SparseBuildArena, SparseModel};
+use learning_group::util::Pcg32;
+
+/// Heap instrumentation: every allocation path bumps a count and a byte
+/// total (deallocations deliberately don't — the gate is about *new*
+/// allocations in the steady state, not net footprint).
+struct CountingAlloc;
+
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(l.size() as u64, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(l.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(p, l, new_size)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn alloc_snapshot() -> (u64, u64) {
+    (ALLOC_BYTES.load(Ordering::Relaxed), ALLOC_CALLS.load(Ordering::Relaxed))
+}
+
+const PRUNERS: [&str; 4] = ["flgw:4", "bc:2x4", "gst:2x4:75", "iterative:75"];
+const CORES: usize = 2;
+/// Anneal iterations before the churn phase (covers warmup + anneal of
+/// the cosine schedule, all plain steady steps under constant).
+const ANNEAL_ITERS: usize = 6;
+
+fn topology(model: &str) -> ModelTopology {
+    match model {
+        "tiny" => ModelTopology::tiny(),
+        "paper" => ModelTopology::paper(),
+        "wide" => ModelTopology::wide(),
+        other => panic!("unknown model preset {other:?}"),
+    }
+}
+
+/// The zoo with typed FLGW access (the churn needs to reach its
+/// grouping matrices; the trait alone can't).
+enum BenchPruner {
+    Flgw(FlgwPruner),
+    Other(Box<dyn PruningAlgorithm>),
+}
+
+impl BenchPruner {
+    fn update_masks(&mut self, s: &mut ModelState, ctx: &PruneContext<'_>) -> anyhow::Result<()> {
+        match self {
+            BenchPruner::Flgw(p) => p.update_masks(s, ctx),
+            BenchPruner::Other(p) => p.update_masks(s, ctx),
+        }
+    }
+    fn changed_layers(&self, n: usize) -> Vec<bool> {
+        match self {
+            BenchPruner::Flgw(p) => p.changed_layers(n),
+            BenchPruner::Other(p) => p.changed_layers(n),
+        }
+    }
+    fn encodings(
+        &self,
+    ) -> Option<(
+        &[learning_group::accel::sparse_row_memory::SparseRowMemory],
+        &[(Vec<u16>, Vec<u16>)],
+    )> {
+        match self {
+            BenchPruner::Flgw(p) => p.encodings(),
+            BenchPruner::Other(p) => p.encodings(),
+        }
+    }
+}
+
+fn pruner(spec: &str, m: &Manifest) -> BenchPruner {
+    match spec {
+        "flgw:4" => {
+            BenchPruner::Flgw(FlgwPruner::new(GroupingState::init(m, 4).expect("grouping")))
+        }
+        "bc:2x4" => BenchPruner::Other(Box::new(BlockCirculantPruner::new(2, 4))),
+        "gst:2x4:75" => BenchPruner::Other(Box::new(GroupSparseTrainingPruner::new(2, 4, 0.75))),
+        "iterative:75" => BenchPruner::Other(Box::new(IterativeMagnitudePruner::new(0.75))),
+        other => panic!("unknown pruner spec {other:?}"),
+    }
+}
+
+fn schedule(name: &str) -> DensitySchedule {
+    match name {
+        // steady structural density from iteration 0
+        "constant" => DensitySchedule {
+            start: 0.25,
+            target: 0.25,
+            warmup: 0,
+            anneal: 0,
+            steps: 0,
+            shape: ScheduleShape::Linear,
+        },
+        // the frontier's anneal column: dense warmup, cosine to 0.25
+        "cosine" => DensitySchedule {
+            start: 1.0,
+            target: 0.25,
+            warmup: 1,
+            anneal: 4,
+            steps: 0,
+            shape: ScheduleShape::Cosine,
+        },
+        other => panic!("unknown schedule {other:?}"),
+    }
+}
+
+/// Byte offset of layer `li`'s `[IG ; OG]` block inside the flat FLGW
+/// grouping vector, plus the block's length (manifest layout:
+/// `rows x G` then `G x cols`, layers concatenated in order).
+fn grouping_span(m: &Manifest, g: usize, li: usize) -> (usize, usize) {
+    let mut off = 0usize;
+    for l in &m.masked_layers[..li] {
+        off += l.rows * g + g * l.cols;
+    }
+    let l = &m.masked_layers[li];
+    (off, l.rows * g + g * l.cols)
+}
+
+/// Perturb exactly one layer for the next regroup: FLGW gets noise on
+/// that layer's grouping block (so its argmax actually regroups), every
+/// other pruner gets noise on the layer's weight span.
+fn churn_one_layer(
+    p: &mut BenchPruner,
+    s: &mut ModelState,
+    m: &Manifest,
+    li: usize,
+    rng: &mut Pcg32,
+) {
+    match p {
+        BenchPruner::Flgw(flgw) => {
+            let g = flgw.groups();
+            let (off, len) = grouping_span(m, g, li);
+            for x in &mut flgw.grouping.grouping[off..off + len] {
+                *x += rng.next_normal() * 0.5;
+            }
+        }
+        BenchPruner::Other(_) => {
+            let name = &m.masked_layers[li].name;
+            let e = m
+                .param_layout
+                .iter()
+                .find(|e| &e.name == name)
+                .expect("masked layer in param layout");
+            for x in &mut s.params[e.offset..e.offset + e.size()] {
+                *x += rng.next_normal() * 0.05;
+            }
+        }
+    }
+}
+
+struct Row {
+    pruner: &'static str,
+    schedule: &'static str,
+    model: &'static str,
+    n_layers: usize,
+    mean_dirty: f64,
+    incremental_us: f64,
+    scratch_us: f64,
+    speedup: f64,
+    steady_alloc_bytes: u64,
+    max_alloc_bytes: u64,
+}
+
+fn assert_models_identical(a: &SparseModel, b: &SparseModel, tag: &str) -> bool {
+    for (x, y) in a.layers.iter().zip(&b.layers) {
+        if x.row_ptr != y.row_ptr || x.col_idx != y.col_idx {
+            eprintln!("REGRESSION: {tag}: incremental build diverged on layer {}", x.name);
+            return false;
+        }
+    }
+    true
+}
+
+fn main() {
+    let smoke = std::env::args().any(|arg| arg == "--smoke")
+        || std::env::var_os("LG_BENCH_SMOKE").is_some();
+    let models: &[&str] = if smoke { &["paper"] } else { &["tiny", "paper", "wide"] };
+    let churn_steps = if smoke { 8 } else { 32 };
+    let total_iters = ANNEAL_ITERS + churn_steps;
+
+    let mut rows: Vec<Row> = Vec::new();
+    let mut failed = false;
+    for &model in models {
+        let m = Manifest::with_model(topology(model));
+        let n = m.masked_layers.len();
+        for &spec in &PRUNERS {
+            for &sched_name in &["constant", "cosine"] {
+                let tag = format!("{spec} × {sched_name} × {model}");
+                let sched = schedule(sched_name);
+                let mut p = pruner(spec, &m);
+                let mut s = ModelState::init(&m).expect("model state");
+                let mut rng = Pcg32::seeded(2210 + n as u64);
+                for x in s.params.iter_mut() {
+                    *x = rng.next_normal() * 0.1;
+                }
+
+                let mut arena = SparseBuildArena::new();
+                let mut model_arc: Option<Arc<SparseModel>> = None;
+                let ctx = |it: usize, d: f32| PruneContext {
+                    manifest: &m,
+                    iteration: it,
+                    total_iterations: total_iters,
+                    dmasks: &[],
+                    target_density: d,
+                };
+
+                // anneal phase: drive the schedule to steady state,
+                // warming the arena and the reusable layer buffers
+                for it in 0..ANNEAL_ITERS {
+                    p.update_masks(&mut s, &ctx(it, sched.density_at(it))).expect("anneal");
+                    let dirty = p.changed_layers(n);
+                    let source = match p.encodings() {
+                        Some((enc, _)) => MaskSource::Encodings(enc),
+                        None => MaskSource::Dense(&s.masks),
+                    };
+                    model_arc = Some(
+                        SparseModel::rebuild_incremental(
+                            &m,
+                            model_arc.take(),
+                            Some(&dirty),
+                            source,
+                            CORES,
+                            false,
+                            &mut arena,
+                        )
+                        .expect("anneal rebuild"),
+                    );
+                }
+
+                // churn phase: one perturbed layer per step, both paths
+                // timed per step
+                let mut inc_s = 0.0f64;
+                let mut scratch_s = 0.0f64;
+                let mut dirty_total = 0usize;
+                let mut steady_alloc = u64::MAX;
+                let mut max_alloc = 0u64;
+                for step in 0..churn_steps {
+                    let it = ANNEAL_ITERS + step;
+                    churn_one_layer(&mut p, &mut s, &m, step % n, &mut rng);
+                    p.update_masks(&mut s, &ctx(it, sched.density_at(it))).expect("churn");
+                    let dirty = p.changed_layers(n);
+                    dirty_total += dirty.iter().filter(|&&d| d).count();
+
+                    // from-scratch: the historical full rebuild
+                    let t0 = Instant::now();
+                    let scratch = match p.encodings() {
+                        Some((enc, _)) => {
+                            SparseModel::from_encodings(&m, enc, CORES).expect("scratch")
+                        }
+                        None => SparseModel::from_dense_masks(&m, &s.masks, CORES)
+                            .expect("scratch"),
+                    };
+                    scratch_s += t0.elapsed().as_secs_f64();
+
+                    // incremental: dirty layers only, arena-backed
+                    let source = match p.encodings() {
+                        Some((enc, _)) => MaskSource::Encodings(enc),
+                        None => MaskSource::Dense(&s.masks),
+                    };
+                    let (b0, _) = alloc_snapshot();
+                    let t0 = Instant::now();
+                    let next = SparseModel::rebuild_incremental(
+                        &m,
+                        model_arc.take(),
+                        Some(&dirty),
+                        source,
+                        CORES,
+                        false,
+                        &mut arena,
+                    )
+                    .expect("incremental rebuild");
+                    inc_s += t0.elapsed().as_secs_f64();
+                    let (b1, _) = alloc_snapshot();
+                    let step_bytes = b1 - b0;
+                    max_alloc = max_alloc.max(step_bytes);
+                    // the steady-state number: the best warm step —
+                    // capacity growth may still happen early in the
+                    // churn, but it must die out
+                    if step >= 2 {
+                        steady_alloc = steady_alloc.min(step_bytes);
+                    }
+
+                    if !assert_models_identical(&next, &scratch, &tag) {
+                        failed = true;
+                    }
+                    model_arc = Some(next);
+                }
+
+                let mean_dirty = dirty_total as f64 / churn_steps as f64;
+                let inc_us = inc_s * 1e6 / churn_steps as f64;
+                let scratch_us = scratch_s * 1e6 / churn_steps as f64;
+                let speedup = scratch_us / inc_us.max(1e-9);
+                if steady_alloc == u64::MAX {
+                    steady_alloc = max_alloc;
+                }
+
+                // gate: the warm path must not allocate panel data
+                if steady_alloc > 4096 {
+                    eprintln!(
+                        "REGRESSION: {tag}: steady-state rebuild allocated {steady_alloc} \
+                         bytes (> 4096) — the arena is not reusing capacity"
+                    );
+                    failed = true;
+                }
+                // gate: ≥ 2x at the paper preset under cosine churn
+                if model == "paper" && sched_name == "cosine" && speedup < 2.0 {
+                    eprintln!(
+                        "REGRESSION: {tag}: incremental rebuild only {speedup:.2}x faster \
+                         than from-scratch (gate: ≥ 2x)"
+                    );
+                    failed = true;
+                }
+
+                println!(
+                    "mask_churn {tag}: dirty {mean_dirty:.1}/{n}  incremental \
+                     {inc_us:>8.1} µs  scratch {scratch_us:>8.1} µs  ({speedup:.2}x)  \
+                     steady-alloc {steady_alloc} B"
+                );
+                rows.push(Row {
+                    pruner: spec,
+                    schedule: sched_name,
+                    model,
+                    n_layers: n,
+                    mean_dirty,
+                    incremental_us: inc_us,
+                    scratch_us,
+                    speedup,
+                    steady_alloc_bytes: steady_alloc,
+                    max_alloc_bytes: max_alloc,
+                });
+            }
+        }
+    }
+
+    write_json(&rows, smoke, churn_steps).expect("writing BENCH_mask_churn.json");
+    println!("mask_churn written to BENCH_mask_churn.json ({} rows)", rows.len());
+    if failed {
+        std::process::exit(1);
+    }
+}
+
+fn write_json(rows: &[Row], smoke: bool, churn_steps: usize) -> std::io::Result<()> {
+    let mut row_text = String::new();
+    for (i, r) in rows.iter().enumerate() {
+        if i > 0 {
+            row_text.push_str(",\n");
+        }
+        row_text.push_str(&format!(
+            "    {{\"pruner\": \"{}\", \"schedule\": \"{}\", \"model\": \"{}\", \
+             \"n_layers\": {}, \"mean_dirty_layers\": {:.2}, \
+             \"incremental_us\": {:.1}, \"scratch_us\": {:.1}, \"speedup\": {:.3}, \
+             \"steady_alloc_bytes\": {}, \"max_alloc_bytes\": {}}}",
+            r.pruner,
+            r.schedule,
+            r.model,
+            r.n_layers,
+            r.mean_dirty,
+            r.incremental_us,
+            r.scratch_us,
+            r.speedup,
+            r.steady_alloc_bytes,
+            r.max_alloc_bytes,
+        ));
+    }
+    let text = format!(
+        "{{\n  \"bench\": \"mask_churn\",\n  \"build\": {},\n  \"mode\": \"{}\",\n  \
+         \"churn_steps\": {},\n  \"churn\": \"one layer perturbed per step (FLGW: its \
+         grouping block; magnitude pruners: its weight span)\",\n  \
+         \"gate\": \"incremental == scratch every step; >= 2x speedup at paper x cosine; \
+         steady-state rebuild allocates <= 4096 bytes\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+        learning_group::util::buildinfo::build_info_json(),
+        if smoke { "smoke" } else { "full" },
+        churn_steps,
+        row_text,
+    );
+    std::fs::write("BENCH_mask_churn.json", text)
+}

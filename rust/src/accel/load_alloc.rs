@@ -51,14 +51,14 @@ pub fn balanced_indexes(len: usize, g: usize, jitter: f32, rng: &mut Pcg32) -> V
 }
 
 /// One core's assignment: row indexes plus their total workload.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct CoreAssignment {
     pub rows: Vec<usize>,
     pub workload: u64,
 }
 
 /// Allocation produced by either scheme.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Allocation {
     pub per_core: Vec<CoreAssignment>,
 }
@@ -113,22 +113,35 @@ impl LoadAllocator {
     /// Evenly distribute rows (contiguous chunks, remainder spread over
     /// the leading cores) — no counters or shifting needed (§III-C).
     pub fn row_based(&self, workloads: &[u32]) -> Allocation {
+        let mut out = Allocation { per_core: Vec::with_capacity(self.cores) };
+        self.row_based_into(workloads, &mut out);
+        out
+    }
+
+    /// In-place [`LoadAllocator::row_based`]: refills `out`, reusing
+    /// the per-core row vectors so a steady-state re-allocation (same
+    /// core count, same row count) performs no heap allocation — the
+    /// incremental sparse-rebuild path
+    /// ([`crate::runtime::SparseLayerBuilder`]) depends on this.
+    pub fn row_based_into(&self, workloads: &[u32], out: &mut Allocation) {
         let rows = workloads.len();
         let base = rows / self.cores;
         let rem = rows % self.cores;
-        let mut per_core = Vec::with_capacity(self.cores);
+        out.per_core.truncate(self.cores);
+        while out.per_core.len() < self.cores {
+            out.per_core.push(CoreAssignment::default());
+        }
         let mut next = 0usize;
-        for c in 0..self.cores {
+        for (c, a) in out.per_core.iter_mut().enumerate() {
             let take = base + usize::from(c < rem);
-            let mut a = CoreAssignment::default();
+            a.rows.clear();
+            a.workload = 0;
             for r in next..next + take {
                 a.rows.push(r);
                 a.workload += workloads[r] as u64;
             }
             next += take;
-            per_core.push(a);
         }
-        Allocation { per_core }
     }
 
     /// Greedy threshold scheme with an oracle threshold (current total /

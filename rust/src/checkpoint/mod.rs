@@ -366,16 +366,7 @@ impl MaskStore {
                 w.put_u8(1);
                 w.put_u32(layers.len() as u32);
                 for l in layers {
-                    w.put_u32(l.rows);
-                    w.put_u32(l.cols);
-                    w.put_u32(l.groups);
-                    w.put_u16_slice(&l.ig);
-                    w.put_u16_slice(&l.og);
-                    w.put_u16(l.tuples.len() as u16);
-                    for (mi, words) in &l.tuples {
-                        w.put_u16(*mi);
-                        w.put_u64_slice(words);
-                    }
+                    write_osel_layer(w, l);
                 }
             }
         }
@@ -394,21 +385,7 @@ impl MaskStore {
                 let n_layers = r.u32()? as usize;
                 let mut layers = Vec::with_capacity(n_layers.min(1024));
                 for _ in 0..n_layers {
-                    let rows = r.u32()?;
-                    let cols = r.u32()?;
-                    let groups = r.u32()?;
-                    let ig = r.u16_vec()?;
-                    let og = r.u16_vec()?;
-                    let n_tuples = r.u16()? as usize;
-                    let mut tuples = Vec::with_capacity(n_tuples);
-                    for _ in 0..n_tuples {
-                        let mi = r.u16()?;
-                        let words = r.u64_vec()?;
-                        tuples.push((mi, words));
-                    }
-                    let layer = OselLayerStore { rows, cols, groups, ig, og, tuples };
-                    layer.decode().context("decoding OSEL mask layer")?;
-                    layers.push(layer);
+                    layers.push(read_osel_layer(r)?);
                 }
                 Ok(MaskStore::Osel(layers))
             }
@@ -436,6 +413,153 @@ impl MaskStore {
                 total
             }
         }
+    }
+}
+
+/// Serialise one OSEL layer record (the per-layer body of the
+/// [`MaskStore::Osel`] section, shared with [`MaskDelta`]).
+fn write_osel_layer(w: &mut ByteWriter, l: &OselLayerStore) {
+    w.put_u32(l.rows);
+    w.put_u32(l.cols);
+    w.put_u32(l.groups);
+    w.put_u16_slice(&l.ig);
+    w.put_u16_slice(&l.og);
+    w.put_u16(l.tuples.len() as u16);
+    for (mi, words) in &l.tuples {
+        w.put_u16(*mi);
+        w.put_u64_slice(words);
+    }
+}
+
+/// Decode one OSEL layer record written by [`write_osel_layer`],
+/// validating the bitvector/argmax consistency.
+fn read_osel_layer(r: &mut ByteReader<'_>) -> Result<OselLayerStore> {
+    let rows = r.u32()?;
+    let cols = r.u32()?;
+    let groups = r.u32()?;
+    let ig = r.u16_vec()?;
+    let og = r.u16_vec()?;
+    let n_tuples = r.u16()? as usize;
+    let mut tuples = Vec::with_capacity(n_tuples);
+    for _ in 0..n_tuples {
+        let mi = r.u16()?;
+        let words = r.u64_vec()?;
+        tuples.push((mi, words));
+    }
+    let layer = OselLayerStore { rows, cols, groups, ig, og, tuples };
+    layer.decode().context("decoding OSEL mask layer")?;
+    Ok(layer)
+}
+
+/// One changed layer's stored mask inside a [`MaskDelta`] — the
+/// per-layer unit of [`MaskStore`], in either representation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerMaskStore {
+    /// Unstructured fallback: the layer's mask span packed one bit per
+    /// weight (row-major, `len` bits).
+    Bits { len: u64, words: Vec<u64> },
+    /// The layer's OSEL encoding.
+    Osel(OselLayerStore),
+}
+
+impl LayerMaskStore {
+    /// Pack one layer's flat 0/1 mask span.
+    pub fn from_dense_span(span: &[f32]) -> Self {
+        let mut bv = BitVec::zeros(span.len());
+        for (i, &v) in span.iter().enumerate() {
+            if v != 0.0 {
+                bv.set(i, true);
+            }
+        }
+        LayerMaskStore::Bits { len: span.len() as u64, words: bv.words().to_vec() }
+    }
+
+    /// Materialise the layer's flat 0/1 mask span (row-major,
+    /// `rows * cols` long), rejecting a shape mismatch.
+    pub fn materialize(&self, rows: usize, cols: usize) -> Result<Vec<f32>> {
+        match self {
+            LayerMaskStore::Bits { len, words } => {
+                if *len as usize != rows * cols {
+                    return Err(anyhow!(
+                        "stored layer mask bits {len} != layer size {}",
+                        rows * cols
+                    ));
+                }
+                let bv = BitVec::from_words(rows * cols, words.clone())
+                    .ok_or_else(|| anyhow!("stored layer mask bits: bad word count"))?;
+                Ok((0..rows * cols).map(|i| f32::from(bv.get(i))).collect())
+            }
+            LayerMaskStore::Osel(store) => {
+                if store.rows as usize != rows || store.cols as usize != cols {
+                    return Err(anyhow!(
+                        "stored OSEL layer {}x{} != layer shape {rows}x{cols}",
+                        store.rows,
+                        store.cols
+                    ));
+                }
+                Ok(OselEncoder::materialize_mask(&store.decode()?))
+            }
+        }
+    }
+}
+
+/// The per-layer delta form of [`MaskStore`]: only the layers a mask
+/// regeneration actually changed, as `(masked-layer index, store)`
+/// pairs in ascending manifest order.  This is what the distributed
+/// `Sync` broadcast carries once every worker holds a full store — a
+/// regroup that rewrites one layer of a deep model ships kilobytes,
+/// not the whole mask image.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MaskDelta {
+    /// `(index into manifest `masked_layers`, that layer's new mask)`.
+    pub layers: Vec<(u32, LayerMaskStore)>,
+}
+
+impl MaskDelta {
+    /// Serialise the delta into `w` (same codec family as
+    /// [`MaskStore::write_to`]).
+    pub fn write_to(&self, w: &mut ByteWriter) {
+        w.put_u32(self.layers.len() as u32);
+        for (li, store) in &self.layers {
+            w.put_u32(*li);
+            match store {
+                LayerMaskStore::Bits { len, words } => {
+                    w.put_u8(0);
+                    w.put_u64(*len);
+                    w.put_u64_slice(words);
+                }
+                LayerMaskStore::Osel(l) => {
+                    w.put_u8(1);
+                    write_osel_layer(w, l);
+                }
+            }
+        }
+    }
+
+    /// Decode a delta written by [`MaskDelta::write_to`], validating
+    /// every OSEL layer and the ascending layer-index order.
+    pub fn read_from(r: &mut ByteReader<'_>) -> Result<Self> {
+        let n = r.u32()? as usize;
+        let mut layers = Vec::with_capacity(n.min(1024));
+        let mut prev: Option<u32> = None;
+        for _ in 0..n {
+            let li = r.u32()?;
+            if prev.is_some_and(|p| p >= li) {
+                return Err(anyhow!("mask delta layer indices not strictly ascending"));
+            }
+            prev = Some(li);
+            let store = match r.u8()? {
+                0 => {
+                    let len = r.u64()?;
+                    let words = r.u64_vec()?;
+                    LayerMaskStore::Bits { len, words }
+                }
+                1 => LayerMaskStore::Osel(read_osel_layer(r)?),
+                other => return Err(anyhow!("bad layer-mask-store tag {other}")),
+            };
+            layers.push((li, store));
+        }
+        Ok(MaskDelta { layers })
     }
 }
 
@@ -875,6 +999,63 @@ mod tests {
             assert_eq!(a.row_ptr, b.row_ptr, "{}", a.name);
             assert_eq!(a.col_idx, b.col_idx, "{}", a.name);
         }
+    }
+
+    #[test]
+    fn mask_delta_round_trips_and_materializes() {
+        let m = Manifest::builtin();
+        let ckpt = flgw_checkpoint(&m, 4);
+        let masks = ckpt.mask_vector(&m).unwrap();
+        let MaskStore::Osel(osel_layers) = &ckpt.masks else {
+            panic!("flgw checkpoint stores OSEL");
+        };
+        // Mixed delta: layer 0 as an OSEL encoding, layer 2 as packed
+        // bits from its dense span.
+        let l2 = &m.masked_layers[2];
+        let delta = MaskDelta {
+            layers: vec![
+                (0, LayerMaskStore::Osel(osel_layers[0].clone())),
+                (
+                    2,
+                    LayerMaskStore::from_dense_span(
+                        &masks[l2.offset..l2.offset + l2.size()],
+                    ),
+                ),
+            ],
+        };
+        let mut w = ByteWriter::new();
+        delta.write_to(&mut w);
+        let bytes = w.into_inner();
+        let mut r = ByteReader::new(&bytes);
+        let decoded = MaskDelta::read_from(&mut r).unwrap();
+        assert_eq!(decoded, delta);
+        // Each entry materializes exactly the span it encodes.
+        for (li, store) in &decoded.layers {
+            let l = &m.masked_layers[*li as usize];
+            assert_eq!(
+                store.materialize(l.rows, l.cols).unwrap(),
+                masks[l.offset..l.offset + l.size()],
+                "layer {li}"
+            );
+        }
+    }
+
+    #[test]
+    fn mask_delta_rejects_corrupt_osel_layer() {
+        let m = Manifest::builtin();
+        let ckpt = flgw_checkpoint(&m, 4);
+        let MaskStore::Osel(osel_layers) = &ckpt.masks else {
+            panic!("flgw checkpoint stores OSEL");
+        };
+        let mut layer = osel_layers[0].clone();
+        layer.tuples[0].1[0] ^= 1 << 3;
+        let delta = MaskDelta { layers: vec![(0, LayerMaskStore::Osel(layer))] };
+        let mut w = ByteWriter::new();
+        delta.write_to(&mut w);
+        let bytes = w.into_inner();
+        let mut r = ByteReader::new(&bytes);
+        let err = format!("{:#}", MaskDelta::read_from(&mut r).unwrap_err());
+        assert!(err.contains("disagrees"), "{err}");
     }
 
     /// Serialize a checkpoint in the **version-1** layout: identical to

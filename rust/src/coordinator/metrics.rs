@@ -32,6 +32,13 @@ pub struct IterationMetrics {
     pub sparsity: f32,
     /// Wall time of the whole iteration in seconds.
     pub wall_s: f64,
+    /// Wall time this iteration spent materializing compressed sparse
+    /// structures (mask → CSR/CSC panels), in seconds.  0 on
+    /// iterations where the device state was reused untouched.
+    pub sparse_build_s: f64,
+    /// Number of layers whose sparse structure was rebuilt this
+    /// iteration (0 = full reuse; `masked_layers.len()` = from-scratch).
+    pub dirty_layers: usize,
 }
 
 /// Log of a whole run.
@@ -90,14 +97,16 @@ impl MetricsLog {
         let path = path.as_ref();
         let mut f = std::fs::File::create(path)
             .with_context(|| format!("creating {path:?}"))?;
+        // new columns append after wall_s so `cut -f1-8`-style consumers
+        // of the original schema keep working
         writeln!(
             f,
-            "iteration,loss,policy_loss,value_loss,entropy,mean_reward,success_rate,sparsity,wall_s"
+            "iteration,loss,policy_loss,value_loss,entropy,mean_reward,success_rate,sparsity,wall_s,sparse_build_s,dirty_layers"
         )?;
         for r in &self.records {
             writeln!(
                 f,
-                "{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{}",
                 r.iteration,
                 r.loss,
                 r.policy_loss,
@@ -106,7 +115,9 @@ impl MetricsLog {
                 r.mean_reward,
                 r.success_rate,
                 r.sparsity,
-                r.wall_s
+                r.wall_s,
+                r.sparse_build_s,
+                r.dirty_layers
             )?;
         }
         Ok(())
@@ -162,7 +173,8 @@ impl MetricsSink {
             self.out,
             "{{\"iteration\": {}, \"loss\": {}, \"policy_loss\": {}, \"value_loss\": {}, \
              \"entropy\": {}, \"reward\": {}, \"success_rate\": {}, \"density\": {}, \
-             \"sparsity\": {}, \"exec\": \"{}\", \"wall_s\": {:.6}}}",
+             \"sparsity\": {}, \"exec\": \"{}\", \"wall_s\": {:.6}, \
+             \"sparse_build_s\": {:.6}, \"dirty_layers\": {}}}",
             m.iteration,
             json_num(m.loss),
             json_num(m.policy_loss),
@@ -174,6 +186,8 @@ impl MetricsSink {
             json_num(m.sparsity),
             self.exec,
             m.wall_s,
+            m.sparse_build_s,
+            m.dirty_layers,
         )
         .context("writing metrics line")?;
         self.out.flush().context("flushing metrics sink")?;
@@ -196,6 +210,8 @@ mod tests {
             success_rate: success,
             sparsity: 0.0,
             wall_s: 0.0,
+            sparse_build_s: 0.0,
+            dirty_layers: 0,
         }
     }
 
@@ -231,6 +247,7 @@ mod tests {
         assert_eq!(v.get("exec").unwrap().as_str(), Some("sparse"));
         assert!((v.get("reward").unwrap().as_f64().unwrap() + 1.25).abs() < 1e-9);
         assert!((v.get("density").unwrap().as_f64().unwrap() - 0.25).abs() < 1e-6);
+        assert_eq!(v.get("dirty_layers").unwrap().as_usize(), Some(0));
         let v = Json::parse(lines[1]).unwrap();
         assert_eq!(v.get("loss"), Some(&Json::Null));
         let _ = std::fs::remove_file(tmp);

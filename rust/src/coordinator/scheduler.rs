@@ -7,18 +7,24 @@
 
 use std::time::{Duration, Instant};
 
-/// The four operational stages (§III).
+/// The operational stages (§III): the paper's four, plus the host-side
+/// sparse-structure materialization (`SparseBuild`) that turns fresh
+/// masks into device-ready compressed panels — the "sparse data
+/// generation" cost Fig. 12 folds into weight grouping, broken out so
+/// the incremental-rebuild path's savings are visible.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Stage {
     WeightGrouping,
+    SparseBuild,
     Forward,
     Backward,
     WeightUpdate,
 }
 
 /// The stages in pipeline order (iteration order of Fig. 12's bars).
-pub const ALL_STAGES: [Stage; 4] = [
+pub const ALL_STAGES: [Stage; 5] = [
     Stage::WeightGrouping,
+    Stage::SparseBuild,
     Stage::Forward,
     Stage::Backward,
     Stage::WeightUpdate,
@@ -29,6 +35,7 @@ impl Stage {
     pub fn name(&self) -> &'static str {
         match self {
             Stage::WeightGrouping => "weight_grouping",
+            Stage::SparseBuild => "sparse_build",
             Stage::Forward => "forward",
             Stage::Backward => "backward",
             Stage::WeightUpdate => "weight_update",
@@ -126,15 +133,16 @@ impl DensitySchedule {
 /// Accumulates wall time per stage.
 #[derive(Debug, Clone, Default)]
 pub struct StageTimer {
-    elapsed: [Duration; 4],
+    elapsed: [Duration; 5],
 }
 
 fn idx(stage: Stage) -> usize {
     match stage {
         Stage::WeightGrouping => 0,
-        Stage::Forward => 1,
-        Stage::Backward => 2,
-        Stage::WeightUpdate => 3,
+        Stage::SparseBuild => 1,
+        Stage::Forward => 2,
+        Stage::Backward => 3,
+        Stage::WeightUpdate => 4,
     }
 }
 
@@ -163,16 +171,16 @@ impl StageTimer {
         self.elapsed[idx(stage)]
     }
 
-    /// Accumulated wall time across all four stages.
+    /// Accumulated wall time across all stages.
     pub fn total(&self) -> Duration {
         self.elapsed.iter().sum()
     }
 
     /// Fraction of total time per stage (Fig. 12's metric, with
     /// weight-grouping as the "sparse data generation" share).
-    pub fn fractions(&self) -> [(Stage, f64); 4] {
+    pub fn fractions(&self) -> [(Stage, f64); 5] {
         let total = self.total().as_secs_f64().max(1e-12);
-        let mut out = [(Stage::WeightGrouping, 0.0); 4];
+        let mut out = [(Stage::WeightGrouping, 0.0); 5];
         for (i, stage) in ALL_STAGES.iter().enumerate() {
             out[i] = (*stage, self.elapsed[idx(*stage)].as_secs_f64() / total);
         }

@@ -26,10 +26,12 @@
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::accel::sparse_row_memory::SparseRowMemory;
-use crate::checkpoint::{Checkpoint, CheckpointMeta, MaskStore, PrunerStore};
+use crate::checkpoint::{
+    Checkpoint, CheckpointMeta, LayerMaskStore, MaskDelta, MaskStore, OselLayerStore, PrunerStore,
+};
 use crate::coordinator::config::{DensityScheduleChoice, PrunerChoice, TrainConfig};
 use crate::coordinator::metrics::{IterationMetrics, MetricsLog, MetricsSink};
 use crate::coordinator::rollout;
@@ -40,7 +42,10 @@ use crate::pruning::{
     BlockCirculantPruner, DensePruner, FlgwPruner, GroupSparseTrainingPruner,
     IterativeMagnitudePruner, PruneContext, PruningAlgorithm,
 };
-use crate::runtime::{Arg, DeviceTensor, ExecMode, Executable, HostTensor, Runtime, SparseModel};
+use crate::runtime::{
+    Arg, DeviceTensor, ExecMode, Executable, HostTensor, MaskSource, Runtime, SparseBuildArena,
+    SparseModel,
+};
 
 /// Concrete pruner dispatch (no trait objects: the trainer needs typed
 /// access to FLGW's grouping state for the artifact-driven update).
@@ -83,6 +88,18 @@ impl Pruner {
             Pruner::Iterative(p) => p.masks_changed(),
             Pruner::BlockCirculant(p) => p.masks_changed(),
             Pruner::Gst(p) => p.masks_changed(),
+        }
+    }
+
+    /// Per-layer dirty flags of the last `update_masks` (see
+    /// [`PruningAlgorithm::changed_layers`]).
+    fn changed_layers(&self, n_layers: usize) -> Vec<bool> {
+        match self {
+            Pruner::Dense(p) => p.changed_layers(n_layers),
+            Pruner::Flgw(p) => p.changed_layers(n_layers),
+            Pruner::Iterative(p) => p.changed_layers(n_layers),
+            Pruner::BlockCirculant(p) => p.changed_layers(n_layers),
+            Pruner::Gst(p) => p.changed_layers(n_layers),
         }
     }
 
@@ -221,6 +238,26 @@ pub struct Trainer {
     /// re-uploaded on every runtime call (EXPERIMENTS.md §Perf).
     params_dev: Option<DeviceTensor>,
     masks_dev: Option<DeviceTensor>,
+    /// Host-side staging buffer for the masks upload — kept across
+    /// refreshes so only dirty layer spans are re-copied from
+    /// `state.masks` instead of re-cloning the whole dense vector.
+    masks_host: Option<Vec<f32>>,
+    /// The sparse model attached to the last masks upload — the `Arc`
+    /// reuse source for incremental rebuilds (clean layers are shared,
+    /// sole-owned dirty layers donate their buffer capacity).
+    sparse_prev: Option<Arc<SparseModel>>,
+    /// Capacity-preserving scratch for sparse panel builds.
+    sparse_arena: SparseBuildArena,
+    /// Per-layer dirty flags accumulated since the last device-mask
+    /// refresh (manifest `masked_layers` order).
+    mask_dirty: Vec<bool>,
+    /// The dirty set of the last mask-changing regroup — what the
+    /// distributed coordinator's delta `Sync` broadcast carries.
+    last_regroup_dirty: Vec<bool>,
+    /// [`Stage::SparseBuild`] seconds spent in the current iteration.
+    iter_build_s: f64,
+    /// Layers whose sparse structure was rebuilt this iteration.
+    iter_dirty: usize,
 }
 
 impl Trainer {
@@ -296,6 +333,7 @@ impl Trainer {
 
         let state = ModelState::init(&manifest)?;
         let mask_size = manifest.mask_size;
+        let n_layers = manifest.masked_layers.len();
         Ok(Trainer {
             cfg,
             state,
@@ -313,6 +351,13 @@ impl Trainer {
             start_iteration: 0,
             params_dev: None,
             masks_dev: None,
+            masks_host: None,
+            sparse_prev: None,
+            sparse_arena: SparseBuildArena::new(),
+            mask_dirty: vec![true; n_layers],
+            last_regroup_dirty: vec![true; n_layers],
+            iter_build_s: 0.0,
+            iter_dirty: 0,
         })
     }
 
@@ -426,6 +471,10 @@ impl Trainer {
         self.start_iteration = ckpt.meta.iteration as usize;
         self.params_dev = None;
         self.masks_dev = None;
+        // the whole state was replaced — no span-wise reuse is sound
+        self.masks_host = None;
+        self.sparse_prev = None;
+        self.mask_dirty.iter_mut().for_each(|d| *d = true);
         match &ckpt.pruner {
             PrunerStore::Stateless => {}
             PrunerStore::Flgw { g, grouping, sq_avg } => {
@@ -543,6 +592,43 @@ impl Trainer {
         })
     }
 
+    /// The last mask-changing regroup's dirty layers in stored form —
+    /// what a delta `Sync` broadcast ships instead of the full
+    /// [`MaskStore`].  The per-layer representation follows the same
+    /// rule as [`Trainer::mask_store`]: OSEL when the running pruner's
+    /// masks are exactly OSEL-structured, packed dense bits otherwise —
+    /// so a delta is always homogeneous and materializes bit-identically
+    /// to the corresponding slice of the full store.
+    pub fn mask_delta(&self) -> MaskDelta {
+        let manifest = self.runtime.manifest();
+        let n_layers = manifest.masked_layers.len();
+        let osel = match self.pruner.encodings() {
+            Some((encodings, keys)) if encodings.len() == n_layers => Some((encodings, keys)),
+            _ => None,
+        };
+        let mut layers = Vec::new();
+        for (li, layer) in manifest.masked_layers.iter().enumerate() {
+            // a stale/short dirty set degrades to all-dirty, never to
+            // silently dropping a changed layer
+            if !self.last_regroup_dirty.get(li).copied().unwrap_or(true) {
+                continue;
+            }
+            let store = match osel {
+                Some((encodings, keys)) => LayerMaskStore::Osel(OselLayerStore::from_encoding(
+                    &encodings[li],
+                    &keys[li].0,
+                    &keys[li].1,
+                )),
+                None => {
+                    let span = layer.offset..layer.offset + layer.size();
+                    LayerMaskStore::from_dense_span(&self.state.masks[span])
+                }
+            };
+            layers.push((li as u32, store));
+        }
+        MaskDelta { layers }
+    }
+
     /// The manifest the runtime was built over.
     pub fn manifest(&self) -> &crate::manifest::Manifest {
         self.runtime.manifest()
@@ -570,22 +656,63 @@ impl Trainer {
                 Some(self.exe_fwd.upload(0, &HostTensor::F32(self.state.params.clone()))?);
         }
         if self.masks_dev.is_none() {
-            let masks_t = HostTensor::F32(self.state.masks.clone());
+            let t0 = std::time::Instant::now();
+            let manifest = self.runtime.manifest().clone();
+            let n_layers = manifest.masked_layers.len();
+            if self.mask_dirty.len() != n_layers {
+                self.mask_dirty = vec![true; n_layers];
+            }
+            // Staging buffer: cached across refreshes.  Pruners only
+            // write inside masked-layer spans (everything outside is
+            // 1.0 from init, forever), so re-copying the dirty spans
+            // keeps the buffer in sync without re-cloning the vector.
+            let host = match self.masks_host.take() {
+                Some(mut buf) if buf.len() == self.state.masks.len() => {
+                    for (layer, &dirty) in manifest.masked_layers.iter().zip(&self.mask_dirty) {
+                        if dirty {
+                            let span = layer.offset..layer.offset + layer.size();
+                            buf[span.clone()].copy_from_slice(&self.state.masks[span]);
+                        }
+                    }
+                    buf
+                }
+                _ => self.state.masks.clone(),
+            };
+            let masks_t = HostTensor::F32(host);
+            let rebuilt = match (self.cfg.exec, &self.sparse_prev) {
+                (ExecMode::Sparse, None) => n_layers,
+                _ => self.mask_dirty.iter().filter(|&&d| d).count(),
+            };
             let masks_dev = match self.cfg.exec {
                 ExecMode::DenseMasked => self.exe_fwd.upload(1, &masks_t)?,
                 ExecMode::Sparse => {
-                    let manifest = self.runtime.manifest();
                     let cores = self.cfg.intra_threads.max(1);
-                    let model = match self.pruner.encodings() {
-                        Some((encodings, _)) if encodings.len() == manifest.masked_layers.len() => {
-                            SparseModel::from_encodings(manifest, encodings, cores)?
+                    let source = match self.pruner.encodings() {
+                        Some((encodings, _)) if encodings.len() == n_layers => {
+                            MaskSource::Encodings(encodings)
                         }
-                        _ => SparseModel::from_dense_masks(manifest, &self.state.masks, cores)?,
-                    }
-                    .strict(self.cfg.strict_accum);
-                    self.exe_fwd.upload_sparse(1, &masks_t, Arc::new(model))?
+                        _ => MaskSource::Dense(&self.state.masks),
+                    };
+                    let model = SparseModel::rebuild_incremental(
+                        &manifest,
+                        self.sparse_prev.take(),
+                        Some(&self.mask_dirty),
+                        source,
+                        cores,
+                        self.cfg.strict_accum,
+                        &mut self.sparse_arena,
+                    )?;
+                    self.sparse_prev = Some(model.clone());
+                    self.exe_fwd.upload_sparse(1, &masks_t, model)?
                 }
             };
+            if let HostTensor::F32(buf) = masks_t {
+                self.masks_host = Some(buf);
+            }
+            self.mask_dirty.iter_mut().for_each(|d| *d = false);
+            self.iter_dirty = rebuilt;
+            self.iter_build_s = t0.elapsed().as_secs_f64();
+            self.timer.add(Stage::SparseBuild, t0.elapsed());
             self.masks_dev = Some(masks_dev);
         }
         Ok(())
@@ -684,11 +811,31 @@ impl Trainer {
         // changed — a no-op regeneration (FLGW with stable argmax
         // signatures, the primed dense baseline) keeps the uploaded
         // masks and the sparse structure attached to them valid.
+        // When they did change, fold the pruner's per-layer dirty set
+        // into the accumulator the next refresh rebuilds from.
         let changed = self.pruner.masks_changed();
+        self.iter_build_s = 0.0;
+        self.iter_dirty = 0;
         if changed {
+            let n_layers = manifest.masked_layers.len();
+            if self.mask_dirty.len() != n_layers {
+                self.mask_dirty = vec![true; n_layers];
+            }
+            let dirty = self.pruner.changed_layers(n_layers);
+            for (d, c) in self.mask_dirty.iter_mut().zip(&dirty) {
+                *d |= *c;
+            }
+            self.last_regroup_dirty = dirty;
             self.masks_dev = None; // masks changed: re-upload lazily
         }
         Ok(changed)
+    }
+
+    /// The per-layer dirty set of the last mask-changing [`Trainer::regroup`]
+    /// (manifest `masked_layers` order) — what a delta `Sync` broadcast
+    /// carries instead of the full mask store.
+    pub fn last_changed_layers(&self) -> &[bool] {
+        &self.last_regroup_dirty
     }
 
     /// The per-episode seed slice of the next minibatch (episode index →
@@ -769,6 +916,72 @@ impl Trainer {
                 let flgw = self.pruner.as_flgw_mut().expect("checked above");
                 flgw.restore_encodings(encodings, keys)?;
             }
+            self.masks_dev = None;
+            // a full store replaces every span: all layers dirty, and
+            // the staging buffer must be refilled wholesale
+            self.masks_host = None;
+            self.mask_dirty.iter_mut().for_each(|d| *d = true);
+        }
+        Ok(())
+    }
+
+    /// Install a delta `Sync` broadcast (dist worker side): the
+    /// post-update params plus only the layers rank 0's regroup
+    /// changed.  Each entry overwrites that layer's mask span and marks
+    /// it dirty for the incremental device rebuild; OSEL entries also
+    /// patch FLGW's encode cache in place, so the worker's sparse
+    /// structure is rebuilt from the exact encodings rank 0 computed.
+    /// A dense-bits entry landing on a live encode cache drops the
+    /// cache instead (those masks no longer come from encodings) and
+    /// the refresh falls back to the dense-mask scan — structurally
+    /// identical either way.
+    pub fn install_sync_delta(&mut self, params: Vec<f32>, delta: &MaskDelta) -> Result<()> {
+        if params.len() != self.state.params.len() {
+            return Err(anyhow!(
+                "sync params length {} != model params length {}",
+                params.len(),
+                self.state.params.len()
+            ));
+        }
+        self.state.params = params;
+        self.params_dev = None;
+        let manifest = self.runtime.manifest().clone();
+        let n_layers = manifest.masked_layers.len();
+        if self.mask_dirty.len() != n_layers {
+            self.mask_dirty = vec![true; n_layers];
+        }
+        let mut all_osel = true;
+        for (li, store) in &delta.layers {
+            let li = *li as usize;
+            let layer = manifest.masked_layers.get(li).ok_or_else(|| {
+                anyhow!("delta sync layer {li} out of range ({n_layers} masked layers)")
+            })?;
+            let mask = store
+                .materialize(layer.rows, layer.cols)
+                .with_context(|| format!("delta sync layer {} ({li})", layer.name))?;
+            self.state.masks[layer.offset..layer.offset + layer.size()]
+                .copy_from_slice(&mask);
+            self.mask_dirty[li] = true;
+            all_osel &= matches!(store, LayerMaskStore::Osel(_));
+        }
+        if self.pruner.encodings().is_some() {
+            if all_osel {
+                let flgw = self.pruner.as_flgw_mut().expect("encodings imply FLGW");
+                for (li, store) in &delta.layers {
+                    if let LayerMaskStore::Osel(osel) = store {
+                        let srm = osel.decode()?;
+                        flgw.install_layer_encoding(
+                            *li as usize,
+                            srm,
+                            (osel.ig.clone(), osel.og.clone()),
+                        )?;
+                    }
+                }
+            } else if let Some(flgw) = self.pruner.as_flgw_mut() {
+                flgw.clear_encodings();
+            }
+        }
+        if !delta.layers.is_empty() {
             self.masks_dev = None;
         }
         Ok(())
@@ -858,6 +1071,8 @@ impl Trainer {
             success_rate,
             sparsity: 1.0 - self.state.mask_density(),
             wall_s: start.elapsed().as_secs_f64(),
+            sparse_build_s: self.iter_build_s,
+            dirty_layers: self.iter_dirty,
         })
     }
 

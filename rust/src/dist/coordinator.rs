@@ -6,9 +6,10 @@
 //! delegates stage 2+3 (rollout + backward) to the workers.  Each
 //! iteration:
 //!
-//! 1. stage 1 (regroup) runs locally; if the masks changed, their OSEL
-//!    encoding rides the next broadcast;
-//! 2. `Sync{params, masks?}` goes to every worker; the shared episode
+//! 1. stage 1 (regroup) runs locally; if the masks changed, their
+//!    stored form rides the next broadcast — the full store the first
+//!    time, only the dirty layers (a `MaskDelta`) afterwards;
+//! 2. `Sync{params, masks}` goes to every worker; the shared episode
 //!    counter advances by `batch` exactly like the local path;
 //! 3. gradient shards are collected **in rank order** (= episode-index
 //!    order) and the per-shard partial sums are combined with the same
@@ -35,7 +36,8 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::{IterationMetrics, MetricsLog, ReducedBatch, Stage, Trainer};
 use crate::dist::proto::{
-    read_frame, write_frame, DistMsg, EpStat, FrameError, InitPayload, DIST_PROTO_VERSION,
+    read_frame, write_frame, DistMsg, EpStat, FrameError, InitPayload, SyncMasks,
+    DIST_PROTO_VERSION,
 };
 use crate::dist::reduce::{shard_bounds, tree_sum, validate};
 use crate::serve::{ListenAddr, Stream};
@@ -155,7 +157,13 @@ impl DistCoordinator {
         validate(trainer.cfg.batch, self.opts.workers)?;
         let mut guards = self.spawn_children()?;
         let mut workers = self.handshake(trainer)?;
-        let result = trainer.train_with(|t, it| step(&mut workers, &self.opts, t, it));
+        // The first mask-changing sync ships the full store (every
+        // worker's baseline is the Init checkpoint); after that the
+        // coordinator knows exactly what each worker holds and ships
+        // only the dirty layers.
+        let mut sent_full = false;
+        let result =
+            trainer.train_with(|t, it| step(&mut workers, &self.opts, &mut sent_full, t, it));
         if result.is_ok() {
             // Clean shutdown: tell everyone, then reap the children.
             for (rank, stream) in workers.iter_mut().enumerate() {
@@ -312,12 +320,26 @@ impl Drop for DistCoordinator {
 fn step(
     workers: &mut [Stream],
     opts: &DistOptions,
+    sent_full: &mut bool,
     t: &mut Trainer,
     iteration: usize,
 ) -> Result<IterationMetrics> {
     let start = Instant::now();
     let masks_changed = t.regroup(iteration)?;
-    let masks = if masks_changed { Some(t.mask_store()?) } else { None };
+    let masks = if !masks_changed {
+        SyncMasks::Unchanged
+    } else if !*sent_full {
+        *sent_full = true;
+        SyncMasks::Full(t.mask_store()?)
+    } else {
+        let delta = t.mask_delta();
+        eprintln!(
+            "dist: iteration {iteration} sync: delta ({} of {} layers)",
+            delta.layers.len(),
+            t.manifest().masked_layers.len()
+        );
+        SyncMasks::Delta(delta)
+    };
     let sync = DistMsg::Sync {
         iteration: iteration as u64,
         episodes_done: t.episodes_done(),

@@ -22,16 +22,19 @@
 //! | 0x82 | `Sync`       | rank 0 → worker  |
 //! | 0x83 | `Done`       | rank 0 → worker  |
 //!
-//! Masks ride in [`Sync`](DistMsg::Sync) as a [`MaskStore`] — the OSEL
-//! per-layer encoding when FLGW runs (a few hundred bytes), the packed
-//! bitvector fallback otherwise — written with the *same*
-//! `MaskStore::write_to`/`read_from` the `.lgcp` checkpoint format
-//! uses, so the broadcast never ships a dense f32 mask vector.
+//! Masks ride in [`Sync`](DistMsg::Sync) as a [`SyncMasks`] section:
+//! the first mask-changing sync of a run ships the complete
+//! [`MaskStore`] — the OSEL per-layer encoding when FLGW runs (a few
+//! hundred bytes), the packed bitvector fallback otherwise — and every
+//! later one ships only the layers the regroup changed as a
+//! [`MaskDelta`].  Both use the *same* checkpoint byte codec the
+//! `.lgcp` format uses, so the broadcast never ships a dense f32 mask
+//! vector.
 
 use std::io::{Read, Write};
 
 use crate::checkpoint::bytes::{ByteReader, ByteWriter};
-use crate::checkpoint::MaskStore;
+use crate::checkpoint::{MaskDelta, MaskStore};
 use crate::runtime::ExecMode;
 
 /// Frame ceiling (bytes) — sized for flat f32 gradient buffers of the
@@ -39,7 +42,8 @@ use crate::runtime::ExecMode;
 pub const DIST_MAX_FRAME: usize = 1 << 28;
 
 /// Protocol version carried in `Hello`/`Init` (bump on wire changes).
-pub const DIST_PROTO_VERSION: u32 = 1;
+/// v2 added the delta form of the `Sync` mask section.
+pub const DIST_PROTO_VERSION: u32 = 2;
 
 /// Per-episode scalar statistics a worker reports alongside its reduced
 /// gradient shard.  Rank 0 folds these linearly in episode-index order
@@ -86,6 +90,25 @@ pub struct InitPayload {
     pub checkpoint: Vec<u8>,
 }
 
+/// The mask section of a [`Sync`](DistMsg::Sync) broadcast.
+///
+/// Wire tags (the mask-presence byte): 0 = `Unchanged`, 1 = `Full`,
+/// 2 = `Delta`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SyncMasks {
+    /// Stage 1 did not change the masks; workers keep their installed
+    /// mask state (and the sparse structure attached to it) untouched.
+    Unchanged,
+    /// The complete mask image.  Sent on the first mask-changing sync
+    /// of a run, when every worker's baseline is the Init checkpoint —
+    /// after that the coordinator knows exactly what each worker holds
+    /// and switches to deltas.
+    Full(MaskStore),
+    /// Only the layers the regroup changed (see
+    /// [`Trainer::last_changed_layers`](crate::coordinator::Trainer::last_changed_layers)).
+    Delta(MaskDelta),
+}
+
 /// One protocol message.
 #[derive(Debug, Clone, PartialEq)]
 pub enum DistMsg {
@@ -101,8 +124,9 @@ pub enum DistMsg {
     Init(InitPayload),
     /// Rank 0's per-iteration broadcast: the params after the last
     /// optimizer step, plus the regenerated masks when (and only when)
-    /// stage 1 actually changed them.
-    Sync { iteration: u64, episodes_done: u64, params: Vec<f32>, masks: Option<MaskStore> },
+    /// stage 1 actually changed them — full on the first change, the
+    /// dirty-layer delta afterwards.
+    Sync { iteration: u64, episodes_done: u64, params: Vec<f32>, masks: SyncMasks },
     /// Training finished; workers exit cleanly.
     Done,
 }
@@ -204,10 +228,14 @@ impl DistMsg {
                 w.put_u64(*episodes_done);
                 w.put_f32_slice(params);
                 match masks {
-                    None => w.put_u8(0),
-                    Some(store) => {
+                    SyncMasks::Unchanged => w.put_u8(0),
+                    SyncMasks::Full(store) => {
                         w.put_u8(1);
                         store.write_to(&mut w);
+                    }
+                    SyncMasks::Delta(delta) => {
+                        w.put_u8(2);
+                        delta.write_to(&mut w);
                     }
                 }
             }
@@ -308,10 +336,14 @@ impl DistMsg {
                 let episodes_done = de_u64(&mut r)?;
                 let params = de_f32s(&mut r)?;
                 let masks = match de_u8(&mut r)? {
-                    0 => None,
-                    1 => Some(
+                    0 => SyncMasks::Unchanged,
+                    1 => SyncMasks::Full(
                         MaskStore::read_from(&mut r)
                             .map_err(|e| mal(format!("mask store: {e:#}")))?,
+                    ),
+                    2 => SyncMasks::Delta(
+                        MaskDelta::read_from(&mut r)
+                            .map_err(|e| mal(format!("mask delta: {e:#}")))?,
                     ),
                     other => return Err(mal(format!("bad mask-presence tag {other}"))),
                 };
@@ -402,6 +434,7 @@ fn read_exact_classified(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::checkpoint::LayerMaskStore;
 
     fn roundtrip(msg: DistMsg) {
         let mut buf = Vec::new();
@@ -443,14 +476,44 @@ mod tests {
             iteration: 7,
             episodes_done: 28,
             params: vec![0.5; 9],
-            masks: None,
+            masks: SyncMasks::Unchanged,
         });
         roundtrip(DistMsg::Sync {
             iteration: 8,
             episodes_done: 32,
             params: vec![-2.0; 3],
-            masks: Some(MaskStore::from_dense_masks(&[1.0, 0.0, 1.0, 1.0])),
+            masks: SyncMasks::Full(MaskStore::from_dense_masks(&[1.0, 0.0, 1.0, 1.0])),
         });
+        roundtrip(DistMsg::Sync {
+            iteration: 9,
+            episodes_done: 36,
+            params: vec![1.5; 3],
+            masks: SyncMasks::Delta(MaskDelta {
+                layers: vec![
+                    (0, LayerMaskStore::from_dense_span(&[1.0, 0.0, 1.0, 1.0])),
+                    (2, LayerMaskStore::from_dense_span(&[0.0; 70])),
+                ],
+            }),
+        });
+    }
+
+    #[test]
+    fn out_of_order_delta_layers_rejected() {
+        let msg = DistMsg::Sync {
+            iteration: 1,
+            episodes_done: 4,
+            params: vec![0.0],
+            masks: SyncMasks::Delta(MaskDelta {
+                layers: vec![
+                    (3, LayerMaskStore::from_dense_span(&[1.0])),
+                    (1, LayerMaskStore::from_dense_span(&[0.0])),
+                ],
+            }),
+        };
+        match DistMsg::decode(&msg.encode()) {
+            Err(FrameError::Malformed(m)) => assert!(m.contains("ascending"), "{m}"),
+            other => panic!("expected ascending-order rejection, got {other:?}"),
+        }
     }
 
     #[test]

@@ -9,11 +9,13 @@
 //!    embedded checkpoint bytes (the same codec and validation a
 //!    `--resume` runs), pin the SIMD backend/exec mode/thread counts
 //!    rank 0 resolved;
-//! 3. per iteration, receive `Sync{params, masks?}` — install the
-//!    post-update params and (only when stage 1 changed them) rebuild
-//!    the `SparseModel` from the broadcast OSEL encodings; roll out the
-//!    assigned episode shard on the shared per-episode seed stream; run
-//!    backward per episode; tree-reduce the shard locally; send one
+//! 3. per iteration, receive `Sync` — install the post-update params
+//!    and (only when stage 1 changed them) the broadcast masks: the
+//!    full store on the first change, the dirty-layer delta afterwards,
+//!    patching exactly those layers' mask spans + OSEL encodings so the
+//!    `SparseModel` rebuild is incremental on the worker too; roll out
+//!    the assigned episode shard on the shared per-episode seed stream;
+//!    run backward per episode; tree-reduce the shard locally; send one
 //!    `GradShard` back;
 //! 4. exit 0 on `Done`, or exit with the connection error if rank 0
 //!    goes away (a dead coordinator must never leave workers hanging).
@@ -26,7 +28,9 @@ use anyhow::{anyhow, Context, Result};
 use crate::checkpoint::Checkpoint;
 use crate::coordinator::rollout::episode_seed;
 use crate::coordinator::{TrainConfig, Trainer};
-use crate::dist::proto::{read_frame, write_frame, DistMsg, EpStat, InitPayload, DIST_PROTO_VERSION};
+use crate::dist::proto::{
+    read_frame, write_frame, DistMsg, EpStat, InitPayload, SyncMasks, DIST_PROTO_VERSION,
+};
 use crate::dist::reduce::tree_sum;
 use crate::runtime::SimdBackend;
 use crate::serve::{ListenAddr, Stream};
@@ -105,7 +109,11 @@ fn serve(stream: &mut Stream, init: &InitPayload) -> Result<()> {
                 ))
             }
         };
-        trainer.install_sync(params, masks.as_ref())?;
+        match &masks {
+            SyncMasks::Unchanged => trainer.install_sync(params, None)?,
+            SyncMasks::Full(store) => trainer.install_sync(params, Some(store))?,
+            SyncMasks::Delta(delta) => trainer.install_sync_delta(params, delta)?,
+        }
 
         // The shard's seeds come straight off the shared episode-index
         // stream: episode b of this iteration is global index

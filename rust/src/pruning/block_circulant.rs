@@ -40,6 +40,9 @@ pub struct BlockCirculantPruner {
     blend_rows: Vec<usize>,
     /// Whether the last `update_masks` wrote any layer.
     changed: bool,
+    /// Which layers the last `update_masks` rewrote (manifest order) —
+    /// the incremental-rebuild dirty set.
+    layer_changed: Vec<bool>,
 }
 
 impl BlockCirculantPruner {
@@ -53,6 +56,7 @@ impl BlockCirculantPruner {
             layer_key: Vec::new(),
             blend_rows: Vec::new(),
             changed: true,
+            layer_changed: Vec::new(),
         }
     }
 
@@ -80,6 +84,8 @@ impl BlockCirculantPruner {
             self.blend_rows.clear();
         }
         self.changed = false;
+        self.layer_changed.clear();
+        self.layer_changed.resize(manifest.masked_layers.len(), false);
         let s = 1.0 / self.factor as f32;
         for (li, layer) in manifest.masked_layers.iter().enumerate() {
             let (rows, cols) = (layer.rows, layer.cols);
@@ -104,6 +110,7 @@ impl BlockCirculantPruner {
             state.masks[layer.offset..layer.offset + layer.size()]
                 .copy_from_slice(&mask);
             self.changed = true;
+            self.layer_changed[li] = true;
             if li < self.encodings.len() {
                 self.encodings[li] = srm;
                 self.layer_key[li] = (ig, og);
@@ -137,6 +144,15 @@ impl PruningAlgorithm for BlockCirculantPruner {
 
     fn masks_changed(&self) -> bool {
         self.changed
+    }
+
+    fn changed_layers(&self, n_layers: usize) -> Vec<bool> {
+        if self.layer_changed.len() == n_layers {
+            self.layer_changed.clone()
+        } else {
+            // no write ran yet at this manifest shape — conservative
+            vec![self.changed; n_layers]
+        }
     }
 
     fn encodings(&self) -> Option<(&[SparseRowMemory], &[(Vec<u16>, Vec<u16>)])> {

@@ -48,6 +48,9 @@ pub struct FlgwPruner {
     blend_rows: Vec<usize>,
     /// Whether the last `update_masks` re-encoded at least one layer.
     changed: bool,
+    /// Which layers the last `update_masks` re-encoded (manifest
+    /// order) — the incremental-rebuild dirty set.
+    layer_changed: Vec<bool>,
 }
 
 impl FlgwPruner {
@@ -60,6 +63,7 @@ impl FlgwPruner {
             layer_key: Vec::new(),
             blend_rows: Vec::new(),
             changed: true,
+            layer_changed: Vec::new(),
         }
     }
 
@@ -108,10 +112,44 @@ impl FlgwPruner {
         // A checkpointed OSEL encoding is by construction unblended:
         // every row carries the structural mask.
         self.blend_rows = encodings.iter().map(|e| e.index_list().len()).collect();
+        self.layer_changed = vec![false; encodings.len()];
         self.encodings = encodings;
         self.layer_key = layer_key;
         self.changed = false;
         Ok(())
+    }
+
+    /// Replace one layer's cached encoding (the distributed delta-sync
+    /// install path: rank 0 re-encoded exactly this layer).  The cache
+    /// must already cover every layer — partial caches can't be patched.
+    pub fn install_layer_encoding(
+        &mut self,
+        li: usize,
+        srm: SparseRowMemory,
+        key: (Vec<u16>, Vec<u16>),
+    ) -> Result<()> {
+        if li >= self.encodings.len() {
+            return Err(anyhow!(
+                "layer {} out of range for {}-layer encode cache",
+                li,
+                self.encodings.len()
+            ));
+        }
+        self.blend_rows[li] = srm.index_list().len();
+        self.encodings[li] = srm;
+        self.layer_key[li] = key;
+        Ok(())
+    }
+
+    /// Drop the encode cache entirely (the masks no longer came from
+    /// these encodings — e.g. a dense-bits delta landed on top).  The
+    /// next `update_masks` re-encodes everything; until then the
+    /// trainer's device refresh falls back to the dense-mask scan.
+    pub fn clear_encodings(&mut self) {
+        self.encodings.clear();
+        self.layer_key.clear();
+        self.blend_rows.clear();
+        self.layer_changed.clear();
     }
 
     /// How many leading rows of a `rows × cols` layer keep the
@@ -148,6 +186,8 @@ impl FlgwPruner {
             self.blend_rows.clear();
         }
         self.changed = false;
+        self.layer_changed.clear();
+        self.layer_changed.resize(manifest.masked_layers.len(), false);
         for (li, layer) in manifest.masked_layers.iter().enumerate() {
             let ig = self.grouping.ig_indexes(manifest, &layer.name)?;
             let og = self.grouping.og_indexes(manifest, &layer.name)?;
@@ -176,6 +216,7 @@ impl FlgwPruner {
             state.masks[layer.offset..layer.offset + layer.size()]
                 .copy_from_slice(&mask);
             self.changed = true;
+            self.layer_changed[li] = true;
             if li < self.encodings.len() {
                 self.encodings[li] = srm;
                 self.layer_key[li] = (ig, og);
@@ -220,6 +261,15 @@ impl PruningAlgorithm for FlgwPruner {
 
     fn masks_changed(&self) -> bool {
         self.changed
+    }
+
+    fn changed_layers(&self, n_layers: usize) -> Vec<bool> {
+        if self.layer_changed.len() == n_layers {
+            self.layer_changed.clone()
+        } else {
+            // no encode ran yet at this manifest shape — conservative
+            vec![self.changed; n_layers]
+        }
     }
 
     fn encodings(&self) -> Option<(&[SparseRowMemory], &[(Vec<u16>, Vec<u16>)])> {

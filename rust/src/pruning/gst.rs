@@ -25,6 +25,9 @@ pub struct GroupSparseTrainingPruner {
     pub target_sparsity: f32,
     /// Whether the last `update_masks` call changed any mask bit.
     changed: bool,
+    /// Which layers' mask spans the last `update_masks` changed
+    /// (manifest order) — the incremental-rebuild dirty set.
+    layer_changed: Vec<bool>,
 }
 
 impl GroupSparseTrainingPruner {
@@ -33,6 +36,7 @@ impl GroupSparseTrainingPruner {
             block_circulant: BlockCirculantPruner::new(block, factor),
             target_sparsity,
             changed: true,
+            layer_changed: Vec::new(),
         }
     }
 
@@ -84,12 +88,30 @@ impl PruningAlgorithm for GroupSparseTrainingPruner {
                 mask[i] = 0.0;
             }
         }
-        self.changed = state.masks != before;
+        // both phases rewrite whole layer spans, so a per-layer compare
+        // against the entry snapshot yields the exact dirty set
+        self.layer_changed.clear();
+        self.changed = false;
+        for layer in &ctx.manifest.masked_layers {
+            let span = layer.offset..layer.offset + layer.size();
+            let dirty = state.masks[span.clone()] != before[span];
+            self.layer_changed.push(dirty);
+            self.changed |= dirty;
+        }
         Ok(())
     }
 
     fn masks_changed(&self) -> bool {
         self.changed
+    }
+
+    fn changed_layers(&self, n_layers: usize) -> Vec<bool> {
+        if self.layer_changed.len() == n_layers {
+            self.layer_changed.clone()
+        } else {
+            // no update ran yet at this manifest shape — conservative
+            vec![self.changed; n_layers]
+        }
     }
 
     /// The pre-scheduler ramp: the block floor from iteration 0, extra

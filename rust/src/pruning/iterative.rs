@@ -21,12 +21,15 @@ pub struct IterativeMagnitudePruner {
     pub target_sparsity: f32,
     /// Whether the last `update_masks` call changed any mask bit.
     changed: bool,
+    /// Which layers' mask spans the last `update_masks` changed
+    /// (manifest order) — the incremental-rebuild dirty set.
+    layer_changed: Vec<bool>,
 }
 
 impl IterativeMagnitudePruner {
     pub fn new(target_sparsity: f32) -> Self {
         assert!((0.0..1.0).contains(&target_sparsity));
-        IterativeMagnitudePruner { target_sparsity, changed: true }
+        IterativeMagnitudePruner { target_sparsity, changed: true, layer_changed: Vec::new() }
     }
 
     /// The sparsity actually applied at scheduled density `d`: the
@@ -45,7 +48,9 @@ impl PruningAlgorithm for IterativeMagnitudePruner {
     fn update_masks(&mut self, state: &mut ModelState, ctx: &PruneContext<'_>) -> Result<()> {
         let sparsity = self.applied_sparsity(ctx.target_density);
         self.changed = false;
-        for layer in ctx.manifest.masked_layers.clone() {
+        self.layer_changed.clear();
+        self.layer_changed.resize(ctx.manifest.masked_layers.len(), false);
+        for (li, layer) in ctx.manifest.masked_layers.clone().into_iter().enumerate() {
             let w = state.layer(ctx.manifest, &layer.name)?.to_vec();
             // the per-iteration sort the paper calls out as
             // hardware-unfriendly (we pay it here on the host)
@@ -66,6 +71,7 @@ impl PruningAlgorithm for IterativeMagnitudePruner {
                 if *mi != bit {
                     *mi = bit;
                     self.changed = true;
+                    self.layer_changed[li] = true;
                 }
             }
         }
@@ -74,6 +80,15 @@ impl PruningAlgorithm for IterativeMagnitudePruner {
 
     fn masks_changed(&self) -> bool {
         self.changed
+    }
+
+    fn changed_layers(&self, n_layers: usize) -> Vec<bool> {
+        if self.layer_changed.len() == n_layers {
+            self.layer_changed.clone()
+        } else {
+            // no update ran yet at this manifest shape — conservative
+            vec![self.changed; n_layers]
+        }
     }
 
     /// The pre-scheduler ramp: linear from dense to `target_sparsity`

@@ -77,6 +77,21 @@ pub trait PruningAlgorithm {
         true
     }
 
+    /// Per-layer dirty flags for the last [`Self::update_masks`] call,
+    /// in manifest `masked_layers` order: `true` where the layer's mask
+    /// span was (or may have been) rewritten.  The trainer rebuilds
+    /// only these layers' compressed structures and `Arc`-reuses the
+    /// rest.
+    ///
+    /// **Contract:** a layer whose mask bytes changed MUST be flagged
+    /// (over-reporting is safe; under-reporting corrupts the device
+    /// state), and `changed_layers().iter().any(|&d| d)` must agree
+    /// with [`Self::masks_changed`].  Conservative default: every layer
+    /// dirty whenever `masks_changed()` reports a change.
+    fn changed_layers(&self, n_layers: usize) -> Vec<bool> {
+        vec![self.masks_changed(); n_layers]
+    }
+
     /// Average sparsity currently induced (0 = dense).
     fn sparsity(&self, state: &ModelState) -> f32 {
         1.0 - state.mask_density()

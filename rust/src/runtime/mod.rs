@@ -52,7 +52,9 @@ pub use executable::Executable;
 pub use native::{dy_wt_sparse_into, matmul_sparse_into};
 pub use plan::{BackwardPlan, ForwardPlan, LayerOp, PlanOp, Plans};
 pub use simd::{SimdBackend, LANES};
-pub use sparse::{ExecMode, SparseLayer, SparseModel};
+pub use sparse::{
+    ExecMode, MaskSource, SparseBuildArena, SparseLayer, SparseLayerBuilder, SparseModel,
+};
 pub use tensor::HostTensor;
 
 use std::collections::HashMap;

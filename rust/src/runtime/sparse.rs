@@ -27,9 +27,22 @@
 //! across the FLGW curriculum's sparsity levels).  Either mode is
 //! itself fully deterministic and identical across SIMD backends.
 //!
-//! **Sharing.**  A [`SparseModel`] is built once per mask regeneration
-//! (stage 1) and shared immutably (`Arc`) by all parallel rollout
-//! worker threads.
+//! **Sharing and incremental rebuilds.**  A [`SparseModel`] holds its
+//! layers as `Arc<SparseLayer>` and is itself shared immutably (`Arc`)
+//! by all parallel rollout worker threads.  Mask regeneration is
+//! *incremental*: [`SparseModel::rebuild_incremental`] takes the
+//! previous model plus a per-layer dirty set (from
+//! [`crate::pruning::PruningAlgorithm::changed_layers`]) and rebuilds
+//! only the dirty layers, cloning the clean layers' `Arc`s — the OSEL
+//! analog of the paper's "regeneration is a pointer walk, not a mask
+//! scan" claim, applied at the layer granularity.  Dirty layers are
+//! materialised through a reusable [`SparseLayerBuilder`] (counting
+//! pass → prefix sum → fill for the CSC panel, capacity-preserving
+//! scratch) so a steady-state rebuild of a warm layer performs no new
+//! heap allocation, and independent dirty layers fan out across the
+//! intra-op threads.  Incremental rebuilds are bit-identical to
+//! from-scratch construction (`rust/benches/mask_churn.rs` and the
+//! conformance suite assert both properties).
 //!
 //! **Core count = intra-op thread count.**  The core count of the
 //! row→core partition is the *intra-op* worker count
@@ -42,6 +55,8 @@
 //! contiguous and walked in row order within each output row, so
 //! neither the core count nor the rollout worker count ever changes
 //! the numerics.
+
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
@@ -87,7 +102,7 @@ impl ExecMode {
 /// panels the SIMD kernels stream (survivors padded to multiples of
 /// [`simd::LANES`] so groups fill vector registers; see
 /// `runtime::simd`).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SparseLayer {
     pub name: String,
     pub rows: usize,
@@ -126,6 +141,28 @@ pub struct SparseLayer {
 }
 
 impl SparseLayer {
+    /// An empty shell with no capacity — the starting point for a
+    /// builder fill (fresh construction) or the fallback when a
+    /// previous layer's buffers cannot be reclaimed (still shared).
+    fn blank() -> Self {
+        SparseLayer {
+            name: String::new(),
+            rows: 0,
+            cols: 0,
+            row_ptr: Vec::new(),
+            col_idx: Vec::new(),
+            alloc: Allocation { per_core: Vec::new() },
+            strict: false,
+            pad_row_ptr: Vec::new(),
+            pad_col_idx: Vec::new(),
+            pad_col_mask: Vec::new(),
+            csc_ptr: Vec::new(),
+            csc_row_idx: Vec::new(),
+            csc_row_scaled: Vec::new(),
+            csc_mask: Vec::new(),
+        }
+    }
+
     /// Build from an OSEL encoding: the non-zero indexes come straight
     /// from the cached sparse-row-memory tuples (observation 2 — at
     /// most G distinct rows exist, so this is a pointer walk, not a
@@ -135,125 +172,18 @@ impl SparseLayer {
         srm: &SparseRowMemory,
         cores: usize,
     ) -> Result<Self> {
-        if srm.index_list().len() != layer.rows || srm.row_len() != layer.cols {
-            return Err(anyhow!(
-                "encoding shape {}x{} != masked layer {} ({}x{})",
-                srm.index_list().len(),
-                srm.row_len(),
-                layer.name,
-                layer.rows,
-                layer.cols
-            ));
-        }
-        let mut row_ptr = Vec::with_capacity(layer.rows + 1);
-        let mut col_idx = Vec::new();
-        row_ptr.push(0u32);
-        for r in 0..layer.rows {
-            if let Some(t) = srm.row_tuple(r) {
-                col_idx.extend_from_slice(&t.nonzero);
-            }
-            row_ptr.push(col_idx.len() as u32);
-        }
-        Ok(Self::finish(layer, row_ptr, col_idx, cores))
+        let mut out = SparseLayer::blank();
+        SparseLayerBuilder::new().encoding_into(&mut out, layer, srm, cores, false)?;
+        Ok(out)
     }
 
     /// Build by scanning a dense 0/1 mask (row-major `rows x cols`) —
     /// the fallback for pruners whose masks are not group-structured
-    /// (iterative magnitude, block-circulant, GST).
+    /// (iterative magnitude, GST's in-block refinement).
     pub fn from_dense_mask(layer: &MaskedLayer, mask: &[f32], cores: usize) -> Result<Self> {
-        if mask.len() != layer.size() {
-            return Err(anyhow!(
-                "mask length {} != masked layer {} size {}",
-                mask.len(),
-                layer.name,
-                layer.size()
-            ));
-        }
-        let mut row_ptr = Vec::with_capacity(layer.rows + 1);
-        let mut col_idx = Vec::new();
-        row_ptr.push(0u32);
-        for r in 0..layer.rows {
-            let mrow = &mask[r * layer.cols..(r + 1) * layer.cols];
-            for (j, &mv) in mrow.iter().enumerate() {
-                if mv != 0.0 {
-                    col_idx.push(j as u32);
-                }
-            }
-            row_ptr.push(col_idx.len() as u32);
-        }
-        Ok(Self::finish(layer, row_ptr, col_idx, cores))
-    }
-
-    fn finish(layer: &MaskedLayer, row_ptr: Vec<u32>, col_idx: Vec<u32>, cores: usize) -> Self {
-        let workloads: Vec<u32> = row_ptr.windows(2).map(|w| w[1] - w[0]).collect();
-        let alloc = LoadAllocator::new(cores.max(1)).row_based(&workloads);
-        let (rows, cols) = (layer.rows, layer.cols);
-
-        // lane-padded CSR panel: survivors per weight row, ascending,
-        // padded to the vector width (pad index 0, pad mask 0.0 — the
-        // kernels fold the mask in before any weight multiply, so pad
-        // lanes contribute exact ±0.0 terms)
-        let mut pad_row_ptr = Vec::with_capacity(rows + 1);
-        let mut pad_col_idx = Vec::new();
-        let mut pad_col_mask = Vec::new();
-        pad_row_ptr.push(0u32);
-        for r in 0..rows {
-            let survivors =
-                &col_idx[row_ptr[r] as usize..row_ptr[r + 1] as usize];
-            pad_col_idx.extend_from_slice(survivors);
-            pad_col_mask.extend(std::iter::repeat(1.0f32).take(survivors.len()));
-            while pad_col_idx.len() % simd::LANES != 0 {
-                pad_col_idx.push(0);
-                pad_col_mask.push(0.0);
-            }
-            pad_row_ptr.push(pad_col_idx.len() as u32);
-        }
-
-        // lane-padded CSC twin: survivors per output column, weight
-        // rows ascending (walk rows in order so the relative term
-        // order of the dense reduction is preserved), with the weight
-        // offsets `kk * cols` precomputed for the gather
-        let mut csc_ptr = Vec::with_capacity(cols + 1);
-        let mut csc_row_idx = Vec::new();
-        let mut csc_row_scaled = Vec::new();
-        let mut csc_mask = Vec::new();
-        let mut per_col: Vec<Vec<u32>> = vec![Vec::new(); cols];
-        for r in 0..rows {
-            for &j in &col_idx[row_ptr[r] as usize..row_ptr[r + 1] as usize] {
-                per_col[j as usize].push(r as u32);
-            }
-        }
-        csc_ptr.push(0u32);
-        for j in 0..cols {
-            for &r in &per_col[j] {
-                csc_row_idx.push(r);
-                csc_row_scaled.push(r * cols as u32);
-                csc_mask.push(1.0);
-            }
-            while csc_row_idx.len() % simd::LANES != 0 {
-                csc_row_idx.push(0);
-                csc_row_scaled.push(0);
-                csc_mask.push(0.0);
-            }
-            csc_ptr.push(csc_row_idx.len() as u32);
-        }
-
-        SparseLayer {
-            name: layer.name.clone(),
-            rows,
-            cols,
-            row_ptr,
-            col_idx,
-            alloc,
-            strict: false,
-            pad_row_ptr,
-            pad_col_idx,
-            pad_col_mask,
-            csc_ptr,
-            csc_row_idx,
-            csc_row_scaled,
-            csc_mask,
-        }
+        let mut out = SparseLayer::blank();
+        SparseLayerBuilder::new().dense_mask_into(&mut out, layer, mask, cores, false)?;
+        Ok(out)
     }
 
     /// Surviving weights in this layer.
@@ -287,12 +217,213 @@ impl SparseLayer {
     }
 }
 
+/// Reusable arena for [`SparseLayer`] materialisation.
+///
+/// The old `SparseLayer::finish` allocated ~10 fresh `Vec`s per layer
+/// per rebuild, including a `Vec<Vec<u32>>` per-column scatter for the
+/// CSC panel.  The builder replaces the scatter with a counting pass →
+/// prefix sum → fill (one flat `u32` cursor array, reused across
+/// layers), and every `*_into` method clears-and-refills the target
+/// layer's own vectors — so once the target and the builder are warm
+/// (capacities sized by a first build at the same shape/density), a
+/// rebuild performs **zero** new heap allocations.  The mask-churn
+/// bench asserts exactly that with a counting allocator.
+#[derive(Debug, Default)]
+pub struct SparseLayerBuilder {
+    /// CSC counting pass / fill cursors, one slot per output column.
+    cursor: Vec<u32>,
+    /// Per-row survivor counts for the load-allocation unit.
+    workloads: Vec<u32>,
+}
+
+impl SparseLayerBuilder {
+    pub fn new() -> Self {
+        SparseLayerBuilder::default()
+    }
+
+    /// Rebuild `out` in place from an OSEL encoding (same structure as
+    /// [`SparseLayer::from_encoding`], but reusing `out`'s buffers).
+    pub fn encoding_into(
+        &mut self,
+        out: &mut SparseLayer,
+        layer: &MaskedLayer,
+        srm: &SparseRowMemory,
+        cores: usize,
+        strict: bool,
+    ) -> Result<()> {
+        if srm.index_list().len() != layer.rows || srm.row_len() != layer.cols {
+            return Err(anyhow!(
+                "encoding shape {}x{} != masked layer {} ({}x{})",
+                srm.index_list().len(),
+                srm.row_len(),
+                layer.name,
+                layer.rows,
+                layer.cols
+            ));
+        }
+        out.row_ptr.clear();
+        out.col_idx.clear();
+        out.row_ptr.push(0u32);
+        for r in 0..layer.rows {
+            if let Some(t) = srm.row_tuple(r) {
+                out.col_idx.extend_from_slice(&t.nonzero);
+            }
+            out.row_ptr.push(out.col_idx.len() as u32);
+        }
+        self.finish_into(out, layer, cores, strict);
+        Ok(())
+    }
+
+    /// Rebuild `out` in place by scanning a dense 0/1 mask (row-major
+    /// `rows x cols`).
+    pub fn dense_mask_into(
+        &mut self,
+        out: &mut SparseLayer,
+        layer: &MaskedLayer,
+        mask: &[f32],
+        cores: usize,
+        strict: bool,
+    ) -> Result<()> {
+        if mask.len() != layer.size() {
+            return Err(anyhow!(
+                "mask length {} != masked layer {} size {}",
+                mask.len(),
+                layer.name,
+                layer.size()
+            ));
+        }
+        out.row_ptr.clear();
+        out.col_idx.clear();
+        out.row_ptr.push(0u32);
+        for r in 0..layer.rows {
+            let mrow = &mask[r * layer.cols..(r + 1) * layer.cols];
+            for (j, &mv) in mrow.iter().enumerate() {
+                if mv != 0.0 {
+                    out.col_idx.push(j as u32);
+                }
+            }
+            out.row_ptr.push(out.col_idx.len() as u32);
+        }
+        self.finish_into(out, layer, cores, strict);
+        Ok(())
+    }
+
+    /// Derive everything downstream of `row_ptr`/`col_idx`: the core
+    /// partition and both lane-padded panels.  Identical output to the
+    /// historical from-scratch construction (the CSC fill walks rows in
+    /// ascending order, exactly like the old per-column scatter did).
+    fn finish_into(&mut self, out: &mut SparseLayer, layer: &MaskedLayer, cores: usize, strict: bool) {
+        let (rows, cols) = (layer.rows, layer.cols);
+        if out.name != layer.name {
+            out.name.clear();
+            out.name.push_str(&layer.name);
+        }
+        out.rows = rows;
+        out.cols = cols;
+        out.strict = strict;
+
+        self.workloads.clear();
+        self.workloads.extend(out.row_ptr.windows(2).map(|w| w[1] - w[0]));
+        LoadAllocator::new(cores.max(1)).row_based_into(&self.workloads, &mut out.alloc);
+
+        // lane-padded CSR panel: survivors per weight row, ascending,
+        // padded to the vector width (pad index 0, pad mask 0.0 — the
+        // kernels fold the mask in before any weight multiply, so pad
+        // lanes contribute exact ±0.0 terms)
+        out.pad_row_ptr.clear();
+        out.pad_col_idx.clear();
+        out.pad_col_mask.clear();
+        out.pad_row_ptr.push(0u32);
+        for r in 0..rows {
+            let survivors = &out.col_idx[out.row_ptr[r] as usize..out.row_ptr[r + 1] as usize];
+            out.pad_col_idx.extend_from_slice(survivors);
+            out.pad_col_mask.extend(std::iter::repeat(1.0f32).take(survivors.len()));
+            while out.pad_col_idx.len() % simd::LANES != 0 {
+                out.pad_col_idx.push(0);
+                out.pad_col_mask.push(0.0);
+            }
+            out.pad_row_ptr.push(out.pad_col_idx.len() as u32);
+        }
+
+        // lane-padded CSC twin, allocation-free: counting pass over
+        // col_idx → padded prefix sum → fill (rows visited in ascending
+        // order, preserving the dense reduction's relative term order),
+        // with the weight offsets `r * cols` precomputed for the gather
+        self.cursor.clear();
+        self.cursor.resize(cols, 0);
+        for &j in &out.col_idx {
+            self.cursor[j as usize] += 1;
+        }
+        out.csc_ptr.clear();
+        out.csc_ptr.push(0u32);
+        let mut off = 0u32;
+        for j in 0..cols {
+            let n = self.cursor[j];
+            let padded = n.div_ceil(simd::LANES as u32) * simd::LANES as u32;
+            // the slot becomes column j's fill cursor (its start offset)
+            self.cursor[j] = off;
+            off += padded;
+            out.csc_ptr.push(off);
+        }
+        let total = off as usize;
+        out.csc_row_idx.clear();
+        out.csc_row_idx.resize(total, 0);
+        out.csc_row_scaled.clear();
+        out.csc_row_scaled.resize(total, 0);
+        out.csc_mask.clear();
+        out.csc_mask.resize(total, 0.0);
+        for r in 0..rows {
+            for &j in &out.col_idx[out.row_ptr[r] as usize..out.row_ptr[r + 1] as usize] {
+                let p = self.cursor[j as usize] as usize;
+                out.csc_row_idx[p] = r as u32;
+                out.csc_row_scaled[p] = r as u32 * cols as u32;
+                out.csc_mask[p] = 1.0;
+                self.cursor[j as usize] += 1;
+            }
+        }
+    }
+}
+
+/// A pool of [`SparseLayerBuilder`]s — one per intra-op thread — owned
+/// long-term by the trainer / dist worker / serving daemon so scratch
+/// capacity survives across rebuilds.
+#[derive(Debug, Default)]
+pub struct SparseBuildArena {
+    builders: Vec<SparseLayerBuilder>,
+}
+
+impl SparseBuildArena {
+    pub fn new() -> Self {
+        SparseBuildArena::default()
+    }
+
+    /// At least `n` builders, growing the pool on first use.
+    fn ensure(&mut self, n: usize) -> &mut [SparseLayerBuilder] {
+        while self.builders.len() < n {
+            self.builders.push(SparseLayerBuilder::new());
+        }
+        &mut self.builders[..n]
+    }
+}
+
+/// Where a (re)build reads each layer's sparsity pattern from.
+#[derive(Debug, Clone, Copy)]
+pub enum MaskSource<'a> {
+    /// Per-layer OSEL encodings in manifest `masked_layers` order
+    /// (FLGW, block-circulant).
+    Encodings(&'a [SparseRowMemory]),
+    /// The flat dense 0/1 mask buffer (manifest mask layout) — the
+    /// scan fallback for unstructured pruners.
+    Dense(&'a [f32]),
+}
+
 /// Per-layer compressed structures for every FLGW-masked layer, in
-/// manifest order — built once per mask regeneration and shared
-/// immutably across rollout worker threads (see the module docs).
+/// manifest order — rebuilt incrementally per mask regeneration and
+/// shared immutably across rollout worker threads (see the module
+/// docs).
 #[derive(Debug, Clone)]
 pub struct SparseModel {
-    pub layers: Vec<SparseLayer>,
+    pub layers: Vec<Arc<SparseLayer>>,
     /// Total mask size (density denominator).
     mask_size: usize,
 }
@@ -316,7 +447,7 @@ impl SparseModel {
             .masked_layers
             .iter()
             .zip(encodings)
-            .map(|(l, srm)| SparseLayer::from_encoding(l, srm, cores))
+            .map(|(l, srm)| SparseLayer::from_encoding(l, srm, cores).map(Arc::new))
             .collect::<Result<Vec<_>>>()?;
         Ok(SparseModel { layers, mask_size: m.mask_size })
     }
@@ -333,17 +464,142 @@ impl SparseModel {
         let layers = m
             .masked_layers
             .iter()
-            .map(|l| SparseLayer::from_dense_mask(l, &masks[l.offset..l.offset + l.size()], cores))
+            .map(|l| {
+                SparseLayer::from_dense_mask(l, &masks[l.offset..l.offset + l.size()], cores)
+                    .map(Arc::new)
+            })
             .collect::<Result<Vec<_>>>()?;
         Ok(SparseModel { layers, mask_size: m.mask_size })
     }
 
+    /// Incremental rebuild: reuse the previous model's clean layers by
+    /// `Arc` clone (pointer identity preserved) and rebuild only the
+    /// layers flagged dirty, fanning them across up to `cores` threads.
+    ///
+    /// * `dirty = None` (or an incompatible / absent `prev`) rebuilds
+    ///   everything — the resume / first-build path.
+    /// * A previous layer whose `Arc` is sole-owned donates its buffers
+    ///   to the rebuild (capacity preserved → no new allocation when
+    ///   warm); a still-shared layer is rebuilt into a fresh shell.
+    /// * Output is bit-identical to from-scratch construction — the
+    ///   builder derives every field from `row_ptr`/`col_idx` exactly
+    ///   like the historical code path did.
+    pub fn rebuild_incremental(
+        m: &Manifest,
+        prev: Option<Arc<SparseModel>>,
+        dirty: Option<&[bool]>,
+        source: MaskSource<'_>,
+        cores: usize,
+        strict: bool,
+        arena: &mut SparseBuildArena,
+    ) -> Result<Arc<SparseModel>> {
+        let n = m.masked_layers.len();
+        match source {
+            MaskSource::Encodings(enc) if enc.len() != n => {
+                return Err(anyhow!("{} encodings for {} masked layers", enc.len(), n));
+            }
+            MaskSource::Dense(d) if d.len() != m.mask_size => {
+                return Err(anyhow!(
+                    "masks length {} != manifest mask_size {}",
+                    d.len(),
+                    m.mask_size
+                ));
+            }
+            _ => {}
+        }
+
+        // A previous model is reusable only if it matches the manifest
+        // and the strict mode — otherwise everything is dirty.
+        let prev = prev.filter(|p| {
+            p.mask_size == m.mask_size
+                && p.layers.len() == n
+                && p.layers.iter().zip(&m.masked_layers).all(|(sl, ml)| {
+                    sl.name == ml.name
+                        && sl.rows == ml.rows
+                        && sl.cols == ml.cols
+                        && sl.strict == strict
+                })
+        });
+        let all_dirty = prev.is_none() || dirty.map_or(true, |d| d.len() != n);
+        let mut layers: Vec<Arc<SparseLayer>> = match prev {
+            Some(p) => Arc::try_unwrap(p).map(|p| p.layers).unwrap_or_else(|p| p.layers.clone()),
+            None => (0..n).map(|_| Arc::new(SparseLayer::blank())).collect(),
+        };
+
+        // Pull each dirty layer out of its slot, reclaiming its buffers
+        // when nothing else holds the Arc.
+        let mut work: Vec<(usize, SparseLayer)> = Vec::new();
+        for li in 0..n {
+            if all_dirty || dirty.is_some_and(|d| d[li]) {
+                let arc = std::mem::replace(&mut layers[li], Arc::new(SparseLayer::blank()));
+                let owned = Arc::try_unwrap(arc).unwrap_or_else(|_| SparseLayer::blank());
+                work.push((li, owned));
+            }
+        }
+
+        let build_one = |builder: &mut SparseLayerBuilder,
+                         li: usize,
+                         out: &mut SparseLayer|
+         -> Result<()> {
+            let ml = &m.masked_layers[li];
+            match source {
+                MaskSource::Encodings(enc) => {
+                    builder.encoding_into(out, ml, &enc[li], cores, strict)
+                }
+                MaskSource::Dense(d) => builder.dense_mask_into(
+                    out,
+                    ml,
+                    &d[ml.offset..ml.offset + ml.size()],
+                    cores,
+                    strict,
+                ),
+            }
+        };
+
+        let threads = cores.max(1).min(work.len().max(1));
+        if threads <= 1 || work.len() <= 1 {
+            let builder = &mut arena.ensure(1)[0];
+            for (li, out) in work.iter_mut() {
+                build_one(builder, *li, out)?;
+            }
+        } else {
+            // Layers are independent: fan contiguous chunks of the
+            // dirty list across the intra-op threads, one builder each.
+            let chunk = work.len().div_ceil(threads);
+            let builders = arena.ensure(threads);
+            let build_one = &build_one;
+            std::thread::scope(|s| -> Result<()> {
+                let mut handles = Vec::with_capacity(threads);
+                for (chunk, builder) in work.chunks_mut(chunk).zip(builders.iter_mut()) {
+                    handles.push(s.spawn(move || -> Result<()> {
+                        for (li, out) in chunk.iter_mut() {
+                            build_one(builder, *li, out)?;
+                        }
+                        Ok(())
+                    }));
+                }
+                for h in handles {
+                    h.join().map_err(|_| anyhow!("sparse build thread panicked"))??;
+                }
+                Ok(())
+            })?;
+        }
+
+        for (li, out) in work {
+            layers[li] = Arc::new(out);
+        }
+        Ok(Arc::new(SparseModel { layers, mask_size: m.mask_size }))
+    }
+
     /// Builder: switch every layer between strict dense-order
     /// accumulation (`--strict-accum`, bit-identical to dense-masked)
-    /// and the default lane-padded SIMD panels.
+    /// and the default lane-padded SIMD panels.  Layers already in the
+    /// requested mode are left untouched (pointer identity preserved).
     pub fn strict(mut self, on: bool) -> Self {
         for l in &mut self.layers {
-            l.strict = on;
+            if l.strict != on {
+                Arc::make_mut(l).strict = on;
+            }
         }
         self
     }
@@ -355,7 +611,7 @@ impl SparseModel {
 
     /// The compressed structure of one masked layer, by name.
     pub fn layer(&self, name: &str) -> Option<&SparseLayer> {
-        self.layers.iter().find(|l| l.name == name)
+        self.layers.iter().find(|l| l.name == name).map(|l| l.as_ref())
     }
 
     /// Total surviving weights across all layers.
@@ -507,6 +763,21 @@ mod tests {
         assert!(!sm.strict(false).is_strict());
     }
 
+    /// `strict()` at the already-set mode must not rewrite any layer —
+    /// the trainer relies on this to keep reused `Arc`s shared.
+    #[test]
+    fn strict_noop_preserves_layer_identity() {
+        let m = Manifest::builtin();
+        let masks = vec![1.0f32; m.mask_size];
+        let sm = SparseModel::from_dense_masks(&m, &masks, 2).unwrap();
+        let ptrs: Vec<_> = sm.layers.iter().map(Arc::as_ptr).collect();
+        let _keep: Vec<_> = sm.layers.to_vec(); // force make_mut to clone if called
+        let sm = sm.strict(false);
+        for (l, p) in sm.layers.iter().zip(&ptrs) {
+            assert!(std::ptr::eq(Arc::as_ptr(l), *p), "no-op strict must not clone layers");
+        }
+    }
+
     #[test]
     fn shape_mismatches_are_rejected() {
         let m = Manifest::builtin();
@@ -514,5 +785,97 @@ mod tests {
         assert!(SparseModel::from_encodings(&m, &[], 1).is_err());
         let l = layer(4, 4);
         assert!(SparseLayer::from_dense_mask(&l, &[1.0; 3], 1).is_err());
+    }
+
+    /// A warm builder refilling a warm layer must reproduce from-scratch
+    /// construction field-for-field, whatever mask came before.
+    #[test]
+    fn builder_reuse_is_bit_identical() {
+        let l = layer(12, 20);
+        let mut rng = Pcg32::seeded(31);
+        let mut builder = SparseLayerBuilder::new();
+        let mut warm = SparseLayer::blank();
+        for round in 0..4 {
+            let mask: Vec<f32> =
+                (0..12 * 20).map(|_| f32::from(rng.next_below(10) < 4)).collect();
+            builder.dense_mask_into(&mut warm, &l, &mask, 3, false).unwrap();
+            let fresh = SparseLayer::from_dense_mask(&l, &mask, 3).unwrap();
+            assert_eq!(warm, fresh, "round {round}: reused buffers diverged");
+        }
+    }
+
+    /// Incremental rebuild: clean layers keep their `Arc` (pointer
+    /// identity), dirty layers equal from-scratch construction
+    /// field-for-field.
+    #[test]
+    fn incremental_rebuild_reuses_clean_layers() {
+        let m = Manifest::builtin();
+        let mut rng = Pcg32::seeded(55);
+        let mut masks: Vec<f32> =
+            (0..m.mask_size).map(|_| f32::from(rng.next_below(10) < 5)).collect();
+        let mut arena = SparseBuildArena::new();
+        let base = SparseModel::rebuild_incremental(
+            &m,
+            None,
+            None,
+            MaskSource::Dense(&masks),
+            2,
+            false,
+            &mut arena,
+        )
+        .unwrap();
+        let ptrs: Vec<_> = base.layers.iter().map(Arc::as_ptr).collect();
+
+        // dirty exactly one layer
+        let target = &m.masked_layers[1];
+        for v in &mut masks[target.offset..target.offset + target.size()] {
+            *v = 1.0 - *v;
+        }
+        let mut dirty = vec![false; m.masked_layers.len()];
+        dirty[1] = true;
+        let rebuilt = SparseModel::rebuild_incremental(
+            &m,
+            Some(base.clone()),
+            Some(&dirty),
+            MaskSource::Dense(&masks),
+            2,
+            false,
+            &mut arena,
+        )
+        .unwrap();
+        let fresh = SparseModel::from_dense_masks(&m, &masks, 2).unwrap();
+        for (li, (l, p)) in rebuilt.layers.iter().zip(&ptrs).enumerate() {
+            if li == 1 {
+                assert!(!std::ptr::eq(Arc::as_ptr(l), *p), "dirty layer must be rebuilt");
+            } else {
+                assert!(std::ptr::eq(Arc::as_ptr(l), *p), "clean layer {li} must keep its Arc");
+            }
+            assert_eq!(l.as_ref(), fresh.layers[li].as_ref(), "layer {li} diverges");
+        }
+    }
+
+    /// The parallel fan-out produces the same model as a single thread.
+    #[test]
+    fn parallel_rebuild_matches_single_thread() {
+        let m = Manifest::builtin();
+        let mut rng = Pcg32::seeded(91);
+        let masks: Vec<f32> =
+            (0..m.mask_size).map(|_| f32::from(rng.next_below(10) < 3)).collect();
+        let mut arena = SparseBuildArena::new();
+        let par = SparseModel::rebuild_incremental(
+            &m,
+            None,
+            None,
+            MaskSource::Dense(&masks),
+            4,
+            true,
+            &mut arena,
+        )
+        .unwrap();
+        let seq = SparseModel::from_dense_masks(&m, &masks, 4).unwrap().strict(true);
+        assert_eq!(par.layers.len(), seq.layers.len());
+        for (a, b) in par.layers.iter().zip(&seq.layers) {
+            assert_eq!(a.as_ref(), b.as_ref(), "layer {} diverges", a.name);
+        }
     }
 }

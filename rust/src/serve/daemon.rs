@@ -48,12 +48,13 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::checkpoint::Checkpoint;
+use crate::checkpoint::{Checkpoint, MaskStore};
 use crate::coordinator::rollout::SAMPLE_STREAM;
 use crate::env::EnvConfig;
 use crate::manifest::{Dims, Manifest};
 use crate::runtime::{
-    Arg, DeviceTensor, ExecMode, Executable, HostTensor, Runtime, SimdBackend,
+    Arg, DeviceTensor, ExecMode, Executable, HostTensor, MaskSource, Runtime, SimdBackend,
+    SparseBuildArena, SparseModel,
 };
 use crate::serve::proto::{self, err_code, DaemonStats, Msg, ProtoError};
 use crate::util::Pcg32;
@@ -234,6 +235,13 @@ pub struct Snapshot {
     ladder: Vec<(usize, Arc<Executable>)>,
     params_dev: DeviceTensor,
     masks_dev: DeviceTensor,
+    /// The checkpoint's stored mask form, kept so the next hot reload
+    /// can compare per layer and rebuild only what changed.
+    mask_store: MaskStore,
+    /// The served sparse structure (`None` under dense-masked exec) —
+    /// the previous generation's layers are Arc-shared into the next
+    /// snapshot where the stored masks say they are unchanged.
+    sparse: Option<Arc<SparseModel>>,
 }
 
 impl Snapshot {
@@ -242,6 +250,22 @@ impl Snapshot {
     /// the power-of-two lockstep ladder up to `cfg.max_batch`, upload
     /// params + masks once.
     pub fn load(ckpt: &Checkpoint, cfg: &DaemonConfig) -> Result<Snapshot> {
+        Self::load_reusing(ckpt, cfg, None, &mut SparseBuildArena::new())
+    }
+
+    /// [`Snapshot::load`] with per-layer reuse across hot reloads:
+    /// layers whose stored mask is identical to `prev`'s keep the
+    /// previous generation's `Arc`'d sparse panels (OSEL stores compare
+    /// per layer, so a reload that regrouped one layer rebuilds one
+    /// layer), and `arena` keeps the builder scratch warm between
+    /// reloads.  The result is field-identical to a from-scratch
+    /// [`Snapshot::load`] — reuse only changes who owns the buffers.
+    pub fn load_reusing(
+        ckpt: &Checkpoint,
+        cfg: &DaemonConfig,
+        prev: Option<&Snapshot>,
+        arena: &mut SparseBuildArena,
+    ) -> Result<Snapshot> {
         let manifest = Manifest::for_topology(Manifest::default_dir(), &ckpt.meta.model)?;
         let mut rt = Runtime::new(manifest)?;
         rt.set_simd(cfg.simd);
@@ -274,15 +298,46 @@ impl Snapshot {
         } else {
             masks.iter().sum::<f32>() / masks.len() as f32
         };
-        let masks_t = HostTensor::F32(masks);
+        let n_layers = manifest.masked_layers.len();
         let params_dev = exe_single.upload(0, &HostTensor::F32(ckpt.params.clone()))?;
-        let masks_dev = match cfg.exec {
-            ExecMode::DenseMasked => exe_single.upload(1, &masks_t)?,
+        let (sparse, masks_dev) = match cfg.exec {
+            ExecMode::DenseMasked => {
+                (None, exe_single.upload(1, &HostTensor::F32(masks))?)
+            }
             ExecMode::Sparse => {
-                let model = ckpt
-                    .sparse_model(&manifest, cfg.intra_threads.max(1))?
-                    .strict(cfg.strict_accum);
-                exe_single.upload_sparse(1, &masks_t, Arc::new(model))?
+                // The watcher only reloads same-fingerprint checkpoints,
+                // so a layer with an unchanged store is byte-identical —
+                // compare per layer for OSEL stores, whole-store for the
+                // dense-bits fallback (its spans don't align to words).
+                let dirty: Vec<bool> = match prev.map(|p| &p.mask_store) {
+                    Some(MaskStore::Osel(old)) => match &ckpt.masks {
+                        MaskStore::Osel(new) if old.len() == new.len() => {
+                            old.iter().zip(new).map(|(a, b)| a != b).collect()
+                        }
+                        _ => vec![true; n_layers],
+                    },
+                    Some(old) if *old == ckpt.masks => vec![false; n_layers],
+                    _ => vec![true; n_layers],
+                };
+                let enc = ckpt.masks.encodings()?;
+                let source = match &enc {
+                    Some((encodings, _)) if encodings.len() == n_layers => {
+                        MaskSource::Encodings(encodings)
+                    }
+                    _ => MaskSource::Dense(&masks),
+                };
+                let model = SparseModel::rebuild_incremental(
+                    &manifest,
+                    prev.and_then(|p| p.sparse.clone()),
+                    Some(&dirty),
+                    source,
+                    cfg.intra_threads.max(1),
+                    cfg.strict_accum,
+                    arena,
+                )?;
+                let dev =
+                    exe_single.upload_sparse(1, &HostTensor::F32(masks), model.clone())?;
+                (Some(model), dev)
             }
         };
         Ok(Snapshot {
@@ -298,12 +353,20 @@ impl Snapshot {
             ladder,
             params_dev,
             masks_dev,
+            mask_store: ckpt.masks.clone(),
+            sparse,
         })
     }
 
     /// Training iteration of the served checkpoint.
     pub fn iteration(&self) -> u64 {
         self.iteration
+    }
+
+    /// The served sparse structure (`None` under dense-masked exec) —
+    /// exposed so reload tests can assert per-layer `Arc` reuse.
+    pub fn sparse_model(&self) -> Option<&Arc<SparseModel>> {
+        self.sparse.as_ref()
     }
 
     /// Environment the snapshot serves (from the checkpoint header).
@@ -1170,6 +1233,9 @@ fn file_sig(path: &Path) -> Option<(std::time::SystemTime, u64)> {
 }
 
 fn watcher_loop(shared: &Arc<Shared>, watch: &Path) {
+    // builder scratch shared across reloads, so steady-state reloads of
+    // a churning run stop allocating panel buffers
+    let mut arena = SparseBuildArena::new();
     // prime: if the watch target currently holds the checkpoint the
     // daemon booted on, don't count it as a reload
     let mut last_sig: Option<(std::time::SystemTime, u64)> = None;
@@ -1233,7 +1299,10 @@ fn watcher_loop(shared: &Arc<Shared>, watch: &Path) {
                     );
                     continue;
                 }
-                match Snapshot::load(&ckpt, &shared.cfg) {
+                let prev =
+                    shared.current.lock().expect("daemon snapshot lock").clone();
+                match Snapshot::load_reusing(&ckpt, &shared.cfg, Some(&prev), &mut arena)
+                {
                     Ok(snap) => {
                         let iteration = snap.iteration;
                         *shared.current.lock().expect("daemon snapshot lock") =

@@ -9,16 +9,18 @@
 //! reload candidates must be skipped, never fatal.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use learning_group::checkpoint::Checkpoint;
 use learning_group::coordinator::rollout::episode_seed;
 use learning_group::coordinator::{PrunerChoice, TrainConfig, Trainer};
 use learning_group::env::EnvConfig;
-use learning_group::runtime::{ExecMode, Runtime, SimdBackend};
+use learning_group::manifest::Manifest;
+use learning_group::runtime::{ExecMode, Runtime, SimdBackend, SparseBuildArena, SparseModel};
 use learning_group::serve::{
     run_served_episode, Daemon, DaemonClient, DaemonConfig, EpisodeOutcome, ListenAddr,
-    PolicyServer, ServeMode, ServeOptions,
+    PolicyServer, ServeMode, ServeOptions, Snapshot,
 };
 
 fn tiny_checkpoint(iterations: usize) -> Checkpoint {
@@ -370,6 +372,61 @@ fn corrupt_reload_candidates_are_skipped_not_fatal() {
     assert_eq!(stats.snapshot_iteration, ckpt_b.meta.iteration);
     drop(client);
     stop(handle);
+}
+
+/// Cross-daemon pruner coverage: every pruner family's checkpoint —
+/// whatever store it earned (OSEL for FLGW/BC, packed dense bits for
+/// GST/iterative) — decodes into a served snapshot whose sparse
+/// structure names exactly the survivors of the stored masks, and a
+/// hot reload of a byte-identical checkpoint `Arc`-reuses every
+/// layer's panels instead of rebuilding them.
+#[test]
+fn every_pruner_checkpoint_decodes_and_reloads_incrementally() {
+    for (pruner, name) in [
+        (PrunerChoice::Flgw(4), "flgw"),
+        (PrunerChoice::BlockCirculant(2, 4), "bc"),
+        (PrunerChoice::Gst(2, 4, 75), "gst"),
+        (PrunerChoice::Iterative(75), "iterative"),
+    ] {
+        let cfg = TrainConfig {
+            batch: 1,
+            iterations: 2,
+            pruner,
+            seed: 5,
+            log_every: 0,
+            ..TrainConfig::default().with_agents(3)
+        };
+        let mut trainer = Trainer::from_default_artifacts(cfg).unwrap();
+        trainer.train().unwrap();
+        // round-trip through bytes: the disk image the daemon decodes
+        let ckpt = Checkpoint::from_bytes(&trainer.checkpoint().unwrap().to_bytes()).unwrap();
+
+        let dcfg = daemon_cfg();
+        let snap = Snapshot::load(&ckpt, &dcfg).unwrap();
+        let manifest =
+            Manifest::for_topology(Manifest::default_dir(), &ckpt.meta.model).unwrap();
+        let masks = ckpt.mask_vector(&manifest).unwrap();
+        let scanned = SparseModel::from_dense_masks(&manifest, &masks, 1).unwrap();
+        let served = snap.sparse_model().expect("sparse exec serves a sparse model");
+        assert_eq!(served.nnz(), scanned.nnz(), "{name}");
+        for (a, b) in served.layers.iter().zip(&scanned.layers) {
+            assert_eq!(a.row_ptr, b.row_ptr, "{name} layer {}", a.name);
+            assert_eq!(a.col_idx, b.col_idx, "{name} layer {}", a.name);
+        }
+
+        // identical checkpoint → the reload is a pure Arc reuse
+        let mut arena = SparseBuildArena::new();
+        let again = Snapshot::load_reusing(&ckpt, &dcfg, Some(&snap), &mut arena).unwrap();
+        for (a, b) in
+            again.sparse_model().unwrap().layers.iter().zip(&served.layers)
+        {
+            assert!(
+                Arc::ptr_eq(a, b),
+                "{name}: identical reload must reuse layer {}",
+                a.name
+            );
+        }
+    }
 }
 
 /// Client-facing error paths: duplicate opens, unknown episodes and

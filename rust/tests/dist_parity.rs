@@ -20,33 +20,40 @@ use learning_group::dist::proto::{read_frame, write_frame, DistMsg, DIST_PROTO_V
 use learning_group::dist::{run_worker, DistCoordinator, DistOptions, SpawnMode};
 use learning_group::serve::ListenAddr;
 
-fn train_cfg(batch: usize, iterations: usize) -> TrainConfig {
+fn train_cfg_with(pruner: PrunerChoice, batch: usize, iterations: usize) -> TrainConfig {
     TrainConfig {
         batch,
         iterations,
-        pruner: PrunerChoice::Flgw(4),
+        pruner,
         seed: 11,
         log_every: 0,
         ..TrainConfig::default().with_agents(3)
     }
 }
 
+fn train_cfg(batch: usize, iterations: usize) -> TrainConfig {
+    train_cfg_with(PrunerChoice::Flgw(4), batch, iterations)
+}
+
 /// The single-process reference: metrics log + final checkpoint bytes.
-fn baseline(batch: usize, iterations: usize) -> (MetricsLog, Vec<u8>) {
-    let mut trainer = Trainer::from_default_artifacts(train_cfg(batch, iterations)).unwrap();
+fn baseline_with(cfg: TrainConfig) -> (MetricsLog, Vec<u8>) {
+    let mut trainer = Trainer::from_default_artifacts(cfg).unwrap();
     let log = trainer.train().unwrap();
     (log, trainer.checkpoint().unwrap().to_bytes())
 }
 
+fn baseline(batch: usize, iterations: usize) -> (MetricsLog, Vec<u8>) {
+    baseline_with(train_cfg(batch, iterations))
+}
+
 /// Run a distributed training with `workers` in-process worker threads
 /// (SpawnMode::External) and return its log + final checkpoint bytes.
-fn distributed(
-    batch: usize,
-    iterations: usize,
+fn distributed_with(
+    cfg: TrainConfig,
     workers: usize,
     listen: Option<ListenAddr>,
 ) -> (MetricsLog, Vec<u8>) {
-    let mut trainer = Trainer::from_default_artifacts(train_cfg(batch, iterations)).unwrap();
+    let mut trainer = Trainer::from_default_artifacts(cfg).unwrap();
     let coordinator = DistCoordinator::bind(DistOptions {
         listen,
         spawn: SpawnMode::External,
@@ -68,6 +75,15 @@ fn distributed(
         (log, trainer.checkpoint().unwrap().to_bytes())
     });
     (log, bytes)
+}
+
+fn distributed(
+    batch: usize,
+    iterations: usize,
+    workers: usize,
+    listen: Option<ListenAddr>,
+) -> (MetricsLog, Vec<u8>) {
+    distributed_with(train_cfg(batch, iterations), workers, listen)
 }
 
 /// Exact f32 bit equality across every per-iteration metric (wall_s is
@@ -106,6 +122,26 @@ fn distributed_training_is_bitwise_identical_to_single_process() {
         let (log, bytes) = distributed(batch, iterations, workers, listen);
         assert_logs_bitwise_equal(&ref_log, &log, &format!("workers={workers}"));
         assert_eq!(bytes, ref_bytes, "workers={workers}: final checkpoint bytes differ");
+    }
+}
+
+/// Cross-worker pruner coverage: every pruner family crosses the wire
+/// bitwise at W = 2 — block-circulant's OSEL-structured masks and the
+/// packed-bit fallbacks of GST and iterative magnitude all travel the
+/// full-then-delta sync protocol and reproduce the single-process run
+/// exactly (FLGW is the W sweep above).
+#[test]
+fn every_pruner_family_is_bitwise_identical_across_workers() {
+    for (pruner, name) in [
+        (PrunerChoice::BlockCirculant(2, 4), "bc"),
+        (PrunerChoice::Gst(2, 4, 75), "gst"),
+        (PrunerChoice::Iterative(75), "iterative"),
+    ] {
+        let cfg = train_cfg_with(pruner, 2, 3);
+        let (ref_log, ref_bytes) = baseline_with(cfg.clone());
+        let (log, bytes) = distributed_with(cfg, 2, None);
+        assert_logs_bitwise_equal(&ref_log, &log, name);
+        assert_eq!(bytes, ref_bytes, "{name}: final checkpoint bytes differ");
     }
 }
 

@@ -19,15 +19,18 @@
 //!   row, and the single-group/factor-1 degenerate never panic and
 //!   still produce valid binary masks.
 
+use std::sync::Arc;
+
 use learning_group::accel::osel::OselEncoder;
 use learning_group::checkpoint::MaskStore;
+use learning_group::coordinator::{DensitySchedule, ScheduleShape};
 use learning_group::manifest::Manifest;
 use learning_group::model::{GroupingState, ModelState};
 use learning_group::pruning::{
     BlockCirculantPruner, FlgwPruner, GroupSparseTrainingPruner, IterativeMagnitudePruner,
     PruneContext, PruningAlgorithm,
 };
-use learning_group::runtime::SparseModel;
+use learning_group::runtime::{MaskSource, SparseBuildArena, SparseModel};
 use learning_group::util::Pcg32;
 
 const GROUPS: [usize; 5] = [1, 2, 4, 8, 16];
@@ -251,6 +254,95 @@ fn single_group_degenerates_cleanly() {
                 1.0 - d
             ),
             _ => unreachable!(),
+        }
+    }
+}
+
+/// Incremental identity: the per-layer dirty set each pruner reports
+/// drives [`SparseModel::rebuild_incremental`], whose result must
+/// (a) `Arc`-reuse every clean layer by pointer — the trainer's
+/// condition for skipping that layer's device re-upload — and
+/// (b) equal a from-scratch build field-for-field on *every* layer,
+/// dirty or clean.  Driven through a full anneal under both schedule
+/// shapes so the dirty set is exercised while densities move, then
+/// through trailing no-op regenerations where ALL layers must be
+/// pointer-reused.
+#[test]
+fn incremental_rebuild_matches_scratch_and_reuses_clean_layers() {
+    let m = Manifest::builtin();
+    let n = m.masked_layers.len();
+    for shape in [ScheduleShape::Linear, ScheduleShape::Cosine] {
+        let sched = DensitySchedule {
+            start: 1.0,
+            target: 0.3,
+            warmup: 1,
+            anneal: 4,
+            steps: 0,
+            shape,
+        };
+        for g in GROUPS {
+            for (mut p, name) in zoo(&m, g) {
+                let mut s = state(&m, 140 + g as u64);
+                let mut arena = SparseBuildArena::new();
+                let mut model: Option<Arc<SparseModel>> = None;
+                // iterations 5.. hold the final density over unchanged
+                // weights: guaranteed no-op regenerations at the tail
+                for it in 0..8 {
+                    let d = sched.density_at(it);
+                    p.update_masks(&mut s, &ctx(&m, it, d)).unwrap();
+                    let dirty = p.changed_layers(n);
+                    assert_eq!(
+                        dirty.iter().any(|&x| x),
+                        p.masks_changed(),
+                        "{name} G={g} {shape:?} it{it}: changed_layers must agree with masks_changed"
+                    );
+                    let prev = model.clone();
+                    // the exact source the trainer picks: encodings
+                    // when the pruner advertises them, dense scan else
+                    let source = match p.encodings() {
+                        Some((enc, _)) => MaskSource::Encodings(enc),
+                        None => MaskSource::Dense(&s.masks),
+                    };
+                    let next = SparseModel::rebuild_incremental(
+                        &m,
+                        prev.clone(),
+                        Some(&dirty),
+                        source,
+                        2,
+                        false,
+                        &mut arena,
+                    )
+                    .unwrap();
+                    let scratch = SparseModel::from_dense_masks(&m, &s.masks, 2).unwrap();
+                    for li in 0..n {
+                        assert!(
+                            *next.layers[li] == *scratch.layers[li],
+                            "{name} G={g} {shape:?} it{it}: layer {} diverges from scratch",
+                            m.masked_layers[li].name
+                        );
+                        if let Some(prev) = &prev {
+                            if !dirty[li] {
+                                assert!(
+                                    Arc::ptr_eq(&next.layers[li], &prev.layers[li]),
+                                    "{name} G={g} {shape:?} it{it}: clean layer {} was rebuilt",
+                                    m.masked_layers[li].name
+                                );
+                            }
+                        }
+                        if it >= 6 {
+                            assert!(
+                                Arc::ptr_eq(
+                                    &next.layers[li],
+                                    &prev.as_ref().unwrap().layers[li]
+                                ),
+                                "{name} G={g} {shape:?} it{it}: no-op regen must reuse layer {}",
+                                m.masked_layers[li].name
+                            );
+                        }
+                    }
+                    model = Some(next);
+                }
+            }
         }
     }
 }
